@@ -1,0 +1,21 @@
+//! Imbalance sweep: regenerate the paper's Fig. 1a/1b (speedup and peak
+//! memory across imbalance scenarios) and Fig. 4 (three architectures),
+//! printing the same rows the paper plots.
+//!
+//! Run: `cargo run --release --example imbalance_sweep`
+
+use llep::harness;
+
+fn main() {
+    println!("== Fig 1a — MoE layer speedup (128E / top-4 / D=2048, P=8, B=32K) ==");
+    println!("{}", harness::fig_1a().render());
+
+    println!("== Fig 1b — peak memory per GPU ==");
+    println!("{}", harness::fig_1b().render());
+
+    println!("== Fig 4 — gpt-oss-120b / DeepSeek-V3 / Kimi-K2 ==");
+    println!("{}", harness::fig_4().render());
+
+    println!("== Fig 1c — full-model throughput (in-the-wild routing) ==");
+    println!("{}", harness::fig_1c().render());
+}

@@ -1,0 +1,73 @@
+//! Quickstart: plan + simulate one imbalanced MoE step under standard EP
+//! and LLEP, then verify exactness with real numerics on the tiny model.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use llep::exec::{run_step_real, NativeCompute};
+use llep::metrics::{format_bytes, format_secs};
+use llep::moe::{forward_reference, route, MoeLayer};
+use llep::prelude::*;
+use llep::tensor::Mat;
+
+fn main() {
+    // ---------------------------------------------------------------
+    // Part 1 — paper-scale simulation (gpt-oss-120b layer on 8x H200).
+    // ---------------------------------------------------------------
+    let model = ModelConfig::preset(ModelPreset::GptOss120b);
+    let system = SystemConfig::preset(SystemPreset::H200x8);
+    let engine = Engine::modeled(model.clone(), system);
+
+    let mut rng = Rng::new(0);
+    // 80% of routed load concentrated into 4 experts (all on device 0).
+    let lm = Scenario::concentrated(0.80, 4).generate_loads(&model, 8, 32_768, &mut rng);
+
+    let ep = engine.run_step_loads(&lm, &PlannerKind::StandardEp);
+    let ll = engine.run_step_loads(&lm, &PlannerKind::llep_default());
+
+    println!("gpt-oss-120b MoE layer, P=8, 32K tokens/device, 80% into 4 experts");
+    println!(
+        "  standard EP : latency {}  peak mem {}",
+        format_secs(ep.latency_s),
+        format_bytes(ep.max_peak_bytes())
+    );
+    println!(
+        "  LLEP        : latency {}  peak mem {}  ({} weight transfers)",
+        format_secs(ll.latency_s),
+        format_bytes(ll.max_peak_bytes()),
+        ll.weight_transfers
+    );
+    println!(
+        "  speedup {:.2}x, memory {:.2}x lower\n",
+        ep.latency_s / ll.latency_s,
+        ep.max_peak_bytes() as f64 / ll.max_peak_bytes() as f64
+    );
+
+    // ---------------------------------------------------------------
+    // Part 2 — exactness on real numerics (tiny model, native GEMMs).
+    // ---------------------------------------------------------------
+    let tiny = ModelConfig::preset(ModelPreset::Tiny);
+    let sys4 = SystemConfig::preset(SystemPreset::CpuSim4);
+    let engine = Engine::modeled(tiny.clone(), sys4);
+    let layer = MoeLayer::random(&tiny, &mut rng);
+    let xs: Vec<Mat> = (0..4).map(|_| Mat::randn(32, tiny.d_model, 0.5, &mut rng)).collect();
+    let routing = route(&layer, &xs); // real top-K router
+
+    let reference = forward_reference(&layer, &xs, &routing);
+    let step = run_step_real(
+        &engine,
+        &layer,
+        &xs,
+        &routing,
+        &PlannerKind::llep_default(),
+        &NativeCompute,
+    )
+    .expect("real step");
+    let max_diff = reference
+        .iter()
+        .zip(&step.outputs)
+        .flat_map(|(a, b)| a.data.iter().zip(&b.data).map(|(x, y)| (x - y).abs()))
+        .fold(0f32, f32::max);
+    println!("exactness check (LLEP vs single-device reference): max |diff| = {max_diff:.2e}");
+    assert!(max_diff < 1e-4, "LLEP must be an exact MoE computation");
+    println!("quickstart OK");
+}

@@ -1,0 +1,159 @@
+"""AOT compiler: lowers the JAX/Pallas entry points to HLO **text** and
+writes ``artifacts/*.hlo.txt`` + ``manifest.json`` for the rust runtime.
+
+HLO text (NOT ``lowered.compile()`` / serialized protos) is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids that the xla crate's xla_extension 0.5.1 rejects; the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Usage: ``python -m compile.aot --out ../artifacts`` (from python/) or via
+``make artifacts``.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels import moe_gemm
+
+# Token buckets for the expert-FFN artifacts (rust pads to the nearest).
+FFN_BUCKETS = (64, 256, 1024)
+MOE_FWD_TOKENS = 128
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*dims, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(dims, dtype)
+
+
+def lower_entry(fn, example_args):
+    return jax.jit(fn).lower(*example_args)
+
+
+def shapes_of(args):
+    return [list(a.shape) for a in args]
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="output directory")
+    args = parser.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"artifacts": {}}
+
+    def emit(name, fn, example_args, meta=None, out_shapes=None):
+        lowered = lower_entry(fn, example_args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": fname,
+            "inputs": shapes_of(example_args),
+            "outputs": out_shapes or [],
+            "meta": meta or {},
+        }
+        print(f"  {name:<18} {len(text):>9} chars  inputs={shapes_of(example_args)}")
+
+    d, h = model.D_MODEL, model.D_FF
+
+    # --- Layer-1 Pallas expert FFN, bucketed over token count -------------
+    for b in FFN_BUCKETS:
+        emit(
+            f"expert_ffn_b{b}",
+            lambda x, wg, wu, wd: moe_gemm.swiglu_ffn(x, wg, wu, wd),
+            (spec(b, d), spec(d, h), spec(d, h), spec(h, d)),
+            meta={"bucket": b, "d_model": d, "d_ff": h},
+            out_shapes=[[b, d]],
+        )
+
+    # --- H-tiled kernel variant (paper-geometry VMEM schedule) -------------
+    emit(
+        "expert_ffn_htiled_b256",
+        lambda x, wg, wu, wd: moe_gemm.swiglu_ffn_htiled(x, wg, wu, wd),
+        (spec(256, d), spec(d, h), spec(d, h), spec(h, d)),
+        meta={"bucket": 256, "d_model": d, "d_ff": h, "htiled": 1},
+        out_shapes=[[256, d]],
+    )
+
+    # --- Pallas gated combine ---------------------------------------------
+    emit(
+        "gated_combine",
+        moe_gemm.gated_combine,
+        (spec(MOE_FWD_TOKENS, model.TOP_K, d), spec(MOE_FWD_TOKENS, model.TOP_K)),
+        meta={"tokens": MOE_FWD_TOKENS, "top_k": model.TOP_K},
+        out_shapes=[[MOE_FWD_TOKENS, d]],
+    )
+
+    # --- Full MoE layer forward (numeric cross-check artifact) -------------
+    n = model.N_EXPERTS
+    emit(
+        "moe_fwd",
+        model.moe_fwd,
+        (spec(MOE_FWD_TOKENS, d), spec(d, n), spec(n, d, h), spec(n, d, h), spec(n, h, d)),
+        meta={
+            "tokens": MOE_FWD_TOKENS,
+            "num_experts": n,
+            "top_k": model.TOP_K,
+            "d_model": d,
+            "d_ff": h,
+        },
+        out_shapes=[
+            [MOE_FWD_TOKENS, d],
+            [MOE_FWD_TOKENS, model.TOP_K],
+            [MOE_FWD_TOKENS, model.TOP_K],
+            [n],
+        ],
+    )
+
+    # --- Training: init + step ---------------------------------------------
+    params = model.init_params(0.0)
+    flat = model.flatten_params(params)
+    param_specs = tuple(spec(*p.shape) for p in flat)
+
+    emit(
+        "init_params",
+        lambda seed: tuple(model.flatten_params(model.init_params(seed))),
+        (spec(),),
+        meta={"num_params": len(flat)},
+        out_shapes=[list(p.shape) for p in flat],
+    )
+
+    emit(
+        "train_step",
+        model.train_step,
+        param_specs + (spec(model.BATCH, model.SEQ), spec(model.BATCH, model.SEQ)),
+        meta={
+            "num_params": len(flat),
+            "batch": model.BATCH,
+            "seq": model.SEQ,
+            "vocab": model.VOCAB,
+            "num_experts": model.N_EXPERTS,
+            "top_k": model.TOP_K,
+            "lr": model.LR,
+        },
+        out_shapes=[[1]] + [list(p.shape) for p in flat] + [[model.N_EXPERTS]],
+    )
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {len(manifest['artifacts'])} artifacts + manifest to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

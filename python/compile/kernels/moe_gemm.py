@@ -1,0 +1,194 @@
+"""Layer 1 — Pallas kernels for the MoE hot spot.
+
+Two kernels:
+
+* :func:`swiglu_ffn` — the per-expert SwiGLU FFN
+  ``(silu(x Wg) * (x Wu)) Wd``, tiled over the token dimension. This is
+  the GEMM trio the paper's Eq. 3 prices and that LLEP schedules across
+  devices.
+* :func:`gated_combine` — the top-K combine
+  ``out[b] = sum_k gates[b, k] * y[b, k]`` (the reverse-sorted
+  reduction at the end of Alg. 1/4).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's CUDA
+grouped-GEMM tiles by threadblock over tokens; on TPU the analogue is a
+grid over token blocks with the weight matrices resident in VMEM per grid
+step, feeding the MXU with ``(block_b, D) @ (D, H)`` products. BlockSpec
+expresses the HBM->VMEM schedule. ``interpret=True`` everywhere: the CPU
+PJRT plugin cannot execute Mosaic custom-calls, and interpret mode lowers
+to plain HLO that both pytest and the rust runtime can run. Real-TPU
+VMEM/MXU estimates are documented in EXPERIMENTS.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _swiglu_kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref):
+    """One grid step: a (block_b, D) token tile through the SwiGLU trio."""
+    x = x_ref[...]
+    g = jnp.dot(x, wg_ref[...])
+    u = jnp.dot(x, wu_ref[...])
+    a = (g * (1.0 / (1.0 + jnp.exp(-g)))) * u  # silu(g) * u
+    o_ref[...] = jnp.dot(a, wd_ref[...])
+
+
+def pick_block_b(batch: int) -> int:
+    """Token-tile size: smallest power of two >= 8 dividing the batch,
+    capped at 128 (VMEM budget at paper geometry; see EXPERIMENTS.md)."""
+    for cand in (128, 64, 32, 16, 8):
+        if batch % cand == 0:
+            return cand
+    return batch  # tiny/odd batches: single tile
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def swiglu_ffn(x, w_gate, w_up, w_down, block_b=None):
+    """Pallas SwiGLU expert FFN.
+
+    Args:
+      x: ``(B, D)`` token tile.
+      w_gate, w_up: ``(D, H)``; w_down: ``(H, D)``.
+      block_b: token-tile size (defaults to :func:`pick_block_b`).
+    Returns:
+      ``(B, D)``.
+    """
+    b, d = x.shape
+    h = w_gate.shape[1]
+    assert w_gate.shape == (d, h) and w_up.shape == (d, h) and w_down.shape == (h, d)
+    bb = block_b or pick_block_b(b)
+    grid = (b // bb,) if b % bb == 0 else (1,)
+    if b % bb != 0:
+        bb = b
+    return pl.pallas_call(
+        _swiglu_kernel,
+        grid=grid,
+        in_specs=[
+            # token tile streams HBM->VMEM per grid step
+            pl.BlockSpec((bb, d), lambda i: (i, 0)),
+            # weights resident in VMEM across all grid steps
+            pl.BlockSpec((d, h), lambda i: (0, 0)),
+            pl.BlockSpec((d, h), lambda i: (0, 0)),
+            pl.BlockSpec((h, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, d), x.dtype),
+        interpret=True,
+    )(x, w_gate, w_up, w_down)
+
+
+def _combine_kernel(y_ref, g_ref, o_ref):
+    """One grid step: gate-weighted sum over the K axis for a token tile."""
+    y = y_ref[...]  # (bb, K, D)
+    g = g_ref[...]  # (bb, K)
+    o_ref[...] = jnp.sum(y * g[:, :, None], axis=1)
+
+
+@jax.jit
+def gated_combine(y, gates):
+    """Pallas top-K combine: ``(B, K, D), (B, K) -> (B, D)``."""
+    b, k, d = y.shape
+    assert gates.shape == (b, k)
+    bb = pick_block_b(b)
+    return pl.pallas_call(
+        _combine_kernel,
+        grid=(b // bb,) if b % bb == 0 else (1,),
+        in_specs=[
+            pl.BlockSpec((bb, k, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bb, k), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, d), y.dtype),
+        interpret=True,
+    )(y, gates)
+
+
+def _swiglu_htiled_kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref, acc_ref):
+    """Grid step (i, j): token tile i x H-tile j.
+
+    The paper-geometry weights (D=H=2880, bf16, 3 mats ~ 47 MiB) exceed a
+    TPU core's ~16 MiB VMEM, so the full-weight schedule of
+    :func:`swiglu_ffn` cannot be resident. This variant streams H-tiles:
+    grid (B/bb, H/bh); step (i, j) computes the (bb, bh) slice of
+    silu(x Wg) * (x Wu) and accumulates its down-projection into the
+    output accumulator. VMEM per step = bb*d + 2*d*bh + bh*d + bb*d —
+    bounded by the tile sizes, not by H.
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]
+    g = jnp.dot(x, wg_ref[...])  # (bb, bh) slice of the H dim
+    u = jnp.dot(x, wu_ref[...])
+    a = (g * (1.0 / (1.0 + jnp.exp(-g)))) * u
+    acc_ref[...] += jnp.dot(a, wd_ref[...])  # partial down-projection
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _finalize():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_h"))
+def swiglu_ffn_htiled(x, w_gate, w_up, w_down, block_b=None, block_h=None):
+    """H-tiled Pallas SwiGLU FFN (paper-geometry schedule; see
+    :func:`_swiglu_htiled_kernel`). Numerically identical to
+    :func:`swiglu_ffn` — asserted by pytest."""
+    b, d = x.shape
+    h = w_gate.shape[1]
+    bb = block_b or pick_block_b(b)
+    bh = block_h or pick_block_b(h)
+    if b % bb != 0:
+        bb = b
+    if h % bh != 0:
+        bh = h
+    grid = (b // bb, h // bh)
+    return pl.pallas_call(
+        _swiglu_htiled_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((d, bh), lambda i, j: (0, j)),
+            pl.BlockSpec((d, bh), lambda i, j: (0, j)),
+            pl.BlockSpec((bh, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, d), x.dtype),
+        scratch_shapes=[pltpu_scratch(bb, d, x.dtype)],
+        interpret=True,
+    )(x, w_gate, w_up, w_down)
+
+
+def pltpu_scratch(bb, d, dtype):
+    """VMEM accumulator scratch (interpret-mode compatible)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM((bb, d), dtype)
+
+
+def vmem_footprint_bytes(block_b: int, d: int, h: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM residency of one grid step of :func:`swiglu_ffn`:
+    token tile + three weight mats + activations + output tile."""
+    tile = block_b * d
+    weights = 2 * d * h + h * d
+    acts = 2 * block_b * h
+    out = block_b * d
+    return (tile + weights + acts + out) * dtype_bytes
+
+
+def vmem_footprint_htiled_bytes(
+    block_b: int, d: int, block_h: int, dtype_bytes: int = 4
+) -> int:
+    """VMEM residency of one grid step of :func:`swiglu_ffn_htiled` —
+    independent of the full H, which is what makes paper geometry fit."""
+    tile = block_b * d
+    weights = 2 * d * block_h + block_h * d
+    acts = 2 * block_b * block_h
+    acc = block_b * d
+    out = block_b * d
+    return (tile + weights + acts + acc + out) * dtype_bytes

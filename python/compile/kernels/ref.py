@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references: pytest checks every Pallas kernel
+against the matching function here across shapes and dtypes, and the JAX
+model (model.py) uses these in its differentiable paths (the Pallas
+forward kernel is mathematically identical — asserted by the tests).
+"""
+
+import jax.numpy as jnp
+
+
+def silu(x):
+    """x * sigmoid(x) (numerically plain; matches the kernel)."""
+    return x * (1.0 / (1.0 + jnp.exp(-x)))
+
+
+def swiglu_ffn(x, w_gate, w_up, w_down):
+    """SwiGLU expert FFN: ``(silu(x @ Wg) * (x @ Wu)) @ Wd``.
+
+    Args:
+      x: ``(B, D)`` tokens.
+      w_gate, w_up: ``(D, H)``.
+      w_down: ``(H, D)``.
+    Returns:
+      ``(B, D)``.
+    """
+    g = x @ w_gate
+    u = x @ w_up
+    return (silu(g) * u) @ w_down
+
+
+def gated_combine(y, gates):
+    """Combine top-K expert outputs: ``sum_k gates[:, k] * y[:, k, :]``.
+
+    Args:
+      y: ``(B, K, D)`` per-slot expert outputs.
+      gates: ``(B, K)`` routing weights.
+    Returns:
+      ``(B, D)``.
+    """
+    return jnp.einsum("bkd,bk->bd", y, gates)

@@ -1,0 +1,253 @@
+"""Layer 2 — JAX MoE model (build-time only; never on the request path).
+
+Defines:
+
+* :func:`moe_layer` — one MoE layer (router -> top-K -> expert SwiGLU ->
+  gated combine). The inference-path artifact (``moe_fwd``) routes the
+  expert FFN through the **Pallas kernel** (kernels/moe_gemm.py); the
+  training path uses the jnp reference (mathematically identical,
+  asserted by pytest) because ``pallas_call`` has no autodiff rule.
+* :func:`transformer_forward` / :func:`train_step` — a tiny MoE
+  transformer (causal attention + MoE FFN) with cross-entropy loss and
+  SGD, for the Fig.-5 end-to-end training experiment. ``train_step``
+  additionally returns per-expert routed-token counts so the rust
+  coordinator can price EP vs LLEP per step.
+
+Everything here is lowered once by ``aot.py`` to HLO text and executed
+from rust via PJRT.
+"""
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import moe_gemm, ref
+
+# ---------------------------------------------------------------------------
+# Tiny-model geometry (mirrors ModelPreset::Tiny on the rust side).
+# ---------------------------------------------------------------------------
+VOCAB = 32
+D_MODEL = 32
+D_FF = 64
+N_EXPERTS = 8
+TOP_K = 2
+N_LAYERS = 2
+SEQ = 16
+BATCH = 8
+LR = 0.05
+
+
+class LayerParams(NamedTuple):
+    wq: jax.Array  # (D, D)
+    wk: jax.Array
+    wv: jax.Array
+    wo: jax.Array
+    router: jax.Array  # (D, N)
+    w_gate: jax.Array  # (N, D, H)
+    w_up: jax.Array  # (N, D, H)
+    w_down: jax.Array  # (N, H, D)
+
+
+class Params(NamedTuple):
+    embed: jax.Array  # (V, D)
+    layers: tuple  # of LayerParams
+    unembed: jax.Array  # (D, V)
+
+
+def init_params(seed):
+    """Initialize the tiny transformer from a scalar seed (f32, truncated)."""
+    key = jax.random.PRNGKey(jnp.asarray(seed, jnp.float32).astype(jnp.int32))
+    keys = jax.random.split(key, 2 + N_LAYERS * 8)
+    s_attn = 1.0 / jnp.sqrt(D_MODEL)
+    layers = []
+    for i in range(N_LAYERS):
+        k = keys[2 + i * 8 : 2 + (i + 1) * 8]
+        layers.append(
+            LayerParams(
+                wq=jax.random.normal(k[0], (D_MODEL, D_MODEL), jnp.float32) * s_attn,
+                wk=jax.random.normal(k[1], (D_MODEL, D_MODEL), jnp.float32) * s_attn,
+                wv=jax.random.normal(k[2], (D_MODEL, D_MODEL), jnp.float32) * s_attn,
+                wo=jax.random.normal(k[3], (D_MODEL, D_MODEL), jnp.float32) * s_attn,
+                # Router init models a *post-trained* MoE whose experts have
+                # specialized (paper §3.1): layer i's expert (2i+1) column
+                # has 10x the weight variance, so its logit dominates the
+                # argmax for a large fraction of tokens and the Fig.-5 run
+                # starts — like real fine-tuning does — from imbalanced
+                # routing. (A uniform additive column bias would cancel
+                # against zero-mean activations.)
+                router=jax.random.normal(k[4], (D_MODEL, N_EXPERTS), jnp.float32)
+                * (0.3 + 3.0 * jax.nn.one_hot((2 * i + 1) % N_EXPERTS, N_EXPERTS))[None, :],
+                w_gate=jax.random.normal(k[5], (N_EXPERTS, D_MODEL, D_FF), jnp.float32) * s_attn,
+                w_up=jax.random.normal(k[6], (N_EXPERTS, D_MODEL, D_FF), jnp.float32) * s_attn,
+                w_down=jax.random.normal(k[7], (N_EXPERTS, D_FF, D_MODEL), jnp.float32)
+                * (1.0 / jnp.sqrt(D_FF)),
+            )
+        )
+    return Params(
+        embed=jax.random.normal(keys[0], (VOCAB, D_MODEL), jnp.float32) * 0.1,
+        layers=tuple(layers),
+        unembed=jax.random.normal(keys[1], (D_MODEL, VOCAB), jnp.float32) * s_attn,
+    )
+
+
+def flatten_params(params: Params):
+    """Stable flattening used by the AOT interface (rust sees this order)."""
+    flat = [params.embed]
+    for lp in params.layers:
+        flat.extend(list(lp))
+    flat.append(params.unembed)
+    return flat
+
+
+def unflatten_params(flat):
+    layers = []
+    idx = 1
+    for _ in range(N_LAYERS):
+        layers.append(LayerParams(*flat[idx : idx + 8]))
+        idx += 8
+    return Params(embed=flat[0], layers=tuple(layers), unembed=flat[idx])
+
+
+# ---------------------------------------------------------------------------
+# MoE layer
+# ---------------------------------------------------------------------------
+def topk_manual(scores, k):
+    """Iterative-argmax top-k.
+
+    ``jax.lax.top_k`` lowers to a ``topk`` HLO instruction that the
+    xla_extension 0.5.1 text parser rejects (``largest=true`` attribute);
+    k rounds of argmax+mask lower to plain reduce/select ops that
+    round-trip cleanly. K is tiny (2-8), so this costs nothing.
+    """
+    vals, idxs = [], []
+    s = scores
+    for _ in range(k):
+        i = jnp.argmax(s, axis=-1)
+        one_hot = jax.nn.one_hot(i, s.shape[-1], dtype=s.dtype)
+        vals.append(jnp.sum(scores * one_hot, axis=-1))
+        idxs.append(i)
+        # mask with a large FINITE value: `one_hot * inf` would produce
+        # 0*inf = NaN on unselected entries, and argmax-over-NaN order is
+        # not deterministic across jit/eager.
+        s = s - one_hot * jnp.asarray(1e30, s.dtype)
+    return jnp.stack(vals, axis=-1), jnp.stack(idxs, axis=-1)
+
+
+def route_topk(x, router_w):
+    """Paper Eq. 1-2: softmax router, keep the K highest.
+
+    Args:
+      x: ``(T, D)`` tokens; router_w: ``(D, N)``.
+    Returns:
+      gates ``(T, K)``, indices ``(T, K)`` and counts ``(N,)``.
+    """
+    scores = jax.nn.softmax(x @ router_w, axis=-1)  # (T, N)
+    gates, idx = topk_manual(scores, TOP_K)
+    counts = jnp.sum(jax.nn.one_hot(idx, N_EXPERTS, dtype=jnp.float32), axis=(0, 1))
+    return gates, idx, counts
+
+
+def moe_layer(x, lp: LayerParams, use_pallas: bool):
+    """One MoE layer over flattened tokens ``x: (T, D)``.
+
+    Dense-mask formulation (every expert sees all tokens with per-token
+    mask weights): numerically identical to dispatch-based MoE because
+    masked tokens carry zero gate weight. Fine at the tiny geometry, and
+    keeps the computation lowerable with static shapes.
+    """
+    ffn = moe_gemm.swiglu_ffn if use_pallas else ref.swiglu_ffn
+    gates, idx, counts = route_topk(x, lp.router)
+    # per-expert gate mass per token: (T, N)
+    mask = jnp.einsum("tk,tkn->tn", gates, jax.nn.one_hot(idx, N_EXPERTS, dtype=x.dtype))
+    out = jnp.zeros_like(x)
+    for e in range(N_EXPERTS):
+        y = ffn(x, lp.w_gate[e], lp.w_up[e], lp.w_down[e])  # (T, D)
+        out = out + mask[:, e : e + 1] * y
+    return out, counts
+
+
+def attention(x, lp: LayerParams):
+    """Single-head causal self-attention over ``x: (B, T, D)``."""
+    q = x @ lp.wq
+    k = x @ lp.wk
+    v = x @ lp.wv
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D_MODEL, x.dtype))
+    att = jnp.einsum("btd,bsd->bts", q, k) * scale
+    t = x.shape[1]
+    causal = jnp.tril(jnp.ones((t, t), bool))
+    att = jnp.where(causal[None], att, -1e9)
+    att = jax.nn.softmax(att, axis=-1)
+    return jnp.einsum("bts,bsd->btd", att, v) @ lp.wo
+
+
+def rms_norm(x):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6)
+
+
+def transformer_forward(params: Params, tokens, use_pallas: bool = False):
+    """Forward pass.
+
+    Args:
+      params: model parameters.
+      tokens: ``(B, T)`` float token ids (cast to int internally so the
+        AOT interface stays f32-only).
+    Returns:
+      logits ``(B, T, V)`` and per-expert counts ``(N,)`` summed over
+      layers.
+    """
+    ids = tokens.astype(jnp.int32)
+    x = params.embed[ids]  # (B, T, D)
+    b, t, _ = x.shape
+    total_counts = jnp.zeros((N_EXPERTS,), jnp.float32)
+    for lp in params.layers:
+        x = x + attention(rms_norm(x), lp)
+        flat = rms_norm(x).reshape(b * t, D_MODEL)
+        moe_out, counts = moe_layer(flat, lp, use_pallas)
+        x = x + moe_out.reshape(b, t, D_MODEL)
+        total_counts = total_counts + counts
+    logits = rms_norm(x) @ params.unembed
+    return logits, total_counts
+
+
+def loss_fn(flat_params, x, y):
+    params = unflatten_params(flat_params)
+    logits, counts = transformer_forward(params, x)
+    targets = y.astype(jnp.int32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return jnp.mean(nll), counts
+
+
+@functools.partial(jax.jit)
+def train_step(*args):
+    """One SGD step. args = (*flat_params, x, y);
+    returns (loss, *new_flat_params, expert_counts)."""
+    flat_params = list(args[:-2])
+    x, y = args[-2], args[-1]
+    (loss, counts), grads = jax.value_and_grad(loss_fn, has_aux=True)(flat_params, x, y)
+    new_params = [p - LR * g for p, g in zip(flat_params, grads)]
+    return (loss.reshape(1), *new_params, counts)
+
+
+@jax.jit
+def moe_fwd(x, router_w, w_gate, w_up, w_down):
+    """Standalone MoE layer forward through the **Pallas** kernel — the
+    numeric cross-check artifact (rust compares it against its own
+    dispatch-compute-combine on identical inputs).
+
+    Args:
+      x: ``(T, D)``; router_w ``(D, N)``; stacked expert weights
+      ``(N, D, H)/(N, D, H)/(N, H, D)``.
+    Returns:
+      (out ``(T, D)``, gates ``(T, K)``, indices ``(T, K)`` as f32,
+      counts ``(N,)``).
+    """
+    lp = LayerParams(
+        wq=None, wk=None, wv=None, wo=None,
+        router=router_w, w_gate=w_gate, w_up=w_up, w_down=w_down,
+    )
+    out, counts = moe_layer(x, lp, use_pallas=True)
+    gates, idx, _ = route_topk(x, router_w)
+    return out, gates, idx.astype(jnp.float32), counts

@@ -1,0 +1,87 @@
+"""AOT pipeline tests: HLO-text emission and manifest structure.
+
+The full `make artifacts` run is exercised end-to-end by the rust
+integration tests; here we check the lowering helpers directly on one
+cheap entry point (so pytest stays fast) and validate the interchange
+invariants the rust loader depends on.
+"""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+from compile.kernels import moe_gemm
+
+
+@pytest.fixture(scope="module")
+def kernel_hlo_text():
+    lowered = aot.lower_entry(
+        lambda x, wg, wu, wd: moe_gemm.swiglu_ffn(x, wg, wu, wd),
+        (aot.spec(64, 8), aot.spec(8, 16), aot.spec(8, 16), aot.spec(16, 8)),
+    )
+    return aot.to_hlo_text(lowered)
+
+
+def test_hlo_text_is_parseable_hlo(kernel_hlo_text):
+    # Must be HLO *text* — the interchange contract with xla_extension
+    # 0.5.1 (see aot.py docstring).
+    assert kernel_hlo_text.startswith("HloModule")
+    assert "ENTRY" in kernel_hlo_text
+    # return_tuple=True => the root computation returns a tuple
+    assert "tuple" in kernel_hlo_text
+
+
+def test_hlo_has_no_unparseable_ops(kernel_hlo_text):
+    # Ops known to break the 0.5.1 text parser must not appear.
+    assert "topk(" not in kernel_hlo_text
+    assert "mosaic" not in kernel_hlo_text.lower()
+
+
+def test_train_step_lowers_without_topk():
+    # The manual argmax top-k keeps `topk(` out of the training HLO too.
+    params = model.init_params(0.0)
+    flat = model.flatten_params(params)
+    specs = tuple(aot.spec(*p.shape) for p in flat) + (
+        aot.spec(model.BATCH, model.SEQ),
+        aot.spec(model.BATCH, model.SEQ),
+    )
+    lowered = aot.lower_entry(model.train_step, specs)
+    text = aot.to_hlo_text(lowered)
+    assert "topk(" not in text
+    assert text.startswith("HloModule")
+
+
+def test_shapes_of():
+    args = (aot.spec(2, 3), aot.spec(5))
+    assert aot.shapes_of(args) == [[2, 3], [5]]
+
+
+def test_manifest_written_structure(tmp_path, monkeypatch):
+    # Run main() with a stubbed emit set? Cheaper: emit one artifact
+    # manually through the same code path used by main().
+    lowered = aot.lower_entry(
+        lambda x: (x + 1.0,), (aot.spec(4, 4),)
+    )
+    text = aot.to_hlo_text(lowered)
+    f = tmp_path / "unit.hlo.txt"
+    f.write_text(text)
+    manifest = {
+        "artifacts": {
+            "unit": {"file": "unit.hlo.txt", "inputs": [[4, 4]], "outputs": [[4, 4]], "meta": {}}
+        }
+    }
+    (tmp_path / "manifest.json").write_text(json.dumps(manifest))
+    # structure parses back and file exists
+    loaded = json.loads((tmp_path / "manifest.json").read_text())
+    assert loaded["artifacts"]["unit"]["file"] == "unit.hlo.txt"
+    assert (tmp_path / loaded["artifacts"]["unit"]["file"]).exists()
+
+
+def test_buckets_cover_training_batch():
+    # The runtime pads token groups to these buckets; they must cover the
+    # tiny model's largest realistic group (B*T tokens on one expert).
+    assert max(aot.FFN_BUCKETS) >= model.BATCH * model.SEQ
+    assert sorted(aot.FFN_BUCKETS) == list(aot.FFN_BUCKETS)

@@ -1,0 +1,51 @@
+//! Bench: Fig. 1a/1b — EP vs LLEP latency and memory on the 128-expert
+//! layer across the paper's imbalance grid, plus wall-time of the
+//! simulation itself.
+//!
+//! Run: `cargo bench --bench fig1_speedup` (add `--quick` to shrink).
+
+use llep::harness::{compare, paper_scenarios};
+use llep::metrics::{format_bytes, format_secs, Table};
+use llep::prelude::*;
+use llep::util::benchkit::{quick_requested, Bencher};
+
+fn main() {
+    let engine = Engine::modeled(
+        ModelConfig::preset(ModelPreset::Fig1Layer),
+        SystemConfig::preset(SystemPreset::H200x8),
+    );
+    let llep = LlepConfig::default();
+    let tokens = if quick_requested() { 8192 } else { 32_768 };
+
+    let mut table = Table::new(&[
+        "scenario", "EP latency", "LLEP latency", "speedup", "EP peak", "LLEP peak",
+    ]);
+    for sc in paper_scenarios(engine.model.num_experts) {
+        let (speedup, ep, ll) = compare(&engine, &sc, tokens, &llep, 1);
+        table.row(vec![
+            sc.label(),
+            format_secs(ep.latency_s),
+            format_secs(ll.latency_s),
+            format!("{speedup:.2}x"),
+            format_bytes(ep.max_peak_bytes()),
+            format_bytes(ll.max_peak_bytes()),
+        ]);
+    }
+    println!("Fig 1a/1b — 128 experts, top-4, D=2048, P=8, {tokens} tokens/device\n");
+    println!("{}", table.render());
+
+    // Wall-time of the end-to-end simulated step (plan + price), the
+    // quantity the perf pass optimizes.
+    let mut b = if quick_requested() { Bencher::quick() } else { Bencher::new() };
+    let mut rng = Rng::new(2);
+    let lm_hot =
+        Scenario::concentrated(0.95, 1).generate_loads(&engine.model, 8, tokens, &mut rng);
+    let lm_bal = Scenario::balanced().generate_loads(&engine.model, 8, tokens, &mut rng);
+    b.bench("sim_step/ep/95into1", || engine.run_step_loads(&lm_hot, &PlannerKind::StandardEp));
+    b.bench("sim_step/llep/95into1", || {
+        engine.run_step_loads(&lm_hot, &PlannerKind::llep_default())
+    });
+    b.bench("sim_step/llep/balanced", || {
+        engine.run_step_loads(&lm_bal, &PlannerKind::llep_default())
+    });
+}

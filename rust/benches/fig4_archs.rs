@@ -1,0 +1,57 @@
+//! Bench: Fig. 4 — EP vs LLEP across the three MoE architectures the
+//! paper evaluates (gpt-oss-120b, DeepSeek-V3, Kimi-K2) plus Fig. 1c
+//! full-model throughput.
+//!
+//! Run: `cargo bench --bench fig4_archs` (add `--quick` to shrink).
+
+use llep::harness::{compare, fullmodel, paper_scenarios};
+use llep::metrics::{format_bytes, Table};
+use llep::prelude::*;
+use llep::util::benchkit::quick_requested;
+
+fn main() {
+    let quick = quick_requested();
+    let mut table = Table::new(&["model", "scenario", "speedup", "EP peak", "LLEP peak", "EP OOM"]);
+    let configs: &[(ModelPreset, usize)] = &[
+        (ModelPreset::GptOss120b, 32_768),
+        (ModelPreset::DeepSeekV3, 16_384),
+        (ModelPreset::KimiK2, 16_384),
+    ];
+    for &(preset, tokens) in configs {
+        let model = ModelConfig::preset(preset);
+        let engine = Engine::modeled(model.clone(), SystemConfig::preset(SystemPreset::H200x8));
+        let llep = LlepConfig::default(); // paper §5.1: lambda=1.3 alpha=1 m=1024
+        let tokens = if quick { tokens / 4 } else { tokens };
+        for sc in paper_scenarios(model.num_experts) {
+            let (speedup, ep, ll) = compare(&engine, &sc, tokens, &llep, 4);
+            table.row(vec![
+                model.name.clone(),
+                sc.label(),
+                format!("{speedup:.2}x"),
+                format_bytes(ep.max_peak_bytes()),
+                format_bytes(ll.max_peak_bytes()),
+                if ep.oom { "OOM".into() } else { "-".into() },
+            ]);
+        }
+    }
+    println!("Fig 4 — three architectures, P=8 H200 (B per paper §5.1)\n");
+    println!("{}", table.render());
+
+    println!("Fig 1c — full-model throughput (in-the-wild drifting routing)\n");
+    let mut t = Table::new(&["model", "P", "EP tok/s", "LLEP tok/s", "speedup"]);
+    for (preset, devices) in [
+        (ModelPreset::GptOss20b, 4),
+        (ModelPreset::GptOss20b, 8),
+        (ModelPreset::GptOss120b, 8),
+    ] {
+        let row = fullmodel::throughput_row(preset, devices, if quick { 8192 } else { 32_768 }, 7);
+        t.row(vec![
+            row.model.clone(),
+            devices.to_string(),
+            format!("{:.0}", row.ep_tps),
+            format!("{:.0}", row.llep_tps),
+            format!("{:.2}x", row.speedup()),
+        ]);
+    }
+    println!("{}", t.render());
+}

@@ -1,0 +1,57 @@
+//! Bench: planner hot paths — LLA planning latency (it sits on the
+//! critical path of every step, paper Alg. 4), dispatch chunk building,
+//! and the native GEMM kernel. These are the targets of the perf pass
+//! (EXPERIMENTS.md §Perf).
+//!
+//! Run: `cargo bench --bench planner` (add `--quick` to shrink).
+
+use llep::exec::dispatch;
+use llep::planner::{plan_ep, plan_eplb, plan_llep};
+use llep::prelude::*;
+use llep::tensor::{matmul, Mat};
+use llep::util::benchkit::{bb, quick_requested, Bencher};
+
+fn main() {
+    let mut b = if quick_requested() { Bencher::quick() } else { Bencher::new() };
+
+    // --- LLA planning latency across problem sizes -------------------------
+    for &(n, p) in &[(32usize, 8usize), (128, 8), (256, 8), (384, 8), (128, 16)] {
+        let mut model = ModelConfig::preset(ModelPreset::Fig1Layer);
+        model.num_experts = n;
+        let mut rng = Rng::new(n as u64);
+        let lm = Scenario::concentrated(0.9, 4.min(n)).generate_loads(&model, p, 32_768, &mut rng);
+        let loads = lm.expert_loads();
+        let cfg = LlepConfig::default();
+        b.bench(&format!("lla/N={n}/P={p}"), || bb(plan_llep(&cfg, n, p, &loads, None)));
+        b.bench(&format!("ep/N={n}/P={p}"), || bb(plan_ep(n, p, &loads)));
+        b.bench(&format!("eplb/N={n}/P={p}"), || bb(plan_eplb(p, n, p, &loads, &loads)));
+    }
+
+    // --- dispatch chunk building -------------------------------------------
+    let model = ModelConfig::preset(ModelPreset::GptOss120b);
+    let mut rng = Rng::new(7);
+    let lm = Scenario::concentrated(0.8, 4).generate_loads(&model, 8, 32_768, &mut rng);
+    let loads = lm.expert_loads();
+    let plan = plan_llep(&LlepConfig::default(), model.num_experts, 8, &loads, None);
+    b.bench("dispatch/chunks/N=128", || bb(dispatch::chunks(&plan, &lm)));
+    b.bench("dispatch/device_work/N=128", || bb(dispatch::device_work(&plan, &lm)));
+    let cs = dispatch::chunks(&plan, &lm);
+    b.bench("dispatch/bytes/N=128", || bb(dispatch::dispatch_bytes(&cs, 8, 5760)));
+
+    // --- native GEMM kernel --------------------------------------------------
+    let mut rng = Rng::new(8);
+    for &(m, k, n) in &[(64usize, 64usize, 64usize), (256, 64, 128), (512, 128, 256)] {
+        let a = Mat::randn(m, k, 0.1, &mut rng);
+        let w = Mat::randn(k, n, 0.1, &mut rng);
+        b.bench(&format!("native_gemm/{m}x{k}x{n}"), || bb(matmul(&a, &w)));
+    }
+
+    // --- full modeled step (plan + price) ------------------------------------
+    let engine = Engine::modeled(
+        ModelConfig::preset(ModelPreset::GptOss120b),
+        SystemConfig::preset(SystemPreset::H200x8),
+    );
+    b.bench("engine/run_step_loads/llep", || {
+        bb(engine.run_step_loads(&lm, &PlannerKind::llep_default()))
+    });
+}

@@ -1,0 +1,76 @@
+//! LLEP hyperparameters (paper §4 "Constraints").
+
+/// The three knobs of the LLA algorithm.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LlepConfig {
+    /// Capacity factor `alpha`: a device is considered full at
+    /// `m_alpha = alpha * total_tokens / P` assigned tokens.
+    pub alpha: f64,
+    /// Minimum tokens per spilled GEMM chunk `m` — smaller chunks are not
+    /// worth the launch overhead + weight transfer (paper §3.2, Fig. 8).
+    pub min_gemm_tokens: usize,
+    /// Imbalance trigger `lambda`: if `max(l)/mean(l) < lambda` the
+    /// routing is considered balanced and LLEP falls back to standard EP.
+    pub lambda: f64,
+}
+
+impl Default for LlepConfig {
+    /// The paper's §5.1 settings: `lambda=1.3, alpha=1, m=1024`.
+    fn default() -> Self {
+        LlepConfig { alpha: 1.0, min_gemm_tokens: 1024, lambda: 1.3 }
+    }
+}
+
+impl LlepConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.alpha.is_finite() && self.alpha >= 1.0) {
+            // alpha < 1 would make total capacity < total tokens.
+            return Err(format!("alpha must be >= 1.0, got {}", self.alpha));
+        }
+        if !(self.lambda.is_finite() && self.lambda >= 1.0) {
+            // max/mean >= 1 always, so lambda < 1 would never trigger EP.
+            return Err(format!("lambda must be >= 1.0, got {}", self.lambda));
+        }
+        Ok(())
+    }
+
+    pub fn with_alpha(mut self, alpha: f64) -> Self {
+        self.alpha = alpha;
+        self
+    }
+    pub fn with_lambda(mut self, lambda: f64) -> Self {
+        self.lambda = lambda;
+        self
+    }
+    pub fn with_min_gemm_tokens(mut self, m: usize) -> Self {
+        self.min_gemm_tokens = m;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_paper() {
+        let c = LlepConfig::default();
+        assert_eq!(c.alpha, 1.0);
+        assert_eq!(c.min_gemm_tokens, 1024);
+        assert_eq!(c.lambda, 1.3);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn invalid_rejected() {
+        assert!(LlepConfig::default().with_alpha(0.5).validate().is_err());
+        assert!(LlepConfig::default().with_lambda(0.9).validate().is_err());
+        assert!(LlepConfig::default().with_alpha(f64::NAN).validate().is_err());
+    }
+
+    #[test]
+    fn builders_chain() {
+        let c = LlepConfig::default().with_alpha(1.5).with_lambda(2.0).with_min_gemm_tokens(64);
+        assert_eq!((c.alpha, c.lambda, c.min_gemm_tokens), (1.5, 2.0, 64));
+    }
+}

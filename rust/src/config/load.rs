@@ -1,0 +1,264 @@
+//! Experiment configuration files (TOML subset).
+//!
+//! An experiment file selects a model + system preset (optionally
+//! overriding fields) and the LLEP hyperparameters:
+//!
+//! ```toml
+//! [model]
+//! preset = "gpt-oss-120b"     # or explicit fields below
+//! num_experts = 128
+//!
+//! [system]
+//! preset = "h200x8"
+//! devices = 8
+//!
+//! [llep]
+//! alpha = 1.0
+//! lambda = 1.3
+//! min_gemm_tokens = 1024
+//!
+//! [workload]
+//! tokens_per_device = 32768
+//! scenario = "concentrated"   # balanced | concentrated | powerlaw
+//! concentration = 0.8
+//! hot_experts = 4
+//! seed = 0
+//! ```
+
+use super::{LlepConfig, ModelConfig, ModelPreset, SystemConfig, SystemPreset};
+use crate::routing::Scenario;
+use crate::util::tomlmini::{self, Doc};
+
+/// A fully-resolved experiment description.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub model: ModelConfig,
+    pub system: SystemConfig,
+    pub llep: LlepConfig,
+    pub scenario: Scenario,
+    pub tokens_per_device: usize,
+    pub seed: u64,
+}
+
+/// Parse an experiment TOML document.
+pub fn load_experiment(text: &str) -> Result<ExperimentConfig, String> {
+    let doc = tomlmini::parse(text)?;
+
+    let model = load_model(&doc)?;
+    let system = load_system(&doc)?;
+    let llep = load_llep(&doc)?;
+    let (scenario, tokens_per_device, seed) = load_workload(&doc, &model)?;
+
+    model.validate()?;
+    system.validate()?;
+    llep.validate()?;
+    model.experts_per_device(system.devices)?;
+    Ok(ExperimentConfig { model, system, llep, scenario, tokens_per_device, seed })
+}
+
+fn get_usize(doc: &Doc, table: &str, key: &str) -> Result<Option<usize>, String> {
+    match doc.get(table, key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_usize()
+            .map(Some)
+            .ok_or_else(|| format!("[{table}] {key} must be a non-negative integer")),
+    }
+}
+
+fn get_f64(doc: &Doc, table: &str, key: &str) -> Result<Option<f64>, String> {
+    match doc.get(table, key) {
+        None => Ok(None),
+        Some(v) => v.as_f64().map(Some).ok_or_else(|| format!("[{table}] {key} must be a number")),
+    }
+}
+
+fn load_model(doc: &Doc) -> Result<ModelConfig, String> {
+    let preset = match doc.get("model", "preset") {
+        Some(v) => {
+            let name = v.as_str().ok_or("[model] preset must be a string")?;
+            ModelPreset::from_name(name).ok_or_else(|| {
+                format!(
+                    "unknown model preset {name:?}; known: {}",
+                    ModelPreset::ALL.map(|p| p.name()).join(", ")
+                )
+            })?
+        }
+        None => ModelPreset::Tiny,
+    };
+    let mut m = ModelConfig::preset(preset);
+    if let Some(x) = get_usize(doc, "model", "num_experts")? {
+        m.num_experts = x;
+    }
+    if let Some(x) = get_usize(doc, "model", "top_k")? {
+        m.top_k = x;
+    }
+    if let Some(x) = get_usize(doc, "model", "d_model")? {
+        m.d_model = x;
+    }
+    if let Some(x) = get_usize(doc, "model", "d_ff")? {
+        m.d_ff = x;
+    }
+    if let Some(x) = get_usize(doc, "model", "num_layers")? {
+        m.num_layers = x;
+    }
+    if let Some(v) = doc.get("model", "swiglu") {
+        m.swiglu = v.as_bool().ok_or("[model] swiglu must be a bool")?;
+    }
+    Ok(m)
+}
+
+fn load_system(doc: &Doc) -> Result<SystemConfig, String> {
+    let preset = match doc.get("system", "preset") {
+        Some(v) => {
+            let name = v.as_str().ok_or("[system] preset must be a string")?;
+            SystemPreset::from_name(name).ok_or_else(|| {
+                format!(
+                    "unknown system preset {name:?}; known: {}",
+                    SystemPreset::ALL.map(|p| p.name()).join(", ")
+                )
+            })?
+        }
+        None => SystemPreset::CpuSim8,
+    };
+    let mut s = SystemConfig::preset(preset);
+    if let Some(x) = get_usize(doc, "system", "devices")? {
+        s = s.with_devices(x);
+    }
+    if let Some(x) = get_f64(doc, "system", "intra_node_gbps")? {
+        s.comm.intra_node_bw = x * 1e9;
+    }
+    if let Some(x) = get_f64(doc, "system", "inter_node_gbps")? {
+        s.comm.inter_node_bw = x * 1e9;
+    }
+    if let Some(x) = get_f64(doc, "system", "mem_capacity_gb")? {
+        s.mem_capacity_bytes = (x * (1u64 << 30) as f64) as u64;
+    }
+    Ok(s)
+}
+
+fn load_llep(doc: &Doc) -> Result<LlepConfig, String> {
+    let mut c = LlepConfig::default();
+    if let Some(x) = get_f64(doc, "llep", "alpha")? {
+        c.alpha = x;
+    }
+    if let Some(x) = get_f64(doc, "llep", "lambda")? {
+        c.lambda = x;
+    }
+    if let Some(x) = get_usize(doc, "llep", "min_gemm_tokens")? {
+        c.min_gemm_tokens = x;
+    }
+    Ok(c)
+}
+
+fn load_workload(doc: &Doc, model: &ModelConfig) -> Result<(Scenario, usize, u64), String> {
+    let tokens = get_usize(doc, "workload", "tokens_per_device")?.unwrap_or(4096);
+    let seed = get_usize(doc, "workload", "seed")?.unwrap_or(0) as u64;
+    let kind = doc
+        .get("workload", "scenario")
+        .map(|v| v.as_str().ok_or("[workload] scenario must be a string"))
+        .transpose()?
+        .unwrap_or("balanced");
+    let scenario = match kind {
+        "balanced" => Scenario::balanced(),
+        "concentrated" => {
+            let conc = get_f64(doc, "workload", "concentration")?.unwrap_or(0.8);
+            let hot = get_usize(doc, "workload", "hot_experts")?.unwrap_or(4);
+            Scenario::concentrated(conc, hot)
+        }
+        "powerlaw" => {
+            let expo = get_f64(doc, "workload", "exponent")?.unwrap_or(1.2);
+            Scenario::power_law(expo)
+        }
+        other => {
+            return Err(format!(
+                "unknown scenario {other:?} (balanced | concentrated | powerlaw)"
+            ))
+        }
+    };
+    // Sanity: hot_experts can't exceed N.
+    if let Scenario::Concentrated { hot_experts, .. } = &scenario {
+        if *hot_experts > model.num_experts {
+            return Err(format!(
+                "hot_experts {} > num_experts {}",
+                hot_experts, model.num_experts
+            ));
+        }
+    }
+    Ok((scenario, tokens, seed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_document_roundtrip() {
+        let cfg = load_experiment(
+            r#"
+[model]
+preset = "gpt-oss-120b"
+
+[system]
+preset = "h200x8"
+
+[llep]
+alpha = 1.25
+lambda = 1.3
+min_gemm_tokens = 1024
+
+[workload]
+tokens_per_device = 32768
+scenario = "concentrated"
+concentration = 0.95
+hot_experts = 1
+seed = 7
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.model.num_experts, 128);
+        assert_eq!(cfg.system.devices, 8);
+        assert_eq!(cfg.llep.alpha, 1.25);
+        assert_eq!(cfg.tokens_per_device, 32768);
+        assert_eq!(cfg.seed, 7);
+        match cfg.scenario {
+            Scenario::Concentrated { concentration, hot_experts } => {
+                assert_eq!(concentration, 0.95);
+                assert_eq!(hot_experts, 1);
+            }
+            _ => panic!("wrong scenario"),
+        }
+    }
+
+    #[test]
+    fn defaults_when_empty() {
+        let cfg = load_experiment("").unwrap();
+        assert_eq!(cfg.model.name, "tiny");
+        assert_eq!(cfg.system.devices, 8);
+        assert_eq!(cfg.llep, LlepConfig::default());
+    }
+
+    #[test]
+    fn model_field_overrides() {
+        let cfg = load_experiment("[model]\npreset = \"tiny\"\nnum_experts = 16\ntop_k = 4\n").unwrap();
+        assert_eq!(cfg.model.num_experts, 16);
+        assert_eq!(cfg.model.top_k, 4);
+    }
+
+    #[test]
+    fn rejects_unknown_preset_and_scenario() {
+        assert!(load_experiment("[model]\npreset = \"gpt5\"\n").is_err());
+        assert!(load_experiment("[workload]\nscenario = \"chaotic\"\n").is_err());
+    }
+
+    #[test]
+    fn rejects_inconsistent() {
+        // 10 experts not divisible by 8 devices
+        assert!(load_experiment("[model]\npreset = \"tiny\"\nnum_experts = 10\n").is_err());
+        // hot_experts > N
+        assert!(load_experiment(
+            "[workload]\nscenario = \"concentrated\"\nhot_experts = 100\n"
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! Configuration system: model geometry presets, system (testbed)
+//! presets, LLEP hyperparameters, and TOML file loading.
+
+mod llep;
+mod load;
+mod model;
+mod system;
+
+pub use llep::LlepConfig;
+pub use load::{load_experiment, ExperimentConfig};
+pub use model::{ModelConfig, ModelPreset};
+pub use system::{SystemConfig, SystemPreset};

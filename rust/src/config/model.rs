@@ -1,0 +1,252 @@
+//! MoE model geometry.
+//!
+//! Presets follow the architectures the paper benchmarks (§5.1): the MoE
+//! layer of gpt-oss-20b/120b, DeepSeek-V3 and Kimi-K2, plus the synthetic
+//! 128-expert layer of Fig. 1 and a tiny CPU-tractable geometry used by
+//! the numeric tests and the end-to-end training example.
+
+/// Named model presets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelPreset {
+    /// Fig. 1a/1b synthetic layer: 128 experts, top-4, D=2048.
+    Fig1Layer,
+    /// gpt-oss-20b: 32 experts, top-4, D=2880, H=2880, 24 layers.
+    GptOss20b,
+    /// gpt-oss-120b: 128 experts, top-4, D=2880, H=2880, 36 layers.
+    GptOss120b,
+    /// DeepSeek-V3: 256 routed experts, top-8, D=7168, H=2048, 61 layers.
+    DeepSeekV3,
+    /// Kimi-K2: 384 routed experts, top-8, D=7168, H=2048, 61 layers.
+    KimiK2,
+    /// Tiny geometry for CPU-real execution: 8 experts, top-2, D=64, H=128.
+    Tiny,
+}
+
+impl ModelPreset {
+    pub const ALL: [ModelPreset; 6] = [
+        ModelPreset::Fig1Layer,
+        ModelPreset::GptOss20b,
+        ModelPreset::GptOss120b,
+        ModelPreset::DeepSeekV3,
+        ModelPreset::KimiK2,
+        ModelPreset::Tiny,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelPreset::Fig1Layer => "fig1-layer",
+            ModelPreset::GptOss20b => "gpt-oss-20b",
+            ModelPreset::GptOss120b => "gpt-oss-120b",
+            ModelPreset::DeepSeekV3 => "deepseek-v3",
+            ModelPreset::KimiK2 => "kimi-k2",
+            ModelPreset::Tiny => "tiny",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<ModelPreset> {
+        Self::ALL.iter().copied().find(|p| p.name() == name)
+    }
+}
+
+/// Geometry of one MoE layer (and, for full-model throughput estimates,
+/// the count of such layers plus dense/attention overhead parameters).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    /// Number of routed experts `N`.
+    pub num_experts: usize,
+    /// Active experts per token `K`.
+    pub top_k: usize,
+    /// Model (hidden) dimension `D`.
+    pub d_model: usize,
+    /// Expert FFN intermediate dimension `H`.
+    pub d_ff: usize,
+    /// SwiGLU experts use three weight matrices (gate/up/down); a plain
+    /// FFN expert uses one `D x H` matrix as in the paper's §2.1 notation.
+    pub swiglu: bool,
+    /// Number of MoE layers (used for full-model estimates, Fig. 1c).
+    pub num_layers: usize,
+    /// Bytes per parameter/activation element (2 = bf16, 4 = f32).
+    pub dtype_bytes: usize,
+    /// Shared (always-active) experts, computed outside EP dispatch.
+    pub num_shared_experts: usize,
+}
+
+impl ModelConfig {
+    pub fn preset(p: ModelPreset) -> ModelConfig {
+        match p {
+            // The Fig. 1 caption: "128 experts, 4 active experts, hidden
+            // size of 2048".
+            ModelPreset::Fig1Layer => ModelConfig {
+                name: p.name().into(),
+                num_experts: 128,
+                top_k: 4,
+                d_model: 2048,
+                d_ff: 2048,
+                swiglu: true,
+                num_layers: 1,
+                dtype_bytes: 2,
+                num_shared_experts: 0,
+            },
+            ModelPreset::GptOss20b => ModelConfig {
+                name: p.name().into(),
+                num_experts: 32,
+                top_k: 4,
+                d_model: 2880,
+                d_ff: 2880,
+                swiglu: true,
+                num_layers: 24,
+                dtype_bytes: 2,
+                num_shared_experts: 0,
+            },
+            ModelPreset::GptOss120b => ModelConfig {
+                name: p.name().into(),
+                num_experts: 128,
+                top_k: 4,
+                d_model: 2880,
+                d_ff: 2880,
+                swiglu: true,
+                num_layers: 36,
+                dtype_bytes: 2,
+                num_shared_experts: 0,
+            },
+            ModelPreset::DeepSeekV3 => ModelConfig {
+                name: p.name().into(),
+                num_experts: 256,
+                top_k: 8,
+                d_model: 7168,
+                d_ff: 2048,
+                swiglu: true,
+                num_layers: 58,
+                dtype_bytes: 2,
+                num_shared_experts: 1,
+            },
+            ModelPreset::KimiK2 => ModelConfig {
+                name: p.name().into(),
+                num_experts: 384,
+                top_k: 8,
+                d_model: 7168,
+                d_ff: 2048,
+                swiglu: true,
+                num_layers: 60,
+                dtype_bytes: 2,
+                num_shared_experts: 1,
+            },
+            ModelPreset::Tiny => ModelConfig {
+                name: p.name().into(),
+                num_experts: 8,
+                top_k: 2,
+                d_model: 64,
+                d_ff: 128,
+                swiglu: true,
+                num_layers: 2,
+                dtype_bytes: 4,
+                num_shared_experts: 0,
+            },
+        }
+    }
+
+    /// Number of weight matrices per expert (3 for SwiGLU, 1 otherwise).
+    pub fn mats_per_expert(&self) -> usize {
+        if self.swiglu {
+            3
+        } else {
+            1
+        }
+    }
+
+    /// Bytes of one expert's weights.
+    pub fn expert_weight_bytes(&self) -> usize {
+        self.mats_per_expert() * self.d_model * self.d_ff * self.dtype_bytes
+    }
+
+    /// FLOPs to push one token through one expert (2 flops per MAC).
+    pub fn flops_per_token(&self) -> f64 {
+        2.0 * self.d_model as f64 * self.d_ff as f64 * self.mats_per_expert() as f64
+    }
+
+    /// Experts per device under `P`-way EP; errors if not divisible, as
+    /// the paper assumes `M = N/P`.
+    pub fn experts_per_device(&self, devices: usize) -> Result<usize, String> {
+        if devices == 0 || self.num_experts % devices != 0 {
+            return Err(format!(
+                "num_experts {} not divisible by EP world size {}",
+                self.num_experts, devices
+            ));
+        }
+        Ok(self.num_experts / devices)
+    }
+
+    /// Native device of expert `i` under the paper's block layout.
+    pub fn native_device(&self, expert: usize, devices: usize) -> usize {
+        let m = self.num_experts / devices;
+        expert / m
+    }
+
+    /// Validate internal consistency.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.num_experts == 0 || self.top_k == 0 || self.d_model == 0 || self.d_ff == 0 {
+            return Err("model dims must be positive".into());
+        }
+        if self.top_k > self.num_experts {
+            return Err(format!("top_k {} > num_experts {}", self.top_k, self.num_experts));
+        }
+        if !matches!(self.dtype_bytes, 1 | 2 | 4) {
+            return Err(format!("unsupported dtype_bytes {}", self.dtype_bytes));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate() {
+        for p in ModelPreset::ALL {
+            let m = ModelConfig::preset(p);
+            m.validate().unwrap();
+            assert_eq!(ModelPreset::from_name(m.name.as_str()), Some(p));
+        }
+    }
+
+    #[test]
+    fn paper_geometries() {
+        let g = ModelConfig::preset(ModelPreset::GptOss120b);
+        assert_eq!((g.num_experts, g.top_k, g.d_model), (128, 4, 2880));
+        let d = ModelConfig::preset(ModelPreset::DeepSeekV3);
+        assert_eq!((d.num_experts, d.top_k), (256, 8));
+        let k = ModelConfig::preset(ModelPreset::KimiK2);
+        assert_eq!((k.num_experts, k.top_k), (384, 8));
+    }
+
+    #[test]
+    fn expert_bytes_and_flops() {
+        let t = ModelConfig::preset(ModelPreset::Tiny);
+        // 3 mats * 64 * 128 * 4 bytes
+        assert_eq!(t.expert_weight_bytes(), 3 * 64 * 128 * 4);
+        assert_eq!(t.flops_per_token(), 2.0 * 64.0 * 128.0 * 3.0);
+    }
+
+    #[test]
+    fn native_device_layout() {
+        let m = ModelConfig::preset(ModelPreset::GptOss20b); // 32 experts
+        assert_eq!(m.experts_per_device(8).unwrap(), 4);
+        assert_eq!(m.native_device(0, 8), 0);
+        assert_eq!(m.native_device(11, 8), 2); // paper §3.1: E11 lives on gpu-2
+        assert_eq!(m.native_device(31, 8), 7);
+        assert!(m.experts_per_device(7).is_err());
+        assert!(m.experts_per_device(0).is_err());
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut m = ModelConfig::preset(ModelPreset::Tiny);
+        m.top_k = 100;
+        assert!(m.validate().is_err());
+        m = ModelConfig::preset(ModelPreset::Tiny);
+        m.dtype_bytes = 3;
+        assert!(m.validate().is_err());
+    }
+}

@@ -1,0 +1,215 @@
+//! System (testbed) configuration: device count, per-device memory,
+//! GEMM-throughput and interconnect parameters for the cost models.
+//!
+//! The `H200x8` preset mirrors the paper's testbed (8x H200 on one NVLink
+//! node); `CpuSim8` models this environment's CPU so measured and modeled
+//! runs can be cross-checked.
+
+/// GEMM cost-model parameters (paper Eq. 3):
+/// `T = overhead + tokens * t(B, D, H)` with per-token time degrading at
+/// small batch via a saturation curve `eff(B) = B / (B + b_half)`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GemmCostParams {
+    /// Kernel launch / setup latency per GEMM call, seconds (`T_overhead`).
+    pub overhead_s: f64,
+    /// Peak sustained throughput in FLOP/s at large B, D, H.
+    pub peak_flops: f64,
+    /// Token count at which efficiency reaches 50% (`b_half`).
+    pub tokens_half_eff: f64,
+    /// Dimension at which D/H-dependent efficiency reaches 50%; models
+    /// that small D/H also waste the compute units (paper Fig. 7b).
+    pub dim_half_eff: f64,
+}
+
+/// Interconnect cost-model parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CommCostParams {
+    /// Per-message latency, seconds (NCCL call + sync overhead).
+    pub latency_s: f64,
+    /// Intra-node per-device bandwidth, bytes/second (e.g. NVLink).
+    pub intra_node_bw: f64,
+    /// Inter-node per-device bandwidth, bytes/second (e.g. IB HDR).
+    pub inter_node_bw: f64,
+}
+
+/// Named system presets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SystemPreset {
+    /// The paper's testbed: single node, 8x H200 141GB, NVLink.
+    H200x8,
+    /// Two 8-GPU nodes (for the multi-node spill-preference discussion).
+    H200x16TwoNodes,
+    /// Virtual-device simulation calibrated to this repo's CPU.
+    CpuSim8,
+    /// Small CPU sim for tests (4 devices).
+    CpuSim4,
+}
+
+impl SystemPreset {
+    pub const ALL: [SystemPreset; 4] = [
+        SystemPreset::H200x8,
+        SystemPreset::H200x16TwoNodes,
+        SystemPreset::CpuSim8,
+        SystemPreset::CpuSim4,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SystemPreset::H200x8 => "h200x8",
+            SystemPreset::H200x16TwoNodes => "h200x16-2node",
+            SystemPreset::CpuSim8 => "cpusim8",
+            SystemPreset::CpuSim4 => "cpusim4",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<SystemPreset> {
+        Self::ALL.iter().copied().find(|p| p.name() == name)
+    }
+}
+
+/// Full system configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SystemConfig {
+    pub name: String,
+    /// EP world size `P`.
+    pub devices: usize,
+    /// Devices per node (communication between nodes is slower).
+    pub devices_per_node: usize,
+    /// Usable memory per device in bytes (for OOM detection).
+    pub mem_capacity_bytes: u64,
+    pub gemm: GemmCostParams,
+    pub comm: CommCostParams,
+}
+
+impl SystemConfig {
+    pub fn preset(p: SystemPreset) -> SystemConfig {
+        match p {
+            SystemPreset::H200x8 => SystemConfig {
+                name: p.name().into(),
+                devices: 8,
+                devices_per_node: 8,
+                // 141 GB HBM3e minus ~20% framework reserve.
+                mem_capacity_bytes: 113 * (1 << 30),
+                gemm: GemmCostParams {
+                    overhead_s: 6e-6,
+                    // ~990 TFLOPs bf16 dense peak, ~65% sustained.
+                    peak_flops: 650e12,
+                    tokens_half_eff: 384.0,
+                    dim_half_eff: 512.0,
+                },
+                comm: CommCostParams {
+                    latency_s: 12e-6,
+                    // NVLink 4: ~450 GB/s effective per direction per GPU.
+                    intra_node_bw: 450e9,
+                    inter_node_bw: 50e9,
+                },
+            },
+            SystemPreset::H200x16TwoNodes => {
+                let mut c = SystemConfig::preset(SystemPreset::H200x8);
+                c.name = p.name().into();
+                c.devices = 16;
+                c
+            }
+            SystemPreset::CpuSim8 => SystemConfig {
+                name: p.name().into(),
+                devices: 8,
+                devices_per_node: 8,
+                mem_capacity_bytes: 2 * (1 << 30),
+                gemm: GemmCostParams {
+                    // Calibrated against the native rust GEMM on this CPU
+                    // (`llep calibrate`, post target-cpu=native: ~28
+                    // GFLOP/s sustained, launch overhead below measurement
+                    // noise — see EXPERIMENTS.md §Perf).
+                    overhead_s: 1e-6,
+                    peak_flops: 2.8e10,
+                    tokens_half_eff: 8.0,
+                    dim_half_eff: 48.0,
+                },
+                comm: CommCostParams {
+                    latency_s: 1e-6,
+                    intra_node_bw: 8e9,
+                    inter_node_bw: 2e9,
+                },
+            },
+            SystemPreset::CpuSim4 => {
+                let mut c = SystemConfig::preset(SystemPreset::CpuSim8);
+                c.name = p.name().into();
+                c.devices = 4;
+                c.devices_per_node = 4;
+                c
+            }
+        }
+    }
+
+    /// Node index of a device.
+    pub fn node_of(&self, device: usize) -> usize {
+        device / self.devices_per_node
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.devices == 0 {
+            return Err("devices must be positive".into());
+        }
+        if self.devices_per_node == 0 || self.devices % self.devices_per_node != 0 {
+            return Err(format!(
+                "devices {} not divisible by devices_per_node {}",
+                self.devices, self.devices_per_node
+            ));
+        }
+        if self.gemm.peak_flops <= 0.0 || self.comm.intra_node_bw <= 0.0 {
+            return Err("throughput parameters must be positive".into());
+        }
+        Ok(())
+    }
+
+    /// Derive a copy with a different device count (keeps cost parameters).
+    pub fn with_devices(&self, devices: usize) -> SystemConfig {
+        let mut c = self.clone();
+        c.devices = devices;
+        if devices <= c.devices_per_node {
+            c.devices_per_node = devices;
+        }
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate() {
+        for p in SystemPreset::ALL {
+            let s = SystemConfig::preset(p);
+            s.validate().unwrap();
+            assert_eq!(SystemPreset::from_name(s.name.as_str()), Some(p));
+        }
+    }
+
+    #[test]
+    fn node_mapping() {
+        let two = SystemConfig::preset(SystemPreset::H200x16TwoNodes);
+        assert_eq!(two.node_of(0), 0);
+        assert_eq!(two.node_of(7), 0);
+        assert_eq!(two.node_of(8), 1);
+        assert_eq!(two.node_of(15), 1);
+    }
+
+    #[test]
+    fn invalid_rejected() {
+        let mut s = SystemConfig::preset(SystemPreset::CpuSim8);
+        s.devices = 6; // not divisible by 8 per node
+        assert!(s.validate().is_err());
+        s = SystemConfig::preset(SystemPreset::CpuSim8);
+        s.devices = 0;
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn with_devices_adjusts_node_size() {
+        let s = SystemConfig::preset(SystemPreset::CpuSim8).with_devices(2);
+        assert_eq!(s.devices, 2);
+        assert_eq!(s.devices_per_node, 2);
+        s.validate().unwrap();
+    }
+}

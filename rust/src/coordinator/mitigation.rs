@@ -1,0 +1,182 @@
+//! Naive OOM mitigation baselines the paper dismisses (§1, §3.1):
+//! "lowering the batch size reduces throughput and increases latency."
+//!
+//! [`BatchSplitPolicy`] models the common practice: run the step; if the
+//! planned peak memory would exceed capacity, split the batch in half
+//! and run the halves sequentially (recursively). Memory is bounded, but
+//! every split doubles fixed costs (dispatch latency, kernel launches)
+//! and leaves the *imbalance* untouched — so latency grows, exactly the
+//! trade-off LLEP avoids.
+
+use crate::exec::{Engine, StepReport};
+use crate::planner::PlannerKind;
+use crate::routing::LoadMatrix;
+
+/// Result of running one logical batch under the splitting policy.
+#[derive(Clone, Debug)]
+pub struct SplitOutcome {
+    /// Sub-step reports, in execution order.
+    pub steps: Vec<StepReport>,
+    /// Number of splits performed (0 = ran whole).
+    pub splits: usize,
+}
+
+impl SplitOutcome {
+    pub fn total_latency_s(&self) -> f64 {
+        self.steps.iter().map(|r| r.latency_s).sum()
+    }
+    pub fn peak_bytes(&self) -> u64 {
+        self.steps.iter().map(|r| r.max_peak_bytes()).max().unwrap_or(0)
+    }
+    pub fn tokens(&self) -> u64 {
+        self.steps.iter().map(|r| r.tokens).sum()
+    }
+}
+
+/// The batch-halving policy.
+pub struct BatchSplitPolicy {
+    pub engine: Engine,
+    pub planner: PlannerKind,
+    /// Refuse to split below this many tokens per device (avoids
+    /// degenerate empty sub-batches).
+    pub min_tokens_per_device: u64,
+    /// Safety bound on recursion depth.
+    pub max_splits: usize,
+}
+
+impl BatchSplitPolicy {
+    pub fn new(engine: Engine, planner: PlannerKind) -> BatchSplitPolicy {
+        BatchSplitPolicy { engine, planner, min_tokens_per_device: 64, max_splits: 6 }
+    }
+
+    /// Run `lm`, splitting in half while the step would OOM.
+    pub fn run(&self, lm: &LoadMatrix) -> SplitOutcome {
+        let mut outcome = SplitOutcome { steps: Vec::new(), splits: 0 };
+        self.run_rec(lm, 0, &mut outcome);
+        outcome
+    }
+
+    fn run_rec(&self, lm: &LoadMatrix, depth: usize, outcome: &mut SplitOutcome) {
+        let report = self.engine.run_step_loads(lm, &self.planner);
+        let too_small = lm
+            .tokens_per_device()
+            .iter()
+            .all(|&t| t / 2 < self.min_tokens_per_device);
+        if !report.oom || depth >= self.max_splits || too_small {
+            outcome.steps.push(report);
+            return;
+        }
+        outcome.splits += 1;
+        let (a, b) = split_loads(lm);
+        self.run_rec(&a, depth + 1, outcome);
+        self.run_rec(&b, depth + 1, outcome);
+    }
+}
+
+/// Split a load matrix into two halves (per device, per expert; odd
+/// remainders go to the first half), each padded to a K-multiple.
+pub fn split_loads(lm: &LoadMatrix) -> (LoadMatrix, LoadMatrix) {
+    let k = lm.top_k as u64;
+    let halve = |which: usize| -> LoadMatrix {
+        let counts: Vec<Vec<u64>> = lm
+            .counts
+            .iter()
+            .map(|row| {
+                let mut new_row: Vec<u64> = row
+                    .iter()
+                    .map(|&c| if which == 0 { c / 2 + c % 2 } else { c / 2 })
+                    .collect();
+                // pad expert 0 so the device total stays a K-multiple
+                let total: u64 = new_row.iter().sum();
+                let rem = total % k;
+                if rem != 0 {
+                    new_row[0] += k - rem;
+                }
+                new_row
+            })
+            .collect();
+        LoadMatrix { counts, top_k: lm.top_k }
+    };
+    (halve(0), halve(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelConfig, ModelPreset, SystemConfig, SystemPreset};
+    use crate::routing::Scenario;
+    use crate::util::rng::Rng;
+
+    fn tight_engine() -> Engine {
+        let model = ModelConfig::preset(ModelPreset::Fig1Layer);
+        let mut sys = SystemConfig::preset(SystemPreset::H200x8);
+        sys.mem_capacity_bytes = 4 << 30; // EP OOMs at B=64K under skew
+        Engine::modeled(model, sys)
+    }
+
+    fn hot_loads(e: &Engine, tokens: usize, seed: u64) -> LoadMatrix {
+        Scenario::concentrated(0.95, 1).generate_loads(&e.model, 8, tokens, &mut Rng::new(seed))
+    }
+
+    #[test]
+    fn split_conserves_tokens_and_k_multiple() {
+        let e = tight_engine();
+        let lm = hot_loads(&e, 10_000, 1);
+        let (a, b) = split_loads(&lm);
+        a.validate().unwrap();
+        b.validate().unwrap();
+        // padding may add a few slots but never loses any
+        assert!(a.total_load() + b.total_load() >= lm.total_load());
+        assert!(a.total_load() + b.total_load() <= lm.total_load() + 8 * 4);
+    }
+
+    #[test]
+    fn splitting_bounds_memory_but_costs_latency() {
+        let e = tight_engine();
+        let lm = hot_loads(&e, 65_536, 2);
+        // Sanity: whole-batch EP OOMs.
+        assert!(e.run_step_loads(&lm, &PlannerKind::StandardEp).oom);
+
+        let policy = BatchSplitPolicy::new(e.clone(), PlannerKind::StandardEp);
+        let outcome = policy.run(&lm);
+        assert!(outcome.splits > 0, "must have split");
+        assert!(outcome.steps.iter().all(|s| !s.oom), "all sub-steps fit");
+        assert!(outcome.peak_bytes() <= e.system.mem_capacity_bytes);
+
+        // ...but LLEP handles the whole batch in one step, faster.
+        let llep = e.run_step_loads(&lm, &PlannerKind::llep_default());
+        assert!(!llep.oom);
+        assert!(
+            llep.latency_s < outcome.total_latency_s(),
+            "LLEP {} vs split-EP {}",
+            llep.latency_s,
+            outcome.total_latency_s()
+        );
+    }
+
+    #[test]
+    fn no_split_when_memory_fits() {
+        let e = tight_engine();
+        let lm = hot_loads(&e, 2048, 3);
+        let policy = BatchSplitPolicy::new(e, PlannerKind::StandardEp);
+        let outcome = policy.run(&lm);
+        assert_eq!(outcome.splits, 0);
+        assert_eq!(outcome.steps.len(), 1);
+    }
+
+    #[test]
+    fn split_depth_bounded() {
+        let e = {
+            let model = ModelConfig::preset(ModelPreset::Fig1Layer);
+            let mut sys = SystemConfig::preset(SystemPreset::H200x8);
+            sys.mem_capacity_bytes = 1; // nothing ever fits
+            Engine::modeled(model, sys)
+        };
+        let lm = hot_loads(&e, 8192, 4);
+        let policy = BatchSplitPolicy::new(e, PlannerKind::StandardEp);
+        let outcome = policy.run(&lm);
+        // bounded by max_splits and min tokens; still returns reports
+        assert!(!outcome.steps.is_empty());
+        assert!(outcome.splits <= 64);
+    }
+}

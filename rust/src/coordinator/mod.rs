@@ -1,0 +1,169 @@
+//! Coordinator: multi-step runners gluing planner + engine, the
+//! serving-style batch queue, and EPLB's stale-statistics pipeline.
+//!
+//! This is the process-level "leader" role: it owns the per-batch loop
+//! (collect loads → plan → execute → report) that a real deployment runs
+//! once per iteration, for both inference and training.
+
+mod mitigation;
+mod serve;
+
+pub use mitigation::{split_loads, BatchSplitPolicy, SplitOutcome};
+pub use serve::{ContinuousBatchSim, ContinuousReport, GenRequest, Request, ServeReport, ServeSim};
+
+use crate::exec::{Engine, StepReport};
+use crate::planner::PlannerKind;
+use crate::routing::{LoadMatrix, RoutingTrace};
+use crate::util::stats::Summary;
+
+/// Multi-batch runner for one planner policy.
+pub struct Runner {
+    pub engine: Engine,
+    pub planner: PlannerKind,
+    /// EPLB places replicas from the previous batch's statistics (the
+    /// time delay the paper criticizes); LLEP/EP ignore this.
+    prev_loads: Option<LoadMatrix>,
+}
+
+impl Runner {
+    pub fn new(engine: Engine, planner: PlannerKind) -> Runner {
+        Runner { engine, planner, prev_loads: None }
+    }
+
+    /// Run one batch; EPLB uses the previous batch's loads as placement
+    /// statistics (first batch: balanced assumption = uniform stats).
+    pub fn step(&mut self, lm: &LoadMatrix) -> StepReport {
+        let report = match (&self.planner, &self.prev_loads) {
+            (PlannerKind::Eplb { .. }, Some(prev)) => {
+                self.engine.run_step_loads_with_stats(lm, prev, &self.planner)
+            }
+            (PlannerKind::Eplb { .. }, None) => {
+                // no stats yet: uniform prior
+                let uniform = LoadMatrix {
+                    counts: vec![
+                        vec![1; lm.num_experts()];
+                        lm.devices()
+                    ],
+                    top_k: 1,
+                };
+                self.engine.run_step_loads_with_stats(lm, &uniform, &self.planner)
+            }
+            _ => self.engine.run_step_loads(lm, &self.planner),
+        };
+        self.prev_loads = Some(lm.clone());
+        report
+    }
+
+    /// Replay a recorded trace; returns per-batch reports.
+    pub fn run_trace(&mut self, trace: &RoutingTrace) -> Vec<StepReport> {
+        trace.batches.iter().map(|b| self.step(&b.load)).collect()
+    }
+}
+
+/// Aggregate of a multi-batch run.
+#[derive(Clone, Debug)]
+pub struct RunSummary {
+    pub planner: String,
+    pub total_latency_s: f64,
+    pub latency: Summary,
+    pub peak_bytes: u64,
+    pub total_tokens: u64,
+    pub oom_batches: usize,
+    pub fallback_batches: usize,
+}
+
+impl RunSummary {
+    pub fn of(reports: &[StepReport]) -> RunSummary {
+        let latencies: Vec<f64> = reports.iter().map(|r| r.latency_s).collect();
+        RunSummary {
+            planner: reports.first().map(|r| r.planner.clone()).unwrap_or_default(),
+            total_latency_s: latencies.iter().sum(),
+            latency: Summary::of(&latencies),
+            peak_bytes: reports.iter().map(|r| r.max_peak_bytes()).max().unwrap_or(0),
+            total_tokens: reports.iter().map(|r| r.tokens).sum(),
+            oom_batches: reports.iter().filter(|r| r.oom).count(),
+            fallback_batches: reports.iter().filter(|r| r.fallback_ep).count(),
+        }
+    }
+
+    pub fn throughput(&self) -> f64 {
+        if self.total_latency_s > 0.0 {
+            self.total_tokens as f64 / self.total_latency_s
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelConfig, ModelPreset, SystemConfig, SystemPreset};
+    use crate::routing::Scenario;
+    use crate::util::rng::Rng;
+
+    fn engine() -> Engine {
+        Engine::modeled(
+            ModelConfig::preset(ModelPreset::Fig1Layer),
+            SystemConfig::preset(SystemPreset::H200x8),
+        )
+    }
+
+    fn trace(batches: usize, scenario: Scenario, seed: u64) -> RoutingTrace {
+        let model = ModelConfig::preset(ModelPreset::Fig1Layer);
+        let mut rng = Rng::new(seed);
+        let mut t = RoutingTrace::new("test", model.num_experts, model.top_k);
+        for _ in 0..batches {
+            t.push(scenario.generate_loads(&model, 8, 8192, &mut rng)).unwrap();
+        }
+        t
+    }
+
+    #[test]
+    fn trace_replay_counts_batches() {
+        let mut runner = Runner::new(engine(), PlannerKind::llep_default());
+        let t = trace(5, Scenario::concentrated(0.8, 4), 1);
+        let reports = runner.run_trace(&t);
+        assert_eq!(reports.len(), 5);
+        let s = RunSummary::of(&reports);
+        assert_eq!(s.total_tokens, 5 * 8 * 8192);
+        assert!(s.throughput() > 0.0);
+        assert_eq!(s.oom_batches, 0);
+    }
+
+    #[test]
+    fn llep_beats_ep_on_imbalanced_trace() {
+        let t = trace(8, Scenario::concentrated(0.9, 1), 2);
+        let mut ep = Runner::new(engine(), PlannerKind::StandardEp);
+        let mut ll = Runner::new(engine(), PlannerKind::llep_default());
+        let s_ep = RunSummary::of(&ep.run_trace(&t));
+        let s_ll = RunSummary::of(&ll.run_trace(&t));
+        assert!(s_ll.total_latency_s < s_ep.total_latency_s / 1.5);
+        assert!(s_ll.peak_bytes < s_ep.peak_bytes);
+    }
+
+    #[test]
+    fn eplb_suffers_under_drift() {
+        // Drifting hotspot: EPLB's stale placement trails reality, LLEP
+        // adapts per batch.
+        let t = trace(10, Scenario::drifting(7, 0.5, 0.8), 3);
+        let mut eplb = Runner::new(engine(), PlannerKind::Eplb { replicas: 8 });
+        let mut ll = Runner::new(engine(), PlannerKind::llep_default());
+        let s_eplb = RunSummary::of(&eplb.run_trace(&t));
+        let s_ll = RunSummary::of(&ll.run_trace(&t));
+        assert!(
+            s_ll.total_latency_s < s_eplb.total_latency_s,
+            "LLEP {} vs EPLB {}",
+            s_ll.total_latency_s,
+            s_eplb.total_latency_s
+        );
+    }
+
+    #[test]
+    fn balanced_trace_mostly_falls_back() {
+        let t = trace(4, Scenario::balanced(), 4);
+        let mut ll = Runner::new(engine(), PlannerKind::llep_default());
+        let s = RunSummary::of(&ll.run_trace(&t));
+        assert_eq!(s.fallback_batches, 4);
+    }
+}

@@ -1,0 +1,183 @@
+//! GEMM cost-model calibration.
+//!
+//! Fits the Eq.-3 model (`overhead_s`, `peak_flops`, `tokens_half_eff`)
+//! to measured timings of the native rust GEMM, so the modeled engine's
+//! relative numbers track what this machine actually does. Run via
+//! `llep calibrate`; the fitted parameters can be pasted into a
+//! `SystemConfig` or used directly.
+
+use super::GemmCostModel;
+use crate::config::ModelConfig;
+use crate::tensor::{matmul, Mat};
+use crate::util::rng::Rng;
+use std::time::Instant;
+
+/// One measured sample: a GEMM of `tokens x d @ d x h`.
+#[derive(Clone, Copy, Debug)]
+pub struct Sample {
+    pub tokens: u64,
+    pub d: usize,
+    pub h: usize,
+    pub seconds: f64,
+}
+
+/// Measure the native GEMM across a token sweep at fixed `d x h`.
+pub fn measure_native(d: usize, h: usize, token_sweep: &[u64], reps: usize) -> Vec<Sample> {
+    let mut rng = Rng::new(0xCA11B);
+    let w = Mat::randn(d, h, 0.02, &mut rng);
+    token_sweep
+        .iter()
+        .map(|&tokens| {
+            let x = Mat::randn(tokens as usize, d, 0.1, &mut rng);
+            // warmup
+            let _ = matmul(&x, &w);
+            let start = Instant::now();
+            for _ in 0..reps {
+                std::hint::black_box(matmul(&x, &w));
+            }
+            Sample { tokens, d, h, seconds: start.elapsed().as_secs_f64() / reps as f64 }
+        })
+        .collect()
+}
+
+/// Fit the cost model to samples by coordinate descent over
+/// (overhead, peak_flops, tokens_half_eff), minimizing mean squared
+/// relative error. Robust enough for the smooth 3-parameter surface.
+pub fn fit(samples: &[Sample], dim_half_eff: f64) -> GemmCostModel {
+    assert!(!samples.is_empty());
+    // Initial guesses from the data.
+    let biggest = samples.iter().max_by_key(|s| s.tokens).unwrap();
+    let flops = |s: &Sample| 2.0 * s.tokens as f64 * s.d as f64 * s.h as f64;
+    let mut model = GemmCostModel {
+        overhead_s: samples.iter().map(|s| s.seconds).fold(f64::MAX, f64::min) * 0.1,
+        peak_flops: flops(biggest) / biggest.seconds,
+        tokens_half_eff: 32.0,
+        dim_half_eff,
+    };
+
+    let err = |m: &GemmCostModel| -> f64 {
+        samples
+            .iter()
+            .map(|s| {
+                let fake = ModelConfig {
+                    name: "cal".into(),
+                    num_experts: 1,
+                    top_k: 1,
+                    d_model: s.d,
+                    d_ff: s.h,
+                    swiglu: false,
+                    num_layers: 1,
+                    dtype_bytes: 4,
+                    num_shared_experts: 0,
+                };
+                let pred = m.gemm_time(s.tokens, &fake);
+                let rel = (pred - s.seconds) / s.seconds;
+                rel * rel
+            })
+            .sum::<f64>()
+            / samples.len() as f64
+    };
+
+    let mut best = err(&model);
+    for _ in 0..60 {
+        let mut improved = false;
+        for param in 0..3 {
+            for &factor in &[0.5, 0.8, 0.95, 1.05, 1.25, 2.0] {
+                let mut cand = model.clone();
+                match param {
+                    0 => cand.overhead_s *= factor,
+                    1 => cand.peak_flops *= factor,
+                    _ => cand.tokens_half_eff *= factor,
+                }
+                let e = err(&cand);
+                if e < best {
+                    best = e;
+                    model = cand;
+                    improved = true;
+                }
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+    model
+}
+
+/// Root-mean-square relative error of a model against samples.
+pub fn rms_rel_error(model: &GemmCostModel, samples: &[Sample]) -> f64 {
+    let se: f64 = samples
+        .iter()
+        .map(|s| {
+            let fake = ModelConfig {
+                name: "cal".into(),
+                num_experts: 1,
+                top_k: 1,
+                d_model: s.d,
+                d_ff: s.h,
+                swiglu: false,
+                num_layers: 1,
+                dtype_bytes: 4,
+                num_shared_experts: 0,
+            };
+            let pred = model.gemm_time(s.tokens, &fake);
+            let rel = (pred - s.seconds) / s.seconds;
+            rel * rel
+        })
+        .sum();
+    (se / samples.len() as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Synthetic "measurements" drawn from a known model must be
+    /// recovered with small error.
+    #[test]
+    fn fit_recovers_known_model() {
+        let truth = GemmCostModel {
+            overhead_s: 5e-6,
+            peak_flops: 2e10,
+            tokens_half_eff: 24.0,
+            dim_half_eff: 48.0,
+        };
+        let fake_cfg = |d: usize, h: usize| ModelConfig {
+            name: "cal".into(),
+            num_experts: 1,
+            top_k: 1,
+            d_model: d,
+            d_ff: h,
+            swiglu: false,
+            num_layers: 1,
+            dtype_bytes: 4,
+            num_shared_experts: 0,
+        };
+        let samples: Vec<Sample> = [4u64, 16, 64, 256, 1024, 4096]
+            .iter()
+            .map(|&tokens| Sample {
+                tokens,
+                d: 256,
+                h: 256,
+                seconds: truth.gemm_time(tokens, &fake_cfg(256, 256)),
+            })
+            .collect();
+        let fitted = fit(&samples, truth.dim_half_eff);
+        let rms = rms_rel_error(&fitted, &samples);
+        assert!(rms < 0.05, "rms={rms}");
+    }
+
+    /// Calibration against the real native GEMM should fit reasonably.
+    #[test]
+    fn fit_real_measurements() {
+        let samples = measure_native(64, 64, &[8, 32, 128, 512], 3);
+        assert_eq!(samples.len(), 4);
+        assert!(samples.iter().all(|s| s.seconds > 0.0));
+        let fitted = fit(&samples, 48.0);
+        let rms = rms_rel_error(&fitted, &samples);
+        // Real timer noise on a busy 1-core box: accept a loose fit.
+        assert!(rms < 0.8, "rms={rms}");
+        // Bigger GEMMs must take longer in both data and fit.
+        assert!(samples[3].seconds > samples[0].seconds);
+    }
+}

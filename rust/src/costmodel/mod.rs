@@ -1,0 +1,325 @@
+//! Analytic cost models: GEMM latency (paper Eq. 3), peak memory (paper
+//! Eq. 4), and communication, plus a calibration harness that fits the
+//! GEMM model to measured timings ([`calibrate`]).
+
+pub mod calibrate;
+
+use crate::config::{ModelConfig, SystemConfig};
+use crate::topology::Topology;
+
+/// GEMM latency model (paper Eq. 3):
+///
+/// `T(B) = T_overhead + B * t(B, D, H)` where the per-token time `t`
+/// degrades at small `B` (poor MXU/SM occupancy) and small `D/H`. The
+/// efficiency curve is `eff(B) = B / (B + b_half)` — the standard
+/// saturation form; Fig. 8 of the paper is exactly the consequence of
+/// this shape (same FLOPs split into more GEMMs take longer).
+#[derive(Clone, Debug)]
+pub struct GemmCostModel {
+    pub overhead_s: f64,
+    pub peak_flops: f64,
+    pub tokens_half_eff: f64,
+    pub dim_half_eff: f64,
+}
+
+impl GemmCostModel {
+    pub fn from_system(sys: &SystemConfig) -> GemmCostModel {
+        GemmCostModel {
+            overhead_s: sys.gemm.overhead_s,
+            peak_flops: sys.gemm.peak_flops,
+            tokens_half_eff: sys.gemm.tokens_half_eff,
+            dim_half_eff: sys.gemm.dim_half_eff,
+        }
+    }
+
+    /// Efficiency in (0, 1] for a GEMM of `tokens` rows at dims `d x h`.
+    pub fn efficiency(&self, tokens: u64, d: usize, h: usize) -> f64 {
+        let b = tokens as f64;
+        let eff_b = b / (b + self.tokens_half_eff);
+        let dim = (d.min(h)) as f64;
+        let eff_dim = dim / (dim + self.dim_half_eff);
+        (eff_b * eff_dim).max(1e-9)
+    }
+
+    /// Latency of one expert GEMM over `tokens` tokens (seconds).
+    pub fn gemm_time(&self, tokens: u64, model: &ModelConfig) -> f64 {
+        if tokens == 0 {
+            return 0.0;
+        }
+        let flops = tokens as f64 * model.flops_per_token();
+        self.overhead_s + flops / (self.peak_flops * self.efficiency(tokens, model.d_model, model.d_ff))
+    }
+
+    /// Latency of a sequence of per-expert GEMMs on one device (paper
+    /// Eq. 3's sum over local experts).
+    pub fn device_compute_time(&self, per_expert_tokens: &[u64], model: &ModelConfig) -> f64 {
+        per_expert_tokens.iter().map(|&b| self.gemm_time(b, model)).sum()
+    }
+}
+
+/// Peak-memory model (paper Eq. 4): per expert computed on the device,
+/// `B_i x D` activations in, `D x H` weights, `B_i x H` activations out.
+#[derive(Clone, Debug)]
+pub struct MemoryModel {
+    pub dtype_bytes: usize,
+}
+
+impl MemoryModel {
+    pub fn from_model(model: &ModelConfig) -> MemoryModel {
+        MemoryModel { dtype_bytes: model.dtype_bytes }
+    }
+
+    /// Peak bytes on a device executing `work` = [(tokens, is_import)]
+    /// with the model geometry. Resident native weights are counted once
+    /// (`resident_experts`); imported expert weights add on top.
+    pub fn device_peak_bytes(
+        &self,
+        model: &ModelConfig,
+        work_tokens: &[u64],
+        resident_experts: usize,
+        imported_experts: usize,
+    ) -> u64 {
+        let d = model.d_model as u64;
+        let h = model.d_ff as u64;
+        let mats = model.mats_per_expert() as u64;
+        let bytes = self.dtype_bytes as u64;
+        let weights = (resident_experts + imported_experts) as u64 * mats * d * h * bytes;
+        // Eq. 4 activation terms summed over the experts computed here.
+        let acts: u64 = work_tokens.iter().map(|&b| b * (d + h) * bytes).sum();
+        weights + acts
+    }
+
+    /// Peak bytes under chained gradient checkpointing (paper §3.1's
+    /// chunked baseline): inputs for all `B_i` tokens must still be
+    /// resident (they arrive via dispatch), but only one `chunk`-sized
+    /// intermediate lives at a time — memory is reduced, not bounded,
+    /// which is exactly the baseline's weakness.
+    pub fn device_peak_bytes_chunked(
+        &self,
+        model: &ModelConfig,
+        work_tokens: &[u64],
+        resident_experts: usize,
+        imported_experts: usize,
+        chunk: u64,
+    ) -> u64 {
+        let d = model.d_model as u64;
+        let h = model.d_ff as u64;
+        let mats = model.mats_per_expert() as u64;
+        let bytes = self.dtype_bytes as u64;
+        let weights = (resident_experts + imported_experts) as u64 * mats * d * h * bytes;
+        let inputs: u64 = work_tokens.iter().map(|&b| b * d * bytes).sum();
+        let intermediate = chunk * h * bytes;
+        weights + inputs + intermediate
+    }
+}
+
+/// Communication cost model: All-to-All dispatch/combine plus P2P weight
+/// transfers, on top of a [`Topology`].
+#[derive(Clone, Debug)]
+pub struct CommCostModel {
+    pub topo: Topology,
+    /// DeepEP-style fused collectives (paper §4 "Implementation &
+    /// Optimization"): one fused kernel performs the whole All-to-All
+    /// directly on unsorted tensors, so per-peer message launch latency
+    /// collapses to a single launch per direction. Bandwidth terms are
+    /// unchanged (the wire does not get faster).
+    pub fused: bool,
+}
+
+impl CommCostModel {
+    pub fn new(topo: Topology) -> CommCostModel {
+        CommCostModel { topo, fused: false }
+    }
+
+    /// Enable fused (DeepEP-like) collective launch accounting.
+    pub fn fused(topo: Topology) -> CommCostModel {
+        CommCostModel { topo, fused: true }
+    }
+
+    /// Time of an All-to-All phase given the per-(src, dst) byte matrix.
+    /// Each device's phase time is `latency * messages + max(sent, recvd)
+    /// / bw` (links are full-duplex); the caller takes the max across
+    /// devices, mirroring a synchronous NCCL collective.
+    pub fn all_to_all_times(&self, bytes: &[Vec<u64>]) -> Vec<f64> {
+        let p = self.topo.devices;
+        let mut times = vec![0.0f64; p];
+        for (src, row) in bytes.iter().enumerate() {
+            debug_assert_eq!(row.len(), p);
+            let mut sent_intra = 0u64;
+            let mut sent_inter = 0u64;
+            let mut msgs = 0u64;
+            for (dst, &b) in row.iter().enumerate() {
+                if src == dst || b == 0 {
+                    continue;
+                }
+                msgs += 1;
+                if self.topo.same_node(src, dst) {
+                    sent_intra += b;
+                } else {
+                    sent_inter += b;
+                }
+            }
+            let mut recv_intra = 0u64;
+            let mut recv_inter = 0u64;
+            for (other_src, other_row) in bytes.iter().enumerate() {
+                if other_src == src {
+                    continue;
+                }
+                let b = other_row[src];
+                if b == 0 {
+                    continue;
+                }
+                msgs += 1;
+                if self.topo.same_node(other_src, src) {
+                    recv_intra += b;
+                } else {
+                    recv_inter += b;
+                }
+            }
+            let send_t = sent_intra as f64 / self.topo.intra_node_bw
+                + sent_inter as f64 / self.topo.inter_node_bw;
+            let recv_t = recv_intra as f64 / self.topo.intra_node_bw
+                + recv_inter as f64 / self.topo.inter_node_bw;
+            let launches = if self.fused { (msgs > 0) as u64 * 2 } else { msgs };
+            times[src] = self.topo.latency_s * launches as f64 + send_t.max(recv_t);
+        }
+        times
+    }
+
+    /// Time for one P2P transfer.
+    pub fn p2p_time(&self, src: usize, dst: usize, bytes: u64) -> f64 {
+        self.topo.transfer_time(src, dst, bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelPreset, SystemPreset};
+
+    fn model() -> ModelConfig {
+        ModelConfig::preset(ModelPreset::Fig1Layer)
+    }
+    fn sys() -> SystemConfig {
+        SystemConfig::preset(SystemPreset::H200x8)
+    }
+
+    #[test]
+    fn gemm_time_monotone_in_tokens() {
+        let g = GemmCostModel::from_system(&sys());
+        let m = model();
+        let t1 = g.gemm_time(100, &m);
+        let t2 = g.gemm_time(1000, &m);
+        let t3 = g.gemm_time(10_000, &m);
+        assert!(t1 < t2 && t2 < t3);
+        assert_eq!(g.gemm_time(0, &m), 0.0);
+    }
+
+    #[test]
+    fn few_big_gemms_beat_many_small() {
+        // Paper Fig. 8: same FLOPs, more experts -> slower.
+        let g = GemmCostModel::from_system(&sys());
+        let m = model();
+        let total = 65_536u64;
+        let one = g.device_compute_time(&[total], &m);
+        let eight = g.device_compute_time(&vec![total / 8; 8], &m);
+        let sixty_four = g.device_compute_time(&vec![total / 64; 64], &m);
+        assert!(one < eight && eight < sixty_four, "{one} {eight} {sixty_four}");
+    }
+
+    #[test]
+    fn efficiency_saturates() {
+        let g = GemmCostModel::from_system(&sys());
+        let e_small = g.efficiency(16, 2048, 2048);
+        let e_big = g.efficiency(65_536, 2048, 2048);
+        assert!(e_small < e_big);
+        assert!(e_big <= 1.0);
+        // At B = b_half, token efficiency is exactly 1/2 of the dim part.
+        let b_half = g.tokens_half_eff as u64;
+        let dim_eff = {
+            let d = 2048f64;
+            d / (d + g.dim_half_eff)
+        };
+        assert!((g.efficiency(b_half, 2048, 2048) - 0.5 * dim_eff).abs() < 1e-9);
+    }
+
+    #[test]
+    fn memory_matches_eq4() {
+        let m = model();
+        let mm = MemoryModel::from_model(&m);
+        // one expert of B=1000 tokens, 16 resident experts, no imports
+        let bytes = mm.device_peak_bytes(&m, &[1000], 16, 0);
+        let d = m.d_model as u64;
+        let h = m.d_ff as u64;
+        let expected_weights = 16 * 3 * d * h * 2;
+        let expected_acts = 1000 * (d + h) * 2;
+        assert_eq!(bytes, expected_weights + expected_acts);
+    }
+
+    #[test]
+    fn imports_add_weight_memory() {
+        let m = model();
+        let mm = MemoryModel::from_model(&m);
+        let without = mm.device_peak_bytes(&m, &[100], 16, 0);
+        let with = mm.device_peak_bytes(&m, &[100], 16, 2);
+        assert_eq!(with - without, 2 * m.expert_weight_bytes() as u64);
+    }
+
+    #[test]
+    fn alltoall_balanced_symmetric() {
+        let topo = Topology::from_system(&sys());
+        let c = CommCostModel::new(topo);
+        let p = 8;
+        let bytes = vec![vec![1u64 << 20; p]; p];
+        let times = c.all_to_all_times(&bytes);
+        let t0 = times[0];
+        assert!(times.iter().all(|&t| (t - t0).abs() < 1e-12), "{times:?}");
+        assert!(t0 > 0.0);
+    }
+
+    #[test]
+    fn alltoall_hot_receiver_pays() {
+        let topo = Topology::from_system(&sys());
+        let c = CommCostModel::new(topo);
+        let p = 8;
+        // everyone sends 8 MiB to device 0 only
+        let mut bytes = vec![vec![0u64; p]; p];
+        for (src, row) in bytes.iter_mut().enumerate() {
+            if src != 0 {
+                row[0] = 8 << 20;
+            }
+        }
+        let times = c.all_to_all_times(&bytes);
+        assert!(times[0] > times[1] * 2.0, "{times:?}");
+    }
+
+    #[test]
+    fn fused_collectives_cut_launch_latency_only() {
+        let topo = Topology::from_system(&sys());
+        let base = CommCostModel::new(topo.clone());
+        let fused = CommCostModel::fused(topo);
+        let p = 8;
+        // tiny messages: latency-bound -> fused much faster
+        let small = vec![vec![64u64; p]; p];
+        let tb = base.all_to_all_times(&small)[0];
+        let tf = fused.all_to_all_times(&small)[0];
+        assert!(tf < tb / 3.0, "latency-bound: fused {tf} vs {tb}");
+        // huge messages: bandwidth-bound -> nearly identical
+        let big = vec![vec![1u64 << 30; p]; p];
+        let tb = base.all_to_all_times(&big)[0];
+        let tf = fused.all_to_all_times(&big)[0];
+        assert!((tb - tf) / tb < 0.02, "bandwidth-bound: fused {tf} vs {tb}");
+    }
+
+    #[test]
+    fn inter_node_alltoall_slower() {
+        let two = SystemConfig::preset(SystemPreset::H200x16TwoNodes);
+        let c = CommCostModel::new(Topology::from_system(&two));
+        let p = 16;
+        let mut intra = vec![vec![0u64; p]; p];
+        intra[0][1] = 64 << 20;
+        let mut inter = vec![vec![0u64; p]; p];
+        inter[0][9] = 64 << 20;
+        assert!(c.all_to_all_times(&inter)[0] > c.all_to_all_times(&intra)[0]);
+    }
+}

@@ -1,0 +1,277 @@
+//! Plan pricing: turn a [`RoutePlan`] + [`LoadMatrix`] into a
+//! [`StepReport`] using the cost models (paper Eq. 3/4 + comm model).
+
+use super::dispatch::{chunks, combine_bytes, device_work, dispatch_bytes};
+use super::{Engine, GemmBackendKind, StepReport};
+use crate::planner::{PlannerKind, RoutePlan};
+use crate::routing::LoadMatrix;
+
+/// Timing decomposition of one step.
+#[derive(Clone, Debug, Default)]
+pub struct PhaseTimes {
+    /// Load metadata all-gather + plan broadcast (small constant).
+    pub meta_s: f64,
+    /// Measured planner wall time (LLA is on the critical path).
+    pub plan_s: f64,
+    /// Dispatch All-to-All (max over devices).
+    pub dispatch_s: f64,
+    /// Weight P2P transfers (max over receiving devices).
+    pub weights_s: f64,
+    /// Expert GEMMs (max over devices).
+    pub compute_s: f64,
+    /// Combine All-to-All (max over devices).
+    pub combine_s: f64,
+}
+
+impl PhaseTimes {
+    pub fn total(&self) -> f64 {
+        // weights overlap nothing in the base implementation; compute
+        // starts after a device has its weights, so weights+compute share
+        // the same barrier-to-barrier span per device (already folded in
+        // by price_plan via per-device max).
+        self.meta_s + self.plan_s + self.dispatch_s + self.compute_s + self.combine_s
+    }
+}
+
+/// Price `plan` over `lm`. `measured_compute`, when given (real backends),
+/// overrides the Eq.-3 model with measured per-device compute seconds.
+pub fn price_plan(
+    engine: &Engine,
+    plan: &RoutePlan,
+    lm: &LoadMatrix,
+    planner: &PlannerKind,
+    plan_time_s: f64,
+    measured_compute: Option<&[f64]>,
+) -> StepReport {
+    let model = &engine.model;
+    let devices = plan.devices;
+    let cs = chunks(plan, lm);
+
+    // ---- communication ----
+    let in_bytes = (model.d_model * model.dtype_bytes) as u64;
+    // SwiGLU output dim is D; the single-matrix form of §2.1 outputs H.
+    let out_dim = if model.swiglu { model.d_model } else { model.d_ff };
+    let out_bytes = (out_dim * model.dtype_bytes) as u64;
+    let disp = dispatch_bytes(&cs, devices, in_bytes);
+    let comb = combine_bytes(&cs, devices, out_bytes);
+    let dispatch_times = engine.comm.all_to_all_times(&disp);
+    let combine_times = engine.comm.all_to_all_times(&comb);
+    let dispatch_s = dispatch_times.iter().cloned().fold(0.0, f64::max);
+    let combine_s = combine_times.iter().cloned().fold(0.0, f64::max);
+    let bytes_dispatch: u64 = disp.iter().flatten().sum();
+    let bytes_combine: u64 = comb.iter().flatten().sum();
+
+    // ---- weight transfers (P2P), charged to the receiving device ----
+    // EPLB's replication is time-amortized (placements change rarely) but
+    // still costs memory; LLEP pays per step.
+    let charge_weights = !matches!(planner, PlannerKind::Eplb { .. });
+    let wbytes = model.expert_weight_bytes() as u64;
+    let mut weights_recv_s = vec![0.0f64; devices];
+    for t in &plan.transfers {
+        weights_recv_s[t.to] += engine.comm.p2p_time(t.from, t.to, wbytes);
+    }
+    if !charge_weights {
+        weights_recv_s.iter_mut().for_each(|w| *w = 0.0);
+    }
+    let bytes_weights = plan.transfers.len() as u64 * wbytes;
+
+    // ---- compute (Eq. 3 or measured) ----
+    // ChunkedEp splits each device's per-expert GEMMs into chunk-sized
+    // pieces (gradient-checkpointing baseline, paper §3.1).
+    let chunk = match planner {
+        PlannerKind::ChunkedEp { chunk_tokens } => Some((*chunk_tokens).max(1) as u64),
+        _ => None,
+    };
+    let work = device_work(plan, lm);
+    let split_chunks = |tokens: &[u64]| -> Vec<u64> {
+        match chunk {
+            None => tokens.to_vec(),
+            Some(c) => tokens
+                .iter()
+                .flat_map(|&t| {
+                    let full = t / c;
+                    let rem = t % c;
+                    std::iter::repeat(c).take(full as usize).chain((rem > 0).then_some(rem))
+                })
+                .collect(),
+        }
+    };
+    let device_compute_s: Vec<f64> = match measured_compute {
+        Some(m) => m.to_vec(),
+        None => work
+            .iter()
+            .map(|w| {
+                let tokens: Vec<u64> = w.iter().map(|&(_, t)| t).collect();
+                engine.gemm.device_compute_time(&split_chunks(&tokens), model)
+            })
+            .collect(),
+    };
+
+    // Between the dispatch and combine barriers each device needs its
+    // imported weights before computing; with the §4 overlap optimization
+    // the transfer hides behind compute.
+    let compute_span = device_compute_s
+        .iter()
+        .zip(&weights_recv_s)
+        .map(|(c, w)| if engine.overlap_weights { c.max(*w) } else { c + w })
+        .fold(0.0, f64::max);
+
+    // ---- memory (Eq. 4) ----
+    let m_resident = model.num_experts / devices;
+    let mem_model = &engine.mem;
+    let device_peak_bytes: Vec<u64> = (0..devices)
+        .map(|d| {
+            let tokens: Vec<u64> = work[d].iter().map(|&(_, t)| t).collect();
+            let imports = plan.imports_to(d).len();
+            match chunk {
+                Some(c) => mem_model
+                    .device_peak_bytes_chunked(model, &tokens, m_resident, imports, c),
+                None => mem_model.device_peak_bytes(model, &tokens, m_resident, imports),
+            }
+        })
+        .collect();
+    let oom = device_peak_bytes.iter().any(|&b| b > engine.system.mem_capacity_bytes);
+
+    // ---- assemble ----
+    let meta_s = engine.topo.latency_s * 2.0; // loads all-gather + plan bcast
+    let phases = PhaseTimes {
+        meta_s,
+        plan_s: plan_time_s,
+        dispatch_s,
+        weights_s: weights_recv_s.iter().cloned().fold(0.0, f64::max),
+        compute_s: compute_span,
+        combine_s,
+    };
+    let latency_s = meta_s + plan_time_s + dispatch_s + compute_span + combine_s;
+
+    StepReport {
+        planner: planner.label(),
+        backend: if measured_compute.is_some() {
+            GemmBackendKind::Native
+        } else {
+            GemmBackendKind::Modeled
+        },
+        latency_s,
+        phases,
+        device_compute_s,
+        device_peak_bytes,
+        bytes_dispatch,
+        bytes_combine,
+        bytes_weights,
+        gemm_calls: plan.gemm_calls(),
+        weight_transfers: plan.transfers.len(),
+        oom,
+        fallback_ep: plan.fallback_ep,
+        tokens: lm.total_load() / lm.top_k as u64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelConfig, ModelPreset, SystemConfig, SystemPreset};
+    use crate::exec::Engine;
+    use crate::routing::Scenario;
+    use crate::util::rng::Rng;
+
+    fn engine() -> Engine {
+        Engine::modeled(
+            ModelConfig::preset(ModelPreset::Fig1Layer),
+            SystemConfig::preset(SystemPreset::H200x8),
+        )
+    }
+
+    #[test]
+    fn ep_pays_no_weight_transfers() {
+        let e = engine();
+        let mut rng = Rng::new(1);
+        let lm = Scenario::concentrated(0.9, 1).generate_loads(&e.model, 8, 8192, &mut rng);
+        let r = e.run_step_loads(&lm, &PlannerKind::StandardEp);
+        assert_eq!(r.weight_transfers, 0);
+        assert_eq!(r.bytes_weights, 0);
+        assert_eq!(r.phases.weights_s, 0.0);
+    }
+
+    #[test]
+    fn llep_pays_weight_transfers_eplb_does_not() {
+        let e = engine();
+        let mut rng = Rng::new(2);
+        let lm = Scenario::concentrated(0.9, 1).generate_loads(&e.model, 8, 8192, &mut rng);
+        let ll = e.run_step_loads(&lm, &PlannerKind::llep_default());
+        assert!(ll.phases.weights_s > 0.0);
+        let eplb = e.run_step_loads(&lm, &PlannerKind::Eplb { replicas: 7 });
+        assert_eq!(eplb.phases.weights_s, 0.0, "EPLB weight moves amortized");
+        assert!(eplb.weight_transfers > 0, "but they exist (memory)");
+    }
+
+    #[test]
+    fn oom_detected_under_extreme_imbalance() {
+        // Tiny memory capacity forces EP to OOM on the hot device.
+        let model = ModelConfig::preset(ModelPreset::Fig1Layer);
+        let mut sys = SystemConfig::preset(SystemPreset::H200x8);
+        sys.mem_capacity_bytes = 4 << 30; // 4 GiB: LLEP fits, EP does not
+        let e = Engine::modeled(model, sys);
+        let mut rng = Rng::new(3);
+        let lm = Scenario::concentrated(0.95, 1).generate_loads(&e.model, 8, 65_536, &mut rng);
+        let ep = e.run_step_loads(&lm, &PlannerKind::StandardEp);
+        let ll = e.run_step_loads(&lm, &PlannerKind::llep_default());
+        assert!(ep.oom, "EP must OOM: peak {}", ep.max_peak_bytes());
+        assert!(!ll.oom, "LLEP must fit: peak {}", ll.max_peak_bytes());
+    }
+
+    #[test]
+    fn latency_decomposition_sums() {
+        let e = engine();
+        let mut rng = Rng::new(4);
+        let lm = Scenario::concentrated(0.5, 4).generate_loads(&e.model, 8, 8192, &mut rng);
+        let r = e.run_step_loads(&lm, &PlannerKind::llep_default());
+        let p = &r.phases;
+        let sum = p.meta_s + p.plan_s + p.dispatch_s + p.compute_s + p.combine_s;
+        assert!((r.latency_s - sum).abs() < 1e-12);
+    }
+
+    #[test]
+    fn chunked_ep_trades_time_for_memory() {
+        let e = engine();
+        let mut rng = Rng::new(21);
+        let lm = Scenario::concentrated(0.9, 1).generate_loads(&e.model, 8, 32_768, &mut rng);
+        let ep = e.run_step_loads(&lm, &PlannerKind::StandardEp);
+        let chunked = e.run_step_loads(&lm, &PlannerKind::ChunkedEp { chunk_tokens: 4096 });
+        let ll = e.run_step_loads(&lm, &PlannerKind::llep_default());
+        // memory drops vs EP, but latency is worse than EP (extra kernel
+        // launches) and far worse than LLEP — the paper's §3.1 point.
+        assert!(chunked.max_peak_bytes() < ep.max_peak_bytes());
+        assert!(chunked.latency_s >= ep.latency_s);
+        assert!(chunked.latency_s > ll.latency_s * 2.0);
+        // but memory is NOT bounded like LLEP's (inputs still resident)
+        assert!(chunked.max_peak_bytes() > ll.max_peak_bytes());
+    }
+
+    #[test]
+    fn overlap_hides_weight_transfers() {
+        let e = engine();
+        let mut rng = Rng::new(22);
+        let lm = Scenario::concentrated(0.9, 1).generate_loads(&e.model, 8, 32_768, &mut rng);
+        let base = e.run_step_loads(&lm, &PlannerKind::llep_default());
+        let overlapped = e.clone().with_overlap().run_step_loads(&lm, &PlannerKind::llep_default());
+        assert!(base.phases.weights_s > 0.0);
+        assert!(
+            overlapped.latency_s < base.latency_s,
+            "overlap {} vs base {}",
+            overlapped.latency_s,
+            base.latency_s
+        );
+        // compute itself unchanged
+        assert_eq!(overlapped.device_compute_s, base.device_compute_s);
+    }
+
+    #[test]
+    fn gemm_call_count_grows_with_spill() {
+        let e = engine();
+        let mut rng = Rng::new(5);
+        let lm = Scenario::concentrated(0.9, 1).generate_loads(&e.model, 8, 32_768, &mut rng);
+        let ep = e.run_step_loads(&lm, &PlannerKind::StandardEp);
+        let ll = e.run_step_loads(&lm, &PlannerKind::llep_default());
+        assert!(ll.gemm_calls > ep.gemm_calls);
+    }
+}

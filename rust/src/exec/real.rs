@@ -1,0 +1,318 @@
+//! Real-numerics execution of a routing plan.
+//!
+//! Moves actual token matrices through dispatch-compute-combine exactly
+//! as Alg. 4 prescribes and computes expert FFNs with a pluggable
+//! backend. Used to *prove* plans are exact (outputs match the
+//! single-device reference bit-for-bit up to float accumulation order)
+//! and to drive measured-time experiments. Wall time of each device's
+//! GEMM work is charged to that device's virtual clock; communication is
+//! still priced by the comm model (there is no real interconnect here).
+
+use super::dispatch::{chunks, Chunk};
+use super::{Engine, ExpertCompute, StepReport};
+use crate::moe::{ffn_backward, ffn_forward, ExpertWeights, MoeLayer};
+use crate::planner::{PlannerKind, RoutePlan};
+use crate::routing::Routing;
+use crate::tensor::Mat;
+use std::time::Instant;
+
+/// Native rust GEMM backend.
+pub struct NativeCompute;
+
+impl ExpertCompute for NativeCompute {
+    fn ffn(&self, x: &Mat, w: &ExpertWeights) -> Mat {
+        ffn_forward(x, w)
+    }
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// Output of a real step.
+pub struct RealStep {
+    /// Per origin device: `B_p x D` MoE outputs.
+    pub outputs: Vec<Mat>,
+    pub report: StepReport,
+    pub plan: RoutePlan,
+}
+
+/// Per-(device, expert) local slot positions, in scan order — this is the
+/// `sort` + `index_select` of Alg. 1/4: position `j` of expert `e`'s
+/// local order on device `p` is `(token, slot) = index[p][e][j]`.
+fn build_local_index(routing: &Routing) -> Vec<Vec<Vec<(u32, u8)>>> {
+    let k = routing.top_k;
+    routing
+        .experts
+        .iter()
+        .map(|ids| {
+            let mut per_expert: Vec<Vec<(u32, u8)>> = vec![Vec::new(); routing.num_experts];
+            for (pos, &e) in ids.iter().enumerate() {
+                per_expert[e as usize].push(((pos / k) as u32, (pos % k) as u8));
+            }
+            per_expert
+        })
+        .collect()
+}
+
+/// Execute one forward step with real numerics.
+pub fn run_step_real(
+    engine: &Engine,
+    layer: &MoeLayer,
+    xs: &[Mat],
+    routing: &Routing,
+    planner: &PlannerKind,
+    backend: &dyn ExpertCompute,
+) -> Result<RealStep, String> {
+    routing.validate()?;
+    if xs.len() != engine.system.devices || routing.devices() != engine.system.devices {
+        return Err("xs/routing/device count mismatch".into());
+    }
+    for (p, x) in xs.iter().enumerate() {
+        if x.rows != routing.tokens_on(p) || x.cols != engine.model.d_model {
+            return Err(format!("device {p}: feature matrix shape mismatch"));
+        }
+    }
+
+    let lm = routing.load_matrix();
+    let loads = lm.expert_loads();
+    let t_plan = Instant::now();
+    let plan = planner.plan(engine.system.devices, &loads, Some(&engine.topo));
+    let plan_time_s = t_plan.elapsed().as_secs_f64();
+    crate::planner::validate::validate_plan(&plan, &loads)
+        .map_err(|e| format!("planner produced an invalid plan: {e}"))?;
+
+    let index = build_local_index(routing);
+    let all_chunks = chunks(&plan, &lm);
+
+    // Group chunks per destination device, preserving expert order.
+    let mut per_dest: Vec<Vec<&Chunk>> = vec![Vec::new(); engine.system.devices];
+    for c in &all_chunks {
+        per_dest[c.dest].push(c);
+    }
+
+    let d_model = engine.model.d_model;
+    let mut outputs: Vec<Mat> = xs.iter().map(|x| Mat::zeros(x.rows, d_model)).collect();
+    let mut device_compute_s = vec![0.0f64; engine.system.devices];
+
+    for (dest, chunk_list) in per_dest.iter().enumerate() {
+        for c in chunk_list {
+            // Gather the chunk's token rows from the origin device.
+            let idx = &index[c.origin][c.expert];
+            let rows: Vec<usize> = idx[c.local_start as usize..c.local_end as usize]
+                .iter()
+                .map(|&(t, _)| t as usize)
+                .collect();
+            let t0 = Instant::now();
+            let x = xs[c.origin].gather_rows(&rows);
+            let y = backend.ffn(&x, &layer.experts[c.expert]);
+            device_compute_s[dest] += t0.elapsed().as_secs_f64();
+
+            // Combine: gate-weight and scatter-add back to the origin.
+            debug_assert_eq!(y.cols, d_model);
+            for (r, &(t, slot)) in
+                idx[c.local_start as usize..c.local_end as usize].iter().enumerate()
+            {
+                let gate = routing.gates[c.origin][t as usize * routing.top_k + slot as usize];
+                let out_row = outputs[c.origin].row_mut(t as usize);
+                for (o, v) in out_row.iter_mut().zip(y.row(r)) {
+                    *o += gate * v;
+                }
+            }
+        }
+    }
+
+    let report = super::price_plan(engine, &plan, &lm, planner, plan_time_s, Some(&device_compute_s));
+    Ok(RealStep { outputs, report, plan })
+}
+
+/// Expert-weight gradients computed under a plan, with spilled segments'
+/// gradients returned to and accumulated on the native device (the
+/// paper's backward-pass support, §4 "Elaboration").
+pub struct RealBackward {
+    /// Per expert: accumulated `dL/dW` (lives on the native device).
+    pub grads: Vec<ExpertWeights>,
+    /// Per-device backward compute seconds (measured).
+    pub device_compute_s: Vec<f64>,
+    /// Bytes of gradient returned native-ward (foreign-segment grads).
+    pub grad_return_bytes: u64,
+}
+
+/// Execute the backward pass for upstream gradients `dys` under `plan`.
+pub fn run_backward_real(
+    engine: &Engine,
+    layer: &MoeLayer,
+    xs: &[Mat],
+    routing: &Routing,
+    dys: &[Mat],
+    plan: &RoutePlan,
+) -> Result<RealBackward, String> {
+    if dys.len() != xs.len() {
+        return Err("dys/xs length mismatch".into());
+    }
+    let lm = routing.load_matrix();
+    let index = build_local_index(routing);
+    let all_chunks = chunks(plan, &lm);
+    let m = engine.model.num_experts / engine.system.devices;
+
+    let mut grads: Vec<ExpertWeights> =
+        layer.experts.iter().map(|w| w.zeros_like()).collect();
+    let mut device_compute_s = vec![0.0f64; engine.system.devices];
+    let mut grad_return_bytes = 0u64;
+    let wbytes = engine.model.expert_weight_bytes() as u64;
+
+    for c in &all_chunks {
+        let idx = &index[c.origin][c.expert];
+        let slice = &idx[c.local_start as usize..c.local_end as usize];
+        let rows: Vec<usize> = slice.iter().map(|&(t, _)| t as usize).collect();
+        let t0 = Instant::now();
+        let x = xs[c.origin].gather_rows(&rows);
+        // gate-weighted upstream gradient rows
+        let mut dy = dys[c.origin].gather_rows(&rows);
+        for (r, &(t, slot)) in slice.iter().enumerate() {
+            let gate = routing.gates[c.origin][t as usize * routing.top_k + slot as usize];
+            for v in dy.row_mut(r) {
+                *v *= gate;
+            }
+        }
+        let g = ffn_backward(&x, &layer.experts[c.expert], &dy);
+        device_compute_s[c.dest] += t0.elapsed().as_secs_f64();
+
+        // Gradients of spilled segments travel back to the native device.
+        if c.dest != c.expert / m {
+            grad_return_bytes += wbytes;
+        }
+        grads[c.expert].add_assign(&g.d_weights);
+    }
+
+    Ok(RealBackward { grads, device_compute_s, grad_return_bytes })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{LlepConfig, ModelConfig, ModelPreset, SystemConfig, SystemPreset};
+    use crate::moe::{backward_reference, forward_reference, route, MoeLayer};
+    use crate::routing::Scenario;
+    use crate::util::rng::Rng;
+
+    fn setup(seed: u64) -> (Engine, MoeLayer, Vec<Mat>, Routing) {
+        let model = ModelConfig::preset(ModelPreset::Tiny);
+        let system = SystemConfig::preset(SystemPreset::CpuSim4);
+        let engine = Engine::modeled(model.clone(), system);
+        let mut rng = Rng::new(seed);
+        let layer = MoeLayer::random(&model, &mut rng);
+        let xs: Vec<Mat> =
+            (0..4).map(|_| Mat::randn(24, model.d_model, 0.5, &mut rng)).collect();
+        let routing = route(&layer, &xs);
+        (engine, layer, xs, routing)
+    }
+
+    fn max_diff(a: &[Mat], b: &[Mat]) -> f32 {
+        a.iter()
+            .zip(b)
+            .map(|(x, y)| {
+                x.data
+                    .iter()
+                    .zip(&y.data)
+                    .map(|(u, v)| (u - v).abs())
+                    .fold(0f32, f32::max)
+            })
+            .fold(0f32, f32::max)
+    }
+
+    #[test]
+    fn ep_real_matches_reference() {
+        let (engine, layer, xs, routing) = setup(11);
+        let reference = forward_reference(&layer, &xs, &routing);
+        let step = run_step_real(&engine, &layer, &xs, &routing, &PlannerKind::StandardEp, &NativeCompute)
+            .unwrap();
+        assert!(max_diff(&reference, &step.outputs) < 1e-4);
+    }
+
+    #[test]
+    fn llep_real_matches_reference_exactly_like_ep() {
+        let (engine, layer, xs, routing) = setup(12);
+        let reference = forward_reference(&layer, &xs, &routing);
+        // aggressive LLEP so plenty of spilling happens
+        let kind = PlannerKind::Llep(LlepConfig { alpha: 1.0, min_gemm_tokens: 2, lambda: 1.0 });
+        let step =
+            run_step_real(&engine, &layer, &xs, &routing, &kind, &NativeCompute).unwrap();
+        assert!(!step.plan.is_pure_ep() || step.report.fallback_ep);
+        assert!(max_diff(&reference, &step.outputs) < 1e-4, "LLEP must be exact");
+    }
+
+    #[test]
+    fn eplb_real_matches_reference() {
+        let (engine, layer, xs, routing) = setup(13);
+        let reference = forward_reference(&layer, &xs, &routing);
+        let step = run_step_real(
+            &engine,
+            &layer,
+            &xs,
+            &routing,
+            &PlannerKind::Eplb { replicas: 4 },
+            &NativeCompute,
+        )
+        .unwrap();
+        assert!(max_diff(&reference, &step.outputs) < 1e-4);
+    }
+
+    #[test]
+    fn backward_grads_match_reference() {
+        let (engine, layer, xs, routing) = setup(14);
+        let mut rng = Rng::new(99);
+        let dys: Vec<Mat> =
+            xs.iter().map(|x| Mat::randn(x.rows, x.cols, 0.5, &mut rng)).collect();
+        let reference = backward_reference(&layer, &xs, &routing, &dys);
+
+        let kind = PlannerKind::Llep(LlepConfig { alpha: 1.0, min_gemm_tokens: 2, lambda: 1.0 });
+        let step =
+            run_step_real(&engine, &layer, &xs, &routing, &kind, &NativeCompute).unwrap();
+        let bwd = run_backward_real(&engine, &layer, &xs, &routing, &dys, &step.plan).unwrap();
+
+        for (e, (got, want)) in bwd.grads.iter().zip(&reference).enumerate() {
+            let d = got.max_abs_diff(want);
+            assert!(d < 1e-3, "expert {e}: grad diff {d}");
+        }
+        // spilling happened => some gradient returns were needed
+        if !step.plan.transfers.is_empty() {
+            assert!(bwd.grad_return_bytes > 0);
+        }
+    }
+
+    #[test]
+    fn synthetic_routing_also_exact() {
+        // Not router-generated: synthetic concentrated routing.
+        let model = ModelConfig::preset(ModelPreset::Tiny);
+        let system = SystemConfig::preset(SystemPreset::CpuSim4);
+        let engine = Engine::modeled(model.clone(), system);
+        let mut rng = Rng::new(15);
+        let layer = MoeLayer::random(&model, &mut rng);
+        let routing = Scenario::concentrated(0.9, 1).generate(&model, 4, 32, &mut rng);
+        let xs: Vec<Mat> = (0..4)
+            .map(|p| Mat::randn(routing.tokens_on(p), model.d_model, 0.5, &mut rng))
+            .collect();
+        let reference = forward_reference(&layer, &xs, &routing);
+        for kind in [
+            PlannerKind::StandardEp,
+            PlannerKind::Llep(LlepConfig { alpha: 1.0, min_gemm_tokens: 4, lambda: 1.0 }),
+            PlannerKind::Eplb { replicas: 3 },
+        ] {
+            let step =
+                run_step_real(&engine, &layer, &xs, &routing, &kind, &NativeCompute).unwrap();
+            assert!(
+                max_diff(&reference, &step.outputs) < 1e-4,
+                "{} not exact",
+                kind.label()
+            );
+        }
+    }
+
+    #[test]
+    fn shape_validation() {
+        let (engine, layer, xs, routing) = setup(16);
+        let bad_xs: Vec<Mat> = xs.iter().take(2).cloned().collect();
+        assert!(run_step_real(&engine, &layer, &bad_xs, &routing, &PlannerKind::StandardEp, &NativeCompute)
+            .is_err());
+    }
+}

@@ -1,0 +1,403 @@
+//! `llep` — CLI for the LLEP reproduction.
+//!
+//! Subcommands:
+//!   figures    regenerate paper figures/tables (--fig 1a|1b|1c|3|4|5|6a|6b|7a|7b|8|9|all)
+//!   run        run an experiment config (--config file.toml)
+//!   calibrate  fit the GEMM cost model to this machine
+//!   trace      generate + save a synthetic routing trace (--out t.json)
+//!   replay     replay a saved trace under EP/LLEP/EPLB (--trace t.json)
+//!   train      Fig.-5 training run from AOT artifacts (--steps N)
+//!   serve      serving simulation (EP vs LLEP)
+//!   info       print presets and environment
+
+use llep::config::{load_experiment, LlepConfig, ModelConfig, ModelPreset, SystemConfig, SystemPreset};
+use llep::coordinator::{RunSummary, Runner, ServeSim};
+use llep::exec::Engine;
+use llep::harness;
+use llep::metrics::{format_bytes, format_secs, Table};
+use llep::planner::PlannerKind;
+use llep::routing::{RoutingTrace, Scenario};
+use llep::util::cli::Spec;
+use llep::util::rng::Rng;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let spec = Spec::new()
+        .opt("fig", "figure id (1a 1b 1c 3 4 5 6a 6b 7a 7b 8 9 all)")
+        .opt("config", "experiment TOML file")
+        .opt("out", "output path")
+        .opt("trace", "trace JSON path")
+        .opt("steps", "training steps / serve requests")
+        .opt("batches", "trace batches")
+        .opt("devices", "EP world size")
+        .opt("tokens", "tokens per device")
+        .opt("alpha", "LLEP capacity factor")
+        .opt("lambda", "LLEP imbalance trigger")
+        .opt("min-gemm", "LLEP min tokens per GEMM")
+        .opt("model", "model preset name")
+        .opt("scenario", "balanced | concentrated | powerlaw | drift")
+        .opt("concentration", "fraction of tokens into hot experts")
+        .opt("hot", "number of hot experts")
+        .opt("seed", "rng seed")
+        .opt("artifacts", "artifacts directory (default ./artifacts)")
+        .flag("real", "measure real GEMMs where applicable")
+        .flag("help", "show usage");
+
+    let args = match spec.parse(&argv, true) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\nOptions:\n{}", spec.help());
+            std::process::exit(2);
+        }
+    };
+    if args.has_flag("help") || args.subcommand.is_none() {
+        println!("llep — Least-Loaded Expert Parallelism (paper reproduction)\n");
+        println!("usage: llep <figures|run|calibrate|trace|replay|train|serve|info> [options]\n");
+        println!("Options:\n{}", spec.help());
+        return;
+    }
+
+    let result = match args.subcommand.as_deref().unwrap() {
+        "figures" => cmd_figures(&args),
+        "run" => cmd_run(&args),
+        "calibrate" => cmd_calibrate(),
+        "trace" => cmd_trace(&args),
+        "replay" => cmd_replay(&args),
+        "train" => cmd_train(&args),
+        "serve" => cmd_serve(&args),
+        "info" => cmd_info(),
+        other => Err(format!("unknown subcommand {other:?} (see --help)")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn print_table(title: &str, t: &Table) {
+    println!("\n== {title} ==");
+    println!("{}", t.render());
+}
+
+fn cmd_figures(args: &llep::util::cli::Args) -> Result<(), String> {
+    let fig = args.get_or("fig", "all");
+    let real = args.has_flag("real");
+    let all = fig == "all";
+    if all || fig == "1a" {
+        print_table("Fig 1a — MoE layer speedup, 128E/top4/D2048, P=8", &harness::fig_1a());
+        println!("{}", harness::fig_1a_chart().render());
+    }
+    if all || fig == "1b" {
+        print_table("Fig 1b — peak memory per GPU", &harness::fig_1b());
+    }
+    if all || fig == "1c" {
+        print_table("Fig 1c — full-model throughput (in-the-wild routing)", &harness::fig_1c());
+    }
+    if all || fig == "3" {
+        let (a, b) = harness::fig_3();
+        print_table("Fig 3a — per-expert max load share", &a);
+        print_table("Fig 3b — per-GPU max load share", &b);
+    }
+    if all || fig == "4" {
+        print_table("Fig 4 — three architectures (gpt-oss-120b / DSv3 / Kimi-K2)", &harness::fig_4());
+    }
+    if all || fig == "5" {
+        match fig5_curve() {
+            Ok(()) => {}
+            Err(e) => println!(
+                "\n== Fig 5 — loss vs wall-clock ==\nskipped: {e}\n(run `make artifacts`, or use `cargo run --release --example e2e_train`)"
+            ),
+        }
+    }
+    if all || fig == "6a" {
+        print_table("Fig 6a — speedup vs batch size (4 hot experts)", &harness::fig_6a());
+    }
+    if all || fig == "6b" {
+        print_table("Fig 6b — speedup vs alpha", &harness::fig_6b());
+    }
+    if all || fig == "7a" {
+        print_table("Fig 7a — speedup vs lambda (B=8K)", &harness::fig_7a());
+    }
+    if all || fig == "7b" {
+        print_table("Fig 7b — speedup vs hidden size", &harness::fig_7b());
+    }
+    if all || fig == "8" {
+        print_table("Fig 8 — grouped-GEMM: time vs #experts at fixed FLOPs", &harness::fig_8(real || all));
+    }
+    if all || fig == "9" {
+        print_table("Fig 9 — speedup vs number of experts", &harness::fig_9());
+    }
+    Ok(())
+}
+
+/// Short Fig-5 run (60 steps) for `figures --fig 5`; the full experiment
+/// lives in examples/e2e_train.rs.
+fn fig5_curve() -> Result<(), String> {
+    let rt = llep::runtime::Runtime::open(&llep::runtime::Runtime::default_dir())
+        .map_err(|e| format!("{e:#}"))?;
+    let mut trainer = llep::trainer::Trainer::new(&rt, 0.0).map_err(|e| format!("{e:#}"))?;
+    let engine = Engine::modeled(
+        ModelConfig::preset(ModelPreset::Tiny),
+        SystemConfig::preset(SystemPreset::CpuSim4),
+    );
+    let mut rng = Rng::new(42);
+    let curve = trainer
+        .run_curve(60, &engine, &mut rng, |_| {})
+        .map_err(|e| format!("{e:#}"))?;
+    let last = curve.last().unwrap();
+    println!("\n== Fig 5 — loss vs wall-clock (60 steps; see examples/e2e_train for 300) ==");
+    let mut plot = llep::metrics::chart::SeriesPlot::new(
+        "loss vs wall-clock seconds  (E = standard EP, L = LLEP)",
+    );
+    plot.series('E', curve.iter().map(|p| (p.wall_ep_s, p.loss as f64)).collect());
+    plot.series('L', curve.iter().map(|p| (p.wall_llep_s, p.loss as f64)).collect());
+    println!("{}", plot.render());
+    println!(
+        "loss {:.3} -> {:.3}; MoE wall-clock EP {} vs LLEP {} ({:.2}x)",
+        curve[0].loss,
+        last.loss,
+        format_secs(last.wall_ep_s),
+        format_secs(last.wall_llep_s),
+        last.wall_ep_s / last.wall_llep_s
+    );
+    Ok(())
+}
+
+fn scenario_from_args(args: &llep::util::cli::Args) -> Result<Scenario, String> {
+    let conc = args.get_f64("concentration", 0.8)?;
+    let hot = args.get_usize("hot", 4)?;
+    Ok(match args.get_or("scenario", "concentrated").as_str() {
+        "balanced" => Scenario::balanced(),
+        "concentrated" => Scenario::concentrated(conc, hot),
+        "powerlaw" => Scenario::power_law(1.2),
+        "drift" => Scenario::drifting(hot, conc.min(0.95), 0.25),
+        other => return Err(format!("unknown scenario {other}")),
+    })
+}
+
+fn engine_from_args(args: &llep::util::cli::Args) -> Result<(Engine, LlepConfig), String> {
+    let model_name = args.get_or("model", "fig1-layer");
+    let preset = ModelPreset::from_name(&model_name)
+        .ok_or_else(|| format!("unknown model preset {model_name}"))?;
+    let devices = args.get_usize("devices", 8)?;
+    let model = ModelConfig::preset(preset);
+    let system = SystemConfig::preset(SystemPreset::H200x8).with_devices(devices);
+    let llep = LlepConfig {
+        alpha: args.get_f64("alpha", 1.0)?,
+        lambda: args.get_f64("lambda", 1.3)?,
+        min_gemm_tokens: args.get_usize("min-gemm", 1024)?,
+    };
+    llep.validate()?;
+    Ok((Engine::modeled(model, system), llep))
+}
+
+fn cmd_run(args: &llep::util::cli::Args) -> Result<(), String> {
+    let (engine, llep, scenario, tokens, seed) = if let Some(path) = args.get("config") {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        let cfg = load_experiment(&text)?;
+        (
+            Engine::modeled(cfg.model, cfg.system),
+            cfg.llep,
+            cfg.scenario,
+            cfg.tokens_per_device,
+            cfg.seed,
+        )
+    } else {
+        let (engine, llep) = engine_from_args(args)?;
+        let scenario = scenario_from_args(args)?;
+        let tokens = args.get_usize("tokens", 32_768)?;
+        let seed = args.get_usize("seed", 0)? as u64;
+        (engine, llep, scenario, tokens, seed)
+    };
+
+    let mut rng = Rng::new(seed);
+    let lm = scenario.generate_loads(&engine.model, engine.system.devices, tokens, &mut rng);
+    let mut t = Table::new(&[
+        "planner", "latency", "compute max", "dispatch", "weights", "peak mem", "xfers", "OOM",
+    ]);
+    for kind in [
+        PlannerKind::StandardEp,
+        PlannerKind::Llep(llep),
+        PlannerKind::Eplb { replicas: engine.system.devices },
+    ] {
+        let r = engine.run_step_loads(&lm, &kind);
+        t.row(vec![
+            r.planner.clone(),
+            format_secs(r.latency_s),
+            format_secs(r.phases.compute_s),
+            format_secs(r.phases.dispatch_s),
+            format_secs(r.phases.weights_s),
+            format_bytes(r.max_peak_bytes()),
+            r.weight_transfers.to_string(),
+            if r.oom { "OOM".into() } else { "-".into() },
+        ]);
+    }
+    print_table(
+        &format!(
+            "{} | P={} | {} tokens/device | {}",
+            engine.model.name,
+            engine.system.devices,
+            tokens,
+            scenario.label()
+        ),
+        &t,
+    );
+    Ok(())
+}
+
+fn cmd_calibrate() -> Result<(), String> {
+    use llep::costmodel::calibrate;
+    println!("measuring native GEMM (D=H=256)...");
+    let sweep = [8u64, 16, 32, 64, 128, 256, 512, 1024, 2048];
+    let samples = calibrate::measure_native(256, 256, &sweep, 3);
+    for s in &samples {
+        println!("  B={:<6} {}", s.tokens, format_secs(s.seconds));
+    }
+    let fitted = calibrate::fit(&samples, 48.0);
+    let rms = calibrate::rms_rel_error(&fitted, &samples);
+    println!("\nfitted GEMM cost model (rms rel err {:.1}%):", rms * 100.0);
+    println!("  overhead_s      = {:.3e}", fitted.overhead_s);
+    println!("  peak_flops      = {:.3e}", fitted.peak_flops);
+    println!("  tokens_half_eff = {:.1}", fitted.tokens_half_eff);
+    println!("\npaste into SystemConfig::CpuSim8 to recalibrate the simulator.");
+    Ok(())
+}
+
+fn cmd_trace(args: &llep::util::cli::Args) -> Result<(), String> {
+    let (engine, _) = engine_from_args(args)?;
+    let scenario = scenario_from_args(args)?;
+    let batches = args.get_usize("batches", 32)?;
+    let tokens = args.get_usize("tokens", 8192)?;
+    let seed = args.get_usize("seed", 0)? as u64;
+    let out = args.get_or("out", "trace.json");
+    let mut rng = Rng::new(seed);
+    let mut trace =
+        RoutingTrace::new(&scenario.label(), engine.model.num_experts, engine.model.top_k);
+    for _ in 0..batches {
+        trace
+            .push(scenario.generate_loads(&engine.model, engine.system.devices, tokens, &mut rng))?;
+    }
+    trace.save(std::path::Path::new(&out)).map_err(|e| e.to_string())?;
+    println!("wrote {batches} batches to {out}");
+    Ok(())
+}
+
+fn cmd_replay(args: &llep::util::cli::Args) -> Result<(), String> {
+    let path = args.get("trace").ok_or("--trace required")?;
+    let trace = RoutingTrace::load(std::path::Path::new(path))?;
+    let (engine, llep) = engine_from_args(args)?;
+    if trace.num_experts != engine.model.num_experts {
+        return Err(format!(
+            "trace has {} experts; pass --model with a matching preset",
+            trace.num_experts
+        ));
+    }
+    let mut t = Table::new(&["planner", "total time", "p50 step", "p99 step", "peak mem", "OOM batches"]);
+    for kind in [
+        PlannerKind::StandardEp,
+        PlannerKind::Llep(llep),
+        PlannerKind::Eplb { replicas: engine.system.devices },
+    ] {
+        let mut runner = Runner::new(engine.clone(), kind);
+        let reports = runner.run_trace(&trace);
+        let s = RunSummary::of(&reports);
+        t.row(vec![
+            s.planner.clone(),
+            format_secs(s.total_latency_s),
+            format_secs(s.latency.p50),
+            format_secs(s.latency.p99),
+            format_bytes(s.peak_bytes),
+            s.oom_batches.to_string(),
+        ]);
+    }
+    print_table(&format!("replay {path} ({} batches)", trace.batches.len()), &t);
+    Ok(())
+}
+
+fn cmd_train(args: &llep::util::cli::Args) -> Result<(), String> {
+    let steps = args.get_usize("steps", 200)?;
+    let dir = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(llep::runtime::Runtime::default_dir);
+    let rt = llep::runtime::Runtime::open(&dir).map_err(|e| format!("{e:#}"))?;
+    let mut trainer = llep::trainer::Trainer::new(&rt, 0.0).map_err(|e| format!("{e:#}"))?;
+    let engine = Engine::modeled(
+        ModelConfig::preset(ModelPreset::Tiny),
+        SystemConfig::preset(SystemPreset::CpuSim4),
+    );
+    let mut rng = Rng::new(args.get_usize("seed", 0)? as u64);
+    println!("step  loss      wall(EP)    wall(LLEP)  measured/step");
+    let curve = trainer
+        .run_curve(steps, &engine, &mut rng, |p| {
+            if p.step % 10 == 0 || p.step + 1 == steps {
+                println!(
+                    "{:<5} {:<9.4} {:<11} {:<11} {}",
+                    p.step,
+                    p.loss,
+                    format_secs(p.wall_ep_s),
+                    format_secs(p.wall_llep_s),
+                    format_secs(p.measured_step_s)
+                );
+            }
+        })
+        .map_err(|e| format!("{e:#}"))?;
+    let last = curve.last().unwrap();
+    println!(
+        "\nfinal loss {:.4}; virtual wall-clock speedup (MoE layers): {:.2}x",
+        last.loss,
+        last.wall_ep_s / last.wall_llep_s
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &llep::util::cli::Args) -> Result<(), String> {
+    let (engine, llep) = engine_from_args(args)?;
+    let scenario = scenario_from_args(args)?;
+    let n = args.get_usize("steps", 64)?;
+    let seed = args.get_usize("seed", 0)? as u64;
+    let mut rng = Rng::new(seed);
+    let requests = ServeSim::poisson_requests(n, 0.0005, 256, 2048, &mut rng);
+    let mut t = Table::new(&["planner", "makespan", "p50 latency", "p99 latency", "tok/s"]);
+    for kind in [PlannerKind::StandardEp, PlannerKind::Llep(llep)] {
+        let sim = ServeSim::new(engine.clone(), kind, scenario.clone(), 8192);
+        let r = sim.run(&requests, &mut Rng::new(seed + 1));
+        t.row(vec![
+            r.planner.clone(),
+            format_secs(r.makespan_s),
+            format_secs(r.request_latency.p50),
+            format_secs(r.request_latency.p99),
+            format!("{:.0}", r.throughput_tps()),
+        ]);
+    }
+    print_table(&format!("serving {n} requests | {}", scenario.label()), &t);
+    Ok(())
+}
+
+fn cmd_info() -> Result<(), String> {
+    println!("model presets:");
+    for p in ModelPreset::ALL {
+        let m = ModelConfig::preset(p);
+        println!(
+            "  {:<14} N={:<4} K={} D={:<5} H={:<5} layers={}",
+            m.name, m.num_experts, m.top_k, m.d_model, m.d_ff, m.num_layers
+        );
+    }
+    println!("\nsystem presets:");
+    for p in SystemPreset::ALL {
+        let s = SystemConfig::preset(p);
+        println!(
+            "  {:<14} P={:<3} {}/node  mem={}  peak={:.0e} FLOP/s",
+            s.name,
+            s.devices,
+            s.devices_per_node,
+            format_bytes(s.mem_capacity_bytes),
+            s.gemm.peak_flops
+        );
+    }
+    match llep::runtime::Runtime::open(&llep::runtime::Runtime::default_dir()) {
+        Ok(rt) => println!("\nartifacts: {} entries on {}", rt.len(), rt.platform()),
+        Err(e) => println!("\nartifacts: unavailable ({e})"),
+    }
+    Ok(())
+}

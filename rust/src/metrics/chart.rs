@@ -1,0 +1,168 @@
+//! ASCII bar charts for the `llep figures` output — the terminal
+//! equivalent of the paper's bar/line figures.
+
+/// A horizontal bar chart.
+#[derive(Clone, Debug, Default)]
+pub struct BarChart {
+    pub title: String,
+    /// (label, value, annotation)
+    rows: Vec<(String, f64, String)>,
+    /// Width of the bar area in characters.
+    pub width: usize,
+}
+
+impl BarChart {
+    pub fn new(title: &str) -> BarChart {
+        BarChart { title: title.to_string(), rows: Vec::new(), width: 46 }
+    }
+
+    pub fn bar(&mut self, label: &str, value: f64, annotation: &str) {
+        assert!(value.is_finite() && value >= 0.0, "bar value must be finite/non-negative");
+        self.rows.push((label.to_string(), value, annotation.to_string()));
+    }
+
+    /// Render with bars scaled to the maximum value.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&self.title);
+        out.push('\n');
+        if self.rows.is_empty() {
+            out.push_str("  (no data)\n");
+            return out;
+        }
+        let max = self.rows.iter().map(|r| r.1).fold(0.0f64, f64::max).max(1e-300);
+        let label_w = self.rows.iter().map(|r| r.0.chars().count()).max().unwrap_or(0);
+        for (label, value, ann) in &self.rows {
+            let filled = ((value / max) * self.width as f64).round() as usize;
+            let filled = filled.min(self.width);
+            out.push_str(&format!(
+                "  {:<lw$} |{}{}| {}\n",
+                label,
+                "█".repeat(filled),
+                " ".repeat(self.width - filled),
+                ann,
+                lw = label_w
+            ));
+        }
+        out
+    }
+}
+
+/// A line/series plot rendered as rows of scaled dots (for the Fig.-5
+/// loss-vs-wall-clock curve).
+#[derive(Clone, Debug)]
+pub struct SeriesPlot {
+    pub title: String,
+    pub height: usize,
+    pub width: usize,
+    series: Vec<(char, Vec<(f64, f64)>)>,
+}
+
+impl SeriesPlot {
+    pub fn new(title: &str) -> SeriesPlot {
+        SeriesPlot { title: title.to_string(), height: 12, width: 64, series: Vec::new() }
+    }
+
+    pub fn series(&mut self, marker: char, points: Vec<(f64, f64)>) {
+        self.series.push((marker, points));
+    }
+
+    /// Render all series on shared axes.
+    pub fn render(&self) -> String {
+        let mut out = format!("{}\n", self.title);
+        let all: Vec<(f64, f64)> =
+            self.series.iter().flat_map(|(_, pts)| pts.iter().copied()).collect();
+        if all.is_empty() {
+            out.push_str("  (no data)\n");
+            return out;
+        }
+        let (mut x0, mut x1, mut y0, mut y1) = (f64::MAX, f64::MIN, f64::MAX, f64::MIN);
+        for &(x, y) in &all {
+            x0 = x0.min(x);
+            x1 = x1.max(x);
+            y0 = y0.min(y);
+            y1 = y1.max(y);
+        }
+        let xr = (x1 - x0).max(1e-12);
+        let yr = (y1 - y0).max(1e-12);
+        let mut grid = vec![vec![' '; self.width]; self.height];
+        for (marker, pts) in &self.series {
+            for &(x, y) in pts {
+                let col = (((x - x0) / xr) * (self.width - 1) as f64).round() as usize;
+                let row = (((y1 - y) / yr) * (self.height - 1) as f64).round() as usize;
+                grid[row.min(self.height - 1)][col.min(self.width - 1)] = *marker;
+            }
+        }
+        for (i, row) in grid.iter().enumerate() {
+            let y_label = if i == 0 {
+                format!("{y1:>9.3}")
+            } else if i == self.height - 1 {
+                format!("{y0:>9.3}")
+            } else {
+                " ".repeat(9)
+            };
+            out.push_str(&format!("{y_label} |{}\n", row.iter().collect::<String>()));
+        }
+        out.push_str(&format!(
+            "{} +{}\n{: >11}{x0:<.3} .. {x1:.3}\n",
+            " ".repeat(9),
+            "-".repeat(self.width),
+            ""
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bars_scale_to_max() {
+        let mut c = BarChart::new("speedup");
+        c.bar("balanced", 1.0, "1.0x");
+        c.bar("95% into 1", 5.0, "5.0x");
+        let s = c.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 3);
+        let count = |l: &str| l.matches('█').count();
+        assert_eq!(count(lines[2]), 46, "max bar fills the width");
+        assert!((count(lines[1]) as f64 - 46.0 / 5.0).abs() <= 1.0);
+        assert!(lines[1].contains("1.0x"));
+    }
+
+    #[test]
+    fn empty_chart_renders() {
+        assert!(BarChart::new("x").render().contains("no data"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_negative() {
+        BarChart::new("x").bar("bad", -1.0, "");
+    }
+
+    #[test]
+    fn series_plot_places_extremes() {
+        let mut p = SeriesPlot::new("loss");
+        p.series('o', vec![(0.0, 1.0), (10.0, 0.0)]);
+        p.series('x', vec![(5.0, 0.5)]);
+        let s = p.render();
+        let lines: Vec<&str> = s.lines().collect();
+        // first grid row holds the max-y point, last grid row the min-y
+        assert!(lines[1].contains('o'));
+        assert!(lines[p.height].contains('o'));
+        assert!(s.contains('x'));
+        assert!(s.contains("0.000 .. 10.000"));
+    }
+
+    #[test]
+    fn labels_aligned() {
+        let mut c = BarChart::new("t");
+        c.bar("a", 1.0, "");
+        c.bar("long label", 2.0, "");
+        let s = c.render();
+        let bars: Vec<usize> = s.lines().skip(1).map(|l| l.find('|').unwrap()).collect();
+        assert_eq!(bars[0], bars[1], "bar columns aligned");
+    }
+}

@@ -1,0 +1,173 @@
+//! Reporting helpers: text tables, ASCII charts and JSON export of step
+//! reports.
+
+pub mod chart;
+
+use crate::exec::StepReport;
+use crate::util::json::Json;
+
+pub use crate::util::stats::Summary;
+
+/// Format bytes with adaptive unit.
+pub fn format_bytes(bytes: u64) -> String {
+    const GIB: f64 = (1u64 << 30) as f64;
+    const MIB: f64 = (1u64 << 20) as f64;
+    const KIB: f64 = 1024.0;
+    let b = bytes as f64;
+    if b >= GIB {
+        format!("{:.2} GiB", b / GIB)
+    } else if b >= MIB {
+        format!("{:.2} MiB", b / MIB)
+    } else if b >= KIB {
+        format!("{:.1} KiB", b / KIB)
+    } else {
+        format!("{bytes} B")
+    }
+}
+
+/// Format seconds with adaptive unit.
+pub fn format_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.2} µs", s * 1e6)
+    } else {
+        format!("{:.0} ns", s * 1e9)
+    }
+}
+
+/// A simple aligned text table.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let cols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for c in 0..cols {
+                widths[c] = widths[c].max(row[c].chars().count());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::new();
+            for (i, cell) in cells.iter().enumerate() {
+                if i > 0 {
+                    line.push_str("  ");
+                }
+                // left-align first column, right-align the rest
+                if i == 0 {
+                    line.push_str(&format!("{:<w$}", cell, w = widths[i]));
+                } else {
+                    line.push_str(&format!("{:>w$}", cell, w = widths[i]));
+                }
+            }
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (cols - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// One comparison line: EP vs LLEP on the same workload.
+#[derive(Clone, Debug)]
+pub struct Comparison {
+    pub label: String,
+    pub ep: StepReport,
+    pub llep: StepReport,
+}
+
+impl Comparison {
+    pub fn speedup(&self) -> f64 {
+        self.ep.latency_s / self.llep.latency_s
+    }
+    pub fn memory_ratio(&self) -> f64 {
+        self.ep.max_peak_bytes() as f64 / self.llep.max_peak_bytes().max(1) as f64
+    }
+}
+
+/// JSON export of a step report (for machine-readable bench logs).
+pub fn report_to_json(r: &StepReport) -> Json {
+    Json::obj(vec![
+        ("planner", Json::str(&r.planner)),
+        ("latency_s", Json::num(r.latency_s)),
+        ("plan_s", Json::num(r.phases.plan_s)),
+        ("dispatch_s", Json::num(r.phases.dispatch_s)),
+        ("weights_s", Json::num(r.phases.weights_s)),
+        ("compute_s", Json::num(r.phases.compute_s)),
+        ("combine_s", Json::num(r.phases.combine_s)),
+        ("peak_bytes", Json::num(r.max_peak_bytes() as f64)),
+        ("bytes_dispatch", Json::num(r.bytes_dispatch as f64)),
+        ("bytes_weights", Json::num(r.bytes_weights as f64)),
+        ("gemm_calls", Json::num(r.gemm_calls as f64)),
+        ("weight_transfers", Json::num(r.weight_transfers as f64)),
+        ("oom", Json::Bool(r.oom)),
+        ("fallback_ep", Json::Bool(r.fallback_ep)),
+        ("tokens", Json::num(r.tokens as f64)),
+        ("throughput_tps", Json::num(r.throughput())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(format_bytes(512), "512 B");
+        assert_eq!(format_bytes(2048), "2.0 KiB");
+        assert!(format_bytes(3 << 20).contains("MiB"));
+        assert!(format_bytes(5 << 30).contains("GiB"));
+    }
+
+    #[test]
+    fn secs_formatting() {
+        assert!(format_secs(2.5).contains(" s"));
+        assert!(format_secs(2.5e-3).contains("ms"));
+        assert!(format_secs(2.5e-6).contains("µs"));
+        assert!(format_secs(2.5e-9).contains("ns"));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["scenario", "speedup"]);
+        t.row(vec!["balanced".into(), "1.00x".into()]);
+        t.row(vec!["95% into 1".into(), "4.61x".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("scenario"));
+        assert!(lines[3].contains("4.61x"));
+        // all data lines equal width
+        assert_eq!(lines[2].len(), lines[3].len());
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_wrong_arity() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["only one".into()]);
+    }
+}

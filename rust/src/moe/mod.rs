@@ -1,0 +1,466 @@
+//! Pure-rust MoE reference: router, SwiGLU expert FFN, and a
+//! single-device forward/backward oracle.
+//!
+//! The execution engine's distributed dispatch-compute-combine must be
+//! *exactly* this computation (paper: "LLEP is an **exact** MoE
+//! computation algorithm") — the integration tests compare both forward
+//! outputs and accumulated expert-weight gradients against this module.
+
+use crate::config::ModelConfig;
+use crate::routing::Routing;
+use crate::tensor::{matmul, matmul_at_acc, matmul_bt, silu, silu_grad, softmax_inplace, Mat};
+use crate::util::rng::Rng;
+
+/// SwiGLU expert weights: `y = (silu(x Wg) * (x Wu)) Wd`.
+#[derive(Clone, Debug)]
+pub struct ExpertWeights {
+    pub w_gate: Mat, // D x H
+    pub w_up: Mat,   // D x H
+    pub w_down: Mat, // H x D
+}
+
+impl ExpertWeights {
+    pub fn random(model: &ModelConfig, rng: &mut Rng) -> ExpertWeights {
+        let d = model.d_model;
+        let h = model.d_ff;
+        let scale = 1.0 / (d as f32).sqrt();
+        ExpertWeights {
+            w_gate: Mat::randn(d, h, scale, rng),
+            w_up: Mat::randn(d, h, scale, rng),
+            w_down: Mat::randn(h, d, scale, rng),
+        }
+    }
+
+    pub fn zeros_like(&self) -> ExpertWeights {
+        ExpertWeights {
+            w_gate: Mat::zeros(self.w_gate.rows, self.w_gate.cols),
+            w_up: Mat::zeros(self.w_up.rows, self.w_up.cols),
+            w_down: Mat::zeros(self.w_down.rows, self.w_down.cols),
+        }
+    }
+
+    /// Accumulate another gradient set into this one.
+    pub fn add_assign(&mut self, other: &ExpertWeights) {
+        for (a, b) in self.w_gate.data.iter_mut().zip(&other.w_gate.data) {
+            *a += b;
+        }
+        for (a, b) in self.w_up.data.iter_mut().zip(&other.w_up.data) {
+            *a += b;
+        }
+        for (a, b) in self.w_down.data.iter_mut().zip(&other.w_down.data) {
+            *a += b;
+        }
+    }
+
+    pub fn max_abs_diff(&self, other: &ExpertWeights) -> f32 {
+        let d = |a: &Mat, b: &Mat| {
+            a.data
+                .iter()
+                .zip(&b.data)
+                .map(|(x, y)| (x - y).abs())
+                .fold(0f32, f32::max)
+        };
+        d(&self.w_gate, &other.w_gate)
+            .max(d(&self.w_up, &other.w_up))
+            .max(d(&self.w_down, &other.w_down))
+    }
+}
+
+/// An MoE layer: router weights + `N` experts.
+#[derive(Clone, Debug)]
+pub struct MoeLayer {
+    pub model: ModelConfig,
+    pub router: Mat, // D x N
+    pub experts: Vec<ExpertWeights>,
+}
+
+impl MoeLayer {
+    pub fn random(model: &ModelConfig, rng: &mut Rng) -> MoeLayer {
+        let router = Mat::randn(model.d_model, model.num_experts, 0.2, rng);
+        let experts = (0..model.num_experts).map(|_| ExpertWeights::random(model, rng)).collect();
+        MoeLayer { model: model.clone(), router, experts }
+    }
+}
+
+/// SwiGLU FFN forward: `(silu(x Wg) * (x Wu)) Wd`.
+pub fn ffn_forward(x: &Mat, w: &ExpertWeights) -> Mat {
+    let g = matmul(x, &w.w_gate); // B x H
+    let u = matmul(x, &w.w_up); // B x H
+    let mut a = Mat::zeros(g.rows, g.cols);
+    for i in 0..g.data.len() {
+        a.data[i] = silu(g.data[i]) * u.data[i];
+    }
+    matmul(&a, &w.w_down) // B x D
+}
+
+/// Gradients of the SwiGLU FFN.
+pub struct FfnGrads {
+    pub d_weights: ExpertWeights,
+    pub d_x: Mat,
+}
+
+/// SwiGLU FFN backward for upstream gradient `dy` (B x D).
+pub fn ffn_backward(x: &Mat, w: &ExpertWeights, dy: &Mat) -> FfnGrads {
+    let g = matmul(x, &w.w_gate); // B x H (pre-activation)
+    let u = matmul(x, &w.w_up); // B x H
+    let mut a = Mat::zeros(g.rows, g.cols); // silu(g) * u
+    for i in 0..g.data.len() {
+        a.data[i] = silu(g.data[i]) * u.data[i];
+    }
+    // d_a = dy @ Wd^T ; dWd = a^T @ dy
+    let d_a = matmul_bt(dy, &w.w_down); // B x H (w_down is H x D; dy (BxD) @ (Wd^T: DxH))
+    let mut d_w_down = Mat::zeros(w.w_down.rows, w.w_down.cols);
+    matmul_at_acc(&a, dy, &mut d_w_down);
+
+    // d_g = d_a * u * silu'(g); d_u = d_a * silu(g)
+    let mut d_g = Mat::zeros(g.rows, g.cols);
+    let mut d_u = Mat::zeros(g.rows, g.cols);
+    for i in 0..g.data.len() {
+        d_g.data[i] = d_a.data[i] * u.data[i] * silu_grad(g.data[i]);
+        d_u.data[i] = d_a.data[i] * silu(g.data[i]);
+    }
+    let mut d_w_gate = Mat::zeros(w.w_gate.rows, w.w_gate.cols);
+    matmul_at_acc(x, &d_g, &mut d_w_gate);
+    let mut d_w_up = Mat::zeros(w.w_up.rows, w.w_up.cols);
+    matmul_at_acc(x, &d_u, &mut d_w_up);
+
+    // d_x = d_g @ Wg^T + d_u @ Wu^T
+    let mut d_x = matmul_bt(&d_g, &w.w_gate);
+    let d_x2 = matmul_bt(&d_u, &w.w_up);
+    for (a, b) in d_x.data.iter_mut().zip(&d_x2.data) {
+        *a += b;
+    }
+
+    FfnGrads { d_weights: ExpertWeights { w_gate: d_w_gate, w_up: d_w_up, w_down: d_w_down }, d_x }
+}
+
+/// Top-K softmax routing of per-device token batches (paper Eq. 1-2):
+/// scores = softmax(x W_r); keep the K largest as gates.
+pub fn route(layer: &MoeLayer, xs: &[Mat]) -> Routing {
+    let n = layer.model.num_experts;
+    let k = layer.model.top_k;
+    let mut experts = Vec::with_capacity(xs.len());
+    let mut gates = Vec::with_capacity(xs.len());
+    for x in xs {
+        let logits = matmul(x, &layer.router); // B x N
+        let mut ids = Vec::with_capacity(x.rows * k);
+        let mut gts = Vec::with_capacity(x.rows * k);
+        for t in 0..x.rows {
+            let mut scores = logits.row(t).to_vec();
+            softmax_inplace(&mut scores);
+            let mut order: Vec<usize> = (0..n).collect();
+            order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap().then(a.cmp(&b)));
+            for &e in order.iter().take(k) {
+                ids.push(e as u32);
+                gts.push(scores[e]);
+            }
+        }
+        experts.push(ids);
+        gates.push(gts);
+    }
+    Routing { num_experts: n, top_k: k, experts, gates }
+}
+
+/// Bias-adjusted routing — the *parameter-altering* load-balancing family
+/// the paper argues against for post-training (§1, §3.1: DeepSeek-V3's
+/// moving-average routing bias, auxiliary losses). A per-expert bias is
+/// added to the router scores before top-K selection, steering tokens
+/// away from overloaded experts. This balances loads but **changes which
+/// experts process which tokens**, i.e. it alters model outputs — unlike
+/// LLEP, which is exact. `tests::biased_routing_balances_but_is_not_exact`
+/// quantifies both effects.
+pub fn route_biased(layer: &MoeLayer, xs: &[Mat], bias: &[f32]) -> Routing {
+    let n = layer.model.num_experts;
+    let k = layer.model.top_k;
+    assert_eq!(bias.len(), n);
+    let mut experts = Vec::with_capacity(xs.len());
+    let mut gates = Vec::with_capacity(xs.len());
+    for x in xs {
+        let logits = matmul(x, &layer.router);
+        let mut ids = Vec::with_capacity(x.rows * k);
+        let mut gts = Vec::with_capacity(x.rows * k);
+        for t in 0..x.rows {
+            let mut scores = logits.row(t).to_vec();
+            softmax_inplace(&mut scores);
+            // bias applies to SELECTION only; the gate values stay the
+            // original affinities (DeepSeek-V3 semantics).
+            let mut order: Vec<usize> = (0..n).collect();
+            order.sort_by(|&a, &b| {
+                (scores[b] + bias[b])
+                    .partial_cmp(&(scores[a] + bias[a]))
+                    .unwrap()
+                    .then(a.cmp(&b))
+            });
+            for &e in order.iter().take(k) {
+                ids.push(e as u32);
+                gts.push(scores[e]);
+            }
+        }
+        experts.push(ids);
+        gates.push(gts);
+    }
+    Routing { num_experts: n, top_k: k, experts, gates }
+}
+
+/// One moving-average bias update step (DeepSeek-V3-style): experts above
+/// the mean load get pushed down, below-mean experts pulled up.
+pub fn update_routing_bias(bias: &mut [f32], loads: &[u64], rate: f32) {
+    let mean = (loads.iter().sum::<u64>() as f32 / loads.len() as f32).max(1.0);
+    for (b, &l) in bias.iter_mut().zip(loads) {
+        // proportional variant of DeepSeek-V3's auxiliary-loss-free
+        // update (sign-based in the original; proportional converges in
+        // fewer batches, which suits the unit-test horizon)
+        *b -= rate * (l as f32 - mean) / mean;
+    }
+}
+
+/// Single-device reference MoE forward: per device `p`, output row `t` is
+/// `sum_k gate[t,k] * FFN_{expert[t,k]}(x[t])`.
+pub fn forward_reference(layer: &MoeLayer, xs: &[Mat], routing: &Routing) -> Vec<Mat> {
+    let k = routing.top_k;
+    xs.iter()
+        .enumerate()
+        .map(|(p, x)| {
+            let mut out = Mat::zeros(x.rows, layer.model.d_model);
+            for t in 0..x.rows {
+                let xt = Mat::from_vec(1, x.cols, x.row(t).to_vec());
+                for slot in 0..k {
+                    let e = routing.experts[p][t * k + slot] as usize;
+                    let gate = routing.gates[p][t * k + slot];
+                    let y = ffn_forward(&xt, &layer.experts[e]);
+                    for (o, v) in out.row_mut(t).iter_mut().zip(&y.data) {
+                        *o += gate * v;
+                    }
+                }
+            }
+            out
+        })
+        .collect()
+}
+
+/// Reference expert-weight gradients for upstream grads `dys` (per
+/// device), accumulated across all tokens that touched each expert.
+pub fn backward_reference(
+    layer: &MoeLayer,
+    xs: &[Mat],
+    routing: &Routing,
+    dys: &[Mat],
+) -> Vec<ExpertWeights> {
+    let k = routing.top_k;
+    let mut grads: Vec<ExpertWeights> =
+        layer.experts.iter().map(|w| w.zeros_like()).collect();
+    for (p, x) in xs.iter().enumerate() {
+        for t in 0..x.rows {
+            let xt = Mat::from_vec(1, x.cols, x.row(t).to_vec());
+            for slot in 0..k {
+                let e = routing.experts[p][t * k + slot] as usize;
+                let gate = routing.gates[p][t * k + slot];
+                let mut dy = Mat::from_vec(1, layer.model.d_model, dys[p].row(t).to_vec());
+                for v in dy.data.iter_mut() {
+                    *v *= gate;
+                }
+                let g = ffn_backward(&xt, &layer.experts[e], &dy);
+                grads[e].add_assign(&g.d_weights);
+            }
+        }
+    }
+    grads
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelPreset;
+
+    fn tiny_layer(seed: u64) -> MoeLayer {
+        let model = ModelConfig::preset(ModelPreset::Tiny);
+        MoeLayer::random(&model, &mut Rng::new(seed))
+    }
+
+    #[test]
+    fn ffn_forward_shape_and_determinism() {
+        let layer = tiny_layer(1);
+        let mut rng = Rng::new(2);
+        let x = Mat::randn(5, 64, 0.1, &mut rng);
+        let y1 = ffn_forward(&x, &layer.experts[0]);
+        let y2 = ffn_forward(&x, &layer.experts[0]);
+        assert_eq!(y1.rows, 5);
+        assert_eq!(y1.cols, 64);
+        assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn ffn_backward_matches_finite_differences() {
+        let model = ModelConfig::preset(ModelPreset::Tiny);
+        let mut rng = Rng::new(3);
+        // Small dims for FD stability.
+        let small = ModelConfig { d_model: 6, d_ff: 5, ..model };
+        let mut w = ExpertWeights::random(&small, &mut rng);
+        let x = Mat::randn(3, 6, 0.5, &mut rng);
+        let dy = Mat::randn(3, 6, 0.5, &mut rng);
+
+        let grads = ffn_backward(&x, &w, &dy);
+        let loss = |w: &ExpertWeights, x: &Mat| -> f32 {
+            let y = ffn_forward(x, w);
+            y.data.iter().zip(&dy.data).map(|(a, b)| a * b).sum()
+        };
+        let eps = 1e-3f32;
+        // check a scattering of weight coordinates in each matrix
+        for (mat_idx, (get_grad, len)) in [
+            (&grads.d_weights.w_gate, w.w_gate.data.len()),
+            (&grads.d_weights.w_up, w.w_up.data.len()),
+            (&grads.d_weights.w_down, w.w_down.data.len()),
+        ]
+        .iter()
+        .enumerate()
+        {
+            for &i in &[0usize, len / 2, len - 1] {
+                let orig = match mat_idx {
+                    0 => w.w_gate.data[i],
+                    1 => w.w_up.data[i],
+                    _ => w.w_down.data[i],
+                };
+                let set = |w: &mut ExpertWeights, v: f32| match mat_idx {
+                    0 => w.w_gate.data[i] = v,
+                    1 => w.w_up.data[i] = v,
+                    _ => w.w_down.data[i] = v,
+                };
+                set(&mut w, orig + eps);
+                let up = loss(&w, &x);
+                set(&mut w, orig - eps);
+                let down = loss(&w, &x);
+                set(&mut w, orig);
+                let fd = (up - down) / (2.0 * eps);
+                let an = get_grad.data[i];
+                assert!(
+                    (fd - an).abs() < 2e-2 * (1.0 + fd.abs()),
+                    "mat {mat_idx} idx {i}: fd={fd} analytic={an}"
+                );
+            }
+        }
+        // and d_x
+        let x_orig = x.clone();
+        for &i in &[0usize, 7, 17] {
+            let mut xp = x_orig.clone();
+            xp.data[i] += eps;
+            let mut xm = x_orig.clone();
+            xm.data[i] -= eps;
+            let fd = (loss(&w, &xp) - loss(&w, &xm)) / (2.0 * eps);
+            let an = grads.d_x.data[i];
+            assert!((fd - an).abs() < 2e-2 * (1.0 + fd.abs()), "d_x idx {i}: fd={fd} an={an}");
+        }
+    }
+
+    #[test]
+    fn route_produces_valid_topk() {
+        let layer = tiny_layer(4);
+        let mut rng = Rng::new(5);
+        let xs = vec![Mat::randn(10, 64, 0.5, &mut rng), Mat::randn(7, 64, 0.5, &mut rng)];
+        let r = route(&layer, &xs);
+        r.validate().unwrap();
+        assert_eq!(r.tokens_on(0), 10);
+        assert_eq!(r.tokens_on(1), 7);
+        // gates descend within each token (top-k of softmax)
+        for p in 0..2 {
+            for t in 0..r.tokens_on(p) {
+                let g0 = r.gates[p][t * 2];
+                let g1 = r.gates[p][t * 2 + 1];
+                assert!(g0 >= g1);
+                assert!(g0 > 0.0 && g0 <= 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn forward_reference_uses_gates() {
+        let layer = tiny_layer(6);
+        let mut rng = Rng::new(7);
+        let xs = vec![Mat::randn(4, 64, 0.5, &mut rng)];
+        let mut routing = route(&layer, &xs);
+        let y = forward_reference(&layer, &xs, &routing);
+        // zeroing the gates must zero the output
+        for g in routing.gates[0].iter_mut() {
+            *g = 0.0;
+        }
+        let y0 = forward_reference(&layer, &xs, &routing);
+        assert!(y[0].data.iter().any(|&v| v != 0.0));
+        assert!(y0[0].data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn biased_routing_balances_but_is_not_exact() {
+        // Build a layer whose router is skewed toward expert 0, then let
+        // the DeepSeek-style bias equalize it over a few updates. Loads
+        // get balanced — but the routing (and thus the model output)
+        // CHANGES, which is exactly why the paper rejects this for
+        // post-training and builds LLEP instead.
+        let model = ModelConfig::preset(ModelPreset::Tiny);
+        let mut rng = Rng::new(42);
+        let mut layer = MoeLayer::random(&model, &mut rng);
+        for r in 0..model.d_model {
+            layer.router.data[r * model.num_experts] += 3.0; // skew to E0
+        }
+        let xs: Vec<Mat> = (0..2).map(|_| Mat::randn(200, model.d_model, 0.5, &mut rng)).collect();
+
+        let unbiased = route(&layer, &xs);
+        let l0 = unbiased.load_matrix().expert_loads();
+        let ratio0 = crate::routing::imbalance_ratio(&l0);
+        assert!(ratio0 > 1.8, "skewed router must be imbalanced: {ratio0}");
+
+        let mut bias = vec![0f32; model.num_experts];
+        let mut routing = unbiased.clone();
+        for _ in 0..60 {
+            update_routing_bias(&mut bias, &routing.load_matrix().expert_loads(), 0.05);
+            routing = route_biased(&layer, &xs, &bias);
+        }
+        let l1 = routing.load_matrix().expert_loads();
+        // the hot expert demonstrably sheds load (cold-expert ties make
+        // the instantaneous max oscillate, as bias-chasing schemes do)
+        assert!(
+            l1[0] * 3 < l0[0] * 2,
+            "bias must shed hot-expert load: {} -> {}",
+            l0[0],
+            l1[0]
+        );
+
+        // ...but the computation is no longer the same model:
+        let y_unbiased = forward_reference(&layer, &xs, &unbiased);
+        let y_biased = forward_reference(&layer, &xs, &routing);
+        let diff = y_unbiased
+            .iter()
+            .zip(&y_biased)
+            .map(|(a, b)| a.rel_diff(b))
+            .fold(0f32, f32::max);
+        assert!(diff > 1e-3, "biased routing must alter outputs (diff {diff})");
+    }
+
+    #[test]
+    fn zero_bias_routing_matches_unbiased() {
+        let model = ModelConfig::preset(ModelPreset::Tiny);
+        let mut rng = Rng::new(43);
+        let layer = MoeLayer::random(&model, &mut rng);
+        let xs = vec![Mat::randn(20, model.d_model, 0.5, &mut rng)];
+        let a = route(&layer, &xs);
+        let b = route_biased(&layer, &xs, &vec![0.0; model.num_experts]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn bias_update_pushes_toward_mean() {
+        let mut bias = vec![0f32; 4];
+        update_routing_bias(&mut bias, &[100, 10, 10, 10], 0.1);
+        assert!(bias[0] < 0.0, "overloaded expert pushed down");
+        assert!(bias[1] > 0.0 && bias[2] > 0.0 && bias[3] > 0.0);
+    }
+
+    #[test]
+    fn backward_reference_zero_dy_zero_grads() {
+        let layer = tiny_layer(8);
+        let mut rng = Rng::new(9);
+        let xs = vec![Mat::randn(3, 64, 0.5, &mut rng)];
+        let routing = route(&layer, &xs);
+        let dys = vec![Mat::zeros(3, 64)];
+        let grads = backward_reference(&layer, &xs, &routing, &dys);
+        assert!(grads.iter().all(|g| g.w_gate.data.iter().all(|&v| v == 0.0)));
+    }
+}

@@ -1,0 +1,60 @@
+//! Standard expert parallelism plan (paper Alg. 1).
+//!
+//! Every expert's entire load is computed on its native device under the
+//! block layout (`M = N/P` consecutive experts per device). No weight
+//! transfers. Under imbalanced routing this is the plan whose worst
+//! device dominates the collective latency (paper §3.2).
+
+use super::{RoutePlan, Segment};
+
+/// Build the standard-EP plan for per-expert `loads`.
+///
+/// Panics if `num_experts` is not divisible by `devices` (the paper's EP
+/// assumption, enforced upstream by `ModelConfig::experts_per_device`).
+pub fn plan_ep(num_experts: usize, devices: usize, loads: &[u64]) -> RoutePlan {
+    assert_eq!(loads.len(), num_experts);
+    assert!(devices > 0 && num_experts % devices == 0, "N must divide P");
+    let m = num_experts / devices;
+    let assignments = loads
+        .iter()
+        .enumerate()
+        .map(|(e, &l)| {
+            if l == 0 {
+                Vec::new()
+            } else {
+                vec![Segment { device: e / m, start: 0, end: l, forced: false }]
+            }
+        })
+        .collect();
+    RoutePlan { num_experts, devices, assignments, transfers: Vec::new(), fallback_ep: false }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assigns_native_only() {
+        let plan = plan_ep(4, 2, &[7, 0, 3, 9]);
+        assert_eq!(plan.assignments[0], vec![Segment { device: 0, start: 0, end: 7, forced: false }]);
+        assert!(plan.assignments[1].is_empty());
+        assert_eq!(plan.assignments[2][0].device, 1);
+        assert_eq!(plan.assignments[3][0].device, 1);
+        assert!(plan.transfers.is_empty());
+        assert!(plan.is_pure_ep());
+        assert_eq!(plan.device_loads(), vec![7, 12]);
+    }
+
+    #[test]
+    fn concentrates_under_imbalance() {
+        // all load on expert 0 -> all on device 0 (the paper's failure mode)
+        let plan = plan_ep(8, 4, &[1000, 0, 0, 0, 0, 0, 0, 0]);
+        assert_eq!(plan.device_loads(), vec![1000, 0, 0, 0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_indivisible() {
+        plan_ep(5, 2, &[1; 5]);
+    }
+}

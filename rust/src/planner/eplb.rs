@@ -1,0 +1,192 @@
+//! EPLB — the DeepSeek-V3-style Expert Parallelism Load Balancer baseline
+//! (Liu et al. 2024; see paper §3.1's related-work discussion).
+//!
+//! EPLB *replicates* heavily-loaded experts on under-loaded devices based
+//! on (time-delayed) routing statistics, then splits each expert's tokens
+//! evenly across its replica set. Compared to LLEP it (a) costs extra
+//! memory for the replicas, (b) is inference-only (no gradient story),
+//! and (c) places replicas from stale statistics, so a per-batch load
+//! shift defeats it — all three effects are measurable with this
+//! implementation (see `benches/ablations.rs`).
+//!
+//! Replica weight movement is amortized (placements change rarely), so
+//! the engine charges EPLB transfers to memory but not to step latency.
+
+use super::{RoutePlan, Segment, WeightTransfer};
+
+/// Build an EPLB plan.
+///
+/// * `replicas` — replica budget (additional expert copies overall).
+/// * `loads` — the loads actually executed this step.
+/// * `stats` — the loads used for placement (pass an older batch's loads
+///   to model the time delay; pass `loads` for EPLB's best case).
+pub fn plan_eplb(
+    replicas: usize,
+    num_experts: usize,
+    devices: usize,
+    loads: &[u64],
+    stats: &[u64],
+) -> RoutePlan {
+    assert_eq!(loads.len(), num_experts);
+    assert_eq!(stats.len(), num_experts);
+    assert!(devices > 0 && num_experts % devices == 0, "N must divide P");
+    let m = num_experts / devices;
+
+    // hosts[e] = devices holding a copy of expert e (native first).
+    let mut hosts: Vec<Vec<usize>> = (0..num_experts).map(|e| vec![e / m]).collect();
+
+    for _ in 0..replicas {
+        // Projected per-device load with current replica sets.
+        let proj = projected_loads(&hosts, stats, devices);
+        // Expert with the highest per-copy share, breaking ties low-index.
+        let Some((e, _)) = hosts
+            .iter()
+            .enumerate()
+            .filter(|(e, h)| h.len() < devices && stats[*e] > 0)
+            .map(|(e, h)| (e, stats[e] as f64 / h.len() as f64))
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(b.0.cmp(&a.0)))
+        else {
+            break; // nothing left worth replicating
+        };
+        // Least-loaded device not already hosting e.
+        let d = (0..devices)
+            .filter(|d| !hosts[e].contains(d))
+            .min_by(|&a, &b| proj[a].partial_cmp(&proj[b]).unwrap())
+            .expect("filter guarantees a candidate");
+        hosts[e].push(d);
+    }
+
+    // Split each expert's *actual* load evenly (contiguous chunks) across
+    // its hosts, in host insertion order (native gets the first chunk).
+    let mut assignments: Vec<Vec<Segment>> = vec![Vec::new(); num_experts];
+    let mut transfers: Vec<WeightTransfer> = Vec::new();
+    for (e, host_list) in hosts.iter().enumerate() {
+        let l = loads[e];
+        let native = e / m;
+        for &h in host_list {
+            if h != native {
+                transfers.push(WeightTransfer { expert: e, from: native, to: h });
+            }
+        }
+        if l == 0 {
+            continue;
+        }
+        let k = host_list.len() as u64;
+        let base = l / k;
+        let extra = l % k;
+        let mut start = 0u64;
+        let mut segs = Vec::new();
+        for (i, &h) in host_list.iter().enumerate() {
+            let take = base + if (i as u64) < extra { 1 } else { 0 };
+            if take == 0 {
+                continue;
+            }
+            segs.push(Segment { device: h, start, end: start + take, forced: false });
+            start += take;
+        }
+        // Keep coverage contract: segments sorted by start already.
+        assignments[e] = segs;
+    }
+
+    // Drop transfers whose replica ended up with no tokens this step —
+    // the validator requires transfers to match non-empty segments.
+    transfers.retain(|t| {
+        assignments[t.expert].iter().any(|s| s.device == t.to)
+    });
+
+    RoutePlan { num_experts, devices, assignments, transfers, fallback_ep: false }
+}
+
+fn projected_loads(hosts: &[Vec<usize>], stats: &[u64], devices: usize) -> Vec<f64> {
+    let mut proj = vec![0.0f64; devices];
+    for (e, host_list) in hosts.iter().enumerate() {
+        let share = stats[e] as f64 / host_list.len() as f64;
+        for &h in host_list {
+            proj[h] += share;
+        }
+    }
+    proj
+}
+
+/// Bytes of replica weights resident per device (EPLB's memory overhead).
+pub fn replica_weight_bytes_per_device(
+    plan: &RoutePlan,
+    expert_weight_bytes: usize,
+) -> Vec<u64> {
+    let mut bytes = vec![0u64; plan.devices];
+    for t in &plan.transfers {
+        bytes[t.to] += expert_weight_bytes as u64;
+    }
+    bytes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::validate::validate_plan;
+
+    #[test]
+    fn zero_replicas_is_standard_ep() {
+        let loads = vec![10, 20, 30, 40];
+        let plan = plan_eplb(0, 4, 2, &loads, &loads);
+        validate_plan(&plan, &loads).unwrap();
+        assert!(plan.is_pure_ep());
+    }
+
+    #[test]
+    fn replicates_hot_expert() {
+        let loads = vec![1000, 10, 10, 10, 10, 10, 10, 10];
+        let plan = plan_eplb(3, 8, 4, &loads, &loads);
+        validate_plan(&plan, &loads).unwrap();
+        // expert 0 should have been replicated 3 times -> 4 hosts
+        assert_eq!(plan.assignments[0].len(), 4);
+        let dl = plan.device_loads();
+        assert!(*dl.iter().max().unwrap() < 1000, "spread the hot expert: {dl:?}");
+    }
+
+    #[test]
+    fn stale_stats_misplace_replicas() {
+        // Stats say expert 0 is hot, reality says expert 7.
+        let stats = {
+            let mut s = vec![10u64; 8];
+            s[0] = 1000;
+            s
+        };
+        let loads = {
+            let mut l = vec![10u64; 8];
+            l[7] = 1000;
+            l
+        };
+        let plan = plan_eplb(3, 8, 4, &loads, &stats);
+        validate_plan(&plan, &loads).unwrap();
+        let dl = plan.device_loads();
+        // Expert 7 (device 3) got no replicas -> device 3 stays overloaded.
+        assert!(dl[3] >= 1000, "stale stats leave hotspot: {dl:?}");
+    }
+
+    #[test]
+    fn replica_budget_respected() {
+        let loads = vec![100, 100, 100, 100];
+        let plan = plan_eplb(2, 4, 4, &loads, &loads);
+        validate_plan(&plan, &loads).unwrap();
+        assert!(plan.transfers.len() <= 2);
+    }
+
+    #[test]
+    fn memory_overhead_counted() {
+        let loads = vec![1000, 0, 0, 0];
+        let plan = plan_eplb(3, 4, 4, &loads, &loads);
+        let bytes = replica_weight_bytes_per_device(&plan, 100);
+        // three replicas of expert 0 on devices 1..3
+        assert_eq!(bytes.iter().sum::<u64>(), 300);
+        assert_eq!(bytes[0], 0);
+    }
+
+    #[test]
+    fn zero_load_expert_gets_no_segments() {
+        let loads = vec![0, 50, 0, 50];
+        let plan = plan_eplb(2, 4, 2, &loads, &loads);
+        validate_plan(&plan, &loads).unwrap();
+        assert!(plan.assignments[0].is_empty());
+    }
+}

@@ -1,0 +1,343 @@
+//! Least-Loaded Assignment — the paper's Alg. 2 (LLA) and Alg. 3 (LLAS).
+//!
+//! For each expert, in decreasing-load order, assign its tokens to the
+//! native device up to the capacity threshold
+//! `m_alpha = alpha * total / P`, then spill the excess in chunks to the
+//! least-loaded other devices. Chunks smaller than `m` tokens are not
+//! worth a GEMM launch + weight transfer (paper §3.2 / Fig. 8), so they
+//! are either kept local (native min-GEMM exception) or skipped for a
+//! fuller device; if nobody can take a chunk within capacity, the
+//! remainder is force-assigned to the least-loaded device (LLAS
+//! fallback), which is the only way a device may exceed `m_alpha`.
+
+use super::{RoutePlan, Segment, WeightTransfer};
+use crate::config::LlepConfig;
+use crate::topology::Topology;
+
+/// Build the LLEP plan. `topo`, when given, breaks least-loaded ties in
+/// favour of intra-node devices (paper §4 "Implementation & Optimization"
+/// — multi-node spill preference).
+pub fn plan_llep(
+    cfg: &LlepConfig,
+    num_experts: usize,
+    devices: usize,
+    loads: &[u64],
+    topo: Option<&Topology>,
+) -> RoutePlan {
+    assert_eq!(loads.len(), num_experts);
+    assert!(devices > 0 && num_experts % devices == 0, "N must divide P");
+    let m_per_dev = num_experts / devices;
+    let total: u64 = loads.iter().sum();
+    let mut plan = RoutePlan {
+        num_experts,
+        devices,
+        assignments: vec![Vec::new(); num_experts],
+        transfers: Vec::new(),
+        fallback_ep: false,
+    };
+    if total == 0 {
+        return plan;
+    }
+
+    // m_alpha: capacity threshold per device (tokens).
+    let m_alpha = cfg.alpha * total as f64 / devices as f64;
+    let min_chunk = cfg.min_gemm_tokens as u64;
+
+    // Sorted expert order, decreasing load (stable on index for ties).
+    let mut order: Vec<usize> = (0..num_experts).collect();
+    order.sort_unstable_by_key(|&e| (std::cmp::Reverse(loads[e]), e));
+
+    // Native (pending) and assigned load per device.
+    let mut g_p: Vec<u64> = vec![0; devices];
+    for (e, &l) in loads.iter().enumerate() {
+        g_p[e / m_per_dev] += l;
+    }
+    let mut g_a: Vec<u64> = vec![0; devices];
+    // Scratch reused across experts (perf: no per-expert allocs beyond
+    // the segments that end up in the plan — see EXPERIMENTS.md §Perf).
+    let mut seen: Vec<bool> = vec![false; devices];
+    let mut others_scratch: Vec<usize> = Vec::with_capacity(devices);
+
+    for &e in &order {
+        let load = loads[e];
+        let ng = e / m_per_dev;
+        g_p[ng] -= load;
+        if load == 0 {
+            continue;
+        }
+        let mut segs: Vec<Segment> = Vec::new();
+
+        // Available native capacity (may be negative).
+        let occupied = (g_a[ng] + g_p[ng]) as f64;
+        let na = (m_alpha - occupied).floor() as i64;
+
+        if na >= load as i64 {
+            // Case 1: native device takes everything. This is the common
+            // case on balanced-ish loads — no spill machinery touched.
+            segs.push(Segment { device: ng, start: 0, end: load, forced: false });
+            g_a[ng] += load;
+        } else if na > 0 {
+            // Case 2: native takes what fits; spill the rest — unless the
+            // remainder is below the min-GEMM size, in which case keeping
+            // it local beats a weight transfer (paper §4 constraint 2).
+            let nc = (na as u64).min(load);
+            let remaining = load - nc;
+            if remaining < min_chunk {
+                segs.push(Segment { device: ng, start: 0, end: load, forced: true });
+                g_a[ng] += load;
+            } else {
+                segs.push(Segment { device: ng, start: 0, end: nc, forced: false });
+                g_a[ng] += nc;
+                spill(ng, remaining, nc, &mut segs, &mut g_a, &g_p, m_alpha, min_chunk, topo, &mut others_scratch);
+            }
+        } else {
+            // Case 3: native is already at/over capacity — spill the whole
+            // expert, except tiny loads which stay local.
+            if load < min_chunk {
+                segs.push(Segment { device: ng, start: 0, end: load, forced: true });
+                g_a[ng] += load;
+            } else {
+                spill(ng, load, 0, &mut segs, &mut g_a, &g_p, m_alpha, min_chunk, topo, &mut others_scratch);
+            }
+        }
+
+        merge_adjacent(&mut segs);
+        // Record weight transfers for foreign segments (scratch `seen` is
+        // reused across experts and reset only where touched).
+        for s in &segs {
+            if s.device != ng && !seen[s.device] {
+                seen[s.device] = true;
+                plan.transfers.push(WeightTransfer { expert: e, from: ng, to: s.device });
+            }
+        }
+        for s in &segs {
+            seen[s.device] = false;
+        }
+        plan.assignments[e] = segs;
+    }
+    plan
+}
+
+/// Alg. 3 (LLAS): spill `r` remaining tokens of one expert, starting at
+/// global token offset `to`, to the least-loaded non-native devices.
+#[allow(clippy::too_many_arguments)]
+fn spill(
+    ng: usize,
+    mut r: u64,
+    mut to: u64,
+    segs: &mut Vec<Segment>,
+    g_a: &mut [u64],
+    g_p: &[u64],
+    m_alpha: f64,
+    min_chunk: u64,
+    topo: Option<&Topology>,
+    others: &mut Vec<usize>,
+) {
+    let devices = g_a.len();
+    while r > 0 {
+        // Other devices ordered by current (assigned + pending) load,
+        // intra-node peers preferred on ties when a topology is known.
+        // (Perf: `others` is caller-provided scratch; a spill loop
+        // iteration changes a single device's load, so the re-sort of a
+        // nearly-sorted short vec is cheap — see EXPERIMENTS.md §Perf.)
+        others.clear();
+        others.extend((0..devices).filter(|&d| d != ng));
+        others.sort_by_key(|&d| {
+            let inter = topo.map_or(0u8, |t| !t.same_node(ng, d) as u8);
+            (g_a[d] + g_p[d], inter, d)
+        });
+
+        let mut assigned = false;
+        for &o in others.iter() {
+            let occupied = (g_a[o] + g_p[o]) as f64;
+            let cap = (m_alpha - occupied).floor() as i64;
+            if cap <= 0 {
+                continue; // device full
+            }
+            let c = r.min(cap as u64);
+            if c < min_chunk && r > c {
+                // Chunk too small to justify a transfer + tiny GEMM, and
+                // it would not even finish the expert — skip this device.
+                continue;
+            }
+            segs.push(Segment { device: o, start: to, end: to + c, forced: false });
+            g_a[o] += c;
+            r -= c;
+            to += c;
+            assigned = true;
+            break;
+        }
+
+        if !assigned {
+            // Force-assign the entire remainder to the least-loaded other
+            // device (it will exceed m_alpha — flagged as forced).
+            let o = others[0];
+            segs.push(Segment { device: o, start: to, end: to + r, forced: true });
+            g_a[o] += r;
+            return;
+        }
+    }
+}
+
+/// Merge adjacent segments that landed on the same device. Segments are
+/// constructed in ascending token order (native first, spills at
+/// increasing offsets), so no sort is needed — asserted in debug builds.
+fn merge_adjacent(segs: &mut Vec<Segment>) {
+    debug_assert!(segs.windows(2).all(|w| w[0].start <= w[1].start));
+    let mut out: Vec<Segment> = Vec::with_capacity(segs.len());
+    for s in segs.drain(..) {
+        if let Some(last) = out.last_mut() {
+            if last.device == s.device && last.end == s.start {
+                last.end = s.end;
+                last.forced |= s.forced;
+                continue;
+            }
+        }
+        out.push(s);
+    }
+    *segs = out;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::validate::validate_plan;
+
+    fn cfg(alpha: f64, m: usize, lambda: f64) -> LlepConfig {
+        LlepConfig { alpha, min_gemm_tokens: m, lambda }
+    }
+
+    #[test]
+    fn balanced_loads_stay_native() {
+        let loads = vec![100u64; 8];
+        let plan = plan_llep(&cfg(1.0, 8, 1.3), 8, 4, &loads, None);
+        validate_plan(&plan, &loads).unwrap();
+        assert!(plan.is_pure_ep(), "{plan:?}");
+        assert_eq!(plan.device_loads(), vec![200; 4]);
+    }
+
+    #[test]
+    fn single_hot_expert_spreads_evenly() {
+        // All 1000 tokens on expert 0; 4 devices; capacity = 250 each.
+        let mut loads = vec![0u64; 8];
+        loads[0] = 1000;
+        let plan = plan_llep(&cfg(1.0, 10, 1.3), 8, 4, &loads, None);
+        validate_plan(&plan, &loads).unwrap();
+        let dl = plan.device_loads();
+        assert_eq!(dl.iter().sum::<u64>(), 1000);
+        assert_eq!(*dl.iter().max().unwrap(), 250, "{dl:?}");
+        // expert 0's weights must reach the three foreign devices
+        assert_eq!(plan.transfers.len(), 3);
+        assert!(plan.transfers.iter().all(|t| t.expert == 0 && t.from == 0));
+    }
+
+    #[test]
+    fn capacity_threshold_respected_without_force() {
+        let loads = vec![600, 10, 10, 10, 10, 10, 10, 10]; // total 670, P=4
+        let plan = plan_llep(&cfg(1.0, 1, 1.3), 8, 4, &loads, None);
+        validate_plan(&plan, &loads).unwrap();
+        let m_alpha: f64 = 670.0 / 4.0; // 167.5 -> 167 usable
+        for (d, &l) in plan.device_loads().iter().enumerate() {
+            assert!(
+                l as f64 <= m_alpha.floor() + 0.0 || plan_has_forced_on(&plan, d),
+                "device {d} over capacity: {l}"
+            );
+        }
+    }
+
+    fn plan_has_forced_on(plan: &RoutePlan, device: usize) -> bool {
+        plan.assignments.iter().flatten().any(|s| s.device == device && s.forced)
+    }
+
+    #[test]
+    fn min_chunk_keeps_small_excess_local() {
+        // Native capacity 100 (alpha=1, total=400, P=4); expert 0 has 130:
+        // the 30-token excess < m=64 stays local (forced).
+        let loads = vec![130, 90, 90, 90];
+        let plan = plan_llep(&cfg(1.0, 64, 1.3), 4, 4, &loads, None);
+        validate_plan(&plan, &loads).unwrap();
+        assert_eq!(plan.assignments[0].len(), 1);
+        assert_eq!(plan.assignments[0][0].device, 0);
+        assert!(plan.assignments[0][0].forced);
+        assert!(plan.transfers.is_empty());
+    }
+
+    #[test]
+    fn min_chunk_spills_when_excess_is_large() {
+        let loads = vec![260, 90, 90, 40];
+        // capacity = 120; excess of expert 0 = 140 >= m=64 -> spills.
+        let plan = plan_llep(&cfg(1.0, 64, 1.3), 4, 4, &loads, None);
+        validate_plan(&plan, &loads).unwrap();
+        assert!(plan.assignments[0].len() >= 2, "{:?}", plan.assignments[0]);
+        assert!(!plan.transfers.is_empty());
+    }
+
+    #[test]
+    fn force_assign_when_all_full() {
+        // alpha=1 with extreme skew: capacity 25*4=100 but one expert has
+        // 100 and every other expert adds 0 load; devices can absorb it.
+        // Harder: two experts of 100 each native to device 0; capacity 50.
+        let loads = vec![100, 100, 0, 0, 0, 0, 0, 0]; // N=8, P=4 -> M=2, both on dev0
+        let plan = plan_llep(&cfg(1.0, 1, 1.3), 8, 4, &loads, None);
+        validate_plan(&plan, &loads).unwrap();
+        let dl = plan.device_loads();
+        assert_eq!(dl.iter().sum::<u64>(), 200);
+        assert_eq!(*dl.iter().max().unwrap(), 50, "{dl:?}");
+    }
+
+    #[test]
+    fn zero_total_yields_empty_plan() {
+        let plan = plan_llep(&cfg(1.0, 16, 1.3), 4, 2, &[0, 0, 0, 0], None);
+        assert_eq!(plan.device_loads(), vec![0, 0]);
+        assert!(plan.transfers.is_empty());
+    }
+
+    #[test]
+    fn alpha_two_allows_more_local() {
+        let loads = vec![300, 50, 50, 0, 0, 0, 0, 0]; // total 400, P=4
+        // alpha=2 -> capacity 200: expert 0 spills only 100.
+        let plan = plan_llep(&cfg(2.0, 1, 1.3), 8, 4, &loads, None);
+        validate_plan(&plan, &loads).unwrap();
+        let native_part: u64 = plan.assignments[0]
+            .iter()
+            .filter(|s| s.device == 0)
+            .map(|s| s.len())
+            .sum();
+        assert!(native_part >= 200 - 100, "native keeps most: {native_part}");
+        let dl = plan.device_loads();
+        assert!(dl[0] <= 200, "{dl:?}");
+    }
+
+    #[test]
+    fn intra_node_preferred_on_ties() {
+        use crate::config::{SystemConfig, SystemPreset};
+        let topo = Topology::from_system(&SystemConfig::preset(SystemPreset::H200x16TwoNodes));
+        // Expert 0 native to device 0 (node 0); everything else idle, so
+        // all 15 other devices tie at load 0 — spill must pick node-0
+        // peers first.
+        let mut loads = vec![0u64; 16];
+        loads[0] = 16_000;
+        let plan = plan_llep(&cfg(1.0, 100, 1.3), 16, 16, &loads, Some(&topo));
+        validate_plan(&plan, &loads).unwrap();
+        for t in &plan.transfers {
+            // 1000-token capacity per device; 15 spill chunks cover nodes
+            // 0 and 1, but the first spills must be intra-node.
+            if t.to <= 7 {
+                continue;
+            }
+        }
+        // Check ordering: segments after the native one go to devices 1..8
+        // before crossing the node boundary.
+        let segs = &plan.assignments[0];
+        let first_foreign: Vec<usize> =
+            segs.iter().filter(|s| s.device != 0).map(|s| s.device).collect();
+        assert!(first_foreign[..7].iter().all(|&d| d < 8), "{first_foreign:?}");
+    }
+
+    #[test]
+    fn segments_are_contiguous_cover() {
+        let loads = vec![977, 3, 250, 41, 0, 123, 77, 529];
+        let plan = plan_llep(&cfg(1.0, 50, 1.3), 8, 4, &loads, None);
+        validate_plan(&plan, &loads).unwrap();
+    }
+}

@@ -1,0 +1,239 @@
+//! Routing planners: standard EP (paper Alg. 1), LLEP's least-loaded
+//! assignment (Alg. 2 + 3), and the EPLB redundancy baseline.
+//!
+//! A [`RoutePlan`] says, for every expert, which device computes which
+//! contiguous segment of that expert's globally-ordered tokens, plus the
+//! weight transfers needed to make that possible. Plans are *data*: the
+//! execution engine ([`crate::exec`]) interprets them, the validators
+//! ([`validate`]) check their invariants, and the cost models price them.
+
+pub mod eplb;
+pub mod placement;
+pub mod lla;
+pub mod validate;
+
+mod ep;
+
+pub use ep::plan_ep;
+pub use eplb::plan_eplb;
+pub use placement::Placement;
+pub use lla::plan_llep;
+
+use crate::config::LlepConfig;
+use crate::routing::imbalance_ratio;
+use crate::topology::Topology;
+
+/// A contiguous slice `[start, end)` of one expert's global token order,
+/// assigned to `device`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Segment {
+    pub device: usize,
+    pub start: u64,
+    pub end: u64,
+    /// True when this segment was force-assigned over capacity (LLAS
+    /// fallback) or kept local under the min-GEMM exception.
+    pub forced: bool,
+}
+
+impl Segment {
+    pub fn len(&self) -> u64 {
+        self.end - self.start
+    }
+    pub fn is_empty(&self) -> bool {
+        self.start == self.end
+    }
+}
+
+/// A weight transfer: expert `expert`'s weights move `from -> to` for this
+/// step (paper: the P2P transfer preceding foreign-expert GEMMs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WeightTransfer {
+    pub expert: usize,
+    pub from: usize,
+    pub to: usize,
+}
+
+/// A complete routing plan for one step.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RoutePlan {
+    pub num_experts: usize,
+    pub devices: usize,
+    /// Per expert: ordered, disjoint segments covering `[0, l_e)`.
+    pub assignments: Vec<Vec<Segment>>,
+    pub transfers: Vec<WeightTransfer>,
+    /// True when the lambda guard reverted to standard EP.
+    pub fallback_ep: bool,
+}
+
+impl RoutePlan {
+    /// Total tokens assigned to each device.
+    pub fn device_loads(&self) -> Vec<u64> {
+        let mut loads = vec![0u64; self.devices];
+        for segs in &self.assignments {
+            for s in segs {
+                loads[s.device] += s.len();
+            }
+        }
+        loads
+    }
+
+    /// (expert, segment) pairs computed on `device`, in expert order.
+    pub fn work_on(&self, device: usize) -> Vec<(usize, Segment)> {
+        let mut out = Vec::new();
+        for (e, segs) in self.assignments.iter().enumerate() {
+            for s in segs {
+                if s.device == device && !s.is_empty() {
+                    out.push((e, *s));
+                }
+            }
+        }
+        out
+    }
+
+    /// Experts whose weights must be present on `device` to execute this
+    /// plan (native residents are not listed — only imports).
+    pub fn imports_to(&self, device: usize) -> Vec<usize> {
+        self.transfers.iter().filter(|t| t.to == device).map(|t| t.expert).collect()
+    }
+
+    /// Number of distinct GEMM calls the plan implies (one per non-empty
+    /// (expert, device) pair).
+    pub fn gemm_calls(&self) -> usize {
+        self.assignments.iter().map(|segs| segs.iter().filter(|s| !s.is_empty()).count()).sum()
+    }
+
+    /// True when the plan is exactly "every expert entirely on its native
+    /// device" (standard EP shape).
+    pub fn is_pure_ep(&self) -> bool {
+        let m = self.num_experts / self.devices;
+        self.transfers.is_empty()
+            && self.assignments.iter().enumerate().all(|(e, segs)| {
+                segs.len() <= 1 && segs.iter().all(|s| s.device == e / m)
+            })
+    }
+}
+
+/// Which planner to run.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PlannerKind {
+    /// Paper Alg. 1: every expert computes on its native device.
+    StandardEp,
+    /// Paper Alg. 2-4 with the given hyperparameters.
+    Llep(LlepConfig),
+    /// DeepSeek-V3-style EP load balancer: up to `replicas` redundant
+    /// expert copies, placed from (possibly stale) load statistics.
+    Eplb { replicas: usize },
+    /// Chained gradient-checkpointing baseline (paper §3.1): standard EP
+    /// routing, but each device processes at most `chunk_tokens` of an
+    /// expert per GEMM, bounding activation memory at the cost of more
+    /// kernel launches. "Remains inefficient and is still constrained by
+    /// a hard memory ceiling" — quantified by the ablation bench.
+    ChunkedEp { chunk_tokens: usize },
+}
+
+impl PlannerKind {
+    /// LLEP with the paper's default hyperparameters.
+    pub fn llep_default() -> PlannerKind {
+        PlannerKind::Llep(LlepConfig::default())
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            PlannerKind::StandardEp => "EP".into(),
+            PlannerKind::Llep(c) => {
+                format!("LLEP(a={},m={},l={})", c.alpha, c.min_gemm_tokens, c.lambda)
+            }
+            PlannerKind::Eplb { replicas } => format!("EPLB(r={replicas})"),
+            PlannerKind::ChunkedEp { chunk_tokens } => format!("ChunkedEP(c={chunk_tokens})"),
+        }
+    }
+
+    /// Produce a plan for per-expert loads `loads`. `topo` enables the
+    /// intra-node spill preference; EPLB may be given stale loads via
+    /// [`PlannerKind::plan_with_stats`].
+    pub fn plan(&self, devices: usize, loads: &[u64], topo: Option<&Topology>) -> RoutePlan {
+        self.plan_with_stats(devices, loads, loads, topo)
+    }
+
+    /// Like [`plan`](Self::plan) but the placement statistics (`stats`)
+    /// may differ from the loads actually executed (`loads`) — models
+    /// EPLB's time-delayed statistics.
+    pub fn plan_with_stats(
+        &self,
+        devices: usize,
+        loads: &[u64],
+        stats: &[u64],
+        topo: Option<&Topology>,
+    ) -> RoutePlan {
+        match self {
+            PlannerKind::StandardEp => plan_ep(loads.len(), devices, loads),
+            PlannerKind::Llep(cfg) => {
+                let ratio = imbalance_ratio(loads);
+                if ratio < cfg.lambda {
+                    // Alg. 4 guard: balanced enough — standard EP.
+                    let mut p = plan_ep(loads.len(), devices, loads);
+                    p.fallback_ep = true;
+                    p
+                } else {
+                    plan_llep(cfg, loads.len(), devices, loads, topo)
+                }
+            }
+            PlannerKind::Eplb { replicas } => {
+                plan_eplb(*replicas, loads.len(), devices, loads, stats)
+            }
+            // Chunking is an execution policy, not a routing change: the
+            // plan is standard EP; the engine's pricing splits each
+            // device's GEMMs into `chunk_tokens` pieces.
+            PlannerKind::ChunkedEp { .. } => plan_ep(loads.len(), devices, loads),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seg(device: usize, start: u64, end: u64) -> Segment {
+        Segment { device, start, end, forced: false }
+    }
+
+    #[test]
+    fn device_loads_sum_segments() {
+        let plan = RoutePlan {
+            num_experts: 2,
+            devices: 2,
+            assignments: vec![vec![seg(0, 0, 10), seg(1, 10, 30)], vec![seg(1, 0, 5)]],
+            transfers: vec![WeightTransfer { expert: 0, from: 0, to: 1 }],
+            fallback_ep: false,
+        };
+        assert_eq!(plan.device_loads(), vec![10, 25]);
+        assert_eq!(plan.gemm_calls(), 3);
+        assert_eq!(plan.work_on(1), vec![(0, seg(1, 10, 30)), (1, seg(1, 0, 5))]);
+        assert_eq!(plan.imports_to(1), vec![0]);
+        assert!(!plan.is_pure_ep());
+    }
+
+    #[test]
+    fn planner_labels() {
+        assert_eq!(PlannerKind::StandardEp.label(), "EP");
+        assert!(PlannerKind::llep_default().label().starts_with("LLEP"));
+        assert_eq!(PlannerKind::Eplb { replicas: 4 }.label(), "EPLB(r=4)");
+    }
+
+    #[test]
+    fn lambda_guard_falls_back_to_ep() {
+        // perfectly balanced loads, lambda = 1.3 -> ratio 1.0 < 1.3
+        let kind = PlannerKind::llep_default();
+        let plan = kind.plan(2, &[100, 100, 100, 100], None);
+        assert!(plan.fallback_ep);
+        assert!(plan.is_pure_ep());
+        assert!(plan.transfers.is_empty());
+    }
+
+    #[test]
+    fn imbalanced_does_not_fall_back() {
+        let kind = PlannerKind::llep_default();
+        let plan = kind.plan(2, &[1000, 0, 0, 0], None);
+        assert!(!plan.fallback_ep);
+    }
+}

@@ -1,0 +1,173 @@
+//! Plan invariant checking.
+//!
+//! Every planner output must satisfy the same structural contract; the
+//! property tests drive random loads through the planners and call
+//! [`validate_plan`] on each result.
+
+use super::{RoutePlan, WeightTransfer};
+
+/// Check all structural invariants of `plan` against the loads it was
+/// built for:
+///
+/// 1. per-expert segments are ordered, non-overlapping, and exactly cover
+///    `[0, l_e)` (exactness: every token computed once);
+/// 2. segment devices are in range;
+/// 3. a weight transfer exists iff a foreign device computes a non-empty
+///    segment of that expert, and never targets the native device;
+/// 4. no duplicate transfers.
+pub fn validate_plan(plan: &RoutePlan, loads: &[u64]) -> Result<(), String> {
+    if loads.len() != plan.num_experts {
+        return Err("loads/plan expert count mismatch".into());
+    }
+    if plan.devices == 0 || plan.num_experts % plan.devices != 0 {
+        return Err("invalid device count".into());
+    }
+    let m = plan.num_experts / plan.devices;
+
+    // 1 & 2: coverage per expert.
+    for (e, segs) in plan.assignments.iter().enumerate() {
+        let mut cursor = 0u64;
+        for s in segs {
+            if s.device >= plan.devices {
+                return Err(format!("expert {e}: device {} out of range", s.device));
+            }
+            if s.start != cursor {
+                return Err(format!(
+                    "expert {e}: segment starts at {} but cursor is {cursor} (gap/overlap)",
+                    s.start
+                ));
+            }
+            if s.end <= s.start {
+                return Err(format!("expert {e}: empty/negative segment {s:?}"));
+            }
+            cursor = s.end;
+        }
+        if cursor != loads[e] {
+            return Err(format!("expert {e}: covers {cursor} of {} tokens", loads[e]));
+        }
+    }
+
+    // 3: transfers <-> foreign segments.
+    let mut needed: Vec<WeightTransfer> = Vec::new();
+    for (e, segs) in plan.assignments.iter().enumerate() {
+        let native = e / m;
+        let mut devices_seen = Vec::new();
+        for s in segs {
+            if s.device != native && !devices_seen.contains(&s.device) {
+                devices_seen.push(s.device);
+                needed.push(WeightTransfer { expert: e, from: native, to: s.device });
+            }
+        }
+    }
+    let mut have = plan.transfers.clone();
+    have.sort_by_key(|t| (t.expert, t.from, t.to));
+    let mut want = needed;
+    want.sort_by_key(|t| (t.expert, t.from, t.to));
+    // 4: duplicates would differ in length after dedup.
+    let mut have_dedup = have.clone();
+    have_dedup.dedup();
+    if have_dedup.len() != have.len() {
+        return Err("duplicate weight transfers".into());
+    }
+    if have != want {
+        return Err(format!(
+            "transfer mismatch:\n  plan: {have:?}\n  need: {want:?}"
+        ));
+    }
+    for t in &have {
+        if t.from != t.expert / m {
+            return Err(format!("transfer {t:?} does not originate from native device"));
+        }
+        if t.to == t.from {
+            return Err(format!("self transfer {t:?}"));
+        }
+    }
+    Ok(())
+}
+
+/// Additionally check the LLEP capacity contract: device loads are within
+/// `ceil(m_alpha)` except where the plan marks forced segments.
+pub fn validate_capacity(plan: &RoutePlan, loads: &[u64], alpha: f64) -> Result<(), String> {
+    if plan.fallback_ep {
+        // The lambda guard reverted to standard EP; the LLA capacity
+        // contract does not apply (paper Alg. 4 guard).
+        return Ok(());
+    }
+    let total: u64 = loads.iter().sum();
+    if total == 0 {
+        return Ok(());
+    }
+    let m_alpha = alpha * total as f64 / plan.devices as f64;
+    let device_loads = plan.device_loads();
+    for (d, &l) in device_loads.iter().enumerate() {
+        if l as f64 > m_alpha {
+            let has_forced =
+                plan.assignments.iter().flatten().any(|s| s.device == d && s.forced);
+            if !has_forced {
+                return Err(format!(
+                    "device {d} holds {l} > m_alpha {m_alpha:.1} without forced segments"
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::{plan_ep, Segment};
+
+    #[test]
+    fn ep_plan_validates() {
+        let loads = vec![5, 0, 9, 2];
+        let plan = plan_ep(4, 2, &loads);
+        validate_plan(&plan, &loads).unwrap();
+    }
+
+    #[test]
+    fn detects_gap() {
+        let loads = vec![10u64];
+        let mut plan = plan_ep(1, 1, &loads);
+        plan.assignments[0] = vec![Segment { device: 0, start: 0, end: 4, forced: false }];
+        assert!(validate_plan(&plan, &loads).unwrap_err().contains("covers 4"));
+    }
+
+    #[test]
+    fn detects_overlap() {
+        let loads = vec![10u64];
+        let mut plan = plan_ep(1, 1, &loads);
+        plan.assignments[0] = vec![
+            Segment { device: 0, start: 0, end: 6, forced: false },
+            Segment { device: 0, start: 4, end: 10, forced: false },
+        ];
+        assert!(validate_plan(&plan, &loads).is_err());
+    }
+
+    #[test]
+    fn detects_missing_transfer() {
+        let loads = vec![10u64, 0];
+        let mut plan = plan_ep(2, 2, &loads);
+        // move expert 0 to device 1 without a transfer
+        plan.assignments[0] = vec![Segment { device: 1, start: 0, end: 10, forced: false }];
+        assert!(validate_plan(&plan, &loads).unwrap_err().contains("transfer mismatch"));
+    }
+
+    #[test]
+    fn detects_spurious_transfer() {
+        let loads = vec![10u64, 0];
+        let mut plan = plan_ep(2, 2, &loads);
+        plan.transfers.push(WeightTransfer { expert: 0, from: 0, to: 1 });
+        assert!(validate_plan(&plan, &loads).is_err());
+    }
+
+    #[test]
+    fn capacity_flags_unforced_overflow() {
+        let loads = vec![100u64, 0, 0, 0];
+        let plan = plan_ep(4, 4, &loads); // EP dumps all 100 on device 0
+        // alpha=1 -> m_alpha=25; EP has no forced segments
+        assert!(validate_capacity(&plan, &loads, 1.0).is_err());
+        // huge alpha passes
+        validate_capacity(&plan, &loads, 4.0).unwrap();
+    }
+}

@@ -1,0 +1,211 @@
+//! Routing substrate: token→expert assignments, synthetic imbalance
+//! scenarios, recorded traces, and imbalance statistics.
+//!
+//! Two representations coexist:
+//!
+//! * [`Routing`] — full token-level assignments (expert ids + gates per
+//!   (token, k) slot, grouped by origin device). Used wherever numerics
+//!   must be exact (the `Native`/`Pjrt` engine backends, the tests).
+//! * [`LoadMatrix`] — per-(origin device, expert) token counts. This is
+//!   all the planner and the cost models need, so the paper-scale
+//!   benchmarks (millions of token slots) use it directly.
+
+mod scenario;
+mod stats;
+mod trace;
+
+pub use scenario::Scenario;
+pub use stats::{gpu_load_shares, imbalance_ratio, RoutingStats};
+pub use trace::{RoutingTrace, TraceBatch};
+
+/// Token-level routing for one global batch.
+///
+/// `experts[p]` and `gates[p]` are flat `B_p * K` arrays for origin device
+/// `p`, laid out token-major (slots of token `t` occupy
+/// `[t*K, (t+1)*K)`). Expert ids are global (`0..N`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Routing {
+    pub num_experts: usize,
+    pub top_k: usize,
+    pub experts: Vec<Vec<u32>>,
+    pub gates: Vec<Vec<f32>>,
+}
+
+impl Routing {
+    /// Number of origin devices.
+    pub fn devices(&self) -> usize {
+        self.experts.len()
+    }
+
+    /// Tokens on origin device `p`.
+    pub fn tokens_on(&self, p: usize) -> usize {
+        self.experts[p].len() / self.top_k
+    }
+
+    /// Total tokens across devices.
+    pub fn total_tokens(&self) -> usize {
+        (0..self.devices()).map(|p| self.tokens_on(p)).sum()
+    }
+
+    /// Collapse to per-(device, expert) counts.
+    pub fn load_matrix(&self) -> LoadMatrix {
+        let mut counts = vec![vec![0u64; self.num_experts]; self.devices()];
+        for (p, ids) in self.experts.iter().enumerate() {
+            for &e in ids {
+                counts[p][e as usize] += 1;
+            }
+        }
+        LoadMatrix { counts, top_k: self.top_k }
+    }
+
+    /// Validate structural invariants (ids in range, gate/expert lengths
+    /// match). Duplicate experts within one token are allowed: synthetic
+    /// scenarios sample slots i.i.d. (see [`Scenario`]); the engines treat
+    /// slots independently so exactness is unaffected.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.experts.len() != self.gates.len() {
+            return Err("experts/gates device count mismatch".into());
+        }
+        for (p, (ids, gs)) in self.experts.iter().zip(&self.gates).enumerate() {
+            if ids.len() != gs.len() {
+                return Err(format!("device {p}: ids/gates length mismatch"));
+            }
+            if ids.len() % self.top_k != 0 {
+                return Err(format!("device {p}: length not divisible by K"));
+            }
+            if let Some(&e) = ids.iter().find(|&&e| e as usize >= self.num_experts) {
+                return Err(format!("device {p}: expert id {e} out of range"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Per-(origin device, expert) token-slot counts.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LoadMatrix {
+    /// `counts[p][e]` = number of (token, slot) pairs on device `p` routed
+    /// to expert `e`.
+    pub counts: Vec<Vec<u64>>,
+    pub top_k: usize,
+}
+
+impl LoadMatrix {
+    pub fn devices(&self) -> usize {
+        self.counts.len()
+    }
+
+    pub fn num_experts(&self) -> usize {
+        self.counts.first().map_or(0, |c| c.len())
+    }
+
+    /// Global per-expert loads `l` (paper Alg. 2 input).
+    pub fn expert_loads(&self) -> Vec<u64> {
+        let n = self.num_experts();
+        let mut l = vec![0u64; n];
+        for row in &self.counts {
+            for (e, &c) in row.iter().enumerate() {
+                l[e] += c;
+            }
+        }
+        l
+    }
+
+    /// Total token-slot assignments.
+    pub fn total_load(&self) -> u64 {
+        self.counts.iter().map(|r| r.iter().sum::<u64>()).sum()
+    }
+
+    /// Tokens per origin device (slots / K).
+    pub fn tokens_per_device(&self) -> Vec<u64> {
+        self.counts
+            .iter()
+            .map(|r| r.iter().sum::<u64>() / self.top_k as u64)
+            .collect()
+    }
+
+    /// Load native to each device under the block expert layout
+    /// (`M = N/P` consecutive experts per device).
+    pub fn native_device_loads(&self, devices: usize) -> Vec<u64> {
+        let n = self.num_experts();
+        let m = n / devices;
+        let l = self.expert_loads();
+        (0..devices)
+            .map(|p| l[p * m..(p + 1) * m].iter().sum())
+            .collect()
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.num_experts();
+        if self.counts.iter().any(|r| r.len() != n) {
+            return Err("ragged load matrix".into());
+        }
+        if self.top_k == 0 {
+            return Err("top_k must be positive".into());
+        }
+        for (p, row) in self.counts.iter().enumerate() {
+            let total: u64 = row.iter().sum();
+            if total % self.top_k as u64 != 0 {
+                return Err(format!("device {p}: slot count {total} not divisible by K"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_routing() -> Routing {
+        // 2 devices, 2 tokens each, K=2, N=4.
+        Routing {
+            num_experts: 4,
+            top_k: 2,
+            experts: vec![vec![0, 1, 2, 3], vec![0, 2, 0, 1]],
+            gates: vec![vec![0.5, 0.5, 0.7, 0.3], vec![0.6, 0.4, 0.9, 0.1]],
+        }
+    }
+
+    #[test]
+    fn routing_accessors() {
+        let r = small_routing();
+        r.validate().unwrap();
+        assert_eq!(r.devices(), 2);
+        assert_eq!(r.tokens_on(0), 2);
+        assert_eq!(r.total_tokens(), 4);
+    }
+
+    #[test]
+    fn load_matrix_counts() {
+        let lm = small_routing().load_matrix();
+        assert_eq!(lm.counts[0], vec![1, 1, 1, 1]);
+        assert_eq!(lm.counts[1], vec![2, 1, 1, 0]);
+        assert_eq!(lm.expert_loads(), vec![3, 2, 2, 1]);
+        assert_eq!(lm.total_load(), 8);
+        assert_eq!(lm.tokens_per_device(), vec![2, 2]);
+        lm.validate().unwrap();
+    }
+
+    #[test]
+    fn native_loads_block_layout() {
+        let lm = small_routing().load_matrix();
+        // 2 devices, M=2: device0 hosts experts {0,1}, device1 {2,3}.
+        assert_eq!(lm.native_device_loads(2), vec![5, 3]);
+    }
+
+    #[test]
+    fn validate_catches_range_and_shape() {
+        let mut r = small_routing();
+        r.experts[0][1] = 0; // duplicate within a token is ALLOWED
+        r.validate().unwrap();
+
+        let mut r2 = small_routing();
+        r2.experts[1][0] = 9; // out of range
+        assert!(r2.validate().is_err());
+
+        let mut r3 = small_routing();
+        r3.gates[0].pop();
+        assert!(r3.validate().is_err());
+    }
+}

@@ -1,0 +1,294 @@
+//! Synthetic imbalance scenarios (paper §5.1 and Fig. 1/4 sweeps).
+//!
+//! The paper *simulates* "X% of tokens evenly concentrated into k
+//! imbalanced experts": routing slots are sampled i.i.d. from a skewed
+//! distribution placing mass `concentration` on the hot set (experts
+//! `0..hot_experts`, i.e. concentrated on device 0 under the block layout
+//! — the paper's observed worst case, §3.1). Unlike a real top-K router,
+//! a token's K slots may repeat an expert — the engines treat slots
+//! independently, so exactness is unaffected (the real router in
+//! [`crate::moe::route`] does produce distinct experts).
+
+use super::{LoadMatrix, Routing};
+use crate::config::ModelConfig;
+use crate::util::rng::Rng;
+
+/// A routing workload generator.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Scenario {
+    /// Statistically uniform routing (the pre-training assumption).
+    Balanced,
+    /// Fraction `concentration` of all routed load lands on
+    /// `hot_experts` experts (evenly within the hot set).
+    Concentrated { concentration: f64, hot_experts: usize },
+    /// Zipf-like decay: expert `i` has weight `(i+1)^-exponent`.
+    PowerLaw { exponent: f64 },
+    /// Fig.-3-style drift: a dominant expert takes `dominance` of the
+    /// load on average, with per-batch multiplicative noise of `drift`,
+    /// and with probability `drift` the dominant position moves.
+    Drifting { dominant: usize, dominance: f64, drift: f64 },
+}
+
+impl Scenario {
+    pub fn balanced() -> Scenario {
+        Scenario::Balanced
+    }
+    pub fn concentrated(concentration: f64, hot_experts: usize) -> Scenario {
+        assert!((0.0..=1.0).contains(&concentration));
+        assert!(hot_experts >= 1);
+        Scenario::Concentrated { concentration, hot_experts }
+    }
+    pub fn power_law(exponent: f64) -> Scenario {
+        Scenario::PowerLaw { exponent }
+    }
+    pub fn drifting(dominant: usize, dominance: f64, drift: f64) -> Scenario {
+        Scenario::Drifting { dominant, dominance, drift }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            Scenario::Balanced => "balanced".into(),
+            Scenario::Concentrated { concentration, hot_experts } => {
+                format!("{:.0}% into {}", concentration * 100.0, hot_experts)
+            }
+            Scenario::PowerLaw { exponent } => format!("powerlaw({exponent})"),
+            Scenario::Drifting { dominant, dominance, .. } => {
+                format!("drift(E{dominant}@{:.0}%)", dominance * 100.0)
+            }
+        }
+    }
+
+    /// Per-slot expert sampling weights for this scenario (normalized by
+    /// the caller). Drifting scenarios re-draw per batch via `rng`.
+    fn slot_weights(&self, n: usize, rng: &mut Rng) -> Vec<f64> {
+        match *self {
+            Scenario::Balanced => vec![1.0; n],
+            Scenario::Concentrated { concentration, hot_experts } => {
+                let hot = hot_experts.min(n);
+                let cold = n - hot;
+                (0..n)
+                    .map(|e| {
+                        if e < hot {
+                            concentration / hot as f64
+                        } else if cold > 0 {
+                            (1.0 - concentration) / cold as f64
+                        } else {
+                            0.0
+                        }
+                    })
+                    .collect()
+            }
+            Scenario::PowerLaw { exponent } => {
+                (0..n).map(|i| ((i + 1) as f64).powf(-exponent)).collect()
+            }
+            Scenario::Drifting { dominant, dominance, drift } => {
+                let dom = if rng.f64() < drift {
+                    rng.index(n)
+                } else {
+                    dominant.min(n - 1)
+                };
+                let noise = 1.0 + drift * (rng.f64() * 2.0 - 1.0);
+                let d = (dominance * noise).clamp(0.0, 0.95);
+                let mut w = vec![(1.0 - d) / (n - 1).max(1) as f64; n];
+                w[dom] = d;
+                w
+            }
+        }
+    }
+
+    /// Generate full token-level routing for `devices` origin devices with
+    /// `tokens_per_device` tokens each.
+    pub fn generate(
+        &self,
+        model: &ModelConfig,
+        devices: usize,
+        tokens_per_device: usize,
+        rng: &mut Rng,
+    ) -> Routing {
+        let n = model.num_experts;
+        let k = model.top_k;
+        assert!(k <= n);
+        let w = self.slot_weights(n, rng);
+        let mut experts = Vec::with_capacity(devices);
+        let mut gates = Vec::with_capacity(devices);
+        for _ in 0..devices {
+            let mut ids = Vec::with_capacity(tokens_per_device * k);
+            let mut gts = Vec::with_capacity(tokens_per_device * k);
+            for _ in 0..tokens_per_device {
+                for _ in 0..k {
+                    ids.push(rng.weighted(&w) as u32);
+                }
+                // gates: normalized positive weights, slot-0 heaviest
+                // (mimicking softmax top-k ordering)
+                let mut raw: Vec<f32> = (0..k).map(|_| 0.05 + rng.f32()).collect();
+                raw.sort_by(|a, b| b.partial_cmp(a).unwrap());
+                let sum: f32 = raw.iter().sum();
+                for g in raw {
+                    gts.push(g / sum);
+                }
+            }
+            experts.push(ids);
+            gates.push(gts);
+        }
+        Routing { num_experts: n, top_k: k, experts, gates }
+    }
+
+    /// Generate only the load matrix (deterministic expectation rounding;
+    /// used by the paper-scale modeled benchmarks where token identities
+    /// do not matter).
+    pub fn generate_loads(
+        &self,
+        model: &ModelConfig,
+        devices: usize,
+        tokens_per_device: usize,
+        rng: &mut Rng,
+    ) -> LoadMatrix {
+        let n = model.num_experts;
+        let k = model.top_k;
+        let w = self.slot_weights(n, rng);
+        let w_total: f64 = w.iter().sum();
+        let slots = (tokens_per_device * k) as f64;
+        let expected: Vec<f64> = w.iter().map(|&wi| slots * wi / w_total).collect();
+
+        let mut counts = Vec::with_capacity(devices);
+        for _ in 0..devices {
+            counts.push(round_to_total(&expected, (tokens_per_device * k) as u64));
+        }
+        LoadMatrix { counts, top_k: k }
+    }
+}
+
+/// Round expectations to integers preserving the exact total
+/// (largest-remainder method).
+fn round_to_total(expected: &[f64], total: u64) -> Vec<u64> {
+    let mut out: Vec<u64> = expected.iter().map(|&x| x.floor() as u64).collect();
+    let assigned: u64 = out.iter().sum();
+    debug_assert!(assigned <= total);
+    let mut remainder: Vec<(usize, f64)> = expected
+        .iter()
+        .enumerate()
+        .map(|(i, &x)| (i, x - x.floor()))
+        .collect();
+    remainder.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    let mut left = total - assigned;
+    let mut i = 0;
+    while left > 0 {
+        out[remainder[i % remainder.len()].0] += 1;
+        left -= 1;
+        i += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelConfig, ModelPreset};
+
+    fn tiny() -> ModelConfig {
+        ModelConfig::preset(ModelPreset::Tiny) // N=8, K=2
+    }
+
+    #[test]
+    fn generate_structure_valid() {
+        let mut rng = Rng::new(1);
+        for sc in [
+            Scenario::balanced(),
+            Scenario::concentrated(0.8, 2),
+            Scenario::power_law(1.2),
+            Scenario::drifting(3, 0.2, 0.1),
+        ] {
+            let r = sc.generate(&tiny(), 4, 64, &mut rng);
+            r.validate().unwrap();
+            assert_eq!(r.devices(), 4);
+            assert_eq!(r.total_tokens(), 256);
+        }
+    }
+
+    #[test]
+    fn balanced_is_roughly_uniform() {
+        let mut rng = Rng::new(2);
+        let r = Scenario::balanced().generate(&tiny(), 4, 2000, &mut rng);
+        let l = r.load_matrix().expert_loads();
+        let mean = l.iter().sum::<u64>() as f64 / l.len() as f64;
+        for &x in &l {
+            assert!((x as f64) < 1.25 * mean && (x as f64) > 0.75 * mean, "{l:?}");
+        }
+    }
+
+    #[test]
+    fn concentrated_owns_the_stated_share() {
+        let mut rng = Rng::new(3);
+        let r = Scenario::concentrated(0.9, 1).generate(&tiny(), 4, 2000, &mut rng);
+        let l = r.load_matrix().expert_loads();
+        let total: u64 = l.iter().sum();
+        let share = l[0] as f64 / total as f64;
+        assert!((share - 0.9).abs() < 0.03, "hot share {share}, loads {l:?}");
+    }
+
+    #[test]
+    fn loads_match_token_level_in_expectation() {
+        let mut rng = Rng::new(4);
+        let model = tiny();
+        let sc = Scenario::concentrated(0.8, 2);
+        let lm = sc.generate_loads(&model, 4, 4096, &mut rng);
+        lm.validate().unwrap();
+        let full = sc.generate(&model, 4, 4096, &mut rng).load_matrix();
+        let a = lm.expert_loads();
+        let b = full.expert_loads();
+        let total: u64 = a.iter().sum();
+        assert_eq!(total, b.iter().sum::<u64>());
+        for e in 0..model.num_experts {
+            let pa = a[e] as f64 / total as f64;
+            let pb = b[e] as f64 / total as f64;
+            assert!((pa - pb).abs() < 0.03, "expert {e}: {pa} vs {pb}");
+        }
+    }
+
+    #[test]
+    fn loads_exact_total() {
+        let mut rng = Rng::new(5);
+        let lm = Scenario::power_law(1.5).generate_loads(&tiny(), 8, 1000, &mut rng);
+        assert_eq!(lm.total_load(), 8 * 1000 * 2);
+        assert_eq!(lm.tokens_per_device(), vec![1000; 8]);
+    }
+
+    #[test]
+    fn round_to_total_preserves_total() {
+        let out = round_to_total(&[1.4, 2.7, 0.9], 5);
+        assert_eq!(out.iter().sum::<u64>(), 5);
+    }
+
+    #[test]
+    fn drifting_moves_the_hotspot_sometimes() {
+        let model = tiny();
+        let sc = Scenario::drifting(3, 0.4, 0.5);
+        let mut rng = Rng::new(6);
+        let mut dominants = std::collections::BTreeSet::new();
+        for _ in 0..40 {
+            let lm = sc.generate_loads(&model, 2, 512, &mut rng);
+            let l = lm.expert_loads();
+            let argmax = (0..l.len()).max_by_key(|&i| l[i]).unwrap();
+            dominants.insert(argmax);
+        }
+        assert!(dominants.contains(&3), "usually E3 dominates: {dominants:?}");
+        assert!(dominants.len() > 1, "drift relocates the hotspot: {dominants:?}");
+    }
+
+    #[test]
+    fn drifting_dominance_is_load_share() {
+        let model = tiny();
+        let mut rng = Rng::new(7);
+        let lm = Scenario::drifting(3, 0.3, 0.0).generate_loads(&model, 4, 4000, &mut rng);
+        let l = lm.expert_loads();
+        let total: u64 = l.iter().sum();
+        let share = l[3] as f64 / total as f64;
+        assert!((share - 0.3).abs() < 0.02, "share {share}");
+    }
+
+    #[test]
+    fn labels_are_descriptive() {
+        assert_eq!(Scenario::concentrated(0.95, 1).label(), "95% into 1");
+        assert_eq!(Scenario::balanced().label(), "balanced");
+    }
+}

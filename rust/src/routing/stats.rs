@@ -1,0 +1,134 @@
+//! Imbalance statistics over routings (paper §3.1, Fig. 3).
+
+use super::LoadMatrix;
+use crate::util::stats;
+
+/// The paper's imbalance ratio `max(l) / mean(l)` (Alg. 4 guard).
+pub fn imbalance_ratio(expert_loads: &[u64]) -> f64 {
+    let xs: Vec<f64> = expert_loads.iter().map(|&x| x as f64).collect();
+    stats::max_over_mean(&xs)
+}
+
+/// Per-device share of the global load under the block layout
+/// (Fig. 3b: "GPU 0 has 30-35% vs ~12.5% balanced").
+pub fn gpu_load_shares(lm: &LoadMatrix, devices: usize) -> Vec<f64> {
+    let native = lm.native_device_loads(devices);
+    let total: u64 = native.iter().sum();
+    if total == 0 {
+        return vec![0.0; devices];
+    }
+    native.iter().map(|&x| x as f64 / total as f64).collect()
+}
+
+/// Aggregated statistics across a sequence of batches.
+#[derive(Clone, Debug, Default)]
+pub struct RoutingStats {
+    /// Per-expert max share across batches (Fig. 3a plots maxima).
+    pub expert_max_share: Vec<f64>,
+    /// Per-device max share across batches (Fig. 3b).
+    pub gpu_max_share: Vec<f64>,
+    /// Imbalance ratio per batch.
+    pub ratios: Vec<f64>,
+    batches: usize,
+}
+
+impl RoutingStats {
+    pub fn new() -> RoutingStats {
+        RoutingStats::default()
+    }
+
+    pub fn observe(&mut self, lm: &LoadMatrix, devices: usize) {
+        let l = lm.expert_loads();
+        let total: u64 = l.iter().sum();
+        if self.expert_max_share.is_empty() {
+            self.expert_max_share = vec![0.0; l.len()];
+            self.gpu_max_share = vec![0.0; devices];
+        }
+        if total > 0 {
+            for (e, &x) in l.iter().enumerate() {
+                let share = x as f64 / total as f64;
+                if share > self.expert_max_share[e] {
+                    self.expert_max_share[e] = share;
+                }
+            }
+        }
+        for (p, share) in gpu_load_shares(lm, devices).into_iter().enumerate() {
+            if share > self.gpu_max_share[p] {
+                self.gpu_max_share[p] = share;
+            }
+        }
+        self.ratios.push(imbalance_ratio(&l));
+        self.batches += 1;
+    }
+
+    pub fn batches(&self) -> usize {
+        self.batches
+    }
+
+    /// Expert index with the highest max-share (the "E11" of Fig. 3a).
+    pub fn dominant_expert(&self) -> Option<usize> {
+        self.expert_max_share
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+    }
+
+    /// Device with the highest max-share (the "gpu-0" of Fig. 3b).
+    pub fn dominant_device(&self) -> Option<usize> {
+        self.gpu_max_share
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelConfig, ModelPreset};
+    use crate::routing::Scenario;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn ratio_balanced_is_one() {
+        assert!((imbalance_ratio(&[5, 5, 5, 5]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ratio_skewed() {
+        assert!((imbalance_ratio(&[8, 0, 0, 0]) - 4.0).abs() < 1e-12);
+        assert_eq!(imbalance_ratio(&[]), 0.0);
+        assert_eq!(imbalance_ratio(&[0, 0]), 0.0);
+    }
+
+    #[test]
+    fn gpu_shares_sum_to_one() {
+        let mut rng = Rng::new(1);
+        let model = ModelConfig::preset(ModelPreset::Tiny);
+        let lm = Scenario::concentrated(0.9, 1).generate_loads(&model, 4, 512, &mut rng);
+        let shares = gpu_load_shares(&lm, 4);
+        assert!((shares.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        // hot experts live on device 0
+        assert!(shares[0] > 0.3, "{shares:?}");
+    }
+
+    #[test]
+    fn stats_track_maxima_and_dominants() {
+        let model = ModelConfig::preset(ModelPreset::Tiny);
+        let sc = Scenario::drifting(3, 0.35, 0.1);
+        let mut rng = Rng::new(2);
+        let mut st = RoutingStats::new();
+        for _ in 0..20 {
+            let lm = sc.generate_loads(&model, 4, 512, &mut rng);
+            st.observe(&lm, 4);
+        }
+        assert_eq!(st.batches(), 20);
+        assert_eq!(st.dominant_expert(), Some(3));
+        // expert 3 is on device 1 (M = 2)
+        assert_eq!(st.dominant_device(), Some(1));
+        assert!(st.expert_max_share[3] > 0.2);
+        assert!(st.ratios.iter().all(|&r| r >= 1.0));
+    }
+}

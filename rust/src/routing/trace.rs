@@ -1,0 +1,152 @@
+//! Routing trace record / replay.
+//!
+//! The paper measures real gpt-oss routing over batches of math data
+//! (Fig. 3). Without the real model we record load matrices from the
+//! synthetic generators (or, in principle, from any external harness via
+//! the JSON format) and replay them deterministically into the engines.
+
+use super::LoadMatrix;
+use crate::util::json::{self, Json};
+
+/// One recorded batch.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceBatch {
+    pub load: LoadMatrix,
+}
+
+/// A sequence of recorded batches plus metadata.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RoutingTrace {
+    pub name: String,
+    pub num_experts: usize,
+    pub top_k: usize,
+    pub batches: Vec<TraceBatch>,
+}
+
+impl RoutingTrace {
+    pub fn new(name: &str, num_experts: usize, top_k: usize) -> RoutingTrace {
+        RoutingTrace { name: name.into(), num_experts, top_k, batches: Vec::new() }
+    }
+
+    pub fn push(&mut self, load: LoadMatrix) -> Result<(), String> {
+        if load.num_experts() != self.num_experts {
+            return Err(format!(
+                "batch has {} experts, trace expects {}",
+                load.num_experts(),
+                self.num_experts
+            ));
+        }
+        if load.top_k != self.top_k {
+            return Err("top_k mismatch".into());
+        }
+        load.validate()?;
+        self.batches.push(TraceBatch { load });
+        Ok(())
+    }
+
+    /// Serialize to JSON.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("num_experts", Json::num(self.num_experts as f64)),
+            ("top_k", Json::num(self.top_k as f64)),
+            (
+                "batches",
+                Json::arr(self.batches.iter().map(|b| {
+                    Json::arr(b.load.counts.iter().map(|row| {
+                        Json::arr(row.iter().map(|&c| Json::num(c as f64)))
+                    }))
+                })),
+            ),
+        ])
+    }
+
+    /// Parse from JSON text.
+    pub fn from_json_text(text: &str) -> Result<RoutingTrace, String> {
+        let v = json::parse(text)?;
+        let name = v.get("name").and_then(Json::as_str).unwrap_or("trace").to_string();
+        let num_experts =
+            v.get("num_experts").and_then(Json::as_usize).ok_or("missing num_experts")?;
+        let top_k = v.get("top_k").and_then(Json::as_usize).ok_or("missing top_k")?;
+        let mut trace = RoutingTrace::new(&name, num_experts, top_k);
+        for batch in v.get("batches").and_then(Json::as_arr).ok_or("missing batches")? {
+            let counts: Vec<Vec<u64>> = batch
+                .as_arr()
+                .ok_or("batch must be an array")?
+                .iter()
+                .map(|row| {
+                    row.as_arr()
+                        .ok_or_else(|| "row must be an array".to_string())
+                        .map(|cells| {
+                            cells.iter().map(|c| c.as_f64().unwrap_or(0.0) as u64).collect()
+                        })
+                })
+                .collect::<Result<_, String>>()?;
+            trace.push(LoadMatrix { counts, top_k })?;
+        }
+        Ok(trace)
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<RoutingTrace, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        RoutingTrace::from_json_text(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelConfig, ModelPreset};
+    use crate::routing::Scenario;
+    use crate::util::rng::Rng;
+
+    fn sample_trace() -> RoutingTrace {
+        let model = ModelConfig::preset(ModelPreset::Tiny);
+        let mut rng = Rng::new(3);
+        let mut t = RoutingTrace::new("unit", model.num_experts, model.top_k);
+        for _ in 0..5 {
+            let lm = Scenario::drifting(2, 0.3, 0.2).generate_loads(&model, 4, 128, &mut rng);
+            t.push(lm).unwrap();
+        }
+        t
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let t = sample_trace();
+        let text = t.to_json().to_string_pretty();
+        let back = RoutingTrace::from_json_text(&text).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let t = sample_trace();
+        let dir = std::env::temp_dir().join("llep_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.json");
+        t.save(&path).unwrap();
+        let back = RoutingTrace::load(&path).unwrap();
+        assert_eq!(t, back);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn push_validates_shape() {
+        let mut t = RoutingTrace::new("x", 8, 2);
+        let bad = LoadMatrix { counts: vec![vec![1; 4]], top_k: 2 };
+        assert!(t.push(bad).is_err());
+        let wrong_k = LoadMatrix { counts: vec![vec![1; 8]], top_k: 4 };
+        assert!(t.push(wrong_k).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_json() {
+        assert!(RoutingTrace::from_json_text("{}").is_err());
+        assert!(RoutingTrace::from_json_text("not json").is_err());
+    }
+}

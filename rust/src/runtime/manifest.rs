@@ -1,0 +1,119 @@
+//! Artifact manifest (`artifacts/manifest.json`), written by
+//! `python/compile/aot.py` and read by [`super::Runtime`].
+
+use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
+
+/// One AOT artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactEntry {
+    /// HLO text file, relative to the artifacts directory.
+    pub file: String,
+    /// Input shapes (row-major dims), for documentation/validation.
+    pub inputs: Vec<Vec<usize>>,
+    /// Output shapes.
+    pub outputs: Vec<Vec<usize>>,
+    /// Free-form metadata (e.g. d_model, d_ff, bucket).
+    pub meta: BTreeMap<String, f64>,
+}
+
+/// The full manifest.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Manifest {
+    pub entries: BTreeMap<String, ArtifactEntry>,
+}
+
+fn shapes_of(v: Option<&Json>) -> Result<Vec<Vec<usize>>, String> {
+    let Some(arr) = v.and_then(Json::as_arr) else {
+        return Ok(Vec::new());
+    };
+    arr.iter()
+        .map(|shape| {
+            shape
+                .as_arr()
+                .ok_or_else(|| "shape must be an array".to_string())
+                .map(|dims| dims.iter().filter_map(|d| d.as_usize()).collect())
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest, String> {
+        let v = json::parse(text)?;
+        let Json::Obj(map) = &v else {
+            return Err("manifest root must be an object".into());
+        };
+        let artifacts = map
+            .get("artifacts")
+            .ok_or("manifest missing \"artifacts\"")?;
+        let Json::Obj(arts) = artifacts else {
+            return Err("\"artifacts\" must be an object".into());
+        };
+        let mut entries = BTreeMap::new();
+        for (name, e) in arts {
+            let file = e
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("artifact {name}: missing file"))?
+                .to_string();
+            let inputs = shapes_of(e.get("inputs"))?;
+            let outputs = shapes_of(e.get("outputs"))?;
+            let mut meta = BTreeMap::new();
+            if let Some(Json::Obj(m)) = e.get("meta") {
+                for (k, val) in m {
+                    if let Some(x) = val.as_f64() {
+                        meta.insert(k.clone(), x);
+                    }
+                }
+            }
+            entries.insert(name.clone(), ArtifactEntry { file, inputs, outputs, meta });
+        }
+        Ok(Manifest { entries })
+    }
+
+    pub fn meta_usize(&self, artifact: &str, key: &str) -> Option<usize> {
+        self.entries.get(artifact)?.meta.get(key).map(|&x| x as usize)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "artifacts": {
+        "expert_ffn_b64": {
+          "file": "expert_ffn_b64.hlo.txt",
+          "inputs": [[64, 32], [32, 48], [32, 48], [48, 32]],
+          "outputs": [[64, 32]],
+          "meta": {"bucket": 64, "d_model": 32, "d_ff": 48}
+        },
+        "train_step": {
+          "file": "train_step.hlo.txt",
+          "inputs": [],
+          "outputs": [[1]],
+          "meta": {"batch": 8}
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        let e = &m.entries["expert_ffn_b64"];
+        assert_eq!(e.file, "expert_ffn_b64.hlo.txt");
+        assert_eq!(e.inputs[0], vec![64, 32]);
+        assert_eq!(e.outputs[0], vec![64, 32]);
+        assert_eq!(m.meta_usize("expert_ffn_b64", "bucket"), Some(64));
+        assert_eq!(m.meta_usize("train_step", "batch"), Some(8));
+        assert_eq!(m.meta_usize("train_step", "missing"), None);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("[]").is_err());
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"artifacts": {"x": {}}}"#).is_err());
+    }
+}

@@ -1,0 +1,214 @@
+//! PJRT runtime: loads AOT-compiled HLO **text** artifacts (produced by
+//! `python/compile/aot.py` from the JAX/Pallas layers) and executes them
+//! on the CPU PJRT client via the `xla` crate.
+//!
+//! Interchange is HLO text, not serialized protos — jax >= 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md and DESIGN.md).
+//!
+//! Python never runs at request time: once `make artifacts` has produced
+//! `artifacts/*.hlo.txt` + `manifest.json`, this module is self-contained.
+
+mod manifest;
+
+pub use manifest::{ArtifactEntry, Manifest};
+
+use crate::exec::ExpertCompute;
+use crate::moe::ExpertWeights;
+use crate::tensor::Mat;
+use anyhow::{anyhow, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A PJRT CPU runtime bound to an artifacts directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Open `dir` (must contain `manifest.json`).
+    pub fn open(dir: &Path) -> Result<Runtime> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts` first"))?;
+        let manifest = Manifest::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, dir: dir.to_path_buf(), manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Default artifacts directory: `$LLEP_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("LLEP_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact by manifest name (cached).
+    pub fn executable(&self, name: &str) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let entry = self
+            .manifest
+            .entries
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))?;
+        let path = self.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::rc::Rc::new(self.client.compile(&comp)?);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact on f32 inputs; returns all tuple outputs as
+    /// flat f32 vectors (artifacts are lowered with `return_tuple=True`).
+    pub fn execute_f32(&self, name: &str, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        let exe = self.executable(name)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, dims)| {
+                let expected: i64 = dims.iter().product();
+                anyhow::ensure!(
+                    expected as usize == data.len(),
+                    "input length {} != shape {:?}",
+                    data.len(),
+                    dims
+                );
+                Ok(xla::Literal::vec1(data).reshape(dims)?)
+            })
+            .collect::<Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        parts
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().map_err(Into::into))
+            .collect()
+    }
+
+    /// How many artifacts are registered.
+    pub fn len(&self) -> usize {
+        self.manifest.entries.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.manifest.entries.is_empty()
+    }
+}
+
+/// [`ExpertCompute`] backend running the Pallas expert-FFN artifact.
+///
+/// Artifacts are shape-specialized, so token counts are padded up to the
+/// nearest available bucket; padded rows multiply into padded outputs
+/// that are sliced away (gates are applied downstream, so padding rows
+/// never contaminate results).
+pub struct PjrtCompute<'rt> {
+    rt: &'rt Runtime,
+    /// Sorted (bucket, artifact-name) pairs for the expert FFN.
+    buckets: Vec<(usize, String)>,
+}
+
+impl<'rt> PjrtCompute<'rt> {
+    /// Collect `expert_ffn_b{N}` artifacts from the manifest.
+    pub fn new(rt: &'rt Runtime) -> Result<PjrtCompute<'rt>> {
+        let mut buckets: Vec<(usize, String)> = rt
+            .manifest
+            .entries
+            .iter()
+            .filter_map(|(name, e)| {
+                name.strip_prefix("expert_ffn_b")
+                    .and_then(|b| b.parse::<usize>().ok())
+                    .map(|b| {
+                        let _ = e;
+                        (b, name.clone())
+                    })
+            })
+            .collect();
+        buckets.sort();
+        anyhow::ensure!(!buckets.is_empty(), "no expert_ffn_b* artifacts in manifest");
+        Ok(PjrtCompute { rt, buckets })
+    }
+
+    fn bucket_for(&self, rows: usize) -> &(usize, String) {
+        self.buckets
+            .iter()
+            .find(|(b, _)| *b >= rows)
+            .unwrap_or_else(|| self.buckets.last().unwrap())
+    }
+
+    /// The FFN for arbitrary row counts: split into bucket-sized pieces.
+    fn ffn_result(&self, x: &Mat, w: &ExpertWeights) -> Result<Mat> {
+        let d = x.cols;
+        let h = w.w_gate.cols;
+        let mut out = Mat::zeros(x.rows, d);
+        let mut row = 0usize;
+        while row < x.rows {
+            let (bucket, name) = self.bucket_for(x.rows - row);
+            let take = (*bucket).min(x.rows - row);
+            // pad chunk to bucket rows
+            let mut chunk = vec![0f32; bucket * d];
+            for r in 0..take {
+                chunk[r * d..(r + 1) * d].copy_from_slice(x.row(row + r));
+            }
+            let outputs = self.rt.execute_f32(
+                name,
+                &[
+                    (&chunk, &[*bucket as i64, d as i64]),
+                    (&w.w_gate.data, &[d as i64, h as i64]),
+                    (&w.w_up.data, &[d as i64, h as i64]),
+                    (&w.w_down.data, &[h as i64, d as i64]),
+                ],
+            )?;
+            let y = &outputs[0];
+            anyhow::ensure!(y.len() == bucket * d, "unexpected output size");
+            for r in 0..take {
+                out.row_mut(row + r).copy_from_slice(&y[r * d..(r + 1) * d]);
+            }
+            row += take;
+        }
+        Ok(out)
+    }
+}
+
+impl ExpertCompute for PjrtCompute<'_> {
+    fn ffn(&self, x: &Mat, w: &ExpertWeights) -> Mat {
+        self.ffn_result(x, w).expect("PJRT expert FFN failed")
+    }
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // PJRT-dependent tests live in rust/tests/pjrt_integration.rs so they
+    // can be skipped cleanly when artifacts have not been built.
+    use super::*;
+
+    #[test]
+    fn default_dir_env_override() {
+        std::env::set_var("LLEP_ARTIFACTS", "/tmp/llep_artifacts_test");
+        assert_eq!(Runtime::default_dir(), PathBuf::from("/tmp/llep_artifacts_test"));
+        std::env::remove_var("LLEP_ARTIFACTS");
+        assert_eq!(Runtime::default_dir(), PathBuf::from("artifacts"));
+    }
+
+    #[test]
+    fn open_missing_dir_fails_helpfully() {
+        let err = match Runtime::open(Path::new("/nonexistent/llep")) {
+            Err(e) => e,
+            Ok(_) => panic!("expected failure"),
+        };
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

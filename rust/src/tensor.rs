@@ -1,0 +1,310 @@
+//! Dense row-major f32 matrices and the native GEMM used by the
+//! [`crate::exec`] `Native` backend and the [`crate::moe`] reference.
+//!
+//! The native GEMM is a cache-blocked, 8-wide-unrolled kernel — not
+//! cuBLAS, but fast enough to make measured-time experiments meaningful on
+//! CPU, and deliberately exhibiting the same qualitative property the
+//! paper's Eq. 3 models: small-`B` GEMMs amortize per-call overhead worse
+//! than large-`B` ones.
+
+/// Row-major 2-D matrix of f32.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Mat { rows, cols, data }
+    }
+
+    /// Matrix filled from a generator called in row-major order.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Mat {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// Gaussian init scaled by `scale` (for synthetic expert weights).
+    pub fn randn(rows: usize, cols: usize, scale: f32, rng: &mut crate::util::rng::Rng) -> Mat {
+        Mat::from_fn(rows, cols, |_, _| rng.normal() as f32 * scale)
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    /// Gather rows by index into a new matrix.
+    pub fn gather_rows(&self, idx: &[usize]) -> Mat {
+        let mut out = Mat::zeros(idx.len(), self.cols);
+        for (i, &r) in idx.iter().enumerate() {
+            out.row_mut(i).copy_from_slice(self.row(r));
+        }
+        out
+    }
+
+    /// Number of bytes this matrix occupies (f32 payload only).
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    /// Frobenius-norm relative difference, for approx-equality checks.
+    pub fn rel_diff(&self, other: &Mat) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let mut num = 0f64;
+        let mut den = 0f64;
+        for (a, b) in self.data.iter().zip(&other.data) {
+            num += ((a - b) * (a - b)) as f64;
+            den += (a * a + b * b) as f64;
+        }
+        if den == 0.0 {
+            0.0
+        } else {
+            (num / den).sqrt() as f32
+        }
+    }
+}
+
+/// `out += a @ b` for row-major matrices, cache-blocked.
+///
+/// The k-loop is outermost within a block so `b`'s rows stream linearly;
+/// the innermost j-loop vectorizes. Accumulating into `out` lets callers
+/// fuse the MoE gate-weighted combine without an extra pass.
+pub fn matmul_acc(a: &Mat, b: &Mat, out: &mut Mat) {
+    assert_eq!(a.cols, b.rows, "inner dims: {}x{} @ {}x{}", a.rows, a.cols, b.rows, b.cols);
+    assert_eq!(out.rows, a.rows);
+    assert_eq!(out.cols, b.cols);
+    const MC: usize = 64; // rows of a per block
+    const KC: usize = 128; // inner dim per block
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    for i0 in (0..m).step_by(MC) {
+        let i1 = (i0 + MC).min(m);
+        for k0 in (0..k).step_by(KC) {
+            let k1 = (k0 + KC).min(k);
+            for i in i0..i1 {
+                let a_row = a.row(i);
+                let out_row = out.row_mut(i);
+                // Unroll the k-loop 2x so each output chunk is loaded/
+                // stored once per pair of b rows; chunks_exact gives the
+                // compiler bound-check-free, vectorizable bodies.
+                let mut kk = k0;
+                while kk + 2 <= k1 {
+                    let aik0 = a_row[kk];
+                    let aik1 = a_row[kk + 1];
+                    let b_row0 = &b.data[kk * n..kk * n + n];
+                    let b_row1 = &b.data[(kk + 1) * n..(kk + 1) * n + n];
+                    let out_c = out_row.chunks_exact_mut(8);
+                    let rem = out_c.into_remainder().len();
+                    for ((o, b0), b1) in out_row
+                        .chunks_exact_mut(8)
+                        .zip(b_row0.chunks_exact(8))
+                        .zip(b_row1.chunks_exact(8))
+                    {
+                        for x in 0..8 {
+                            o[x] += aik0 * b0[x] + aik1 * b1[x];
+                        }
+                    }
+                    for j in n - rem..n {
+                        out_row[j] += aik0 * b_row0[j] + aik1 * b_row1[j];
+                    }
+                    kk += 2;
+                }
+                if kk < k1 {
+                    let aik = a_row[kk];
+                    let b_row = &b.data[kk * n..kk * n + n];
+                    for (o, bv) in out_row.iter_mut().zip(b_row) {
+                        *o += aik * bv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// `a @ b` returning a fresh matrix.
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    let mut out = Mat::zeros(a.rows, b.cols);
+    matmul_acc(a, b, &mut out);
+    out
+}
+
+/// `a @ b^T` returning a fresh matrix (used in backward passes).
+pub fn matmul_bt(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.cols, "a@(b^T) inner dims");
+    let mut out = Mat::zeros(a.rows, b.rows);
+    for i in 0..a.rows {
+        let a_row = a.row(i);
+        let out_row = out.row_mut(i);
+        for j in 0..b.rows {
+            let b_row = b.row(j);
+            let mut acc = 0f32;
+            for k in 0..a.cols {
+                acc += a_row[k] * b_row[k];
+            }
+            out_row[j] = acc;
+        }
+    }
+    out
+}
+
+/// `a^T @ b` accumulated into `out` (weight-gradient shape).
+pub fn matmul_at_acc(a: &Mat, b: &Mat, out: &mut Mat) {
+    assert_eq!(a.rows, b.rows, "(a^T)@b inner dims");
+    assert_eq!(out.rows, a.cols);
+    assert_eq!(out.cols, b.cols);
+    for r in 0..a.rows {
+        let a_row = a.row(r);
+        let b_row = b.row(r);
+        for i in 0..a.cols {
+            let ai = a_row[i];
+            if ai == 0.0 {
+                continue;
+            }
+            let out_row = out.row_mut(i);
+            for j in 0..b.cols {
+                out_row[j] += ai * b_row[j];
+            }
+        }
+    }
+}
+
+/// SiLU activation x * sigmoid(x).
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Derivative of SiLU.
+#[inline]
+pub fn silu_grad(x: f32) -> f32 {
+    let s = 1.0 / (1.0 + (-x).exp());
+    s * (1.0 + x * (1.0 - s))
+}
+
+/// Numerically-stable softmax over a slice, in place.
+pub fn softmax_inplace(xs: &mut [f32]) {
+    let max = xs.iter().cloned().fold(f32::MIN, f32::max);
+    let mut sum = 0f32;
+    for x in xs.iter_mut() {
+        *x = (*x - max).exp();
+        sum += *x;
+    }
+    for x in xs.iter_mut() {
+        *x /= sum;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive_matmul(a: &Mat, b: &Mat) -> Mat {
+        let mut out = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut acc = 0f32;
+                for k in 0..a.cols {
+                    acc += a.at(i, k) * b.at(k, j);
+                }
+                out.data[i * b.cols + j] = acc;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Rng::new(5);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (17, 33, 9), (64, 128, 40), (70, 130, 65)] {
+            let a = Mat::randn(m, k, 1.0, &mut rng);
+            let b = Mat::randn(k, n, 1.0, &mut rng);
+            let fast = matmul(&a, &b);
+            let slow = naive_matmul(&a, &b);
+            assert!(fast.rel_diff(&slow) < 1e-5, "({m},{k},{n}): {}", fast.rel_diff(&slow));
+        }
+    }
+
+    #[test]
+    fn matmul_acc_accumulates() {
+        let mut rng = Rng::new(6);
+        let a = Mat::randn(4, 6, 1.0, &mut rng);
+        let b = Mat::randn(6, 3, 1.0, &mut rng);
+        let mut out = matmul(&a, &b);
+        matmul_acc(&a, &b, &mut out); // out = 2 * a@b
+        let twice = Mat::from_vec(4, 3, matmul(&a, &b).data.iter().map(|x| 2.0 * x).collect());
+        assert!(out.rel_diff(&twice) < 1e-6);
+    }
+
+    #[test]
+    fn matmul_bt_matches() {
+        let mut rng = Rng::new(7);
+        let a = Mat::randn(5, 8, 1.0, &mut rng);
+        let b = Mat::randn(9, 8, 1.0, &mut rng);
+        // a @ b^T == naive(a, transpose(b))
+        let bt = Mat::from_fn(8, 9, |r, c| b.at(c, r));
+        assert!(matmul_bt(&a, &b).rel_diff(&naive_matmul(&a, &bt)) < 1e-5);
+    }
+
+    #[test]
+    fn matmul_at_matches() {
+        let mut rng = Rng::new(8);
+        let a = Mat::randn(10, 4, 1.0, &mut rng);
+        let b = Mat::randn(10, 6, 1.0, &mut rng);
+        let at = Mat::from_fn(4, 10, |r, c| a.at(c, r));
+        let mut out = Mat::zeros(4, 6);
+        matmul_at_acc(&a, &b, &mut out);
+        assert!(out.rel_diff(&naive_matmul(&at, &b)) < 1e-5);
+    }
+
+    #[test]
+    fn gather_rows_selects() {
+        let m = Mat::from_fn(4, 2, |r, c| (r * 10 + c) as f32);
+        let g = m.gather_rows(&[2, 0, 2]);
+        assert_eq!(g.data, vec![20.0, 21.0, 0.0, 1.0, 20.0, 21.0]);
+    }
+
+    #[test]
+    fn softmax_sums_to_one_and_is_stable() {
+        let mut xs = [1000.0f32, 1001.0, 1002.0];
+        softmax_inplace(&mut xs);
+        let sum: f32 = xs.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+        assert!(xs[2] > xs[1] && xs[1] > xs[0]);
+        assert!(xs.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn silu_and_grad_sane() {
+        assert!((silu(0.0)).abs() < 1e-7);
+        assert!(silu(5.0) > 4.9);
+        // finite-difference check of silu_grad
+        for &x in &[-2.0f32, -0.3, 0.0, 0.7, 3.0] {
+            let eps = 1e-3;
+            let fd = (silu(x + eps) - silu(x - eps)) / (2.0 * eps);
+            assert!((fd - silu_grad(x)).abs() < 1e-3, "x={x}");
+        }
+    }
+}

@@ -1,0 +1,122 @@
+//! Device topology: node placement and link bandwidths.
+//!
+//! Encodes which devices share a node (fast links) and provides transfer
+//! time estimates between any pair, used by the communication cost model
+//! and by the multi-node spill preference (paper §4 "Implementation &
+//! Optimization": prefer spilling to intra-node devices).
+
+use crate::config::SystemConfig;
+
+/// Topology derived from a [`SystemConfig`].
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub devices: usize,
+    pub devices_per_node: usize,
+    pub latency_s: f64,
+    pub intra_node_bw: f64,
+    pub inter_node_bw: f64,
+}
+
+impl Topology {
+    pub fn from_system(sys: &SystemConfig) -> Topology {
+        Topology {
+            devices: sys.devices,
+            devices_per_node: sys.devices_per_node,
+            latency_s: sys.comm.latency_s,
+            intra_node_bw: sys.comm.intra_node_bw,
+            inter_node_bw: sys.comm.inter_node_bw,
+        }
+    }
+
+    pub fn node_of(&self, device: usize) -> usize {
+        device / self.devices_per_node
+    }
+
+    pub fn same_node(&self, a: usize, b: usize) -> bool {
+        self.node_of(a) == self.node_of(b)
+    }
+
+    /// Point-to-point bandwidth between two devices, bytes/second.
+    pub fn bandwidth(&self, src: usize, dst: usize) -> f64 {
+        if src == dst {
+            // Local "transfer" is a no-op; model as effectively infinite.
+            f64::INFINITY
+        } else if self.same_node(src, dst) {
+            self.intra_node_bw
+        } else {
+            self.inter_node_bw
+        }
+    }
+
+    /// Time to move `bytes` from `src` to `dst`.
+    pub fn transfer_time(&self, src: usize, dst: usize, bytes: u64) -> f64 {
+        if src == dst || bytes == 0 {
+            return 0.0;
+        }
+        self.latency_s + bytes as f64 / self.bandwidth(src, dst)
+    }
+
+    /// Devices ordered by "closeness" to `from` for spill preference:
+    /// same-node devices first, then remote nodes (stable within groups).
+    pub fn spill_order(&self, from: usize) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..self.devices).filter(|&d| d != from).collect();
+        order.sort_by_key(|&d| (!self.same_node(from, d) as usize, d));
+        order
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.devices / self.devices_per_node
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{SystemConfig, SystemPreset};
+
+    fn two_node() -> Topology {
+        Topology::from_system(&SystemConfig::preset(SystemPreset::H200x16TwoNodes))
+    }
+
+    #[test]
+    fn node_membership() {
+        let t = two_node();
+        assert_eq!(t.num_nodes(), 2);
+        assert!(t.same_node(0, 7));
+        assert!(!t.same_node(0, 8));
+    }
+
+    #[test]
+    fn bandwidth_tiers() {
+        let t = two_node();
+        assert!(t.bandwidth(0, 1) > t.bandwidth(0, 9));
+        assert_eq!(t.bandwidth(3, 3), f64::INFINITY);
+    }
+
+    #[test]
+    fn transfer_time_monotone_in_bytes() {
+        let t = two_node();
+        let small = t.transfer_time(0, 1, 1 << 20);
+        let big = t.transfer_time(0, 1, 1 << 24);
+        assert!(big > small && small > 0.0);
+        assert_eq!(t.transfer_time(0, 0, 1 << 20), 0.0);
+        assert_eq!(t.transfer_time(0, 1, 0), 0.0);
+    }
+
+    #[test]
+    fn inter_node_slower() {
+        let t = two_node();
+        assert!(t.transfer_time(0, 9, 1 << 24) > t.transfer_time(0, 1, 1 << 24));
+    }
+
+    #[test]
+    fn spill_order_prefers_intra_node() {
+        let t = two_node();
+        let order = t.spill_order(2);
+        assert_eq!(order.len(), 15);
+        assert!(!order.contains(&2));
+        // first 7 entries are node-0 peers
+        assert!(order[..7].iter().all(|&d| t.same_node(2, d)));
+        assert!(order[7..].iter().all(|&d| !t.same_node(2, d)));
+    }
+}

@@ -1,0 +1,248 @@
+//! Training loop driving the AOT-compiled `train_step` artifact — the
+//! Fig.-5 experiment (EP vs LLEP wall-clock during fine-tuning) on the
+//! tiny MoE transformer defined in `python/compile/model.py`.
+//!
+//! The JAX train step (fwd + bwd + SGD update, lowered once to HLO) is
+//! executed from rust via PJRT; python is not involved at run time. The
+//! step also returns per-expert routed-token counts, which feed the
+//! EP/LLEP engines to compute each policy's virtual step latency — the
+//! identical loss curve is then plotted against two different wall
+//! clocks, exactly the comparison of paper Fig. 5.
+
+use crate::exec::Engine;
+use crate::planner::PlannerKind;
+use crate::routing::LoadMatrix;
+use crate::runtime::Runtime;
+use crate::util::rng::Rng;
+use anyhow::{anyhow, Context, Result};
+
+/// Output of one training step.
+#[derive(Clone, Debug)]
+pub struct TrainStepOut {
+    pub loss: f32,
+    /// Global per-expert routed token counts (summed over MoE layers).
+    pub expert_counts: Vec<u64>,
+}
+
+/// One point of the Fig.-5 curve.
+#[derive(Clone, Debug)]
+pub struct CurvePoint {
+    pub step: usize,
+    pub loss: f32,
+    /// Cumulative virtual wall-clock under standard EP.
+    pub wall_ep_s: f64,
+    /// Cumulative virtual wall-clock under LLEP.
+    pub wall_llep_s: f64,
+    /// Measured (real) per-step execution time of the PJRT train step.
+    pub measured_step_s: f64,
+}
+
+/// Trainer state: parameters live in rust between steps.
+pub struct Trainer<'rt> {
+    rt: &'rt Runtime,
+    pub params: Vec<Vec<f32>>,
+    param_shapes: Vec<Vec<usize>>,
+    pub batch: usize,
+    pub seq: usize,
+    pub vocab: usize,
+    pub num_experts: usize,
+}
+
+impl<'rt> Trainer<'rt> {
+    /// Initialize from the artifact manifest: reads geometry metadata and
+    /// runs the `init_params` artifact for the initial parameter values.
+    pub fn new(rt: &'rt Runtime, seed: f32) -> Result<Trainer<'rt>> {
+        let entry = rt
+            .manifest
+            .entries
+            .get("train_step")
+            .ok_or_else(|| anyhow!("train_step artifact missing — run `make artifacts`"))?;
+        let meta = |k: &str| {
+            entry
+                .meta
+                .get(k)
+                .map(|&x| x as usize)
+                .ok_or_else(|| anyhow!("train_step meta missing {k}"))
+        };
+        let num_params = meta("num_params")?;
+        let batch = meta("batch")?;
+        let seq = meta("seq")?;
+        let vocab = meta("vocab")?;
+        let num_experts = meta("num_experts")?;
+        let param_shapes: Vec<Vec<usize>> = entry.inputs[..num_params].to_vec();
+
+        let init = rt
+            .execute_f32("init_params", &[(&[seed], &[])])
+            .context("running init_params artifact")?;
+        anyhow::ensure!(init.len() == num_params, "init_params arity mismatch");
+        for (i, (p, s)) in init.iter().zip(&param_shapes).enumerate() {
+            let want: usize = s.iter().product();
+            anyhow::ensure!(p.len() == want, "param {i}: {} != {:?}", p.len(), s);
+        }
+
+        Ok(Trainer { rt, params: init, param_shapes, batch, seq, vocab, num_experts })
+    }
+
+    /// Synthetic next-token task: mostly-deterministic affine cycle over
+    /// the vocabulary with 10% noise — learnable in a few hundred steps.
+    pub fn make_batch(&self, rng: &mut Rng) -> (Vec<f32>, Vec<f32>) {
+        let mut x = Vec::with_capacity(self.batch * self.seq);
+        let mut y = Vec::with_capacity(self.batch * self.seq);
+        for _ in 0..self.batch {
+            let mut tok = rng.index(self.vocab);
+            for _ in 0..self.seq {
+                x.push(tok as f32);
+                let next = if rng.f64() < 0.9 {
+                    (3 * tok + 1) % self.vocab
+                } else {
+                    rng.index(self.vocab)
+                };
+                y.push(next as f32);
+                tok = next;
+            }
+        }
+        (x, y)
+    }
+
+    /// Execute one train step; updates parameters in place.
+    pub fn step(&mut self, x: &[f32], y: &[f32]) -> Result<TrainStepOut> {
+        anyhow::ensure!(x.len() == self.batch * self.seq, "x shape");
+        anyhow::ensure!(y.len() == self.batch * self.seq, "y shape");
+        let dims = [self.batch as i64, self.seq as i64];
+        let mut inputs: Vec<(&[f32], &[i64])> = Vec::with_capacity(self.params.len() + 2);
+        // own the i64 shape buffers for the params
+        let shapes: Vec<Vec<i64>> = self
+            .param_shapes
+            .iter()
+            .map(|s| s.iter().map(|&d| d as i64).collect())
+            .collect();
+        for (p, s) in self.params.iter().zip(&shapes) {
+            inputs.push((p.as_slice(), s.as_slice()));
+        }
+        inputs.push((x, &dims));
+        inputs.push((y, &dims));
+
+        let mut outputs = self.rt.execute_f32("train_step", &inputs)?;
+        anyhow::ensure!(
+            outputs.len() == self.params.len() + 2,
+            "train_step returned {} outputs, expected {}",
+            outputs.len(),
+            self.params.len() + 2
+        );
+        let counts_f = outputs.pop().unwrap();
+        let loss = outputs[0][0];
+        for (i, new_p) in outputs.drain(..).skip(1).enumerate() {
+            self.params[i] = new_p;
+        }
+        let expert_counts: Vec<u64> = counts_f.iter().map(|&c| c.max(0.0) as u64).collect();
+        anyhow::ensure!(expert_counts.len() == self.num_experts, "counts arity");
+        Ok(TrainStepOut { loss, expert_counts })
+    }
+
+    /// See [`counts_to_load_matrix`].
+    pub fn counts_to_loads(&self, counts: &[u64], devices: usize, top_k: usize) -> LoadMatrix {
+        counts_to_load_matrix(counts, devices, top_k)
+    }
+
+    /// Run `steps` training steps, producing the Fig.-5 curve: identical
+    /// losses, EP vs LLEP cumulative virtual wall-clock.
+    pub fn run_curve(
+        &mut self,
+        steps: usize,
+        engine: &Engine,
+        rng: &mut Rng,
+        mut on_step: impl FnMut(&CurvePoint),
+    ) -> Result<Vec<CurvePoint>> {
+        let mut curve = Vec::with_capacity(steps);
+        let mut wall_ep = 0.0f64;
+        let mut wall_llep = 0.0f64;
+        let top_k = 2; // tiny model's K (see python/compile/model.py)
+        for step in 0..steps {
+            let (x, y) = self.make_batch(rng);
+            let t0 = std::time::Instant::now();
+            let out = self.step(&x, &y)?;
+            let measured = t0.elapsed().as_secs_f64();
+            let lm = self.counts_to_loads(&out.expert_counts, engine.system.devices, top_k);
+            // fwd + bwd ~ 3x fwd FLOPs: scale the MoE-layer latency by 3.
+            // min_gemm_tokens is tuned to the tiny workload (paper §4:
+            // "tune these values for each use case") — the default m=1024
+            // exceeds the whole per-expert load at this scale and would
+            // disable spilling entirely.
+            let llep_cfg = crate::config::LlepConfig {
+                alpha: 1.0,
+                min_gemm_tokens: 16,
+                lambda: 1.3,
+            };
+            let ep = engine.run_step_loads(&lm, &PlannerKind::StandardEp);
+            let ll = engine.run_step_loads(&lm, &PlannerKind::Llep(llep_cfg));
+            wall_ep += 3.0 * ep.latency_s;
+            wall_llep += 3.0 * ll.latency_s;
+            let point = CurvePoint {
+                step,
+                loss: out.loss,
+                wall_ep_s: wall_ep,
+                wall_llep_s: wall_llep,
+                measured_step_s: measured,
+            };
+            on_step(&point);
+            curve.push(point);
+        }
+        Ok(curve)
+    }
+}
+
+/// Turn global expert counts into a per-device load matrix (tokens
+/// assumed evenly originated across devices; remainders land on device
+/// 0), padded so each device's slot total is a K-multiple.
+pub fn counts_to_load_matrix(counts: &[u64], devices: usize, top_k: usize) -> LoadMatrix {
+    let per_dev: Vec<Vec<u64>> = (0..devices)
+        .map(|p| {
+            counts
+                .iter()
+                .map(|&c| c / devices as u64 + u64::from(p == 0) * (c % devices as u64))
+                .collect()
+        })
+        .collect();
+    // pad device 0 so each device's total is a K-multiple
+    let mut counts = per_dev;
+    for row in counts.iter_mut() {
+        let total: u64 = row.iter().sum();
+        let rem = total % top_k as u64;
+        if rem != 0 {
+            row[0] += top_k as u64 - rem;
+        }
+    }
+    LoadMatrix { counts, top_k }
+}
+
+#[cfg(test)]
+mod tests {
+    // Runtime-dependent tests live in rust/tests/pjrt_integration.rs;
+    // here we test the pure helpers.
+    use super::*;
+
+    #[test]
+    fn counts_to_loads_rounds_to_k() {
+        let lm = counts_to_load_matrix(&[10, 3, 0, 5], 4, 2);
+        lm.validate().unwrap();
+        assert!(lm.total_load() >= 18);
+        assert_eq!(lm.total_load() % 2, 0);
+        assert_eq!(lm.devices(), 4);
+    }
+
+    #[test]
+    fn counts_remainders_on_device_zero() {
+        // 10 = 4*2 + 2: device 0 gets 2 + 2 extra, others get 2 each.
+        let lm = counts_to_load_matrix(&[10, 0], 4, 1);
+        assert_eq!(lm.counts[0][0], 4);
+        assert_eq!(lm.counts[1][0], 2);
+        assert_eq!(lm.expert_loads(), vec![10, 0]);
+    }
+
+    #[test]
+    fn counts_preserve_imbalance_ratio() {
+        let lm = counts_to_load_matrix(&[800, 100, 60, 40], 4, 2);
+        let l = lm.expert_loads();
+        assert!(crate::routing::imbalance_ratio(&l) > 2.0);
+    }
+}

@@ -1,0 +1,176 @@
+//! Criterion-style micro-benchmark kit (criterion is unavailable offline).
+//!
+//! Measures wall-clock time of a closure with warmup, adaptive iteration
+//! counts, and outlier-robust statistics. Used by every `rust/benches/`
+//! target (all declared with `harness = false`).
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+pub use std::hint::black_box as bb;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub min_ns: f64,
+    pub stddev_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean_s(&self) -> f64 {
+        self.mean_ns / 1e9
+    }
+    /// Human-readable time with adaptive unit.
+    pub fn pretty_mean(&self) -> String {
+        format_ns(self.mean_ns)
+    }
+}
+
+/// Format nanoseconds with an adaptive unit.
+pub fn format_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.3} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner with a fixed measurement budget per case.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_samples: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        // Keep budgets modest: the suite runs on one CPU core.
+        Bencher {
+            warmup: Duration::from_millis(150),
+            measure: Duration::from_millis(600),
+            min_samples: 10,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quick-mode bencher for CI-style smoke runs.
+    pub fn quick() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(20),
+            measure: Duration::from_millis(100),
+            min_samples: 5,
+            results: Vec::new(),
+        }
+    }
+
+    /// Benchmark `f`, which should return a value dependent on its work
+    /// (it is black-boxed here to stop the optimizer eliding it).
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> BenchResult {
+        // Warmup + estimate per-iteration cost.
+        let warm_start = Instant::now();
+        let mut warm_iters = 0u64;
+        while warm_start.elapsed() < self.warmup || warm_iters < 3 {
+            black_box(f());
+            warm_iters += 1;
+            if warm_iters > 1_000_000 {
+                break;
+            }
+        }
+        let per_iter = warm_start.elapsed().as_nanos() as f64 / warm_iters as f64;
+
+        // Pick a batch size so each sample takes ~ measure/samples.
+        let target_sample_ns = self.measure.as_nanos() as f64 / self.min_samples as f64;
+        let batch = ((target_sample_ns / per_iter.max(1.0)).ceil() as u64).clamp(1, 1_000_000);
+
+        let mut samples_ns: Vec<f64> = Vec::with_capacity(self.min_samples * 2);
+        let total_start = Instant::now();
+        let mut iters = 0u64;
+        while total_start.elapsed() < self.measure || samples_ns.len() < self.min_samples {
+            let t = Instant::now();
+            for _ in 0..batch {
+                black_box(f());
+            }
+            samples_ns.push(t.elapsed().as_nanos() as f64 / batch as f64);
+            iters += batch;
+            if samples_ns.len() >= 10_000 {
+                break;
+            }
+        }
+
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples_ns.len();
+        let mean = samples_ns.iter().sum::<f64>() / n as f64;
+        let var = samples_ns.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let result = BenchResult {
+            name: name.to_string(),
+            iters,
+            mean_ns: mean,
+            median_ns: samples_ns[n / 2],
+            min_ns: samples_ns[0],
+            stddev_ns: var.sqrt(),
+        };
+        println!(
+            "bench {:<52} {:>12} (median {:>12}, min {:>12}, {} iters)",
+            result.name,
+            format_ns(result.mean_ns),
+            format_ns(result.median_ns),
+            format_ns(result.min_ns),
+            result.iters
+        );
+        self.results.push(result.clone());
+        result
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+/// True when `--quick` was passed or `LLEP_BENCH_QUICK` is set — benches use
+/// this to shrink sweeps on slow machines.
+pub fn quick_requested() -> bool {
+    std::env::args().any(|a| a == "--quick") || std::env::var("LLEP_BENCH_QUICK").is_ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let mut b = Bencher::quick();
+        let r = b.bench("spin", || {
+            let mut acc = 0u64;
+            for i in 0..100u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.iters >= 3);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn format_units() {
+        assert!(format_ns(5.0).ends_with("ns"));
+        assert!(format_ns(5_000.0).ends_with("µs"));
+        assert!(format_ns(5_000_000.0).ends_with("ms"));
+        assert!(format_ns(5e9).ends_with(" s"));
+    }
+}

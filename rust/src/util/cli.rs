@@ -1,0 +1,173 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `prog <subcommand> [--flag] [--key value] [--key=value]
+//! [positional...]`. Unknown flags are an error so typos do not silently
+//! change experiment parameters.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+/// Specification of accepted options/flags for validation + help.
+#[derive(Clone, Debug, Default)]
+pub struct Spec {
+    /// (name, takes_value, help)
+    pub opts: Vec<(&'static str, bool, &'static str)>,
+}
+
+impl Spec {
+    pub fn new() -> Spec {
+        Spec::default()
+    }
+    pub fn opt(mut self, name: &'static str, help: &'static str) -> Spec {
+        self.opts.push((name, true, help));
+        self
+    }
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Spec {
+        self.opts.push((name, false, help));
+        self
+    }
+    pub fn help(&self) -> String {
+        let mut s = String::new();
+        for (name, takes, help) in &self.opts {
+            s.push_str(&format!(
+                "  --{}{}\n      {}\n",
+                name,
+                if *takes { " <value>" } else { "" },
+                help
+            ));
+        }
+        s
+    }
+
+    /// Parse `argv` (without the program name) against this spec. The first
+    /// non-flag token becomes the subcommand if `with_subcommand`.
+    pub fn parse(&self, argv: &[String], with_subcommand: bool) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(body) = tok.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|(n, _, _)| *n == name)
+                    .ok_or_else(|| format!("unknown option --{name}"))?;
+                if spec.1 {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{name} requires a value"))?
+                        }
+                    };
+                    out.options.insert(name, val);
+                } else {
+                    if inline_val.is_some() {
+                        return Err(format!("--{name} takes no value"));
+                    }
+                    out.flags.push(name);
+                }
+            } else if with_subcommand && out.subcommand.is_none() {
+                out.subcommand = Some(tok.clone());
+            } else {
+                out.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<usize>()
+                .map_err(|_| format!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<f64>()
+                .map_err(|_| format!("--{name} expects a number, got {v:?}")),
+        }
+    }
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    fn spec() -> Spec {
+        Spec::new()
+            .opt("fig", "figure id")
+            .opt("devices", "EP world size")
+            .opt("alpha", "capacity factor")
+            .flag("verbose", "chatty output")
+    }
+
+    #[test]
+    fn parses_subcommand_opts_flags() {
+        let a = spec()
+            .parse(&argv(&["figures", "--fig", "1a", "--devices=8", "--verbose", "extra"]), true)
+            .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("figures"));
+        assert_eq!(a.get("fig"), Some("1a"));
+        assert_eq!(a.get_usize("devices", 4).unwrap(), 8);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["extra".to_string()]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = spec().parse(&argv(&["run"]), true).unwrap();
+        assert_eq!(a.get_usize("devices", 8).unwrap(), 8);
+        assert_eq!(a.get_f64("alpha", 1.0).unwrap(), 1.0);
+        assert!(!a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn rejects_unknown_and_missing_value() {
+        assert!(spec().parse(&argv(&["--bogus"]), false).is_err());
+        assert!(spec().parse(&argv(&["--fig"]), false).is_err());
+        assert!(spec().parse(&argv(&["--verbose=yes"]), false).is_err());
+        assert!(spec().parse(&argv(&["--devices", "x"]), false).unwrap().get_usize("devices", 1).is_err());
+    }
+
+    #[test]
+    fn help_lists_options() {
+        let h = spec().help();
+        assert!(h.contains("--fig <value>"));
+        assert!(h.contains("--verbose\n"));
+    }
+}

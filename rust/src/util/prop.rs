@@ -1,0 +1,125 @@
+//! Property-testing driver (proptest is unavailable offline).
+//!
+//! [`check`] runs a property over `cases` randomly generated inputs and, on
+//! failure, greedily shrinks the failing input via a user-supplied
+//! shrinker before reporting. Inputs are produced from a seeded [`Rng`] so
+//! failures are reproducible: the failing seed is printed and can be
+//! replayed with `check_seeded`.
+
+use crate::util::rng::Rng;
+
+/// Outcome of a property run.
+#[derive(Debug)]
+pub struct Failure<T: std::fmt::Debug> {
+    pub seed: u64,
+    pub case: usize,
+    pub input: T,
+    pub message: String,
+}
+
+/// Run `property` over `cases` inputs drawn by `gen`. Returns the first
+/// (shrunk) failure, or `None` if all cases pass.
+pub fn check<T, G, P, S>(
+    base_seed: u64,
+    cases: usize,
+    mut gen: G,
+    mut property: P,
+    mut shrink: S,
+) -> Option<Failure<T>>
+where
+    T: Clone + std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+    S: FnMut(&T) -> Vec<T>,
+{
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = property(&input) {
+            // Greedy shrink: repeatedly take the first smaller input that
+            // still fails, up to a budget.
+            let mut best = input;
+            let mut best_msg = msg;
+            let mut budget = 200;
+            'outer: while budget > 0 {
+                for cand in shrink(&best) {
+                    budget -= 1;
+                    if budget == 0 {
+                        break 'outer;
+                    }
+                    if let Err(m) = property(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            return Some(Failure { seed, case, input: best, message: best_msg });
+        }
+    }
+    None
+}
+
+/// Assert-style wrapper: panics with a reproducible report on failure.
+pub fn assert_property<T, G, P, S>(name: &str, base_seed: u64, cases: usize, gen: G, property: P, shrink: S)
+where
+    T: Clone + std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+    S: FnMut(&T) -> Vec<T>,
+{
+    if let Some(f) = check(base_seed, cases, gen, property, shrink) {
+        panic!(
+            "property {name:?} failed (case {} seed {:#x}):\n  input: {:?}\n  error: {}",
+            f.case, f.seed, f.input, f.message
+        );
+    }
+}
+
+/// No-op shrinker for inputs that are cheap enough to debug raw.
+pub fn no_shrink<T: Clone>(_: &T) -> Vec<T> {
+    Vec::new()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_returns_none() {
+        let r = check(
+            1,
+            100,
+            |rng| rng.index(1000),
+            |&x| if x < 1000 { Ok(()) } else { Err("out of range".into()) },
+            no_shrink,
+        );
+        assert!(r.is_none());
+    }
+
+    #[test]
+    fn failing_property_is_caught_and_shrunk() {
+        // Property: x < 50. Generator can produce up to 999. Shrinker
+        // halves. The shrunk counterexample should land near the boundary.
+        let r = check(
+            2,
+            200,
+            |rng| rng.index(1000),
+            |&x| if x < 50 { Ok(()) } else { Err(format!("{x} >= 50")) },
+            |&x| if x > 0 { vec![x / 2, x - 1] } else { vec![] },
+        )
+        .expect("must fail");
+        assert!(r.input >= 50, "shrunk input still fails: {}", r.input);
+        assert!(r.input <= 60, "shrunk close to boundary: {}", r.input);
+    }
+
+    #[test]
+    fn seeds_are_deterministic() {
+        let gen = |rng: &mut Rng| rng.index(1_000_000);
+        let f1 = check(7, 50, gen, |&x| if x % 3 != 0 { Ok(()) } else { Err("div3".into()) }, no_shrink);
+        let f2 = check(7, 50, gen, |&x| if x % 3 != 0 { Ok(()) } else { Err("div3".into()) }, no_shrink);
+        assert_eq!(f1.map(|f| f.input), f2.map(|f| f.input));
+    }
+}

@@ -1,0 +1,140 @@
+//! Summary statistics over timing / load samples.
+
+/// Summary of a sample set (times, loads, ...).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    /// Compute a summary; `samples` need not be sorted. Empty input yields
+    /// an all-zero summary.
+    pub fn of(samples: &[f64]) -> Summary {
+        if samples.is_empty() {
+            return Summary { n: 0, mean: 0.0, std: 0.0, min: 0.0, p50: 0.0, p90: 0.0, p99: 0.0, max: 0.0 };
+        }
+        let mut s: Vec<f64> = samples.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = s.len();
+        let mean = s.iter().sum::<f64>() / n as f64;
+        let var = s.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: s[0],
+            p50: percentile_sorted(&s, 0.50),
+            p90: percentile_sorted(&s, 0.90),
+            p99: percentile_sorted(&s, 0.99),
+            max: s[n - 1],
+        }
+    }
+}
+
+/// Linear-interpolated percentile of an ascending-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let q = q.clamp(0.0, 1.0);
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = pos - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Maximum / mean ratio — the paper's imbalance statistic (Alg. 4 guard).
+pub fn max_over_mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+    if mean == 0.0 {
+        return 0.0;
+    }
+    xs.iter().cloned().fold(f64::MIN, f64::max) / mean
+}
+
+/// Shannon entropy of a (possibly unnormalized) non-negative distribution,
+/// in nats. Used as an auxiliary imbalance diagnostic.
+pub fn entropy(xs: &[f64]) -> f64 {
+    let total: f64 = xs.iter().sum();
+    if total <= 0.0 {
+        return 0.0;
+    }
+    -xs.iter()
+        .filter(|&&x| x > 0.0)
+        .map(|&x| {
+            let p = x / total;
+            p * p.ln()
+        })
+        .sum::<f64>()
+}
+
+/// Coefficient of variation (std / mean).
+pub fn cv(xs: &[f64]) -> f64 {
+    let s = Summary::of(xs);
+    if s.mean == 0.0 { 0.0 } else { s.std / s.mean }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.p50 - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_empty() {
+        let s = Summary::of(&[]);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.mean, 0.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let s = [0.0, 10.0];
+        assert!((percentile_sorted(&s, 0.5) - 5.0).abs() < 1e-12);
+        assert_eq!(percentile_sorted(&s, 0.0), 0.0);
+        assert_eq!(percentile_sorted(&s, 1.0), 10.0);
+    }
+
+    #[test]
+    fn max_over_mean_balanced_is_one() {
+        assert!((max_over_mean(&[2.0, 2.0, 2.0]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn max_over_mean_skewed() {
+        // one element has everything: max/mean = n
+        assert!((max_over_mean(&[4.0, 0.0, 0.0, 0.0]) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn entropy_uniform_is_ln_n() {
+        let e = entropy(&[1.0; 8]);
+        assert!((e - (8f64).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn entropy_delta_is_zero() {
+        assert_eq!(entropy(&[5.0, 0.0, 0.0]), 0.0);
+    }
+}

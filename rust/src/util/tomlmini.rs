@@ -1,0 +1,238 @@
+//! TOML-subset parser for configuration files.
+//!
+//! Supports the subset the config system needs: `[table]` and
+//! `[table.subtable]` headers, `key = value` with string / integer / float
+//! / bool / homogeneous-array values, comments, and bare or quoted keys.
+//! Not supported (rejected, never silently misparsed): inline tables,
+//! arrays-of-tables, multi-line strings, datetimes.
+
+use std::collections::BTreeMap;
+
+/// A parsed TOML value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(x) => Some(*x),
+            _ => None,
+        }
+    }
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|x| usize::try_from(x).ok())
+    }
+    /// Floats accept integer literals too (`alpha = 1` parses as 1.0).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(x) => Some(*x),
+            Value::Int(x) => Some(*x as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: dotted-path table name -> key -> value. The root
+/// table is the empty string.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Doc {
+    pub tables: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Doc {
+    /// Look up `key` in `table` ("" for root).
+    pub fn get(&self, table: &str, key: &str) -> Option<&Value> {
+        self.tables.get(table).and_then(|t| t.get(key))
+    }
+
+    /// All keys of a table, if present.
+    pub fn table(&self, table: &str) -> Option<&BTreeMap<String, Value>> {
+        self.tables.get(table)
+    }
+}
+
+/// Parse a TOML-subset document.
+pub fn parse(text: &str) -> Result<Doc, String> {
+    let mut doc = Doc::default();
+    let mut current = String::new();
+    doc.tables.entry(current.clone()).or_default();
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            if line.starts_with("[[") {
+                return Err(format!("line {}: arrays of tables unsupported", lineno + 1));
+            }
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| format!("line {}: unterminated table header", lineno + 1))?
+                .trim();
+            if name.is_empty() {
+                return Err(format!("line {}: empty table name", lineno + 1));
+            }
+            current = name.to_string();
+            doc.tables.entry(current.clone()).or_default();
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+        let key = line[..eq].trim().trim_matches('"').to_string();
+        if key.is_empty() {
+            return Err(format!("line {}: empty key", lineno + 1));
+        }
+        let value = parse_value(line[eq + 1..].trim())
+            .map_err(|e| format!("line {}: {}", lineno + 1, e))?;
+        doc.tables.get_mut(&current).unwrap().insert(key, value);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' outside of a string starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("missing value".into());
+    }
+    if let Some(body) = s.strip_prefix('"') {
+        let body = body.strip_suffix('"').ok_or("unterminated string")?;
+        if body.contains('"') {
+            return Err("embedded quotes unsupported".into());
+        }
+        return Ok(Value::Str(body.replace("\\n", "\n").replace("\\t", "\t")));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let body = body.strip_suffix(']').ok_or("unterminated array")?.trim();
+        if body.is_empty() {
+            return Ok(Value::Arr(vec![]));
+        }
+        let items: Result<Vec<Value>, String> =
+            body.split(',').map(|p| parse_value(p.trim())).collect();
+        return Ok(Value::Arr(items?));
+    }
+    let cleaned = s.replace('_', "");
+    if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+        if let Ok(i) = cleaned.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_tables_and_types() {
+        let doc = parse(
+            r#"
+# top comment
+title = "llep"   # trailing comment
+[model]
+num_experts = 128
+top_k = 4
+[llep]
+alpha = 1.0
+lambda = 1.3
+min_gemm_tokens = 1_024
+adaptive = true
+buckets = [64, 256, 1024]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "title").unwrap().as_str(), Some("llep"));
+        assert_eq!(doc.get("model", "num_experts").unwrap().as_usize(), Some(128));
+        assert_eq!(doc.get("llep", "alpha").unwrap().as_f64(), Some(1.0));
+        assert_eq!(doc.get("llep", "lambda").unwrap().as_f64(), Some(1.3));
+        assert_eq!(doc.get("llep", "min_gemm_tokens").unwrap().as_usize(), Some(1024));
+        assert_eq!(doc.get("llep", "adaptive").unwrap().as_bool(), Some(true));
+        let arr = doc.get("llep", "buckets").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[2].as_usize(), Some(1024));
+    }
+
+    #[test]
+    fn dotted_table_names() {
+        let doc = parse("[system.comm]\nintra_gbps = 450.0\n").unwrap();
+        assert_eq!(doc.get("system.comm", "intra_gbps").unwrap().as_f64(), Some(450.0));
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let doc = parse("a = 3\nb = 3.0\n").unwrap();
+        assert_eq!(doc.get("", "a").unwrap(), &Value::Int(3));
+        assert_eq!(doc.get("", "b").unwrap(), &Value::Float(3.0));
+        // as_f64 accepts both
+        assert_eq!(doc.get("", "a").unwrap().as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse("[unclosed\n").is_err());
+        assert!(parse("novalue =\n").is_err());
+        assert!(parse("= 3\n").is_err());
+        assert!(parse("[[aot]]\n").is_err());
+        assert!(parse("x = \"unterminated\n").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string_not_comment() {
+        let doc = parse("x = \"a#b\"\n").unwrap();
+        assert_eq!(doc.get("", "x").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn negative_and_scientific() {
+        let doc = parse("a = -5\nb = 2.5e-3\n").unwrap();
+        assert_eq!(doc.get("", "a").unwrap().as_i64(), Some(-5));
+        assert!((doc.get("", "b").unwrap().as_f64().unwrap() - 2.5e-3).abs() < 1e-12);
+    }
+}

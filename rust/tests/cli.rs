@@ -1,0 +1,118 @@
+//! CLI integration tests: drive the `llep` binary end-to-end via
+//! std::process and assert on its output (figures, run, trace/replay,
+//! config loading, error handling).
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn llep() -> Command {
+    let bin = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("target")
+        .join(if cfg!(debug_assertions) { "debug" } else { "release" })
+        .join("llep");
+    Command::new(bin)
+}
+
+fn run_ok(args: &[&str]) -> String {
+    let out = llep().args(args).output().expect("spawn llep");
+    assert!(
+        out.status.success(),
+        "llep {args:?} failed:\nstdout: {}\nstderr: {}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+#[test]
+fn info_lists_presets() {
+    let out = run_ok(&["info"]);
+    for name in ["gpt-oss-120b", "deepseek-v3", "kimi-k2", "h200x8", "cpusim8"] {
+        assert!(out.contains(name), "info missing {name}:\n{out}");
+    }
+}
+
+#[test]
+fn figures_1a_has_all_scenarios() {
+    let out = run_ok(&["figures", "--fig", "1a"]);
+    for label in ["balanced", "30% into 16", "95% into 1", "speedup"] {
+        assert!(out.contains(label), "fig 1a missing {label}");
+    }
+}
+
+#[test]
+fn run_compares_three_planners() {
+    let out = run_ok(&[
+        "run",
+        "--model",
+        "fig1-layer",
+        "--scenario",
+        "concentrated",
+        "--concentration",
+        "0.9",
+        "--hot",
+        "1",
+        "--tokens",
+        "8192",
+    ]);
+    assert!(out.contains("EP"));
+    assert!(out.contains("LLEP"));
+    assert!(out.contains("EPLB"));
+}
+
+#[test]
+fn run_loads_config_file() {
+    let cfg = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("configs/fig1.toml");
+    let out = run_ok(&["run", "--config", cfg.to_str().unwrap()]);
+    assert!(out.contains("fig1-layer"));
+    assert!(out.contains("95% into 1"));
+}
+
+#[test]
+fn trace_then_replay_roundtrip() {
+    let dir = std::env::temp_dir().join("llep_cli_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("trace.json");
+    let path_s = path.to_str().unwrap();
+    run_ok(&[
+        "trace", "--out", path_s, "--batches", "4", "--tokens", "2048",
+        "--scenario", "drift", "--hot", "11",
+    ]);
+    assert!(path.exists());
+    let out = run_ok(&["replay", "--trace", path_s]);
+    assert!(out.contains("4 batches"));
+    assert!(out.contains("LLEP"));
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn serve_reports_latency_percentiles() {
+    let out = run_ok(&["serve", "--steps", "16"]);
+    assert!(out.contains("p50 latency"));
+    assert!(out.contains("tok/s"));
+}
+
+#[test]
+fn calibrate_fits_model() {
+    let out = run_ok(&["calibrate"]);
+    assert!(out.contains("peak_flops"));
+    assert!(out.contains("overhead_s"));
+}
+
+#[test]
+fn unknown_flag_and_subcommand_fail_loudly() {
+    let out = llep().args(["figures", "--bogus"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown option"));
+
+    let out = llep().args(["frobnicate"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown subcommand"));
+}
+
+#[test]
+fn help_prints_usage() {
+    let out = run_ok(&["--help"]);
+    assert!(out.contains("usage: llep"));
+    assert!(out.contains("--fig"));
+}

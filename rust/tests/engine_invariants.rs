@@ -1,0 +1,226 @@
+//! Metamorphic/invariant tests over the modeled engine — the properties
+//! the paper's analysis (§3.2, §5.3) predicts must hold for ANY
+//! workload, checked across randomized scenarios.
+
+use llep::config::{LlepConfig, ModelConfig, ModelPreset, SystemConfig, SystemPreset};
+use llep::exec::Engine;
+use llep::planner::PlannerKind;
+use llep::routing::{LoadMatrix, Scenario};
+use llep::util::prop::{assert_property, no_shrink};
+use llep::util::rng::Rng;
+
+fn engine() -> Engine {
+    Engine::modeled(
+        ModelConfig::preset(ModelPreset::Fig1Layer),
+        SystemConfig::preset(SystemPreset::H200x8),
+    )
+}
+
+#[derive(Clone, Debug)]
+struct Workload {
+    concentration: f64,
+    hot: usize,
+    tokens: usize,
+    seed: u64,
+}
+
+fn gen_workload(rng: &mut Rng) -> Workload {
+    Workload {
+        concentration: rng.f64(),
+        hot: [1usize, 4, 16][rng.index(3)],
+        tokens: [2048usize, 8192, 32_768][rng.index(3)],
+        seed: rng.next_u64(),
+    }
+}
+
+fn loads_for(w: &Workload, e: &Engine) -> LoadMatrix {
+    Scenario::concentrated(w.concentration, w.hot).generate_loads(
+        &e.model,
+        e.system.devices,
+        w.tokens,
+        &mut Rng::new(w.seed),
+    )
+}
+
+/// LLEP must never be meaningfully slower than EP (the lambda guard
+/// guarantees parity when balanced; LLA wins when imbalanced).
+#[test]
+fn llep_never_slower_than_ep() {
+    let e = engine();
+    assert_property(
+        "llep <= ep latency",
+        1,
+        60,
+        gen_workload,
+        |w| {
+            let lm = loads_for(w, &e);
+            let ep = e.run_step_loads(&lm, &PlannerKind::StandardEp);
+            let ll = e.run_step_loads(&lm, &PlannerKind::llep_default());
+            // 5% slack for measured plan time jitter
+            if ll.latency_s <= ep.latency_s * 1.05 {
+                Ok(())
+            } else {
+                Err(format!("LLEP {} vs EP {}", ll.latency_s, ep.latency_s))
+            }
+        },
+        no_shrink,
+    );
+}
+
+/// LLEP's peak memory is *stable*: bounded by the balanced baseline plus
+/// a few imported expert weights, regardless of imbalance (paper Fig. 1b
+/// "near-constant memory"). At mild imbalance imports can put it a hair
+/// above EP; it must never blow up the way EP does.
+#[test]
+fn llep_memory_is_stable() {
+    let e = engine();
+    // balanced-baseline peak at each batch size
+    let balanced_peak = |tokens: usize| {
+        let lm = Scenario::balanced().generate_loads(&e.model, 8, tokens, &mut Rng::new(7));
+        e.run_step_loads(&lm, &PlannerKind::StandardEp).max_peak_bytes()
+    };
+    assert_property(
+        "llep mem stable",
+        2,
+        60,
+        gen_workload,
+        |w| {
+            let lm = loads_for(w, &e);
+            let ep = e.run_step_loads(&lm, &PlannerKind::StandardEp);
+            let ll = e.run_step_loads(&lm, &PlannerKind::llep_default());
+            // stable bound: balanced peak + 25% activation headroom +
+            // imported expert weights (a device can import at most ~P
+            // hot experts' weights in practice)
+            let import_headroom = 8 * e.model.expert_weight_bytes() as u64;
+            let bound = (balanced_peak(w.tokens) as f64 * 1.25) as u64 + import_headroom;
+            if ll.max_peak_bytes() > bound {
+                return Err(format!(
+                    "LLEP peak {} exceeds stable bound {bound}",
+                    ll.max_peak_bytes()
+                ));
+            }
+            // and never more than a whisker above EP
+            if ll.max_peak_bytes() as f64 > ep.max_peak_bytes() as f64 * 1.15 {
+                return Err(format!(
+                    "LLEP {} far above EP {}",
+                    ll.max_peak_bytes(),
+                    ep.max_peak_bytes()
+                ));
+            }
+            Ok(())
+        },
+        no_shrink,
+    );
+}
+
+/// EP latency is monotone in concentration (paper Fig. 1a's x-axis).
+#[test]
+fn ep_latency_monotone_in_concentration() {
+    let e = engine();
+    let mut rng = Rng::new(3);
+    let mut last = 0.0;
+    for &c in &[0.0f64, 0.3, 0.5, 0.8, 0.95] {
+        let lm = Scenario::concentrated(c.max(0.01), 1).generate_loads(&e.model, 8, 16_384, &mut rng);
+        let r = e.run_step_loads(&lm, &PlannerKind::StandardEp);
+        assert!(
+            r.latency_s >= last * 0.999,
+            "latency dropped at c={c}: {} < {last}",
+            r.latency_s
+        );
+        last = r.latency_s;
+    }
+}
+
+/// Alpha monotonicity (paper Fig. 6b): smaller alpha -> tighter balance
+/// -> compute span never worse.
+#[test]
+fn smaller_alpha_tighter_balance() {
+    let e = engine();
+    let mut rng = Rng::new(4);
+    let lm = Scenario::concentrated(0.9, 4).generate_loads(&e.model, 8, 32_768, &mut rng);
+    let mut last_imbalance = 0.0;
+    for &alpha in &[1.0, 1.5, 2.0, 3.0] {
+        let kind = PlannerKind::Llep(LlepConfig::default().with_alpha(alpha).with_lambda(1.0));
+        let r = e.run_step_loads(&lm, &kind);
+        assert!(
+            r.compute_imbalance() >= last_imbalance * 0.999,
+            "alpha={alpha}: imbalance {} < previous {last_imbalance}",
+            r.compute_imbalance()
+        );
+        last_imbalance = r.compute_imbalance();
+    }
+}
+
+/// Eq.-4 memory accounting: recompute by hand from the plan.
+#[test]
+fn memory_matches_eq4_by_hand() {
+    let e = engine();
+    let mut rng = Rng::new(5);
+    let lm = Scenario::concentrated(0.8, 4).generate_loads(&e.model, 8, 8192, &mut rng);
+    let r = e.run_step_loads(&lm, &PlannerKind::llep_default());
+    let loads = lm.expert_loads();
+    let plan = PlannerKind::llep_default().plan(8, &loads, Some(&e.topo));
+    let m = e.model.num_experts / 8;
+    let (d, h, bytes) = (e.model.d_model as u64, e.model.d_ff as u64, e.model.dtype_bytes as u64);
+    for dev in 0..8 {
+        let work_tokens: u64 = plan.work_on(dev).iter().map(|(_, s)| s.len()).sum();
+        let imports = plan.imports_to(dev).len() as u64;
+        let want = (m as u64 + imports) * 3 * d * h * bytes + work_tokens * (d + h) * bytes;
+        assert_eq!(r.device_peak_bytes[dev], want, "device {dev}");
+    }
+}
+
+/// EPLB with perfectly fresh statistics cannot be worse than EP; with
+/// adversarially stale statistics it can be much worse than LLEP.
+#[test]
+fn eplb_fresh_vs_stale() {
+    let e = engine();
+    let mut rng = Rng::new(6);
+    let lm_hot = Scenario::concentrated(0.9, 1).generate_loads(&e.model, 8, 16_384, &mut rng);
+    let fresh = e.run_step_loads(&lm_hot, &PlannerKind::Eplb { replicas: 8 });
+    let ep = e.run_step_loads(&lm_hot, &PlannerKind::StandardEp);
+    assert!(fresh.latency_s <= ep.latency_s);
+
+    // stale: stats say the hotspot is elsewhere
+    let mut cold_counts = lm_hot.clone();
+    for row in cold_counts.counts.iter_mut() {
+        row.rotate_right(e.model.num_experts / 2);
+    }
+    let stale = e.run_step_loads_with_stats(&lm_hot, &cold_counts, &PlannerKind::Eplb { replicas: 8 });
+    let llep = e.run_step_loads(&lm_hot, &PlannerKind::llep_default());
+    assert!(
+        stale.latency_s > llep.latency_s,
+        "stale EPLB {} should lose to LLEP {}",
+        stale.latency_s,
+        llep.latency_s
+    );
+}
+
+/// Scaling devices down must still work (P=2..16) and conserve tokens.
+#[test]
+fn device_count_sweep() {
+    for p in [2usize, 4, 8, 16] {
+        let model = ModelConfig::preset(ModelPreset::Fig1Layer); // 128 experts
+        let system = SystemConfig::preset(SystemPreset::H200x8).with_devices(p);
+        let e = Engine::modeled(model.clone(), system);
+        let mut rng = Rng::new(p as u64);
+        let lm = Scenario::concentrated(0.9, 2).generate_loads(&model, p, 4096, &mut rng);
+        let r = e.run_step_loads(&lm, &PlannerKind::llep_default());
+        assert_eq!(r.tokens, (p * 4096) as u64);
+        assert_eq!(r.device_compute_s.len(), p);
+        assert!(!r.oom);
+    }
+}
+
+/// Zero-load (empty batch) step must not panic and must cost ~nothing.
+#[test]
+fn empty_batch_step() {
+    let e = engine();
+    let lm = LoadMatrix { counts: vec![vec![0; 128]; 8], top_k: 4 };
+    for kind in [PlannerKind::StandardEp, PlannerKind::llep_default()] {
+        let r = e.run_step_loads(&lm, &kind);
+        assert_eq!(r.tokens, 0);
+        assert_eq!(r.bytes_dispatch, 0);
+        assert_eq!(r.gemm_calls, 0);
+    }
+}

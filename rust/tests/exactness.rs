@@ -1,0 +1,161 @@
+//! Integration: exactness of the distributed execution across random
+//! routings, planners and batch shapes — forward outputs AND accumulated
+//! expert-weight gradients must match the single-device reference
+//! (paper: "LLEP is an **exact** MoE computation algorithm").
+
+use llep::config::{LlepConfig, ModelConfig, ModelPreset, SystemConfig, SystemPreset};
+use llep::exec::{run_backward_real, run_step_real, Engine, NativeCompute};
+use llep::moe::{backward_reference, forward_reference, route, MoeLayer};
+use llep::planner::PlannerKind;
+use llep::routing::Scenario;
+use llep::tensor::Mat;
+use llep::util::rng::Rng;
+
+fn max_diff(a: &[Mat], b: &[Mat]) -> f32 {
+    a.iter()
+        .zip(b)
+        .flat_map(|(x, y)| x.data.iter().zip(&y.data).map(|(u, v)| (u - v).abs()))
+        .fold(0f32, f32::max)
+}
+
+fn engine4() -> (ModelConfig, Engine) {
+    let model = ModelConfig::preset(ModelPreset::Tiny);
+    let engine = Engine::modeled(model.clone(), SystemConfig::preset(SystemPreset::CpuSim4));
+    (model, engine)
+}
+
+#[test]
+fn forward_exact_across_random_scenarios_and_planners() {
+    let (model, engine) = engine4();
+    let mut rng = Rng::new(100);
+    let scenarios = [
+        Scenario::balanced(),
+        Scenario::concentrated(0.95, 1),
+        Scenario::concentrated(0.6, 3),
+        Scenario::power_law(1.5),
+        Scenario::drifting(5, 0.4, 0.3),
+    ];
+    let planners = [
+        PlannerKind::StandardEp,
+        PlannerKind::Llep(LlepConfig { alpha: 1.0, min_gemm_tokens: 1, lambda: 1.0 }),
+        PlannerKind::Llep(LlepConfig { alpha: 1.5, min_gemm_tokens: 8, lambda: 1.1 }),
+        PlannerKind::Eplb { replicas: 6 },
+    ];
+    for (i, sc) in scenarios.iter().enumerate() {
+        let layer = MoeLayer::random(&model, &mut rng);
+        let tokens = 16 + i * 7; // vary batch shapes
+        let routing = sc.generate(&model, 4, tokens, &mut rng);
+        let xs: Vec<Mat> =
+            (0..4).map(|_| Mat::randn(tokens, model.d_model, 0.5, &mut rng)).collect();
+        let reference = forward_reference(&layer, &xs, &routing);
+        for kind in &planners {
+            let step = run_step_real(&engine, &layer, &xs, &routing, kind, &NativeCompute)
+                .unwrap_or_else(|e| panic!("{} on {}: {e}", kind.label(), sc.label()));
+            let d = max_diff(&reference, &step.outputs);
+            assert!(d < 1e-4, "{} on {}: diff {d}", kind.label(), sc.label());
+        }
+    }
+}
+
+#[test]
+fn forward_exact_with_real_router() {
+    // Routing produced by the actual softmax top-K router, not synthetic.
+    let (model, engine) = engine4();
+    let mut rng = Rng::new(200);
+    for seed in 0..3 {
+        let layer = MoeLayer::random(&model, &mut Rng::new(seed));
+        let xs: Vec<Mat> =
+            (0..4).map(|_| Mat::randn(20, model.d_model, 0.8, &mut rng)).collect();
+        let routing = route(&layer, &xs);
+        let reference = forward_reference(&layer, &xs, &routing);
+        let step = run_step_real(
+            &engine,
+            &layer,
+            &xs,
+            &routing,
+            &PlannerKind::Llep(LlepConfig { alpha: 1.0, min_gemm_tokens: 2, lambda: 1.0 }),
+            &NativeCompute,
+        )
+        .unwrap();
+        assert!(max_diff(&reference, &step.outputs) < 1e-4);
+    }
+}
+
+#[test]
+fn backward_exact_and_spilled_grads_return_home() {
+    let (model, engine) = engine4();
+    let mut rng = Rng::new(300);
+    let layer = MoeLayer::random(&model, &mut rng);
+    let routing = Scenario::concentrated(0.9, 1).generate(&model, 4, 40, &mut rng);
+    let xs: Vec<Mat> = (0..4).map(|_| Mat::randn(40, model.d_model, 0.5, &mut rng)).collect();
+    let dys: Vec<Mat> = (0..4).map(|_| Mat::randn(40, model.d_model, 0.5, &mut rng)).collect();
+
+    let reference = backward_reference(&layer, &xs, &routing, &dys);
+    for kind in [
+        PlannerKind::StandardEp,
+        PlannerKind::Llep(LlepConfig { alpha: 1.0, min_gemm_tokens: 4, lambda: 1.0 }),
+    ] {
+        let step = run_step_real(&engine, &layer, &xs, &routing, &kind, &NativeCompute).unwrap();
+        let bwd = run_backward_real(&engine, &layer, &xs, &routing, &dys, &step.plan).unwrap();
+        for (e, (got, want)) in bwd.grads.iter().zip(&reference).enumerate() {
+            let d = got.max_abs_diff(want);
+            assert!(d < 2e-3, "{}: expert {e} grad diff {d}", kind.label());
+        }
+        if !step.plan.transfers.is_empty() {
+            assert!(bwd.grad_return_bytes > 0, "spilled grads must be returned");
+        } else {
+            assert_eq!(bwd.grad_return_bytes, 0);
+        }
+    }
+}
+
+#[test]
+fn step_report_consistent_with_plan() {
+    let (model, engine) = engine4();
+    let mut rng = Rng::new(400);
+    let layer = MoeLayer::random(&model, &mut rng);
+    let routing = Scenario::concentrated(0.8, 2).generate(&model, 4, 64, &mut rng);
+    let xs: Vec<Mat> = (0..4).map(|_| Mat::randn(64, model.d_model, 0.5, &mut rng)).collect();
+    let kind = PlannerKind::Llep(LlepConfig { alpha: 1.0, min_gemm_tokens: 4, lambda: 1.0 });
+    let step = run_step_real(&engine, &layer, &xs, &routing, &kind, &NativeCompute).unwrap();
+    assert_eq!(step.report.weight_transfers, step.plan.transfers.len());
+    assert_eq!(step.report.gemm_calls, step.plan.gemm_calls());
+    assert_eq!(step.report.tokens, 4 * 64);
+    // measured compute charged somewhere
+    assert!(step.report.device_compute_s.iter().sum::<f64>() > 0.0);
+}
+
+#[test]
+fn empty_device_and_unrouted_expert_edge_cases() {
+    let (model, engine) = engine4();
+    let mut rng = Rng::new(500);
+    let layer = MoeLayer::random(&model, &mut rng);
+    // all tokens on device 0, all to expert 3 only
+    let tokens = 12;
+    let routing = llep::routing::Routing {
+        num_experts: model.num_experts,
+        top_k: model.top_k,
+        experts: vec![
+            (0..tokens).flat_map(|_| [3u32, 5u32]).collect(),
+            vec![],
+            vec![],
+            vec![],
+        ],
+        gates: vec![(0..tokens).flat_map(|_| [0.7f32, 0.3f32]).collect(), vec![], vec![], vec![]],
+    };
+    routing.validate().unwrap();
+    let xs = vec![
+        Mat::randn(tokens, model.d_model, 0.5, &mut rng),
+        Mat::zeros(0, model.d_model),
+        Mat::zeros(0, model.d_model),
+        Mat::zeros(0, model.d_model),
+    ];
+    let reference = forward_reference(&layer, &xs, &routing);
+    for kind in [
+        PlannerKind::StandardEp,
+        PlannerKind::Llep(LlepConfig { alpha: 1.0, min_gemm_tokens: 1, lambda: 1.0 }),
+    ] {
+        let step = run_step_real(&engine, &layer, &xs, &routing, &kind, &NativeCompute).unwrap();
+        assert!(max_diff(&reference, &step.outputs) < 1e-4, "{}", kind.label());
+    }
+}

@@ -1,0 +1,254 @@
+//! Integration tests over the PJRT runtime: AOT artifacts loaded and
+//! executed from rust, cross-checked against the native reference.
+//!
+//! These tests require `make artifacts` to have produced `artifacts/`;
+//! they are skipped (with a loud message) when it is missing so that
+//! `cargo test` stays green on a fresh checkout.
+
+use llep::config::{LlepConfig, ModelConfig, ModelPreset, SystemConfig, SystemPreset};
+use llep::exec::{run_step_real, Engine, ExpertCompute, NativeCompute};
+use llep::moe::{ffn_forward, forward_reference, MoeLayer};
+use llep::planner::PlannerKind;
+use llep::routing::Routing;
+use llep::runtime::{PjrtCompute, Runtime};
+use llep::tensor::Mat;
+use llep::util::rng::Rng;
+use std::path::PathBuf;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = std::env::var("LLEP_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"));
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts not built at {dir:?} — run `make artifacts`");
+        None
+    }
+}
+
+/// Tiny-model geometry must match the python side (model.py).
+fn tiny_model() -> ModelConfig {
+    let mut m = ModelConfig::preset(ModelPreset::Tiny);
+    m.d_model = 32;
+    m.d_ff = 64;
+    m
+}
+
+#[test]
+fn manifest_lists_expected_artifacts() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::open(&dir).unwrap();
+    for name in [
+        "expert_ffn_b64",
+        "expert_ffn_b256",
+        "expert_ffn_b1024",
+        "gated_combine",
+        "moe_fwd",
+        "init_params",
+        "train_step",
+    ] {
+        assert!(rt.manifest.entries.contains_key(name), "missing artifact {name}");
+    }
+    assert_eq!(rt.platform().to_lowercase(), "cpu");
+}
+
+#[test]
+fn pallas_expert_ffn_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::open(&dir).unwrap();
+    let pjrt = PjrtCompute::new(&rt).unwrap();
+    assert_eq!(pjrt.name(), "pjrt");
+
+    let model = tiny_model();
+    let mut rng = Rng::new(1);
+    let layer = MoeLayer::random(&model, &mut rng);
+
+    // Several row counts exercising padding + bucket selection.
+    for rows in [1usize, 5, 64, 100, 256, 300, 1500] {
+        let x = Mat::randn(rows, model.d_model, 0.5, &mut rng);
+        let want = ffn_forward(&x, &layer.experts[0]);
+        let got = pjrt.ffn(&x, &layer.experts[0]);
+        assert_eq!(got.rows, rows);
+        let diff = got.rel_diff(&want);
+        assert!(diff < 1e-5, "rows={rows}: pallas vs native rel diff {diff}");
+    }
+}
+
+#[test]
+fn htiled_kernel_artifact_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::open(&dir).unwrap();
+    if !rt.manifest.entries.contains_key("expert_ffn_htiled_b256") {
+        eprintln!("SKIP: htiled artifact not present (older artifacts) — re-run make artifacts");
+        return;
+    }
+    let model = tiny_model();
+    let mut rng = Rng::new(17);
+    let layer = MoeLayer::random(&model, &mut rng);
+    let x = Mat::randn(256, model.d_model, 0.5, &mut rng);
+    let w = &layer.experts[0];
+    let out = rt
+        .execute_f32(
+            "expert_ffn_htiled_b256",
+            &[
+                (&x.data, &[256, model.d_model as i64]),
+                (&w.w_gate.data, &[model.d_model as i64, model.d_ff as i64]),
+                (&w.w_up.data, &[model.d_model as i64, model.d_ff as i64]),
+                (&w.w_down.data, &[model.d_ff as i64, model.d_model as i64]),
+            ],
+        )
+        .unwrap();
+    let got = Mat::from_vec(256, model.d_model, out[0].clone());
+    let want = ffn_forward(&x, w);
+    let diff = got.rel_diff(&want);
+    assert!(diff < 1e-5, "htiled vs native rel diff {diff}");
+}
+
+#[test]
+fn llep_step_on_pjrt_backend_is_exact() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::open(&dir).unwrap();
+    let pjrt = PjrtCompute::new(&rt).unwrap();
+
+    let model = tiny_model();
+    let system = SystemConfig::preset(SystemPreset::CpuSim4);
+    let engine = Engine::modeled(model.clone(), system);
+    let mut rng = Rng::new(2);
+    let layer = MoeLayer::random(&model, &mut rng);
+    let routing = llep::routing::Scenario::concentrated(0.9, 1).generate(&model, 4, 24, &mut rng);
+    let xs: Vec<Mat> = (0..4)
+        .map(|p| Mat::randn(routing.tokens_on(p), model.d_model, 0.5, &mut rng))
+        .collect();
+
+    let reference = forward_reference(&layer, &xs, &routing);
+    let kind = PlannerKind::Llep(LlepConfig { alpha: 1.0, min_gemm_tokens: 2, lambda: 1.0 });
+    let step = run_step_real(&engine, &layer, &xs, &routing, &kind, &pjrt).unwrap();
+    let native = run_step_real(&engine, &layer, &xs, &routing, &kind, &NativeCompute).unwrap();
+
+    let max_diff = |a: &[Mat], b: &[Mat]| {
+        a.iter()
+            .zip(b)
+            .flat_map(|(x, y)| x.data.iter().zip(&y.data).map(|(u, v)| (u - v).abs()))
+            .fold(0f32, f32::max)
+    };
+    assert!(max_diff(&reference, &step.outputs) < 1e-4, "pjrt vs reference");
+    assert!(max_diff(&native.outputs, &step.outputs) < 1e-4, "pjrt vs native engine");
+}
+
+#[test]
+fn moe_fwd_artifact_cross_checks_engine_routing() {
+    // The full JAX MoE layer (router + experts, Pallas path) must agree
+    // with the rust engine executing the routing the artifact reports.
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::open(&dir).unwrap();
+
+    let model = tiny_model();
+    let tokens = rt.manifest.meta_usize("moe_fwd", "tokens").unwrap();
+    let n = rt.manifest.meta_usize("moe_fwd", "num_experts").unwrap();
+    let k = rt.manifest.meta_usize("moe_fwd", "top_k").unwrap();
+    assert_eq!(n, model.num_experts);
+    let (d, h) = (model.d_model, model.d_ff);
+
+    let mut rng = Rng::new(3);
+    let layer = MoeLayer::random(&model, &mut rng);
+    let x = Mat::randn(tokens, d, 0.5, &mut rng);
+
+    // Stack expert weights (N, D, H) etc. in expert order.
+    let stack = |get: &dyn Fn(usize) -> Vec<f32>| -> Vec<f32> {
+        (0..n).flat_map(|e| get(e)).collect()
+    };
+    let wg = stack(&|e| layer.experts[e].w_gate.data.clone());
+    let wu = stack(&|e| layer.experts[e].w_up.data.clone());
+    let wd = stack(&|e| layer.experts[e].w_down.data.clone());
+
+    let outputs = rt
+        .execute_f32(
+            "moe_fwd",
+            &[
+                (&x.data, &[tokens as i64, d as i64]),
+                (&layer.router.data, &[d as i64, n as i64]),
+                (&wg, &[n as i64, d as i64, h as i64]),
+                (&wu, &[n as i64, d as i64, h as i64]),
+                (&wd, &[n as i64, h as i64, d as i64]),
+            ],
+        )
+        .unwrap();
+    let jax_out = Mat::from_vec(tokens, d, outputs[0].clone());
+    let gates = &outputs[1];
+    let idx = &outputs[2];
+    let counts = &outputs[3];
+
+    // Rebuild the routing the JAX layer used and run the rust engine on it.
+    let routing = Routing {
+        num_experts: n,
+        top_k: k,
+        experts: vec![idx.iter().map(|&e| e as u32).collect()],
+        gates: vec![gates.clone()],
+    };
+    routing.validate().unwrap();
+    let total: f32 = counts.iter().sum();
+    assert_eq!(total as usize, tokens * k, "counts artifact output");
+
+    let system = SystemConfig::preset(SystemPreset::CpuSim4).with_devices(1);
+    let engine = Engine::modeled(model.clone(), system);
+    let step =
+        run_step_real(&engine, &layer, &[x], &routing, &PlannerKind::StandardEp, &NativeCompute)
+            .unwrap();
+    let diff = step.outputs[0].rel_diff(&jax_out);
+    assert!(diff < 1e-4, "jax moe_fwd vs rust engine rel diff {diff}");
+}
+
+#[test]
+fn trainer_loss_decreases_and_params_update() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::open(&dir).unwrap();
+    let mut trainer = llep::trainer::Trainer::new(&rt, 0.0).unwrap();
+    let mut rng = Rng::new(4);
+
+    let before_params = trainer.params.clone();
+    let mut losses = Vec::new();
+    for _ in 0..25 {
+        let (x, y) = trainer.make_batch(&mut rng);
+        let out = trainer.step(&x, &y).unwrap();
+        assert_eq!(out.expert_counts.len(), trainer.num_experts);
+        losses.push(out.loss);
+    }
+    assert_ne!(before_params, trainer.params, "params must update");
+    let first = losses[..5].iter().sum::<f32>() / 5.0;
+    let last = losses[losses.len() - 5..].iter().sum::<f32>() / 5.0;
+    assert!(last < first, "loss should trend down: {first} -> {last}");
+    assert!(losses.iter().all(|l| l.is_finite()));
+}
+
+#[test]
+fn gated_combine_artifact_matches_rust() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::open(&dir).unwrap();
+    let tokens = rt.manifest.meta_usize("gated_combine", "tokens").unwrap();
+    let k = rt.manifest.meta_usize("gated_combine", "top_k").unwrap();
+    let d = 32usize;
+    let mut rng = Rng::new(5);
+    let y: Vec<f32> = (0..tokens * k * d).map(|_| rng.f32() - 0.5).collect();
+    let gates: Vec<f32> = (0..tokens * k).map(|_| rng.f32()).collect();
+    let out = rt
+        .execute_f32(
+            "gated_combine",
+            &[
+                (&y, &[tokens as i64, k as i64, d as i64]),
+                (&gates, &[tokens as i64, k as i64]),
+            ],
+        )
+        .unwrap();
+    // rust-side reference
+    for t in 0..tokens {
+        for c in 0..d {
+            let mut want = 0f32;
+            for s in 0..k {
+                want += gates[t * k + s] * y[(t * k + s) * d + c];
+            }
+            let got = out[0][t * d + c];
+            assert!((got - want).abs() < 1e-4, "t={t} c={c}: {got} vs {want}");
+        }
+    }
+}

@@ -1,0 +1,229 @@
+//! Property-based tests over the planners: random loads through
+//! EP/LLEP/EPLB must always produce valid, capacity-respecting, exact
+//! plans, and the LLEP plan must never be worse than EP on the
+//! balance metric it optimizes.
+
+use llep::config::LlepConfig;
+use llep::planner::validate::{validate_capacity, validate_plan};
+use llep::planner::PlannerKind;
+use llep::util::prop::{assert_property, no_shrink};
+use llep::util::rng::Rng;
+
+/// A random planner input: (N, P, loads, llep config).
+#[derive(Clone, Debug)]
+struct Input {
+    n: usize,
+    p: usize,
+    loads: Vec<u64>,
+    alpha: f64,
+    min_chunk: usize,
+    lambda: f64,
+}
+
+fn gen_input(rng: &mut Rng) -> Input {
+    let p = *[2usize, 4, 8].get(rng.index(3)).unwrap();
+    let m = rng.range(1, 6);
+    let n = p * m;
+    // loads with a mixture of zeros, small and huge values
+    let loads: Vec<u64> = (0..n)
+        .map(|_| match rng.index(4) {
+            0 => 0,
+            1 => rng.below(50),
+            2 => rng.below(5_000),
+            _ => rng.below(500_000),
+        })
+        .collect();
+    Input {
+        n,
+        p,
+        loads,
+        alpha: 1.0 + rng.f64() * 2.0,
+        min_chunk: [1usize, 16, 256, 1024][rng.index(4)],
+        lambda: 1.0 + rng.f64() * 2.0,
+    }
+}
+
+fn shrink_input(input: &Input) -> Vec<Input> {
+    let mut out = Vec::new();
+    // halve each load
+    let mut halved = input.clone();
+    for l in halved.loads.iter_mut() {
+        *l /= 2;
+    }
+    if halved.loads != input.loads {
+        out.push(halved);
+    }
+    // zero one load at a time (first few)
+    for i in 0..input.loads.len().min(4) {
+        if input.loads[i] != 0 {
+            let mut z = input.clone();
+            z.loads[i] = 0;
+            out.push(z);
+        }
+    }
+    out
+}
+
+#[test]
+fn llep_plans_are_always_valid() {
+    assert_property(
+        "llep valid",
+        0xA11CE,
+        500,
+        gen_input,
+        |input| {
+            let cfg = LlepConfig {
+                alpha: input.alpha,
+                min_gemm_tokens: input.min_chunk,
+                lambda: input.lambda,
+            };
+            let plan = PlannerKind::Llep(cfg).plan(input.p, &input.loads, None);
+            validate_plan(&plan, &input.loads)?;
+            validate_capacity(&plan, &input.loads, input.alpha)
+        },
+        shrink_input,
+    );
+}
+
+#[test]
+fn ep_and_eplb_plans_are_always_valid() {
+    assert_property(
+        "ep+eplb valid",
+        0xB0B,
+        300,
+        gen_input,
+        |input| {
+            let ep = PlannerKind::StandardEp.plan(input.p, &input.loads, None);
+            validate_plan(&ep, &input.loads)?;
+            let eplb = PlannerKind::Eplb { replicas: input.p * 2 }.plan(input.p, &input.loads, None);
+            validate_plan(&eplb, &input.loads)
+        },
+        shrink_input,
+    );
+}
+
+#[test]
+fn llep_never_increases_max_device_load() {
+    // The balance objective: LLEP's most-loaded device must never hold
+    // more tokens than EP's most-loaded device.
+    assert_property(
+        "llep max load <= ep max load",
+        0xC0FFEE,
+        500,
+        gen_input,
+        |input| {
+            let cfg = LlepConfig {
+                alpha: input.alpha,
+                min_gemm_tokens: input.min_chunk,
+                lambda: input.lambda,
+            };
+            let ep = PlannerKind::StandardEp.plan(input.p, &input.loads, None);
+            let ll = PlannerKind::Llep(cfg).plan(input.p, &input.loads, None);
+            let ep_max = ep.device_loads().into_iter().max().unwrap_or(0);
+            let ll_max = ll.device_loads().into_iter().max().unwrap_or(0);
+            if ll_max <= ep_max {
+                Ok(())
+            } else {
+                Err(format!("LLEP max {ll_max} > EP max {ep_max}"))
+            }
+        },
+        shrink_input,
+    );
+}
+
+#[test]
+fn llep_total_tokens_conserved() {
+    assert_property(
+        "token conservation",
+        0xDEAD,
+        500,
+        gen_input,
+        |input| {
+            let cfg = LlepConfig {
+                alpha: input.alpha,
+                min_gemm_tokens: input.min_chunk,
+                lambda: input.lambda,
+            };
+            let plan = PlannerKind::Llep(cfg).plan(input.p, &input.loads, None);
+            let total: u64 = input.loads.iter().sum();
+            let assigned: u64 = plan.device_loads().iter().sum();
+            if total == assigned {
+                Ok(())
+            } else {
+                Err(format!("{assigned} assigned of {total}"))
+            }
+        },
+        shrink_input,
+    );
+}
+
+#[test]
+fn lambda_guard_matches_imbalance_ratio() {
+    assert_property(
+        "lambda guard",
+        0xFEED,
+        300,
+        gen_input,
+        |input| {
+            let cfg = LlepConfig {
+                alpha: input.alpha,
+                min_gemm_tokens: input.min_chunk,
+                lambda: input.lambda,
+            };
+            let ratio = llep::routing::imbalance_ratio(&input.loads);
+            let plan = PlannerKind::Llep(cfg).plan(input.p, &input.loads, None);
+            if (ratio < input.lambda) != plan.fallback_ep {
+                return Err(format!(
+                    "ratio {ratio} lambda {} but fallback={}",
+                    input.lambda, plan.fallback_ep
+                ));
+            }
+            if plan.fallback_ep && !plan.transfers.is_empty() {
+                return Err("fallback plan must have no transfers".into());
+            }
+            Ok(())
+        },
+        shrink_input,
+    );
+}
+
+#[test]
+fn min_chunk_respected_by_spills() {
+    // Every spilled (foreign, unforced) segment must hold >= m tokens OR
+    // be the final remainder of its expert.
+    assert_property(
+        "min chunk",
+        0xFACE,
+        400,
+        gen_input,
+        |input| {
+            let cfg = LlepConfig {
+                alpha: input.alpha,
+                min_gemm_tokens: input.min_chunk,
+                lambda: 1.0, // always engage LLA
+            };
+            let plan = PlannerKind::Llep(cfg).plan(input.p, &input.loads, None);
+            if plan.fallback_ep {
+                return Ok(());
+            }
+            let m = input.n / input.p;
+            for (e, segs) in plan.assignments.iter().enumerate() {
+                let native = e / m;
+                for s in segs {
+                    if s.device != native
+                        && !s.forced
+                        && s.len() < input.min_chunk as u64
+                        && s.end != input.loads[e]
+                    {
+                        return Err(format!(
+                            "expert {e}: undersized spill {s:?} (m={})",
+                            input.min_chunk
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+        no_shrink,
+    );
+}
