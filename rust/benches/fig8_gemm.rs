@@ -14,8 +14,10 @@
 //! the PJRT column requires `make artifacts`).
 
 use llep::costmodel::GemmCostModel;
+#[cfg(feature = "pjrt")]
 use llep::exec::ExpertCompute;
 use llep::metrics::{format_secs, Table};
+#[cfg(feature = "pjrt")]
 use llep::moe::MoeLayer;
 use llep::prelude::*;
 use llep::tensor::{matmul, Mat};
@@ -39,6 +41,7 @@ fn main() {
     let w = Mat::randn(d, d, 0.02, &mut rng);
 
     // PJRT measurement: tiny-geometry expert FFN artifact, bucketed.
+    #[cfg(feature = "pjrt")]
     let pjrt_setup = llep::runtime::Runtime::open(&llep::runtime::Runtime::default_dir())
         .ok()
         .map(|rt| {
@@ -70,6 +73,9 @@ fn main() {
             }
         });
 
+        #[cfg(not(feature = "pjrt"))]
+        let pjrt_cell = "requires --features pjrt".to_string();
+        #[cfg(feature = "pjrt")]
         let pjrt_cell = match &pjrt_setup {
             None => "run `make artifacts`".to_string(),
             Some((rt, layer)) => {

@@ -146,6 +146,13 @@ impl ModelConfig {
         }
     }
 
+    /// Number of MoE layers one full forward step executes — the layer
+    /// count [`crate::exec::Engine::run_model`] prices (alias of
+    /// `num_layers` under the name the multi-layer API uses).
+    pub fn num_moe_layers(&self) -> usize {
+        self.num_layers
+    }
+
     /// Number of weight matrices per expert (3 for SwiGLU, 1 otherwise).
     pub fn mats_per_expert(&self) -> usize {
         if self.swiglu {

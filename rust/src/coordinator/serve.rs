@@ -1,17 +1,27 @@
 //! Serving-style simulation: a request queue feeding batched MoE steps.
 //!
 //! Requests carry token counts and arrive on a (virtual) timeline; the
-//! coordinator batches whatever is queued (up to a token budget), runs
-//! one engine step per batch, and advances the virtual clock by the step
-//! latency. Per-request latency = completion − arrival. This is the
-//! vLLM-router-shaped workload the paper's "higher-throughput inference"
-//! claim is about.
+//! coordinator batches whatever is queued (up to a token budget), prices
+//! one **full-model** engine step per batch (all MoE layers of the model,
+//! each with its own per-layer routing — see
+//! [`crate::exec::Engine::run_model`]), and advances the virtual clock by
+//! the step latency. Per-request latency = completion − arrival. This is
+//! the vLLM-router-shaped workload the paper's "higher-throughput
+//! inference" claim is about.
+//!
+//! Token accounting is exact: each batch's total token count is carried
+//! into the priced load matrices via
+//! [`Scenario::generate_loads_total`](crate::routing::Scenario::generate_loads_total)
+//! (largest-remainder split across devices), so reported throughput and
+//! priced work always agree — the old `(batch / devices).max(1)` rounding
+//! silently priced `per_device * devices != batch_tokens` loads.
 
 use crate::exec::Engine;
 use crate::planner::PlannerKind;
-use crate::routing::Scenario;
+use crate::routing::{DepthProfile, Scenario};
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
+use std::collections::VecDeque;
 
 /// One inference request.
 #[derive(Clone, Debug)]
@@ -29,8 +39,14 @@ pub struct ServeReport {
     pub makespan_s: f64,
     pub request_latency: Summary,
     pub batches: usize,
+    /// Tokens admitted from the request stream.
     pub total_tokens: u64,
+    /// Tokens actually priced by the engine — equals `total_tokens` (the
+    /// accounting contract; asserted by tests).
+    pub priced_tokens: u64,
     pub oom_batches: usize,
+    /// MoE layers priced per step.
+    pub layers: usize,
 }
 
 impl ServeReport {
@@ -47,19 +63,33 @@ impl ServeReport {
 pub struct ServeSim {
     pub engine: Engine,
     pub planner: PlannerKind,
-    pub scenario: Scenario,
+    /// Per-layer routing scenarios for the full-model step.
+    pub profile: DepthProfile,
     /// Max tokens per device per batch.
     pub max_tokens_per_device: usize,
 }
 
 impl ServeSim {
+    /// Every MoE layer of the engine's model routes with `scenario`.
     pub fn new(
         engine: Engine,
         planner: PlannerKind,
         scenario: Scenario,
         max_tokens_per_device: usize,
     ) -> ServeSim {
-        ServeSim { engine, planner, scenario, max_tokens_per_device }
+        let layers = engine.model.num_moe_layers().max(1);
+        ServeSim {
+            profile: DepthProfile::uniform(scenario, layers),
+            engine,
+            planner,
+            max_tokens_per_device,
+        }
+    }
+
+    /// Replace the depth profile (e.g. [`DepthProfile::varying`]).
+    pub fn with_profile(mut self, profile: DepthProfile) -> ServeSim {
+        self.profile = profile;
+        self
     }
 
     /// Generate a Poisson-ish arrival stream.
@@ -88,8 +118,9 @@ impl ServeSim {
         let mut latencies = Vec::with_capacity(requests.len());
         let mut batches = 0usize;
         let mut total_tokens = 0u64;
+        let mut priced_tokens = 0u64;
         let mut oom_batches = 0usize;
-        let mut queue: Vec<&Request> = Vec::new();
+        let mut queue: VecDeque<&Request> = VecDeque::new();
 
         while next < requests.len() || !queue.is_empty() {
             // admit arrivals up to the clock; if idle, jump to next arrival
@@ -97,17 +128,17 @@ impl ServeSim {
                 clock = requests[next].arrival_s;
             }
             while next < requests.len() && requests[next].arrival_s <= clock {
-                queue.push(&requests[next]);
+                queue.push_back(&requests[next]);
                 next += 1;
             }
             // form a batch under the token budget (FIFO)
             let mut batch: Vec<&Request> = Vec::new();
             let mut batch_tokens = 0usize;
-            while let Some(&req) = queue.first() {
+            while let Some(&req) = queue.front() {
                 if batch.is_empty() || batch_tokens + req.tokens <= budget {
                     batch_tokens += req.tokens;
                     batch.push(req);
-                    queue.remove(0);
+                    queue.pop_front();
                 } else {
                     break;
                 }
@@ -115,15 +146,21 @@ impl ServeSim {
             if batch.is_empty() {
                 continue;
             }
-            // spread tokens across devices; round token count to K-multiple
-            let per_device = (batch_tokens / devices).max(1);
-            let lm = self
-                .scenario
-                .generate_loads(&self.engine.model, devices, per_device, rng);
-            let report = self.engine.run_step_loads(&lm, &self.planner);
+            // price a full-model step over the exact batch total
+            let lms = self.profile.generate_loads_total(
+                &self.engine.model,
+                devices,
+                batch_tokens,
+                rng,
+            );
+            let report = self
+                .engine
+                .run_model(&lms, &self.planner)
+                .expect("profile-generated loads are always consistent");
             clock += report.latency_s;
             batches += 1;
             total_tokens += batch_tokens as u64;
+            priced_tokens += report.tokens;
             if report.oom {
                 oom_batches += 1;
             }
@@ -139,7 +176,9 @@ impl ServeSim {
             request_latency: Summary::of(&latencies),
             batches,
             total_tokens,
+            priced_tokens,
             oom_batches,
+            layers: self.profile.num_layers(),
         }
     }
 }
@@ -165,28 +204,43 @@ pub struct ContinuousReport {
     /// Per-decode-step latency across all requests.
     pub tpot: Summary,
     pub steps: usize,
+    /// Steps where every MoE layer's lambda guard reverted to EP.
     pub fallback_steps: usize,
 }
 
 /// vLLM-style continuous batching: every engine step batches the newly
 /// admitted requests' prefills together with one token from every active
-/// decode. Decode-heavy steps are small and latency-bound — the regime
-/// where LLEP's lambda guard and the fused-collective option matter.
+/// decode, priced across **all** MoE layers of the model per step.
+/// Decode-heavy steps are small and latency-bound — the regime where
+/// LLEP's lambda guard and the fused-collective option matter.
 pub struct ContinuousBatchSim {
     pub engine: Engine,
     pub planner: PlannerKind,
-    pub scenario: Scenario,
+    pub profile: DepthProfile,
     pub max_prefill_tokens: usize,
 }
 
 impl ContinuousBatchSim {
+    /// Every MoE layer of the engine's model routes with `scenario`.
     pub fn new(
         engine: Engine,
         planner: PlannerKind,
         scenario: Scenario,
         max_prefill_tokens: usize,
     ) -> ContinuousBatchSim {
-        ContinuousBatchSim { engine, planner, scenario, max_prefill_tokens }
+        let layers = engine.model.num_moe_layers().max(1);
+        ContinuousBatchSim {
+            profile: DepthProfile::uniform(scenario, layers),
+            engine,
+            planner,
+            max_prefill_tokens,
+        }
+    }
+
+    /// Replace the depth profile (e.g. [`DepthProfile::varying`]).
+    pub fn with_profile(mut self, profile: DepthProfile) -> ContinuousBatchSim {
+        self.profile = profile;
+        self
     }
 
     /// Generate a request stream.
@@ -216,8 +270,8 @@ impl ContinuousBatchSim {
         let devices = self.engine.system.devices;
         let mut clock = 0.0f64;
         let mut next = 0usize;
-        let mut waiting: Vec<&GenRequest> = Vec::new();
-        // (remaining decode steps, arrival, prefill_done_at)
+        let mut waiting: VecDeque<&GenRequest> = VecDeque::new();
+        // (remaining decode steps, arrival)
         let mut active: Vec<(usize, f64)> = Vec::new();
         let mut ttft = Vec::new();
         let mut tpot = Vec::new();
@@ -231,18 +285,19 @@ impl ContinuousBatchSim {
                 clock = clock.max(requests[next].arrival_s);
             }
             while next < requests.len() && requests[next].arrival_s <= clock {
-                waiting.push(&requests[next]);
+                waiting.push_back(&requests[next]);
                 next += 1;
             }
             // admit prefills under the budget
             let mut prefill_tokens = 0usize;
             let mut admitted: Vec<&GenRequest> = Vec::new();
-            while let Some(&req) = waiting.first() {
-                if admitted.is_empty() || prefill_tokens + req.prompt_tokens <= self.max_prefill_tokens
+            while let Some(&req) = waiting.front() {
+                if admitted.is_empty()
+                    || prefill_tokens + req.prompt_tokens <= self.max_prefill_tokens
                 {
                     prefill_tokens += req.prompt_tokens;
                     admitted.push(req);
-                    waiting.remove(0);
+                    waiting.pop_front();
                 } else {
                     break;
                 }
@@ -252,13 +307,20 @@ impl ContinuousBatchSim {
             if step_tokens == 0 {
                 continue;
             }
-            // per-device token share (>= 1)
-            let per_device = (step_tokens / devices).max(1);
-            let lm = self.scenario.generate_loads(&self.engine.model, devices, per_device, rng);
-            let report = self.engine.run_step_loads(&lm, &self.planner);
+            // full-model step over the exact token total
+            let lms = self.profile.generate_loads_total(
+                &self.engine.model,
+                devices,
+                step_tokens,
+                rng,
+            );
+            let report = self
+                .engine
+                .run_model(&lms, &self.planner)
+                .expect("profile-generated loads are always consistent");
             clock += report.latency_s;
             steps += 1;
-            fallback_steps += report.fallback_ep as usize;
+            fallback_steps += (report.fallback_layers == report.num_layers()) as usize;
 
             // prefill completions = first token
             for req in admitted {
@@ -327,6 +389,41 @@ mod tests {
         for w in reqs.windows(2) {
             assert!(w[0].arrival_s <= w[1].arrival_s);
         }
+    }
+
+    #[test]
+    fn batch_token_accounting_is_exact() {
+        // 1001-token requests over 8 devices never divide evenly; the
+        // priced work must still equal the admitted work exactly.
+        let reqs: Vec<Request> =
+            (0..7).map(|id| Request { id, arrival_s: 0.0, tokens: 1001 }).collect();
+        let report = sim(PlannerKind::StandardEp).run(&reqs, &mut Rng::new(9));
+        assert_eq!(report.completed, 7);
+        assert_eq!(report.total_tokens, 7 * 1001);
+        assert_eq!(report.priced_tokens, report.total_tokens);
+    }
+
+    #[test]
+    fn serve_prices_every_moe_layer() {
+        // A 4-layer model's steps must cost ~4x a 1-layer model's on the
+        // same workload (planning overlap makes it slightly cheaper).
+        let reqs: Vec<Request> =
+            (0..6).map(|id| Request { id, arrival_s: 0.0, tokens: 4096 }).collect();
+        let mut model = ModelConfig::preset(ModelPreset::Fig1Layer);
+        let one = sim(PlannerKind::StandardEp).run(&reqs, &mut Rng::new(4));
+        model.num_layers = 4;
+        let engine4 = Engine::modeled(model, SystemConfig::preset(SystemPreset::H200x8));
+        let sim4 =
+            ServeSim::new(engine4, PlannerKind::StandardEp, Scenario::concentrated(0.9, 1), 8192);
+        let four = sim4.run(&reqs, &mut Rng::new(4));
+        assert_eq!(one.layers, 1);
+        assert_eq!(four.layers, 4);
+        assert!(
+            four.makespan_s > one.makespan_s * 3.0,
+            "4-layer steps must price all layers: {} vs {}",
+            four.makespan_s,
+            one.makespan_s
+        );
     }
 
     #[test]

@@ -20,15 +20,19 @@
 //! ## Backends
 //!
 //! * [`Engine::run_step`] — cost-model only, runs at paper scale.
+//! * [`Engine::run_model`] — all MoE layers of one forward step, one plan
+//!   per layer, planning pipelined against execution (see [`model`]).
 //! * [`Engine::run_step_real`] — moves real token matrices through the
 //!   plan and computes real expert FFNs via an [`ExpertCompute`] backend
 //!   (native rust GEMMs, or PJRT-loaded HLO artifacts), proving the plan
 //!   is an exact MoE computation.
 
 pub mod dispatch;
+pub mod model;
 mod pricing;
 mod real;
 
+pub use model::{LayerStep, ModelStepReport};
 pub use pricing::{price_plan, PhaseTimes};
 pub use real::{run_backward_real, run_step_real, NativeCompute, RealStep};
 
@@ -164,17 +168,31 @@ impl Engine {
         stats_lm: &LoadMatrix,
         planner: &PlannerKind,
     ) -> StepReport {
+        self.plan_and_price(lm, stats_lm, planner).0
+    }
+
+    /// Shared plan-measure-price block behind every modeled step (single-
+    /// layer and [`run_model`](Self::run_model) layers alike).
+    pub(crate) fn plan_and_price(
+        &self,
+        lm: &LoadMatrix,
+        stats_lm: &LoadMatrix,
+        planner: &PlannerKind,
+    ) -> (StepReport, crate::planner::RoutePlan) {
         let loads = lm.expert_loads();
         let stats = stats_lm.expert_loads();
-        // Warm the planner path once so the timed run measures the
-        // steady-state LLA latency (the paper's per-step overhead), not
-        // first-call page faults — planning is microseconds, so the
-        // extra run is negligible.
+        // Run the planner twice and charge the *faster* wall time: the
+        // first run absorbs first-call page faults, and the min is robust
+        // to a preemption/contention spike landing on either run (layers
+        // are planned on concurrent worker threads in run_model).
+        // Planning is microseconds, so the extra run is negligible.
+        let t_warm = std::time::Instant::now();
         let _ = planner.plan_with_stats(self.system.devices, &loads, &stats, Some(&self.topo));
+        let warm_s = t_warm.elapsed().as_secs_f64();
         let t0 = std::time::Instant::now();
         let plan = planner.plan_with_stats(self.system.devices, &loads, &stats, Some(&self.topo));
-        let plan_time_s = t0.elapsed().as_secs_f64();
-        price_plan(self, &plan, lm, planner, plan_time_s, None)
+        let plan_time_s = t0.elapsed().as_secs_f64().min(warm_s);
+        (price_plan(self, &plan, lm, planner, plan_time_s, None), plan)
     }
 
     /// Convenience wrapper taking token-level routing.
@@ -255,6 +273,22 @@ mod tests {
         let r = e.run_step_loads(&lm, &PlannerKind::StandardEp);
         assert_eq!(r.tokens, 8 * 1024);
         assert!(r.throughput() > 0.0);
+    }
+
+    #[test]
+    fn single_device_llep_step_does_not_panic() {
+        // Regression companion to lla::single_device_keeps_everything_native:
+        // the whole engine path must be total for P=1 as well.
+        let e = Engine::modeled(
+            ModelConfig::preset(ModelPreset::Tiny),
+            SystemConfig::preset(SystemPreset::CpuSim8).with_devices(1),
+        );
+        let mut rng = Rng::new(9);
+        let lm = Scenario::concentrated(0.95, 1).generate_loads(&e.model, 1, 4096, &mut rng);
+        let r = e.run_step_loads(&lm, &PlannerKind::llep_default());
+        assert_eq!(r.tokens, 4096);
+        assert!(!r.fallback_ep, "heavily imbalanced: LLA engages even at P=1");
+        assert_eq!(r.weight_transfers, 0, "nowhere to transfer to");
     }
 
     #[test]

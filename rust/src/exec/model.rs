@@ -1,0 +1,360 @@
+//! Multi-layer pipelined execution: one *model* step = all
+//! `model.num_moe_layers()` MoE layers of one forward pass, each layer
+//! with its own [`LoadMatrix`] and its own routing plan.
+//!
+//! ## Pipelined planning
+//!
+//! A single-layer step exposes the planner on the critical path
+//! (`T_meta + T_plan + ...`, see [`crate::exec`]). Across layers the
+//! coordinator can do better: once the step's routing statistics are
+//! known, the plan for layer `L+1` is computed *while* layer `L`
+//! executes, so only layer 0 pays its metadata + planning latency in
+//! full; every later layer pays only the part that does not fit inside
+//! the previous layer's execution span:
+//!
+//! ```text
+//! T_model = (meta_0 + plan_0)
+//!         + Σ_l exec_l
+//!         + Σ_{l>=1} max(0, (meta_l + plan_l) - exec_{l-1})
+//! ```
+//!
+//! where `exec_l = dispatch_l + compute_l + combine_l`. The identity
+//! `T_model = Σ_l T_l - overlap_saved` (serial sum minus the hidden
+//! planning time) is asserted by the property tests.
+//!
+//! Host-side planning for the whole stack is fanned out over a
+//! lightweight `std::thread::scope` pool (planning layers is embarrassingly
+//! parallel — each layer's plan depends only on its own loads), so the
+//! *wall* cost of planning 36+ layers stays near one layer's cost.
+
+use super::{Engine, StepReport};
+use crate::planner::{PlannerKind, RoutePlan};
+use crate::routing::{DepthProfile, LoadMatrix};
+use crate::util::rng::Rng;
+
+/// One layer of a model step: the priced report plus the plan that
+/// produced it (kept so callers can audit per-layer routing decisions).
+#[derive(Clone, Debug)]
+pub struct LayerStep {
+    pub report: StepReport,
+    pub plan: RoutePlan,
+}
+
+impl LayerStep {
+    /// Metadata + planning latency — the part pipelining can hide.
+    pub fn plan_span_s(&self) -> f64 {
+        self.report.phases.meta_s + self.report.phases.plan_s
+    }
+
+    /// Dispatch + compute + combine latency — the part that cannot.
+    pub fn exec_span_s(&self) -> f64 {
+        self.report.latency_s - self.plan_span_s()
+    }
+}
+
+/// Report for one full-model step (all MoE layers of one forward pass).
+#[derive(Clone, Debug)]
+pub struct ModelStepReport {
+    pub planner: String,
+    /// Per-layer reports + plans, in depth order.
+    pub layers: Vec<LayerStep>,
+    /// Pipelined end-to-end latency (planning overlapped with execution).
+    pub latency_s: f64,
+    /// Sum of stand-alone per-layer latencies (no overlap).
+    pub serial_latency_s: f64,
+    /// Planning/metadata time hidden behind execution:
+    /// `serial_latency_s - latency_s`.
+    pub overlap_saved_s: f64,
+    /// Per-device peak bytes, max across layers (activations are freed
+    /// between layers; per-layer Eq.-4 accounting as in the figures).
+    pub device_peak_bytes: Vec<u64>,
+    /// Tokens of the step's batch (each token traverses every layer).
+    pub tokens: u64,
+    /// True when any layer exceeded device memory.
+    pub oom: bool,
+    /// Layers whose lambda guard reverted to standard EP.
+    pub fallback_layers: usize,
+}
+
+impl ModelStepReport {
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn max_peak_bytes(&self) -> u64 {
+        self.device_peak_bytes.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Tokens per (virtual) second through the whole model step.
+    pub fn throughput(&self) -> f64 {
+        if self.latency_s > 0.0 {
+            self.tokens as f64 / self.latency_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Per-layer end-to-end latencies, in depth order.
+    pub fn layer_latencies_s(&self) -> Vec<f64> {
+        self.layers.iter().map(|l| l.report.latency_s).collect()
+    }
+}
+
+impl Engine {
+    /// Plan + price one step and also return the plan (the building block
+    /// of [`run_model`](Self::run_model); single-layer callers normally
+    /// want [`run_step_loads`](Self::run_step_loads)).
+    pub fn run_step_loads_with_plan(
+        &self,
+        lm: &LoadMatrix,
+        planner: &PlannerKind,
+    ) -> (StepReport, RoutePlan) {
+        self.plan_and_price(lm, lm, planner)
+    }
+
+    /// Execute one full-model step: one LLEP (or EP/EPLB) plan per MoE
+    /// layer, planning for layer `L+1` overlapped with execution of layer
+    /// `L`, per-layer planning fanned out across threads. `lms[l]` is the
+    /// routing of layer `l`; all layers must share the engine's device
+    /// count and expert count.
+    pub fn run_model(
+        &self,
+        lms: &[LoadMatrix],
+        planner: &PlannerKind,
+    ) -> Result<ModelStepReport, String> {
+        if lms.is_empty() {
+            return Err("run_model needs at least one layer's loads".into());
+        }
+        for (l, lm) in lms.iter().enumerate() {
+            lm.validate().map_err(|e| format!("layer {l}: {e}"))?;
+            if lm.devices() != self.system.devices {
+                return Err(format!(
+                    "layer {l}: {} devices, system has {}",
+                    lm.devices(),
+                    self.system.devices
+                ));
+            }
+            if lm.num_experts() != self.model.num_experts {
+                return Err(format!(
+                    "layer {l}: {} experts, model has {}",
+                    lm.num_experts(),
+                    self.model.num_experts
+                ));
+            }
+            // One forward step pushes one batch through every layer.
+            if lm.total_load() != lms[0].total_load() {
+                return Err(format!(
+                    "layer {l}: {} token slots, layer 0 has {} — all layers of one \
+                     step must price the same batch",
+                    lm.total_load(),
+                    lms[0].total_load()
+                ));
+            }
+        }
+
+        let layers = self.plan_layers_parallel(lms, planner);
+
+        // Fold per-layer spans into the pipelined virtual clock.
+        let serial_latency_s: f64 = layers.iter().map(|l| l.report.latency_s).sum();
+        let mut latency_s = 0.0;
+        let mut overlap_saved_s = 0.0;
+        let mut prev_exec = 0.0;
+        for (i, layer) in layers.iter().enumerate() {
+            let plan_span = layer.plan_span_s();
+            let exec_span = layer.exec_span_s();
+            if i == 0 {
+                latency_s += plan_span;
+            } else {
+                let hidden = plan_span.min(prev_exec);
+                overlap_saved_s += hidden;
+                latency_s += plan_span - hidden;
+            }
+            latency_s += exec_span;
+            prev_exec = exec_span;
+        }
+
+        let devices = self.system.devices;
+        let mut device_peak_bytes = vec![0u64; devices];
+        for layer in &layers {
+            for (d, &b) in layer.report.device_peak_bytes.iter().enumerate() {
+                device_peak_bytes[d] = device_peak_bytes[d].max(b);
+            }
+        }
+
+        Ok(ModelStepReport {
+            planner: planner.label(),
+            tokens: layers[0].report.tokens,
+            oom: layers.iter().any(|l| l.report.oom),
+            fallback_layers: layers.iter().filter(|l| l.report.fallback_ep).count(),
+            latency_s,
+            serial_latency_s,
+            overlap_saved_s,
+            device_peak_bytes,
+            layers,
+        })
+    }
+
+    /// Draw one load matrix per layer from `profile` and run a full-model
+    /// step (`tokens_per_device` tokens on every origin device).
+    pub fn run_model_profile(
+        &self,
+        profile: &DepthProfile,
+        planner: &PlannerKind,
+        tokens_per_device: usize,
+        rng: &mut Rng,
+    ) -> ModelStepReport {
+        let lms = profile.generate_loads(&self.model, self.system.devices, tokens_per_device, rng);
+        self.run_model(&lms, planner).expect("profile-generated loads are always consistent")
+    }
+
+    /// Plan + price every layer, fanned out over scoped worker threads.
+    /// Results land in depth order regardless of completion order.
+    fn plan_layers_parallel(&self, lms: &[LoadMatrix], planner: &PlannerKind) -> Vec<LayerStep> {
+        let n = lms.len();
+        let workers = std::thread::available_parallelism().map(|w| w.get()).unwrap_or(1).min(n);
+        let mut slots: Vec<Option<LayerStep>> = Vec::with_capacity(n);
+        slots.resize_with(n, || None);
+
+        if workers <= 1 {
+            for (slot, lm) in slots.iter_mut().zip(lms) {
+                let (report, plan) = self.run_step_loads_with_plan(lm, planner);
+                *slot = Some(LayerStep { report, plan });
+            }
+        } else {
+            let chunk = n.div_ceil(workers);
+            std::thread::scope(|scope| {
+                for (slot_chunk, lm_chunk) in slots.chunks_mut(chunk).zip(lms.chunks(chunk)) {
+                    scope.spawn(move || {
+                        for (slot, lm) in slot_chunk.iter_mut().zip(lm_chunk) {
+                            let (report, plan) = self.run_step_loads_with_plan(lm, planner);
+                            *slot = Some(LayerStep { report, plan });
+                        }
+                    });
+                }
+            });
+        }
+        slots.into_iter().map(|s| s.expect("every layer planned")).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelConfig, ModelPreset, SystemConfig, SystemPreset};
+    use crate::routing::Scenario;
+
+    fn engine(preset: ModelPreset) -> Engine {
+        Engine::modeled(
+            ModelConfig::preset(preset),
+            SystemConfig::preset(SystemPreset::H200x8),
+        )
+    }
+
+    #[test]
+    fn pipelined_latency_is_serial_minus_overlap() {
+        let e = engine(ModelPreset::GptOss120b); // 36 layers
+        let profile = DepthProfile::varying(&e.model, 0.4, 0.3);
+        let mut rng = Rng::new(1);
+        let r = e.run_model_profile(&profile, &PlannerKind::llep_default(), 8192, &mut rng);
+        assert_eq!(r.num_layers(), 36);
+        let identity = r.serial_latency_s - r.overlap_saved_s;
+        assert!(
+            (r.latency_s - identity).abs() <= 1e-9 * r.serial_latency_s.max(1e-30),
+            "latency {} vs serial-overlap {}",
+            r.latency_s,
+            identity
+        );
+        assert!(r.latency_s <= r.serial_latency_s);
+        assert!(r.overlap_saved_s >= 0.0);
+        assert!(r.throughput() > 0.0);
+    }
+
+    #[test]
+    fn per_layer_plans_match_independent_planning() {
+        let e = engine(ModelPreset::GptOss20b);
+        let profile = DepthProfile::varying(&e.model, 0.35, 0.2);
+        let mut rng = Rng::new(2);
+        let lms = profile.generate_loads(&e.model, 8, 8192, &mut rng);
+        let r = e.run_model(&lms, &PlannerKind::llep_default()).unwrap();
+        for (layer, lm) in r.layers.iter().zip(&lms) {
+            let independent =
+                PlannerKind::llep_default().plan(8, &lm.expert_loads(), Some(&e.topo));
+            assert_eq!(layer.plan, independent, "plans must not depend on batching");
+        }
+    }
+
+    #[test]
+    fn depth_varying_imbalance_mixes_fallback_and_llep_layers() {
+        let e = engine(ModelPreset::GptOss20b); // 24 layers
+        let profile = DepthProfile::from_scenarios(
+            (0..e.model.num_moe_layers())
+                .map(|i| {
+                    if i % 2 == 0 {
+                        Scenario::balanced()
+                    } else {
+                        Scenario::concentrated(0.9, 1)
+                    }
+                })
+                .collect(),
+        );
+        let mut rng = Rng::new(3);
+        let r = e.run_model_profile(&profile, &PlannerKind::llep_default(), 8192, &mut rng);
+        assert_eq!(r.fallback_layers, 12, "balanced layers fall back to EP");
+        assert!(!r.oom);
+    }
+
+    #[test]
+    fn multi_layer_llep_beats_ep_under_depth_imbalance() {
+        let e = engine(ModelPreset::GptOss120b);
+        let profile = DepthProfile::varying(&e.model, 0.5, 0.2);
+        let mut rng = Rng::new(4);
+        let lms = profile.generate_loads(&e.model, 8, 16_384, &mut rng);
+        let ep = e.run_model(&lms, &PlannerKind::StandardEp).unwrap();
+        let ll = e.run_model(&lms, &PlannerKind::llep_default()).unwrap();
+        assert!(
+            ll.latency_s < ep.latency_s,
+            "LLEP {} vs EP {}",
+            ll.latency_s,
+            ep.latency_s
+        );
+        assert!(ll.max_peak_bytes() <= ep.max_peak_bytes());
+        assert_eq!(ep.tokens, ll.tokens);
+    }
+
+    #[test]
+    fn single_layer_model_step_matches_single_step_structure() {
+        let e = engine(ModelPreset::Fig1Layer); // 1 layer
+        let mut rng = Rng::new(5);
+        let lm = Scenario::concentrated(0.9, 1).generate_loads(&e.model, 8, 8192, &mut rng);
+        let step = e.run_step_loads(&lm, &PlannerKind::llep_default());
+        let model = e.run_model(std::slice::from_ref(&lm), &PlannerKind::llep_default()).unwrap();
+        assert_eq!(model.num_layers(), 1);
+        // Deterministic quantities agree exactly; only measured plan time
+        // can differ between the two runs.
+        let l = &model.layers[0].report;
+        assert_eq!(l.device_compute_s, step.device_compute_s);
+        assert_eq!(l.device_peak_bytes, step.device_peak_bytes);
+        assert_eq!(l.bytes_dispatch, step.bytes_dispatch);
+        assert_eq!(model.tokens, step.tokens);
+        // A single layer has nothing to overlap with.
+        assert_eq!(model.overlap_saved_s, 0.0);
+    }
+
+    #[test]
+    fn run_model_rejects_inconsistent_inputs() {
+        let e = engine(ModelPreset::Fig1Layer);
+        assert!(e.run_model(&[], &PlannerKind::StandardEp).is_err());
+        let mut rng = Rng::new(6);
+        // wrong device count
+        let lm4 = Scenario::balanced().generate_loads(&e.model, 4, 128, &mut rng);
+        assert!(e.run_model(&[lm4], &PlannerKind::StandardEp).is_err());
+        // wrong expert count
+        let tiny = ModelConfig::preset(ModelPreset::Tiny);
+        let lm_tiny = Scenario::balanced().generate_loads(&tiny, 8, 128, &mut rng);
+        assert!(e.run_model(&[lm_tiny], &PlannerKind::StandardEp).is_err());
+        // layers disagreeing on the batch size
+        let a = Scenario::balanced().generate_loads(&e.model, 8, 128, &mut rng);
+        let b = Scenario::balanced().generate_loads(&e.model, 8, 256, &mut rng);
+        assert!(e.run_model(&[a, b], &PlannerKind::StandardEp).is_err());
+    }
+}

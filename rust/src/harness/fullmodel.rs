@@ -8,9 +8,9 @@
 //! damped version of the MoE-layer speedup — exactly the Fig.-1c shape.
 
 use crate::config::{ModelConfig, ModelPreset, SystemConfig, SystemPreset};
-use crate::exec::Engine;
+use crate::exec::{Engine, ModelStepReport};
 use crate::planner::PlannerKind;
-use crate::routing::Scenario;
+use crate::routing::{DepthProfile, Scenario};
 use crate::util::rng::Rng;
 
 /// One Fig.-1c row.
@@ -83,10 +83,13 @@ pub fn throughput_row(
 /// routing distribution (different layers specialize on different
 /// experts — paper Fig. 3a is a per-layer maximum), so per-batch the
 /// imbalance degree varies across depth exactly as observed in §3.1.
+/// Steps are priced with the pipelined multi-layer engine
+/// ([`Engine::run_model`]): one plan per layer, planning for layer `L+1`
+/// overlapped with execution of layer `L`.
 pub struct FullModelSim {
     pub engine: Engine,
-    /// Per-layer dominant expert (layer i favours a different expert).
-    layer_scenarios: Vec<Scenario>,
+    /// Per-layer routing scenarios (layer i favours a different expert).
+    pub profile: DepthProfile,
 }
 
 /// Per-step result of the layered simulation.
@@ -96,6 +99,8 @@ pub struct FullModelStep {
     pub attn_s: f64,
     pub peak_bytes: u64,
     pub fallback_layers: usize,
+    /// Full per-layer breakdown of the MoE part.
+    pub report: ModelStepReport,
 }
 
 impl FullModelStep {
@@ -108,12 +113,8 @@ impl FullModelSim {
     pub fn new(preset: ModelPreset, devices: usize, dominance: f64, drift: f64) -> FullModelSim {
         let model = ModelConfig::preset(preset);
         let system = SystemConfig::preset(SystemPreset::H200x8).with_devices(devices);
-        let n = model.num_experts;
-        let layers = model.num_layers;
-        let layer_scenarios = (0..layers)
-            .map(|i| Scenario::drifting((7 * i + 11) % n, dominance, drift))
-            .collect();
-        FullModelSim { engine: Engine::modeled(model, system), layer_scenarios }
+        let profile = DepthProfile::varying(&model, dominance, drift);
+        FullModelSim { engine: Engine::modeled(model, system), profile }
     }
 
     /// Simulate one full forward step under `planner`.
@@ -128,17 +129,14 @@ impl FullModelSim {
         let total_tokens = (tokens_per_device * devices) as f64;
         let attn_s = model.num_layers as f64 * total_tokens * attn_flops_per_token(model)
             / (self.engine.gemm.peak_flops * devices as f64);
-        let mut moe_s = 0.0;
-        let mut peak = 0u64;
-        let mut fallback_layers = 0;
-        for sc in &self.layer_scenarios {
-            let lm = sc.generate_loads(model, devices, tokens_per_device, rng);
-            let r = self.engine.run_step_loads(&lm, planner);
-            moe_s += r.latency_s;
-            peak = peak.max(r.max_peak_bytes());
-            fallback_layers += r.fallback_ep as usize;
+        let report = self.engine.run_model_profile(&self.profile, planner, tokens_per_device, rng);
+        FullModelStep {
+            moe_s: report.latency_s,
+            attn_s,
+            peak_bytes: report.max_peak_bytes(),
+            fallback_layers: report.fallback_layers,
+            report,
         }
-        FullModelStep { moe_s, attn_s, peak_bytes: peak, fallback_layers }
     }
 
     /// Throughput (tokens/s) averaged over `batches` steps.
@@ -179,6 +177,19 @@ mod tests {
         // others are not — both behaviours appear in one step
         assert!(step.fallback_layers < sim.engine.model.num_layers);
         assert!(step.moe_s > 0.0 && step.attn_s > 0.0);
+    }
+
+    #[test]
+    fn pipelined_step_reports_per_layer_breakdown() {
+        let sim = FullModelSim::new(ModelPreset::GptOss20b, 8, 0.3, 0.2);
+        let mut rng = Rng::new(5);
+        let step = sim.step(&PlannerKind::llep_default(), 8192, &mut rng);
+        assert_eq!(step.report.num_layers(), sim.engine.model.num_moe_layers());
+        // ms-scale execution always hides the µs-scale planning of the
+        // next layer, so pipelining must save something real.
+        assert!(step.report.overlap_saved_s > 0.0);
+        assert!(step.moe_s < step.report.serial_latency_s);
+        assert_eq!(step.report.layer_latencies_s().len(), step.report.num_layers());
     }
 
     #[test]

@@ -14,7 +14,10 @@
 //!   accounting (paper Eq. 3/4).
 //! * **Layer 2/1 (python, build path only)** — a JAX MoE model whose
 //!   hot-spot expert FFN is a Pallas kernel; lowered once to HLO text and
-//!   executed from rust through [`runtime`] (PJRT CPU client).
+//!   executed from rust through the `runtime` module (PJRT CPU client).
+//!   The PJRT path depends on the vendored `xla` + `anyhow` crates and is
+//!   gated behind the `pjrt` cargo feature (off by default, so the crate
+//!   builds fully offline with zero dependencies).
 //!
 //! The testbed substitution (no GPUs here — see DESIGN.md) is that the
 //! `P` devices are *virtual*: every GEMM / transfer is charged to the
@@ -51,9 +54,11 @@ pub mod metrics;
 pub mod moe;
 pub mod planner;
 pub mod routing;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod tensor;
 pub mod topology;
+#[cfg(feature = "pjrt")]
 pub mod trainer;
 pub mod util;
 
@@ -63,9 +68,9 @@ pub mod prelude {
         LlepConfig, ModelConfig, ModelPreset, SystemConfig, SystemPreset,
     };
     pub use crate::costmodel::{CommCostModel, GemmCostModel, MemoryModel};
-    pub use crate::exec::{Engine, GemmBackendKind, StepReport};
+    pub use crate::exec::{Engine, GemmBackendKind, ModelStepReport, StepReport};
     pub use crate::planner::{PlannerKind, RoutePlan};
-    pub use crate::routing::{Routing, Scenario};
+    pub use crate::routing::{DepthProfile, Routing, Scenario};
     pub use crate::topology::Topology;
     pub use crate::util::rng::Rng;
 }

@@ -14,9 +14,9 @@ use llep::config::{load_experiment, LlepConfig, ModelConfig, ModelPreset, System
 use llep::coordinator::{RunSummary, Runner, ServeSim};
 use llep::exec::Engine;
 use llep::harness;
-use llep::metrics::{format_bytes, format_secs, Table};
+use llep::metrics::{format_bytes, format_secs, model_report_table, Table};
 use llep::planner::PlannerKind;
-use llep::routing::{RoutingTrace, Scenario};
+use llep::routing::{DepthProfile, RoutingTrace, Scenario};
 use llep::util::cli::Spec;
 use llep::util::rng::Rng;
 
@@ -31,6 +31,7 @@ fn main() {
         .opt("batches", "trace batches")
         .opt("devices", "EP world size")
         .opt("tokens", "tokens per device")
+        .opt("layers", "MoE layer count override for full-model pricing")
         .opt("alpha", "LLEP capacity factor")
         .opt("lambda", "LLEP imbalance trigger")
         .opt("min-gemm", "LLEP min tokens per GEMM")
@@ -40,6 +41,7 @@ fn main() {
         .opt("hot", "number of hot experts")
         .opt("seed", "rng seed")
         .opt("artifacts", "artifacts directory (default ./artifacts)")
+        .flag("full-model", "price every MoE layer per step (pipelined planning)")
         .flag("real", "measure real GEMMs where applicable")
         .flag("help", "show usage");
 
@@ -132,6 +134,12 @@ fn cmd_figures(args: &llep::util::cli::Args) -> Result<(), String> {
 
 /// Short Fig-5 run (60 steps) for `figures --fig 5`; the full experiment
 /// lives in examples/e2e_train.rs.
+#[cfg(not(feature = "pjrt"))]
+fn fig5_curve() -> Result<(), String> {
+    Err("built without the `pjrt` feature (PJRT/XLA runtime unavailable)".into())
+}
+
+#[cfg(feature = "pjrt")]
 fn fig5_curve() -> Result<(), String> {
     let rt = llep::runtime::Runtime::open(&llep::runtime::Runtime::default_dir())
         .map_err(|e| format!("{e:#}"))?;
@@ -180,7 +188,11 @@ fn engine_from_args(args: &llep::util::cli::Args) -> Result<(Engine, LlepConfig)
     let preset = ModelPreset::from_name(&model_name)
         .ok_or_else(|| format!("unknown model preset {model_name}"))?;
     let devices = args.get_usize("devices", 8)?;
-    let model = ModelConfig::preset(preset);
+    let mut model = ModelConfig::preset(preset);
+    let layers = args.get_usize("layers", 0)?;
+    if layers > 0 {
+        model.num_layers = layers;
+    }
     let system = SystemConfig::preset(SystemPreset::H200x8).with_devices(devices);
     let llep = LlepConfig {
         alpha: args.get_f64("alpha", 1.0)?,
@@ -209,6 +221,10 @@ fn cmd_run(args: &llep::util::cli::Args) -> Result<(), String> {
         let seed = args.get_usize("seed", 0)? as u64;
         (engine, llep, scenario, tokens, seed)
     };
+
+    if args.has_flag("full-model") {
+        return cmd_run_full_model(&engine, llep, &scenario, tokens, seed);
+    }
 
     let mut rng = Rng::new(seed);
     let lm = scenario.generate_loads(&engine.model, engine.system.devices, tokens, &mut rng);
@@ -242,6 +258,67 @@ fn cmd_run(args: &llep::util::cli::Args) -> Result<(), String> {
         ),
         &t,
     );
+    Ok(())
+}
+
+/// `run --full-model`: price one forward step across every MoE layer of
+/// the model with per-layer plans and pipelined planning, then show the
+/// per-layer LLEP breakdown. Drifting scenarios expand to a depth-varying
+/// profile (a different hotspot per layer); others apply uniformly.
+fn cmd_run_full_model(
+    engine: &Engine,
+    llep_cfg: LlepConfig,
+    scenario: &Scenario,
+    tokens: usize,
+    seed: u64,
+) -> Result<(), String> {
+    let layers = engine.model.num_moe_layers();
+    let profile = match scenario {
+        Scenario::Drifting { dominance, drift, .. } => {
+            DepthProfile::varying(&engine.model, *dominance, *drift)
+        }
+        _ => DepthProfile::uniform(scenario.clone(), layers),
+    };
+    let mut rng = Rng::new(seed);
+    let lms = profile.generate_loads(&engine.model, engine.system.devices, tokens, &mut rng);
+
+    let mut t = Table::new(&[
+        "planner", "latency", "serial", "overlap saved", "peak mem", "xfers", "fallback", "OOM",
+    ]);
+    let mut llep_report = None;
+    for kind in [
+        PlannerKind::StandardEp,
+        PlannerKind::Llep(llep_cfg),
+        PlannerKind::Eplb { replicas: engine.system.devices },
+    ] {
+        let r = engine.run_model(&lms, &kind)?;
+        t.row(vec![
+            r.planner.clone(),
+            format_secs(r.latency_s),
+            format_secs(r.serial_latency_s),
+            format_secs(r.overlap_saved_s),
+            format_bytes(r.max_peak_bytes()),
+            r.layers.iter().map(|l| l.report.weight_transfers).sum::<usize>().to_string(),
+            format!("{}/{}", r.fallback_layers, r.num_layers()),
+            if r.oom { "OOM".into() } else { "-".into() },
+        ]);
+        if matches!(kind, PlannerKind::Llep(_)) {
+            llep_report = Some(r);
+        }
+    }
+    print_table(
+        &format!(
+            "{} | full model, {layers} MoE layers | P={} | {} tokens/device | {}",
+            engine.model.name,
+            engine.system.devices,
+            tokens,
+            profile.label()
+        ),
+        &t,
+    );
+    if let Some(r) = llep_report {
+        print_table("LLEP per-layer breakdown", &model_report_table(&r));
+    }
     Ok(())
 }
 
@@ -314,6 +391,14 @@ fn cmd_replay(args: &llep::util::cli::Args) -> Result<(), String> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_train(_args: &llep::util::cli::Args) -> Result<(), String> {
+    Err("`train` needs the PJRT runtime — rebuild with `--features pjrt` \
+         (requires the vendored xla/anyhow crates)"
+        .into())
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_train(args: &llep::util::cli::Args) -> Result<(), String> {
     let steps = args.get_usize("steps", 200)?;
     let dir = args
@@ -395,9 +480,19 @@ fn cmd_info() -> Result<(), String> {
             s.gemm.peak_flops
         );
     }
+    print_artifacts_info();
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn print_artifacts_info() {
     match llep::runtime::Runtime::open(&llep::runtime::Runtime::default_dir()) {
         Ok(rt) => println!("\nartifacts: {} entries on {}", rt.len(), rt.platform()),
         Err(e) => println!("\nartifacts: unavailable ({e})"),
     }
-    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn print_artifacts_info() {
+    println!("\nartifacts: unavailable (built without the `pjrt` feature)");
 }

@@ -3,7 +3,7 @@
 
 pub mod chart;
 
-use crate::exec::StepReport;
+use crate::exec::{ModelStepReport, StepReport};
 use crate::util::json::Json;
 
 pub use crate::util::stats::Summary;
@@ -130,6 +130,59 @@ pub fn report_to_json(r: &StepReport) -> Json {
     ])
 }
 
+/// Per-layer latency/memory breakdown of a full-model step.
+pub fn model_report_table(r: &ModelStepReport) -> Table {
+    let mut t = Table::new(&[
+        "layer", "latency", "plan", "dispatch", "weights", "compute", "combine", "peak mem",
+        "xfers", "mode",
+    ]);
+    for (i, layer) in r.layers.iter().enumerate() {
+        let rep = &layer.report;
+        t.row(vec![
+            format!("L{i}"),
+            format_secs(rep.latency_s),
+            format_secs(rep.phases.plan_s),
+            format_secs(rep.phases.dispatch_s),
+            format_secs(rep.phases.weights_s),
+            format_secs(rep.phases.compute_s),
+            format_secs(rep.phases.combine_s),
+            format_bytes(rep.max_peak_bytes()),
+            rep.weight_transfers.to_string(),
+            if rep.fallback_ep { "EP-fallback".into() } else { "LLA".into() },
+        ]);
+    }
+    t
+}
+
+/// JSON export of a full-model step report, including the per-layer
+/// latency and memory series (for machine-readable bench logs).
+pub fn model_report_to_json(r: &ModelStepReport) -> Json {
+    Json::obj(vec![
+        ("planner", Json::str(&r.planner)),
+        ("layers", Json::num(r.num_layers() as f64)),
+        ("latency_s", Json::num(r.latency_s)),
+        ("serial_latency_s", Json::num(r.serial_latency_s)),
+        ("overlap_saved_s", Json::num(r.overlap_saved_s)),
+        ("peak_bytes", Json::num(r.max_peak_bytes() as f64)),
+        ("tokens", Json::num(r.tokens as f64)),
+        ("throughput_tps", Json::num(r.throughput())),
+        ("oom", Json::Bool(r.oom)),
+        ("fallback_layers", Json::num(r.fallback_layers as f64)),
+        (
+            "layer_latencies_s",
+            Json::arr(r.layers.iter().map(|l| Json::num(l.report.latency_s))),
+        ),
+        (
+            "layer_peak_bytes",
+            Json::arr(r.layers.iter().map(|l| Json::num(l.report.max_peak_bytes() as f64))),
+        ),
+        (
+            "layer_weight_transfers",
+            Json::arr(r.layers.iter().map(|l| Json::num(l.report.weight_transfers as f64))),
+        ),
+    ])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -169,5 +222,29 @@ mod tests {
     fn table_rejects_wrong_arity() {
         let mut t = Table::new(&["a", "b"]);
         t.row(vec!["only one".into()]);
+    }
+
+    #[test]
+    fn model_report_breakdown_lists_every_layer() {
+        use crate::config::{ModelConfig, ModelPreset, SystemConfig, SystemPreset};
+        use crate::exec::Engine;
+        use crate::planner::PlannerKind;
+        use crate::routing::DepthProfile;
+        use crate::util::rng::Rng;
+
+        let mut model = ModelConfig::preset(ModelPreset::Fig1Layer);
+        model.num_layers = 3;
+        let engine = Engine::modeled(model.clone(), SystemConfig::preset(SystemPreset::H200x8));
+        let profile = DepthProfile::varying(&model, 0.5, 0.0);
+        let mut rng = Rng::new(1);
+        let r = engine.run_model_profile(&profile, &PlannerKind::llep_default(), 4096, &mut rng);
+
+        let table = model_report_table(&r);
+        assert_eq!(table.rows.len(), 3);
+        assert!(table.render().contains("L2"));
+
+        let json = model_report_to_json(&r).to_string();
+        assert!(json.contains("\"layers\""));
+        assert!(json.contains("layer_latencies_s"));
     }
 }

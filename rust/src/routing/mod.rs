@@ -14,7 +14,7 @@ mod scenario;
 mod stats;
 mod trace;
 
-pub use scenario::Scenario;
+pub use scenario::{DepthProfile, Scenario};
 pub use stats::{gpu_load_shares, imbalance_ratio, RoutingStats};
 pub use trace::{RoutingTrace, TraceBatch};
 

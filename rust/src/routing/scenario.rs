@@ -156,6 +156,118 @@ impl Scenario {
         }
         LoadMatrix { counts, top_k: k }
     }
+
+    /// Like [`generate_loads`](Self::generate_loads) but distributes an
+    /// exact *total* token count across devices (largest-remainder: the
+    /// first `total % devices` devices carry one extra token). The serving
+    /// simulators use this so priced work always equals admitted work —
+    /// `(total / devices).max(1)` rounding silently dropped or invented
+    /// tokens whenever a batch did not divide evenly.
+    pub fn generate_loads_total(
+        &self,
+        model: &ModelConfig,
+        devices: usize,
+        total_tokens: usize,
+        rng: &mut Rng,
+    ) -> LoadMatrix {
+        let n = model.num_experts;
+        let k = model.top_k;
+        let w = self.slot_weights(n, rng);
+        let w_total: f64 = w.iter().sum();
+        let base = total_tokens / devices;
+        let extra = total_tokens % devices;
+        let mut counts = Vec::with_capacity(devices);
+        for p in 0..devices {
+            let tokens = base + if p < extra { 1 } else { 0 };
+            let slots = (tokens * k) as f64;
+            let expected: Vec<f64> = w.iter().map(|&wi| slots * wi / w_total).collect();
+            counts.push(round_to_total(&expected, (tokens * k) as u64));
+        }
+        LoadMatrix { counts, top_k: k }
+    }
+}
+
+/// Per-layer routing scenarios for one full forward step — different MoE
+/// layers specialize on different experts (paper Fig. 3a is a per-layer
+/// maximum), so the imbalance degree and hotspot location vary across
+/// depth. [`crate::exec::Engine::run_model`] draws one [`LoadMatrix`] per
+/// layer from a profile.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DepthProfile {
+    layers: Vec<Scenario>,
+}
+
+impl DepthProfile {
+    /// Every layer routes with the same scenario.
+    pub fn uniform(scenario: Scenario, layers: usize) -> DepthProfile {
+        assert!(layers >= 1, "a model has at least one MoE layer");
+        DepthProfile { layers: vec![scenario; layers] }
+    }
+
+    /// Explicit per-layer scenarios.
+    pub fn from_scenarios(layers: Vec<Scenario>) -> DepthProfile {
+        assert!(!layers.is_empty(), "a model has at least one MoE layer");
+        DepthProfile { layers }
+    }
+
+    /// Depth-varying imbalance over all of `model`'s MoE layers: layer `i`
+    /// favours expert `(7 i + 11) mod N` with the given average dominance
+    /// and per-batch drift — each depth has its own hotspot, as observed
+    /// in paper §3.1.
+    pub fn varying(model: &ModelConfig, dominance: f64, drift: f64) -> DepthProfile {
+        let n = model.num_experts;
+        let layers = model.num_moe_layers().max(1);
+        DepthProfile {
+            layers: (0..layers).map(|i| Scenario::drifting((7 * i + 11) % n, dominance, drift)).collect(),
+        }
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn scenarios(&self) -> &[Scenario] {
+        &self.layers
+    }
+
+    pub fn label(&self) -> String {
+        let first = &self.layers[0];
+        if self.layers.iter().all(|s| s == first) {
+            format!("{} x{} layers", first.label(), self.layers.len())
+        } else {
+            format!("depth-varying x{} layers", self.layers.len())
+        }
+    }
+
+    /// One load matrix per layer, `tokens_per_device` tokens on each
+    /// origin device.
+    pub fn generate_loads(
+        &self,
+        model: &ModelConfig,
+        devices: usize,
+        tokens_per_device: usize,
+        rng: &mut Rng,
+    ) -> Vec<LoadMatrix> {
+        self.layers
+            .iter()
+            .map(|sc| sc.generate_loads(model, devices, tokens_per_device, rng))
+            .collect()
+    }
+
+    /// One load matrix per layer carrying an exact batch total (see
+    /// [`Scenario::generate_loads_total`]).
+    pub fn generate_loads_total(
+        &self,
+        model: &ModelConfig,
+        devices: usize,
+        total_tokens: usize,
+        rng: &mut Rng,
+    ) -> Vec<LoadMatrix> {
+        self.layers
+            .iter()
+            .map(|sc| sc.generate_loads_total(model, devices, total_tokens, rng))
+            .collect()
+    }
 }
 
 /// Round expectations to integers preserving the exact total
@@ -290,5 +402,56 @@ mod tests {
     fn labels_are_descriptive() {
         assert_eq!(Scenario::concentrated(0.95, 1).label(), "95% into 1");
         assert_eq!(Scenario::balanced().label(), "balanced");
+    }
+
+    #[test]
+    fn loads_total_carries_exact_batch() {
+        let model = tiny(); // K = 2
+        let mut rng = Rng::new(8);
+        // 1003 tokens over 4 devices: 251, 251, 251, 250.
+        let lm = Scenario::concentrated(0.8, 2).generate_loads_total(&model, 4, 1003, &mut rng);
+        lm.validate().unwrap();
+        assert_eq!(lm.total_load(), 1003 * 2);
+        assert_eq!(lm.tokens_per_device(), vec![251, 251, 251, 250]);
+        // fewer tokens than devices: the first ones get a token each
+        let lm = Scenario::balanced().generate_loads_total(&model, 4, 3, &mut rng);
+        lm.validate().unwrap();
+        assert_eq!(lm.tokens_per_device(), vec![1, 1, 1, 0]);
+    }
+
+    #[test]
+    fn depth_profile_shapes_and_labels() {
+        let model = tiny();
+        let uniform = DepthProfile::uniform(Scenario::balanced(), 3);
+        assert_eq!(uniform.num_layers(), 3);
+        assert_eq!(uniform.label(), "balanced x3 layers");
+
+        let varying = DepthProfile::varying(&model, 0.4, 0.0);
+        assert_eq!(varying.num_layers(), model.num_moe_layers());
+        assert!(varying.label().contains("layers"));
+
+        let mut rng = Rng::new(9);
+        let lms = varying.generate_loads(&model, 4, 256, &mut rng);
+        assert_eq!(lms.len(), model.num_moe_layers());
+        for lm in &lms {
+            lm.validate().unwrap();
+            assert_eq!(lm.total_load(), 4 * 256 * model.top_k as u64);
+        }
+    }
+
+    #[test]
+    fn depth_varying_hotspots_differ_across_layers() {
+        // dominance with zero drift: layer i's argmax is (7i+11) mod N.
+        let mut model = tiny();
+        model.num_layers = 4;
+        let profile = DepthProfile::varying(&model, 0.5, 0.0);
+        let mut rng = Rng::new(10);
+        let lms = profile.generate_loads(&model, 2, 2048, &mut rng);
+        let argmax = |lm: &LoadMatrix| {
+            let l = lm.expert_loads();
+            (0..l.len()).max_by_key(|&i| l[i]).unwrap()
+        };
+        let hot: Vec<usize> = lms.iter().map(argmax).collect();
+        assert_eq!(hot, vec![11 % 8, (7 + 11) % 8, (14 + 11) % 8, (21 + 11) % 8]);
     }
 }

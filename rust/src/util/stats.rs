@@ -21,7 +21,9 @@ impl Summary {
             return Summary { n: 0, mean: 0.0, std: 0.0, min: 0.0, p50: 0.0, p90: 0.0, p99: 0.0, max: 0.0 };
         }
         let mut s: Vec<f64> = samples.to_vec();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp: NaN samples sort to the ends instead of panicking
+        // (partial_cmp().unwrap() would abort on the first NaN).
+        s.sort_by(f64::total_cmp);
         let n = s.len();
         let mean = s.iter().sum::<f64>() / n as f64;
         let var = s.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
@@ -106,6 +108,20 @@ mod tests {
         let s = Summary::of(&[]);
         assert_eq!(s.n, 0);
         assert_eq!(s.mean, 0.0);
+    }
+
+    #[test]
+    fn summary_handles_nan_without_panicking() {
+        // Regression: sort_by(partial_cmp().unwrap()) panicked on NaN.
+        let s = Summary::of(&[1.0, f64::NAN, 3.0]);
+        assert_eq!(s.n, 3);
+        // Positive NaN sorts after every number under the total order.
+        assert_eq!(s.min, 1.0);
+        assert!(s.max.is_nan());
+        // All-NaN input must also survive.
+        let s = Summary::of(&[f64::NAN, f64::NAN]);
+        assert_eq!(s.n, 2);
+        assert!(s.mean.is_nan());
     }
 
     #[test]

@@ -61,6 +61,26 @@ fn run_compares_three_planners() {
 }
 
 #[test]
+fn run_full_model_prices_all_layers() {
+    let out = run_ok(&[
+        "run",
+        "--model",
+        "gpt-oss-20b",
+        "--full-model",
+        "--layers",
+        "6",
+        "--scenario",
+        "drift",
+        "--tokens",
+        "4096",
+    ]);
+    assert!(out.contains("full model, 6 MoE layers"), "{out}");
+    assert!(out.contains("overlap saved"), "{out}");
+    assert!(out.contains("LLEP per-layer breakdown"), "{out}");
+    assert!(out.contains("L5"), "per-layer rows present:\n{out}");
+}
+
+#[test]
 fn run_loads_config_file() {
     let cfg = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("configs/fig1.toml");
     let out = run_ok(&["run", "--config", cfg.to_str().unwrap()]);

@@ -1,0 +1,184 @@
+//! Integration/property tests for the multi-layer pipelined engine path
+//! ([`Engine::run_model`]): the pipelined-latency identity, plan
+//! composability (batching layers must not change any layer's plan), and
+//! conservation across depth — checked over randomized depth profiles.
+
+use llep::config::{ModelConfig, ModelPreset, SystemConfig, SystemPreset};
+use llep::exec::Engine;
+use llep::planner::PlannerKind;
+use llep::routing::{DepthProfile, Scenario};
+use llep::util::prop::{assert_property, no_shrink};
+use llep::util::rng::Rng;
+
+fn engine(layers: usize) -> Engine {
+    let mut model = ModelConfig::preset(ModelPreset::Fig1Layer);
+    model.num_layers = layers;
+    Engine::modeled(model, SystemConfig::preset(SystemPreset::H200x8))
+}
+
+/// A random multi-layer workload.
+#[derive(Clone, Debug)]
+struct Workload {
+    layers: usize,
+    tokens: usize,
+    seed: u64,
+    /// Per-layer (concentration, hot) pairs; concentration 0 = balanced.
+    shape: Vec<(f64, usize)>,
+}
+
+fn gen_workload(rng: &mut Rng) -> Workload {
+    let layers = rng.range(1, 12);
+    Workload {
+        layers,
+        tokens: [1024usize, 4096, 16_384][rng.index(3)],
+        seed: rng.next_u64(),
+        shape: (0..layers)
+            .map(|_| (rng.f64(), [1usize, 4, 16][rng.index(3)]))
+            .collect(),
+    }
+}
+
+fn profile_for(w: &Workload) -> DepthProfile {
+    DepthProfile::from_scenarios(
+        w.shape
+            .iter()
+            .map(|&(c, hot)| {
+                if c < 0.05 {
+                    Scenario::balanced()
+                } else {
+                    Scenario::concentrated(c, hot)
+                }
+            })
+            .collect(),
+    )
+}
+
+/// The virtual-clock contract of the pipeline: the model-step latency is
+/// exactly the sum of per-layer collective latencies minus the planning
+/// time hidden behind execution (`overlap_saved_s`), and overlap can
+/// never exceed what the layers' planning phases cost in total.
+#[test]
+fn pipelined_latency_identity_holds_for_any_profile() {
+    assert_property(
+        "model latency = serial - overlap",
+        11,
+        40,
+        gen_workload,
+        |w| {
+            let e = engine(w.layers);
+            let profile = profile_for(w);
+            let mut rng = Rng::new(w.seed);
+            let lms = profile.generate_loads(&e.model, 8, w.tokens, &mut rng);
+            let r = e.run_model(&lms, &PlannerKind::llep_default())?;
+            let identity = r.serial_latency_s - r.overlap_saved_s;
+            let tol = 1e-9 * r.serial_latency_s.max(1e-30);
+            if (r.latency_s - identity).abs() > tol {
+                return Err(format!(
+                    "latency {} != serial {} - overlap {}",
+                    r.latency_s, r.serial_latency_s, r.overlap_saved_s
+                ));
+            }
+            if r.latency_s > r.serial_latency_s + tol {
+                return Err("pipelining made the step slower".into());
+            }
+            let plan_total: f64 =
+                r.layers.iter().map(|l| l.report.phases.meta_s + l.report.phases.plan_s).sum();
+            if r.overlap_saved_s > plan_total + tol {
+                return Err(format!(
+                    "overlap {} exceeds total planning cost {plan_total}",
+                    r.overlap_saved_s
+                ));
+            }
+            Ok(())
+        },
+        no_shrink,
+    );
+}
+
+/// Per-layer plans must be identical to planning each layer on its own:
+/// batching layers into one model step is a scheduling change, not a
+/// routing change.
+#[test]
+fn model_step_plans_equal_independent_plans() {
+    assert_property(
+        "plan composability",
+        13,
+        25,
+        gen_workload,
+        |w| {
+            let e = engine(w.layers);
+            let profile = profile_for(w);
+            let mut rng = Rng::new(w.seed);
+            let lms = profile.generate_loads(&e.model, 8, w.tokens, &mut rng);
+            for kind in [PlannerKind::StandardEp, PlannerKind::llep_default()] {
+                let r = e.run_model(&lms, &kind)?;
+                for (i, (layer, lm)) in r.layers.iter().zip(&lms).enumerate() {
+                    let independent = kind.plan(8, &lm.expert_loads(), Some(&e.topo));
+                    if layer.plan != independent {
+                        return Err(format!("{}: layer {i} plan differs", kind.label()));
+                    }
+                }
+            }
+            Ok(())
+        },
+        no_shrink,
+    );
+}
+
+/// Per-layer reports inside a model step carry exactly the deterministic
+/// quantities a stand-alone step over the same loads reports.
+#[test]
+fn model_step_layers_match_standalone_steps() {
+    let e = engine(5);
+    let profile = DepthProfile::varying(&e.model, 0.4, 0.3);
+    let mut rng = Rng::new(42);
+    let lms = profile.generate_loads(&e.model, 8, 8192, &mut rng);
+    let r = e.run_model(&lms, &PlannerKind::llep_default()).unwrap();
+    assert_eq!(r.num_layers(), 5);
+    for (layer, lm) in r.layers.iter().zip(&lms) {
+        let standalone = e.run_step_loads(lm, &PlannerKind::llep_default());
+        assert_eq!(layer.report.device_compute_s, standalone.device_compute_s);
+        assert_eq!(layer.report.device_peak_bytes, standalone.device_peak_bytes);
+        assert_eq!(layer.report.bytes_dispatch, standalone.bytes_dispatch);
+        assert_eq!(layer.report.bytes_combine, standalone.bytes_combine);
+        assert_eq!(layer.report.bytes_weights, standalone.bytes_weights);
+        assert_eq!(layer.report.gemm_calls, standalone.gemm_calls);
+        assert_eq!(layer.report.tokens, standalone.tokens);
+    }
+}
+
+/// Tokens are conserved across depth: every layer of a model step prices
+/// the same batch, and the step's token count is the batch's (tokens are
+/// not multiplied by layer count).
+#[test]
+fn tokens_counted_once_per_step() {
+    let e = engine(8);
+    let profile = DepthProfile::uniform(Scenario::concentrated(0.8, 4), 8);
+    let mut rng = Rng::new(7);
+    let lms = profile.generate_loads(&e.model, 8, 2048, &mut rng);
+    let r = e.run_model(&lms, &PlannerKind::llep_default()).unwrap();
+    assert_eq!(r.tokens, 8 * 2048);
+    for layer in &r.layers {
+        assert_eq!(layer.report.tokens, 8 * 2048);
+    }
+    // throughput uses the pipelined clock
+    assert!((r.throughput() - r.tokens as f64 / r.latency_s).abs() < 1e-9);
+}
+
+/// Multi-layer LLEP against multi-layer EP on a depth-varying imbalance
+/// profile: the speedup survives depth (every layer is imbalanced, just
+/// differently), and per-layer fallback happens only where routing is
+/// balanced.
+#[test]
+fn depth_varying_imbalance_speedup() {
+    let e = engine(12);
+    let profile = DepthProfile::varying(&e.model, 0.5, 0.2);
+    let mut rng = Rng::new(3);
+    let lms = profile.generate_loads(&e.model, 8, 16_384, &mut rng);
+    let ep = e.run_model(&lms, &PlannerKind::StandardEp).unwrap();
+    let ll = e.run_model(&lms, &PlannerKind::llep_default()).unwrap();
+    let speedup = ep.latency_s / ll.latency_s;
+    assert!(speedup > 1.5, "depth-varying speedup too small: {speedup:.2}");
+    assert!(ll.max_peak_bytes() < ep.max_peak_bytes());
+    assert_eq!(ll.fallback_layers, 0, "every layer is imbalanced here");
+}
