@@ -18,7 +18,8 @@ fn main() {
     // 200 requests, bursty arrivals, 256-4096 tokens each.
     let requests = ServeSim::poisson_requests(200, 0.0002, 256, 4096, &mut rng);
     println!(
-        "serving {} requests ({} total tokens) | gpt-oss-120b, {} MoE layers per step | 80% into 4 experts\n",
+        "serving {} requests ({} total tokens) | gpt-oss-120b, {} MoE layers per step | 80% \
+         into 4 experts\n",
         requests.len(),
         requests.iter().map(|r| r.tokens).sum::<usize>(),
         engine.model.num_moe_layers()

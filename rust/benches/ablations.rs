@@ -46,7 +46,10 @@ fn main() {
             format!("{:.2}", s.peak_bytes as f64 / (1u64 << 30) as f64),
         ]);
     }
-    println!("Ablation — drifting hotspot, {batches} batches (EPLB uses stale stats)\n{}", t.render());
+    println!(
+        "Ablation — drifting hotspot, {batches} batches (EPLB uses stale stats)\n{}",
+        t.render()
+    );
 
     // --- Ablation: intra-node spill preference on 2 nodes ------------------
     let model16 = ModelConfig::preset(ModelPreset::GptOss120b);

@@ -1,0 +1,136 @@
+//! Bench: decode-dominated serving with cross-step plan reuse.
+//!
+//! Two measurements:
+//!
+//! 1. **Planner microbench** — fresh LLEP planning vs a `CachedPlanner`
+//!    hit on an unchanged load matrix. The hit replays the cached plan
+//!    via the O(segments) retarget path, so its wall time must sit well
+//!    below a fresh plan's sort+spill, while the engine prices both
+//!    bit-identically (checked and printed below).
+//! 2. **Decode loop** — `ContinuousBatchSim` in the steady decode regime
+//!    with and without the cache: the report shows the hit rate and the
+//!    p50 per-step planning time dropping while TPOT accounting stays
+//!    honest (priced == admitted).
+//!
+//! Run: `cargo bench --bench decode_loop` (add `--quick` to shrink).
+
+use llep::coordinator::ContinuousBatchSim;
+use llep::metrics::{format_cache, format_secs, planner_comparison_table, Table};
+use llep::prelude::*;
+use llep::util::benchkit::{bb, quick_requested, Bencher};
+
+fn main() {
+    let quick = quick_requested();
+    let engine = Engine::modeled(
+        ModelConfig::preset(ModelPreset::Fig1Layer),
+        SystemConfig::preset(SystemPreset::H200x8),
+    );
+
+    // ---- 1. fresh plan vs cached hit on unchanged loads ------------------
+    let mut rng = Rng::new(1);
+    let lm = Scenario::concentrated(0.9, 1).generate_loads(&engine.model, 8, 4096, &mut rng);
+    let loads = lm.expert_loads();
+    let llep = PlannerKind::llep_default();
+
+    let mut b = if quick { Bencher::quick() } else { Bencher::new() };
+    let fresh = b.bench("plan/fresh/llep/N=128", || bb(llep.plan(8, &loads, Some(&engine.topo))));
+
+    let cached = CachedPlanner::new(PlannerKind::llep_default().boxed());
+    let _ = cached.plan(8, &loads, Some(&engine.topo)); // prime: one miss
+    let hit = b.bench("plan/cached-hit/llep/N=128", || {
+        bb(cached.plan(8, &loads, Some(&engine.topo)))
+    });
+    println!(
+        "\ncached hit {} vs fresh replan {} -> {:.1}x less planner time on the decode \
+         critical path{}",
+        format_secs(hit.mean_s()),
+        format_secs(fresh.mean_s()),
+        fresh.mean_ns / hit.mean_ns.max(1.0),
+        if hit.mean_ns < fresh.mean_ns { "" } else { "  [UNEXPECTED: hit not cheaper]" }
+    );
+
+    // Identical pricing on unchanged loads (the honesty contract): every
+    // deterministic quantity agrees between cached-hit and fresh steps.
+    let fresh_step = engine.run_step_loads(&lm, &llep);
+    let hit_step = engine.run_step_loads(&lm, &cached);
+    let identical = hit_step.device_compute_s == fresh_step.device_compute_s
+        && hit_step.device_peak_bytes == fresh_step.device_peak_bytes
+        && hit_step.bytes_dispatch == fresh_step.bytes_dispatch
+        && hit_step.bytes_weights == fresh_step.bytes_weights
+        && hit_step.gemm_calls == fresh_step.gemm_calls;
+    assert!(identical, "cached-vs-fresh pricing must be identical on unchanged loads");
+    assert!(hit_step.cache.hits == 1, "step must have been served from the cache");
+    println!(
+        "pricing identical on unchanged loads: {identical} (compute max {}, peak {} B)\n",
+        format_secs(hit_step.phases.compute_s),
+        hit_step.max_peak_bytes()
+    );
+
+    // Full-model planner comparison rows (EP baseline, fresh LLEP, and a
+    // cache hit serving the same step).
+    let lms = std::slice::from_ref(&lm);
+    let ep_model = engine.run_model(lms, &PlannerKind::StandardEp).unwrap();
+    let ll_model = engine.run_model(lms, &PlannerKind::llep_default()).unwrap();
+    let hit_model = engine.run_model(lms, &cached).unwrap(); // warm cache -> hit
+    println!("{}", planner_comparison_table(&[ep_model, ll_model, hit_model]).render());
+
+    // ---- 2. decode-dominated continuous batching -------------------------
+    // Short prompts, long decodes: after the brief prefill phase every
+    // step is a small decode batch with a near-stationary routing
+    // signature — the regime where plan reuse pays.
+    let n_req = if quick { 12 } else { 32 };
+    let mut reqs_rng = Rng::new(2);
+    let requests =
+        ContinuousBatchSim::requests(n_req, 0.00002, (64, 128), (96, 160), &mut reqs_rng);
+
+    let scenario = Scenario::concentrated(0.9, 1);
+    let plain = ContinuousBatchSim::new(
+        engine.clone(),
+        PlannerKind::llep_default(),
+        scenario.clone(),
+        16_384,
+    );
+    let reuse = ContinuousBatchSim::with_planner(
+        engine.clone(),
+        Box::new(
+            CachedPlanner::new(PlannerKind::llep_default().boxed())
+                .with_drift_threshold(0.25)
+                .with_replan_every(64),
+        ),
+        scenario,
+        16_384,
+    );
+
+    let r_plain = plain.run(&requests, &mut Rng::new(3));
+    let r_reuse = reuse.run(&requests, &mut Rng::new(3));
+
+    let mut t = Table::new(&[
+        "planner", "steps", "tpot p50", "p50 plan/step", "plan cache", "priced==admitted",
+    ]);
+    for r in [&r_plain, &r_reuse] {
+        t.row(vec![
+            r.planner.clone(),
+            r.steps.to_string(),
+            format_secs(r.tpot.p50),
+            format_secs(r.plan_time.p50),
+            format_cache(&r.plan_cache),
+            r.tokens.is_exact().to_string(),
+        ]);
+    }
+    println!("Decode loop — {n_req} requests, ~128 decode steps each, P=8\n");
+    println!("{}", t.render());
+    assert!(r_plain.tokens.is_exact() && r_reuse.tokens.is_exact());
+    assert!(
+        r_reuse.plan_cache.hits > r_reuse.plan_cache.misses,
+        "steady decode must mostly reuse: {:?}",
+        r_reuse.plan_cache
+    );
+    println!(
+        "reused-plan steps price {} p50 planning vs {} replanned — {:.1}x off the decode \
+         critical path at {:.0}% hit rate",
+        format_secs(r_reuse.plan_time.p50),
+        format_secs(r_plain.plan_time.p50),
+        r_plain.plan_time.p50 / r_reuse.plan_time.p50.max(1e-12),
+        r_reuse.plan_cache.hit_rate() * 100.0
+    );
+}

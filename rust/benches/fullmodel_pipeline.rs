@@ -52,7 +52,9 @@ fn main() {
     // Wall cost of the simulator itself: parallel-planned run_model vs a
     // serial per-layer loop over the identical loads.
     let mut b = if quick { Bencher::quick() } else { Bencher::new() };
-    b.bench("run_model/llep/36-layers", || bb(engine.run_model(&lms, &PlannerKind::llep_default())));
+    b.bench("run_model/llep/36-layers", || {
+        bb(engine.run_model(&lms, &PlannerKind::llep_default()))
+    });
     b.bench("run_model/ep/36-layers", || bb(engine.run_model(&lms, &PlannerKind::StandardEp)));
     b.bench("serial_loop/llep/36-layers", || {
         let mut acc = 0.0f64;

@@ -240,7 +240,8 @@ seed = 7
 
     #[test]
     fn model_field_overrides() {
-        let cfg = load_experiment("[model]\npreset = \"tiny\"\nnum_experts = 16\ntop_k = 4\n").unwrap();
+        let cfg =
+            load_experiment("[model]\npreset = \"tiny\"\nnum_experts = 16\ntop_k = 4\n").unwrap();
         assert_eq!(cfg.model.num_experts, 16);
         assert_eq!(cfg.model.top_k, 4);
     }

@@ -9,46 +9,54 @@ mod mitigation;
 mod serve;
 
 pub use mitigation::{split_loads, BatchSplitPolicy, SplitOutcome};
-pub use serve::{ContinuousBatchSim, ContinuousReport, GenRequest, Request, ServeReport, ServeSim};
+pub use serve::{
+    ContinuousBatchSim, ContinuousReport, GenRequest, Request, ServeReport, ServeSim, TokenLedger,
+};
 
 use crate::exec::{Engine, StepReport};
-use crate::planner::PlannerKind;
+use crate::planner::{Planner, PlannerKind};
 use crate::routing::{LoadMatrix, RoutingTrace};
 use crate::util::stats::Summary;
 
 /// Multi-batch runner for one planner policy.
 pub struct Runner {
     pub engine: Engine,
-    pub planner: PlannerKind,
-    /// EPLB places replicas from the previous batch's statistics (the
-    /// time delay the paper criticizes); LLEP/EP ignore this.
+    pub planner: Box<dyn Planner>,
+    /// Stats-driven planners (EPLB) place replicas from the previous
+    /// batch's statistics (the time delay the paper criticizes); pure
+    /// per-step planners ignore this.
     prev_loads: Option<LoadMatrix>,
 }
 
 impl Runner {
     pub fn new(engine: Engine, planner: PlannerKind) -> Runner {
+        Runner::with_planner(engine, planner.boxed())
+    }
+
+    /// Build from any trait planner (e.g. a `--planner` spec or a
+    /// [`CachedPlanner`](crate::planner::CachedPlanner)).
+    pub fn with_planner(engine: Engine, planner: Box<dyn Planner>) -> Runner {
         Runner { engine, planner, prev_loads: None }
     }
 
-    /// Run one batch; EPLB uses the previous batch's loads as placement
-    /// statistics (first batch: balanced assumption = uniform stats).
+    /// Run one batch; stale-stats planners (EPLB) use the previous
+    /// batch's loads as placement statistics (first batch: balanced
+    /// assumption = uniform stats).
     pub fn step(&mut self, lm: &LoadMatrix) -> StepReport {
-        let report = match (&self.planner, &self.prev_loads) {
-            (PlannerKind::Eplb { .. }, Some(prev)) => {
-                self.engine.run_step_loads_with_stats(lm, prev, &self.planner)
+        let report = if self.planner.wants_stale_stats() {
+            match &self.prev_loads {
+                Some(prev) => self.engine.run_step_loads_with_stats(lm, prev, &*self.planner),
+                None => {
+                    // no stats yet: uniform prior
+                    let uniform = LoadMatrix {
+                        counts: vec![vec![1; lm.num_experts()]; lm.devices()],
+                        top_k: 1,
+                    };
+                    self.engine.run_step_loads_with_stats(lm, &uniform, &*self.planner)
+                }
             }
-            (PlannerKind::Eplb { .. }, None) => {
-                // no stats yet: uniform prior
-                let uniform = LoadMatrix {
-                    counts: vec![
-                        vec![1; lm.num_experts()];
-                        lm.devices()
-                    ],
-                    top_k: 1,
-                };
-                self.engine.run_step_loads_with_stats(lm, &uniform, &self.planner)
-            }
-            _ => self.engine.run_step_loads(lm, &self.planner),
+        } else {
+            self.engine.run_step_loads(lm, &*self.planner)
         };
         self.prev_loads = Some(lm.clone());
         report

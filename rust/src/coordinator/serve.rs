@@ -9,19 +9,68 @@
 //! the vLLM-router-shaped workload the paper's "higher-throughput
 //! inference" claim is about.
 //!
+//! Both simulators run any trait [`Planner`] — in particular the
+//! [`CachedPlanner`](crate::planner::CachedPlanner) decorator, whose
+//! cross-step plan reuse takes `T_plan` off the decode critical path; the
+//! per-run hit/miss/forced counters and per-step planning-time summary
+//! are surfaced in the reports.
+//!
 //! Token accounting is exact: each batch's total token count is carried
 //! into the priced load matrices via
 //! [`Scenario::generate_loads_total`](crate::routing::Scenario::generate_loads_total)
-//! (largest-remainder split across devices), so reported throughput and
-//! priced work always agree — the old `(batch / devices).max(1)` rounding
-//! silently priced `per_device * devices != batch_tokens` loads.
+//! (largest-remainder split across devices), and both reports carry a
+//! [`TokenLedger`] whose admitted and priced sides must agree (asserted
+//! by tests).
 
-use crate::exec::Engine;
-use crate::planner::PlannerKind;
+use crate::exec::{Engine, ModelStepReport};
+use crate::planner::{CacheStats, Planner, PlannerKind};
 use crate::routing::{DepthProfile, Scenario};
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
 use std::collections::VecDeque;
+
+/// Admitted-vs-priced token accounting shared by both serving reports:
+/// `admitted` tokens entered from the request stream, `priced` tokens
+/// were charged by the engine. The contract is equality.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TokenLedger {
+    pub admitted: u64,
+    pub priced: u64,
+}
+
+impl TokenLedger {
+    pub fn add(&mut self, admitted: u64, priced: u64) {
+        self.admitted += admitted;
+        self.priced += priced;
+    }
+
+    /// True when every admitted token was priced exactly once.
+    pub fn is_exact(&self) -> bool {
+        self.admitted == self.priced
+    }
+}
+
+/// Shared constructor boilerplate: every MoE layer of the engine's model
+/// routes with `scenario` (single-layer models still get one layer).
+fn uniform_profile(engine: &Engine, scenario: Scenario) -> DepthProfile {
+    DepthProfile::uniform(scenario, engine.model.num_moe_layers().max(1))
+}
+
+/// Shared step pricer for both simulators: one full-model engine step
+/// over exactly `step_tokens` tokens drawn from `profile`.
+fn price_step(
+    engine: &Engine,
+    profile: &DepthProfile,
+    planner: &dyn Planner,
+    step_tokens: usize,
+    rng: &mut Rng,
+) -> ModelStepReport {
+    let lms =
+        profile.generate_loads_total(&engine.model, engine.system.devices, step_tokens, rng);
+    engine
+        .run_model(&lms, planner)
+        .expect("profile-generated loads are always consistent")
+}
 
 /// One inference request.
 #[derive(Clone, Debug)]
@@ -39,20 +88,21 @@ pub struct ServeReport {
     pub makespan_s: f64,
     pub request_latency: Summary,
     pub batches: usize,
-    /// Tokens admitted from the request stream.
-    pub total_tokens: u64,
-    /// Tokens actually priced by the engine — equals `total_tokens` (the
-    /// accounting contract; asserted by tests).
-    pub priced_tokens: u64,
+    /// Admitted-vs-priced token accounting (equal by contract).
+    pub tokens: TokenLedger,
     pub oom_batches: usize,
     /// MoE layers priced per step.
     pub layers: usize,
+    /// Plan-cache counters summed over all steps and layers.
+    pub plan_cache: CacheStats,
+    /// Per-step planning wall time (sum across the step's layers).
+    pub plan_time: Summary,
 }
 
 impl ServeReport {
     pub fn throughput_tps(&self) -> f64 {
         if self.makespan_s > 0.0 {
-            self.total_tokens as f64 / self.makespan_s
+            self.tokens.admitted as f64 / self.makespan_s
         } else {
             0.0
         }
@@ -62,7 +112,7 @@ impl ServeReport {
 /// Serving simulator over a fixed request list.
 pub struct ServeSim {
     pub engine: Engine,
-    pub planner: PlannerKind,
+    pub planner: Box<dyn Planner>,
     /// Per-layer routing scenarios for the full-model step.
     pub profile: DepthProfile,
     /// Max tokens per device per batch.
@@ -70,16 +120,25 @@ pub struct ServeSim {
 }
 
 impl ServeSim {
-    /// Every MoE layer of the engine's model routes with `scenario`.
+    /// Backward-compatible constructor from the [`PlannerKind`] enum.
     pub fn new(
         engine: Engine,
         planner: PlannerKind,
         scenario: Scenario,
         max_tokens_per_device: usize,
     ) -> ServeSim {
-        let layers = engine.model.num_moe_layers().max(1);
+        ServeSim::with_planner(engine, planner.boxed(), scenario, max_tokens_per_device)
+    }
+
+    /// Constructor from any trait planner (spec-parsed, cached, custom).
+    pub fn with_planner(
+        engine: Engine,
+        planner: Box<dyn Planner>,
+        scenario: Scenario,
+        max_tokens_per_device: usize,
+    ) -> ServeSim {
         ServeSim {
-            profile: DepthProfile::uniform(scenario, layers),
+            profile: uniform_profile(&engine, scenario),
             engine,
             planner,
             max_tokens_per_device,
@@ -117,9 +176,10 @@ impl ServeSim {
         let mut next = 0usize;
         let mut latencies = Vec::with_capacity(requests.len());
         let mut batches = 0usize;
-        let mut total_tokens = 0u64;
-        let mut priced_tokens = 0u64;
+        let mut tokens = TokenLedger::default();
         let mut oom_batches = 0usize;
+        let mut plan_cache = CacheStats::default();
+        let mut plan_times: Vec<f64> = Vec::new();
         let mut queue: VecDeque<&Request> = VecDeque::new();
 
         while next < requests.len() || !queue.is_empty() {
@@ -147,20 +207,13 @@ impl ServeSim {
                 continue;
             }
             // price a full-model step over the exact batch total
-            let lms = self.profile.generate_loads_total(
-                &self.engine.model,
-                devices,
-                batch_tokens,
-                rng,
-            );
-            let report = self
-                .engine
-                .run_model(&lms, &self.planner)
-                .expect("profile-generated loads are always consistent");
+            let report =
+                price_step(&self.engine, &self.profile, &*self.planner, batch_tokens, rng);
             clock += report.latency_s;
             batches += 1;
-            total_tokens += batch_tokens as u64;
-            priced_tokens += report.tokens;
+            tokens.add(batch_tokens as u64, report.tokens);
+            plan_cache.absorb(&report.cache);
+            plan_times.push(report.layers.iter().map(|l| l.report.phases.plan_s).sum::<f64>());
             if report.oom {
                 oom_batches += 1;
             }
@@ -175,10 +228,11 @@ impl ServeSim {
             makespan_s: clock,
             request_latency: Summary::of(&latencies),
             batches,
-            total_tokens,
-            priced_tokens,
+            tokens,
             oom_batches,
             layers: self.profile.num_layers(),
+            plan_cache,
+            plan_time: Summary::of(&plan_times),
         }
     }
 }
@@ -201,36 +255,57 @@ pub struct ContinuousReport {
     pub makespan_s: f64,
     /// Time to first token (prefill completion) per request.
     pub ttft: Summary,
-    /// Per-decode-step latency across all requests.
+    /// Per-decode-step latency across all requests: every step
+    /// contributes one sample **per active decoding request** (weighting
+    /// by `decode_tokens`), so the mean is the per-token latency a
+    /// request actually experienced. A request's first token comes out of
+    /// its prefill step (counted by `ttft`, not here), so `tpot.n` equals
+    /// `sum(max(decode_steps - 1, 0))` over completed requests.
     pub tpot: Summary,
     pub steps: usize,
     /// Steps where every MoE layer's lambda guard reverted to EP.
     pub fallback_steps: usize,
+    /// Admitted-vs-priced token accounting (equal by contract).
+    pub tokens: TokenLedger,
+    /// Plan-cache counters summed over all steps and layers.
+    pub plan_cache: CacheStats,
+    /// Per-step planning wall time (sum across the step's layers).
+    pub plan_time: Summary,
 }
 
 /// vLLM-style continuous batching: every engine step batches the newly
 /// admitted requests' prefills together with one token from every active
 /// decode, priced across **all** MoE layers of the model per step.
 /// Decode-heavy steps are small and latency-bound — the regime where
-/// LLEP's lambda guard and the fused-collective option matter.
+/// LLEP's lambda guard, the fused-collective option, and cross-step plan
+/// reuse matter.
 pub struct ContinuousBatchSim {
     pub engine: Engine,
-    pub planner: PlannerKind,
+    pub planner: Box<dyn Planner>,
     pub profile: DepthProfile,
     pub max_prefill_tokens: usize,
 }
 
 impl ContinuousBatchSim {
-    /// Every MoE layer of the engine's model routes with `scenario`.
+    /// Backward-compatible constructor from the [`PlannerKind`] enum.
     pub fn new(
         engine: Engine,
         planner: PlannerKind,
         scenario: Scenario,
         max_prefill_tokens: usize,
     ) -> ContinuousBatchSim {
-        let layers = engine.model.num_moe_layers().max(1);
+        ContinuousBatchSim::with_planner(engine, planner.boxed(), scenario, max_prefill_tokens)
+    }
+
+    /// Constructor from any trait planner (spec-parsed, cached, custom).
+    pub fn with_planner(
+        engine: Engine,
+        planner: Box<dyn Planner>,
+        scenario: Scenario,
+        max_prefill_tokens: usize,
+    ) -> ContinuousBatchSim {
         ContinuousBatchSim {
-            profile: DepthProfile::uniform(scenario, layers),
+            profile: uniform_profile(&engine, scenario),
             engine,
             planner,
             max_prefill_tokens,
@@ -267,7 +342,6 @@ impl ContinuousBatchSim {
 
     /// Run to completion.
     pub fn run(&self, requests: &[GenRequest], rng: &mut Rng) -> ContinuousReport {
-        let devices = self.engine.system.devices;
         let mut clock = 0.0f64;
         let mut next = 0usize;
         let mut waiting: VecDeque<&GenRequest> = VecDeque::new();
@@ -278,6 +352,9 @@ impl ContinuousBatchSim {
         let mut completed = 0usize;
         let mut steps = 0usize;
         let mut fallback_steps = 0usize;
+        let mut tokens = TokenLedger::default();
+        let mut plan_cache = CacheStats::default();
+        let mut plan_times: Vec<f64> = Vec::new();
 
         while completed < requests.len() {
             if waiting.is_empty() && active.is_empty() {
@@ -308,19 +385,14 @@ impl ContinuousBatchSim {
                 continue;
             }
             // full-model step over the exact token total
-            let lms = self.profile.generate_loads_total(
-                &self.engine.model,
-                devices,
-                step_tokens,
-                rng,
-            );
-            let report = self
-                .engine
-                .run_model(&lms, &self.planner)
-                .expect("profile-generated loads are always consistent");
+            let report =
+                price_step(&self.engine, &self.profile, &*self.planner, step_tokens, rng);
             clock += report.latency_s;
             steps += 1;
             fallback_steps += (report.fallback_layers == report.num_layers()) as usize;
+            tokens.add(step_tokens as u64, report.tokens);
+            plan_cache.absorb(&report.cache);
+            plan_times.push(report.layers.iter().map(|l| l.report.phases.plan_s).sum::<f64>());
 
             // prefill completions = first token
             for req in admitted {
@@ -331,8 +403,9 @@ impl ContinuousBatchSim {
                     completed += 1;
                 }
             }
-            // one decode step for everyone active
-            if decode_tokens > 0 {
+            // one decode token for every active request: one tpot sample
+            // per (request, step) pair, so multi-request steps weigh more
+            for _ in 0..decode_tokens {
                 tpot.push(report.latency_s);
             }
             active.retain_mut(|(left, _)| {
@@ -354,6 +427,9 @@ impl ContinuousBatchSim {
             tpot: Summary::of(&tpot),
             steps,
             fallback_steps,
+            tokens,
+            plan_cache,
+            plan_time: Summary::of(&plan_times),
         }
     }
 }
@@ -362,13 +438,17 @@ impl ContinuousBatchSim {
 mod tests {
     use super::*;
     use crate::config::{ModelConfig, ModelPreset, SystemConfig, SystemPreset};
+    use crate::planner::CachedPlanner;
 
-    fn sim(planner: PlannerKind) -> ServeSim {
-        let engine = Engine::modeled(
+    fn engine() -> Engine {
+        Engine::modeled(
             ModelConfig::preset(ModelPreset::Fig1Layer),
             SystemConfig::preset(SystemPreset::H200x8),
-        );
-        ServeSim::new(engine, planner, Scenario::concentrated(0.9, 1), 8192)
+        )
+    }
+
+    fn sim(planner: PlannerKind) -> ServeSim {
+        ServeSim::new(engine(), planner, Scenario::concentrated(0.9, 1), 8192)
     }
 
     #[test]
@@ -380,6 +460,7 @@ mod tests {
         assert!(report.makespan_s > 0.0);
         assert!(report.batches > 0);
         assert!(report.request_latency.mean > 0.0);
+        assert_eq!(report.plan_cache, CacheStats::default(), "uncached planner: zero counters");
     }
 
     #[test]
@@ -399,8 +480,8 @@ mod tests {
             (0..7).map(|id| Request { id, arrival_s: 0.0, tokens: 1001 }).collect();
         let report = sim(PlannerKind::StandardEp).run(&reqs, &mut Rng::new(9));
         assert_eq!(report.completed, 7);
-        assert_eq!(report.total_tokens, 7 * 1001);
-        assert_eq!(report.priced_tokens, report.total_tokens);
+        assert_eq!(report.tokens.admitted, 7 * 1001);
+        assert!(report.tokens.is_exact(), "{:?}", report.tokens);
     }
 
     #[test]
@@ -443,12 +524,27 @@ mod tests {
         assert!(ll.throughput_tps() > ep.throughput_tps());
     }
 
-    fn continuous(planner: PlannerKind) -> ContinuousBatchSim {
-        let engine = Engine::modeled(
-            ModelConfig::preset(ModelPreset::Fig1Layer),
-            SystemConfig::preset(SystemPreset::H200x8),
+    #[test]
+    fn cached_planner_reuses_across_batches() {
+        // Identical burst batches: after the first (miss), the cache
+        // serves steady hits, accounting stays exact, and the counters
+        // surface in the report.
+        let reqs: Vec<Request> =
+            (0..12).map(|id| Request { id, arrival_s: 0.0, tokens: 8192 * 8 }).collect();
+        let cached = Box::new(
+            CachedPlanner::new(PlannerKind::llep_default().boxed()).with_drift_threshold(0.1),
         );
-        ContinuousBatchSim::new(engine, planner, Scenario::concentrated(0.8, 4), 16_384)
+        let s = ServeSim::with_planner(engine(), cached, Scenario::concentrated(0.9, 1), 8192);
+        let report = s.run(&reqs, &mut Rng::new(7));
+        assert_eq!(report.completed, 12);
+        assert!(report.planner.starts_with("Cached["), "{}", report.planner);
+        assert_eq!(report.plan_cache.lookups(), report.batches as u64);
+        assert!(report.plan_cache.hits > 0, "steady load must reuse: {:?}", report.plan_cache);
+        assert!(report.tokens.is_exact(), "{:?}", report.tokens);
+    }
+
+    fn continuous(planner: PlannerKind) -> ContinuousBatchSim {
+        ContinuousBatchSim::new(engine(), planner, Scenario::concentrated(0.8, 4), 16_384)
     }
 
     #[test]
@@ -460,6 +556,28 @@ mod tests {
         assert!(r.ttft.mean > 0.0);
         assert!(r.tpot.n > 0, "decode steps happened");
         assert!(r.steps >= 4, "multiple engine steps: {}", r.steps);
+        assert!(r.tokens.is_exact(), "{:?}", r.tokens);
+    }
+
+    #[test]
+    fn tpot_weights_by_active_decodes() {
+        // Regression for the old accounting, which pushed one sample per
+        // step no matter how many requests were decoding: with per-active-
+        // request samples, tpot.n must equal the total decode tokens.
+        let reqs = vec![
+            GenRequest { id: 0, arrival_s: 0.0, prompt_tokens: 64, decode_steps: 5 },
+            GenRequest { id: 1, arrival_s: 0.0, prompt_tokens: 64, decode_steps: 2 },
+            GenRequest { id: 2, arrival_s: 0.0, prompt_tokens: 64, decode_steps: 7 },
+        ];
+        let r = continuous(PlannerKind::StandardEp).run(&reqs, &mut Rng::new(1));
+        assert_eq!(r.completed, 3);
+        // The first token of each request comes out of its prefill step
+        // (ttft), so each request decodes for decode_steps - 1 further
+        // steps: 4 + 1 + 6 samples, not 3 (one per step, the old bug).
+        let expected: usize = reqs.iter().map(|q| q.decode_steps.saturating_sub(1)).sum();
+        assert_eq!(r.tpot.n, expected, "one tpot sample per decode token per request");
+        assert!(r.tpot.n > r.steps - 1, "weighted: more samples than decode steps");
+        assert!(r.tokens.is_exact(), "{:?}", r.tokens);
     }
 
     #[test]

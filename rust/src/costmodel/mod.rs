@@ -47,7 +47,8 @@ impl GemmCostModel {
             return 0.0;
         }
         let flops = tokens as f64 * model.flops_per_token();
-        self.overhead_s + flops / (self.peak_flops * self.efficiency(tokens, model.d_model, model.d_ff))
+        self.overhead_s
+            + flops / (self.peak_flops * self.efficiency(tokens, model.d_model, model.d_ff))
     }
 
     /// Latency of a sequence of per-expert GEMMs on one device (paper

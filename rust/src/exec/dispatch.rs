@@ -142,10 +142,14 @@ mod tests {
         let cs = chunks(&plan, &lm);
         // expert 0 native device 0: dev0 keeps 3 local, dev1 sends 5
         // expert 1 native device 1: dev0 sends 1, dev1 keeps 7
-        assert!(cs.contains(&Chunk { expert: 0, origin: 0, dest: 0, local_start: 0, local_end: 3 }));
-        assert!(cs.contains(&Chunk { expert: 0, origin: 1, dest: 0, local_start: 0, local_end: 5 }));
-        assert!(cs.contains(&Chunk { expert: 1, origin: 0, dest: 1, local_start: 0, local_end: 1 }));
-        assert!(cs.contains(&Chunk { expert: 1, origin: 1, dest: 1, local_start: 0, local_end: 7 }));
+        let want = Chunk { expert: 0, origin: 0, dest: 0, local_start: 0, local_end: 3 };
+        assert!(cs.contains(&want));
+        let want = Chunk { expert: 0, origin: 1, dest: 0, local_start: 0, local_end: 5 };
+        assert!(cs.contains(&want));
+        let want = Chunk { expert: 1, origin: 0, dest: 1, local_start: 0, local_end: 1 };
+        assert!(cs.contains(&want));
+        let want = Chunk { expert: 1, origin: 1, dest: 1, local_start: 0, local_end: 7 };
+        assert!(cs.contains(&want));
         assert_eq!(cs.len(), 4);
         let total: u64 = cs.iter().map(|c| c.tokens()).sum();
         assert_eq!(total, 16);
@@ -181,9 +185,12 @@ mod tests {
             crate::planner::Segment { device: 0, start: 6, end: 8, forced: false },
         ];
         let cs: Vec<Chunk> = chunks(&plan, &lm).into_iter().filter(|c| c.expert == 0).collect();
-        assert!(cs.contains(&Chunk { expert: 0, origin: 0, dest: 1, local_start: 2, local_end: 3 }));
-        assert!(cs.contains(&Chunk { expert: 0, origin: 1, dest: 1, local_start: 0, local_end: 3 }));
-        assert!(cs.contains(&Chunk { expert: 0, origin: 1, dest: 0, local_start: 3, local_end: 5 }));
+        let want = Chunk { expert: 0, origin: 0, dest: 1, local_start: 2, local_end: 3 };
+        assert!(cs.contains(&want));
+        let want = Chunk { expert: 0, origin: 1, dest: 1, local_start: 0, local_end: 3 };
+        assert!(cs.contains(&want));
+        let want = Chunk { expert: 0, origin: 1, dest: 0, local_start: 3, local_end: 5 };
+        assert!(cs.contains(&want));
         let total: u64 = cs.iter().map(|c| c.tokens()).sum();
         assert_eq!(total, 8);
     }

@@ -39,7 +39,7 @@ pub use real::{run_backward_real, run_step_real, NativeCompute, RealStep};
 use crate::config::{ModelConfig, SystemConfig};
 use crate::costmodel::{CommCostModel, GemmCostModel, MemoryModel};
 use crate::moe::ExpertWeights;
-use crate::planner::PlannerKind;
+use crate::planner::{CacheStats, Planner};
 use crate::routing::{LoadMatrix, Routing};
 use crate::tensor::Mat;
 use crate::topology::Topology;
@@ -86,6 +86,12 @@ pub struct StepReport {
     pub fallback_ep: bool,
     /// Total tokens processed this step.
     pub tokens: u64,
+    /// Plan-cache outcome for this step's plan (all zero for planners
+    /// without a cache; exactly one field is 1 for a [`CachedPlanner`]
+    /// step).
+    ///
+    /// [`CachedPlanner`]: crate::planner::CachedPlanner
+    pub cache: CacheStats,
 }
 
 impl StepReport {
@@ -156,7 +162,7 @@ impl Engine {
     }
 
     /// Plan + price one step from a load matrix (paper-scale path).
-    pub fn run_step_loads(&self, lm: &LoadMatrix, planner: &PlannerKind) -> StepReport {
+    pub fn run_step_loads(&self, lm: &LoadMatrix, planner: &dyn Planner) -> StepReport {
         self.run_step_loads_with_stats(lm, lm, planner)
     }
 
@@ -166,7 +172,7 @@ impl Engine {
         &self,
         lm: &LoadMatrix,
         stats_lm: &LoadMatrix,
-        planner: &PlannerKind,
+        planner: &dyn Planner,
     ) -> StepReport {
         self.plan_and_price(lm, stats_lm, planner).0
     }
@@ -177,26 +183,37 @@ impl Engine {
         &self,
         lm: &LoadMatrix,
         stats_lm: &LoadMatrix,
-        planner: &PlannerKind,
+        planner: &dyn Planner,
     ) -> (StepReport, crate::planner::RoutePlan) {
         let loads = lm.expert_loads();
         let stats = stats_lm.expert_loads();
-        // Run the planner twice and charge the *faster* wall time: the
-        // first run absorbs first-call page faults, and the min is robust
-        // to a preemption/contention spike landing on either run (layers
-        // are planned on concurrent worker threads in run_model).
-        // Planning is microseconds, so the extra run is negligible.
-        let t_warm = std::time::Instant::now();
-        let _ = planner.plan_with_stats(self.system.devices, &loads, &stats, Some(&self.topo));
-        let warm_s = t_warm.elapsed().as_secs_f64();
-        let t0 = std::time::Instant::now();
-        let plan = planner.plan_with_stats(self.system.devices, &loads, &stats, Some(&self.topo));
-        let plan_time_s = t0.elapsed().as_secs_f64().min(warm_s);
+        let (plan, plan_time_s) = if planner.replay_safe() {
+            // Run the planner twice and charge the *faster* wall time:
+            // the first run absorbs first-call page faults, and the min
+            // is robust to a preemption/contention spike landing on
+            // either run (layers are planned on concurrent worker threads
+            // in run_model). Planning is microseconds, so the extra run
+            // is negligible.
+            let t_warm = std::time::Instant::now();
+            let _ = planner.plan_with_stats(self.system.devices, &loads, &stats, Some(&self.topo));
+            let warm_s = t_warm.elapsed().as_secs_f64();
+            let t0 = std::time::Instant::now();
+            let plan =
+                planner.plan_with_stats(self.system.devices, &loads, &stats, Some(&self.topo));
+            (plan, t0.elapsed().as_secs_f64().min(warm_s))
+        } else {
+            // Stateful planners (the plan cache) must observe each lookup
+            // exactly once — a warm run would turn every miss into a hit.
+            let t0 = std::time::Instant::now();
+            let plan =
+                planner.plan_with_stats(self.system.devices, &loads, &stats, Some(&self.topo));
+            (plan, t0.elapsed().as_secs_f64())
+        };
         (price_plan(self, &plan, lm, planner, plan_time_s, None), plan)
     }
 
     /// Convenience wrapper taking token-level routing.
-    pub fn run_step(&self, routing: &Routing, planner: &PlannerKind) -> Result<StepReport, String> {
+    pub fn run_step(&self, routing: &Routing, planner: &dyn Planner) -> Result<StepReport, String> {
         routing.validate()?;
         if routing.devices() != self.system.devices {
             return Err(format!(
@@ -213,6 +230,7 @@ impl Engine {
 mod tests {
     use super::*;
     use crate::config::{ModelPreset, SystemPreset};
+    use crate::planner::PlannerKind;
     use crate::routing::Scenario;
     use crate::util::rng::Rng;
 

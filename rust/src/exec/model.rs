@@ -28,7 +28,7 @@
 //! *wall* cost of planning 36+ layers stays near one layer's cost.
 
 use super::{Engine, StepReport};
-use crate::planner::{PlannerKind, RoutePlan};
+use crate::planner::{CacheStats, Planner, RoutePlan};
 use crate::routing::{DepthProfile, LoadMatrix};
 use crate::util::rng::Rng;
 
@@ -74,6 +74,9 @@ pub struct ModelStepReport {
     pub oom: bool,
     /// Layers whose lambda guard reverted to standard EP.
     pub fallback_layers: usize,
+    /// Plan-cache counters summed across layers (all zero when the
+    /// planner has no cache).
+    pub cache: CacheStats,
 }
 
 impl ModelStepReport {
@@ -107,7 +110,7 @@ impl Engine {
     pub fn run_step_loads_with_plan(
         &self,
         lm: &LoadMatrix,
-        planner: &PlannerKind,
+        planner: &dyn Planner,
     ) -> (StepReport, RoutePlan) {
         self.plan_and_price(lm, lm, planner)
     }
@@ -120,7 +123,7 @@ impl Engine {
     pub fn run_model(
         &self,
         lms: &[LoadMatrix],
-        planner: &PlannerKind,
+        planner: &dyn Planner,
     ) -> Result<ModelStepReport, String> {
         if lms.is_empty() {
             return Err("run_model needs at least one layer's loads".into());
@@ -181,6 +184,11 @@ impl Engine {
             }
         }
 
+        let mut cache = CacheStats::default();
+        for layer in &layers {
+            cache.absorb(&layer.report.cache);
+        }
+
         Ok(ModelStepReport {
             planner: planner.label(),
             tokens: layers[0].report.tokens,
@@ -190,6 +198,7 @@ impl Engine {
             serial_latency_s,
             overlap_saved_s,
             device_peak_bytes,
+            cache,
             layers,
         })
     }
@@ -199,7 +208,7 @@ impl Engine {
     pub fn run_model_profile(
         &self,
         profile: &DepthProfile,
-        planner: &PlannerKind,
+        planner: &dyn Planner,
         tokens_per_device: usize,
         rng: &mut Rng,
     ) -> ModelStepReport {
@@ -209,7 +218,7 @@ impl Engine {
 
     /// Plan + price every layer, fanned out over scoped worker threads.
     /// Results land in depth order regardless of completion order.
-    fn plan_layers_parallel(&self, lms: &[LoadMatrix], planner: &PlannerKind) -> Vec<LayerStep> {
+    fn plan_layers_parallel(&self, lms: &[LoadMatrix], planner: &dyn Planner) -> Vec<LayerStep> {
         let n = lms.len();
         let workers = std::thread::available_parallelism().map(|w| w.get()).unwrap_or(1).min(n);
         let mut slots: Vec<Option<LayerStep>> = Vec::with_capacity(n);
@@ -241,6 +250,7 @@ impl Engine {
 mod tests {
     use super::*;
     use crate::config::{ModelConfig, ModelPreset, SystemConfig, SystemPreset};
+    use crate::planner::PlannerKind;
     use crate::routing::Scenario;
 
     fn engine(preset: ModelPreset) -> Engine {

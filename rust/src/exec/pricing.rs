@@ -3,7 +3,7 @@
 
 use super::dispatch::{chunks, combine_bytes, device_work, dispatch_bytes};
 use super::{Engine, GemmBackendKind, StepReport};
-use crate::planner::{PlannerKind, RoutePlan};
+use crate::planner::{CacheStats, Planner, RoutePlan};
 use crate::routing::LoadMatrix;
 
 /// Timing decomposition of one step.
@@ -39,7 +39,7 @@ pub fn price_plan(
     engine: &Engine,
     plan: &RoutePlan,
     lm: &LoadMatrix,
-    planner: &PlannerKind,
+    planner: &dyn Planner,
     plan_time_s: f64,
     measured_compute: Option<&[f64]>,
 ) -> StepReport {
@@ -63,11 +63,19 @@ pub fn price_plan(
 
     // ---- weight transfers (P2P), charged to the receiving device ----
     // EPLB's replication is time-amortized (placements change rarely) but
-    // still costs memory; LLEP pays per step.
-    let charge_weights = !matches!(planner, PlannerKind::Eplb { .. });
+    // still costs memory; LLEP pays per step. Policy comes from the
+    // planner trait, not a closed enum.
+    let charge_weights = planner.charges_weight_transfers();
     let wbytes = model.expert_weight_bytes() as u64;
     let mut weights_recv_s = vec![0.0f64; devices];
-    for t in &plan.transfers {
+    // Accumulate in a canonical order: two plans with the same transfer
+    // *set* must price bit-identically regardless of the order the
+    // planner emitted them (float addition is not associative; the
+    // cache's retargeted plans list transfers by expert index while fresh
+    // LLEP plans list them by descending load).
+    let mut ordered: Vec<_> = plan.transfers.clone();
+    ordered.sort_unstable_by_key(|t| (t.to, t.from, t.expert));
+    for t in &ordered {
         weights_recv_s[t.to] += engine.comm.p2p_time(t.from, t.to, wbytes);
     }
     if !charge_weights {
@@ -76,12 +84,9 @@ pub fn price_plan(
     let bytes_weights = plan.transfers.len() as u64 * wbytes;
 
     // ---- compute (Eq. 3 or measured) ----
-    // ChunkedEp splits each device's per-expert GEMMs into chunk-sized
-    // pieces (gradient-checkpointing baseline, paper §3.1).
-    let chunk = match planner {
-        PlannerKind::ChunkedEp { chunk_tokens } => Some((*chunk_tokens).max(1) as u64),
-        _ => None,
-    };
+    // A chunking planner splits each device's per-expert GEMMs into
+    // chunk-sized pieces (gradient-checkpointing baseline, paper §3.1).
+    let chunk = planner.chunk_tokens();
     let work = device_work(plan, lm);
     let split_chunks = |tokens: &[u64]| -> Vec<u64> {
         match chunk {
@@ -163,6 +168,7 @@ pub fn price_plan(
         oom,
         fallback_ep: plan.fallback_ep,
         tokens: lm.total_load() / lm.top_k as u64,
+        cache: planner.last_cache_outcome().map(CacheStats::of).unwrap_or_default(),
     }
 }
 
@@ -171,6 +177,7 @@ mod tests {
     use super::*;
     use crate::config::{ModelConfig, ModelPreset, SystemConfig, SystemPreset};
     use crate::exec::Engine;
+    use crate::planner::PlannerKind;
     use crate::routing::Scenario;
     use crate::util::rng::Rng;
 

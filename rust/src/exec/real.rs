@@ -11,7 +11,7 @@
 use super::dispatch::{chunks, Chunk};
 use super::{Engine, ExpertCompute, StepReport};
 use crate::moe::{ffn_backward, ffn_forward, ExpertWeights, MoeLayer};
-use crate::planner::{PlannerKind, RoutePlan};
+use crate::planner::{Planner, RoutePlan};
 use crate::routing::Routing;
 use crate::tensor::Mat;
 use std::time::Instant;
@@ -60,7 +60,7 @@ pub fn run_step_real(
     layer: &MoeLayer,
     xs: &[Mat],
     routing: &Routing,
-    planner: &PlannerKind,
+    planner: &dyn Planner,
     backend: &dyn ExpertCompute,
 ) -> Result<RealStep, String> {
     routing.validate()?;
@@ -121,7 +121,8 @@ pub fn run_step_real(
         }
     }
 
-    let report = super::price_plan(engine, &plan, &lm, planner, plan_time_s, Some(&device_compute_s));
+    let report =
+        super::price_plan(engine, &plan, &lm, planner, plan_time_s, Some(&device_compute_s));
     Ok(RealStep { outputs, report, plan })
 }
 
@@ -192,6 +193,7 @@ mod tests {
     use super::*;
     use crate::config::{LlepConfig, ModelConfig, ModelPreset, SystemConfig, SystemPreset};
     use crate::moe::{backward_reference, forward_reference, route, MoeLayer};
+    use crate::planner::PlannerKind;
     use crate::routing::Scenario;
     use crate::util::rng::Rng;
 
@@ -224,8 +226,9 @@ mod tests {
     fn ep_real_matches_reference() {
         let (engine, layer, xs, routing) = setup(11);
         let reference = forward_reference(&layer, &xs, &routing);
-        let step = run_step_real(&engine, &layer, &xs, &routing, &PlannerKind::StandardEp, &NativeCompute)
-            .unwrap();
+        let step =
+            run_step_real(&engine, &layer, &xs, &routing, &PlannerKind::StandardEp, &NativeCompute)
+                .unwrap();
         assert!(max_diff(&reference, &step.outputs) < 1e-4);
     }
 
@@ -312,7 +315,14 @@ mod tests {
     fn shape_validation() {
         let (engine, layer, xs, routing) = setup(16);
         let bad_xs: Vec<Mat> = xs.iter().take(2).cloned().collect();
-        assert!(run_step_real(&engine, &layer, &bad_xs, &routing, &PlannerKind::StandardEp, &NativeCompute)
-            .is_err());
+        let bad = run_step_real(
+            &engine,
+            &layer,
+            &bad_xs,
+            &routing,
+            &PlannerKind::StandardEp,
+            &NativeCompute,
+        );
+        assert!(bad.is_err());
     }
 }

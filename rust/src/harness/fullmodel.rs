@@ -9,7 +9,7 @@
 
 use crate::config::{ModelConfig, ModelPreset, SystemConfig, SystemPreset};
 use crate::exec::{Engine, ModelStepReport};
-use crate::planner::PlannerKind;
+use crate::planner::{Planner, PlannerKind};
 use crate::routing::{DepthProfile, Scenario};
 use crate::util::rng::Rng;
 
@@ -120,7 +120,7 @@ impl FullModelSim {
     /// Simulate one full forward step under `planner`.
     pub fn step(
         &self,
-        planner: &PlannerKind,
+        planner: &dyn Planner,
         tokens_per_device: usize,
         rng: &mut Rng,
     ) -> FullModelStep {
@@ -142,7 +142,7 @@ impl FullModelSim {
     /// Throughput (tokens/s) averaged over `batches` steps.
     pub fn throughput(
         &self,
-        planner: &PlannerKind,
+        planner: &dyn Planner,
         tokens_per_device: usize,
         batches: usize,
         seed: u64,

@@ -38,7 +38,8 @@ pub fn compare(
     seed: u64,
 ) -> (f64, crate::exec::StepReport, crate::exec::StepReport) {
     let mut rng = Rng::new(seed);
-    let lm = scenario.generate_loads(&engine.model, engine.system.devices, tokens_per_device, &mut rng);
+    let lm =
+        scenario.generate_loads(&engine.model, engine.system.devices, tokens_per_device, &mut rng);
     let ep = engine.run_step_loads(&lm, &PlannerKind::StandardEp);
     let ll = engine.run_step_loads(&lm, &PlannerKind::Llep(*llep));
     (ep.latency_s / ll.latency_s, ep, ll)
@@ -193,7 +194,8 @@ pub fn fig_6a() -> Table {
         SystemConfig::preset(SystemPreset::H200x8),
     );
     let llep = LlepConfig::default();
-    let mut t = Table::new(&["tokens/device", "30% speedup", "50% speedup", "80% speedup", "95% speedup"]);
+    let mut t =
+        Table::new(&["tokens/device", "30% speedup", "50% speedup", "80% speedup", "95% speedup"]);
     for &b in &[2048usize, 4096, 8192, 16_384, 32_768, 65_536] {
         let mut cells = vec![format!("{b}")];
         for &conc in &[0.30, 0.50, 0.80, 0.95] {
@@ -245,7 +247,8 @@ pub fn fig_7b() -> Table {
         model.d_model = d;
         model.d_ff = d;
         let engine = Engine::modeled(model, SystemConfig::preset(SystemPreset::H200x8));
-        let (s, _, _) = compare(&engine, &Scenario::concentrated(0.80, 4), 32_768, &LlepConfig::default(), 8);
+        let (s, _, _) =
+            compare(&engine, &Scenario::concentrated(0.80, 4), 32_768, &LlepConfig::default(), 8);
         t.row(vec![format!("{d}"), format!("{s:.2}x")]);
     }
     t

@@ -69,7 +69,9 @@ pub mod prelude {
     };
     pub use crate::costmodel::{CommCostModel, GemmCostModel, MemoryModel};
     pub use crate::exec::{Engine, GemmBackendKind, ModelStepReport, StepReport};
-    pub use crate::planner::{PlannerKind, RoutePlan};
+    pub use crate::planner::{
+        parse_planner, CacheStats, CachedPlanner, Planner, PlannerKind, RoutePlan,
+    };
     pub use crate::routing::{DepthProfile, Routing, Scenario};
     pub use crate::topology::Topology;
     pub use crate::util::rng::Rng;

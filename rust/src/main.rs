@@ -7,15 +7,23 @@
 //!   trace      generate + save a synthetic routing trace (--out t.json)
 //!   replay     replay a saved trace under EP/LLEP/EPLB (--trace t.json)
 //!   train      Fig.-5 training run from AOT artifacts (--steps N)
-//!   serve      serving simulation (EP vs LLEP)
-//!   info       print presets and environment
+//!   serve      serving simulation (EP vs LLEP, or --planner <spec>)
+//!   info       print presets, the planner registry and environment
+//!
+//! Planner selection is open: `--planner llep:alpha=1.0,m=64`,
+//! `--planner lpt:min=1024`, `--planner cached(llep):drift=0.05`, ... —
+//! see `llep info` for the registered specs. `--plan-reuse`,
+//! `--replan-every N` and `--cache-drift F` wrap the selected planners in
+//! the cross-step plan cache (decode-regime optimization).
 
-use llep::config::{load_experiment, LlepConfig, ModelConfig, ModelPreset, SystemConfig, SystemPreset};
+use llep::config::{
+    load_experiment, LlepConfig, ModelConfig, ModelPreset, SystemConfig, SystemPreset,
+};
 use llep::coordinator::{RunSummary, Runner, ServeSim};
 use llep::exec::Engine;
 use llep::harness;
-use llep::metrics::{format_bytes, format_secs, model_report_table, Table};
-use llep::planner::PlannerKind;
+use llep::metrics::{format_bytes, format_cache, format_secs, model_report_table, Table};
+use llep::planner::{CachedPlanner, Planner, PlannerKind, Registry};
 use llep::routing::{DepthProfile, RoutingTrace, Scenario};
 use llep::util::cli::Spec;
 use llep::util::rng::Rng;
@@ -41,6 +49,10 @@ fn main() {
         .opt("hot", "number of hot experts")
         .opt("seed", "rng seed")
         .opt("artifacts", "artifacts directory (default ./artifacts)")
+        .opt("planner", "planner spec, e.g. llep:alpha=1.0,m=64 (see `llep info`)")
+        .opt("replan-every", "plan cache: force a fresh plan every N reuses (0 = never)")
+        .opt("cache-drift", "plan cache: load-signature drift threshold (default 0.05)")
+        .flag("plan-reuse", "wrap planners in the cross-step plan cache")
         .flag("full-model", "price every MoE layer per step (pipelined planning)")
         .flag("real", "measure real GEMMs where applicable")
         .flag("help", "show usage");
@@ -101,13 +113,17 @@ fn cmd_figures(args: &llep::util::cli::Args) -> Result<(), String> {
         print_table("Fig 3b — per-GPU max load share", &b);
     }
     if all || fig == "4" {
-        print_table("Fig 4 — three architectures (gpt-oss-120b / DSv3 / Kimi-K2)", &harness::fig_4());
+        print_table(
+            "Fig 4 — three architectures (gpt-oss-120b / DSv3 / Kimi-K2)",
+            &harness::fig_4(),
+        );
     }
     if all || fig == "5" {
         match fig5_curve() {
             Ok(()) => {}
             Err(e) => println!(
-                "\n== Fig 5 — loss vs wall-clock ==\nskipped: {e}\n(run `make artifacts`, or use `cargo run --release --example e2e_train`)"
+                "\n== Fig 5 — loss vs wall-clock ==\nskipped: {e}\n(run `make artifacts`, \
+                 or use `cargo run --release --example e2e_train`)"
             ),
         }
     }
@@ -124,7 +140,10 @@ fn cmd_figures(args: &llep::util::cli::Args) -> Result<(), String> {
         print_table("Fig 7b — speedup vs hidden size", &harness::fig_7b());
     }
     if all || fig == "8" {
-        print_table("Fig 8 — grouped-GEMM: time vs #experts at fixed FLOPs", &harness::fig_8(real || all));
+        print_table(
+            "Fig 8 — grouped-GEMM: time vs #experts at fixed FLOPs",
+            &harness::fig_8(real || all),
+        );
     }
     if all || fig == "9" {
         print_table("Fig 9 — speedup vs number of experts", &harness::fig_9());
@@ -183,6 +202,45 @@ fn scenario_from_args(args: &llep::util::cli::Args) -> Result<Scenario, String> 
     })
 }
 
+/// Planner selection: `--planner <spec>` overrides `defaults`, then
+/// `--plan-reuse` / `--replan-every` / `--cache-drift` optionally wrap
+/// every planner in the cross-step plan cache.
+fn planners_from_args(
+    args: &llep::util::cli::Args,
+    defaults: Vec<Box<dyn Planner>>,
+) -> Result<Vec<Box<dyn Planner>>, String> {
+    let base = match args.get("planner") {
+        Some(spec) => vec![Registry::builtin().parse(spec)?],
+        None => defaults,
+    };
+    let reuse = args.has_flag("plan-reuse")
+        || args.get("replan-every").is_some()
+        || args.get("cache-drift").is_some();
+    if !reuse {
+        return Ok(base);
+    }
+    let drift = args.get_f64("cache-drift", 0.05)?;
+    let every = args.get_usize("replan-every", 0)?;
+    let mut wrapped: Vec<Box<dyn Planner>> = Vec::with_capacity(base.len());
+    for p in base {
+        if !p.replay_safe() {
+            // Already stateful (an explicit cached(...) spec): wrapping it
+            // again would shadow the user's configured cache, and quietly
+            // ignoring the flags would run a different experiment than the
+            // command line states — refuse instead.
+            return Err(format!(
+                "--plan-reuse/--replan-every/--cache-drift cannot be combined with the \
+                 already-cached planner spec {:?}; set drift=/every=/q= inside the spec",
+                p.spec()
+            ));
+        }
+        wrapped.push(Box::new(
+            CachedPlanner::new(p).with_drift_threshold(drift).with_replan_every(every),
+        ));
+    }
+    Ok(wrapped)
+}
+
 fn engine_from_args(args: &llep::util::cli::Args) -> Result<(Engine, LlepConfig), String> {
     let model_name = args.get_or("model", "fig1-layer");
     let preset = ModelPreset::from_name(&model_name)
@@ -222,8 +280,15 @@ fn cmd_run(args: &llep::util::cli::Args) -> Result<(), String> {
         (engine, llep, scenario, tokens, seed)
     };
 
+    let defaults: Vec<Box<dyn Planner>> = vec![
+        PlannerKind::StandardEp.boxed(),
+        PlannerKind::Llep(llep).boxed(),
+        PlannerKind::Eplb { replicas: engine.system.devices }.boxed(),
+    ];
+    let planners = planners_from_args(args, defaults)?;
+
     if args.has_flag("full-model") {
-        return cmd_run_full_model(&engine, llep, &scenario, tokens, seed);
+        return cmd_run_full_model(&engine, &planners, &scenario, tokens, seed);
     }
 
     let mut rng = Rng::new(seed);
@@ -231,12 +296,8 @@ fn cmd_run(args: &llep::util::cli::Args) -> Result<(), String> {
     let mut t = Table::new(&[
         "planner", "latency", "compute max", "dispatch", "weights", "peak mem", "xfers", "OOM",
     ]);
-    for kind in [
-        PlannerKind::StandardEp,
-        PlannerKind::Llep(llep),
-        PlannerKind::Eplb { replicas: engine.system.devices },
-    ] {
-        let r = engine.run_step_loads(&lm, &kind);
+    for planner in &planners {
+        let r = engine.run_step_loads(&lm, &**planner);
         t.row(vec![
             r.planner.clone(),
             format_secs(r.latency_s),
@@ -267,7 +328,7 @@ fn cmd_run(args: &llep::util::cli::Args) -> Result<(), String> {
 /// profile (a different hotspot per layer); others apply uniformly.
 fn cmd_run_full_model(
     engine: &Engine,
-    llep_cfg: LlepConfig,
+    planners: &[Box<dyn Planner>],
     scenario: &Scenario,
     tokens: usize,
     seed: u64,
@@ -283,15 +344,12 @@ fn cmd_run_full_model(
     let lms = profile.generate_loads(&engine.model, engine.system.devices, tokens, &mut rng);
 
     let mut t = Table::new(&[
-        "planner", "latency", "serial", "overlap saved", "peak mem", "xfers", "fallback", "OOM",
+        "planner", "latency", "serial", "overlap saved", "peak mem", "xfers", "fallback",
+        "plan cache", "OOM",
     ]);
-    let mut llep_report = None;
-    for kind in [
-        PlannerKind::StandardEp,
-        PlannerKind::Llep(llep_cfg),
-        PlannerKind::Eplb { replicas: engine.system.devices },
-    ] {
-        let r = engine.run_model(&lms, &kind)?;
+    let mut reports = Vec::with_capacity(planners.len());
+    for planner in planners {
+        let r = engine.run_model(&lms, &**planner)?;
         t.row(vec![
             r.planner.clone(),
             format_secs(r.latency_s),
@@ -300,11 +358,10 @@ fn cmd_run_full_model(
             format_bytes(r.max_peak_bytes()),
             r.layers.iter().map(|l| l.report.weight_transfers).sum::<usize>().to_string(),
             format!("{}/{}", r.fallback_layers, r.num_layers()),
+            format_cache(&r.cache),
             if r.oom { "OOM".into() } else { "-".into() },
         ]);
-        if matches!(kind, PlannerKind::Llep(_)) {
-            llep_report = Some(r);
-        }
+        reports.push(r);
     }
     print_table(
         &format!(
@@ -316,8 +373,15 @@ fn cmd_run_full_model(
         ),
         &t,
     );
-    if let Some(r) = llep_report {
-        print_table("LLEP per-layer breakdown", &model_report_table(&r));
+    // Per-layer breakdown: the single selected planner with `--planner`,
+    // else the LLEP slot of the default EP/LLEP/EPLB comparison — chosen
+    // by position, not by sniffing display labels.
+    let breakdown = if reports.len() == 1 { reports.first() } else { reports.get(1) };
+    if let Some(r) = breakdown {
+        print_table(
+            &format!("{} per-layer breakdown", r.planner),
+            &model_report_table(r),
+        );
     }
     Ok(())
 }
@@ -369,13 +433,15 @@ fn cmd_replay(args: &llep::util::cli::Args) -> Result<(), String> {
             trace.num_experts
         ));
     }
-    let mut t = Table::new(&["planner", "total time", "p50 step", "p99 step", "peak mem", "OOM batches"]);
-    for kind in [
-        PlannerKind::StandardEp,
-        PlannerKind::Llep(llep),
-        PlannerKind::Eplb { replicas: engine.system.devices },
-    ] {
-        let mut runner = Runner::new(engine.clone(), kind);
+    let defaults: Vec<Box<dyn Planner>> = vec![
+        PlannerKind::StandardEp.boxed(),
+        PlannerKind::Llep(llep).boxed(),
+        PlannerKind::Eplb { replicas: engine.system.devices }.boxed(),
+    ];
+    let mut t =
+        Table::new(&["planner", "total time", "p50 step", "p99 step", "peak mem", "OOM batches"]);
+    for planner in planners_from_args(args, defaults)? {
+        let mut runner = Runner::with_planner(engine.clone(), planner);
         let reports = runner.run_trace(&trace);
         let s = RunSummary::of(&reports);
         t.row(vec![
@@ -443,16 +509,23 @@ fn cmd_serve(args: &llep::util::cli::Args) -> Result<(), String> {
     let seed = args.get_usize("seed", 0)? as u64;
     let mut rng = Rng::new(seed);
     let requests = ServeSim::poisson_requests(n, 0.0005, 256, 2048, &mut rng);
-    let mut t = Table::new(&["planner", "makespan", "p50 latency", "p99 latency", "tok/s"]);
-    for kind in [PlannerKind::StandardEp, PlannerKind::Llep(llep)] {
-        let sim = ServeSim::new(engine.clone(), kind, scenario.clone(), 8192);
+    let defaults: Vec<Box<dyn Planner>> =
+        vec![PlannerKind::StandardEp.boxed(), PlannerKind::Llep(llep).boxed()];
+    let mut t = Table::new(&[
+        "planner", "makespan", "p50 latency", "p99 latency", "tok/s", "p50 plan", "plan cache",
+    ]);
+    for planner in planners_from_args(args, defaults)? {
+        let sim = ServeSim::with_planner(engine.clone(), planner, scenario.clone(), 8192);
         let r = sim.run(&requests, &mut Rng::new(seed + 1));
+        assert!(r.tokens.is_exact(), "accounting contract: {:?}", r.tokens);
         t.row(vec![
             r.planner.clone(),
             format_secs(r.makespan_s),
             format_secs(r.request_latency.p50),
             format_secs(r.request_latency.p99),
             format!("{:.0}", r.throughput_tps()),
+            format_secs(r.plan_time.p50),
+            format_cache(&r.plan_cache),
         ]);
     }
     print_table(&format!("serving {n} requests | {}", scenario.label()), &t);
@@ -480,6 +553,15 @@ fn cmd_info() -> Result<(), String> {
             s.gemm.peak_flops
         );
     }
+    println!("\nplanners (--planner <spec>):");
+    for e in Registry::builtin().entries() {
+        println!("  {:<8} {:<55} e.g. {}", e.name, e.help, e.example);
+    }
+    println!(
+        "  {:<8} {:<55} e.g. {}",
+        "cached", "cross-step plan-reuse decorator (wraps any spec)",
+        "cached(llep):drift=0.05,every=32"
+    );
     print_artifacts_info();
     Ok(())
 }

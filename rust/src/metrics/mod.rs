@@ -6,6 +6,8 @@ pub mod chart;
 use crate::exec::{ModelStepReport, StepReport};
 use crate::util::json::Json;
 
+pub use crate::planner::CacheStats;
+
 pub use crate::util::stats::Summary;
 
 /// Format bytes with adaptive unit.
@@ -127,7 +129,39 @@ pub fn report_to_json(r: &StepReport) -> Json {
         ("fallback_ep", Json::Bool(r.fallback_ep)),
         ("tokens", Json::num(r.tokens as f64)),
         ("throughput_tps", Json::num(r.throughput())),
+        ("cache_hits", Json::num(r.cache.hits as f64)),
+        ("cache_misses", Json::num(r.cache.misses as f64)),
+        ("cache_forced", Json::num(r.cache.forced as f64)),
     ])
+}
+
+/// Format plan-cache counters as `hits/lookups (rate)`, or `-` when the
+/// planner has no cache.
+pub fn format_cache(c: &CacheStats) -> String {
+    if c.lookups() == 0 {
+        "-".into()
+    } else {
+        format!("{}/{} ({:.0}%)", c.hits, c.lookups(), c.hit_rate() * 100.0)
+    }
+}
+
+/// Planner-comparison rows over the same workload: one full-model report
+/// per planner, speedup measured against the first row (the baseline).
+pub fn planner_comparison_table(reports: &[ModelStepReport]) -> Table {
+    let mut t = Table::new(&["planner", "latency", "speedup", "peak mem", "plan cache"]);
+    let base = reports.first().map(|r| r.latency_s).unwrap_or(0.0);
+    for r in reports {
+        let speedup =
+            if r.latency_s > 0.0 { format!("{:.2}x", base / r.latency_s) } else { "-".into() };
+        t.row(vec![
+            r.planner.clone(),
+            format_secs(r.latency_s),
+            speedup,
+            format_bytes(r.max_peak_bytes()),
+            format_cache(&r.cache),
+        ]);
+    }
+    t
 }
 
 /// Per-layer latency/memory breakdown of a full-model step.
@@ -168,6 +202,10 @@ pub fn model_report_to_json(r: &ModelStepReport) -> Json {
         ("throughput_tps", Json::num(r.throughput())),
         ("oom", Json::Bool(r.oom)),
         ("fallback_layers", Json::num(r.fallback_layers as f64)),
+        ("cache_hits", Json::num(r.cache.hits as f64)),
+        ("cache_misses", Json::num(r.cache.misses as f64)),
+        ("cache_forced", Json::num(r.cache.forced as f64)),
+        ("cache_hit_rate", Json::num(r.cache.hit_rate())),
         (
             "layer_latencies_s",
             Json::arr(r.layers.iter().map(|l| Json::num(l.report.latency_s))),
@@ -246,5 +284,42 @@ mod tests {
         let json = model_report_to_json(&r).to_string();
         assert!(json.contains("\"layers\""));
         assert!(json.contains("layer_latencies_s"));
+        assert!(json.contains("cache_hit_rate"));
+    }
+
+    #[test]
+    fn planner_comparison_includes_cache_column() {
+        use crate::config::{ModelConfig, ModelPreset, SystemConfig, SystemPreset};
+        use crate::exec::Engine;
+        use crate::planner::{CachedPlanner, PlannerKind};
+        use crate::routing::{DepthProfile, Scenario};
+        use crate::util::rng::Rng;
+
+        let engine = Engine::modeled(
+            ModelConfig::preset(ModelPreset::Fig1Layer),
+            SystemConfig::preset(SystemPreset::H200x8),
+        );
+        let profile = DepthProfile::uniform(Scenario::concentrated(0.9, 1), 1);
+        let mut rng = Rng::new(2);
+        let ep = engine.run_model_profile(&profile, &PlannerKind::StandardEp, 4096, &mut rng);
+        let cached = CachedPlanner::new(PlannerKind::llep_default().boxed());
+        let warm = engine.run_model_profile(&profile, &cached, 4096, &mut Rng::new(2));
+        let hit = engine.run_model_profile(&profile, &cached, 4096, &mut Rng::new(2));
+        assert_eq!(warm.cache.misses, 1);
+        assert_eq!(hit.cache.hits, 1);
+
+        let t = planner_comparison_table(&[ep, warm, hit]);
+        assert_eq!(t.rows.len(), 3);
+        let rendered = t.render();
+        assert!(rendered.contains("plan cache"), "{rendered}");
+        assert!(rendered.contains("1/1 (100%)"), "{rendered}");
+        assert!(rendered.contains("EP"), "{rendered}");
+    }
+
+    #[test]
+    fn cache_formatting() {
+        assert_eq!(format_cache(&CacheStats::default()), "-");
+        let c = CacheStats { hits: 3, misses: 1, forced: 0 };
+        assert_eq!(format_cache(&c), "3/4 (75%)");
     }
 }

@@ -1,0 +1,576 @@
+//! Cross-step plan reuse: the [`CachedPlanner`] decorator.
+//!
+//! The paper puts planning on the step's critical path
+//! (`T = T_meta + T_plan + …`) and its §4/§5.3 ablations argue that
+//! shaving planner latency matters most in the small-batch decode
+//! regime. Decode steps also change very little from one step to the
+//! next: the batch is the same set of requests minus completions, so the
+//! per-expert load *shares* are nearly stationary. `CachedPlanner`
+//! exploits that: it keys a small cache on a quantized per-expert load
+//! signature and, when the signature drift since the cached plan is below
+//! a threshold, reuses that plan instead of replanning.
+//!
+//! ## Honest reuse
+//!
+//! A reused plan is *re-materialized* against the true loads
+//! ([`retarget_plan`]): each expert keeps the cached placement fractions
+//! (largest-remainder split), exactly like EPLB splits actual loads
+//! across a stale placement. Pricing therefore always uses the loads
+//! actually executed — a stale plan can be worse than a fresh one (the
+//! hot expert moved, min-GEMM chunks shrank below profitability) and the
+//! report shows it. Hit/miss/forced-replan counters surface in
+//! [`StepReport`](crate::exec::StepReport) and every aggregate report
+//! above it.
+//!
+//! The signature is share-based (quantized `l_e / total`), so a decode
+//! step that shrinks because requests completed still hits as long as the
+//! routing distribution holds. With several MoE layers sharing one cache,
+//! each layer's signature claims its own entry (capacity defaults to 64
+//! ≥ any preset's layer count); layers with genuinely similar routing may
+//! share an entry, which is just more reuse.
+
+use super::{Planner, RoutePlan, Segment, WeightTransfer};
+use crate::topology::Topology;
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+// The outcome of the most recent lookup is reported back to the engine
+// (price_plan) on the same thread that planned, so it lives in a
+// thread-local keyed by a unique per-cache id: no shared map to race on
+// or to grow without bound as scoped layer-planning threads come and go.
+thread_local! {
+    static LAST_OUTCOME: RefCell<Vec<(usize, CacheOutcome)>> = const { RefCell::new(Vec::new()) };
+}
+
+static NEXT_CACHE_ID: AtomicUsize = AtomicUsize::new(0);
+
+/// What one `plan_with_stats` call on a [`CachedPlanner`] did.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CacheOutcome {
+    /// Signature matched: the cached plan was retargeted and reused.
+    Hit,
+    /// No cached plan within the drift threshold: planned fresh.
+    Miss,
+    /// Signature matched but the `replan_every` policy forced a fresh
+    /// plan (periodic refresh against slow drift).
+    Forced,
+}
+
+/// Hit/miss/forced-replan counters; zero everywhere for uncached
+/// planners. Aggregated per step, per model step, and per serving run.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub forced: u64,
+}
+
+impl CacheStats {
+    /// Stats with exactly one outcome recorded.
+    pub fn of(outcome: CacheOutcome) -> CacheStats {
+        let mut s = CacheStats::default();
+        s.record(outcome);
+        s
+    }
+
+    pub fn record(&mut self, outcome: CacheOutcome) {
+        match outcome {
+            CacheOutcome::Hit => self.hits += 1,
+            CacheOutcome::Miss => self.misses += 1,
+            CacheOutcome::Forced => self.forced += 1,
+        }
+    }
+
+    pub fn absorb(&mut self, other: &CacheStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.forced += other.forced;
+    }
+
+    /// Total lookups observed.
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses + self.forced
+    }
+
+    /// Fraction of lookups that reused a plan (0.0 when no lookups).
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups() == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups() as f64
+        }
+    }
+}
+
+/// Quantized per-expert load shares: `sig[e] ≈ quant * l_e / total`.
+/// Share-based, so uniformly scaling a batch leaves the signature fixed.
+pub fn load_signature(loads: &[u64], quant: u64) -> Vec<u64> {
+    let total: u64 = loads.iter().sum();
+    if total == 0 {
+        return vec![0; loads.len()];
+    }
+    loads.iter().map(|&l| (l as u128 * quant as u128 / total as u128) as u64).collect()
+}
+
+/// L1 distance between two signatures in share units (range `0..=2`):
+/// the total fraction of routed tokens that moved between experts.
+pub fn signature_drift(a: &[u64], b: &[u64], quant: u64) -> f64 {
+    let l1: u64 = a.iter().zip(b).map(|(&x, &y)| x.abs_diff(y)).sum();
+    l1 as f64 / quant as f64
+}
+
+/// Re-materialize `plan` (built for `old_loads`) against `new_loads`:
+/// per expert, the cached segment lengths are scaled proportionally
+/// (largest-remainder, so coverage is exact) onto the same devices in the
+/// same order, and weight transfers are recomputed from the surviving
+/// foreign segments. An expert with no cached precedent (`old` load 0)
+/// stays native, flagged forced. O(total segments) — this is what a cache
+/// hit costs instead of a full replan.
+pub fn retarget_plan(plan: &RoutePlan, old_loads: &[u64], new_loads: &[u64]) -> RoutePlan {
+    assert_eq!(old_loads.len(), plan.num_experts, "old loads/plan mismatch");
+    assert_eq!(new_loads.len(), plan.num_experts, "new loads/plan mismatch");
+    let m = plan.num_experts / plan.devices;
+    let mut assignments: Vec<Vec<Segment>> = Vec::with_capacity(plan.num_experts);
+    let mut transfers: Vec<WeightTransfer> = Vec::new();
+    let mut seen = vec![false; plan.devices];
+    for (e, old_segs) in plan.assignments.iter().enumerate() {
+        let l_new = new_loads[e];
+        let l_old = old_loads[e];
+        let native = e / m;
+        let mut segs: Vec<Segment> = Vec::new();
+        if l_new > 0 {
+            if l_old == 0 || old_segs.is_empty() {
+                segs.push(Segment { device: native, start: 0, end: l_new, forced: true });
+            } else {
+                // Largest-remainder proportional split across the cached
+                // segments (they cover [0, l_old) exactly).
+                let mut lens: Vec<u64> = Vec::with_capacity(old_segs.len());
+                let mut rems: Vec<(u64, usize)> = Vec::with_capacity(old_segs.len());
+                let mut assigned = 0u64;
+                for (i, s) in old_segs.iter().enumerate() {
+                    let num = s.len() as u128 * l_new as u128;
+                    let q = (num / l_old as u128) as u64;
+                    lens.push(q);
+                    rems.push(((num % l_old as u128) as u64, i));
+                    assigned += q;
+                }
+                let mut left = l_new - assigned; // < old_segs.len()
+                rems.sort_unstable_by_key(|&(r, i)| (std::cmp::Reverse(r), i));
+                for &(_, i) in &rems {
+                    if left == 0 {
+                        break;
+                    }
+                    lens[i] += 1;
+                    left -= 1;
+                }
+                let mut start = 0u64;
+                for (s, &len) in old_segs.iter().zip(&lens) {
+                    if len == 0 {
+                        continue;
+                    }
+                    let end = start + len;
+                    segs.push(Segment { device: s.device, start, end, forced: s.forced });
+                    start += len;
+                }
+            }
+        }
+        for s in &segs {
+            if s.device != native && !seen[s.device] {
+                seen[s.device] = true;
+                transfers.push(WeightTransfer { expert: e, from: native, to: s.device });
+            }
+        }
+        for s in &segs {
+            seen[s.device] = false;
+        }
+        assignments.push(segs);
+    }
+    RoutePlan {
+        num_experts: plan.num_experts,
+        devices: plan.devices,
+        assignments,
+        transfers,
+        fallback_ep: plan.fallback_ep,
+    }
+}
+
+struct CacheEntry {
+    devices: usize,
+    sig: Vec<u64>,
+    /// Loads the cached plan was (freshly) built for — retarget source
+    /// and drift anchor.
+    loads: Vec<u64>,
+    plan: RoutePlan,
+    /// Hits served from this entry since its last fresh plan.
+    reuses: usize,
+    last_used: u64,
+}
+
+#[derive(Default)]
+struct CacheState {
+    entries: Vec<CacheEntry>,
+    stats: CacheStats,
+    clock: u64,
+}
+
+/// Decorator that reuses the wrapped planner's plans across steps.
+/// Stateful (interior mutability), hence [`Planner::replay_safe`] =
+/// false: the engine times exactly one lookup per priced plan.
+pub struct CachedPlanner {
+    inner: Box<dyn Planner>,
+    /// Distinguishes this cache's thread-local outcome slot from other
+    /// caches used on the same thread.
+    id: usize,
+    /// Reuse when the signature drift (share units, `0..=2`) is at most
+    /// this much.
+    pub drift_threshold: f64,
+    /// Share quantization buckets for the signature.
+    pub quant: u64,
+    /// Force a fresh plan after this many consecutive reuses of one
+    /// entry (0 = never). The `--replan-every` serving policy.
+    pub replan_every: usize,
+    /// Max distinct signatures tracked (LRU eviction beyond this).
+    pub capacity: usize,
+    state: Mutex<CacheState>,
+}
+
+impl CachedPlanner {
+    pub fn new(inner: Box<dyn Planner>) -> CachedPlanner {
+        CachedPlanner {
+            inner,
+            id: NEXT_CACHE_ID.fetch_add(1, Ordering::Relaxed),
+            drift_threshold: 0.05,
+            quant: 1024,
+            replan_every: 0,
+            capacity: 64,
+            state: Mutex::new(CacheState::default()),
+        }
+    }
+
+    pub fn with_drift_threshold(mut self, t: f64) -> CachedPlanner {
+        self.drift_threshold = t;
+        self
+    }
+
+    pub fn with_quant(mut self, quant: u64) -> CachedPlanner {
+        self.quant = quant.max(1);
+        self
+    }
+
+    pub fn with_replan_every(mut self, n: usize) -> CachedPlanner {
+        self.replan_every = n;
+        self
+    }
+
+    pub fn with_capacity(mut self, capacity: usize) -> CachedPlanner {
+        self.capacity = capacity.max(1);
+        self
+    }
+
+    /// Cumulative hit/miss/forced counters since creation (or [`reset`]).
+    ///
+    /// [`reset`]: CachedPlanner::reset
+    pub fn stats(&self) -> CacheStats {
+        self.state.lock().expect("cache lock").stats
+    }
+
+    /// Drop all cached plans and zero the counters (the last per-thread
+    /// outcome is left in place — it describes a lookup that did happen).
+    pub fn reset(&self) {
+        let mut st = self.state.lock().expect("cache lock");
+        st.entries.clear();
+        st.stats = CacheStats::default();
+    }
+}
+
+impl CachedPlanner {
+    /// Index + drift of the entry whose signature is L1-closest to `sig`
+    /// (same device count and expert count only).
+    fn closest(&self, st: &CacheState, devices: usize, sig: &[u64]) -> Option<(usize, f64)> {
+        st.entries
+            .iter()
+            .enumerate()
+            .filter(|(_, en)| en.devices == devices && en.sig.len() == sig.len())
+            .map(|(i, en)| (i, signature_drift(&en.sig, sig, self.quant)))
+            .min_by(|a, b| a.1.total_cmp(&b.1))
+    }
+
+    /// Record the lookup outcome in the calling thread's slot. The slot
+    /// vec holds one entry per cache instance used on this thread — a
+    /// handful at most — and dies with the thread.
+    fn set_last_outcome(&self, outcome: CacheOutcome) {
+        LAST_OUTCOME.with(|slot| {
+            let mut v = slot.borrow_mut();
+            match v.iter_mut().find(|(id, _)| *id == self.id) {
+                Some(entry) => entry.1 = outcome,
+                None => v.push((self.id, outcome)),
+            }
+        });
+    }
+}
+
+impl Planner for CachedPlanner {
+    fn plan_with_stats(
+        &self,
+        devices: usize,
+        loads: &[u64],
+        stats: &[u64],
+        topo: Option<&Topology>,
+    ) -> RoutePlan {
+        let sig = load_signature(loads, self.quant);
+        // Phase 1: probe under the lock. The serialized region is only
+        // the cheap probe/bookkeeping — hits copy the cached plan out and
+        // retarget it *outside* the lock. What the engine's timed window
+        // still sees (probe, clone, short lock waits) is the cache's real
+        // per-lookup cost, and charging it keeps T_plan honest.
+        let outcome;
+        {
+            let mut st = self.state.lock().expect("cache lock");
+            st.clock += 1;
+            let clock = st.clock;
+            match self.closest(&st, devices, &sig) {
+                Some((i, drift)) if drift <= self.drift_threshold => {
+                    // Forced refresh only after the entry has already
+                    // served `replan_every` reuses (so N=1 still allows
+                    // one reuse per fresh plan).
+                    let force = self.replan_every > 0
+                        && st.entries[i].reuses >= self.replan_every;
+                    if !force {
+                        let en = &mut st.entries[i];
+                        en.reuses += 1;
+                        en.last_used = clock;
+                        let src = (en.plan.clone(), en.loads.clone());
+                        st.stats.record(CacheOutcome::Hit);
+                        drop(st);
+                        self.set_last_outcome(CacheOutcome::Hit);
+                        return retarget_plan(&src.0, &src.1, loads);
+                    }
+                    outcome = CacheOutcome::Forced;
+                }
+                _ => outcome = CacheOutcome::Miss,
+            }
+        }
+        // Phase 2: plan fresh OUTSIDE the lock — the expensive part of a
+        // miss must not serialize concurrent layer-planning threads
+        // behind one Mutex.
+        let fresh = self.inner.plan_with_stats(devices, loads, stats, topo);
+        // Phase 3: install. Entries may have changed while unlocked, so
+        // re-probe for the slot to refresh instead of trusting an index.
+        let mut st = self.state.lock().expect("cache lock");
+        st.clock += 1;
+        let clock = st.clock;
+        let slot = self
+            .closest(&st, devices, &sig)
+            .and_then(|(i, drift)| (drift <= self.drift_threshold).then_some(i));
+        match slot {
+            Some(i) => {
+                let en = &mut st.entries[i];
+                en.sig = sig;
+                en.loads = loads.to_vec();
+                en.plan = fresh.clone();
+                en.reuses = 0;
+                en.last_used = clock;
+            }
+            None => {
+                if st.entries.len() >= self.capacity {
+                    let lru = st
+                        .entries
+                        .iter()
+                        .enumerate()
+                        .min_by_key(|(_, en)| en.last_used)
+                        .map(|(i, _)| i)
+                        .expect("capacity >= 1");
+                    st.entries.swap_remove(lru);
+                }
+                st.entries.push(CacheEntry {
+                    devices,
+                    sig,
+                    loads: loads.to_vec(),
+                    plan: fresh.clone(),
+                    reuses: 0,
+                    last_used: clock,
+                });
+            }
+        }
+        st.stats.record(outcome);
+        drop(st);
+        self.set_last_outcome(outcome);
+        fresh
+    }
+
+    fn label(&self) -> String {
+        format!("Cached[{}]", self.inner.label())
+    }
+
+    fn spec(&self) -> String {
+        format!(
+            "cached({}):drift={},every={},q={}",
+            self.inner.spec(),
+            self.drift_threshold,
+            self.replan_every,
+            self.quant
+        )
+    }
+
+    fn chunk_tokens(&self) -> Option<u64> {
+        self.inner.chunk_tokens()
+    }
+
+    fn charges_weight_transfers(&self) -> bool {
+        self.inner.charges_weight_transfers()
+    }
+
+    fn wants_stale_stats(&self) -> bool {
+        self.inner.wants_stale_stats()
+    }
+
+    fn replay_safe(&self) -> bool {
+        false
+    }
+
+    fn last_cache_outcome(&self) -> Option<CacheOutcome> {
+        LAST_OUTCOME.with(|slot| {
+            slot.borrow().iter().find(|(id, _)| *id == self.id).map(|&(_, o)| o)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::validate::validate_plan;
+    use crate::planner::PlannerKind;
+
+    fn llep_cached() -> CachedPlanner {
+        CachedPlanner::new(PlannerKind::llep_default().boxed())
+    }
+
+    #[test]
+    fn identical_loads_hit_and_replay_the_plan() {
+        let loads = vec![9_000u64, 100, 200, 300, 0, 50, 150, 250];
+        let c = llep_cached();
+        let first = c.plan(4, &loads, None);
+        assert_eq!(c.last_cache_outcome(), Some(CacheOutcome::Miss));
+        let second = c.plan(4, &loads, None);
+        assert_eq!(c.last_cache_outcome(), Some(CacheOutcome::Hit));
+        validate_plan(&second, &loads).unwrap();
+        // Same segments; transfers may be recorded in a different order,
+        // so compare them as sets.
+        assert_eq!(first.assignments, second.assignments);
+        let mut a = first.transfers.clone();
+        let mut b = second.transfers.clone();
+        a.sort_by_key(|t| (t.expert, t.from, t.to));
+        b.sort_by_key(|t| (t.expert, t.from, t.to));
+        assert_eq!(a, b);
+        assert_eq!(c.stats(), CacheStats { hits: 1, misses: 1, forced: 0 });
+    }
+
+    #[test]
+    fn scaled_loads_hit_via_share_signature() {
+        // Same distribution, 3x the tokens (decode batch grew): the
+        // share signature is unchanged, so the plan is reused and scaled.
+        let loads = vec![6_000u64, 1_000, 500, 500, 0, 0, 1_000, 1_000];
+        let scaled: Vec<u64> = loads.iter().map(|&l| l * 3).collect();
+        let c = llep_cached();
+        let _ = c.plan(4, &loads, None);
+        let reused = c.plan(4, &scaled, None);
+        assert_eq!(c.last_cache_outcome(), Some(CacheOutcome::Hit));
+        validate_plan(&reused, &scaled).unwrap();
+    }
+
+    #[test]
+    fn big_drift_misses() {
+        let hot0 = vec![9_000u64, 0, 0, 0, 0, 0, 0, 1_000];
+        let hot7 = vec![1_000u64, 0, 0, 0, 0, 0, 0, 9_000];
+        let c = llep_cached();
+        let _ = c.plan(4, &hot0, None);
+        let _ = c.plan(4, &hot7, None);
+        assert_eq!(c.last_cache_outcome(), Some(CacheOutcome::Miss));
+        assert_eq!(c.stats().misses, 2);
+        // ... and each signature now has its own entry.
+        let _ = c.plan(4, &hot0, None);
+        let _ = c.plan(4, &hot7, None);
+        assert_eq!(c.stats().hits, 2);
+    }
+
+    #[test]
+    fn replan_every_forces_refresh() {
+        let loads = vec![8_000u64, 0, 0, 0, 0, 0, 0, 2_000];
+        let c = llep_cached().with_replan_every(3);
+        for _ in 0..9 {
+            let _ = c.plan(4, &loads, None);
+        }
+        // miss, 3 hits, forced, 3 hits, forced: an entry serves exactly
+        // `replan_every` reuses before the next lookup replans fresh.
+        assert_eq!(c.stats(), CacheStats { hits: 6, misses: 1, forced: 2 });
+        assert_eq!(c.last_cache_outcome(), Some(CacheOutcome::Forced));
+    }
+
+    #[test]
+    fn replan_every_one_still_alternates_reuse() {
+        // Boundary: N=1 must not degenerate into never-hitting.
+        let loads = vec![8_000u64, 0, 0, 0, 0, 0, 0, 2_000];
+        let c = llep_cached().with_replan_every(1);
+        for _ in 0..5 {
+            let _ = c.plan(4, &loads, None);
+        }
+        // miss, hit, forced, hit, forced
+        assert_eq!(c.stats(), CacheStats { hits: 2, misses: 1, forced: 2 });
+    }
+
+    #[test]
+    fn capacity_evicts_lru() {
+        let c = llep_cached().with_capacity(2);
+        let a = vec![9_000u64, 0, 0, 1_000];
+        let b = vec![0u64, 9_000, 1_000, 0];
+        let d = vec![1_000u64, 0, 9_000, 0];
+        let _ = c.plan(2, &a, None);
+        let _ = c.plan(2, &b, None);
+        let _ = c.plan(2, &d, None); // evicts a
+        let _ = c.plan(2, &a, None); // miss again
+        assert_eq!(c.stats().misses, 4);
+    }
+
+    #[test]
+    fn retarget_identity_when_loads_unchanged() {
+        let loads = vec![10_000u64, 3_000, 0, 500, 700, 900, 1_100, 1_300];
+        let plan = PlannerKind::llep_default().plan(4, &loads, None);
+        let re = retarget_plan(&plan, &loads, &loads);
+        assert_eq!(plan.assignments, re.assignments);
+        validate_plan(&re, &loads).unwrap();
+    }
+
+    #[test]
+    fn retarget_covers_drifted_loads_exactly() {
+        let old = vec![10_000u64, 3_000, 0, 500, 700, 900, 1_100, 1_300];
+        let new = vec![9_500u64, 3_300, 40, 450, 800, 850, 1_000, 1_500];
+        let plan = PlannerKind::llep_default().plan(4, &old, None);
+        let re = retarget_plan(&plan, &old, &new);
+        validate_plan(&re, &new).unwrap();
+        assert_eq!(re.device_loads().iter().sum::<u64>(), new.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn reset_clears_everything() {
+        let loads = vec![5_000u64, 0, 0, 5_000];
+        let c = llep_cached();
+        let _ = c.plan(2, &loads, None);
+        let _ = c.plan(2, &loads, None);
+        assert!(c.stats().lookups() > 0);
+        c.reset();
+        assert_eq!(c.stats(), CacheStats::default());
+        let _ = c.plan(2, &loads, None);
+        assert_eq!(c.stats().misses, 1, "entries were dropped too");
+    }
+
+    #[test]
+    fn signature_math() {
+        assert_eq!(load_signature(&[0, 0], 1024), vec![0, 0]);
+        let sig = load_signature(&[750, 250], 1000);
+        assert_eq!(sig, vec![750, 250]);
+        assert_eq!(signature_drift(&sig, &sig, 1000), 0.0);
+        let moved = load_signature(&[250, 750], 1000);
+        assert!((signature_drift(&sig, &moved, 1000) - 1.0).abs() < 1e-12);
+    }
+}

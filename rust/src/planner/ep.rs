@@ -5,7 +5,73 @@
 //! transfers. Under imbalanced routing this is the plan whose worst
 //! device dominates the collective latency (paper §3.2).
 
-use super::{RoutePlan, Segment};
+use super::{Planner, RoutePlan, Segment};
+use crate::topology::Topology;
+
+/// Standard expert parallelism (paper Alg. 1) as a trait planner.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StandardEp;
+
+impl Planner for StandardEp {
+    fn plan_with_stats(
+        &self,
+        devices: usize,
+        loads: &[u64],
+        _stats: &[u64],
+        _topo: Option<&Topology>,
+    ) -> RoutePlan {
+        plan_ep(loads.len(), devices, loads)
+    }
+
+    fn label(&self) -> String {
+        "EP".into()
+    }
+
+    fn spec(&self) -> String {
+        "ep".into()
+    }
+}
+
+/// Chained gradient-checkpointing baseline (paper §3.1): standard-EP
+/// routing, but the engine's pricing splits each device's per-expert
+/// GEMMs into `chunk_tokens`-sized pieces (see
+/// [`Planner::chunk_tokens`]), bounding activation memory at the cost of
+/// more kernel launches. Chunking is an execution policy, not a routing
+/// change.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChunkedEp {
+    pub chunk_tokens: usize,
+}
+
+impl ChunkedEp {
+    pub fn new(chunk_tokens: usize) -> ChunkedEp {
+        ChunkedEp { chunk_tokens }
+    }
+}
+
+impl Planner for ChunkedEp {
+    fn plan_with_stats(
+        &self,
+        devices: usize,
+        loads: &[u64],
+        _stats: &[u64],
+        _topo: Option<&Topology>,
+    ) -> RoutePlan {
+        plan_ep(loads.len(), devices, loads)
+    }
+
+    fn label(&self) -> String {
+        format!("ChunkedEP(c={})", self.chunk_tokens)
+    }
+
+    fn spec(&self) -> String {
+        format!("chunked:c={}", self.chunk_tokens)
+    }
+
+    fn chunk_tokens(&self) -> Option<u64> {
+        Some((self.chunk_tokens.max(1)) as u64)
+    }
+}
 
 /// Build the standard-EP plan for per-expert `loads`.
 ///
@@ -36,7 +102,8 @@ mod tests {
     #[test]
     fn assigns_native_only() {
         let plan = plan_ep(4, 2, &[7, 0, 3, 9]);
-        assert_eq!(plan.assignments[0], vec![Segment { device: 0, start: 0, end: 7, forced: false }]);
+        let want = vec![Segment { device: 0, start: 0, end: 7, forced: false }];
+        assert_eq!(plan.assignments[0], want);
         assert!(plan.assignments[1].is_empty());
         assert_eq!(plan.assignments[2][0].device, 1);
         assert_eq!(plan.assignments[3][0].device, 1);

@@ -12,7 +12,52 @@
 //! Replica weight movement is amortized (placements change rarely), so
 //! the engine charges EPLB transfers to memory but not to step latency.
 
-use super::{RoutePlan, Segment, WeightTransfer};
+use super::{Planner, RoutePlan, Segment, WeightTransfer};
+use crate::topology::Topology;
+
+/// EPLB as a trait planner. Places replicas from `stats` (possibly a
+/// previous batch's loads — see [`Planner::wants_stale_stats`]) and
+/// splits the actual `loads` across the replica set. Replica weight
+/// movement is time-amortized, so it does not charge weight transfers to
+/// step latency ([`Planner::charges_weight_transfers`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Eplb {
+    pub replicas: usize,
+}
+
+impl Eplb {
+    pub fn new(replicas: usize) -> Eplb {
+        Eplb { replicas }
+    }
+}
+
+impl Planner for Eplb {
+    fn plan_with_stats(
+        &self,
+        devices: usize,
+        loads: &[u64],
+        stats: &[u64],
+        _topo: Option<&Topology>,
+    ) -> RoutePlan {
+        plan_eplb(self.replicas, loads.len(), devices, loads, stats)
+    }
+
+    fn label(&self) -> String {
+        format!("EPLB(r={})", self.replicas)
+    }
+
+    fn spec(&self) -> String {
+        format!("eplb:r={}", self.replicas)
+    }
+
+    fn charges_weight_transfers(&self) -> bool {
+        false
+    }
+
+    fn wants_stale_stats(&self) -> bool {
+        true
+    }
+}
 
 /// Build an EPLB plan.
 ///

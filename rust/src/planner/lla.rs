@@ -10,9 +10,57 @@
 //! remainder is force-assigned to the least-loaded device (LLAS
 //! fallback), which is the only way a device may exceed `m_alpha`.
 
-use super::{RoutePlan, Segment, WeightTransfer};
+use super::{plan_ep, Planner, RoutePlan, Segment, WeightTransfer};
 use crate::config::LlepConfig;
+use crate::routing::imbalance_ratio;
 use crate::topology::Topology;
+
+/// LLEP (paper Alg. 2-4) as a trait planner: the Alg. 4 lambda guard
+/// reverts to standard EP when the routing is balanced enough, otherwise
+/// runs the least-loaded assignment.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Llep {
+    pub cfg: LlepConfig,
+}
+
+impl Llep {
+    pub fn new(cfg: LlepConfig) -> Llep {
+        Llep { cfg }
+    }
+}
+
+impl Planner for Llep {
+    fn plan_with_stats(
+        &self,
+        devices: usize,
+        loads: &[u64],
+        _stats: &[u64],
+        topo: Option<&Topology>,
+    ) -> RoutePlan {
+        if imbalance_ratio(loads) < self.cfg.lambda {
+            // Alg. 4 guard: balanced enough — standard EP.
+            let mut p = plan_ep(loads.len(), devices, loads);
+            p.fallback_ep = true;
+            p
+        } else {
+            plan_llep(&self.cfg, loads.len(), devices, loads, topo)
+        }
+    }
+
+    fn label(&self) -> String {
+        format!(
+            "LLEP(a={},m={},l={})",
+            self.cfg.alpha, self.cfg.min_gemm_tokens, self.cfg.lambda
+        )
+    }
+
+    fn spec(&self) -> String {
+        format!(
+            "llep:alpha={},m={},lambda={}",
+            self.cfg.alpha, self.cfg.min_gemm_tokens, self.cfg.lambda
+        )
+    }
+}
 
 /// Build the LLEP plan. `topo`, when given, breaks least-loaded ties in
 /// favour of intra-node devices (paper §4 "Implementation & Optimization"
@@ -88,7 +136,10 @@ pub fn plan_llep(
             } else {
                 segs.push(Segment { device: ng, start: 0, end: nc, forced: false });
                 g_a[ng] += nc;
-                spill(ng, remaining, nc, &mut segs, &mut g_a, &g_p, m_alpha, min_chunk, topo, &mut others_scratch);
+                spill(
+                    ng, remaining, nc, &mut segs, &mut g_a, &g_p, m_alpha, min_chunk, topo,
+                    &mut others_scratch,
+                );
             }
         } else {
             // Case 3: native is already at/over capacity — spill the whole
@@ -97,7 +148,10 @@ pub fn plan_llep(
                 segs.push(Segment { device: ng, start: 0, end: load, forced: true });
                 g_a[ng] += load;
             } else {
-                spill(ng, load, 0, &mut segs, &mut g_a, &g_p, m_alpha, min_chunk, topo, &mut others_scratch);
+                spill(
+                    ng, load, 0, &mut segs, &mut g_a, &g_p, m_alpha, min_chunk, topo,
+                    &mut others_scratch,
+                );
             }
         }
 

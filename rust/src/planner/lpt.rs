@@ -1,0 +1,164 @@
+//! Greedy LPT (longest-processing-time) whole-expert rebalancer — a
+//! mid-point baseline between standard EP and LLEP, added through the
+//! open [`Planner`] trait (one file + one registry entry, no engine
+//! changes).
+//!
+//! Experts are visited in decreasing-load order and each whole expert is
+//! placed on the currently least-loaded device (classic LPT list
+//! scheduling, a 4/3-approximation for makespan on identical machines).
+//! Unlike LLEP it never *splits* an expert, so a single dominant expert
+//! still bounds the step from below; unlike EP it does move experts off
+//! overloaded devices, paying one weight transfer per relocated expert.
+//! Experts below `min_tokens` stay native — a transfer plus a tiny GEMM
+//! is not worth it (same §3.2/Fig. 8 reasoning as LLEP's `m`).
+
+use super::{Planner, RoutePlan, Segment, WeightTransfer};
+use crate::topology::Topology;
+
+/// The LPT planner's single knob.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Lpt {
+    /// Experts with fewer tokens than this stay on their native device.
+    pub min_tokens: u64,
+}
+
+impl Default for Lpt {
+    fn default() -> Lpt {
+        Lpt { min_tokens: 1024 }
+    }
+}
+
+impl Lpt {
+    pub fn new(min_tokens: u64) -> Lpt {
+        Lpt { min_tokens }
+    }
+}
+
+impl Planner for Lpt {
+    fn plan_with_stats(
+        &self,
+        devices: usize,
+        loads: &[u64],
+        _stats: &[u64],
+        _topo: Option<&Topology>,
+    ) -> RoutePlan {
+        plan_lpt(self.min_tokens, loads.len(), devices, loads)
+    }
+
+    fn label(&self) -> String {
+        format!("LPT(min={})", self.min_tokens)
+    }
+
+    fn spec(&self) -> String {
+        format!("lpt:min={}", self.min_tokens)
+    }
+}
+
+/// Build the greedy-LPT plan for per-expert `loads`.
+///
+/// Panics if `num_experts` is not divisible by `devices` (the block
+/// expert layout assumption shared by all planners here).
+pub fn plan_lpt(min_tokens: u64, num_experts: usize, devices: usize, loads: &[u64]) -> RoutePlan {
+    assert_eq!(loads.len(), num_experts);
+    assert!(devices > 0 && num_experts % devices == 0, "N must divide P");
+    let m = num_experts / devices;
+
+    let mut order: Vec<usize> = (0..num_experts).collect();
+    order.sort_unstable_by_key(|&e| (std::cmp::Reverse(loads[e]), e));
+
+    let mut dev_load = vec![0u64; devices];
+    let mut assignments: Vec<Vec<Segment>> = vec![Vec::new(); num_experts];
+    let mut transfers: Vec<WeightTransfer> = Vec::new();
+    for &e in &order {
+        let l = loads[e];
+        if l == 0 {
+            continue;
+        }
+        let native = e / m;
+        let target = if l < min_tokens {
+            native
+        } else {
+            // Least-loaded device; ties prefer native (no transfer), then
+            // the lowest index (determinism).
+            (0..devices)
+                .min_by_key(|&d| (dev_load[d], d != native, d))
+                .expect("devices > 0")
+        };
+        dev_load[target] += l;
+        assignments[e].push(Segment { device: target, start: 0, end: l, forced: false });
+        if target != native {
+            transfers.push(WeightTransfer { expert: e, from: native, to: target });
+        }
+    }
+    RoutePlan { num_experts, devices, assignments, transfers, fallback_ep: false }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::LlepConfig;
+    use crate::planner::validate::validate_plan;
+    use crate::planner::{plan_ep, plan_llep};
+    use crate::util::stats::max_over_mean;
+
+    fn imbalance(plan: &RoutePlan) -> f64 {
+        let loads: Vec<f64> = plan.device_loads().iter().map(|&l| l as f64).collect();
+        max_over_mean(&loads)
+    }
+
+    #[test]
+    fn whole_experts_only() {
+        let loads = vec![500u64, 400, 300, 200, 100, 50, 25, 0];
+        let plan = plan_lpt(1, 8, 4, &loads);
+        validate_plan(&plan, &loads).unwrap();
+        for (e, segs) in plan.assignments.iter().enumerate() {
+            assert!(segs.len() <= 1, "expert {e} split into {} segments", segs.len());
+        }
+    }
+
+    #[test]
+    fn rebalances_hot_device_but_cannot_split_hot_expert() {
+        // Experts 0 and 1 are native to device 0; LPT can move expert 1
+        // away, but expert 0's 10k tokens stay whole — the structural gap
+        // to LLEP.
+        let loads = vec![10_000u64, 4_000, 10, 10, 10, 10, 10, 10];
+        let plan = plan_lpt(1, 8, 4, &loads);
+        validate_plan(&plan, &loads).unwrap();
+        let ep = plan_ep(8, 4, &loads);
+        assert!(imbalance(&plan) < imbalance(&ep), "LPT must beat EP");
+        assert_eq!(plan.device_loads().iter().max(), Some(&10_000), "whole hot expert bounds LPT");
+        let cfg = LlepConfig { min_gemm_tokens: 1, ..LlepConfig::default() };
+        let ll = plan_llep(&cfg, 8, 4, &loads, None);
+        assert!(
+            plan.device_loads().iter().max() >= ll.device_loads().iter().max(),
+            "LLEP splits the hot expert, LPT cannot"
+        );
+    }
+
+    #[test]
+    fn tiny_experts_stay_native() {
+        let loads = vec![10u64, 10, 10, 10];
+        let plan = plan_lpt(1024, 4, 2, &loads);
+        validate_plan(&plan, &loads).unwrap();
+        assert!(plan.transfers.is_empty(), "everything below min_tokens stays put");
+        assert!(plan.is_pure_ep());
+    }
+
+    #[test]
+    fn balanced_loads_stay_balanced() {
+        // Equal loads: greedy LPT keeps a perfectly even makespan (it may
+        // still shuffle experts — native only wins exact load ties).
+        let loads = vec![100u64; 8];
+        let plan = plan_lpt(1, 8, 4, &loads);
+        validate_plan(&plan, &loads).unwrap();
+        assert_eq!(plan.device_loads(), vec![200, 200, 200, 200]);
+    }
+
+    #[test]
+    fn trait_label_and_spec() {
+        let p = Lpt::new(512);
+        assert_eq!(p.label(), "LPT(min=512)");
+        assert_eq!(p.spec(), "lpt:min=512");
+        assert_eq!(Lpt::default().min_tokens, 1024);
+    }
+}

@@ -1,26 +1,47 @@
-//! Routing planners: standard EP (paper Alg. 1), LLEP's least-loaded
-//! assignment (Alg. 2 + 3), and the EPLB redundancy baseline.
+//! Routing planners behind one open, object-safe [`Planner`] trait:
+//! standard EP (paper Alg. 1), LLEP's least-loaded assignment
+//! (Alg. 2 + 3 + the Alg. 4 lambda guard), the EPLB redundancy baseline,
+//! the chunked-EP gradient-checkpointing baseline, a greedy LPT
+//! whole-expert rebalancer, and the [`CachedPlanner`] decorator that
+//! reuses plans across steps when the load signature barely drifts.
 //!
 //! A [`RoutePlan`] says, for every expert, which device computes which
 //! contiguous segment of that expert's globally-ordered tokens, plus the
 //! weight transfers needed to make that possible. Plans are *data*: the
 //! execution engine ([`crate::exec`]) interprets them, the validators
 //! ([`validate`]) check their invariants, and the cost models price them.
+//!
+//! ## Adding a planner
+//!
+//! New planners are one new file: implement [`Planner`] (a pure
+//! `plan_with_stats` plus a `label`/`spec` pair), then add one
+//! [`registry`] entry so `--planner <spec>` strings like
+//! `llep:alpha=1.0,m=64` can construct it. Execution-policy knobs
+//! (chunked pricing, amortized weight transfers, stale-statistics
+//! placement) are trait methods with defaults — the engine never matches
+//! on a closed enum. [`PlannerKind`] survives only as a thin constructor
+//! layer for backward compatibility; everything engine-side dispatches
+//! through `&dyn Planner`.
 
+pub mod cache;
 pub mod eplb;
-pub mod placement;
 pub mod lla;
+pub mod lpt;
+pub mod placement;
+pub mod registry;
 pub mod validate;
 
 mod ep;
 
-pub use ep::plan_ep;
-pub use eplb::plan_eplb;
+pub use cache::{retarget_plan, CacheOutcome, CacheStats, CachedPlanner};
+pub use ep::{plan_ep, ChunkedEp, StandardEp};
+pub use eplb::{plan_eplb, Eplb};
+pub use lla::{plan_llep, Llep};
+pub use lpt::{plan_lpt, Lpt};
 pub use placement::Placement;
-pub use lla::plan_llep;
+pub use registry::{parse_planner, Params, PlannerEntry, Registry};
 
 use crate::config::LlepConfig;
-use crate::routing::imbalance_ratio;
 use crate::topology::Topology;
 
 /// A contiguous slice `[start, end)` of one expert's global token order,
@@ -113,7 +134,75 @@ impl RoutePlan {
     }
 }
 
-/// Which planner to run.
+/// An object-safe routing planner: turns per-expert loads into a
+/// [`RoutePlan`]. Everything engine-side dispatches through
+/// `&dyn Planner`; implementations are registered in [`registry`] so CLI
+/// spec strings can construct them.
+pub trait Planner: Send + Sync {
+    /// Produce a plan for the loads actually executed (`loads`), placing
+    /// from possibly different statistics (`stats`) — models EPLB's
+    /// time-delayed statistics. Planners that do not use statistics
+    /// ignore `stats`.
+    fn plan_with_stats(
+        &self,
+        devices: usize,
+        loads: &[u64],
+        stats: &[u64],
+        topo: Option<&Topology>,
+    ) -> RoutePlan;
+
+    /// Human-readable name with hyperparameters (for reports).
+    fn label(&self) -> String;
+
+    /// Canonical `--planner` spec string; [`registry::parse_planner`] on
+    /// this string reconstructs an equivalent planner (round-trip).
+    fn spec(&self) -> String;
+
+    /// Produce a plan for per-expert loads `loads`. `topo` enables the
+    /// intra-node spill preference.
+    fn plan(&self, devices: usize, loads: &[u64], topo: Option<&Topology>) -> RoutePlan {
+        self.plan_with_stats(devices, loads, loads, topo)
+    }
+
+    /// Execution policy: split each device's per-expert GEMMs into pieces
+    /// of at most this many tokens (the chunked-EP baseline). `None` =
+    /// unchunked.
+    fn chunk_tokens(&self) -> Option<u64> {
+        None
+    }
+
+    /// Whether weight transfers are charged to step latency. EPLB's
+    /// replica movement is time-amortized (placements change rarely), so
+    /// it returns false; per-step planners pay per step.
+    fn charges_weight_transfers(&self) -> bool {
+        true
+    }
+
+    /// Whether multi-batch runners should feed this planner the previous
+    /// batch's loads as placement statistics (EPLB's stale pipeline).
+    fn wants_stale_stats(&self) -> bool {
+        false
+    }
+
+    /// False for stateful planners (the plan cache): the engine must not
+    /// warm-run them, because every lookup has to be observed exactly
+    /// once.
+    fn replay_safe(&self) -> bool {
+        true
+    }
+
+    /// Outcome of the most recent `plan_with_stats` call made on the
+    /// *current thread* (cache decorators only; `None` for pure
+    /// planners).
+    fn last_cache_outcome(&self) -> Option<CacheOutcome> {
+        None
+    }
+}
+
+/// Which planner to run — retained as a thin constructor layer over the
+/// trait implementations ([`StandardEp`], [`Llep`], [`Eplb`],
+/// [`ChunkedEp`]) for backward compatibility. New planners do not get a
+/// variant here; they go through [`registry`].
 #[derive(Clone, Debug, PartialEq)]
 pub enum PlannerKind {
     /// Paper Alg. 1: every expert computes on its native device.
@@ -137,22 +226,25 @@ impl PlannerKind {
         PlannerKind::Llep(LlepConfig::default())
     }
 
-    pub fn label(&self) -> String {
+    /// Materialize the concrete trait-based planner this variant denotes.
+    pub fn boxed(&self) -> Box<dyn Planner> {
         match self {
-            PlannerKind::StandardEp => "EP".into(),
-            PlannerKind::Llep(c) => {
-                format!("LLEP(a={},m={},l={})", c.alpha, c.min_gemm_tokens, c.lambda)
-            }
-            PlannerKind::Eplb { replicas } => format!("EPLB(r={replicas})"),
-            PlannerKind::ChunkedEp { chunk_tokens } => format!("ChunkedEP(c={chunk_tokens})"),
+            PlannerKind::StandardEp => Box::new(StandardEp),
+            PlannerKind::Llep(cfg) => Box::new(Llep::new(*cfg)),
+            PlannerKind::Eplb { replicas } => Box::new(Eplb::new(*replicas)),
+            PlannerKind::ChunkedEp { chunk_tokens } => Box::new(ChunkedEp::new(*chunk_tokens)),
         }
+    }
+
+    pub fn label(&self) -> String {
+        Planner::label(self)
     }
 
     /// Produce a plan for per-expert loads `loads`. `topo` enables the
     /// intra-node spill preference; EPLB may be given stale loads via
     /// [`PlannerKind::plan_with_stats`].
     pub fn plan(&self, devices: usize, loads: &[u64], topo: Option<&Topology>) -> RoutePlan {
-        self.plan_with_stats(devices, loads, loads, topo)
+        Planner::plan(self, devices, loads, topo)
     }
 
     /// Like [`plan`](Self::plan) but the placement statistics (`stats`)
@@ -165,27 +257,63 @@ impl PlannerKind {
         stats: &[u64],
         topo: Option<&Topology>,
     ) -> RoutePlan {
+        Planner::plan_with_stats(self, devices, loads, stats, topo)
+    }
+}
+
+// Dispatch by match to stack-constructed concrete planners — the hot
+// engine paths call these per layer, so no per-call boxing.
+impl Planner for PlannerKind {
+    fn plan_with_stats(
+        &self,
+        devices: usize,
+        loads: &[u64],
+        stats: &[u64],
+        topo: Option<&Topology>,
+    ) -> RoutePlan {
         match self {
-            PlannerKind::StandardEp => plan_ep(loads.len(), devices, loads),
-            PlannerKind::Llep(cfg) => {
-                let ratio = imbalance_ratio(loads);
-                if ratio < cfg.lambda {
-                    // Alg. 4 guard: balanced enough — standard EP.
-                    let mut p = plan_ep(loads.len(), devices, loads);
-                    p.fallback_ep = true;
-                    p
-                } else {
-                    plan_llep(cfg, loads.len(), devices, loads, topo)
-                }
-            }
+            PlannerKind::StandardEp => StandardEp.plan_with_stats(devices, loads, stats, topo),
+            PlannerKind::Llep(cfg) => Llep::new(*cfg).plan_with_stats(devices, loads, stats, topo),
             PlannerKind::Eplb { replicas } => {
-                plan_eplb(*replicas, loads.len(), devices, loads, stats)
+                Eplb::new(*replicas).plan_with_stats(devices, loads, stats, topo)
             }
-            // Chunking is an execution policy, not a routing change: the
-            // plan is standard EP; the engine's pricing splits each
-            // device's GEMMs into `chunk_tokens` pieces.
-            PlannerKind::ChunkedEp { .. } => plan_ep(loads.len(), devices, loads),
+            PlannerKind::ChunkedEp { chunk_tokens } => {
+                ChunkedEp::new(*chunk_tokens).plan_with_stats(devices, loads, stats, topo)
+            }
         }
+    }
+
+    fn label(&self) -> String {
+        match self {
+            PlannerKind::StandardEp => StandardEp.label(),
+            PlannerKind::Llep(cfg) => Llep::new(*cfg).label(),
+            PlannerKind::Eplb { replicas } => Eplb::new(*replicas).label(),
+            PlannerKind::ChunkedEp { chunk_tokens } => ChunkedEp::new(*chunk_tokens).label(),
+        }
+    }
+
+    fn spec(&self) -> String {
+        match self {
+            PlannerKind::StandardEp => StandardEp.spec(),
+            PlannerKind::Llep(cfg) => Llep::new(*cfg).spec(),
+            PlannerKind::Eplb { replicas } => Eplb::new(*replicas).spec(),
+            PlannerKind::ChunkedEp { chunk_tokens } => ChunkedEp::new(*chunk_tokens).spec(),
+        }
+    }
+
+    fn chunk_tokens(&self) -> Option<u64> {
+        match self {
+            PlannerKind::ChunkedEp { chunk_tokens } => Some((*chunk_tokens).max(1) as u64),
+            _ => None,
+        }
+    }
+
+    fn charges_weight_transfers(&self) -> bool {
+        !matches!(self, PlannerKind::Eplb { .. })
+    }
+
+    fn wants_stale_stats(&self) -> bool {
+        matches!(self, PlannerKind::Eplb { .. })
     }
 }
 
@@ -235,5 +363,32 @@ mod tests {
         let kind = PlannerKind::llep_default();
         let plan = kind.plan(2, &[1000, 0, 0, 0], None);
         assert!(!plan.fallback_ep);
+    }
+
+    #[test]
+    fn kind_and_trait_dispatch_agree() {
+        // The enum is a thin constructor layer: going through the trait
+        // object must produce exactly the plan the inherent API produces.
+        let loads = [900u64, 10, 40, 50, 0, 0, 0, 0];
+        for kind in [
+            PlannerKind::StandardEp,
+            PlannerKind::llep_default(),
+            PlannerKind::Eplb { replicas: 4 },
+            PlannerKind::ChunkedEp { chunk_tokens: 16 },
+        ] {
+            let via_kind = kind.plan(4, &loads, None);
+            let via_trait = kind.boxed().plan(4, &loads, None);
+            assert_eq!(via_kind, via_trait, "{}", kind.label());
+        }
+    }
+
+    #[test]
+    fn execution_policy_is_trait_driven() {
+        assert_eq!(PlannerKind::ChunkedEp { chunk_tokens: 64 }.boxed().chunk_tokens(), Some(64));
+        assert_eq!(PlannerKind::StandardEp.boxed().chunk_tokens(), None);
+        assert!(!PlannerKind::Eplb { replicas: 2 }.boxed().charges_weight_transfers());
+        assert!(PlannerKind::Eplb { replicas: 2 }.boxed().wants_stale_stats());
+        assert!(PlannerKind::llep_default().boxed().charges_weight_transfers());
+        assert!(PlannerKind::llep_default().boxed().replay_safe());
     }
 }

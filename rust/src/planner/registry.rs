@@ -1,0 +1,359 @@
+//! Planner registry: constructs trait planners from `--planner` spec
+//! strings.
+//!
+//! Grammar: `name[:key=value,key=value,...]`, plus the decorator form
+//! `cached(<inner spec>)[:drift=F,every=N,q=Q]`. Examples:
+//!
+//! ```text
+//! ep
+//! llep:alpha=1.0,m=64
+//! eplb:r=8
+//! chunked:c=4096
+//! lpt:min=1024
+//! cached(llep:alpha=1.2):drift=0.05,every=32
+//! ```
+//!
+//! Unknown names and unknown/leftover parameters are hard errors so a
+//! typo never silently changes an experiment. Every planner's
+//! [`Planner::spec`] string round-trips through [`Registry::parse`].
+//! Adding a planner is one new file implementing [`Planner`] plus one
+//! [`PlannerEntry`] in [`Registry::builtin`] (or a runtime
+//! [`Registry::register`] call — see the tests for an out-of-tree
+//! planner).
+
+use super::{CachedPlanner, ChunkedEp, Eplb, Llep, Lpt, Planner, StandardEp};
+use crate::config::LlepConfig;
+
+/// Parsed `key=value` parameter list; builders [`take`](Params::take)
+/// what they recognize and [`finish`](Params::finish) rejects leftovers.
+pub struct Params {
+    kv: Vec<(String, String)>,
+}
+
+impl Params {
+    fn parse(s: &str) -> Result<Params, String> {
+        let mut kv = Vec::new();
+        for part in s.split(',').filter(|p| !p.trim().is_empty()) {
+            let (k, v) = part
+                .split_once('=')
+                .ok_or_else(|| format!("expected key=value, got {part:?}"))?;
+            kv.push((k.trim().to_string(), v.trim().to_string()));
+        }
+        Ok(Params { kv })
+    }
+
+    /// Remove and return the raw value for `key`, if present.
+    pub fn take(&mut self, key: &str) -> Option<String> {
+        self.kv.iter().position(|(k, _)| k == key).map(|i| self.kv.remove(i).1)
+    }
+
+    pub fn take_f64(&mut self, key: &str) -> Result<Option<f64>, String> {
+        match self.take(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<f64>()
+                .map(Some)
+                .map_err(|_| format!("{key} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn take_usize(&mut self, key: &str) -> Result<Option<usize>, String> {
+        match self.take(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<usize>()
+                .map(Some)
+                .map_err(|_| format!("{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn take_u64(&mut self, key: &str) -> Result<Option<u64>, String> {
+        match self.take(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<u64>()
+                .map(Some)
+                .map_err(|_| format!("{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    /// Error if any parameter was not consumed by the builder.
+    pub fn finish(&self, name: &str) -> Result<(), String> {
+        if self.kv.is_empty() {
+            Ok(())
+        } else {
+            let keys: Vec<&str> = self.kv.iter().map(|(k, _)| k.as_str()).collect();
+            Err(format!("unknown parameter(s) for {name}: {}", keys.join(", ")))
+        }
+    }
+}
+
+/// One registered planner constructor.
+pub struct PlannerEntry {
+    /// Spec name (the part before `:`).
+    pub name: &'static str,
+    /// One-line description for `llep info`.
+    pub help: &'static str,
+    /// Example spec string shown in help output.
+    pub example: &'static str,
+    /// Build the planner from its parameters.
+    pub build: fn(&mut Params) -> Result<Box<dyn Planner>, String>,
+}
+
+/// The open planner registry. [`Registry::builtin`] knows the in-tree
+/// planners; [`Registry::register`] adds more at runtime (later
+/// registrations shadow earlier ones of the same name).
+pub struct Registry {
+    entries: Vec<PlannerEntry>,
+}
+
+impl Registry {
+    /// Registry with the five in-tree planners.
+    pub fn builtin() -> Registry {
+        let mut r = Registry { entries: Vec::new() };
+        r.register(PlannerEntry {
+            name: "ep",
+            help: "standard expert parallelism (paper Alg. 1)",
+            example: "ep",
+            build: |_| Ok(Box::new(StandardEp)),
+        });
+        r.register(PlannerEntry {
+            name: "llep",
+            help: "least-loaded expert parallelism (paper Alg. 2-4)",
+            example: "llep:alpha=1.0,m=1024,lambda=1.3",
+            build: |p| {
+                let mut cfg = LlepConfig::default();
+                if let Some(v) = p.take_f64("alpha")? {
+                    cfg.alpha = v;
+                }
+                if let Some(v) = p.take_usize("m")? {
+                    cfg.min_gemm_tokens = v;
+                }
+                if let Some(v) = p.take_f64("lambda")? {
+                    cfg.lambda = v;
+                }
+                cfg.validate()?;
+                Ok(Box::new(Llep::new(cfg)))
+            },
+        });
+        r.register(PlannerEntry {
+            name: "eplb",
+            help: "EPLB replication baseline (r = replica budget)",
+            example: "eplb:r=8",
+            build: |p| {
+                let replicas = p.take_usize("r")?.unwrap_or(8);
+                Ok(Box::new(Eplb::new(replicas)))
+            },
+        });
+        r.register(PlannerEntry {
+            name: "chunked",
+            help: "chunked standard EP (gradient-checkpointing baseline)",
+            example: "chunked:c=4096",
+            build: |p| {
+                let c = p.take_usize("c")?.unwrap_or(4096);
+                if c == 0 {
+                    return Err("chunked: c must be positive".into());
+                }
+                Ok(Box::new(ChunkedEp::new(c)))
+            },
+        });
+        r.register(PlannerEntry {
+            name: "lpt",
+            help: "greedy longest-processing-time whole-expert rebalancer",
+            example: "lpt:min=1024",
+            build: |p| {
+                let min = p.take_u64("min")?.unwrap_or(1024);
+                Ok(Box::new(Lpt::new(min)))
+            },
+        });
+        r
+    }
+
+    /// Register a planner; shadows an earlier entry of the same name.
+    pub fn register(&mut self, entry: PlannerEntry) {
+        self.entries.push(entry);
+    }
+
+    pub fn entries(&self) -> &[PlannerEntry] {
+        &self.entries
+    }
+
+    fn names(&self) -> Vec<&'static str> {
+        self.entries.iter().map(|e| e.name).collect()
+    }
+
+    /// Parse a spec string into a planner.
+    pub fn parse(&self, spec: &str) -> Result<Box<dyn Planner>, String> {
+        let spec = spec.trim();
+        if spec.is_empty() {
+            return Err("empty planner spec".into());
+        }
+        if let Some(rest) = spec.strip_prefix("cached(") {
+            let close = matching_paren(rest)
+                .ok_or_else(|| format!("unbalanced parentheses in {spec:?}"))?;
+            let inner = self.parse(&rest[..close])?;
+            let tail = &rest[close + 1..];
+            let param_str = match tail.strip_prefix(':') {
+                Some(s) => s,
+                None if tail.is_empty() => "",
+                None => return Err(format!("unexpected trailing {tail:?} in {spec:?}")),
+            };
+            let mut params = Params::parse(param_str)?;
+            let mut cp = CachedPlanner::new(inner);
+            if let Some(v) = params.take_f64("drift")? {
+                cp = cp.with_drift_threshold(v);
+            }
+            if let Some(v) = params.take_usize("every")? {
+                cp = cp.with_replan_every(v);
+            }
+            if let Some(v) = params.take_u64("q")? {
+                cp = cp.with_quant(v);
+            }
+            params.finish("cached")?;
+            return Ok(Box::new(cp));
+        }
+        let (name, tail) = spec.split_once(':').unwrap_or((spec, ""));
+        let entry = self
+            .entries
+            .iter()
+            .rev()
+            .find(|e| e.name == name)
+            .ok_or_else(|| {
+                format!("unknown planner {name:?} (known: {})", self.names().join(", "))
+            })?;
+        let mut params = Params::parse(tail)?;
+        let planner = (entry.build)(&mut params)?;
+        params.finish(name)?;
+        Ok(planner)
+    }
+}
+
+/// Index of the `)` balancing the implicit `(` already consumed.
+fn matching_paren(s: &str) -> Option<usize> {
+    let mut depth = 1usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '(' => depth += 1,
+            ')' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(i);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Parse a `--planner` spec against the builtin registry.
+pub fn parse_planner(spec: &str) -> Result<Box<dyn Planner>, String> {
+    Registry::builtin().parse(spec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::{CacheOutcome, RoutePlan};
+    use crate::topology::Topology;
+
+    #[test]
+    fn all_builtin_specs_round_trip() {
+        for spec in [
+            "ep",
+            "llep:alpha=1.5,m=64,lambda=1.2",
+            "eplb:r=6",
+            "chunked:c=2048",
+            "lpt:min=512",
+        ] {
+            let p = parse_planner(spec).unwrap();
+            let canon = p.spec();
+            let p2 = parse_planner(&canon)
+                .unwrap_or_else(|e| panic!("canonical spec {canon:?} must reparse: {e}"));
+            assert_eq!(p2.spec(), canon, "spec fixed point for {spec}");
+            assert_eq!(p2.label(), p.label(), "same planner for {spec}");
+        }
+    }
+
+    #[test]
+    fn defaults_fill_in() {
+        assert_eq!(parse_planner("llep").unwrap().label(), "LLEP(a=1,m=1024,l=1.3)");
+        assert_eq!(parse_planner("eplb").unwrap().label(), "EPLB(r=8)");
+        assert_eq!(parse_planner("lpt").unwrap().label(), "LPT(min=1024)");
+        assert_eq!(parse_planner("chunked").unwrap().label(), "ChunkedEP(c=4096)");
+    }
+
+    #[test]
+    fn cached_decorator_parses_and_round_trips() {
+        let p = parse_planner("cached(llep:alpha=1.5):drift=0.1,every=16").unwrap();
+        assert!(p.label().starts_with("Cached[LLEP"));
+        assert!(!p.replay_safe());
+        let canon = p.spec();
+        let p2 = parse_planner(&canon).unwrap();
+        assert_eq!(p2.spec(), canon);
+        // bare decorator, defaults only
+        let bare = parse_planner("cached(ep)").unwrap();
+        assert_eq!(bare.label(), "Cached[EP]");
+    }
+
+    #[test]
+    fn cached_parse_produces_working_cache() {
+        let p = parse_planner("cached(llep)").unwrap();
+        let loads = vec![9_000u64, 0, 0, 1_000];
+        let _ = p.plan(2, &loads, None);
+        let _ = p.plan(2, &loads, None);
+        assert_eq!(p.last_cache_outcome(), Some(CacheOutcome::Hit));
+    }
+
+    #[test]
+    fn errors_are_loud() {
+        assert!(parse_planner("bogus").unwrap_err().contains("unknown planner"));
+        assert!(parse_planner("llep:frob=1").unwrap_err().contains("unknown parameter"));
+        assert!(parse_planner("llep:alpha=abc").unwrap_err().contains("expects a number"));
+        assert!(parse_planner("llep:alpha").unwrap_err().contains("key=value"));
+        assert!(parse_planner("cached(llep").unwrap_err().contains("unbalanced"));
+        assert!(parse_planner("cached(ep)x").unwrap_err().contains("trailing"));
+        assert!(parse_planner("").is_err());
+        assert!(parse_planner("llep:alpha=0.5").is_err(), "LlepConfig::validate applies");
+    }
+
+    #[test]
+    fn runtime_registration_extends_the_set() {
+        // Prove extensibility: an out-of-tree planner joins via one
+        // register() call, no enum edits anywhere.
+        struct EverythingOnZero;
+        impl crate::planner::Planner for EverythingOnZero {
+            fn plan_with_stats(
+                &self,
+                devices: usize,
+                loads: &[u64],
+                _stats: &[u64],
+                _topo: Option<&Topology>,
+            ) -> RoutePlan {
+                let mut plan = crate::planner::plan_ep(loads.len(), devices, loads);
+                plan.fallback_ep = false;
+                plan
+            }
+            fn label(&self) -> String {
+                "ZERO".into()
+            }
+            fn spec(&self) -> String {
+                "zero".into()
+            }
+        }
+        let mut reg = Registry::builtin();
+        reg.register(PlannerEntry {
+            name: "zero",
+            help: "test-only",
+            example: "zero",
+            build: |_| Ok(Box::new(EverythingOnZero)),
+        });
+        let p = reg.parse("zero").unwrap();
+        assert_eq!(p.label(), "ZERO");
+        let plan = p.plan(2, &[5, 5, 5, 5], None);
+        assert_eq!(plan.num_experts, 4);
+        // ... and the decorator composes with it.
+        let cached = reg.parse("cached(zero):drift=0.2").unwrap();
+        assert_eq!(cached.label(), "Cached[ZERO]");
+    }
+}

@@ -218,7 +218,9 @@ impl DepthProfile {
         let n = model.num_experts;
         let layers = model.num_moe_layers().max(1);
         DepthProfile {
-            layers: (0..layers).map(|i| Scenario::drifting((7 * i + 11) % n, dominance, drift)).collect(),
+            layers: (0..layers)
+                .map(|i| Scenario::drifting((7 * i + 11) % n, dominance, drift))
+                .collect(),
         }
     }
 

@@ -37,7 +37,12 @@ impl Runtime {
             .with_context(|| format!("reading {manifest_path:?} — run `make artifacts` first"))?;
         let manifest = Manifest::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
         let client = xla::PjRtClient::cpu()?;
-        Ok(Runtime { client, dir: dir.to_path_buf(), manifest, cache: RefCell::new(HashMap::new()) })
+        Ok(Runtime {
+            client,
+            dir: dir.to_path_buf(),
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+        })
     }
 
     /// Default artifacts directory: `$LLEP_ARTIFACTS` or `./artifacts`.

@@ -161,7 +161,8 @@ mod tests {
         assert!(spec().parse(&argv(&["--bogus"]), false).is_err());
         assert!(spec().parse(&argv(&["--fig"]), false).is_err());
         assert!(spec().parse(&argv(&["--verbose=yes"]), false).is_err());
-        assert!(spec().parse(&argv(&["--devices", "x"]), false).unwrap().get_usize("devices", 1).is_err());
+        let parsed = spec().parse(&argv(&["--devices", "x"]), false).unwrap();
+        assert!(parsed.get_usize("devices", 1).is_err());
     }
 
     #[test]

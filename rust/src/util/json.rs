@@ -325,7 +325,9 @@ impl<'a> Parser<'a> {
                     let start = self.pos;
                     let len = utf8_len(self.bytes[start]);
                     let end = (start + len).min(self.bytes.len());
-                    s.push_str(std::str::from_utf8(&self.bytes[start..end]).map_err(|e| e.to_string())?);
+                    let text =
+                        std::str::from_utf8(&self.bytes[start..end]).map_err(|e| e.to_string())?;
+                    s.push_str(text);
                     self.pos = end;
                 }
             }
@@ -336,7 +338,16 @@ impl<'a> Parser<'a> {
         if self.peek() == Some(b'-') {
             self.pos += 1;
         }
-        while matches!(self.peek(), Some(c) if c.is_ascii_digit() || c == b'.' || c == b'e' || c == b'E' || c == b'+' || c == b'-')
+        while matches!(
+            self.peek(),
+            Some(c)
+                if c.is_ascii_digit()
+                    || c == b'.'
+                    || c == b'e'
+                    || c == b'E'
+                    || c == b'+'
+                    || c == b'-'
+        )
         {
             self.pos += 1;
         }

@@ -2,7 +2,8 @@
 //!
 //! This build environment is offline (the `xla`/`anyhow` dependency tree
 //! exists only behind the optional `pjrt` feature), so the crate carries
-//! its own implementations of the small utility layers it needs: a deterministic PRNG ([`rng`]), a CLI argument
+//! its own implementations of the small utility layers it needs: a
+//! deterministic PRNG ([`rng`]), a CLI argument
 //! parser ([`cli`]), a TOML-subset parser ([`tomlmini`]), a JSON
 //! reader/writer ([`json`]), summary statistics ([`stats`]), a
 //! criterion-style benchmark kit ([`benchkit`]) and a property-testing

@@ -63,8 +63,14 @@ where
 }
 
 /// Assert-style wrapper: panics with a reproducible report on failure.
-pub fn assert_property<T, G, P, S>(name: &str, base_seed: u64, cases: usize, gen: G, property: P, shrink: S)
-where
+pub fn assert_property<T, G, P, S>(
+    name: &str,
+    base_seed: u64,
+    cases: usize,
+    gen: G,
+    property: P,
+    shrink: S,
+) where
     T: Clone + std::fmt::Debug,
     G: FnMut(&mut Rng) -> T,
     P: FnMut(&T) -> Result<(), String>,
@@ -118,8 +124,9 @@ mod tests {
     #[test]
     fn seeds_are_deterministic() {
         let gen = |rng: &mut Rng| rng.index(1_000_000);
-        let f1 = check(7, 50, gen, |&x| if x % 3 != 0 { Ok(()) } else { Err("div3".into()) }, no_shrink);
-        let f2 = check(7, 50, gen, |&x| if x % 3 != 0 { Ok(()) } else { Err("div3".into()) }, no_shrink);
+        let prop = |&x: &usize| if x % 3 != 0 { Ok(()) } else { Err("div3".into()) };
+        let f1 = check(7, 50, gen, prop, no_shrink);
+        let f2 = check(7, 50, gen, prop, no_shrink);
         assert_eq!(f1.map(|f| f.input), f2.map(|f| f.input));
     }
 }

@@ -18,7 +18,16 @@ impl Summary {
     /// an all-zero summary.
     pub fn of(samples: &[f64]) -> Summary {
         if samples.is_empty() {
-            return Summary { n: 0, mean: 0.0, std: 0.0, min: 0.0, p50: 0.0, p90: 0.0, p99: 0.0, max: 0.0 };
+            return Summary {
+                n: 0,
+                mean: 0.0,
+                std: 0.0,
+                min: 0.0,
+                p50: 0.0,
+                p90: 0.0,
+                p99: 0.0,
+                max: 0.0,
+            };
         }
         let mut s: Vec<f64> = samples.to_vec();
         // total_cmp: NaN samples sort to the ends instead of panicking

@@ -76,7 +76,8 @@ fn run_full_model_prices_all_layers() {
     ]);
     assert!(out.contains("full model, 6 MoE layers"), "{out}");
     assert!(out.contains("overlap saved"), "{out}");
-    assert!(out.contains("LLEP per-layer breakdown"), "{out}");
+    assert!(out.contains("per-layer breakdown"), "{out}");
+    assert!(out.contains("LLEP"), "default comparison includes LLEP:\n{out}");
     assert!(out.contains("L5"), "per-layer rows present:\n{out}");
 }
 
@@ -110,6 +111,61 @@ fn serve_reports_latency_percentiles() {
     let out = run_ok(&["serve", "--steps", "16"]);
     assert!(out.contains("p50 latency"));
     assert!(out.contains("tok/s"));
+    assert!(out.contains("plan cache"), "serve table lists cache column:\n{out}");
+}
+
+#[test]
+fn run_accepts_planner_spec() {
+    let out = run_ok(&[
+        "run", "--planner", "lpt:min=512", "--scenario", "concentrated", "--tokens", "4096",
+    ]);
+    assert!(out.contains("LPT(min=512)"), "{out}");
+    assert!(!out.contains("EPLB"), "--planner overrides the default comparison set:\n{out}");
+}
+
+#[test]
+fn serve_with_plan_reuse_reports_cache_hits() {
+    let out = run_ok(&[
+        "serve", "--steps", "12", "--planner", "llep", "--plan-reuse", "--replan-every", "8",
+        "--cache-drift", "0.2",
+    ]);
+    assert!(out.contains("Cached[LLEP"), "{out}");
+    assert!(out.contains("%"), "hit-rate column rendered:\n{out}");
+}
+
+#[test]
+fn explicit_cached_spec_runs_and_rejects_conflicting_flags() {
+    // An explicit cached(...) spec works on its own ...
+    let out = run_ok(&["serve", "--steps", "8", "--planner", "cached(llep):drift=0.1"]);
+    assert!(out.contains("Cached[LLEP"), "{out}");
+    assert!(!out.contains("Cached[Cached"), "{out}");
+
+    // ... but combining it with the cache flags would silently change the
+    // experiment, so it must fail loudly instead.
+    let args =
+        ["serve", "--steps", "8", "--planner", "cached(llep):drift=0.1", "--replan-every", "4"];
+    let out = llep().args(args).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("already-cached"));
+}
+
+#[test]
+fn bad_planner_spec_fails_loudly() {
+    let out = llep().args(["run", "--planner", "bogus"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown planner"));
+
+    let out = llep().args(["run", "--planner", "llep:frob=1"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown parameter"));
+}
+
+#[test]
+fn info_lists_planner_registry() {
+    let out = run_ok(&["info"]);
+    for name in ["ep", "llep", "eplb", "chunked", "lpt", "cached"] {
+        assert!(out.contains(name), "info missing planner {name}:\n{out}");
+    }
 }
 
 #[test]

@@ -120,7 +120,8 @@ fn ep_latency_monotone_in_concentration() {
     let mut rng = Rng::new(3);
     let mut last = 0.0;
     for &c in &[0.0f64, 0.3, 0.5, 0.8, 0.95] {
-        let lm = Scenario::concentrated(c.max(0.01), 1).generate_loads(&e.model, 8, 16_384, &mut rng);
+        let lm =
+            Scenario::concentrated(c.max(0.01), 1).generate_loads(&e.model, 8, 16_384, &mut rng);
         let r = e.run_step_loads(&lm, &PlannerKind::StandardEp);
         assert!(
             r.latency_s >= last * 0.999,
@@ -186,7 +187,8 @@ fn eplb_fresh_vs_stale() {
     for row in cold_counts.counts.iter_mut() {
         row.rotate_right(e.model.num_experts / 2);
     }
-    let stale = e.run_step_loads_with_stats(&lm_hot, &cold_counts, &PlannerKind::Eplb { replicas: 8 });
+    let stale =
+        e.run_step_loads_with_stats(&lm_hot, &cold_counts, &PlannerKind::Eplb { replicas: 8 });
     let llep = e.run_step_loads(&lm_hot, &PlannerKind::llep_default());
     assert!(
         stale.latency_s > llep.latency_s,

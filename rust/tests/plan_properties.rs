@@ -95,7 +95,8 @@ fn ep_and_eplb_plans_are_always_valid() {
         |input| {
             let ep = PlannerKind::StandardEp.plan(input.p, &input.loads, None);
             validate_plan(&ep, &input.loads)?;
-            let eplb = PlannerKind::Eplb { replicas: input.p * 2 }.plan(input.p, &input.loads, None);
+            let eplb =
+                PlannerKind::Eplb { replicas: input.p * 2 }.plan(input.p, &input.loads, None);
             validate_plan(&eplb, &input.loads)
         },
         shrink_input,

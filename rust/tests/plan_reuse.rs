@@ -1,0 +1,283 @@
+//! Integration tests for the trait-based planner architecture and the
+//! cross-step plan cache: `--planner` spec round-trips through the
+//! registry for all five planners, a cache hit on an *identical* load
+//! matrix prices bit-identically to a fresh plan, and a drifted-load hit
+//! is honest — the reused plan never balances (and on structural drift
+//! never prices) better than replanning would.
+
+use llep::config::LlepConfig;
+use llep::exec::price_plan;
+use llep::planner::validate::validate_plan;
+use llep::planner::{retarget_plan, CachedPlanner, Llep, Planner, Registry};
+use llep::prelude::*;
+use llep::routing::LoadMatrix;
+use llep::util::prop::{assert_property, no_shrink};
+
+fn engine() -> Engine {
+    Engine::modeled(
+        ModelConfig::preset(ModelPreset::Fig1Layer), // N=128 experts
+        SystemConfig::preset(SystemPreset::H200x8),
+    )
+}
+
+/// Load matrix with every token originating on device 0 (K=1): the
+/// planner and cost models only consume per-expert totals and origin
+/// rows, so this is the minimal harness for pricing a raw load vector.
+fn lm_from_loads(loads: &[u64], devices: usize) -> LoadMatrix {
+    let mut counts = vec![vec![0u64; loads.len()]; devices];
+    counts[0] = loads.to_vec();
+    LoadMatrix { counts, top_k: 1 }
+}
+
+#[test]
+fn registry_round_trips_all_five_planners() {
+    // Acceptance: EP, LLEP, EPLB, ChunkedEP, LPT all round-trip through
+    // the registry parser (spec -> planner -> canonical spec -> planner).
+    let specs =
+        ["ep", "llep:alpha=1.25,m=256,lambda=1.1", "eplb:r=4", "chunked:c=1024", "lpt:min=2048"];
+    let mut labels = Vec::new();
+    for spec in specs {
+        let p = Registry::builtin().parse(spec).unwrap_or_else(|e| panic!("{spec}: {e}"));
+        let canon = p.spec();
+        let p2 = Registry::builtin()
+            .parse(&canon)
+            .unwrap_or_else(|e| panic!("canonical {canon}: {e}"));
+        assert_eq!(p2.spec(), canon, "{spec} must be a spec fixed point");
+        assert_eq!(p2.label(), p.label(), "{spec} must reconstruct the same planner");
+        labels.push(p.label());
+    }
+    for prefix in ["EP", "LLEP", "EPLB", "ChunkedEP", "LPT"] {
+        assert!(
+            labels.iter().any(|l| l.starts_with(prefix)),
+            "planner {prefix} missing from {labels:?}"
+        );
+    }
+    // ... and every parsed planner actually plans through the trait.
+    let loads = vec![5_000u64; 128];
+    for spec in specs {
+        let p = Registry::builtin().parse(spec).unwrap();
+        let plan = p.plan(8, &loads, None);
+        validate_plan(&plan, &loads).unwrap_or_else(|e| panic!("{spec}: {e}"));
+    }
+}
+
+#[test]
+fn cached_hit_prices_identically_to_fresh_on_unchanged_loads() {
+    let e = engine();
+    let mut rng = Rng::new(42);
+    let lm = Scenario::concentrated(0.9, 1).generate_loads(&e.model, 8, 8192, &mut rng);
+
+    let fresh = e.run_step_loads(&lm, &PlannerKind::llep_default());
+    let cached = CachedPlanner::new(PlannerKind::llep_default().boxed());
+    let miss = e.run_step_loads(&lm, &cached);
+    let hit = e.run_step_loads(&lm, &cached);
+    assert_eq!(miss.cache.misses, 1);
+    assert_eq!(hit.cache.hits, 1);
+
+    // Every deterministic pricing quantity is bit-identical across all
+    // three; only the measured plan wall time may differ.
+    for r in [&miss, &hit] {
+        assert_eq!(r.device_compute_s, fresh.device_compute_s);
+        assert_eq!(r.device_peak_bytes, fresh.device_peak_bytes);
+        assert_eq!(r.bytes_dispatch, fresh.bytes_dispatch);
+        assert_eq!(r.bytes_combine, fresh.bytes_combine);
+        assert_eq!(r.bytes_weights, fresh.bytes_weights);
+        assert_eq!(r.gemm_calls, fresh.gemm_calls);
+        assert_eq!(r.weight_transfers, fresh.weight_transfers);
+        assert_eq!(r.tokens, fresh.tokens);
+        assert_eq!(r.phases.dispatch_s, fresh.phases.dispatch_s);
+        assert_eq!(r.phases.weights_s, fresh.phases.weights_s);
+        assert_eq!(r.phases.compute_s, fresh.phases.compute_s);
+        assert_eq!(r.phases.combine_s, fresh.phases.combine_s);
+    }
+}
+
+/// Random load vectors: mixture of zeros, small and large entries, with
+/// a hot head so the lambda guard usually engages.
+fn gen_loads(rng: &mut Rng) -> Vec<u64> {
+    (0..128)
+        .map(|i| {
+            if i < 4 {
+                20_000 + rng.below(200_000)
+            } else {
+                match rng.index(3) {
+                    0 => 0,
+                    1 => rng.below(500),
+                    _ => rng.below(20_000),
+                }
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn prop_identity_retarget_prices_bit_identically() {
+    let e = engine();
+    let kind = PlannerKind::Llep(LlepConfig {
+        alpha: 1.0,
+        min_gemm_tokens: 64,
+        lambda: 1.0,
+    });
+    assert_property(
+        "identity retarget prices bit-identically",
+        0xCAFE,
+        120,
+        gen_loads,
+        |loads| {
+            let lm = lm_from_loads(loads, 8);
+            let fresh = kind.plan(8, loads, Some(&e.topo));
+            let reused = retarget_plan(&fresh, loads, loads);
+            validate_plan(&reused, loads)?;
+            let pf = price_plan(&e, &fresh, &lm, &kind, 0.0, None);
+            let pr = price_plan(&e, &reused, &lm, &kind, 0.0, None);
+            if pf.latency_s != pr.latency_s {
+                return Err(format!("latency {} != {}", pf.latency_s, pr.latency_s));
+            }
+            if pf.device_compute_s != pr.device_compute_s {
+                return Err("device compute differs".into());
+            }
+            if pf.device_peak_bytes != pr.device_peak_bytes {
+                return Err("peak memory differs".into());
+            }
+            Ok(())
+        },
+        no_shrink,
+    );
+}
+
+#[test]
+fn prop_drifted_reuse_never_balances_better_than_replanning() {
+    // The honesty property at the token level: when the fresh plan is
+    // capacity-clean (no forced segments, no lambda fallback), its max
+    // device load is <= floor(m_alpha) by the LLA capacity contract,
+    // while *any* plan — in particular a stale retargeted one — carries
+    // at least ceil(total/P) = ceil(m_alpha) somewhere. A reused stale
+    // plan can therefore never balance better than replanning; at best
+    // it ties.
+    let kind = PlannerKind::Llep(LlepConfig {
+        alpha: 1.0,
+        min_gemm_tokens: 8,
+        lambda: 1.0,
+    });
+    assert_property(
+        "drifted reuse never balances better",
+        0xBEEF,
+        120,
+        |rng| {
+            let old = gen_loads(rng);
+            // Drift: jitter every expert by up to ~25% and move some mass
+            // onto a new hot expert.
+            let mut new = old.clone();
+            for l in new.iter_mut() {
+                let span = (*l / 4).max(1);
+                let down = rng.below(span + 1);
+                let up = rng.below(span + 1);
+                *l = l.saturating_sub(down) + up;
+            }
+            let hot = 4 + rng.index(124);
+            new[hot] += 50_000;
+            (old, new)
+        },
+        |(old, new)| {
+            let fresh_old = kind.plan(8, old, None);
+            let stale = retarget_plan(&fresh_old, old, new);
+            validate_plan(&stale, new).map_err(|e| format!("stale plan invalid: {e}"))?;
+            let fresh_new = kind.plan(8, new, None);
+            let clean = !fresh_new.fallback_ep
+                && fresh_new.assignments.iter().flatten().all(|s| !s.forced);
+            if clean {
+                let stale_max = *stale.device_loads().iter().max().unwrap();
+                let fresh_max = *fresh_new.device_loads().iter().max().unwrap();
+                if stale_max < fresh_max {
+                    return Err(format!(
+                        "stale plan balances better: {stale_max} < {fresh_max}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+        no_shrink,
+    );
+}
+
+#[test]
+fn moved_hotspot_prices_stale_reuse_strictly_worse() {
+    // Structural drift: the hot expert moves across the machine. The
+    // stale plan keeps splitting the *old* hot expert and leaves the new
+    // one whole on its native device — pricing (with equal plan time)
+    // must show the reused plan as clearly worse than replanning, i.e.
+    // reuse is never silently flattering.
+    let e = engine();
+    let kind = PlannerKind::llep_default();
+    let mut rng = Rng::new(7);
+    let lm_a = Scenario::concentrated(0.9, 1).generate_loads(&e.model, 8, 16_384, &mut rng);
+    let loads_a = lm_a.expert_loads();
+    // Rotate the distribution by half the machine: expert 64 is now hot.
+    let n = loads_a.len();
+    let loads_b: Vec<u64> = (0..n).map(|i| loads_a[(i + 64) % n]).collect();
+    let lm_b = lm_from_loads(&loads_b, 8);
+
+    let plan_a = kind.plan(8, &loads_a, Some(&e.topo));
+    let stale = retarget_plan(&plan_a, &loads_a, &loads_b);
+    validate_plan(&stale, &loads_b).unwrap();
+    let fresh = kind.plan(8, &loads_b, Some(&e.topo));
+
+    let stale_priced = price_plan(&e, &stale, &lm_b, &kind, 0.0, None);
+    let fresh_priced = price_plan(&e, &fresh, &lm_b, &kind, 0.0, None);
+    assert!(
+        stale_priced.latency_s > fresh_priced.latency_s * 1.5,
+        "stale {} vs fresh {}: structural drift must price the reused plan much worse",
+        stale_priced.latency_s,
+        fresh_priced.latency_s
+    );
+}
+
+#[test]
+fn cached_planner_multi_layer_steps_hit_per_layer() {
+    // A 4-layer model planned through one shared cache: the second
+    // identical model step hits on every layer and prices each layer's
+    // deterministic quantities identically to a fresh LLEP step.
+    let mut model = ModelConfig::preset(ModelPreset::Fig1Layer);
+    model.num_layers = 4;
+    let e = Engine::modeled(model.clone(), SystemConfig::preset(SystemPreset::H200x8));
+    let profile = DepthProfile::varying(&model, 0.5, 0.0);
+    let mut rng = Rng::new(3);
+    let lms = profile.generate_loads(&model, 8, 8192, &mut rng);
+
+    let cached = CachedPlanner::new(PlannerKind::llep_default().boxed());
+    let first = e.run_model(&lms, &cached).unwrap();
+    assert_eq!(first.cache.lookups(), 4, "one lookup per layer");
+    let second = e.run_model(&lms, &cached).unwrap();
+    assert_eq!(second.cache.hits, 4, "identical step: every layer reuses");
+
+    let fresh = e.run_model(&lms, &PlannerKind::llep_default()).unwrap();
+    for (a, b) in second.layers.iter().zip(&fresh.layers) {
+        assert_eq!(a.report.device_compute_s, b.report.device_compute_s);
+        assert_eq!(a.report.device_peak_bytes, b.report.device_peak_bytes);
+        assert_eq!(a.report.bytes_dispatch, b.report.bytes_dispatch);
+    }
+}
+
+#[test]
+fn spec_parsing_composes_with_cached_decorator() {
+    let p = Registry::builtin().parse("cached(lpt:min=256):drift=0.2,every=8").unwrap();
+    assert_eq!(p.label(), "Cached[LPT(min=256)]");
+    assert!(!p.replay_safe());
+    let loads = vec![10_000u64, 0, 0, 0, 0, 0, 0, 2_000];
+    let a = p.plan(4, &loads, None);
+    validate_plan(&a, &loads).unwrap();
+    let b = p.plan(4, &loads, None);
+    validate_plan(&b, &loads).unwrap();
+    assert_eq!(p.last_cache_outcome(), Some(llep::planner::CacheOutcome::Hit));
+}
+
+#[test]
+fn llep_struct_and_kind_agree_through_the_trait() {
+    // The thin-constructor contract: PlannerKind::Llep and the concrete
+    // Llep struct are the same planner.
+    let loads = vec![50_000u64, 100, 0, 900, 40, 0, 0, 60];
+    let cfg = LlepConfig::default();
+    let via_struct = Llep::new(cfg).plan(4, &loads, None);
+    let via_kind = PlannerKind::Llep(cfg).plan(4, &loads, None);
+    assert_eq!(via_struct, via_kind);
+}
