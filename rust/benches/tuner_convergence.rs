@@ -1,0 +1,87 @@
+//! Bench: successive-halving vs full-grid autotuning.
+//!
+//! Runs both strategies over the smoke search space on the paper's
+//! H200x8 profile for (a) the stationary skewed scenario (90% of load
+//! into one expert) and (b) the drifting-hotspot scenario, reporting
+//! budget units priced, the best spec found, and the gap to the
+//! full-grid optimum. On the stationary scenario per-batch loads are
+//! identical, so halving's rung rankings are provably stable and the
+//! gap must be exactly zero (asserted); on the drifting scenario
+//! low-fidelity rungs see fewer hotspot draws and the reported gap can
+//! be non-zero.
+//!
+//! Run: `cargo bench --bench tuner_convergence` (add `--quick` to
+//! shrink the per-batch token count).
+
+use llep::config::{ModelConfig, ModelPreset};
+use llep::metrics::{format_secs, Table};
+use llep::planner::Registry;
+use llep::prelude::*;
+use llep::tune::Mode;
+use llep::util::benchkit::quick_requested;
+
+fn main() {
+    let quick = quick_requested();
+    let tokens = if quick { 2048 } else { 8192 };
+    let scenarios = [
+        ("skewed 90%->1", Scenario::concentrated(0.9, 1)),
+        ("drift", Scenario::drifting(11, 0.5, 0.25)),
+    ];
+
+    let engine = || {
+        Engine::modeled(
+            ModelConfig::preset(ModelPreset::Fig1Layer),
+            HardwareProfile::builtin("h200x8").unwrap().system,
+        )
+        .with_plan_cost(PlanCostModel::default())
+    };
+
+    let space = SearchSpace::from_registry(&Registry::builtin(), SpaceBudget::Smoke).unwrap();
+    let spec_count = space.len();
+    let mut t = Table::new(&[
+        "scenario", "strategy", "units priced", "best spec", "best latency", "gap vs grid",
+    ]);
+    for (name, scenario) in scenarios {
+        let grid_tuner = Tuner::new(engine(), scenario.clone(), Mode::Step, 0)
+            .with_tokens(tokens)
+            .with_full_budget(8);
+        let grid = grid_tuner.run(&space, Strategy::Grid).unwrap();
+        let halving_tuner = Tuner::new(engine(), scenario.clone(), Mode::Step, 0)
+            .with_tokens(tokens)
+            .with_full_budget(8);
+        let halving = halving_tuner.run(&space, Strategy::Halving { eta: 2 }).unwrap();
+
+        let gb = grid.recommended.as_ref().expect("grid recommends");
+        let hb = halving.recommended.as_ref().expect("halving recommends");
+        let gap = (hb.metrics.latency_s - gb.metrics.latency_s) / gb.metrics.latency_s;
+        for (is_grid, out, best) in [(true, &grid, gb), (false, &halving, hb)] {
+            t.row(vec![
+                name.to_string(),
+                out.strategy.clone(),
+                out.priced_units.to_string(),
+                best.spec.clone(),
+                format_secs(best.metrics.latency_s),
+                if is_grid { "-".to_string() } else { format!("{:+.2}%", gap * 100.0) },
+            ]);
+        }
+
+        assert!(
+            halving.priced_units < grid.priced_units,
+            "{name}: halving must price strictly fewer units ({} vs {})",
+            halving.priced_units,
+            grid.priced_units
+        );
+        if name.starts_with("skewed") {
+            assert!(
+                gap.abs() < 1e-12,
+                "{name}: stationary loads make halving exact, got gap {gap}"
+            );
+        }
+    }
+    println!("Tuner convergence — smoke space ({spec_count} specs), full budget 8 steps, P=8\n");
+    println!("{}", t.render());
+    println!(
+        "halving prunes with cached low-fidelity rungs (trial cache keyed by spec/scenario/\
+         system/budget), so rung re-ranks never re-price already-evaluated points."
+    );
+}

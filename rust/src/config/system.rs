@@ -39,6 +39,10 @@ pub enum SystemPreset {
     H200x8,
     /// Two 8-GPU nodes (for the multi-node spill-preference discussion).
     H200x16TwoNodes,
+    /// Single node, 8x H100 80GB — same NVLink generation as H200 but a
+    /// much tighter HBM ceiling, so the latency/memory Pareto front the
+    /// autotuner emits looks genuinely different per profile.
+    H100x8,
     /// Virtual-device simulation calibrated to this repo's CPU.
     CpuSim8,
     /// Small CPU sim for tests (4 devices).
@@ -46,9 +50,10 @@ pub enum SystemPreset {
 }
 
 impl SystemPreset {
-    pub const ALL: [SystemPreset; 4] = [
+    pub const ALL: [SystemPreset; 5] = [
         SystemPreset::H200x8,
         SystemPreset::H200x16TwoNodes,
+        SystemPreset::H100x8,
         SystemPreset::CpuSim8,
         SystemPreset::CpuSim4,
     ];
@@ -57,6 +62,7 @@ impl SystemPreset {
         match self {
             SystemPreset::H200x8 => "h200x8",
             SystemPreset::H200x16TwoNodes => "h200x16-2node",
+            SystemPreset::H100x8 => "h100x8",
             SystemPreset::CpuSim8 => "cpusim8",
             SystemPreset::CpuSim4 => "cpusim4",
         }
@@ -108,6 +114,15 @@ impl SystemConfig {
                 let mut c = SystemConfig::preset(SystemPreset::H200x8);
                 c.name = p.name().into();
                 c.devices = 16;
+                c
+            }
+            SystemPreset::H100x8 => {
+                let mut c = SystemConfig::preset(SystemPreset::H200x8);
+                c.name = p.name().into();
+                // 80 GB HBM3 minus ~20% framework reserve.
+                c.mem_capacity_bytes = 64 * (1 << 30);
+                // ~990 TFLOPs bf16 dense peak at lower sustained clocks.
+                c.gemm.peak_flops = 560e12;
                 c
             }
             SystemPreset::CpuSim8 => SystemConfig {
@@ -193,6 +208,16 @@ mod tests {
         assert_eq!(two.node_of(7), 0);
         assert_eq!(two.node_of(8), 1);
         assert_eq!(two.node_of(15), 1);
+    }
+
+    #[test]
+    fn h100_is_h200_with_tighter_memory() {
+        let h100 = SystemConfig::preset(SystemPreset::H100x8);
+        let h200 = SystemConfig::preset(SystemPreset::H200x8);
+        assert!(h100.mem_capacity_bytes < h200.mem_capacity_bytes);
+        assert!(h100.gemm.peak_flops < h200.gemm.peak_flops);
+        assert_eq!(h100.comm, h200.comm, "same NVLink generation");
+        assert_eq!(h100.devices, 8);
     }
 
     #[test]

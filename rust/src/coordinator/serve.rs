@@ -91,6 +91,9 @@ pub struct ServeReport {
     /// Admitted-vs-priced token accounting (equal by contract).
     pub tokens: TokenLedger,
     pub oom_batches: usize,
+    /// Max per-device peak bytes over all steps (Eq.-4 accounting) — the
+    /// memory side of the autotuner's latency/memory Pareto objectives.
+    pub peak_bytes: u64,
     /// MoE layers priced per step.
     pub layers: usize,
     /// Plan-cache counters summed over all steps and layers.
@@ -178,6 +181,7 @@ impl ServeSim {
         let mut batches = 0usize;
         let mut tokens = TokenLedger::default();
         let mut oom_batches = 0usize;
+        let mut peak_bytes = 0u64;
         let mut plan_cache = CacheStats::default();
         let mut plan_times: Vec<f64> = Vec::new();
         let mut queue: VecDeque<&Request> = VecDeque::new();
@@ -214,6 +218,7 @@ impl ServeSim {
             tokens.add(batch_tokens as u64, report.tokens);
             plan_cache.absorb(&report.cache);
             plan_times.push(report.layers.iter().map(|l| l.report.phases.plan_s).sum::<f64>());
+            peak_bytes = peak_bytes.max(report.max_peak_bytes());
             if report.oom {
                 oom_batches += 1;
             }
@@ -230,6 +235,7 @@ impl ServeSim {
             batches,
             tokens,
             oom_batches,
+            peak_bytes,
             layers: self.profile.num_layers(),
             plan_cache,
             plan_time: Summary::of(&plan_times),
@@ -265,6 +271,10 @@ pub struct ContinuousReport {
     pub steps: usize,
     /// Steps where every MoE layer's lambda guard reverted to EP.
     pub fallback_steps: usize,
+    /// Steps where some device exceeded its memory capacity.
+    pub oom_steps: usize,
+    /// Max per-device peak bytes over all steps (Eq.-4 accounting).
+    pub peak_bytes: u64,
     /// Admitted-vs-priced token accounting (equal by contract).
     pub tokens: TokenLedger,
     /// Plan-cache counters summed over all steps and layers.
@@ -352,6 +362,8 @@ impl ContinuousBatchSim {
         let mut completed = 0usize;
         let mut steps = 0usize;
         let mut fallback_steps = 0usize;
+        let mut oom_steps = 0usize;
+        let mut peak_bytes = 0u64;
         let mut tokens = TokenLedger::default();
         let mut plan_cache = CacheStats::default();
         let mut plan_times: Vec<f64> = Vec::new();
@@ -390,6 +402,8 @@ impl ContinuousBatchSim {
             clock += report.latency_s;
             steps += 1;
             fallback_steps += (report.fallback_layers == report.num_layers()) as usize;
+            oom_steps += report.oom as usize;
+            peak_bytes = peak_bytes.max(report.max_peak_bytes());
             tokens.add(step_tokens as u64, report.tokens);
             plan_cache.absorb(&report.cache);
             plan_times.push(report.layers.iter().map(|l| l.report.phases.plan_s).sum::<f64>());
@@ -427,6 +441,8 @@ impl ContinuousBatchSim {
             tpot: Summary::of(&tpot),
             steps,
             fallback_steps,
+            oom_steps,
+            peak_bytes,
             tokens,
             plan_cache,
             plan_time: Summary::of(&plan_times),
@@ -460,6 +476,8 @@ mod tests {
         assert!(report.makespan_s > 0.0);
         assert!(report.batches > 0);
         assert!(report.request_latency.mean > 0.0);
+        assert!(report.peak_bytes > 0, "peak memory surfaces in the report");
+        assert_eq!(report.oom_batches, 0);
         assert_eq!(report.plan_cache, CacheStats::default(), "uncached planner: zero counters");
     }
 
@@ -556,6 +574,8 @@ mod tests {
         assert!(r.ttft.mean > 0.0);
         assert!(r.tpot.n > 0, "decode steps happened");
         assert!(r.steps >= 4, "multiple engine steps: {}", r.steps);
+        assert!(r.peak_bytes > 0, "peak memory surfaces in the report");
+        assert_eq!(r.oom_steps, 0);
         assert!(r.tokens.is_exact(), "{:?}", r.tokens);
     }
 

@@ -39,7 +39,7 @@ pub use real::{run_backward_real, run_step_real, NativeCompute, RealStep};
 use crate::config::{ModelConfig, SystemConfig};
 use crate::costmodel::{CommCostModel, GemmCostModel, MemoryModel};
 use crate::moe::ExpertWeights;
-use crate::planner::{CacheStats, Planner};
+use crate::planner::{CacheOutcome, CacheStats, Planner};
 use crate::routing::{LoadMatrix, Routing};
 use crate::tensor::Mat;
 use crate::topology::Topology;
@@ -112,6 +112,30 @@ impl StepReport {
     }
 }
 
+/// Deterministic planner-latency model. By default the engine charges
+/// the planner's *measured* wall time as `T_plan` (faithful to the
+/// paper, but different on every run). With a `PlanCostModel` installed
+/// ([`Engine::with_plan_cost`]) the engine instead charges `fresh_s` per
+/// fresh plan and `hit_s` per plan-cache hit, making every priced
+/// quantity a pure function of its inputs — the bit-identical-trials
+/// contract the autotuner ([`crate::tune`]) is built on.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PlanCostModel {
+    /// Charged when the planner computed a fresh plan (or has no cache).
+    pub fresh_s: f64,
+    /// Charged when a plan-cache hit retargeted a cached plan
+    /// (the O(segments) path of [`crate::planner::retarget_plan`]).
+    pub hit_s: f64,
+}
+
+impl Default for PlanCostModel {
+    fn default() -> Self {
+        // ~LLA wall time at N=128 experts vs the retarget path of a hit
+        // (both in the range measured by `cargo bench --bench decode_loop`).
+        PlanCostModel { fresh_s: 25e-6, hit_s: 2e-6 }
+    }
+}
+
 /// The engine: model + system + cost models.
 #[derive(Clone, Debug)]
 pub struct Engine {
@@ -127,6 +151,9 @@ pub struct Engine {
     /// instead of `compute + weights`. Off by default (the paper's base
     /// implementation does not overlap).
     pub overlap_weights: bool,
+    /// When set, `T_plan` is charged from this model instead of measured
+    /// planner wall time, making pricing fully deterministic.
+    pub plan_cost: Option<PlanCostModel>,
 }
 
 impl Engine {
@@ -146,7 +173,15 @@ impl Engine {
             system,
             topo,
             overlap_weights: false,
+            plan_cost: None,
         }
+    }
+
+    /// Charge `T_plan` from a deterministic cost model instead of
+    /// measured planner wall time (reproducible pricing for the tuner).
+    pub fn with_plan_cost(mut self, cost: PlanCostModel) -> Engine {
+        self.plan_cost = Some(cost);
+        self
     }
 
     /// Enable weight-transfer/compute overlap (paper §4 optimization).
@@ -187,7 +222,19 @@ impl Engine {
     ) -> (StepReport, crate::planner::RoutePlan) {
         let loads = lm.expert_loads();
         let stats = stats_lm.expert_loads();
-        let (plan, plan_time_s) = if planner.replay_safe() {
+        let (plan, plan_time_s) = if let Some(cost) = self.plan_cost {
+            // Deterministic pricing: charge the modeled planner latency
+            // instead of wall time, so identical inputs price
+            // bit-identically run to run (plan once — no warm run needed
+            // when nothing is being measured).
+            let plan =
+                planner.plan_with_stats(self.system.devices, &loads, &stats, Some(&self.topo));
+            let t = match planner.last_cache_outcome() {
+                Some(CacheOutcome::Hit) => cost.hit_s,
+                _ => cost.fresh_s,
+            };
+            (plan, t)
+        } else if planner.replay_safe() {
             // Run the planner twice and charge the *faster* wall time:
             // the first run absorbs first-call page faults, and the min
             // is robust to a preemption/contention spike landing on
@@ -307,6 +354,28 @@ mod tests {
         assert_eq!(r.tokens, 4096);
         assert!(!r.fallback_ep, "heavily imbalanced: LLA engages even at P=1");
         assert_eq!(r.weight_transfers, 0, "nowhere to transfer to");
+    }
+
+    #[test]
+    fn plan_cost_model_prices_deterministically() {
+        use crate::planner::CachedPlanner;
+        let cost = PlanCostModel::default();
+        let e = engine().with_plan_cost(cost);
+        let mut rng = Rng::new(7);
+        let lm = Scenario::concentrated(0.9, 1).generate_loads(&e.model, 8, 8192, &mut rng);
+        let a = e.run_step_loads(&lm, &PlannerKind::llep_default());
+        let b = e.run_step_loads(&lm, &PlannerKind::llep_default());
+        assert_eq!(a.latency_s.to_bits(), b.latency_s.to_bits(), "pricing is a pure function");
+        assert_eq!(a.phases.plan_s, cost.fresh_s);
+        // A plan-cache hit is charged at the cheaper hit rate.
+        let cached = CachedPlanner::new(PlannerKind::llep_default().boxed());
+        let miss = e.run_step_loads(&lm, &cached);
+        let hit = e.run_step_loads(&lm, &cached);
+        assert_eq!(miss.cache.misses, 1);
+        assert_eq!(hit.cache.hits, 1);
+        assert_eq!(miss.phases.plan_s, cost.fresh_s);
+        assert_eq!(hit.phases.plan_s, cost.hit_s);
+        assert!(hit.latency_s < miss.latency_s);
     }
 
     #[test]

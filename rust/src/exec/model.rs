@@ -218,31 +218,21 @@ impl Engine {
 
     /// Plan + price every layer, fanned out over scoped worker threads.
     /// Results land in depth order regardless of completion order.
+    ///
+    /// Stateful planners (the plan cache) are planned *sequentially* in
+    /// depth order: concurrent lookups would observe the shared cache in
+    /// a thread-race-dependent order, making hit/miss counters — and,
+    /// under a deterministic [`PlanCostModel`](super::PlanCostModel),
+    /// priced latency — irreproducible run to run.
     fn plan_layers_parallel(&self, lms: &[LoadMatrix], planner: &dyn Planner) -> Vec<LayerStep> {
-        let n = lms.len();
-        let workers = std::thread::available_parallelism().map(|w| w.get()).unwrap_or(1).min(n);
-        let mut slots: Vec<Option<LayerStep>> = Vec::with_capacity(n);
-        slots.resize_with(n, || None);
-
-        if workers <= 1 {
-            for (slot, lm) in slots.iter_mut().zip(lms) {
-                let (report, plan) = self.run_step_loads_with_plan(lm, planner);
-                *slot = Some(LayerStep { report, plan });
-            }
-        } else {
-            let chunk = n.div_ceil(workers);
-            std::thread::scope(|scope| {
-                for (slot_chunk, lm_chunk) in slots.chunks_mut(chunk).zip(lms.chunks(chunk)) {
-                    scope.spawn(move || {
-                        for (slot, lm) in slot_chunk.iter_mut().zip(lm_chunk) {
-                            let (report, plan) = self.run_step_loads_with_plan(lm, planner);
-                            *slot = Some(LayerStep { report, plan });
-                        }
-                    });
-                }
-            });
+        let plan_one = |lm: &LoadMatrix| {
+            let (report, plan) = self.run_step_loads_with_plan(lm, planner);
+            LayerStep { report, plan }
+        };
+        if !planner.replay_safe() {
+            return lms.iter().map(plan_one).collect();
         }
-        slots.into_iter().map(|s| s.expect("every layer planned")).collect()
+        crate::util::par::parallel_map(lms, plan_one)
     }
 }
 
@@ -348,6 +338,31 @@ mod tests {
         assert_eq!(model.tokens, step.tokens);
         // A single layer has nothing to overlap with.
         assert_eq!(model.overlap_saved_s, 0.0);
+    }
+
+    #[test]
+    fn stateful_planners_plan_layers_in_depth_order() {
+        use crate::exec::PlanCostModel;
+        use crate::planner::CachedPlanner;
+        // With a shared plan cache across layers, lookups must happen in
+        // depth order (not racing worker threads): identical per-layer
+        // loads then give exactly one miss (layer 0) and hits everywhere
+        // else, and — under the deterministic plan-cost model — two runs
+        // price bit-identically.
+        let e = engine(ModelPreset::GptOss20b).with_plan_cost(PlanCostModel::default());
+        let layers = e.model.num_moe_layers(); // 24
+        let profile = DepthProfile::uniform(Scenario::concentrated(0.9, 1), layers);
+        let run = || {
+            let cached = CachedPlanner::new(PlannerKind::llep_default().boxed());
+            let mut rng = Rng::new(11);
+            e.run_model_profile(&profile, &cached, 8192, &mut rng)
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.cache.misses, 1, "only layer 0 misses: {:?}", a.cache);
+        assert_eq!(a.cache.hits as usize, layers - 1);
+        assert_eq!(a.cache, b.cache);
+        assert_eq!(a.latency_s.to_bits(), b.latency_s.to_bits(), "deterministic pricing");
     }
 
     #[test]

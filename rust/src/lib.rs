@@ -60,6 +60,7 @@ pub mod tensor;
 pub mod topology;
 #[cfg(feature = "pjrt")]
 pub mod trainer;
+pub mod tune;
 pub mod util;
 
 /// Convenience re-exports covering the most common entry points.
@@ -68,11 +69,12 @@ pub mod prelude {
         LlepConfig, ModelConfig, ModelPreset, SystemConfig, SystemPreset,
     };
     pub use crate::costmodel::{CommCostModel, GemmCostModel, MemoryModel};
-    pub use crate::exec::{Engine, GemmBackendKind, ModelStepReport, StepReport};
+    pub use crate::exec::{Engine, GemmBackendKind, ModelStepReport, PlanCostModel, StepReport};
     pub use crate::planner::{
         parse_planner, CacheStats, CachedPlanner, Planner, PlannerKind, RoutePlan,
     };
     pub use crate::routing::{DepthProfile, Routing, Scenario};
     pub use crate::topology::Topology;
+    pub use crate::tune::{HardwareProfile, SearchSpace, SpaceBudget, Strategy, Tuner};
     pub use crate::util::rng::Rng;
 }

@@ -8,23 +8,36 @@
 //!   replay     replay a saved trace under EP/LLEP/EPLB (--trace t.json)
 //!   train      Fig.-5 training run from AOT artifacts (--steps N)
 //!   serve      serving simulation (EP vs LLEP, or --planner <spec>)
+//!   tune       search planner-spec space for a hardware profile and
+//!              emit a latency/memory Pareto front (--profile, --budget)
 //!   info       print presets, the planner registry and environment
 //!
-//! Planner selection is open: `--planner llep:alpha=1.0,m=64`,
-//! `--planner lpt:min=1024`, `--planner cached(llep):drift=0.05`, ... —
-//! see `llep info` for the registered specs. `--plan-reuse`,
-//! `--replan-every N` and `--cache-drift F` wrap the selected planners in
-//! the cross-step plan cache (decode-regime optimization).
+//! Planner selection is open; the examples below are canonical registry
+//! specs (they round-trip through `planner/registry.rs` unchanged):
+//! `--planner llep:alpha=1,m=64,lambda=1.3`, `--planner lpt:min=1024`,
+//! `--planner cached(ep):drift=0.05,every=0,q=1024` — run `llep info`
+//! for the full registered list. `--plan-reuse`, `--replan-every N` and
+//! `--cache-drift F` wrap the selected planners in the cross-step plan
+//! cache (decode-regime optimization).
+//!
+//! Reproducibility: every subcommand that draws random workloads
+//! (`run`, `trace`, `serve`, `tune`) derives all scenario/trace RNG from
+//! `--seed` (default 0), so identical invocations produce identical
+//! tables; `replay` is deterministic given its trace file.
 
 use llep::config::{
     load_experiment, LlepConfig, ModelConfig, ModelPreset, SystemConfig, SystemPreset,
 };
 use llep::coordinator::{RunSummary, Runner, ServeSim};
-use llep::exec::Engine;
+use llep::exec::{Engine, PlanCostModel};
 use llep::harness;
-use llep::metrics::{format_bytes, format_cache, format_secs, model_report_table, Table};
+use llep::metrics::{
+    format_bytes, format_cache, format_secs, model_report_table, tune_front_table,
+    tune_report_to_json, tune_trials_table, Table,
+};
 use llep::planner::{CachedPlanner, Planner, PlannerKind, Registry};
 use llep::routing::{DepthProfile, RoutingTrace, Scenario};
+use llep::tune::{HardwareProfile, Mode, SearchSpace, SpaceBudget, Strategy, Tuner};
 use llep::util::cli::Spec;
 use llep::util::rng::Rng;
 
@@ -47,9 +60,14 @@ fn main() {
         .opt("scenario", "balanced | concentrated | powerlaw | drift")
         .opt("concentration", "fraction of tokens into hot experts")
         .opt("hot", "number of hot experts")
-        .opt("seed", "rng seed")
+        .opt("seed", "rng seed for all scenario/trace randomness (default 0)")
+        .opt("profile", "tune: hardware profile name or TOML path (default h200x8)")
+        .opt("budget", "tune: search-space budget, smoke | default | full")
+        .opt("strategy", "tune: grid | random | halving (default grid)")
+        .opt("mode", "tune: step | serve objective (default step)")
+        .opt("trials", "tune: candidate count for --strategy random")
         .opt("artifacts", "artifacts directory (default ./artifacts)")
-        .opt("planner", "planner spec, e.g. llep:alpha=1.0,m=64 (see `llep info`)")
+        .opt("planner", "planner spec, e.g. llep:alpha=1,m=64,lambda=1.3 (see `llep info`)")
         .opt("replan-every", "plan cache: force a fresh plan every N reuses (0 = never)")
         .opt("cache-drift", "plan cache: load-signature drift threshold (default 0.05)")
         .flag("plan-reuse", "wrap planners in the cross-step plan cache")
@@ -66,7 +84,9 @@ fn main() {
     };
     if args.has_flag("help") || args.subcommand.is_none() {
         println!("llep — Least-Loaded Expert Parallelism (paper reproduction)\n");
-        println!("usage: llep <figures|run|calibrate|trace|replay|train|serve|info> [options]\n");
+        println!(
+            "usage: llep <figures|run|calibrate|trace|replay|train|serve|tune|info> [options]\n"
+        );
         println!("Options:\n{}", spec.help());
         return;
     }
@@ -79,6 +99,7 @@ fn main() {
         "replay" => cmd_replay(&args),
         "train" => cmd_train(&args),
         "serve" => cmd_serve(&args),
+        "tune" => cmd_tune(&args),
         "info" => cmd_info(),
         other => Err(format!("unknown subcommand {other:?} (see --help)")),
     };
@@ -532,6 +553,101 @@ fn cmd_serve(args: &llep::util::cli::Args) -> Result<(), String> {
     Ok(())
 }
 
+/// `llep tune`: enumerate planner-spec space for one hardware profile +
+/// scenario, search it (grid / random / successive halving), print the
+/// trial table and latency/memory Pareto front, and verify that the
+/// recommended spec re-prices bit-identically (the round-trip contract:
+/// the same spec passed back as `--planner` reproduces the trial).
+fn cmd_tune(args: &llep::util::cli::Args) -> Result<(), String> {
+    let profile = HardwareProfile::resolve(&args.get_or("profile", "h200x8"))?;
+    let scenario = scenario_from_args(args)?;
+    let model_name = args.get_or("model", "fig1-layer");
+    let preset = ModelPreset::from_name(&model_name)
+        .ok_or_else(|| format!("unknown model preset {model_name}"))?;
+    let mut model = ModelConfig::preset(preset);
+    let layers = args.get_usize("layers", 0)?;
+    if layers > 0 {
+        model.num_layers = layers;
+    }
+    let mut system = profile.system.clone();
+    if args.get("devices").is_some() {
+        system = system.with_devices(args.get_usize("devices", system.devices)?);
+    }
+    let seed = args.get_usize("seed", 0)? as u64;
+    let budget_name = args.get_or("budget", "default");
+    let budget = SpaceBudget::from_name(&budget_name)
+        .ok_or_else(|| format!("unknown budget {budget_name:?} (smoke | default | full)"))?;
+    let mode_name = args.get_or("mode", "step");
+    let mode = Mode::from_name(&mode_name)
+        .ok_or_else(|| format!("unknown mode {mode_name:?} (step | serve)"))?;
+    let strategy = match args.get_or("strategy", "grid").as_str() {
+        "grid" => Strategy::Grid,
+        "random" => Strategy::Random { trials: args.get_usize("trials", 16)? },
+        "halving" => Strategy::Halving { eta: 2 },
+        other => return Err(format!("unknown strategy {other:?} (grid | random | halving)")),
+    };
+    let tokens = args.get_usize("tokens", 8192)?;
+
+    let engine = Engine::modeled(model, system).with_plan_cost(PlanCostModel::default());
+    let mut tuner = Tuner::new(engine, scenario.clone(), mode, seed).with_tokens(tokens);
+    if budget == SpaceBudget::Smoke {
+        // Halved fidelity keeps the CI smoke sweep fast; other budgets
+        // keep the library's full-budget defaults.
+        tuner = tuner.with_full_budget(match mode {
+            Mode::Step => 4,
+            Mode::Serve => 8,
+        });
+    }
+    let space = SearchSpace::from_registry(&tuner.registry, budget)?;
+    let outcome = tuner.run(&space, strategy)?;
+
+    let title = format!(
+        "tune | profile {} | {} | {} mode | {} | {} specs, {} budget units priced",
+        profile.name,
+        scenario.label(),
+        mode.name(),
+        outcome.strategy,
+        outcome.specs_considered,
+        outcome.priced_units
+    );
+    let shown: Vec<llep::tune::Trial> = outcome.trials.iter().take(12).cloned().collect();
+    print_table(&title, &tune_trials_table(&shown));
+    if outcome.trials.len() > shown.len() {
+        println!(
+            "({} further trials not shown; --out <file> writes the full set as JSON)",
+            outcome.trials.len() - shown.len()
+        );
+    }
+    print_table("Pareto front (latency vs peak memory)", &tune_front_table(&outcome));
+
+    // Write the report before the feasibility/verification gates below:
+    // an all-OOM sweep is exactly when the full trial set matters.
+    if let Some(out) = args.get("out") {
+        let json = tune_report_to_json(&outcome, &profile.name, &scenario.label());
+        std::fs::write(out, json.to_string_pretty()).map_err(|e| e.to_string())?;
+        println!("wrote {out}");
+    }
+
+    let recommended = outcome
+        .recommended
+        .clone()
+        .ok_or("tune found no feasible (non-OOM) configuration for this profile")?;
+    // Round-trip contract: the spec parses back through the registry and
+    // re-prices to the exact reported metrics.
+    tuner.registry.parse(&recommended.spec)?;
+    let identical = tuner.verify(&recommended)?;
+    println!("\nrecommended: --planner {}", recommended.spec);
+    println!(
+        "re-evaluated bit-identically: {identical} (latency {}, peak {})",
+        format_secs(recommended.metrics.latency_s),
+        format_bytes(recommended.metrics.peak_bytes)
+    );
+    if !identical {
+        return Err("recommended spec did not re-price bit-identically".into());
+    }
+    Ok(())
+}
+
 fn cmd_info() -> Result<(), String> {
     println!("model presets:");
     for p in ModelPreset::ALL {
@@ -541,7 +657,7 @@ fn cmd_info() -> Result<(), String> {
             m.name, m.num_experts, m.top_k, m.d_model, m.d_ff, m.num_layers
         );
     }
-    println!("\nsystem presets:");
+    println!("\nsystem presets (also the builtin `tune --profile` names):");
     for p in SystemPreset::ALL {
         let s = SystemConfig::preset(p);
         println!(
@@ -553,14 +669,21 @@ fn cmd_info() -> Result<(), String> {
             s.gemm.peak_flops
         );
     }
-    println!("\nplanners (--planner <spec>):");
+    println!("\nplanners (--planner <spec>; examples are canonical registry specs):");
     for e in Registry::builtin().entries() {
-        println!("  {:<8} {:<55} e.g. {}", e.name, e.help, e.example);
+        let dims = if e.params.is_empty() {
+            String::new()
+        } else {
+            let keys: Vec<&str> = e.params.iter().map(|p| p.key).collect();
+            format!("  [tunable: {}]", keys.join(", "))
+        };
+        println!("  {:<8} {:<55} e.g. {}{}", e.name, e.help, e.example, dims);
     }
     println!(
         "  {:<8} {:<55} e.g. {}",
-        "cached", "cross-step plan-reuse decorator (wraps any spec)",
-        "cached(llep):drift=0.05,every=32"
+        "cached",
+        "cross-step plan-reuse decorator (wraps any spec)",
+        "cached(ep):drift=0.05,every=0,q=1024"
     );
     print_artifacts_info();
     Ok(())

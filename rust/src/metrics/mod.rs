@@ -164,6 +164,77 @@ pub fn planner_comparison_table(reports: &[ModelStepReport]) -> Table {
     t
 }
 
+/// Ranked tuner trials (best first): one row per evaluated spec.
+pub fn tune_trials_table(trials: &[crate::tune::Trial]) -> Table {
+    let mut t = Table::new(&["spec", "latency", "peak mem", "budget", "OOM"]);
+    for trial in trials {
+        t.row(vec![
+            trial.spec.clone(),
+            format_secs(trial.metrics.latency_s),
+            format_bytes(trial.metrics.peak_bytes),
+            trial.budget.to_string(),
+            if trial.metrics.oom { "OOM".into() } else { "-".into() },
+        ]);
+    }
+    t
+}
+
+/// The tuner's Pareto front, latency-ascending, with the recommended
+/// spec (`front[0]`) marked.
+pub fn tune_front_table(outcome: &crate::tune::TuneOutcome) -> Table {
+    let mut t = Table::new(&["spec", "latency", "peak mem", ""]);
+    let recommended = outcome.recommended.as_ref().map(|r| r.spec.as_str());
+    for trial in &outcome.front {
+        let mark = if Some(trial.spec.as_str()) == recommended {
+            "<- recommended".to_string()
+        } else {
+            String::new()
+        };
+        t.row(vec![
+            trial.spec.clone(),
+            format_secs(trial.metrics.latency_s),
+            format_bytes(trial.metrics.peak_bytes),
+            mark,
+        ]);
+    }
+    t
+}
+
+/// JSON export of a tune run (trial list, front, recommendation).
+pub fn tune_report_to_json(
+    outcome: &crate::tune::TuneOutcome,
+    profile: &str,
+    scenario: &str,
+) -> Json {
+    let trial_json = |t: &crate::tune::Trial| {
+        Json::obj(vec![
+            ("spec", Json::str(&t.spec)),
+            ("latency_s", Json::num(t.metrics.latency_s)),
+            ("peak_bytes", Json::num(t.metrics.peak_bytes as f64)),
+            ("budget", Json::num(t.budget as f64)),
+            ("oom", Json::Bool(t.metrics.oom)),
+        ])
+    };
+    Json::obj(vec![
+        ("profile", Json::str(profile)),
+        ("scenario", Json::str(scenario)),
+        ("strategy", Json::str(&outcome.strategy)),
+        ("specs_considered", Json::num(outcome.specs_considered as f64)),
+        ("priced_units", Json::num(outcome.priced_units as f64)),
+        ("final_budget", Json::num(outcome.final_budget as f64)),
+        ("trials", Json::arr(outcome.trials.iter().map(trial_json))),
+        ("front", Json::arr(outcome.front.iter().map(trial_json))),
+        (
+            "recommended",
+            outcome
+                .recommended
+                .as_ref()
+                .map(trial_json)
+                .unwrap_or(Json::Null),
+        ),
+    ])
+}
+
 /// Per-layer latency/memory breakdown of a full-model step.
 pub fn model_report_table(r: &ModelStepReport) -> Table {
     let mut t = Table::new(&[
@@ -314,6 +385,36 @@ mod tests {
         assert!(rendered.contains("plan cache"), "{rendered}");
         assert!(rendered.contains("1/1 (100%)"), "{rendered}");
         assert!(rendered.contains("EP"), "{rendered}");
+    }
+
+    #[test]
+    fn tune_tables_and_json_render() {
+        use crate::tune::{Trial, TrialMetrics, TuneOutcome};
+        let trial = |spec: &str, lat: f64, mem: u64, oom: bool| Trial {
+            spec: spec.into(),
+            budget: 4,
+            metrics: TrialMetrics { latency_s: lat, peak_bytes: mem, oom },
+        };
+        let trials =
+            vec![trial("llep", 1e-3, 1 << 30, false), trial("ep", 2e-3, 2 << 30, false)];
+        let front = trials.clone();
+        let outcome = TuneOutcome {
+            strategy: "grid".into(),
+            specs_considered: 2,
+            priced_units: 8,
+            final_budget: 4,
+            recommended: Some(trials[0].clone()),
+            trials,
+            front,
+        };
+        let t = tune_trials_table(&outcome.trials);
+        assert_eq!(t.rows.len(), 2);
+        let f = tune_front_table(&outcome).render();
+        assert!(f.contains("<- recommended"), "{f}");
+        assert!(f.contains("llep"), "{f}");
+        let json = tune_report_to_json(&outcome, "h200x8", "95% into 1").to_string();
+        assert!(json.contains("\"recommended\""), "{json}");
+        assert!(json.contains("\"priced_units\":8"), "{json}");
     }
 
     #[test]

@@ -39,7 +39,7 @@ pub use eplb::{plan_eplb, Eplb};
 pub use lla::{plan_llep, Llep};
 pub use lpt::{plan_lpt, Lpt};
 pub use placement::Placement;
-pub use registry::{parse_planner, Params, PlannerEntry, Registry};
+pub use registry::{parse_planner, ParamSpec, Params, PlannerEntry, Registry, CACHED_PARAMS};
 
 use crate::config::LlepConfig;
 use crate::topology::Topology;

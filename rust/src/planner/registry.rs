@@ -88,14 +88,50 @@ impl Params {
     }
 }
 
+/// One tunable spec parameter (the registry's introspection hook for the
+/// autotuner, [`crate::tune`]): which key is searchable and over which
+/// canonical value grid. Runtime-registered planners declare theirs the
+/// same way, so spec-space search covers out-of-tree planners too.
+#[derive(Clone, Copy, Debug)]
+pub struct ParamSpec {
+    /// Spec key (`alpha`, `m`, ...).
+    pub key: &'static str,
+    /// Canonical search values, ascending. Integer parameters list whole
+    /// numbers here and set `integer`.
+    pub grid: &'static [f64],
+    /// Format synthesized values as integers (`m=1024`, not `m=1024.0`).
+    pub integer: bool,
+}
+
+impl ParamSpec {
+    /// Render one grid value the way a spec string spells it.
+    pub fn format_value(&self, v: f64) -> String {
+        if self.integer {
+            format!("{}", v as i64)
+        } else {
+            format!("{v}")
+        }
+    }
+}
+
+/// Tunable dimensions of the `cached(...)` decorator (not a registry
+/// entry — the parser special-cases it — but searchable all the same).
+pub const CACHED_PARAMS: &[ParamSpec] = &[
+    ParamSpec { key: "drift", grid: &[0.02, 0.05, 0.15], integer: false },
+    ParamSpec { key: "every", grid: &[0.0, 32.0], integer: true },
+];
+
 /// One registered planner constructor.
 pub struct PlannerEntry {
     /// Spec name (the part before `:`).
     pub name: &'static str,
     /// One-line description for `llep info`.
     pub help: &'static str,
-    /// Example spec string shown in help output.
+    /// Example spec string shown in help output (canonical: parsing it
+    /// and re-emitting [`Planner::spec`] extends it with defaults only).
     pub example: &'static str,
+    /// Tunable parameters with their canonical search grids.
+    pub params: &'static [ParamSpec],
     /// Build the planner from its parameters.
     pub build: fn(&mut Params) -> Result<Box<dyn Planner>, String>,
 }
@@ -115,12 +151,18 @@ impl Registry {
             name: "ep",
             help: "standard expert parallelism (paper Alg. 1)",
             example: "ep",
+            params: &[],
             build: |_| Ok(Box::new(StandardEp)),
         });
         r.register(PlannerEntry {
             name: "llep",
             help: "least-loaded expert parallelism (paper Alg. 2-4)",
-            example: "llep:alpha=1.0,m=1024,lambda=1.3",
+            example: "llep:alpha=1,m=1024,lambda=1.3",
+            params: &[
+                ParamSpec { key: "alpha", grid: &[1.0, 1.25, 1.5], integer: false },
+                ParamSpec { key: "m", grid: &[256.0, 1024.0, 4096.0], integer: true },
+                ParamSpec { key: "lambda", grid: &[1.1, 1.3, 2.0], integer: false },
+            ],
             build: |p| {
                 let mut cfg = LlepConfig::default();
                 if let Some(v) = p.take_f64("alpha")? {
@@ -140,6 +182,7 @@ impl Registry {
             name: "eplb",
             help: "EPLB replication baseline (r = replica budget)",
             example: "eplb:r=8",
+            params: &[ParamSpec { key: "r", grid: &[4.0, 8.0, 16.0], integer: true }],
             build: |p| {
                 let replicas = p.take_usize("r")?.unwrap_or(8);
                 Ok(Box::new(Eplb::new(replicas)))
@@ -149,6 +192,7 @@ impl Registry {
             name: "chunked",
             help: "chunked standard EP (gradient-checkpointing baseline)",
             example: "chunked:c=4096",
+            params: &[ParamSpec { key: "c", grid: &[2048.0, 4096.0, 8192.0], integer: true }],
             build: |p| {
                 let c = p.take_usize("c")?.unwrap_or(4096);
                 if c == 0 {
@@ -161,6 +205,7 @@ impl Registry {
             name: "lpt",
             help: "greedy longest-processing-time whole-expert rebalancer",
             example: "lpt:min=1024",
+            params: &[ParamSpec { key: "min", grid: &[256.0, 1024.0, 4096.0], integer: true }],
             build: |p| {
                 let min = p.take_u64("min")?.unwrap_or(1024);
                 Ok(Box::new(Lpt::new(min)))
@@ -306,6 +351,44 @@ mod tests {
     }
 
     #[test]
+    fn examples_extend_canonically_and_params_synthesize_valid_specs() {
+        let reg = Registry::builtin();
+        for e in reg.entries() {
+            // The example must parse, and its canonical form must begin
+            // with the example's explicit assignments (defaults are only
+            // appended, never respelled) — keeps help text and registry
+            // output in sync.
+            let p = parse_planner(e.example)
+                .unwrap_or_else(|err| panic!("example {:?} must parse: {err}", e.example));
+            let canon = p.spec();
+            assert!(
+                canon.starts_with(e.example) || canon == e.example,
+                "{}: example {:?} is not a prefix of canonical {:?}",
+                e.name,
+                e.example,
+                canon
+            );
+            // Every declared grid value produces a valid single-parameter
+            // spec (the autotuner's synthesis contract).
+            for ps in e.params {
+                for &v in ps.grid {
+                    let spec = format!("{}:{}={}", e.name, ps.key, ps.format_value(v));
+                    parse_planner(&spec)
+                        .unwrap_or_else(|err| panic!("synthesized {spec:?} must parse: {err}"));
+                }
+            }
+        }
+        // Decorator dimensions synthesize too.
+        for ps in CACHED_PARAMS {
+            for &v in ps.grid {
+                let spec = format!("cached(ep):{}={}", ps.key, ps.format_value(v));
+                parse_planner(&spec)
+                    .unwrap_or_else(|err| panic!("synthesized {spec:?} must parse: {err}"));
+            }
+        }
+    }
+
+    #[test]
     fn errors_are_loud() {
         assert!(parse_planner("bogus").unwrap_err().contains("unknown planner"));
         assert!(parse_planner("llep:frob=1").unwrap_err().contains("unknown parameter"));
@@ -346,6 +429,7 @@ mod tests {
             name: "zero",
             help: "test-only",
             example: "zero",
+            params: &[],
             build: |_| Ok(Box::new(EverythingOnZero)),
         });
         let p = reg.parse("zero").unwrap();

@@ -65,7 +65,11 @@ impl Topology {
     }
 
     pub fn num_nodes(&self) -> usize {
-        self.devices / self.devices_per_node
+        // div_ceil: a topology with a partially-filled last node (devices
+        // not divisible by devices_per_node — constructible directly,
+        // even though SystemConfig::validate rejects it) still counts
+        // that node, consistently with `node_of`.
+        self.devices.div_ceil(self.devices_per_node)
     }
 }
 
@@ -118,5 +122,61 @@ mod tests {
         // first 7 entries are node-0 peers
         assert!(order[..7].iter().all(|&d| t.same_node(2, d)));
         assert!(order[7..].iter().all(|&d| !t.same_node(2, d)));
+    }
+
+    #[test]
+    fn spill_order_from_second_node_is_symmetric() {
+        // The preference is relative to the source device, not node 0.
+        let t = two_node();
+        let order = t.spill_order(12);
+        assert!(order[..7].iter().all(|&d| t.same_node(12, d)), "{order:?}");
+        assert!(order[7..].iter().all(|&d| !t.same_node(12, d)), "{order:?}");
+        // stable (ascending) within each group
+        assert!(order[..7].windows(2).all(|w| w[0] < w[1]));
+        assert!(order[7..].windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn transfer_time_selects_bandwidth_tier_exactly() {
+        let t = two_node();
+        let bytes = 1u64 << 24;
+        let intra = t.transfer_time(0, 1, bytes);
+        let inter = t.transfer_time(0, 9, bytes);
+        assert_eq!(intra, t.latency_s + bytes as f64 / t.intra_node_bw);
+        assert_eq!(inter, t.latency_s + bytes as f64 / t.inter_node_bw);
+        // Both directions of a link price the same.
+        assert_eq!(t.transfer_time(9, 0, bytes), inter);
+        assert_eq!(t.transfer_time(1, 0, bytes), intra);
+    }
+
+    #[test]
+    fn single_device_topology_is_total() {
+        // P=1: one node, no spill candidates, self-transfer free.
+        let t = Topology::from_system(
+            &SystemConfig::preset(SystemPreset::CpuSim8).with_devices(1),
+        );
+        assert_eq!(t.num_nodes(), 1);
+        assert!(t.spill_order(0).is_empty());
+        assert_eq!(t.transfer_time(0, 0, 1 << 20), 0.0);
+    }
+
+    #[test]
+    fn uneven_node_count_rounds_up() {
+        // Constructed directly (SystemConfig::validate would reject the
+        // division): 6 devices on 4-device nodes occupy 2 nodes, and
+        // node_of agrees with num_nodes.
+        let t = Topology {
+            devices: 6,
+            devices_per_node: 4,
+            latency_s: 1e-6,
+            intra_node_bw: 1e9,
+            inter_node_bw: 1e8,
+        };
+        assert_eq!(t.num_nodes(), 2);
+        assert_eq!(t.node_of(5), 1);
+        assert!(t.node_of(5) < t.num_nodes(), "node_of stays within num_nodes");
+        assert!(!t.same_node(3, 4));
+        let order = t.spill_order(4);
+        assert_eq!(order[0], 5, "the one same-node peer comes first: {order:?}");
     }
 }

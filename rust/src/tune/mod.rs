@@ -1,0 +1,39 @@
+//! Hardware-profile autotuner: search planner-spec space, emit a
+//! latency/memory Pareto front and a recommended `--planner` spec per
+//! hardware profile.
+//!
+//! The paper closes by arguing its cost analysis "enables a principled
+//! framework for hardware-specific hyper-parameter tuning". This module
+//! is that framework, built on three existing pieces:
+//!
+//! * the **open planner registry** ([`crate::planner::registry`]) —
+//!   every planner declares its tunable parameters
+//!   ([`crate::planner::ParamSpec`] grids), so [`SearchSpace`]
+//!   synthesizes candidate spec strings for all current *and future*
+//!   planners, `cached(...)` decorator dimensions included;
+//! * the **engine** ([`crate::exec`]) — trials price full-model steps
+//!   (or a continuous-batching serve horizon) under the Eq. 3/4 cost
+//!   models with a deterministic plan-cost model, so every trial is
+//!   bit-reproducible under the tuner's settings and the winning spec
+//!   round-trips into `run`/`serve`/`replay` (same planner, same
+//!   plans; those commands charge measured plan wall time);
+//! * **hardware profiles** ([`HardwareProfile`]) — builtin presets or
+//!   site-specific TOML files supplying the bandwidth tiers, HBM
+//!   capacity and node topology a configuration is tuned *for*.
+//!
+//! [`Tuner::run`] evaluates candidates in parallel
+//! (`std::thread::scope`), caches trial results keyed by
+//! `(spec, scenario, system, budget)`, supports grid / random /
+//! successive-halving search ([`Strategy`]), and reduces the trials to a
+//! Pareto front ([`pareto_front`]) plus a single recommendation. The
+//! `llep tune` subcommand is a thin CLI over this module.
+
+pub mod pareto;
+pub mod profile;
+pub mod search;
+pub mod space;
+
+pub use pareto::{dominates, pareto_front};
+pub use profile::HardwareProfile;
+pub use search::{Mode, Strategy, Trial, TrialMetrics, TuneOutcome, Tuner};
+pub use space::{SearchSpace, SpaceBudget};

@@ -1,0 +1,116 @@
+//! Bi-objective (latency, peak memory) Pareto selection over trials.
+//!
+//! Both objectives are minimized. OOM trials are infeasible on the
+//! profile's hardware and never enter the front. The front is returned
+//! latency-ascending / memory-descending, so `front[0]` is the
+//! lowest-latency feasible configuration (the tuner's recommendation)
+//! and `front.last()` the most memory-frugal one.
+
+use super::search::{Trial, TrialMetrics};
+
+/// True when `a` is at least as good as `b` on both objectives and
+/// strictly better on one (OOM-free metrics assumed).
+pub fn dominates(a: &TrialMetrics, b: &TrialMetrics) -> bool {
+    let le = a.latency_s <= b.latency_s && a.peak_bytes <= b.peak_bytes;
+    let lt = a.latency_s < b.latency_s || a.peak_bytes < b.peak_bytes;
+    le && lt
+}
+
+/// Non-dominated subset of the non-OOM trials, sorted by ascending
+/// latency (ties broken toward lower memory, then spec — deterministic).
+pub fn pareto_front(trials: &[Trial]) -> Vec<Trial> {
+    let mut feasible: Vec<Trial> = trials.iter().filter(|t| !t.metrics.oom).cloned().collect();
+    feasible.sort_by(|a, b| {
+        a.metrics
+            .latency_s
+            .total_cmp(&b.metrics.latency_s)
+            .then(a.metrics.peak_bytes.cmp(&b.metrics.peak_bytes))
+            .then(a.spec.cmp(&b.spec))
+    });
+    let mut front: Vec<Trial> = Vec::new();
+    let mut best_mem = u64::MAX;
+    for t in feasible {
+        // Sorted by latency: a point joins the front iff it improves on
+        // the best memory seen so far (equal-latency duplicates keep the
+        // lower-memory representative).
+        if t.metrics.peak_bytes < best_mem {
+            best_mem = t.metrics.peak_bytes;
+            front.push(t);
+        }
+    }
+    front
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trial(spec: &str, latency_s: f64, peak_bytes: u64, oom: bool) -> Trial {
+        Trial { spec: spec.into(), budget: 1, metrics: TrialMetrics { latency_s, peak_bytes, oom } }
+    }
+
+    #[test]
+    fn front_keeps_only_nondominated() {
+        let trials = vec![
+            trial("fast-fat", 1.0, 100, false),
+            trial("slow-lean", 3.0, 10, false),
+            trial("dominated", 2.0, 150, false), // slower and fatter than fast-fat
+            trial("middle", 2.0, 50, false),
+            trial("oom", 0.5, 400, true), // fastest but infeasible
+        ];
+        let front = pareto_front(&trials);
+        let specs: Vec<&str> = front.iter().map(|t| t.spec.as_str()).collect();
+        assert_eq!(specs, vec!["fast-fat", "middle", "slow-lean"]);
+        // Pairwise non-domination.
+        for a in &front {
+            for b in &front {
+                assert!(
+                    a.spec == b.spec || !dominates(&a.metrics, &b.metrics),
+                    "{} dominates {}",
+                    a.spec,
+                    b.spec
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn every_feasible_trial_is_dominated_by_or_on_the_front() {
+        let trials = vec![
+            trial("a", 1.0, 90, false),
+            trial("b", 1.5, 40, false),
+            trial("c", 1.2, 95, false),
+            trial("d", 2.0, 40, false),
+        ];
+        let front = pareto_front(&trials);
+        for t in trials.iter().filter(|t| !t.metrics.oom) {
+            let covered = front.iter().any(|f| {
+                f.spec == t.spec || dominates(&f.metrics, &t.metrics)
+            });
+            assert!(covered, "{} neither on nor dominated by the front", t.spec);
+        }
+    }
+
+    #[test]
+    fn equal_latency_keeps_the_leaner_point() {
+        let trials = vec![trial("fat", 1.0, 100, false), trial("lean", 1.0, 50, false)];
+        let front = pareto_front(&trials);
+        assert_eq!(front.len(), 1);
+        assert_eq!(front[0].spec, "lean");
+    }
+
+    #[test]
+    fn all_oom_means_empty_front() {
+        let trials = vec![trial("x", 1.0, 10, true), trial("y", 2.0, 20, true)];
+        assert!(pareto_front(&trials).is_empty());
+    }
+
+    #[test]
+    fn dominates_is_strict() {
+        let a = TrialMetrics { latency_s: 1.0, peak_bytes: 10, oom: false };
+        assert!(!dominates(&a, &a), "a point never dominates itself");
+        let faster = TrialMetrics { latency_s: 0.5, peak_bytes: 10, oom: false };
+        assert!(dominates(&faster, &a));
+        assert!(!dominates(&a, &faster));
+    }
+}

@@ -1,0 +1,204 @@
+//! Named hardware profiles for the autotuner.
+//!
+//! A profile is a complete [`SystemConfig`] — device count, node
+//! topology, per-device HBM, GEMM throughput and interconnect bandwidth
+//! tiers — addressed by name. The builtin names are the
+//! [`SystemPreset`]s (`h200x8`, `h100x8`, `h200x16-2node`, `cpusim8`,
+//! `cpusim4`); anything else is read as a path to a profile TOML file,
+//! so site-specific hardware joins without recompiling:
+//!
+//! ```toml
+//! [profile]
+//! name = "a100x16-2node"
+//! base = "h200x16-2node"     # optional preset to inherit from
+//! devices = 16
+//! devices_per_node = 8
+//! mem_capacity_gb = 64.0
+//!
+//! [profile.gemm]
+//! overhead_us = 6.0
+//! peak_tflops = 200.0
+//! tokens_half_eff = 384.0
+//! dim_half_eff = 512.0
+//!
+//! [profile.comm]
+//! latency_us = 12.0
+//! intra_node_gbps = 300.0
+//! inter_node_gbps = 25.0
+//! ```
+//!
+//! All keys are optional (missing ones keep the base preset's values);
+//! the resulting config must pass [`SystemConfig::validate`].
+
+use crate::config::{SystemConfig, SystemPreset};
+use crate::util::tomlmini::{self, Doc};
+
+/// A named hardware configuration the tuner searches against.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HardwareProfile {
+    pub name: String,
+    pub system: SystemConfig,
+}
+
+impl HardwareProfile {
+    /// A builtin profile (one of the [`SystemPreset`] names).
+    pub fn builtin(name: &str) -> Option<HardwareProfile> {
+        let preset = SystemPreset::from_name(name)?;
+        let system = SystemConfig::preset(preset);
+        Some(HardwareProfile { name: system.name.clone(), system })
+    }
+
+    /// All builtin profiles, in preset order.
+    pub fn all_builtin() -> Vec<HardwareProfile> {
+        SystemPreset::ALL
+            .iter()
+            .map(|p| HardwareProfile::builtin(p.name()).expect("preset names resolve"))
+            .collect()
+    }
+
+    /// Parse a profile TOML document (see the module docs for the schema).
+    pub fn from_toml(text: &str) -> Result<HardwareProfile, String> {
+        let doc = tomlmini::parse(text)?;
+        let base = match doc.get("profile", "base") {
+            Some(v) => {
+                let name = v.as_str().ok_or("[profile] base must be a string")?;
+                SystemPreset::from_name(name).ok_or_else(|| {
+                    format!(
+                        "unknown base preset {name:?}; known: {}",
+                        SystemPreset::ALL.map(|p| p.name()).join(", ")
+                    )
+                })?
+            }
+            None => SystemPreset::H200x8,
+        };
+        let mut sys = SystemConfig::preset(base);
+        if let Some(v) = doc.get("profile", "name") {
+            sys.name = v.as_str().ok_or("[profile] name must be a string")?.to_string();
+        }
+        if let Some(d) = get_usize(&doc, "profile", "devices")? {
+            sys = sys.with_devices(d);
+        }
+        if let Some(d) = get_usize(&doc, "profile", "devices_per_node")? {
+            sys.devices_per_node = d;
+        }
+        if let Some(gb) = get_f64(&doc, "profile", "mem_capacity_gb")? {
+            sys.mem_capacity_bytes = (gb * (1u64 << 30) as f64) as u64;
+        }
+        if let Some(us) = get_f64(&doc, "profile.gemm", "overhead_us")? {
+            sys.gemm.overhead_s = us * 1e-6;
+        }
+        if let Some(tf) = get_f64(&doc, "profile.gemm", "peak_tflops")? {
+            sys.gemm.peak_flops = tf * 1e12;
+        }
+        if let Some(x) = get_f64(&doc, "profile.gemm", "tokens_half_eff")? {
+            sys.gemm.tokens_half_eff = x;
+        }
+        if let Some(x) = get_f64(&doc, "profile.gemm", "dim_half_eff")? {
+            sys.gemm.dim_half_eff = x;
+        }
+        if let Some(us) = get_f64(&doc, "profile.comm", "latency_us")? {
+            sys.comm.latency_s = us * 1e-6;
+        }
+        if let Some(g) = get_f64(&doc, "profile.comm", "intra_node_gbps")? {
+            sys.comm.intra_node_bw = g * 1e9;
+        }
+        if let Some(g) = get_f64(&doc, "profile.comm", "inter_node_gbps")? {
+            sys.comm.inter_node_bw = g * 1e9;
+        }
+        sys.validate()?;
+        Ok(HardwareProfile { name: sys.name.clone(), system: sys })
+    }
+
+    /// Resolve a `--profile` argument: builtin name first, then a path to
+    /// a profile TOML file.
+    pub fn resolve(arg: &str) -> Result<HardwareProfile, String> {
+        if let Some(p) = HardwareProfile::builtin(arg) {
+            return Ok(p);
+        }
+        match std::fs::read_to_string(arg) {
+            Ok(text) => HardwareProfile::from_toml(&text)
+                .map_err(|e| format!("profile file {arg:?}: {e}")),
+            Err(_) => Err(format!(
+                "unknown profile {arg:?} (builtin: {}; or pass a profile TOML path)",
+                SystemPreset::ALL.map(|p| p.name()).join(", ")
+            )),
+        }
+    }
+}
+
+fn get_usize(doc: &Doc, table: &str, key: &str) -> Result<Option<usize>, String> {
+    match doc.get(table, key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_usize()
+            .map(Some)
+            .ok_or_else(|| format!("[{table}] {key} must be a non-negative integer")),
+    }
+}
+
+fn get_f64(doc: &Doc, table: &str, key: &str) -> Result<Option<f64>, String> {
+    match doc.get(table, key) {
+        None => Ok(None),
+        Some(v) => {
+            v.as_f64().map(Some).ok_or_else(|| format!("[{table}] {key} must be a number"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_profiles_resolve_and_validate() {
+        for p in HardwareProfile::all_builtin() {
+            p.system.validate().unwrap();
+            assert_eq!(HardwareProfile::resolve(&p.name).unwrap(), p);
+        }
+        assert!(HardwareProfile::builtin("h100x8").is_some());
+    }
+
+    #[test]
+    fn toml_overrides_apply_over_base() {
+        let p = HardwareProfile::from_toml(
+            r#"
+[profile]
+name = "half-h200"
+base = "h200x8"
+mem_capacity_gb = 56.0
+
+[profile.gemm]
+peak_tflops = 325.0
+
+[profile.comm]
+intra_node_gbps = 225.0
+"#,
+        )
+        .unwrap();
+        assert_eq!(p.name, "half-h200");
+        assert_eq!(p.system.devices, 8, "inherited from base");
+        assert_eq!(p.system.mem_capacity_bytes, 56 * (1u64 << 30));
+        assert_eq!(p.system.gemm.peak_flops, 325e12);
+        assert_eq!(p.system.comm.intra_node_bw, 225e9);
+        let base = SystemConfig::preset(SystemPreset::H200x8);
+        assert_eq!(p.system.comm.inter_node_bw, base.comm.inter_node_bw, "untouched keys keep");
+    }
+
+    #[test]
+    fn invalid_profiles_are_rejected() {
+        assert!(HardwareProfile::from_toml("[profile]\nbase = \"tpu\"\n").is_err());
+        assert!(HardwareProfile::from_toml("[profile]\ndevices = \"eight\"\n").is_err());
+        // 6 devices on 8-device nodes fails SystemConfig::validate.
+        let r = HardwareProfile::from_toml(
+            "[profile]\ndevices = 6\ndevices_per_node = 8\n",
+        );
+        assert!(r.is_err(), "{r:?}");
+        assert!(HardwareProfile::resolve("no-such-profile").is_err());
+    }
+
+    #[test]
+    fn empty_document_is_the_default_testbed() {
+        let p = HardwareProfile::from_toml("").unwrap();
+        assert_eq!(p.system, SystemConfig::preset(SystemPreset::H200x8));
+    }
+}

@@ -1,0 +1,467 @@
+//! Trial evaluation and search strategies (grid, random, successive
+//! halving).
+//!
+//! ## Deterministic trials
+//!
+//! A trial prices one candidate spec on a fixed workload with the
+//! engine's deterministic plan-cost model
+//! ([`PlanCostModel`](crate::exec::PlanCostModel), installed by
+//! [`Tuner::new`] when missing). Everything a trial reports is then a
+//! pure function of `(spec, scenario, system, mode, seed, budget)`:
+//! re-pricing the recommended spec under the tuner's settings
+//! reproduces the metrics bit-identically ([`Tuner::verify`],
+//! property-tested in `rust/tests/tune.rs`). Passing the spec back to
+//! `run`/`serve` `--planner` reconstructs the identical planner and
+//! plans (the registry round-trip); those commands charge *measured*
+//! plan wall time, so only the microsecond `T_plan` component differs
+//! from the tuner's modeled one.
+//!
+//! ## Budgets and the trial cache
+//!
+//! A trial's `budget` is its fidelity: engine steps priced in
+//! [`Mode::Step`], requests simulated in [`Mode::Serve`]. Successive
+//! halving starts every candidate at a small budget and re-evaluates
+//! only the survivors at geometrically growing budgets; the final rung
+//! always runs at the full budget. Results are cached keyed by
+//! `(spec, scenario, system, budget)`, so rungs never re-price a point
+//! they have already seen and [`Tuner::priced_units`] counts only real
+//! work (the convergence bench reports it against full grid).
+
+use super::pareto::pareto_front;
+use super::space::SearchSpace;
+use crate::coordinator::ContinuousBatchSim;
+use crate::exec::{Engine, PlanCostModel};
+use crate::planner::Registry;
+use crate::routing::{DepthProfile, Scenario};
+use crate::util::rng::Rng;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// What one trial optimizes: a full-model training/prefill step, or a
+/// decode-dominated continuous-batching horizon.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    /// Mean full-model step latency ([`Engine::run_model`]) vs peak
+    /// memory, over `budget` independently drawn batches.
+    Step,
+    /// p50 time-per-output-token in a continuous-batching simulation
+    /// over `budget` requests, vs peak memory.
+    Serve,
+}
+
+impl Mode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Mode::Step => "step",
+            Mode::Serve => "serve",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Mode> {
+        match name {
+            "step" => Some(Mode::Step),
+            "serve" => Some(Mode::Serve),
+            _ => None,
+        }
+    }
+}
+
+/// Search strategy over the candidate set.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    /// Every candidate at full budget.
+    Grid,
+    /// A deterministic (seeded) subset of `trials` candidates at full
+    /// budget.
+    Random { trials: usize },
+    /// Successive halving: all candidates at a small budget, keep the
+    /// best `1/eta` per rung, multiply the budget by `eta`; the last
+    /// rung runs at full budget.
+    Halving { eta: usize },
+}
+
+/// The two tuning objectives (both minimized) plus the feasibility flag.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TrialMetrics {
+    /// Step mode: mean full-model step latency; serve mode: p50 TPOT
+    /// (p50 TTFT when the horizon produced no decode steps).
+    pub latency_s: f64,
+    /// Max per-device peak bytes (Eq.-4 accounting) over the trial.
+    pub peak_bytes: u64,
+    /// Some device exceeded the profile's memory capacity.
+    pub oom: bool,
+}
+
+/// One evaluated candidate.
+#[derive(Clone, Debug)]
+pub struct Trial {
+    pub spec: String,
+    /// Fidelity the metrics were computed at (steps or requests).
+    pub budget: usize,
+    pub metrics: TrialMetrics,
+}
+
+/// Result of one [`Tuner::run`].
+#[derive(Clone, Debug)]
+pub struct TuneOutcome {
+    /// Strategy label (`grid`, `random(k)`, `halving(eta=2)`).
+    pub strategy: String,
+    /// Size of the candidate space the strategy drew from.
+    pub specs_considered: usize,
+    /// Budget units actually priced so far by this tuner (cache misses
+    /// only, cumulative across rungs).
+    pub priced_units: u64,
+    /// The full-fidelity budget the final trials were evaluated at.
+    pub final_budget: usize,
+    /// Full-budget trials, ranked best-first.
+    pub trials: Vec<Trial>,
+    /// Latency/memory Pareto front over `trials` (non-OOM only),
+    /// latency-ascending.
+    pub front: Vec<Trial>,
+    /// Lowest-latency feasible configuration (`front[0]`).
+    pub recommended: Option<Trial>,
+}
+
+type TrialKey = (String, String, String, usize);
+
+/// The autotuner: evaluates planner specs against one (scenario,
+/// hardware profile) pair and searches spec space for the Pareto set.
+pub struct Tuner {
+    pub engine: Engine,
+    pub registry: Registry,
+    pub scenario: Scenario,
+    pub mode: Mode,
+    pub seed: u64,
+    /// Step mode: tokens per device per priced batch. Serve mode: the
+    /// continuous-batching prefill token budget per step.
+    pub tokens_per_device: usize,
+    /// Full-fidelity budget (steps or requests).
+    pub full_budget: usize,
+    cache: Mutex<BTreeMap<TrialKey, TrialMetrics>>,
+    priced_units: AtomicU64,
+}
+
+impl Tuner {
+    /// Build a tuner. Installs the default deterministic
+    /// [`PlanCostModel`] when the engine does not already carry one —
+    /// the bit-identical-trials contract requires it.
+    pub fn new(engine: Engine, scenario: Scenario, mode: Mode, seed: u64) -> Tuner {
+        let engine = if engine.plan_cost.is_some() {
+            engine
+        } else {
+            engine.with_plan_cost(PlanCostModel::default())
+        };
+        Tuner {
+            engine,
+            registry: Registry::builtin(),
+            scenario,
+            mode,
+            seed,
+            tokens_per_device: 8192,
+            full_budget: match mode {
+                Mode::Step => 8,
+                Mode::Serve => 24,
+            },
+            cache: Mutex::new(BTreeMap::new()),
+            priced_units: AtomicU64::new(0),
+        }
+    }
+
+    /// Replace the registry (runtime-registered planners join the search).
+    pub fn with_registry(mut self, registry: Registry) -> Tuner {
+        self.registry = registry;
+        self
+    }
+
+    /// Step-mode batch size (tokens per device); in serve mode the
+    /// per-step prefill token budget.
+    pub fn with_tokens(mut self, tokens_per_device: usize) -> Tuner {
+        self.tokens_per_device = tokens_per_device.max(1);
+        self
+    }
+
+    /// Full-fidelity budget (steps in step mode, requests in serve mode).
+    pub fn with_full_budget(mut self, budget: usize) -> Tuner {
+        self.full_budget = budget.max(1);
+        self
+    }
+
+    /// Budget units priced so far (cache misses only).
+    pub fn priced_units(&self) -> u64 {
+        self.priced_units.load(Ordering::Relaxed)
+    }
+
+    fn key(&self, spec: &str, budget: usize) -> TrialKey {
+        (
+            spec.to_string(),
+            self.scenario.label(),
+            format!("{}/{}", self.engine.system.name, self.mode.name()),
+            budget,
+        )
+    }
+
+    /// Evaluate one spec at the given budget (served from the trial
+    /// cache when already priced).
+    pub fn evaluate(&self, spec: &str, budget: usize) -> Result<Trial, String> {
+        let budget = budget.max(1);
+        let key = self.key(spec, budget);
+        if let Some(&metrics) = self.cache.lock().unwrap().get(&key) {
+            return Ok(Trial { spec: spec.to_string(), budget, metrics });
+        }
+        let metrics = self.compute(spec, budget)?;
+        self.priced_units.fetch_add(budget as u64, Ordering::Relaxed);
+        self.cache.lock().unwrap().insert(key, metrics);
+        Ok(Trial { spec: spec.to_string(), budget, metrics })
+    }
+
+    /// Recompute a trial from scratch, bypassing the cache, and check the
+    /// result is bit-identical to what the trial reported.
+    pub fn verify(&self, trial: &Trial) -> Result<bool, String> {
+        let fresh = self.compute(&trial.spec, trial.budget)?;
+        Ok(fresh.latency_s.to_bits() == trial.metrics.latency_s.to_bits()
+            && fresh.peak_bytes == trial.metrics.peak_bytes
+            && fresh.oom == trial.metrics.oom)
+    }
+
+    /// The actual pricing. Pure in `(spec, budget)` given the tuner's
+    /// fixed scenario/system/mode/seed: the planner instance is fresh,
+    /// per-batch RNG is derived from `seed` and the batch index, and the
+    /// engine charges modeled plan time.
+    fn compute(&self, spec: &str, budget: usize) -> Result<TrialMetrics, String> {
+        let planner = self.registry.parse(spec)?;
+        match self.mode {
+            Mode::Step => {
+                let layers = self.engine.model.num_moe_layers().max(1);
+                let profile = DepthProfile::uniform(self.scenario.clone(), layers);
+                let mut latency_sum = 0.0f64;
+                let mut peak_bytes = 0u64;
+                let mut oom = false;
+                for batch in 0..budget {
+                    let mut rng = Rng::new(batch_seed(self.seed, batch));
+                    let lms = profile.generate_loads(
+                        &self.engine.model,
+                        self.engine.system.devices,
+                        self.tokens_per_device,
+                        &mut rng,
+                    );
+                    let r = self.engine.run_model(&lms, &*planner)?;
+                    latency_sum += r.latency_s;
+                    peak_bytes = peak_bytes.max(r.max_peak_bytes());
+                    oom |= r.oom;
+                }
+                Ok(TrialMetrics { latency_s: latency_sum / budget as f64, peak_bytes, oom })
+            }
+            Mode::Serve => {
+                // A dedicated arrivals stream, disjoint from the step-mode
+                // per-batch streams (which use batch_seed) and identical on
+                // every architecture.
+                let mut arrivals = Rng::new(self.seed ^ 0xC0FF_EE00_5EED_5EED);
+                let requests = ContinuousBatchSim::requests(
+                    budget,
+                    1e-4,
+                    (64, 256),
+                    (8, 32),
+                    &mut arrivals,
+                );
+                let sim = ContinuousBatchSim::with_planner(
+                    self.engine.clone(),
+                    planner,
+                    self.scenario.clone(),
+                    self.tokens_per_device,
+                );
+                let r = sim.run(&requests, &mut Rng::new(self.seed.wrapping_add(1)));
+                let latency_s = if r.tpot.n > 0 { r.tpot.p50 } else { r.ttft.p50 };
+                Ok(TrialMetrics { latency_s, peak_bytes: r.peak_bytes, oom: r.oom_steps > 0 })
+            }
+        }
+    }
+
+    /// Evaluate many specs at one budget, fanned out over scoped worker
+    /// threads (candidates are independent).
+    pub fn evaluate_all(&self, specs: &[String], budget: usize) -> Result<Vec<Trial>, String> {
+        crate::util::par::parallel_map(specs, |spec| self.evaluate(spec, budget))
+            .into_iter()
+            .collect()
+    }
+
+    /// Run one search over `space` and assemble the Pareto front and the
+    /// recommended spec.
+    pub fn run(&self, space: &SearchSpace, strategy: Strategy) -> Result<TuneOutcome, String> {
+        let full = self.full_budget.max(1);
+        let (label, mut trials) = match strategy {
+            Strategy::Grid => ("grid".to_string(), self.evaluate_all(&space.specs, full)?),
+            Strategy::Random { trials } => {
+                let k = trials.clamp(1, space.specs.len().max(1));
+                let mut rng = Rng::new(self.seed);
+                let mut idx = rng.sample_distinct(space.specs.len(), k.min(space.specs.len()));
+                idx.sort_unstable();
+                let subset: Vec<String> =
+                    idx.into_iter().map(|i| space.specs[i].clone()).collect();
+                (format!("random({k})"), self.evaluate_all(&subset, full)?)
+            }
+            Strategy::Halving { eta } => {
+                let eta = eta.max(2);
+                (format!("halving(eta={eta})"), self.run_halving(&space.specs, full, eta)?)
+            }
+        };
+        rank(&mut trials);
+        let front = pareto_front(&trials);
+        let recommended = front.first().cloned();
+        Ok(TuneOutcome {
+            strategy: label,
+            specs_considered: space.specs.len(),
+            priced_units: self.priced_units(),
+            final_budget: full,
+            trials,
+            front,
+            recommended,
+        })
+    }
+
+    /// Successive halving: rung budgets grow by `eta` up to `full`; the
+    /// candidate set shrinks by `eta` per rung down to one survivor.
+    fn run_halving(
+        &self,
+        specs: &[String],
+        full: usize,
+        eta: usize,
+    ) -> Result<Vec<Trial>, String> {
+        if specs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let mut levels = 1usize;
+        let mut m = specs.len();
+        while m > 1 {
+            m = m.div_ceil(eta);
+            levels += 1;
+        }
+        let mut rung_budgets: Vec<usize> = Vec::with_capacity(levels);
+        let mut b = full;
+        for _ in 0..levels {
+            rung_budgets.push(b.max(1));
+            b = b.div_ceil(eta);
+        }
+        rung_budgets.reverse(); // ascending; last == full
+
+        let mut survivors: Vec<String> = specs.to_vec();
+        let mut last: Vec<Trial> = Vec::new();
+        for (i, &rung_budget) in rung_budgets.iter().enumerate() {
+            let mut trials = self.evaluate_all(&survivors, rung_budget)?;
+            rank(&mut trials);
+            if i + 1 < rung_budgets.len() {
+                let keep = survivors.len().div_ceil(eta).max(1);
+                trials.truncate(keep);
+                survivors = trials.iter().map(|t| t.spec.clone()).collect();
+            }
+            last = trials;
+        }
+        Ok(last)
+    }
+}
+
+/// Per-batch RNG stream: independent of evaluation order, shared by
+/// every candidate (all planners price the same workload).
+fn batch_seed(seed: u64, batch: usize) -> u64 {
+    seed ^ (batch as u64).wrapping_add(1).wrapping_mul(0x9E3779B97F4A7C15)
+}
+
+/// Rank trials best-first: feasible before OOM, then latency, then peak
+/// memory, then spec (a total, deterministic order).
+pub fn rank(trials: &mut [Trial]) {
+    trials.sort_by(|a, b| {
+        (a.metrics.oom as u8)
+            .cmp(&(b.metrics.oom as u8))
+            .then(a.metrics.latency_s.total_cmp(&b.metrics.latency_s))
+            .then(a.metrics.peak_bytes.cmp(&b.metrics.peak_bytes))
+            .then(a.spec.cmp(&b.spec))
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelConfig, ModelPreset, SystemConfig, SystemPreset};
+    use crate::tune::SpaceBudget;
+
+    fn tuner(mode: Mode) -> Tuner {
+        let engine = Engine::modeled(
+            ModelConfig::preset(ModelPreset::Tiny),
+            SystemConfig::preset(SystemPreset::CpuSim4),
+        );
+        Tuner::new(engine, Scenario::concentrated(0.9, 1), mode, 0)
+            .with_tokens(512)
+            .with_full_budget(4)
+    }
+
+    #[test]
+    fn evaluate_caches_and_counts_priced_units() {
+        let t = tuner(Mode::Step);
+        let a = t.evaluate("llep", 2).unwrap();
+        assert_eq!(t.priced_units(), 2);
+        let b = t.evaluate("llep", 2).unwrap();
+        assert_eq!(t.priced_units(), 2, "second lookup served from the cache");
+        assert_eq!(a.metrics, b.metrics);
+        let _ = t.evaluate("llep", 4).unwrap();
+        assert_eq!(t.priced_units(), 6, "different budget is a different trial");
+    }
+
+    #[test]
+    fn trials_reproduce_bit_identically() {
+        for mode in [Mode::Step, Mode::Serve] {
+            let t = tuner(mode);
+            for spec in ["ep", "llep", "cached(llep):drift=0.15"] {
+                let trial = t.evaluate(spec, 3).unwrap();
+                assert!(
+                    t.verify(&trial).unwrap(),
+                    "{spec} must re-price bit-identically in {mode:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn grid_run_produces_front_and_recommendation() {
+        let t = tuner(Mode::Step);
+        let space = SearchSpace::from_registry(&t.registry, SpaceBudget::Smoke).unwrap();
+        let out = t.run(&space, Strategy::Grid).unwrap();
+        assert_eq!(out.trials.len(), space.len());
+        assert!(!out.front.is_empty());
+        let rec = out.recommended.as_ref().expect("non-OOM candidates exist");
+        assert_eq!(rec.spec, out.front[0].spec);
+        // The recommendation parses back through the registry.
+        t.registry.parse(&rec.spec).unwrap();
+        // Ranked best-first: the recommended trial leads the table.
+        assert_eq!(out.trials[0].spec, rec.spec);
+    }
+
+    #[test]
+    fn random_strategy_is_a_deterministic_subset() {
+        let t1 = tuner(Mode::Step);
+        let space = SearchSpace::from_registry(&t1.registry, SpaceBudget::Smoke).unwrap();
+        let a = t1.run(&space, Strategy::Random { trials: 5 }).unwrap();
+        let t2 = tuner(Mode::Step);
+        let b = t2.run(&space, Strategy::Random { trials: 5 }).unwrap();
+        assert_eq!(a.trials.len(), 5);
+        let specs_a: Vec<&str> = a.trials.iter().map(|t| t.spec.as_str()).collect();
+        let specs_b: Vec<&str> = b.trials.iter().map(|t| t.spec.as_str()).collect();
+        assert_eq!(specs_a, specs_b, "same seed, same subset");
+    }
+
+    #[test]
+    fn halving_prices_strictly_less_than_grid() {
+        let grid_tuner = tuner(Mode::Step);
+        let space = SearchSpace::from_registry(&grid_tuner.registry, SpaceBudget::Smoke).unwrap();
+        let grid = grid_tuner.run(&space, Strategy::Grid).unwrap();
+        let halving_tuner = tuner(Mode::Step);
+        let halving = halving_tuner.run(&space, Strategy::Halving { eta: 2 }).unwrap();
+        assert!(
+            halving.priced_units < grid.priced_units,
+            "halving {} vs grid {}",
+            halving.priced_units,
+            grid.priced_units
+        );
+        assert!(!halving.front.is_empty());
+        assert_eq!(halving.trials[0].budget, grid_tuner.full_budget, "final rung at full budget");
+    }
+}

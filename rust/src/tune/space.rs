@@ -1,0 +1,250 @@
+//! Search-space synthesis from the planner registry.
+//!
+//! The space is *derived*, not hand-listed: every [`PlannerEntry`] in the
+//! registry contributes the cartesian product of its declared
+//! [`ParamSpec`] grids, and the `cached(...)` decorator contributes its
+//! own dimensions ([`CACHED_PARAMS`]) on top. Every synthesized point is
+//! a valid `--planner` spec string (checked at construction by parsing
+//! each one back through the registry), so whatever the tuner recommends
+//! round-trips directly into `run`/`serve`/`replay`.
+//!
+//! Runtime-registered planners join automatically: register an entry
+//! with `params` and the tuner searches it like any builtin.
+
+use crate::planner::{ParamSpec, Registry, CACHED_PARAMS};
+
+/// How much of the canonical grids to enumerate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpaceBudget {
+    /// ≤ 2 values per parameter, no decorator dimensions (CI smoke).
+    Smoke,
+    /// Full per-planner grids, plus the decorator grid over each
+    /// planner's default configuration.
+    Default,
+    /// Full grids with the decorator grid crossed against every base
+    /// point.
+    Full,
+}
+
+impl SpaceBudget {
+    pub const ALL: [SpaceBudget; 3] =
+        [SpaceBudget::Smoke, SpaceBudget::Default, SpaceBudget::Full];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpaceBudget::Smoke => "smoke",
+            SpaceBudget::Default => "default",
+            SpaceBudget::Full => "full",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<SpaceBudget> {
+        Self::ALL.iter().copied().find(|b| b.name() == name)
+    }
+
+    fn grid_cap(&self) -> usize {
+        match self {
+            SpaceBudget::Smoke => 2,
+            _ => usize::MAX,
+        }
+    }
+}
+
+/// An enumerated candidate set of valid planner spec strings.
+#[derive(Clone, Debug)]
+pub struct SearchSpace {
+    pub specs: Vec<String>,
+}
+
+impl SearchSpace {
+    /// Derive the space from `reg` at the given budget. Later
+    /// registrations shadow earlier entries of the same name, matching
+    /// [`Registry::parse`]. Errors if any synthesized spec fails to parse
+    /// (a registry/grid inconsistency — loud, like the parser itself).
+    pub fn from_registry(reg: &Registry, budget: SpaceBudget) -> Result<SearchSpace, String> {
+        let cap = budget.grid_cap();
+        let mut specs: Vec<String> = Vec::new();
+        let mut base_specs: Vec<String> = Vec::new();
+        let mut names: Vec<&str> = Vec::new();
+        let mut seen: Vec<&str> = Vec::new();
+        for entry in reg.entries().iter().rev() {
+            if seen.contains(&entry.name) {
+                continue; // shadowed by a later registration
+            }
+            seen.push(entry.name);
+            names.push(entry.name);
+            for assignment in grid_points(entry.params, cap) {
+                base_specs.push(synthesize(entry.name, entry.params, &assignment));
+            }
+        }
+        specs.extend(base_specs.iter().cloned());
+        match budget {
+            SpaceBudget::Smoke => {}
+            SpaceBudget::Default => {
+                // Decorator dims over each planner's default configuration.
+                for name in &names {
+                    for assignment in grid_points(CACHED_PARAMS, cap) {
+                        specs.push(wrap_cached(name, &assignment));
+                    }
+                }
+            }
+            SpaceBudget::Full => {
+                for base in &base_specs {
+                    for assignment in grid_points(CACHED_PARAMS, cap) {
+                        specs.push(wrap_cached(base, &assignment));
+                    }
+                }
+            }
+        }
+        for spec in &specs {
+            reg.parse(spec)
+                .map_err(|e| format!("synthesized spec {spec:?} does not parse: {e}"))?;
+        }
+        Ok(SearchSpace { specs })
+    }
+
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+}
+
+/// Cartesian product of the first `cap` values of each parameter's grid;
+/// a single empty assignment when there are no parameters.
+fn grid_points(params: &[ParamSpec], cap: usize) -> Vec<Vec<f64>> {
+    let grids: Vec<&[f64]> = params.iter().map(|p| &p.grid[..p.grid.len().min(cap)]).collect();
+    let mut out: Vec<Vec<f64>> = vec![Vec::new()];
+    for grid in grids {
+        let mut next = Vec::with_capacity(out.len() * grid.len().max(1));
+        for prefix in &out {
+            for &v in grid {
+                let mut p = prefix.clone();
+                p.push(v);
+                next.push(p);
+            }
+        }
+        out = next;
+    }
+    out
+}
+
+/// Spell out one grid point as a registry spec string.
+fn synthesize(name: &str, params: &[ParamSpec], assignment: &[f64]) -> String {
+    if params.is_empty() {
+        return name.to_string();
+    }
+    let pairs: Vec<String> = params
+        .iter()
+        .zip(assignment)
+        .map(|(p, &v)| format!("{}={}", p.key, p.format_value(v)))
+        .collect();
+    format!("{name}:{}", pairs.join(","))
+}
+
+/// Wrap an inner spec in the `cached(...)` decorator at one grid point.
+fn wrap_cached(inner: &str, assignment: &[f64]) -> String {
+    let pairs: Vec<String> = CACHED_PARAMS
+        .iter()
+        .zip(assignment)
+        .map(|(p, &v)| format!("{}={}", p.key, p.format_value(v)))
+        .collect();
+    if pairs.is_empty() {
+        format!("cached({inner})")
+    } else {
+        format!("cached({inner}):{}", pairs.join(","))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::{plan_ep, Planner, PlannerEntry, RoutePlan};
+    use crate::topology::Topology;
+
+    #[test]
+    fn smoke_space_is_small_and_valid() {
+        let reg = Registry::builtin();
+        let space = SearchSpace::from_registry(&reg, SpaceBudget::Smoke).unwrap();
+        // ep(1) + llep(2^3) + eplb(2) + chunked(2) + lpt(2) = 15
+        assert_eq!(space.len(), 15, "{:?}", space.specs);
+        assert!(space.specs.iter().all(|s| !s.starts_with("cached(")));
+        assert!(space.specs.contains(&"ep".to_string()));
+        assert!(space.specs.contains(&"llep:alpha=1,m=256,lambda=1.1".to_string()));
+    }
+
+    #[test]
+    fn budgets_nest() {
+        let reg = Registry::builtin();
+        let smoke = SearchSpace::from_registry(&reg, SpaceBudget::Smoke).unwrap();
+        let default = SearchSpace::from_registry(&reg, SpaceBudget::Default).unwrap();
+        let full = SearchSpace::from_registry(&reg, SpaceBudget::Full).unwrap();
+        assert!(smoke.len() < default.len());
+        assert!(default.len() < full.len());
+        assert!(default.specs.iter().any(|s| s.starts_with("cached(")));
+        // Full crosses the decorator against every base point.
+        assert!(full.specs.iter().any(|s| s.contains("cached(llep:alpha=1.5")));
+    }
+
+    #[test]
+    fn runtime_registered_planner_joins_the_space() {
+        struct Zero;
+        impl Planner for Zero {
+            fn plan_with_stats(
+                &self,
+                devices: usize,
+                loads: &[u64],
+                _stats: &[u64],
+                _topo: Option<&Topology>,
+            ) -> RoutePlan {
+                plan_ep(loads.len(), devices, loads)
+            }
+            fn label(&self) -> String {
+                "ZERO".into()
+            }
+            fn spec(&self) -> String {
+                "zero".into()
+            }
+        }
+        let mut reg = Registry::builtin();
+        reg.register(PlannerEntry {
+            name: "zero",
+            help: "test-only",
+            example: "zero",
+            params: &[],
+            build: |_| Ok(Box::new(Zero)),
+        });
+        let space = SearchSpace::from_registry(&reg, SpaceBudget::Default).unwrap();
+        assert!(space.specs.contains(&"zero".to_string()));
+        assert!(space.specs.iter().any(|s| s.starts_with("cached(zero)")));
+    }
+
+    #[test]
+    fn shadowed_entries_enumerate_once() {
+        let mut reg = Registry::builtin();
+        // Shadow "ep" with an identical constructor; the space must not
+        // list "ep" twice.
+        reg.register(PlannerEntry {
+            name: "ep",
+            help: "shadowing test entry",
+            example: "ep",
+            params: &[],
+            build: |_| Ok(Box::new(crate::planner::StandardEp)),
+        });
+        let space = SearchSpace::from_registry(&reg, SpaceBudget::Smoke).unwrap();
+        assert_eq!(space.specs.iter().filter(|s| *s == "ep").count(), 1);
+    }
+
+    #[test]
+    fn every_spec_parses() {
+        let reg = Registry::builtin();
+        for budget in SpaceBudget::ALL {
+            let space = SearchSpace::from_registry(&reg, budget).unwrap();
+            for s in &space.specs {
+                reg.parse(s).unwrap_or_else(|e| panic!("{s:?}: {e}"));
+            }
+        }
+    }
+}

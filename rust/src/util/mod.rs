@@ -6,12 +6,13 @@
 //! deterministic PRNG ([`rng`]), a CLI argument
 //! parser ([`cli`]), a TOML-subset parser ([`tomlmini`]), a JSON
 //! reader/writer ([`json`]), summary statistics ([`stats`]), a
-//! criterion-style benchmark kit ([`benchkit`]) and a property-testing
-//! driver ([`prop`]).
+//! criterion-style benchmark kit ([`benchkit`]), a property-testing
+//! driver ([`prop`]) and a scoped-thread parallel map ([`par`]).
 
 pub mod benchkit;
 pub mod cli;
 pub mod json;
+pub mod par;
 pub mod prop;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,64 @@
+//! Chunked scoped-thread parallel map (rayon is unavailable offline).
+//!
+//! One shared implementation of the "slots + `std::thread::scope` over
+//! contiguous chunks" fan-out used by the engine's per-layer planning
+//! ([`crate::exec::Engine::run_model`]) and the autotuner's trial
+//! evaluation ([`crate::tune::Tuner`]): results land in input order
+//! regardless of completion order, and short inputs (or single-core
+//! hosts) run inline with no threads spawned.
+
+/// Map `f` over `items` on up to `available_parallelism()` scoped
+/// worker threads, preserving input order.
+pub fn parallel_map<T, U, F>(items: &[T], f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(&T) -> U + Sync,
+{
+    let n = items.len();
+    let workers = std::thread::available_parallelism().map(|w| w.get()).unwrap_or(1).min(n);
+    if workers <= 1 {
+        return items.iter().map(f).collect();
+    }
+    let mut slots: Vec<Option<U>> = Vec::with_capacity(n);
+    slots.resize_with(n, || None);
+    let chunk = n.div_ceil(workers);
+    std::thread::scope(|scope| {
+        for (slot_chunk, item_chunk) in slots.chunks_mut(chunk).zip(items.chunks(chunk)) {
+            let f = &f;
+            scope.spawn(move || {
+                for (slot, item) in slot_chunk.iter_mut().zip(item_chunk) {
+                    *slot = Some(f(item));
+                }
+            });
+        }
+    });
+    slots.into_iter().map(|s| s.expect("every item mapped")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order_and_covers_all_items() {
+        let items: Vec<usize> = (0..103).collect();
+        let out = parallel_map(&items, |&x| x * 2);
+        assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_and_single_inputs() {
+        let none: Vec<u32> = Vec::new();
+        assert!(parallel_map(&none, |&x| x).is_empty());
+        assert_eq!(parallel_map(&[7u32], |&x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn results_can_carry_errors() {
+        let items = ["1", "2", "x"];
+        let out = parallel_map(&items, |s| s.parse::<i32>());
+        assert_eq!(out[0], Ok(1));
+        assert!(out[2].is_err());
+    }
+}

@@ -27,9 +27,10 @@ fn run_ok(args: &[&str]) -> String {
 #[test]
 fn info_lists_presets() {
     let out = run_ok(&["info"]);
-    for name in ["gpt-oss-120b", "deepseek-v3", "kimi-k2", "h200x8", "cpusim8"] {
+    for name in ["gpt-oss-120b", "deepseek-v3", "kimi-k2", "h200x8", "h100x8", "cpusim8"] {
         assert!(out.contains(name), "info missing {name}:\n{out}");
     }
+    assert!(out.contains("tunable:"), "info marks tunable planner parameters:\n{out}");
 }
 
 #[test]
@@ -166,6 +167,69 @@ fn info_lists_planner_registry() {
     for name in ["ep", "llep", "eplb", "chunked", "lpt", "cached"] {
         assert!(out.contains(name), "info missing planner {name}:\n{out}");
     }
+}
+
+#[test]
+fn tune_smoke_emits_front_and_verified_recommendation() {
+    let out = run_ok(&[
+        "tune", "--budget", "smoke", "--profile", "cpusim4", "--scenario", "concentrated",
+        "--tokens", "1024",
+    ]);
+    assert!(out.contains("Pareto front"), "{out}");
+    assert!(out.contains("recommended: --planner"), "{out}");
+    assert!(out.contains("re-evaluated bit-identically: true"), "{out}");
+    assert!(out.contains("budget units priced"), "{out}");
+}
+
+#[test]
+fn tune_recommended_spec_feeds_back_into_run() {
+    // The round-trip the subsystem promises: the recommended spec is a
+    // valid --planner argument for the other subcommands.
+    let out = run_ok(&[
+        "tune", "--budget", "smoke", "--profile", "cpusim4", "--scenario", "concentrated",
+        "--tokens", "1024", "--strategy", "halving",
+    ]);
+    let spec = out
+        .lines()
+        .find_map(|l| l.strip_prefix("recommended: --planner "))
+        .expect("tune prints a recommendation")
+        .trim()
+        .to_string();
+    let run_out = run_ok(&["run", "--planner", &spec, "--tokens", "2048"]);
+    assert!(!run_out.is_empty());
+}
+
+#[test]
+fn tune_rejects_unknown_profile_budget_and_mode() {
+    for args in [
+        ["tune", "--profile", "tpu9000"],
+        ["tune", "--budget", "enormous"],
+        ["tune", "--mode", "training"],
+    ] {
+        let out = llep().args(args).output().unwrap();
+        assert!(!out.status.success(), "{args:?} must fail");
+        assert!(
+            String::from_utf8_lossy(&out.stderr).contains("unknown"),
+            "{args:?}: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+    }
+}
+
+#[test]
+fn tune_writes_json_report() {
+    let dir = std::env::temp_dir().join("llep_tune_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("tune.json");
+    run_ok(&[
+        "tune", "--budget", "smoke", "--profile", "cpusim4", "--scenario", "powerlaw",
+        "--tokens", "1024", "--out", path.to_str().unwrap(),
+    ]);
+    let text = std::fs::read_to_string(&path).unwrap();
+    for key in ["\"front\"", "\"recommended\"", "\"trials\"", "\"profile\""] {
+        assert!(text.contains(key), "JSON report missing {key}:\n{text}");
+    }
+    std::fs::remove_file(path).ok();
 }
 
 #[test]

@@ -1,0 +1,270 @@
+//! Integration tests for the `tune/` autotuner subsystem: search-space
+//! synthesis, the bit-identical-trials contract (property-tested),
+//! successive halving vs full grid, Pareto invariants, and hardware
+//! profiles.
+
+use llep::config::{ModelConfig, ModelPreset, SystemConfig, SystemPreset};
+use llep::exec::{Engine, PlanCostModel};
+use llep::routing::Scenario;
+use llep::tune::{
+    dominates, pareto_front, HardwareProfile, Mode, SearchSpace, SpaceBudget, Strategy, Trial,
+    TrialMetrics, Tuner,
+};
+use llep::util::prop::{assert_property, no_shrink};
+use llep::util::rng::Rng;
+
+fn paper_engine() -> Engine {
+    Engine::modeled(
+        ModelConfig::preset(ModelPreset::Fig1Layer),
+        SystemConfig::preset(SystemPreset::H200x8),
+    )
+}
+
+fn small_tuner(scenario: Scenario, mode: Mode, seed: u64) -> Tuner {
+    let engine = Engine::modeled(
+        ModelConfig::preset(ModelPreset::Tiny),
+        SystemConfig::preset(SystemPreset::CpuSim4),
+    );
+    Tuner::new(engine, scenario, mode, seed).with_tokens(512).with_full_budget(4)
+}
+
+#[test]
+fn smoke_space_round_trips_through_the_registry() {
+    let tuner = small_tuner(Scenario::concentrated(0.9, 1), Mode::Step, 0);
+    let space = SearchSpace::from_registry(&tuner.registry, SpaceBudget::Smoke).unwrap();
+    assert!(!space.is_empty());
+    for spec in &space.specs {
+        let p = tuner.registry.parse(spec).unwrap();
+        let canon = p.spec();
+        let p2 = tuner.registry.parse(&canon).unwrap();
+        assert_eq!(p2.spec(), canon, "synthesized spec {spec} reaches a fixed point");
+    }
+}
+
+#[test]
+fn recommended_spec_reproduces_trial_metrics_bit_identically() {
+    // The acceptance contract: whatever the tuner recommends, passing
+    // the spec back under the same (profile, scenario, seed) re-prices
+    // to the exact reported bits. Property-tested over seeds, modes and
+    // specs (including the stateful cached decorator).
+    let specs = [
+        "ep",
+        "llep:alpha=1.25,m=256,lambda=1.1",
+        "eplb:r=4",
+        "lpt:min=256",
+        "chunked:c=2048",
+        "cached(llep):drift=0.15,every=2",
+    ];
+    assert_property(
+        "tune trials are bit-reproducible",
+        0xB17,
+        12,
+        |rng: &mut Rng| (rng.next_u64() % 1000, rng.index(specs.len()), rng.index(2)),
+        |&(seed, spec_idx, mode_idx): &(u64, usize, usize)| {
+            let mode = if mode_idx == 0 { Mode::Step } else { Mode::Serve };
+            let spec = specs[spec_idx];
+            let tuner = small_tuner(Scenario::concentrated(0.9, 1), mode, seed);
+            let trial = tuner.evaluate(spec, 3)?;
+            // verify() recomputes from scratch, bypassing the cache.
+            if !tuner.verify(&trial)? {
+                return Err(format!("{spec} did not re-price bit-identically ({mode:?})"));
+            }
+            // A second, completely fresh tuner agrees too.
+            let other = small_tuner(Scenario::concentrated(0.9, 1), mode, seed);
+            let again = other.evaluate(spec, 3)?;
+            if again.metrics.latency_s.to_bits() != trial.metrics.latency_s.to_bits()
+                || again.metrics.peak_bytes != trial.metrics.peak_bytes
+            {
+                return Err(format!("{spec}: fresh tuner disagreed ({mode:?})"));
+            }
+            Ok(())
+        },
+        no_shrink,
+    );
+}
+
+#[test]
+fn halving_finds_the_grid_optimum_with_strictly_fewer_trials() {
+    // Acceptance: on the smoke grid, successive halving lands within 5%
+    // of the full-grid optimum while pricing strictly fewer budget
+    // units. (On a stationary concentrated scenario per-batch loads are
+    // identical, so rung rankings are stable and the gap is exactly 0 —
+    // well inside the 5% bound.)
+    let scenario = Scenario::concentrated(0.9, 1);
+    let grid_tuner = small_tuner(scenario.clone(), Mode::Step, 7);
+    let space = SearchSpace::from_registry(&grid_tuner.registry, SpaceBudget::Smoke).unwrap();
+    let grid = grid_tuner.run(&space, Strategy::Grid).unwrap();
+    let halving_tuner = small_tuner(scenario, Mode::Step, 7);
+    let halving = halving_tuner.run(&space, Strategy::Halving { eta: 2 }).unwrap();
+
+    let grid_best = grid.recommended.as_ref().expect("grid finds a feasible spec");
+    let halving_best = halving.recommended.as_ref().expect("halving finds a feasible spec");
+    assert!(
+        halving_best.metrics.latency_s <= grid_best.metrics.latency_s * 1.05,
+        "halving {} ({}) vs grid optimum {} ({})",
+        halving_best.metrics.latency_s,
+        halving_best.spec,
+        grid_best.metrics.latency_s,
+        grid_best.spec
+    );
+    assert!(
+        halving.priced_units < grid.priced_units,
+        "halving must price strictly fewer units: {} vs {}",
+        halving.priced_units,
+        grid.priced_units
+    );
+    assert_eq!(halving_best.budget, grid_best.budget, "final rung runs at full fidelity");
+}
+
+#[test]
+fn pareto_front_is_nondominated_and_recommendation_parses() {
+    let tuner = small_tuner(Scenario::concentrated(0.8, 2), Mode::Step, 3);
+    let space = SearchSpace::from_registry(&tuner.registry, SpaceBudget::Smoke).unwrap();
+    let out = tuner.run(&space, Strategy::Grid).unwrap();
+    assert!(!out.front.is_empty(), "non-empty Pareto front");
+    for a in &out.front {
+        assert!(!a.metrics.oom);
+        for b in &out.front {
+            assert!(
+                a.spec == b.spec || !dominates(&a.metrics, &b.metrics),
+                "{} dominates {} inside the front",
+                a.spec,
+                b.spec
+            );
+        }
+    }
+    // Every trial is covered by the front.
+    for t in out.trials.iter().filter(|t| !t.metrics.oom) {
+        assert!(
+            out.front.iter().any(|f| f.spec == t.spec || dominates(&f.metrics, &t.metrics)
+                || (f.metrics.latency_s <= t.metrics.latency_s
+                    && f.metrics.peak_bytes <= t.metrics.peak_bytes)),
+            "{} uncovered by the front",
+            t.spec
+        );
+    }
+    let rec = out.recommended.as_ref().unwrap();
+    let planner = tuner.registry.parse(&rec.spec).unwrap();
+    assert_eq!(
+        tuner.registry.parse(&planner.spec()).unwrap().spec(),
+        planner.spec(),
+        "recommendation round-trips"
+    );
+}
+
+#[test]
+fn serve_mode_tunes_tpot_and_emits_a_front() {
+    let tuner = small_tuner(Scenario::concentrated(0.9, 1), Mode::Serve, 5).with_full_budget(6);
+    let space = SearchSpace::from_registry(&tuner.registry, SpaceBudget::Smoke).unwrap();
+    let out = tuner.run(&space, Strategy::Grid).unwrap();
+    assert!(!out.front.is_empty());
+    let rec = out.recommended.as_ref().unwrap();
+    assert!(rec.metrics.latency_s > 0.0, "p50 TPOT objective is populated");
+    assert!(tuner.verify(rec).unwrap(), "serve trials reproduce bit-identically");
+}
+
+#[test]
+fn tighter_memory_profile_changes_feasibility() {
+    // The same workload that fits on H200 OOMs for standard EP on a
+    // profile with a small HBM ceiling, so the tuner's front moves —
+    // the "hardware-specific" point of the subsystem.
+    let scenario = Scenario::concentrated(0.95, 1);
+    let roomy = Tuner::new(paper_engine(), scenario.clone(), Mode::Step, 1).with_tokens(65_536);
+    let ep_roomy = roomy.evaluate("ep", 2).unwrap();
+    assert!(!ep_roomy.metrics.oom, "EP fits the H200 profile");
+
+    let mut tight_sys = SystemConfig::preset(SystemPreset::H200x8);
+    tight_sys.name = "tight".into();
+    tight_sys.mem_capacity_bytes = 4 << 30;
+    let tight_engine =
+        Engine::modeled(ModelConfig::preset(ModelPreset::Fig1Layer), tight_sys);
+    let tight = Tuner::new(tight_engine, scenario, Mode::Step, 1).with_tokens(65_536);
+    let ep_tight = tight.evaluate("ep", 2).unwrap();
+    assert!(ep_tight.metrics.oom, "EP blows the tight profile's ceiling");
+    let llep_tight = tight.evaluate("llep", 2).unwrap();
+    assert!(!llep_tight.metrics.oom, "LLEP still fits (paper Fig. 1b)");
+    // And the front over {ep, llep} on the tight profile excludes EP.
+    let trials = vec![ep_tight, llep_tight.clone()];
+    let front = pareto_front(&trials);
+    assert_eq!(front.len(), 1);
+    assert_eq!(front[0].spec, "llep");
+}
+
+#[test]
+fn profile_toml_drives_the_tuner() {
+    let profile = HardwareProfile::from_toml(
+        "[profile]\nname = \"custom\"\nbase = \"cpusim4\"\nmem_capacity_gb = 1.0\n",
+    )
+    .unwrap();
+    assert_eq!(profile.name, "custom");
+    let engine = Engine::modeled(ModelConfig::preset(ModelPreset::Tiny), profile.system)
+        .with_plan_cost(PlanCostModel::default());
+    let tuner = Tuner::new(engine, Scenario::concentrated(0.9, 1), Mode::Step, 0)
+        .with_tokens(512)
+        .with_full_budget(2);
+    let trial = tuner.evaluate("llep", 2).unwrap();
+    assert!(trial.metrics.latency_s > 0.0);
+}
+
+#[test]
+fn front_ordering_matches_ranked_trials() {
+    // The recommendation is both front[0] and the top-ranked trial.
+    let tuner = small_tuner(Scenario::power_law(1.2), Mode::Step, 9);
+    let space = SearchSpace::from_registry(&tuner.registry, SpaceBudget::Smoke).unwrap();
+    let out = tuner.run(&space, Strategy::Grid).unwrap();
+    let rec = out.recommended.as_ref().unwrap();
+    assert_eq!(out.front[0].spec, rec.spec);
+    assert_eq!(out.trials[0].spec, rec.spec);
+    // Front latencies ascend while memory strictly descends.
+    for w in out.front.windows(2) {
+        assert!(w[0].metrics.latency_s <= w[1].metrics.latency_s);
+        assert!(w[0].metrics.peak_bytes > w[1].metrics.peak_bytes);
+    }
+}
+
+#[test]
+fn synthetic_pareto_property_over_random_trials() {
+    assert_property(
+        "pareto front covers every feasible trial",
+        0xF00D,
+        60,
+        |rng: &mut Rng| {
+            let n = 1 + rng.index(20);
+            (0..n)
+                .map(|i| Trial {
+                    spec: format!("s{i}"),
+                    budget: 1,
+                    metrics: TrialMetrics {
+                        latency_s: (1 + rng.index(50)) as f64 / 10.0,
+                        peak_bytes: (1 + rng.index(50)) as u64,
+                        oom: rng.index(10) == 0,
+                    },
+                })
+                .collect::<Vec<Trial>>()
+        },
+        |trials: &Vec<Trial>| {
+            let front = pareto_front(trials);
+            for f in &front {
+                if f.metrics.oom {
+                    return Err("OOM point on the front".into());
+                }
+            }
+            for (a, b) in front.iter().zip(front.iter().skip(1)) {
+                if dominates(&b.metrics, &a.metrics) || dominates(&a.metrics, &b.metrics) {
+                    return Err(format!("{} and {} dominate within front", a.spec, b.spec));
+                }
+            }
+            for t in trials.iter().filter(|t| !t.metrics.oom) {
+                let covered = front.iter().any(|f| {
+                    f.metrics.latency_s <= t.metrics.latency_s
+                        && f.metrics.peak_bytes <= t.metrics.peak_bytes
+                });
+                if !covered {
+                    return Err(format!("{} uncovered", t.spec));
+                }
+            }
+            Ok(())
+        },
+        no_shrink,
+    );
+}
