@@ -1,0 +1,110 @@
+//! Bench: chaos-aware LLEP vs static EP on a degraded pool.
+//!
+//! Three measurements:
+//!
+//! 1. **Straggler step** — the acceptance scenario: a single 4x
+//!    straggler on an 8-device pool under concentrated routing. Prices
+//!    one full-model step per planner and asserts the >= 2x LLEP
+//!    advantage (the same contract `rust/tests/chaos.rs` locks in).
+//! 2. **Pool-aware planning microbench** — wall time of the speed-aware
+//!    spill path vs the homogeneous planner (the chaos layer must not
+//!    make planning meaningfully slower).
+//! 3. **Failure serve** — a serve burst with a permanent failure
+//!    mid-run: chaos-aware LLEP recovers (requeue + elastic replan, the
+//!    ledger stays exact) while static EP is unrecoverable.
+//!
+//! Run: `cargo bench --bench degraded_pool` (add `--quick` to shrink).
+
+use llep::chaos::FaultPlan;
+use llep::coordinator::{Request, ServeSim};
+use llep::metrics::{format_chaos, format_secs, Table};
+use llep::prelude::*;
+use llep::util::benchkit::{bb, quick_requested, Bencher};
+
+fn main() {
+    let quick = quick_requested();
+    let base = Engine::modeled(
+        ModelConfig::preset(ModelPreset::Fig1Layer),
+        SystemConfig::preset(SystemPreset::H200x8),
+    );
+    let faults = FaultPlan::parse("slow:dev=0,x=4").unwrap();
+    let engine = base.for_pool(faults.state_at(0, &base.pool));
+    let scenario = Scenario::concentrated(0.9, 1);
+
+    // ---- 1. one model step under the 4x straggler ------------------------
+    let tokens = if quick { 8192 } else { 16_384 };
+    let profile = DepthProfile::uniform(scenario.clone(), 1);
+    let mut rng = Rng::new(1);
+    let lms = profile.generate_loads(&engine.model, 8, tokens, &mut rng);
+    let ep = engine.run_model(&lms, &PlannerKind::StandardEp).unwrap();
+    let ll = engine.run_model(&lms, &PlannerKind::llep_default()).unwrap();
+    let speedup = ep.latency_s / ll.latency_s;
+    let mut t = Table::new(&["planner", "step latency", "compute span", "speedup"]);
+    for r in [&ep, &ll] {
+        t.row(vec![
+            r.planner.clone(),
+            format_secs(r.latency_s),
+            format_secs(r.layers[0].report.phases.compute_s),
+            format!("{:.2}x", ep.latency_s / r.latency_s),
+        ]);
+    }
+    println!("Single 4x straggler, P=8, {} | {tokens} tokens/device\n", scenario.label());
+    println!("{}", t.render());
+    assert!(
+        speedup >= 2.0,
+        "acceptance: speed-aware LLEP must be >= 2x faster under the straggler, got {speedup:.2}x"
+    );
+
+    // ---- 2. pool-aware planning wall time --------------------------------
+    let loads = lms[0].expert_loads();
+    let llep = PlannerKind::llep_default();
+    let mut b = if quick { Bencher::quick() } else { Bencher::new() };
+    let flat = b.bench("plan/llep/healthy/N=128", || bb(llep.plan(8, &loads, Some(&base.topo))));
+    let aware = b.bench("plan/llep/straggler-pool/N=128", || {
+        bb(llep.plan_with_pool(8, &loads, &loads, Some(&engine.topo), Some(&engine.pool)))
+    });
+    println!(
+        "\npool-aware planning {} vs homogeneous {} ({:.2}x)\n",
+        format_secs(aware.mean_s()),
+        format_secs(flat.mean_s()),
+        aware.mean_ns / flat.mean_ns.max(1.0)
+    );
+
+    // ---- 3. permanent failure mid-serve ----------------------------------
+    let n_req = if quick { 8 } else { 16 };
+    let reqs: Vec<Request> =
+        (0..n_req).map(|id| Request { id, arrival_s: 0.0, tokens: 30_000 }).collect();
+    let fail = FaultPlan::parse("fail:dev=1,at=2").unwrap();
+    let serve = |planner: PlannerKind| {
+        ServeSim::with_planner(base.clone(), planner.boxed(), scenario.clone(), 8192)
+            .with_faults(fail.clone())
+            .try_run(&reqs, &mut Rng::new(7))
+    };
+    let ep_run = serve(PlannerKind::StandardEp);
+    let ll_run = serve(PlannerKind::llep_default()).expect("chaos-aware LLEP must recover");
+    assert!(ep_run.is_err(), "static EP cannot survive a permanent failure");
+    assert!(ll_run.tokens.is_exact(), "ledger conservation: {:?}", ll_run.tokens);
+    let mut t = Table::new(&["planner", "outcome", "makespan", "p99 latency", "chaos"]);
+    t.row(vec![
+        "EP".into(),
+        "unrecoverable".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+    ]);
+    t.row(vec![
+        ll_run.planner.clone(),
+        "recovered".into(),
+        format_secs(ll_run.makespan_s),
+        format_secs(ll_run.request_latency.p99),
+        format_chaos(&ll_run.chaos),
+    ]);
+    println!("Permanent failure at step 2 (fail:dev=1,at=2), {n_req} requests\n");
+    println!("{}", t.render());
+    println!(
+        "LLEP recovered in <= {} aborted attempt(s), {} tokens requeued, {} wasted",
+        ll_run.chaos.max_recovery_steps,
+        ll_run.chaos.requeued_tokens,
+        format_secs(ll_run.chaos.wasted_s)
+    );
+}

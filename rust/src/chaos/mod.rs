@@ -1,0 +1,45 @@
+//! Fault & heterogeneity injection: deterministic per-device chaos for
+//! the virtual pool.
+//!
+//! The paper's whole premise is that EP breaks when routing violates its
+//! balance assumption — but a device pool violates the *same* assumption
+//! in hardware whenever it has stragglers, transient stalls, dead
+//! devices, or mixed GPU generations. This module is the hardware-side
+//! mirror of [`crate::routing::Scenario`]: where a `Scenario` perturbs
+//! *loads*, a [`FaultPlan`] perturbs *devices*, and every existing
+//! workload scenario can now be crossed with every fault plan.
+//!
+//! Two pieces:
+//!
+//! * [`PoolState`] / [`DeviceState`] — a per-step view of the pool: each
+//!   device's relative speed multiplier and alive flag, plus a global
+//!   link-bandwidth degradation factor. The engine carries one
+//!   ([`crate::exec::Engine::with_pool`]); pricing divides device compute
+//!   time by speed (`work/speed` — completion time is what LLEP's
+//!   least-loaded objective naturally generalizes to) and marks steps
+//!   that left work on a dead device as *stranded*.
+//! * [`FaultPlan`] — a schedule of per-device events (slowdown, transient
+//!   stall, permanent failure, recovery, link degradation, seeded speed
+//!   jitter) parsed from a compact spec string or a TOML file.
+//!   [`FaultPlan::state_at`] is a pure function of `(plan, step, base
+//!   pool)`, so every run under a fault plan is bit-reproducible given
+//!   `(fault spec, scenario, system, seed)`.
+//!
+//! ## Modeling notes
+//!
+//! Faults gate the *expert side* of the step: expert compute, expert
+//! weight residency, and interconnect bandwidth. Routing origin rows (the
+//! data-parallel attention side that emits tokens) are assumed re-hosted
+//! by the serving layer and keep producing load. A weight transfer whose
+//! source device is dead is re-sourced from the host checkpoint path and
+//! charged at (degraded) inter-node bandwidth; a transfer *to* a dead
+//! device, or compute *on* one, strands the step — the planner was not
+//! pool-aware. Static EP can never adapt (its placement is the identity);
+//! speed-aware LLEP re-plans around the hole, which is exactly the
+//! comparison `llep chaos` and the `degraded_pool` bench quantify.
+
+pub mod plan;
+pub mod state;
+
+pub use plan::{FaultEvent, FaultPlan};
+pub use state::{DeviceState, PoolState};

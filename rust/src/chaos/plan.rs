@@ -1,0 +1,508 @@
+//! Fault schedules: deterministic per-device event timelines.
+//!
+//! Grammar (events separated by `;`, keys by `,`):
+//!
+//! ```text
+//! slow:dev=3,x=4                    4x straggler from step 0, forever
+//! slow:dev=3,x=4,from=8,until=32    ... only for steps [8, 32)
+//! stall:dev=1,at=5,steps=3          transient stall: dead for steps [5, 8)
+//! fail:dev=2,at=10                  permanent failure from step 10
+//! recover:dev=2,at=30               ... until recovery at step 30
+//! link:x=2,from=0                   halve both bandwidth tiers
+//! jitter:amp=0.2,seed=7             seeded per-(step, device) speed noise
+//! ```
+//!
+//! A plan can also live in a TOML file:
+//!
+//! ```toml
+//! [chaos]
+//! faults = "slow:dev=0,x=4;fail:dev=3,at=16"
+//! ```
+//!
+//! Unknown event kinds and unknown/leftover keys are hard errors — a typo
+//! never silently changes the experiment. [`FaultPlan::spec`] round-trips
+//! through [`FaultPlan::parse`].
+//!
+//! [`FaultPlan::state_at`] folds the schedule into a [`PoolState`] for
+//! one step: a pure function of `(plan, step, base pool)`, so any run
+//! driven by it is bit-reproducible. Jitter derives its noise from a
+//! per-(step, device) SplitMix-style hash of the event's seed — no shared
+//! RNG stream, hence no dependence on evaluation order.
+
+use super::state::PoolState;
+use crate::util::rng::Rng;
+use crate::util::tomlmini;
+
+/// One scheduled fault/heterogeneity event. Steps are engine-step
+/// indices (each priced batch advances the sims by one step); `until` is
+/// exclusive and `None` means "for the rest of the run".
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultEvent {
+    /// Divide `device`'s speed by `factor` while active.
+    Slow { device: usize, factor: f64, from: usize, until: Option<usize> },
+    /// `device` is dead for `steps` steps starting at `at`, then returns
+    /// on its own (a transient hang / preemption).
+    Stall { device: usize, at: usize, steps: usize },
+    /// `device` is dead from step `at` onward (until a matching
+    /// [`FaultEvent::Recover`]).
+    Fail { device: usize, at: usize },
+    /// `device` rejoins the pool at step `at` (elastic scale-back-up).
+    Recover { device: usize, at: usize },
+    /// Divide both link-bandwidth tiers by `factor` while active.
+    Link { factor: f64, from: usize, until: Option<usize> },
+    /// Multiply every device's speed by `1 + amp * U(-1, 1)` with noise
+    /// drawn deterministically per (step, device) from `seed`.
+    Jitter { amp: f64, seed: u64, from: usize, until: Option<usize> },
+}
+
+impl FaultEvent {
+    /// Canonical spec fragment (the inverse of event parsing).
+    fn spec(&self) -> String {
+        let window = |from: usize, until: Option<usize>| -> String {
+            let mut s = String::new();
+            if from != 0 {
+                s.push_str(&format!(",from={from}"));
+            }
+            if let Some(u) = until {
+                s.push_str(&format!(",until={u}"));
+            }
+            s
+        };
+        match *self {
+            FaultEvent::Slow { device, factor, from, until } => {
+                format!("slow:dev={device},x={factor}{}", window(from, until))
+            }
+            FaultEvent::Stall { device, at, steps } => {
+                format!("stall:dev={device},at={at},steps={steps}")
+            }
+            FaultEvent::Fail { device, at } => format!("fail:dev={device},at={at}"),
+            FaultEvent::Recover { device, at } => format!("recover:dev={device},at={at}"),
+            FaultEvent::Link { factor, from, until } => {
+                format!("link:x={factor}{}", window(from, until))
+            }
+            FaultEvent::Jitter { amp, seed, from, until } => {
+                format!("jitter:amp={amp},seed={seed}{}", window(from, until))
+            }
+        }
+    }
+
+    /// Largest device index this event touches, if any.
+    fn device(&self) -> Option<usize> {
+        match *self {
+            FaultEvent::Slow { device, .. }
+            | FaultEvent::Stall { device, .. }
+            | FaultEvent::Fail { device, .. }
+            | FaultEvent::Recover { device, .. } => Some(device),
+            FaultEvent::Link { .. } | FaultEvent::Jitter { .. } => None,
+        }
+    }
+}
+
+/// A deterministic fault schedule (possibly empty).
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// The no-faults plan.
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Parse the `;`-separated event grammar (see the module docs).
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut events = Vec::new();
+        for part in spec.split(';').map(str::trim).filter(|p| !p.is_empty()) {
+            events.push(parse_event(part)?);
+        }
+        if events.is_empty() {
+            return Err(format!("fault spec {spec:?} contains no events"));
+        }
+        Ok(FaultPlan { events })
+    }
+
+    /// Parse a TOML document carrying `faults = "<spec>"` under
+    /// `[chaos]`.
+    pub fn from_toml(text: &str) -> Result<FaultPlan, String> {
+        let doc = tomlmini::parse(text)?;
+        let spec = doc
+            .get("chaos", "faults")
+            .ok_or("fault TOML needs `faults = \"<spec>\"` under [chaos]")?
+            .as_str()
+            .ok_or("[chaos] faults must be a string")?;
+        FaultPlan::parse(spec)
+    }
+
+    /// Resolve a `--faults` argument: an existing file path is read as
+    /// TOML, anything else is parsed as a spec string.
+    pub fn resolve(arg: &str) -> Result<FaultPlan, String> {
+        if std::path::Path::new(arg).exists() {
+            let text = std::fs::read_to_string(arg).map_err(|e| format!("{arg}: {e}"))?;
+            return FaultPlan::from_toml(&text).map_err(|e| format!("fault file {arg:?}: {e}"));
+        }
+        FaultPlan::parse(arg)
+    }
+
+    /// Canonical spec string; [`FaultPlan::parse`] on it reconstructs an
+    /// equal plan (round-trip).
+    pub fn spec(&self) -> String {
+        self.events.iter().map(FaultEvent::spec).collect::<Vec<_>>().join(";")
+    }
+
+    /// Short label for report titles and tuner trial keys.
+    pub fn label(&self) -> String {
+        if self.is_empty() {
+            "no faults".into()
+        } else {
+            self.spec()
+        }
+    }
+
+    /// Check every event addresses a device inside a `devices`-wide pool.
+    pub fn validate(&self, devices: usize) -> Result<(), String> {
+        for ev in &self.events {
+            if let Some(d) = ev.device() {
+                if d >= devices {
+                    return Err(format!(
+                        "fault event {:?} addresses device {d}, pool has {devices}",
+                        ev.spec()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The pool view at `step`, folding every event over `base` (the
+    /// system's nominal — possibly heterogeneous — pool). Pure in
+    /// `(self, step, base)`.
+    pub fn state_at(&self, step: usize, base: &PoolState) -> PoolState {
+        let mut pool = base.clone();
+        let n = pool.len();
+        // Last fail/recover at or before `step` wins per device; ties on
+        // the same step resolve to the later event in the list.
+        let mut fate: Vec<Option<(usize, bool)>> = vec![None; n];
+        let active = |from: usize, until: Option<usize>| match until {
+            Some(u) => step >= from && step < u,
+            None => step >= from,
+        };
+        // Later fail/recover events at the same (or a later) step shadow
+        // earlier ones per device.
+        let newer = |slot: &Option<(usize, bool)>, at: usize| match slot {
+            Some((t, _)) => at >= *t,
+            None => true,
+        };
+        for ev in &self.events {
+            match *ev {
+                FaultEvent::Slow { device, factor, from, until } => {
+                    if device < n && active(from, until) && factor > 0.0 {
+                        pool.devices[device].speed /= factor;
+                    }
+                }
+                FaultEvent::Stall { device, at, steps } => {
+                    if device < n && step >= at && step < at.saturating_add(steps) {
+                        pool.devices[device].alive = false;
+                    }
+                }
+                FaultEvent::Fail { device, at } => {
+                    if device < n && at <= step && newer(&fate[device], at) {
+                        fate[device] = Some((at, false));
+                    }
+                }
+                FaultEvent::Recover { device, at } => {
+                    if device < n && at <= step && newer(&fate[device], at) {
+                        fate[device] = Some((at, true));
+                    }
+                }
+                FaultEvent::Link { factor, from, until } => {
+                    if active(from, until) && factor > 0.0 {
+                        pool.link_factor *= factor;
+                    }
+                }
+                FaultEvent::Jitter { amp, seed, from, until } => {
+                    if active(from, until) {
+                        for (d, dev) in pool.devices.iter_mut().enumerate() {
+                            let mut rng = Rng::new(seed ^ jitter_key(step, d));
+                            let noise = 1.0 + amp * (rng.f64() * 2.0 - 1.0);
+                            dev.speed *= noise.max(1e-3);
+                        }
+                    }
+                }
+            }
+        }
+        for (d, f) in fate.iter().enumerate() {
+            if let Some((_, alive)) = f {
+                pool.devices[d].alive = pool.devices[d].alive && *alive;
+            }
+        }
+        pool
+    }
+
+    /// Devices alive at `base` (or at step `step - 1`) but dead at
+    /// `step` — the failures a step-`step` planner must react to and the
+    /// in-flight work they abort.
+    pub fn newly_dead(&self, step: usize, base: &PoolState) -> Vec<usize> {
+        let cur = self.state_at(step, base);
+        let prev = if step == 0 { base.clone() } else { self.state_at(step - 1, base) };
+        (0..cur.len())
+            .filter(|&d| prev.devices[d].alive && !cur.devices[d].alive)
+            .collect()
+    }
+}
+
+/// Order-free per-(step, device) stream selector for jitter noise.
+fn jitter_key(step: usize, device: usize) -> u64 {
+    (step as u64)
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add((device as u64).wrapping_mul(0xD1B5_4A32_D192_ED03))
+}
+
+/// Parsed `key=value` list with loud leftovers (mirrors the planner
+/// registry's parameter handling).
+struct Params {
+    kv: Vec<(String, String)>,
+}
+
+impl Params {
+    fn parse(s: &str) -> Result<Params, String> {
+        let mut kv = Vec::new();
+        for part in s.split(',').filter(|p| !p.trim().is_empty()) {
+            let (k, v) = part
+                .split_once('=')
+                .ok_or_else(|| format!("expected key=value, got {part:?}"))?;
+            kv.push((k.trim().to_string(), v.trim().to_string()));
+        }
+        Ok(Params { kv })
+    }
+
+    fn take(&mut self, key: &str) -> Option<String> {
+        self.kv.iter().position(|(k, _)| k == key).map(|i| self.kv.remove(i).1)
+    }
+
+    fn take_f64(&mut self, key: &str) -> Result<Option<f64>, String> {
+        match self.take(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<f64>()
+                .map(Some)
+                .map_err(|_| format!("{key} expects a number, got {v:?}")),
+        }
+    }
+
+    fn take_usize(&mut self, key: &str) -> Result<Option<usize>, String> {
+        match self.take(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<usize>()
+                .map(Some)
+                .map_err(|_| format!("{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    fn need_usize(&mut self, kind: &str, key: &str) -> Result<usize, String> {
+        self.take_usize(key)?.ok_or_else(|| format!("{kind} requires {key}="))
+    }
+
+    fn need_f64(&mut self, kind: &str, key: &str) -> Result<f64, String> {
+        self.take_f64(key)?.ok_or_else(|| format!("{kind} requires {key}="))
+    }
+
+    fn finish(&self, kind: &str) -> Result<(), String> {
+        if self.kv.is_empty() {
+            Ok(())
+        } else {
+            let keys: Vec<&str> = self.kv.iter().map(|(k, _)| k.as_str()).collect();
+            Err(format!("unknown key(s) for {kind}: {}", keys.join(", ")))
+        }
+    }
+}
+
+fn parse_event(part: &str) -> Result<FaultEvent, String> {
+    let (kind, tail) = part.split_once(':').unwrap_or((part, ""));
+    let mut p = Params::parse(tail)?;
+    let positive = |kind: &str, key: &str, v: f64| -> Result<f64, String> {
+        if v > 0.0 && v.is_finite() {
+            Ok(v)
+        } else {
+            Err(format!("{kind}: {key} must be a positive finite number, got {v}"))
+        }
+    };
+    let ev = match kind {
+        "slow" => FaultEvent::Slow {
+            device: p.need_usize(kind, "dev")?,
+            factor: positive(kind, "x", p.need_f64(kind, "x")?)?,
+            from: p.take_usize("from")?.unwrap_or(0),
+            until: p.take_usize("until")?,
+        },
+        "stall" => FaultEvent::Stall {
+            device: p.need_usize(kind, "dev")?,
+            at: p.need_usize(kind, "at")?,
+            steps: p.take_usize("steps")?.unwrap_or(1).max(1),
+        },
+        "fail" => FaultEvent::Fail {
+            device: p.need_usize(kind, "dev")?,
+            at: p.take_usize("at")?.unwrap_or(0),
+        },
+        "recover" => FaultEvent::Recover {
+            device: p.need_usize(kind, "dev")?,
+            at: p.need_usize(kind, "at")?,
+        },
+        "link" => {
+            let factor = positive(kind, "x", p.need_f64(kind, "x")?)?;
+            if factor < 1.0 {
+                // PoolState documents link_factor >= 1.0 and pricing
+                // treats sub-1 factors as nominal; accepting them would
+                // silently run a different experiment than reported.
+                return Err(format!("link: x must be >= 1 (degradation factor), got {factor}"));
+            }
+            FaultEvent::Link {
+                factor,
+                from: p.take_usize("from")?.unwrap_or(0),
+                until: p.take_usize("until")?,
+            }
+        }
+        "jitter" => FaultEvent::Jitter {
+            amp: positive(kind, "amp", p.need_f64(kind, "amp")?)?,
+            seed: p.take_usize("seed")?.unwrap_or(0) as u64,
+            from: p.take_usize("from")?.unwrap_or(0),
+            until: p.take_usize("until")?,
+        },
+        other => {
+            return Err(format!(
+                "unknown fault kind {other:?} (known: slow, stall, fail, recover, link, jitter)"
+            ))
+        }
+    };
+    p.finish(kind)?;
+    Ok(ev)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base(n: usize) -> PoolState {
+        PoolState::healthy(n)
+    }
+
+    #[test]
+    fn spec_round_trips() {
+        let spec = "slow:dev=3,x=4,from=8,until=32;stall:dev=1,at=5,steps=3;\
+                    fail:dev=2,at=10;recover:dev=2,at=30;link:x=2;jitter:amp=0.2,seed=7";
+        let plan = FaultPlan::parse(spec).unwrap();
+        assert_eq!(plan.events.len(), 6);
+        let canon = plan.spec();
+        let plan2 = FaultPlan::parse(&canon).unwrap();
+        assert_eq!(plan, plan2, "canonical spec must round-trip");
+        assert_eq!(plan2.spec(), canon, "spec is a fixed point");
+    }
+
+    #[test]
+    fn errors_are_loud() {
+        assert!(FaultPlan::parse("").is_err());
+        assert!(FaultPlan::parse("meteor:dev=1").unwrap_err().contains("unknown fault kind"));
+        assert!(FaultPlan::parse("slow:dev=1").unwrap_err().contains("requires x="));
+        assert!(FaultPlan::parse("slow:x=4").unwrap_err().contains("requires dev="));
+        assert!(FaultPlan::parse("slow:dev=1,x=4,frob=2").unwrap_err().contains("unknown key"));
+        assert!(FaultPlan::parse("slow:dev=1,x=0").unwrap_err().contains("positive"));
+        assert!(FaultPlan::parse("slow:dev=1,x").unwrap_err().contains("key=value"));
+        assert!(
+            FaultPlan::parse("link:x=0.5").unwrap_err().contains("must be >= 1"),
+            "sub-1 link factors would silently price as healthy links"
+        );
+    }
+
+    #[test]
+    fn slowdown_window_applies() {
+        let plan = FaultPlan::parse("slow:dev=0,x=4,from=2,until=4").unwrap();
+        assert!(!plan.state_at(0, &base(2)).is_degraded());
+        assert!(!plan.state_at(1, &base(2)).is_degraded());
+        assert_eq!(plan.state_at(2, &base(2)).devices[0].speed, 0.25);
+        assert_eq!(plan.state_at(3, &base(2)).devices[0].speed, 0.25);
+        assert!(!plan.state_at(4, &base(2)).is_degraded(), "until is exclusive");
+    }
+
+    #[test]
+    fn stall_is_transient_death() {
+        let plan = FaultPlan::parse("stall:dev=1,at=3,steps=2").unwrap();
+        assert!(plan.state_at(2, &base(4)).devices[1].alive);
+        assert!(!plan.state_at(3, &base(4)).devices[1].alive);
+        assert!(!plan.state_at(4, &base(4)).devices[1].alive);
+        assert!(plan.state_at(5, &base(4)).devices[1].alive, "comes back on its own");
+    }
+
+    #[test]
+    fn fail_then_recover() {
+        let plan = FaultPlan::parse("fail:dev=2,at=5;recover:dev=2,at=9").unwrap();
+        assert!(plan.state_at(4, &base(4)).devices[2].alive);
+        for s in 5..9 {
+            assert!(!plan.state_at(s, &base(4)).devices[2].alive, "step {s}");
+        }
+        assert!(plan.state_at(9, &base(4)).devices[2].alive);
+        assert_eq!(plan.newly_dead(5, &base(4)), vec![2]);
+        assert!(plan.newly_dead(6, &base(4)).is_empty());
+        assert!(plan.newly_dead(9, &base(4)).is_empty());
+    }
+
+    #[test]
+    fn link_degradation_compounds() {
+        let plan = FaultPlan::parse("link:x=2;link:x=3,from=4").unwrap();
+        assert_eq!(plan.state_at(0, &base(2)).link_factor, 2.0);
+        assert_eq!(plan.state_at(4, &base(2)).link_factor, 6.0);
+    }
+
+    #[test]
+    fn jitter_is_deterministic_and_bounded() {
+        let plan = FaultPlan::parse("jitter:amp=0.2,seed=7").unwrap();
+        let a = plan.state_at(3, &base(8));
+        let b = plan.state_at(3, &base(8));
+        assert_eq!(a, b, "same (plan, step, base) must give the same pool");
+        let other_step = plan.state_at(4, &base(8));
+        assert_ne!(a, other_step, "noise varies across steps");
+        for d in &a.devices {
+            assert!(d.speed >= 0.8 - 1e-12 && d.speed <= 1.2 + 1e-12, "{}", d.speed);
+            assert!(d.alive);
+        }
+    }
+
+    #[test]
+    fn events_compose_over_heterogeneous_base() {
+        let het = PoolState::from_speeds(&[1.0, 0.5], 2);
+        let plan = FaultPlan::parse("slow:dev=1,x=2").unwrap();
+        let pool = plan.state_at(0, &het);
+        assert_eq!(pool.devices[0].speed, 1.0);
+        assert_eq!(pool.devices[1].speed, 0.25, "fault stacks on the base speed");
+    }
+
+    #[test]
+    fn validate_bounds_device_indices() {
+        let plan = FaultPlan::parse("fail:dev=9,at=0").unwrap();
+        assert!(plan.validate(8).is_err());
+        assert!(plan.validate(10).is_ok());
+        assert!(FaultPlan::none().validate(1).is_ok());
+    }
+
+    #[test]
+    fn toml_and_resolve() {
+        let plan =
+            FaultPlan::from_toml("[chaos]\nfaults = \"slow:dev=0,x=4;fail:dev=3,at=16\"\n")
+                .unwrap();
+        assert_eq!(plan.events.len(), 2);
+        assert!(FaultPlan::from_toml("[chaos]\n").is_err());
+        let direct = FaultPlan::resolve("slow:dev=0,x=4").unwrap();
+        assert_eq!(direct.events.len(), 1);
+        assert!(FaultPlan::resolve("bogus").is_err());
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(FaultPlan::none().label(), "no faults");
+        let plan = FaultPlan::parse("fail:dev=1,at=2").unwrap();
+        assert_eq!(plan.label(), "fail:dev=1,at=2");
+    }
+}

@@ -1,0 +1,158 @@
+//! Per-device health/speed view of the pool at one step.
+
+/// One device's state: relative speed multiplier and liveness.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DeviceState {
+    /// Relative throughput multiplier: 1.0 = nominal, 0.25 = a 4x
+    /// straggler. Pricing divides compute time by this.
+    pub speed: f64,
+    /// Dead devices are unschedulable: no expert compute, no weight
+    /// residency. Their routed tokens must go elsewhere.
+    pub alive: bool,
+}
+
+impl DeviceState {
+    pub fn healthy() -> DeviceState {
+        DeviceState { speed: 1.0, alive: true }
+    }
+
+    /// Speed usable for planning/pricing: 0.0 when dead.
+    pub fn effective_speed(&self) -> f64 {
+        if self.alive {
+            self.speed
+        } else {
+            0.0
+        }
+    }
+}
+
+impl Default for DeviceState {
+    fn default() -> DeviceState {
+        DeviceState::healthy()
+    }
+}
+
+/// The whole pool at one step: per-device states plus a global
+/// link-bandwidth degradation factor (both bandwidth tiers are divided by
+/// it — the wire got slower, not the endpoints).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PoolState {
+    pub devices: Vec<DeviceState>,
+    /// >= 1.0; bandwidths are divided by this (1.0 = nominal).
+    pub link_factor: f64,
+}
+
+impl PoolState {
+    /// All devices nominal and alive.
+    pub fn healthy(devices: usize) -> PoolState {
+        PoolState { devices: vec![DeviceState::healthy(); devices], link_factor: 1.0 }
+    }
+
+    /// Heterogeneous but healthy pool (mixed-generation presets). An
+    /// empty slice means a homogeneous pool of `devices` devices.
+    pub fn from_speeds(speeds: &[f64], devices: usize) -> PoolState {
+        if speeds.is_empty() {
+            return PoolState::healthy(devices);
+        }
+        assert_eq!(speeds.len(), devices, "speed profile must cover every device");
+        PoolState {
+            devices: speeds.iter().map(|&s| DeviceState { speed: s, alive: true }).collect(),
+            link_factor: 1.0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    pub fn alive_count(&self) -> usize {
+        self.devices.iter().filter(|d| d.alive).count()
+    }
+
+    /// True when anything deviates from the homogeneous-healthy
+    /// assumption — the fast-path check the engine uses to keep pricing
+    /// bit-identical to the pre-chaos code when nothing is injected.
+    pub fn is_degraded(&self) -> bool {
+        self.link_factor != 1.0
+            || self.devices.iter().any(|d| !d.alive || d.speed != 1.0)
+    }
+
+    /// Per-device effective speeds (0.0 for dead devices).
+    pub fn effective_speeds(&self) -> Vec<f64> {
+        self.devices.iter().map(|d| d.effective_speed()).collect()
+    }
+
+    /// Short human-readable summary for table titles and reports.
+    pub fn label(&self) -> String {
+        if !self.is_degraded() {
+            return format!("healthy x{}", self.len());
+        }
+        let alive = self.alive_count();
+        let min_speed = self
+            .devices
+            .iter()
+            .filter(|d| d.alive)
+            .map(|d| d.speed)
+            .fold(f64::INFINITY, f64::min);
+        let mut s = format!("{alive}/{} alive", self.len());
+        if min_speed.is_finite() && min_speed != 1.0 {
+            s.push_str(&format!(", min speed {min_speed:.2}"));
+        }
+        if self.link_factor != 1.0 {
+            s.push_str(&format!(", link /{:.2}", self.link_factor));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn healthy_pool_is_not_degraded() {
+        let p = PoolState::healthy(8);
+        assert_eq!(p.len(), 8);
+        assert_eq!(p.alive_count(), 8);
+        assert!(!p.is_degraded());
+        assert_eq!(p.label(), "healthy x8");
+        assert_eq!(p.effective_speeds(), vec![1.0; 8]);
+    }
+
+    #[test]
+    fn speeds_deaths_and_links_degrade() {
+        let mut p = PoolState::healthy(4);
+        assert!(!p.is_degraded());
+        p.devices[1].speed = 0.25;
+        assert!(p.is_degraded());
+        p.devices[1].speed = 1.0;
+        p.devices[2].alive = false;
+        assert!(p.is_degraded());
+        assert_eq!(p.alive_count(), 3);
+        assert_eq!(p.devices[2].effective_speed(), 0.0);
+        p.devices[2].alive = true;
+        p.link_factor = 2.0;
+        assert!(p.is_degraded());
+    }
+
+    #[test]
+    fn from_speeds_builds_heterogeneous_pool() {
+        let p = PoolState::from_speeds(&[1.0, 1.0, 0.33, 0.33], 4);
+        assert!(p.is_degraded());
+        assert_eq!(p.alive_count(), 4);
+        assert_eq!(p.effective_speeds(), vec![1.0, 1.0, 0.33, 0.33]);
+        assert!(p.label().contains("min speed 0.33"), "{}", p.label());
+        // empty profile = homogeneous
+        assert!(!PoolState::from_speeds(&[], 4).is_degraded());
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_speed_profile_rejected() {
+        PoolState::from_speeds(&[1.0, 0.5], 4);
+    }
+}

@@ -43,6 +43,11 @@ pub enum SystemPreset {
     /// much tighter HBM ceiling, so the latency/memory Pareto front the
     /// autotuner emits looks genuinely different per profile.
     H100x8,
+    /// Mixed-generation single node: 4x H100 plus 4x A100-80G on the same
+    /// fabric. The A100s sustain roughly a third of the H100's bf16 GEMM
+    /// throughput, so the pool is *structurally* imbalanced before any
+    /// routing skew — the heterogeneity case the chaos layer plans for.
+    MixedH100A100,
     /// Virtual-device simulation calibrated to this repo's CPU.
     CpuSim8,
     /// Small CPU sim for tests (4 devices).
@@ -50,10 +55,11 @@ pub enum SystemPreset {
 }
 
 impl SystemPreset {
-    pub const ALL: [SystemPreset; 5] = [
+    pub const ALL: [SystemPreset; 6] = [
         SystemPreset::H200x8,
         SystemPreset::H200x16TwoNodes,
         SystemPreset::H100x8,
+        SystemPreset::MixedH100A100,
         SystemPreset::CpuSim8,
         SystemPreset::CpuSim4,
     ];
@@ -63,6 +69,7 @@ impl SystemPreset {
             SystemPreset::H200x8 => "h200x8",
             SystemPreset::H200x16TwoNodes => "h200x16-2node",
             SystemPreset::H100x8 => "h100x8",
+            SystemPreset::MixedH100A100 => "mixed-h100-a100",
             SystemPreset::CpuSim8 => "cpusim8",
             SystemPreset::CpuSim4 => "cpusim4",
         }
@@ -85,6 +92,13 @@ pub struct SystemConfig {
     pub mem_capacity_bytes: u64,
     pub gemm: GemmCostParams,
     pub comm: CommCostParams,
+    /// Per-device relative speed multipliers for mixed-generation pools
+    /// (1.0 = the `gemm` parameters as stated). Empty = homogeneous. The
+    /// engine folds these into its [`PoolState`] view, so planners and
+    /// pricing see them exactly like injected slowdowns.
+    ///
+    /// [`PoolState`]: crate::chaos::PoolState
+    pub device_speeds: Vec<f64>,
 }
 
 impl SystemConfig {
@@ -109,6 +123,7 @@ impl SystemConfig {
                     intra_node_bw: 450e9,
                     inter_node_bw: 50e9,
                 },
+                device_speeds: Vec::new(),
             },
             SystemPreset::H200x16TwoNodes => {
                 let mut c = SystemConfig::preset(SystemPreset::H200x8);
@@ -123,6 +138,15 @@ impl SystemConfig {
                 c.mem_capacity_bytes = 64 * (1 << 30);
                 // ~990 TFLOPs bf16 dense peak at lower sustained clocks.
                 c.gemm.peak_flops = 560e12;
+                c
+            }
+            SystemPreset::MixedH100A100 => {
+                let mut c = SystemConfig::preset(SystemPreset::H100x8);
+                c.name = p.name().into();
+                // A100-80G: ~312 TFLOPs bf16 dense peak vs the H100's
+                // ~990 — about a third of the sustained throughput the
+                // `gemm` parameters describe. Same 80 GB HBM per card.
+                c.device_speeds = vec![1.0, 1.0, 1.0, 1.0, 0.33, 0.33, 0.33, 0.33];
                 c
             }
             SystemPreset::CpuSim8 => SystemConfig {
@@ -145,6 +169,7 @@ impl SystemConfig {
                     intra_node_bw: 8e9,
                     inter_node_bw: 2e9,
                 },
+                device_speeds: Vec::new(),
             },
             SystemPreset::CpuSim4 => {
                 let mut c = SystemConfig::preset(SystemPreset::CpuSim8);
@@ -174,6 +199,18 @@ impl SystemConfig {
         if self.gemm.peak_flops <= 0.0 || self.comm.intra_node_bw <= 0.0 {
             return Err("throughput parameters must be positive".into());
         }
+        if !self.device_speeds.is_empty() {
+            if self.device_speeds.len() != self.devices {
+                return Err(format!(
+                    "device_speeds has {} entries for {} devices",
+                    self.device_speeds.len(),
+                    self.devices
+                ));
+            }
+            if self.device_speeds.iter().any(|&s| !s.is_finite() || s <= 0.0) {
+                return Err("device_speeds must all be positive finite".into());
+            }
+        }
         Ok(())
     }
 
@@ -183,6 +220,11 @@ impl SystemConfig {
         c.devices = devices;
         if devices <= c.devices_per_node {
             c.devices_per_node = devices;
+        }
+        if !c.device_speeds.is_empty() {
+            // Truncate or pad with nominal speed so the profile always
+            // covers the new pool.
+            c.device_speeds.resize(devices, 1.0);
         }
         c
     }
@@ -221,12 +263,34 @@ mod tests {
     }
 
     #[test]
+    fn mixed_preset_is_heterogeneous_h100_pool() {
+        let mixed = SystemConfig::preset(SystemPreset::MixedH100A100);
+        let h100 = SystemConfig::preset(SystemPreset::H100x8);
+        assert_eq!(mixed.device_speeds.len(), mixed.devices);
+        assert_eq!(&mixed.device_speeds[..4], &[1.0; 4], "H100 half at nominal speed");
+        assert!(mixed.device_speeds[4..].iter().all(|&s| s < 0.5), "A100 half much slower");
+        assert_eq!(mixed.gemm, h100.gemm, "nominal GEMM params are the H100's");
+        assert_eq!(mixed.mem_capacity_bytes, h100.mem_capacity_bytes);
+        // Homogeneous presets carry no speed profile.
+        assert!(h100.device_speeds.is_empty());
+        // Resizing keeps the profile covering every device.
+        let shrunk = mixed.with_devices(4);
+        shrunk.validate().unwrap();
+        assert_eq!(shrunk.device_speeds, vec![1.0; 4]);
+    }
+
+    #[test]
     fn invalid_rejected() {
         let mut s = SystemConfig::preset(SystemPreset::CpuSim8);
         s.devices = 6; // not divisible by 8 per node
         assert!(s.validate().is_err());
         s = SystemConfig::preset(SystemPreset::CpuSim8);
         s.devices = 0;
+        assert!(s.validate().is_err());
+        s = SystemConfig::preset(SystemPreset::CpuSim8);
+        s.device_speeds = vec![1.0; 3]; // wrong arity
+        assert!(s.validate().is_err());
+        s.device_speeds = vec![1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 0.0]; // zero speed
         assert!(s.validate().is_err());
     }
 

@@ -9,7 +9,7 @@
 //! trade-off LLEP avoids.
 
 use crate::exec::{Engine, StepReport};
-use crate::planner::PlannerKind;
+use crate::planner::Planner;
 use crate::routing::LoadMatrix;
 
 /// Result of running one logical batch under the splitting policy.
@@ -33,10 +33,12 @@ impl SplitOutcome {
     }
 }
 
-/// The batch-halving policy.
+/// The batch-halving policy. Runs any trait [`Planner`] — the last
+/// enum-dispatch call site migrated to `&dyn Planner`, so spec-parsed and
+/// decorated planners work here too.
 pub struct BatchSplitPolicy {
     pub engine: Engine,
-    pub planner: PlannerKind,
+    pub planner: Box<dyn Planner>,
     /// Refuse to split below this many tokens per device (avoids
     /// degenerate empty sub-batches).
     pub min_tokens_per_device: u64,
@@ -45,7 +47,7 @@ pub struct BatchSplitPolicy {
 }
 
 impl BatchSplitPolicy {
-    pub fn new(engine: Engine, planner: PlannerKind) -> BatchSplitPolicy {
+    pub fn new(engine: Engine, planner: Box<dyn Planner>) -> BatchSplitPolicy {
         BatchSplitPolicy { engine, planner, min_tokens_per_device: 64, max_splits: 6 }
     }
 
@@ -57,7 +59,7 @@ impl BatchSplitPolicy {
     }
 
     fn run_rec(&self, lm: &LoadMatrix, depth: usize, outcome: &mut SplitOutcome) {
-        let report = self.engine.run_step_loads(lm, &self.planner);
+        let report = self.engine.run_step_loads(lm, &*self.planner);
         let too_small = lm
             .tokens_per_device()
             .iter()
@@ -104,6 +106,7 @@ pub fn split_loads(lm: &LoadMatrix) -> (LoadMatrix, LoadMatrix) {
 mod tests {
     use super::*;
     use crate::config::{ModelConfig, ModelPreset, SystemConfig, SystemPreset};
+    use crate::planner::{parse_planner, PlannerKind};
     use crate::routing::Scenario;
     use crate::util::rng::Rng;
 
@@ -137,7 +140,7 @@ mod tests {
         // Sanity: whole-batch EP OOMs.
         assert!(e.run_step_loads(&lm, &PlannerKind::StandardEp).oom);
 
-        let policy = BatchSplitPolicy::new(e.clone(), PlannerKind::StandardEp);
+        let policy = BatchSplitPolicy::new(e.clone(), PlannerKind::StandardEp.boxed());
         let outcome = policy.run(&lm);
         assert!(outcome.splits > 0, "must have split");
         assert!(outcome.steps.iter().all(|s| !s.oom), "all sub-steps fit");
@@ -158,10 +161,22 @@ mod tests {
     fn no_split_when_memory_fits() {
         let e = tight_engine();
         let lm = hot_loads(&e, 2048, 3);
-        let policy = BatchSplitPolicy::new(e, PlannerKind::StandardEp);
+        let policy = BatchSplitPolicy::new(e, PlannerKind::StandardEp.boxed());
         let outcome = policy.run(&lm);
         assert_eq!(outcome.splits, 0);
         assert_eq!(outcome.steps.len(), 1);
+    }
+
+    #[test]
+    fn spec_parsed_planner_runs_the_policy() {
+        // The migration off the PlannerKind enum means any registry spec
+        // drives the policy directly.
+        let e = tight_engine();
+        let lm = hot_loads(&e, 2048, 7);
+        let policy = BatchSplitPolicy::new(e, parse_planner("chunked:c=2048").unwrap());
+        let outcome = policy.run(&lm);
+        assert!(!outcome.steps.is_empty());
+        assert!(outcome.steps[0].planner.contains("ChunkedEP"));
     }
 
     #[test]
@@ -173,7 +188,7 @@ mod tests {
             Engine::modeled(model, sys)
         };
         let lm = hot_loads(&e, 8192, 4);
-        let policy = BatchSplitPolicy::new(e, PlannerKind::StandardEp);
+        let policy = BatchSplitPolicy::new(e, PlannerKind::StandardEp.boxed());
         let outcome = policy.run(&lm);
         // bounded by max_splits and min tokens; still returns reports
         assert!(!outcome.steps.is_empty());

@@ -10,7 +10,8 @@ mod serve;
 
 pub use mitigation::{split_loads, BatchSplitPolicy, SplitOutcome};
 pub use serve::{
-    ContinuousBatchSim, ContinuousReport, GenRequest, Request, ServeReport, ServeSim, TokenLedger,
+    ChaosStats, ContinuousBatchSim, ContinuousReport, GenRequest, Request, ServeReport, ServeSim,
+    TokenLedger,
 };
 
 use crate::exec::{Engine, StepReport};

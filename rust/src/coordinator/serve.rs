@@ -22,6 +22,7 @@
 //! [`TokenLedger`] whose admitted and priced sides must agree (asserted
 //! by tests).
 
+use crate::chaos::{FaultPlan, PoolState};
 use crate::exec::{Engine, ModelStepReport};
 use crate::planner::{CacheStats, Planner, PlannerKind};
 use crate::routing::{DepthProfile, Scenario};
@@ -47,6 +48,162 @@ impl TokenLedger {
     /// True when every admitted token was priced exactly once.
     pub fn is_exact(&self) -> bool {
         self.admitted == self.priced
+    }
+}
+
+/// Chaos accounting for one serving run (all zero without a fault plan).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ChaosStats {
+    /// Engine steps priced under a degraded pool view.
+    pub fault_steps: usize,
+    /// Devices observed transitioning alive -> dead during the run.
+    pub failures: usize,
+    /// Devices observed transitioning dead -> alive (elastic scale-up).
+    pub recoveries: usize,
+    /// Aborted in-flight steps whose batch was requeued after a failure.
+    pub requeues: usize,
+    /// Tokens those aborts requeued. The [`TokenLedger`] still counts
+    /// every admitted token exactly once — only the successful retry
+    /// prices them.
+    pub requeued_tokens: u64,
+    /// Virtual time burned by aborted attempts.
+    pub wasted_s: f64,
+    /// Max aborted attempts observed before a successful (elastically
+    /// replanned) step completed — measured per failure event, so a
+    /// regression that makes recovery loop shows up here. The
+    /// bounded-recovery contract (`<= 1` under the current single-abort
+    /// model) is asserted by `rust/tests/chaos.rs`.
+    pub max_recovery_steps: usize,
+}
+
+/// Per-step chaos bookkeeping shared by both simulators: resolves the
+/// fault plan into pool views, prices + discards the in-flight attempt a
+/// fresh failure aborts, and hands the step an engine view of the
+/// degraded pool.
+struct ChaosDriver<'a> {
+    plan: Option<&'a FaultPlan>,
+    base: PoolState,
+    stats: ChaosStats,
+    /// Aborted attempts since the last successful step (resolved into
+    /// `stats.max_recovery_steps` when a step completes).
+    pending_aborts: usize,
+    /// Cached engine view for the current degraded pool. Permanent
+    /// degradations (a straggler, a failure, preset speeds under a fault
+    /// plan) keep the same pool for many consecutive steps — rebuilding
+    /// the engine (clone + topology re-derivation) per step would be
+    /// pure waste.
+    view: Option<(PoolState, Engine)>,
+}
+
+impl<'a> ChaosDriver<'a> {
+    fn new(engine: &Engine, plan: Option<&'a FaultPlan>) -> Result<ChaosDriver<'a>, String> {
+        if let Some(p) = plan {
+            p.validate(engine.system.devices)?;
+        }
+        Ok(ChaosDriver {
+            plan,
+            base: engine.pool.clone(),
+            stats: ChaosStats::default(),
+            pending_aborts: 0,
+            view: None,
+        })
+    }
+
+    /// Engine to price the current step with (set by
+    /// [`begin_step`](Self::begin_step)): the cached degraded view, or
+    /// `base` while the pool is healthy.
+    fn engine<'b>(&'b self, base: &'b Engine) -> &'b Engine {
+        self.view.as_ref().map(|(_, e)| e).unwrap_or(base)
+    }
+
+    /// Advance to engine step `step` (called once per step, before the
+    /// step is priced). When a device died since the previous step, the
+    /// attempt that was in flight is priced against the *old* pool,
+    /// charged to the clock as waste, and the batch requeues — the
+    /// caller then prices the elastically replanned step against
+    /// [`engine`](Self::engine).
+    #[allow(clippy::too_many_arguments)]
+    fn begin_step(
+        &mut self,
+        step: usize,
+        engine: &Engine,
+        profile: &DepthProfile,
+        planner: &dyn Planner,
+        batch_tokens: usize,
+        rng: &mut Rng,
+        clock: &mut f64,
+    ) -> Result<(), String> {
+        let Some(plan) = self.plan else { return Ok(()) };
+        let pool = plan.state_at(step, &self.base);
+        if pool.alive_count() == 0 {
+            return Err(format!(
+                "chaos: no alive devices left at step {step} ({}) — the pool cannot serve",
+                pool.label()
+            ));
+        }
+        let prev = if step == 0 { self.base.clone() } else { plan.state_at(step - 1, &self.base) };
+        let newly_dead = (0..pool.len())
+            .filter(|&d| prev.devices[d].alive && !pool.devices[d].alive)
+            .count();
+        self.stats.recoveries += (0..pool.len())
+            .filter(|&d| !prev.devices[d].alive && pool.devices[d].alive)
+            .count();
+        if newly_dead > 0 {
+            self.stats.failures += newly_dead;
+            // The step in flight at the failure was planned against the
+            // previous pool; its work is lost and the batch requeues. A
+            // failure already active at step 0 has no in-flight work to
+            // abort — serving simply starts on the degraded pool.
+            if step > 0 {
+                let holder: Engine;
+                // The cached view still describes the previous step here.
+                let attempt_engine: &Engine = match &self.view {
+                    Some((p, e)) if *p == prev => e,
+                    _ if prev.is_degraded() => {
+                        holder = engine.for_pool(prev);
+                        &holder
+                    }
+                    _ => engine,
+                };
+                let attempt = price_step(attempt_engine, profile, planner, batch_tokens, rng);
+                *clock += attempt.latency_s;
+                self.stats.wasted_s += attempt.latency_s;
+                self.stats.requeues += 1;
+                self.stats.requeued_tokens += batch_tokens as u64;
+                self.pending_aborts += 1;
+            }
+        }
+        if pool.is_degraded() {
+            self.stats.fault_steps += 1;
+            let reusable = matches!(&self.view, Some((p, _)) if *p == pool);
+            if !reusable {
+                let view_engine = engine.for_pool(pool.clone());
+                self.view = Some((pool, view_engine));
+            }
+        } else {
+            self.view = None;
+        }
+        Ok(())
+    }
+
+    /// A stranded step is fatal: the planner cannot adapt to this pool.
+    /// A successful step resolves any pending aborts into the measured
+    /// recovery bound.
+    fn check_step(
+        &mut self,
+        step: usize,
+        planner_label: &str,
+        report: &ModelStepReport,
+    ) -> Result<(), String> {
+        if report.stranded {
+            return Err(format!(
+                "chaos: planner {planner_label} left expert work on a dead device at step \
+                 {step}; static placements cannot adapt — use a pool-aware planner (llep, lpt)"
+            ));
+        }
+        self.stats.max_recovery_steps = self.stats.max_recovery_steps.max(self.pending_aborts);
+        self.pending_aborts = 0;
+        Ok(())
     }
 }
 
@@ -100,6 +257,8 @@ pub struct ServeReport {
     pub plan_cache: CacheStats,
     /// Per-step planning wall time (sum across the step's layers).
     pub plan_time: Summary,
+    /// Fault-injection accounting (all zero without a fault plan).
+    pub chaos: ChaosStats,
 }
 
 impl ServeReport {
@@ -120,6 +279,8 @@ pub struct ServeSim {
     pub profile: DepthProfile,
     /// Max tokens per device per batch.
     pub max_tokens_per_device: usize,
+    /// Per-step fault schedule (None = always-healthy pool).
+    pub faults: Option<FaultPlan>,
 }
 
 impl ServeSim {
@@ -145,12 +306,21 @@ impl ServeSim {
             engine,
             planner,
             max_tokens_per_device,
+            faults: None,
         }
     }
 
     /// Replace the depth profile (e.g. [`DepthProfile::varying`]).
     pub fn with_profile(mut self, profile: DepthProfile) -> ServeSim {
         self.profile = profile;
+        self
+    }
+
+    /// Inject a fault schedule: each engine step `k` runs on
+    /// `faults.state_at(k, ...)`. Use [`try_run`](Self::try_run) to
+    /// observe unrecoverable pools as errors instead of panics.
+    pub fn with_faults(mut self, faults: FaultPlan) -> ServeSim {
+        self.faults = Some(faults);
         self
     }
 
@@ -171,8 +341,17 @@ impl ServeSim {
             .collect()
     }
 
-    /// Run the simulation; requests must be sorted by arrival.
+    /// Run the simulation; requests must be sorted by arrival. Panics if
+    /// the fault plan makes the pool unrecoverable — use
+    /// [`try_run`](Self::try_run) when that is an expected outcome.
     pub fn run(&self, requests: &[Request], rng: &mut Rng) -> ServeReport {
+        self.try_run(requests, rng).expect("serve simulation failed")
+    }
+
+    /// Run the simulation, surfacing chaos-unrecoverable pools (every
+    /// device dead, or a planner that cannot adapt to a failure) as
+    /// errors.
+    pub fn try_run(&self, requests: &[Request], rng: &mut Rng) -> Result<ServeReport, String> {
         let devices = self.engine.system.devices;
         let budget = self.max_tokens_per_device * devices;
         let mut clock = 0.0f64;
@@ -185,6 +364,7 @@ impl ServeSim {
         let mut plan_cache = CacheStats::default();
         let mut plan_times: Vec<f64> = Vec::new();
         let mut queue: VecDeque<&Request> = VecDeque::new();
+        let mut chaos = ChaosDriver::new(&self.engine, self.faults.as_ref())?;
 
         while next < requests.len() || !queue.is_empty() {
             // admit arrivals up to the clock; if idle, jump to next arrival
@@ -210,9 +390,26 @@ impl ServeSim {
             if batch.is_empty() {
                 continue;
             }
+            // chaos: resolve this step's pool view; a fresh failure
+            // aborts + requeues the in-flight attempt first
+            chaos.begin_step(
+                batches,
+                &self.engine,
+                &self.profile,
+                &*self.planner,
+                batch_tokens,
+                rng,
+                &mut clock,
+            )?;
             // price a full-model step over the exact batch total
-            let report =
-                price_step(&self.engine, &self.profile, &*self.planner, batch_tokens, rng);
+            let report = price_step(
+                chaos.engine(&self.engine),
+                &self.profile,
+                &*self.planner,
+                batch_tokens,
+                rng,
+            );
+            chaos.check_step(batches, &report.planner, &report)?;
             clock += report.latency_s;
             batches += 1;
             tokens.add(batch_tokens as u64, report.tokens);
@@ -227,7 +424,7 @@ impl ServeSim {
             }
         }
 
-        ServeReport {
+        Ok(ServeReport {
             planner: self.planner.label(),
             completed: latencies.len(),
             makespan_s: clock,
@@ -239,7 +436,8 @@ impl ServeSim {
             layers: self.profile.num_layers(),
             plan_cache,
             plan_time: Summary::of(&plan_times),
-        }
+            chaos: chaos.stats,
+        })
     }
 }
 
@@ -281,6 +479,8 @@ pub struct ContinuousReport {
     pub plan_cache: CacheStats,
     /// Per-step planning wall time (sum across the step's layers).
     pub plan_time: Summary,
+    /// Fault-injection accounting (all zero without a fault plan).
+    pub chaos: ChaosStats,
 }
 
 /// vLLM-style continuous batching: every engine step batches the newly
@@ -294,6 +494,8 @@ pub struct ContinuousBatchSim {
     pub planner: Box<dyn Planner>,
     pub profile: DepthProfile,
     pub max_prefill_tokens: usize,
+    /// Per-step fault schedule (None = always-healthy pool).
+    pub faults: Option<FaultPlan>,
 }
 
 impl ContinuousBatchSim {
@@ -319,12 +521,21 @@ impl ContinuousBatchSim {
             engine,
             planner,
             max_prefill_tokens,
+            faults: None,
         }
     }
 
     /// Replace the depth profile (e.g. [`DepthProfile::varying`]).
     pub fn with_profile(mut self, profile: DepthProfile) -> ContinuousBatchSim {
         self.profile = profile;
+        self
+    }
+
+    /// Inject a fault schedule: each engine step `k` runs on
+    /// `faults.state_at(k, ...)`. Use [`try_run`](Self::try_run) to
+    /// observe unrecoverable pools as errors instead of panics.
+    pub fn with_faults(mut self, faults: FaultPlan) -> ContinuousBatchSim {
+        self.faults = Some(faults);
         self
     }
 
@@ -350,8 +561,21 @@ impl ContinuousBatchSim {
             .collect()
     }
 
-    /// Run to completion.
+    /// Run to completion. Panics if the fault plan makes the pool
+    /// unrecoverable — use [`try_run`](Self::try_run) when that is an
+    /// expected outcome.
     pub fn run(&self, requests: &[GenRequest], rng: &mut Rng) -> ContinuousReport {
+        self.try_run(requests, rng).expect("continuous-batching simulation failed")
+    }
+
+    /// Run to completion, surfacing chaos-unrecoverable pools (every
+    /// device dead, or a planner that cannot adapt to a failure) as
+    /// errors.
+    pub fn try_run(
+        &self,
+        requests: &[GenRequest],
+        rng: &mut Rng,
+    ) -> Result<ContinuousReport, String> {
         let mut clock = 0.0f64;
         let mut next = 0usize;
         let mut waiting: VecDeque<&GenRequest> = VecDeque::new();
@@ -367,6 +591,7 @@ impl ContinuousBatchSim {
         let mut tokens = TokenLedger::default();
         let mut plan_cache = CacheStats::default();
         let mut plan_times: Vec<f64> = Vec::new();
+        let mut chaos = ChaosDriver::new(&self.engine, self.faults.as_ref())?;
 
         while completed < requests.len() {
             if waiting.is_empty() && active.is_empty() {
@@ -396,9 +621,26 @@ impl ContinuousBatchSim {
             if step_tokens == 0 {
                 continue;
             }
+            // chaos: resolve this step's pool view; a fresh failure
+            // aborts + requeues the in-flight attempt first
+            chaos.begin_step(
+                steps,
+                &self.engine,
+                &self.profile,
+                &*self.planner,
+                step_tokens,
+                rng,
+                &mut clock,
+            )?;
             // full-model step over the exact token total
-            let report =
-                price_step(&self.engine, &self.profile, &*self.planner, step_tokens, rng);
+            let report = price_step(
+                chaos.engine(&self.engine),
+                &self.profile,
+                &*self.planner,
+                step_tokens,
+                rng,
+            );
+            chaos.check_step(steps, &report.planner, &report)?;
             clock += report.latency_s;
             steps += 1;
             fallback_steps += (report.fallback_layers == report.num_layers()) as usize;
@@ -433,7 +675,7 @@ impl ContinuousBatchSim {
             });
         }
 
-        ContinuousReport {
+        Ok(ContinuousReport {
             planner: self.planner.label(),
             completed,
             makespan_s: clock,
@@ -446,7 +688,8 @@ impl ContinuousBatchSim {
             tokens,
             plan_cache,
             plan_time: Summary::of(&plan_times),
-        }
+            chaos: chaos.stats,
+        })
     }
 }
 
@@ -626,6 +869,65 @@ mod tests {
         let ll = continuous(PlannerKind::llep_default()).run(&reqs, &mut Rng::new(15));
         assert_eq!(ll.completed, 8);
         assert!(ll.tpot.n >= 32, "long decode phase");
+    }
+
+    #[test]
+    fn chaos_failure_requeues_without_losing_tokens() {
+        // A permanent failure mid-run: the chaos-aware LLEP serve sim
+        // aborts the in-flight step, replans around the dead device, and
+        // still completes every request with exact token accounting.
+        // 30k-token requests against a 64k batch budget: two per batch,
+        // so 10 requests take 5 engine steps and the failure at step 3
+        // lands mid-run.
+        let reqs: Vec<Request> =
+            (0..10).map(|id| Request { id, arrival_s: 0.0, tokens: 30_000 }).collect();
+        let faults = FaultPlan::parse("fail:dev=2,at=3").unwrap();
+        let s = sim(PlannerKind::llep_default()).with_faults(faults);
+        let r = s.try_run(&reqs, &mut Rng::new(21)).unwrap();
+        assert_eq!(r.completed, 10);
+        assert!(r.tokens.is_exact(), "{:?}", r.tokens);
+        assert_eq!(r.chaos.failures, 1);
+        assert_eq!(r.chaos.requeues, 1);
+        assert!(r.chaos.requeued_tokens > 0);
+        assert!(r.chaos.wasted_s > 0.0);
+        assert!(r.chaos.max_recovery_steps <= 1, "bounded recovery");
+        assert!(r.chaos.fault_steps > 0);
+    }
+
+    #[test]
+    fn chaos_static_ep_cannot_adapt_to_failure() {
+        let reqs: Vec<Request> =
+            (0..10).map(|id| Request { id, arrival_s: 0.0, tokens: 30_000 }).collect();
+        let faults = FaultPlan::parse("fail:dev=0,at=2").unwrap();
+        let s = sim(PlannerKind::StandardEp).with_faults(faults);
+        let err = s.try_run(&reqs, &mut Rng::new(22)).unwrap_err();
+        assert!(err.contains("dead device"), "{err}");
+    }
+
+    #[test]
+    fn chaos_no_faults_report_is_zero() {
+        let mut rng = Rng::new(23);
+        let reqs = ServeSim::poisson_requests(8, 0.001, 64, 256, &mut rng);
+        let r = sim(PlannerKind::llep_default()).run(&reqs, &mut Rng::new(24));
+        assert_eq!(r.chaos, ChaosStats::default());
+    }
+
+    #[test]
+    fn continuous_chaos_stall_recovers_on_its_own() {
+        // A transient stall kills a device for two steps; the chaos-aware
+        // planner routes around it and the device rejoins.
+        let reqs = vec![
+            GenRequest { id: 0, arrival_s: 0.0, prompt_tokens: 512, decode_steps: 12 },
+            GenRequest { id: 1, arrival_s: 0.0, prompt_tokens: 512, decode_steps: 12 },
+        ];
+        let faults = FaultPlan::parse("stall:dev=1,at=2,steps=2").unwrap();
+        let c = continuous(PlannerKind::llep_default()).with_faults(faults);
+        let r = c.try_run(&reqs, &mut Rng::new(25)).unwrap();
+        assert_eq!(r.completed, 2);
+        assert!(r.tokens.is_exact(), "{:?}", r.tokens);
+        assert_eq!(r.chaos.failures, 1);
+        assert_eq!(r.chaos.recoveries, 1, "stall ends on its own");
+        assert_eq!(r.chaos.fault_steps, 2);
     }
 
     #[test]

@@ -36,6 +36,7 @@ pub use model::{LayerStep, ModelStepReport};
 pub use pricing::{price_plan, PhaseTimes};
 pub use real::{run_backward_real, run_step_real, NativeCompute, RealStep};
 
+use crate::chaos::PoolState;
 use crate::config::{ModelConfig, SystemConfig};
 use crate::costmodel::{CommCostModel, GemmCostModel, MemoryModel};
 use crate::moe::ExpertWeights;
@@ -82,6 +83,11 @@ pub struct StepReport {
     pub weight_transfers: usize,
     /// True when some device exceeded its memory capacity.
     pub oom: bool,
+    /// True when the plan left expert work (or a weight destination) on a
+    /// dead device: the step cannot actually complete on this pool. Only
+    /// a pool-aware planner avoids this under failures — static EP
+    /// cannot, which is the chaos layer's point.
+    pub stranded: bool,
     /// True when the lambda guard reverted to standard EP.
     pub fallback_ep: bool,
     /// Total tokens processed this step.
@@ -154,6 +160,13 @@ pub struct Engine {
     /// When set, `T_plan` is charged from this model instead of measured
     /// planner wall time, making pricing fully deterministic.
     pub plan_cost: Option<PlanCostModel>,
+    /// Per-device health/speed view (the chaos layer). Defaults to the
+    /// system's nominal pool — homogeneous-healthy unless the preset
+    /// declares `device_speeds`. While the pool is degraded, planners get
+    /// it via [`Planner::plan_with_pool`] and pricing divides device
+    /// compute time by effective speed; a healthy pool takes the exact
+    /// pre-chaos code paths (bit-identical pricing).
+    pub pool: PoolState,
 }
 
 impl Engine {
@@ -169,12 +182,34 @@ impl Engine {
             gemm: GemmCostModel::from_system(&system),
             comm: CommCostModel::new(topo.clone()),
             mem: MemoryModel::from_model(&model),
+            pool: PoolState::from_speeds(&system.device_speeds, system.devices),
             model,
             system,
             topo,
             overlap_weights: false,
             plan_cost: None,
         }
+    }
+
+    /// Install a pool view (chaos layer): the per-device speeds/liveness
+    /// plus the link-degradation factor, which is folded into the
+    /// topology's bandwidth tiers (always re-derived from the pristine
+    /// system config, so repeated calls never compound). The serving
+    /// simulators build one such view per step from their
+    /// [`FaultPlan`](crate::chaos::FaultPlan).
+    pub fn with_pool(mut self, pool: PoolState) -> Engine {
+        assert_eq!(pool.len(), self.system.devices, "pool must cover every device");
+        let topo = Topology::from_system(&self.system).degraded(pool.link_factor);
+        self.comm = CommCostModel { topo: topo.clone(), fused: self.comm.fused };
+        self.topo = topo;
+        self.pool = pool;
+        self
+    }
+
+    /// Borrowing counterpart of [`with_pool`](Self::with_pool) for
+    /// per-step views.
+    pub fn for_pool(&self, pool: PoolState) -> Engine {
+        self.clone().with_pool(pool)
     }
 
     /// Charge `T_plan` from a deterministic cost model instead of
@@ -222,13 +257,18 @@ impl Engine {
     ) -> (StepReport, crate::planner::RoutePlan) {
         let loads = lm.expert_loads();
         let stats = stats_lm.expert_loads();
+        // The pool view reaches the planner only while degraded, so
+        // healthy runs hit the exact pre-chaos planning path.
+        let pool = self.pool.is_degraded().then_some(&self.pool);
+        let plan_once = || {
+            planner.plan_with_pool(self.system.devices, &loads, &stats, Some(&self.topo), pool)
+        };
         let (plan, plan_time_s) = if let Some(cost) = self.plan_cost {
             // Deterministic pricing: charge the modeled planner latency
             // instead of wall time, so identical inputs price
             // bit-identically run to run (plan once — no warm run needed
             // when nothing is being measured).
-            let plan =
-                planner.plan_with_stats(self.system.devices, &loads, &stats, Some(&self.topo));
+            let plan = plan_once();
             let t = match planner.last_cache_outcome() {
                 Some(CacheOutcome::Hit) => cost.hit_s,
                 _ => cost.fresh_s,
@@ -242,18 +282,16 @@ impl Engine {
             // in run_model). Planning is microseconds, so the extra run
             // is negligible.
             let t_warm = std::time::Instant::now();
-            let _ = planner.plan_with_stats(self.system.devices, &loads, &stats, Some(&self.topo));
+            let _ = plan_once();
             let warm_s = t_warm.elapsed().as_secs_f64();
             let t0 = std::time::Instant::now();
-            let plan =
-                planner.plan_with_stats(self.system.devices, &loads, &stats, Some(&self.topo));
+            let plan = plan_once();
             (plan, t0.elapsed().as_secs_f64().min(warm_s))
         } else {
             // Stateful planners (the plan cache) must observe each lookup
             // exactly once — a warm run would turn every miss into a hit.
             let t0 = std::time::Instant::now();
-            let plan =
-                planner.plan_with_stats(self.system.devices, &loads, &stats, Some(&self.topo));
+            let plan = plan_once();
             (plan, t0.elapsed().as_secs_f64())
         };
         (price_plan(self, &plan, lm, planner, plan_time_s, None), plan)

@@ -72,6 +72,10 @@ pub struct ModelStepReport {
     pub tokens: u64,
     /// True when any layer exceeded device memory.
     pub oom: bool,
+    /// True when any layer left work on a dead device (see
+    /// [`StepReport::stranded`]): the model step cannot complete on this
+    /// pool and the serving layer must replan or error.
+    pub stranded: bool,
     /// Layers whose lambda guard reverted to standard EP.
     pub fallback_layers: usize,
     /// Plan-cache counters summed across layers (all zero when the
@@ -193,6 +197,7 @@ impl Engine {
             planner: planner.label(),
             tokens: layers[0].report.tokens,
             oom: layers.iter().any(|l| l.report.oom),
+            stranded: layers.iter().any(|l| l.report.stranded),
             fallback_layers: layers.iter().filter(|l| l.report.fallback_ep).count(),
             latency_s,
             serial_latency_s,

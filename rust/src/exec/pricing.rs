@@ -65,6 +65,9 @@ pub fn price_plan(
     // EPLB's replication is time-amortized (placements change rarely) but
     // still costs memory; LLEP pays per step. Policy comes from the
     // planner trait, not a closed enum.
+    let pool = &engine.pool;
+    let degraded = pool.is_degraded();
+    let mut stranded = false;
     let charge_weights = planner.charges_weight_transfers();
     let wbytes = model.expert_weight_bytes() as u64;
     let mut weights_recv_s = vec![0.0f64; devices];
@@ -76,7 +79,18 @@ pub fn price_plan(
     let mut ordered: Vec<_> = plan.transfers.clone();
     ordered.sort_unstable_by_key(|t| (t.to, t.from, t.expert));
     for t in &ordered {
-        weights_recv_s[t.to] += engine.comm.p2p_time(t.from, t.to, wbytes);
+        if degraded && !pool.devices[t.from].alive {
+            // The source HBM is gone with its device: weights restore
+            // from the host checkpoint path, charged at (degraded)
+            // inter-node bandwidth — the elastic-replan recovery cost.
+            weights_recv_s[t.to] +=
+                engine.topo.latency_s + wbytes as f64 / engine.topo.inter_node_bw;
+        } else {
+            weights_recv_s[t.to] += engine.comm.p2p_time(t.from, t.to, wbytes);
+        }
+        if degraded && !pool.devices[t.to].alive {
+            stranded = true; // weights shipped to a dead device
+        }
     }
     if !charge_weights {
         weights_recv_s.iter_mut().for_each(|w| *w = 0.0);
@@ -105,9 +119,26 @@ pub fn price_plan(
         Some(m) => m.to_vec(),
         None => work
             .iter()
-            .map(|w| {
+            .enumerate()
+            .map(|(d, w)| {
                 let tokens: Vec<u64> = w.iter().map(|&(_, t)| t).collect();
-                engine.gemm.device_compute_time(&split_chunks(&tokens), model)
+                let t = engine.gemm.device_compute_time(&split_chunks(&tokens), model);
+                if !degraded {
+                    return t;
+                }
+                // Chaos view: completion time is work / speed. Work on a
+                // dead device can never complete — the step is stranded
+                // (latency stays finite so reports remain summable; the
+                // flag is what invalidates the step).
+                let state = pool.devices[d];
+                if !state.alive {
+                    if t > 0.0 {
+                        stranded = true;
+                    }
+                    t
+                } else {
+                    t / state.speed
+                }
             })
             .collect(),
     };
@@ -166,6 +197,7 @@ pub fn price_plan(
         gemm_calls: plan.gemm_calls(),
         weight_transfers: plan.transfers.len(),
         oom,
+        stranded,
         fallback_ep: plan.fallback_ep,
         tokens: lm.total_load() / lm.top_k as u64,
         cache: planner.last_cache_outcome().map(CacheStats::of).unwrap_or_default(),
@@ -270,6 +302,65 @@ mod tests {
         );
         // compute itself unchanged
         assert_eq!(overlapped.device_compute_s, base.device_compute_s);
+    }
+
+    #[test]
+    fn straggler_slows_ep_but_llep_replans_around_it() {
+        use crate::chaos::PoolState;
+        let e = engine();
+        let mut rng = Rng::new(31);
+        let lm = Scenario::concentrated(0.9, 1).generate_loads(&e.model, 8, 32_768, &mut rng);
+        let base_ep = e.run_step_loads(&lm, &PlannerKind::StandardEp);
+        let mut pool = PoolState::healthy(8);
+        pool.devices[0].speed = 0.25; // 4x straggler under the hot expert
+        let slow = e.for_pool(pool);
+        let slow_ep = slow.run_step_loads(&lm, &PlannerKind::StandardEp);
+        // EP's hot device is the straggler: compute inflates ~4x.
+        assert!(slow_ep.phases.compute_s > base_ep.phases.compute_s * 3.0);
+        assert!(!slow_ep.stranded, "slow is not dead");
+        // Speed-aware LLEP rebalances by normalized time.
+        let slow_ll = slow.run_step_loads(&lm, &PlannerKind::llep_default());
+        assert!(
+            slow_ll.latency_s * 2.0 < slow_ep.latency_s,
+            "LLEP {} vs EP {} under the straggler",
+            slow_ll.latency_s,
+            slow_ep.latency_s
+        );
+    }
+
+    #[test]
+    fn dead_device_strands_static_plans_only() {
+        use crate::chaos::PoolState;
+        let e = engine();
+        let mut rng = Rng::new(32);
+        let lm = Scenario::concentrated(0.9, 1).generate_loads(&e.model, 8, 8192, &mut rng);
+        let mut pool = PoolState::healthy(8);
+        pool.devices[0].alive = false;
+        let broken = e.for_pool(pool);
+        let ep = broken.run_step_loads(&lm, &PlannerKind::StandardEp);
+        assert!(ep.stranded, "EP leaves the hot experts on the dead device");
+        let ll = broken.run_step_loads(&lm, &PlannerKind::llep_default());
+        assert!(!ll.stranded, "pool-aware LLEP plans around the hole");
+        assert_eq!(ll.tokens, lm.total_load() / lm.top_k as u64, "no tokens lost");
+        // The replanned step pays host-restore weight transfers for the
+        // dead device's experts.
+        assert!(ll.weight_transfers > 0);
+        assert!(ll.phases.weights_s > 0.0);
+    }
+
+    #[test]
+    fn degraded_links_stretch_collectives() {
+        use crate::chaos::PoolState;
+        let e = engine();
+        let mut rng = Rng::new(33);
+        let lm = Scenario::concentrated(0.9, 1).generate_loads(&e.model, 8, 32_768, &mut rng);
+        let base = e.run_step_loads(&lm, &PlannerKind::llep_default());
+        let mut pool = PoolState::healthy(8);
+        pool.link_factor = 4.0;
+        let slow_net = e.for_pool(pool);
+        let r = slow_net.run_step_loads(&lm, &PlannerKind::llep_default());
+        assert!(r.phases.dispatch_s > base.phases.dispatch_s * 2.0);
+        assert_eq!(r.device_compute_s, base.device_compute_s, "compute untouched");
     }
 
     #[test]

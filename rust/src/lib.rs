@@ -45,6 +45,7 @@
 //! assert!(ours.latency_s <= ep.latency_s * 1.001);
 //! ```
 
+pub mod chaos;
 pub mod config;
 pub mod coordinator;
 pub mod costmodel;
@@ -65,6 +66,7 @@ pub mod util;
 
 /// Convenience re-exports covering the most common entry points.
 pub mod prelude {
+    pub use crate::chaos::{DeviceState, FaultPlan, PoolState};
     pub use crate::config::{
         LlepConfig, ModelConfig, ModelPreset, SystemConfig, SystemPreset,
     };

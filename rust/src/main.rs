@@ -10,7 +10,16 @@
 //!   serve      serving simulation (EP vs LLEP, or --planner <spec>)
 //!   tune       search planner-spec space for a hardware profile and
 //!              emit a latency/memory Pareto front (--profile, --budget)
+//!   chaos      fault & heterogeneity injection: serve under a FaultPlan
+//!              (--faults) and compare static EP vs chaos-aware LLEP
 //!   info       print presets, the planner registry and environment
+//!
+//! Fault plans (`--faults`, accepted by run/serve/tune/chaos) are spec
+//! strings like `slow:dev=0,x=4;fail:dev=3,at=16` (kinds: slow, stall,
+//! fail, recover, link, jitter) or paths to a TOML file with
+//! `faults = "..."` under `[chaos]`. `--planner @report.json` reads the
+//! recommended spec from a `tune --out` report, so a pinned
+//! recommendation is directly consumable by run/serve.
 //!
 //! Planner selection is open; the examples below are canonical registry
 //! specs (they round-trip through `planner/registry.rs` unchanged):
@@ -25,20 +34,22 @@
 //! `--seed` (default 0), so identical invocations produce identical
 //! tables; `replay` is deterministic given its trace file.
 
+use llep::chaos::FaultPlan;
 use llep::config::{
     load_experiment, LlepConfig, ModelConfig, ModelPreset, SystemConfig, SystemPreset,
 };
-use llep::coordinator::{RunSummary, Runner, ServeSim};
+use llep::coordinator::{RunSummary, Runner, ServeReport, ServeSim};
 use llep::exec::{Engine, PlanCostModel};
 use llep::harness;
 use llep::metrics::{
-    format_bytes, format_cache, format_secs, model_report_table, tune_front_table,
-    tune_report_to_json, tune_trials_table, Table,
+    chaos_stats_to_json, format_bytes, format_cache, format_chaos, format_secs,
+    model_report_table, tune_front_table, tune_report_to_json, tune_trials_table, Table,
 };
 use llep::planner::{CachedPlanner, Planner, PlannerKind, Registry};
 use llep::routing::{DepthProfile, RoutingTrace, Scenario};
 use llep::tune::{HardwareProfile, Mode, SearchSpace, SpaceBudget, Strategy, Tuner};
 use llep::util::cli::Spec;
+use llep::util::json::Json;
 use llep::util::rng::Rng;
 
 fn main() {
@@ -57,6 +68,7 @@ fn main() {
         .opt("lambda", "LLEP imbalance trigger")
         .opt("min-gemm", "LLEP min tokens per GEMM")
         .opt("model", "model preset name")
+        .opt("system", "system preset name, e.g. h200x8 | mixed-h100-a100 (default h200x8)")
         .opt("scenario", "balanced | concentrated | powerlaw | drift")
         .opt("concentration", "fraction of tokens into hot experts")
         .opt("hot", "number of hot experts")
@@ -67,7 +79,9 @@ fn main() {
         .opt("mode", "tune: step | serve objective (default step)")
         .opt("trials", "tune: candidate count for --strategy random")
         .opt("artifacts", "artifacts directory (default ./artifacts)")
-        .opt("planner", "planner spec, e.g. llep:alpha=1,m=64,lambda=1.3 (see `llep info`)")
+        .opt("faults", "fault plan: spec like slow:dev=0,x=4;fail:dev=3,at=16, or a TOML path")
+        .opt("pin", "tune: pin file — bootstrap when missing, fail when the optimum moved")
+        .opt("planner", "planner spec (see `llep info`), or @report.json from `tune --out`")
         .opt("replan-every", "plan cache: force a fresh plan every N reuses (0 = never)")
         .opt("cache-drift", "plan cache: load-signature drift threshold (default 0.05)")
         .flag("plan-reuse", "wrap planners in the cross-step plan cache")
@@ -85,7 +99,8 @@ fn main() {
     if args.has_flag("help") || args.subcommand.is_none() {
         println!("llep — Least-Loaded Expert Parallelism (paper reproduction)\n");
         println!(
-            "usage: llep <figures|run|calibrate|trace|replay|train|serve|tune|info> [options]\n"
+            "usage: llep <figures|run|calibrate|trace|replay|train|serve|tune|chaos|info> \
+             [options]\n"
         );
         println!("Options:\n{}", spec.help());
         return;
@@ -100,6 +115,7 @@ fn main() {
         "train" => cmd_train(&args),
         "serve" => cmd_serve(&args),
         "tune" => cmd_tune(&args),
+        "chaos" => cmd_chaos(&args),
         "info" => cmd_info(),
         other => Err(format!("unknown subcommand {other:?} (see --help)")),
     };
@@ -223,6 +239,31 @@ fn scenario_from_args(args: &llep::util::cli::Args) -> Result<Scenario, String> 
     })
 }
 
+/// Resolve one `--planner` argument: a registry spec string, or
+/// `@path.json` naming a `tune --out` report whose recommended spec is
+/// used directly (the pinned-recommendation consumption path).
+fn resolve_planner_arg(spec: &str) -> Result<Box<dyn Planner>, String> {
+    if let Some(path) = spec.strip_prefix('@') {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| format!("--planner {spec}: {e}"))?;
+        let report = llep::util::json::parse(&text)
+            .map_err(|e| format!("--planner {spec}: not a JSON tune report: {e}"))?;
+        let rec = report
+            .get("recommended")
+            .and_then(|r| r.get("spec"))
+            .and_then(|s| s.as_str())
+            .ok_or_else(|| {
+                format!(
+                    "--planner {spec}: no recommended.spec field (expected a report written \
+                     by `llep tune --out`)"
+                )
+            })?;
+        println!("planner from {path}: {rec}");
+        return Registry::builtin().parse(rec);
+    }
+    Registry::builtin().parse(spec)
+}
+
 /// Planner selection: `--planner <spec>` overrides `defaults`, then
 /// `--plan-reuse` / `--replan-every` / `--cache-drift` optionally wrap
 /// every planner in the cross-step plan cache.
@@ -231,7 +272,7 @@ fn planners_from_args(
     defaults: Vec<Box<dyn Planner>>,
 ) -> Result<Vec<Box<dyn Planner>>, String> {
     let base = match args.get("planner") {
-        Some(spec) => vec![Registry::builtin().parse(spec)?],
+        Some(spec) => vec![resolve_planner_arg(spec)?],
         None => defaults,
     };
     let reuse = args.has_flag("plan-reuse")
@@ -266,13 +307,20 @@ fn engine_from_args(args: &llep::util::cli::Args) -> Result<(Engine, LlepConfig)
     let model_name = args.get_or("model", "fig1-layer");
     let preset = ModelPreset::from_name(&model_name)
         .ok_or_else(|| format!("unknown model preset {model_name}"))?;
-    let devices = args.get_usize("devices", 8)?;
     let mut model = ModelConfig::preset(preset);
     let layers = args.get_usize("layers", 0)?;
     if layers > 0 {
         model.num_layers = layers;
     }
-    let system = SystemConfig::preset(SystemPreset::H200x8).with_devices(devices);
+    let system_name = args.get_or("system", "h200x8");
+    let system_preset = SystemPreset::from_name(&system_name)
+        .ok_or_else(|| format!("unknown system preset {system_name} (see `llep info`)"))?;
+    let mut system = SystemConfig::preset(system_preset);
+    // --devices overrides the preset's pool size; 0/absent keeps it.
+    let devices = args.get_usize("devices", 0)?;
+    if devices > 0 {
+        system = system.with_devices(devices);
+    }
     let llep = LlepConfig {
         alpha: args.get_f64("alpha", 1.0)?,
         lambda: args.get_f64("lambda", 1.3)?,
@@ -301,6 +349,18 @@ fn cmd_run(args: &llep::util::cli::Args) -> Result<(), String> {
         (engine, llep, scenario, tokens, seed)
     };
 
+    // `run --faults`: a single step prices under the plan's step-0 pool
+    // view (step-indexed schedules belong to serve/chaos).
+    let engine = match args.get("faults") {
+        Some(arg) => {
+            let plan = FaultPlan::resolve(arg)?;
+            plan.validate(engine.system.devices)?;
+            let pool = plan.state_at(0, &engine.pool);
+            engine.with_pool(pool)
+        }
+        None => engine,
+    };
+
     let defaults: Vec<Box<dyn Planner>> = vec![
         PlannerKind::StandardEp.boxed(),
         PlannerKind::Llep(llep).boxed(),
@@ -315,10 +375,17 @@ fn cmd_run(args: &llep::util::cli::Args) -> Result<(), String> {
     let mut rng = Rng::new(seed);
     let lm = scenario.generate_loads(&engine.model, engine.system.devices, tokens, &mut rng);
     let mut t = Table::new(&[
-        "planner", "latency", "compute max", "dispatch", "weights", "peak mem", "xfers", "OOM",
+        "planner", "latency", "compute max", "dispatch", "weights", "peak mem", "xfers", "status",
     ]);
     for planner in &planners {
         let r = engine.run_step_loads(&lm, &**planner);
+        let status = if r.oom {
+            "OOM"
+        } else if r.stranded {
+            "STRANDED"
+        } else {
+            "-"
+        };
         t.row(vec![
             r.planner.clone(),
             format_secs(r.latency_s),
@@ -327,12 +394,17 @@ fn cmd_run(args: &llep::util::cli::Args) -> Result<(), String> {
             format_secs(r.phases.weights_s),
             format_bytes(r.max_peak_bytes()),
             r.weight_transfers.to_string(),
-            if r.oom { "OOM".into() } else { "-".into() },
+            status.into(),
         ]);
     }
+    let pool_note = if engine.pool.is_degraded() {
+        format!(" | pool: {}", engine.pool.label())
+    } else {
+        String::new()
+    };
     print_table(
         &format!(
-            "{} | P={} | {} tokens/device | {}",
+            "{} | P={} | {} tokens/device | {}{pool_note}",
             engine.model.name,
             engine.system.devices,
             tokens,
@@ -528,28 +600,69 @@ fn cmd_serve(args: &llep::util::cli::Args) -> Result<(), String> {
     let scenario = scenario_from_args(args)?;
     let n = args.get_usize("steps", 64)?;
     let seed = args.get_usize("seed", 0)? as u64;
+    let faults = match args.get("faults") {
+        Some(arg) => {
+            let plan = FaultPlan::resolve(arg)?;
+            plan.validate(engine.system.devices)?;
+            Some(plan)
+        }
+        None => None,
+    };
     let mut rng = Rng::new(seed);
     let requests = ServeSim::poisson_requests(n, 0.0005, 256, 2048, &mut rng);
     let defaults: Vec<Box<dyn Planner>> =
         vec![PlannerKind::StandardEp.boxed(), PlannerKind::Llep(llep).boxed()];
     let mut t = Table::new(&[
         "planner", "makespan", "p50 latency", "p99 latency", "tok/s", "p50 plan", "plan cache",
+        "chaos",
     ]);
+    let mut unrecoverable: Vec<(String, String)> = Vec::new();
     for planner in planners_from_args(args, defaults)? {
-        let sim = ServeSim::with_planner(engine.clone(), planner, scenario.clone(), 8192);
-        let r = sim.run(&requests, &mut Rng::new(seed + 1));
-        assert!(r.tokens.is_exact(), "accounting contract: {:?}", r.tokens);
-        t.row(vec![
-            r.planner.clone(),
-            format_secs(r.makespan_s),
-            format_secs(r.request_latency.p50),
-            format_secs(r.request_latency.p99),
-            format!("{:.0}", r.throughput_tps()),
-            format_secs(r.plan_time.p50),
-            format_cache(&r.plan_cache),
-        ]);
+        let label = planner.label();
+        let mut sim = ServeSim::with_planner(engine.clone(), planner, scenario.clone(), 8192);
+        if let Some(f) = &faults {
+            sim = sim.with_faults(f.clone());
+        }
+        match sim.try_run(&requests, &mut Rng::new(seed + 1)) {
+            Ok(r) => {
+                assert!(r.tokens.is_exact(), "accounting contract: {:?}", r.tokens);
+                t.row(vec![
+                    r.planner.clone(),
+                    format_secs(r.makespan_s),
+                    format_secs(r.request_latency.p50),
+                    format_secs(r.request_latency.p99),
+                    format!("{:.0}", r.throughput_tps()),
+                    format_secs(r.plan_time.p50),
+                    format_cache(&r.plan_cache),
+                    format_chaos(&r.chaos),
+                ]);
+            }
+            // A planner that cannot survive the fault plan is a result,
+            // not a command failure: keep the table so the adaptive rows
+            // still render (mirrors `llep chaos`).
+            Err(e) => {
+                t.row(vec![
+                    label.clone(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "unrecoverable".into(),
+                ]);
+                unrecoverable.push((label, e));
+            }
+        }
     }
-    print_table(&format!("serving {n} requests | {}", scenario.label()), &t);
+    let fault_note = faults
+        .as_ref()
+        .map(|f| format!(" | faults: {}", f.label()))
+        .unwrap_or_default();
+    print_table(&format!("serving {n} requests | {}{fault_note}", scenario.label()), &t);
+    for (label, e) in &unrecoverable {
+        println!("{label}: {e}");
+    }
     Ok(())
 }
 
@@ -587,9 +700,20 @@ fn cmd_tune(args: &llep::util::cli::Args) -> Result<(), String> {
         other => return Err(format!("unknown strategy {other:?} (grid | random | halving)")),
     };
     let tokens = args.get_usize("tokens", 8192)?;
+    let faults = match args.get("faults") {
+        Some(arg) => {
+            let plan = FaultPlan::resolve(arg)?;
+            plan.validate(system.devices)?;
+            Some(plan)
+        }
+        None => None,
+    };
 
     let engine = Engine::modeled(model, system).with_plan_cost(PlanCostModel::default());
     let mut tuner = Tuner::new(engine, scenario.clone(), mode, seed).with_tokens(tokens);
+    if let Some(f) = &faults {
+        tuner = tuner.with_faults(f.clone());
+    }
     if budget == SpaceBudget::Smoke {
         // Halved fidelity keeps the CI smoke sweep fast; other budgets
         // keep the library's full-budget defaults.
@@ -601,8 +725,12 @@ fn cmd_tune(args: &llep::util::cli::Args) -> Result<(), String> {
     let space = SearchSpace::from_registry(&tuner.registry, budget)?;
     let outcome = tuner.run(&space, strategy)?;
 
+    let fault_note = faults
+        .as_ref()
+        .map(|f| format!(" | faults: {}", f.label()))
+        .unwrap_or_default();
     let title = format!(
-        "tune | profile {} | {} | {} mode | {} | {} specs, {} budget units priced",
+        "tune | profile {} | {} | {} mode | {} | {} specs, {} budget units priced{fault_note}",
         profile.name,
         scenario.label(),
         mode.name(),
@@ -645,6 +773,156 @@ fn cmd_tune(args: &llep::util::cli::Args) -> Result<(), String> {
     if !identical {
         return Err("recommended spec did not re-price bit-identically".into());
     }
+    if let Some(pin) = args.get("pin") {
+        let context = format!(
+            "profile {} | {} | {} mode | {} budget{}",
+            profile.name,
+            scenario.label(),
+            mode.name(),
+            budget_name,
+            fault_note
+        );
+        check_or_write_pin(pin, &recommended, &context)?;
+    }
+    Ok(())
+}
+
+/// `tune --pin <file>`: lock a profile's recommended spec. A missing file
+/// bootstraps (writes the recommendation); an existing file fails loudly
+/// when the recommendation moved. CI sweeps every builtin profile with a
+/// checked-in pin, so a planner/cost-model change that silently shifts a
+/// hardware profile's optimum turns the build red.
+fn check_or_write_pin(
+    path: &str,
+    recommended: &llep::tune::Trial,
+    context: &str,
+) -> Result<(), String> {
+    match std::fs::read_to_string(path) {
+        Ok(text) => {
+            let pinned = text
+                .lines()
+                .map(str::trim)
+                .find(|l| !l.is_empty() && !l.starts_with('#'))
+                .unwrap_or("");
+            if pinned != recommended.spec {
+                return Err(format!(
+                    "tune pin mismatch: {path} pins {pinned:?} but this sweep recommends {:?} \
+                     ({context}) — the optimum moved. If intentional, delete the pin, re-run \
+                     `llep tune --pin {path}` and commit the refreshed file.",
+                    recommended.spec
+                ));
+            }
+            println!("pin ok: {path} ({pinned})");
+            Ok(())
+        }
+        Err(_) => {
+            let body = format!(
+                "{}\n# pinned by `llep tune --pin` | {context} | latency {} | peak {}\n",
+                recommended.spec,
+                format_secs(recommended.metrics.latency_s),
+                format_bytes(recommended.metrics.peak_bytes),
+            );
+            std::fs::write(path, body).map_err(|e| format!("{path}: {e}"))?;
+            println!("pin bootstrapped: {path} — commit it to lock this recommendation");
+            Ok(())
+        }
+    }
+}
+
+/// `llep chaos`: serve one request burst under a fault/heterogeneity
+/// plan and compare planners — static EP either limps (stragglers) or
+/// cannot recover at all (failures), while pool-aware LLEP elastically
+/// replans. The token ledger stays exact across every requeue.
+fn cmd_chaos(args: &llep::util::cli::Args) -> Result<(), String> {
+    let (engine, llep) = engine_from_args(args)?;
+    let scenario = scenario_from_args(args)?;
+    let n = args.get_usize("steps", 48)?;
+    let seed = args.get_usize("seed", 0)? as u64;
+    let faults = FaultPlan::resolve(&args.get_or("faults", "slow:dev=0,x=4"))?;
+    faults.validate(engine.system.devices)?;
+    let mut rng = Rng::new(seed);
+    let requests = ServeSim::poisson_requests(n, 0.0005, 256, 2048, &mut rng);
+    let defaults: Vec<Box<dyn Planner>> =
+        vec![PlannerKind::StandardEp.boxed(), PlannerKind::Llep(llep).boxed()];
+
+    let mut t = Table::new(&[
+        "planner", "makespan", "p50 latency", "p99 latency", "tok/s", "fault steps", "chaos",
+        "status",
+    ]);
+    let mut results: Vec<(String, Result<ServeReport, String>)> = Vec::new();
+    for planner in planners_from_args(args, defaults)? {
+        let label = planner.label();
+        let sim = ServeSim::with_planner(engine.clone(), planner, scenario.clone(), 8192)
+            .with_faults(faults.clone());
+        let outcome = sim.try_run(&requests, &mut Rng::new(seed + 1));
+        match &outcome {
+            Ok(r) => {
+                assert!(r.tokens.is_exact(), "accounting contract: {:?}", r.tokens);
+                t.row(vec![
+                    r.planner.clone(),
+                    format_secs(r.makespan_s),
+                    format_secs(r.request_latency.p50),
+                    format_secs(r.request_latency.p99),
+                    format!("{:.0}", r.throughput_tps()),
+                    r.chaos.fault_steps.to_string(),
+                    format_chaos(&r.chaos),
+                    "ok".into(),
+                ]);
+            }
+            Err(_) => t.row(vec![
+                label.clone(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "unrecoverable".into(),
+            ]),
+        }
+        results.push((label, outcome));
+    }
+    print_table(
+        &format!(
+            "chaos | {} | {} | {n} requests | faults: {}",
+            engine.system.name,
+            scenario.label(),
+            faults.label()
+        ),
+        &t,
+    );
+    for (label, outcome) in &results {
+        if let Err(e) = outcome {
+            println!("{label}: {e}");
+        }
+    }
+
+    if let Some(out) = args.get("out") {
+        let planners = results.iter().map(|(label, outcome)| match outcome {
+            Ok(r) => Json::obj(vec![
+                ("planner", Json::str(&r.planner)),
+                ("makespan_s", Json::num(r.makespan_s)),
+                ("p50_latency_s", Json::num(r.request_latency.p50)),
+                ("p99_latency_s", Json::num(r.request_latency.p99)),
+                ("throughput_tps", Json::num(r.throughput_tps())),
+                ("completed", Json::num(r.completed as f64)),
+                ("chaos", chaos_stats_to_json(&r.chaos)),
+            ]),
+            Err(e) => {
+                Json::obj(vec![("planner", Json::str(label)), ("error", Json::str(e))])
+            }
+        });
+        let json = Json::obj(vec![
+            ("system", Json::str(&engine.system.name)),
+            ("scenario", Json::str(&scenario.label())),
+            ("faults", Json::str(&faults.spec())),
+            ("requests", Json::num(n as f64)),
+            ("seed", Json::num(seed as f64)),
+            ("planners", Json::arr(planners)),
+        ]);
+        std::fs::write(out, json.to_string_pretty()).map_err(|e| e.to_string())?;
+        println!("wrote {out}");
+    }
     Ok(())
 }
 
@@ -660,8 +938,13 @@ fn cmd_info() -> Result<(), String> {
     println!("\nsystem presets (also the builtin `tune --profile` names):");
     for p in SystemPreset::ALL {
         let s = SystemConfig::preset(p);
+        let het = if s.device_speeds.is_empty() {
+            String::new()
+        } else {
+            format!("  speeds={:?}", s.device_speeds)
+        };
         println!(
-            "  {:<14} P={:<3} {}/node  mem={}  peak={:.0e} FLOP/s",
+            "  {:<15} P={:<3} {}/node  mem={}  peak={:.0e} FLOP/s{het}",
             s.name,
             s.devices,
             s.devices_per_node,
@@ -669,6 +952,15 @@ fn cmd_info() -> Result<(), String> {
             s.gemm.peak_flops
         );
     }
+    println!(
+        "\nfault events (--faults \"ev;ev;...\", or a TOML path with [chaos] faults=\"...\"):"
+    );
+    println!("  slow:dev=D,x=F[,from=S,until=S]   divide device D's speed by F");
+    println!("  stall:dev=D,at=S[,steps=N]        device D dead for N steps, then back");
+    println!("  fail:dev=D,at=S                   permanent failure (until recover)");
+    println!("  recover:dev=D,at=S                device D rejoins the pool");
+    println!("  link:x=F[,from=S,until=S]         divide link bandwidths by F");
+    println!("  jitter:amp=A,seed=K[,from,until]  seeded per-(step,device) speed noise");
     println!("\nplanners (--planner <spec>; examples are canonical registry specs):");
     for e in Registry::builtin().entries() {
         let dims = if e.params.is_empty() {

@@ -3,6 +3,7 @@
 
 pub mod chart;
 
+use crate::coordinator::ChaosStats;
 use crate::exec::{ModelStepReport, StepReport};
 use crate::util::json::Json;
 
@@ -126,6 +127,7 @@ pub fn report_to_json(r: &StepReport) -> Json {
         ("gemm_calls", Json::num(r.gemm_calls as f64)),
         ("weight_transfers", Json::num(r.weight_transfers as f64)),
         ("oom", Json::Bool(r.oom)),
+        ("stranded", Json::Bool(r.stranded)),
         ("fallback_ep", Json::Bool(r.fallback_ep)),
         ("tokens", Json::num(r.tokens as f64)),
         ("throughput_tps", Json::num(r.throughput())),
@@ -166,14 +168,21 @@ pub fn planner_comparison_table(reports: &[ModelStepReport]) -> Table {
 
 /// Ranked tuner trials (best first): one row per evaluated spec.
 pub fn tune_trials_table(trials: &[crate::tune::Trial]) -> Table {
-    let mut t = Table::new(&["spec", "latency", "peak mem", "budget", "OOM"]);
+    let mut t = Table::new(&["spec", "latency", "peak mem", "budget", "status"]);
     for trial in trials {
+        let status = if trial.metrics.oom {
+            "OOM"
+        } else if trial.metrics.stranded {
+            "STRANDED"
+        } else {
+            "-"
+        };
         t.row(vec![
             trial.spec.clone(),
             format_secs(trial.metrics.latency_s),
             format_bytes(trial.metrics.peak_bytes),
             trial.budget.to_string(),
-            if trial.metrics.oom { "OOM".into() } else { "-".into() },
+            status.into(),
         ]);
     }
     t
@@ -213,6 +222,7 @@ pub fn tune_report_to_json(
             ("peak_bytes", Json::num(t.metrics.peak_bytes as f64)),
             ("budget", Json::num(t.budget as f64)),
             ("oom", Json::Bool(t.metrics.oom)),
+            ("stranded", Json::Bool(t.metrics.stranded)),
         ])
     };
     Json::obj(vec![
@@ -233,6 +243,34 @@ pub fn tune_report_to_json(
                 .unwrap_or(Json::Null),
         ),
     ])
+}
+
+/// JSON export of a serving run's chaos accounting.
+pub fn chaos_stats_to_json(c: &ChaosStats) -> Json {
+    Json::obj(vec![
+        ("fault_steps", Json::num(c.fault_steps as f64)),
+        ("failures", Json::num(c.failures as f64)),
+        ("recoveries", Json::num(c.recoveries as f64)),
+        ("requeues", Json::num(c.requeues as f64)),
+        ("requeued_tokens", Json::num(c.requeued_tokens as f64)),
+        ("wasted_s", Json::num(c.wasted_s)),
+        ("max_recovery_steps", Json::num(c.max_recovery_steps as f64)),
+    ])
+}
+
+/// Compact chaos-counter cell for serving tables: `-` when the run saw
+/// no degradation at all.
+pub fn format_chaos(c: &ChaosStats) -> String {
+    if *c == ChaosStats::default() {
+        "-".into()
+    } else {
+        format!(
+            "{} fail / {} requeue / {} wasted",
+            c.failures,
+            c.requeues,
+            format_secs(c.wasted_s)
+        )
+    }
 }
 
 /// Per-layer latency/memory breakdown of a full-model step.
@@ -272,6 +310,7 @@ pub fn model_report_to_json(r: &ModelStepReport) -> Json {
         ("tokens", Json::num(r.tokens as f64)),
         ("throughput_tps", Json::num(r.throughput())),
         ("oom", Json::Bool(r.oom)),
+        ("stranded", Json::Bool(r.stranded)),
         ("fallback_layers", Json::num(r.fallback_layers as f64)),
         ("cache_hits", Json::num(r.cache.hits as f64)),
         ("cache_misses", Json::num(r.cache.misses as f64)),
@@ -393,7 +432,7 @@ mod tests {
         let trial = |spec: &str, lat: f64, mem: u64, oom: bool| Trial {
             spec: spec.into(),
             budget: 4,
-            metrics: TrialMetrics { latency_s: lat, peak_bytes: mem, oom },
+            metrics: TrialMetrics { latency_s: lat, peak_bytes: mem, oom, stranded: false },
         };
         let trials =
             vec![trial("llep", 1e-3, 1 << 30, false), trial("ep", 2e-3, 2 << 30, false)];
@@ -422,5 +461,26 @@ mod tests {
         assert_eq!(format_cache(&CacheStats::default()), "-");
         let c = CacheStats { hits: 3, misses: 1, forced: 0 };
         assert_eq!(format_cache(&c), "3/4 (75%)");
+    }
+
+    #[test]
+    fn chaos_formatting_and_json() {
+        assert_eq!(format_chaos(&ChaosStats::default()), "-");
+        let c = ChaosStats {
+            fault_steps: 5,
+            failures: 1,
+            recoveries: 0,
+            requeues: 1,
+            requeued_tokens: 4096,
+            wasted_s: 0.25,
+            max_recovery_steps: 1,
+        };
+        let cell = format_chaos(&c);
+        assert!(cell.contains("1 fail"), "{cell}");
+        assert!(cell.contains("1 requeue"), "{cell}");
+        let json = chaos_stats_to_json(&c).to_string();
+        assert!(json.contains("\"failures\":1"), "{json}");
+        assert!(json.contains("\"requeued_tokens\":4096"), "{json}");
+        assert!(json.contains("\"max_recovery_steps\":1"), "{json}");
     }
 }

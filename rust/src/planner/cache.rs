@@ -30,6 +30,7 @@
 //! share an entry, which is just more reuse.
 
 use super::{Planner, RoutePlan, Segment, WeightTransfer};
+use crate::chaos::PoolState;
 use crate::topology::Topology;
 use std::cell::RefCell;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -311,6 +312,36 @@ impl CachedPlanner {
 }
 
 impl Planner for CachedPlanner {
+    fn plan_with_pool(
+        &self,
+        devices: usize,
+        loads: &[u64],
+        stats: &[u64],
+        topo: Option<&Topology>,
+        pool: Option<&PoolState>,
+    ) -> RoutePlan {
+        match pool {
+            Some(p) if p.is_degraded() => {
+                // The load signature says nothing about device speeds or
+                // deaths, so cached placements are unsafe to reuse while
+                // the pool is degraded: plan fresh through the pool-aware
+                // inner path and account it as a forced replan. The cache
+                // is left untouched — healthy-pool entries stay valid for
+                // after recovery, and no degraded plan is ever installed.
+                // Known cost: a *statically* heterogeneous pool (preset
+                // device_speeds) never leaves this path, so plan reuse is
+                // effectively off there; folding a pool fingerprint into
+                // the cache key would restore it (ROADMAP: fault-plan-
+                // aware plan-cache reuse).
+                let plan = self.inner.plan_with_pool(devices, loads, stats, topo, pool);
+                self.state.lock().expect("cache lock").stats.record(CacheOutcome::Forced);
+                self.set_last_outcome(CacheOutcome::Forced);
+                plan
+            }
+            _ => self.plan_with_stats(devices, loads, stats, topo),
+        }
+    }
+
     fn plan_with_stats(
         &self,
         devices: usize,

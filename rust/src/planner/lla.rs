@@ -11,6 +11,7 @@
 //! fallback), which is the only way a device may exceed `m_alpha`.
 
 use super::{plan_ep, Planner, RoutePlan, Segment, WeightTransfer};
+use crate::chaos::PoolState;
 use crate::config::LlepConfig;
 use crate::routing::imbalance_ratio;
 use crate::topology::Topology;
@@ -47,6 +48,33 @@ impl Planner for Llep {
         }
     }
 
+    fn plan_with_pool(
+        &self,
+        devices: usize,
+        loads: &[u64],
+        stats: &[u64],
+        topo: Option<&Topology>,
+        pool: Option<&PoolState>,
+    ) -> RoutePlan {
+        match pool {
+            Some(p) if p.is_degraded() => {
+                // A degraded pool invalidates the Alg. 4 guard: equal
+                // *token* loads are not equal *completion times* when
+                // speeds differ, and a dead native device must be
+                // re-planned around no matter how balanced the routing
+                // looks. Always run the (speed-aware) assignment.
+                if p.alive_count() == 0 {
+                    // Nothing schedulable. Return the degenerate native
+                    // plan; pricing strands it and the sims surface the
+                    // error — planners themselves stay total.
+                    return plan_ep(loads.len(), devices, loads);
+                }
+                plan_llep_pool(&self.cfg, loads.len(), devices, loads, topo, p)
+            }
+            _ => self.plan_with_stats(devices, loads, stats, topo),
+        }
+    }
+
     fn label(&self) -> String {
         format!(
             "LLEP(a={},m={},l={})",
@@ -72,6 +100,38 @@ pub fn plan_llep(
     loads: &[u64],
     topo: Option<&Topology>,
 ) -> RoutePlan {
+    plan_llep_impl(cfg, num_experts, devices, loads, topo, None)
+}
+
+/// Speed-aware LLEP over a degraded/heterogeneous pool: capacities and
+/// least-loaded ordering are in *normalized time* (`tokens / speed`), so
+/// a device's token share is proportional to its effective speed and the
+/// makespan `max_d load_d / s_d` — the quantity a straggler actually
+/// bounds — is what gets balanced. Dead devices (speed 0) have zero
+/// capacity and are never spilled to; experts native to a dead device
+/// spill entirely, which is the elastic replan the serving layer relies
+/// on after a failure.
+pub fn plan_llep_pool(
+    cfg: &LlepConfig,
+    num_experts: usize,
+    devices: usize,
+    loads: &[u64],
+    topo: Option<&Topology>,
+    pool: &PoolState,
+) -> RoutePlan {
+    assert_eq!(pool.len(), devices, "pool must cover every device");
+    let speeds = pool.effective_speeds();
+    plan_llep_impl(cfg, num_experts, devices, loads, topo, Some(&speeds))
+}
+
+fn plan_llep_impl(
+    cfg: &LlepConfig,
+    num_experts: usize,
+    devices: usize,
+    loads: &[u64],
+    topo: Option<&Topology>,
+    speeds: Option<&[f64]>,
+) -> RoutePlan {
     assert_eq!(loads.len(), num_experts);
     assert!(devices > 0 && num_experts % devices == 0, "N must divide P");
     let m_per_dev = num_experts / devices;
@@ -87,8 +147,23 @@ pub fn plan_llep(
         return plan;
     }
 
-    // m_alpha: capacity threshold per device (tokens).
+    // m_alpha: capacity threshold per device (tokens). Homogeneous pools
+    // keep the paper's scalar `alpha * total / P` (bit-identical to the
+    // pre-chaos planner); a speed profile splits the same total budget
+    // `alpha * total` proportionally to effective speed, so every
+    // device's *normalized* capacity `m_alpha_d / s_d` is equal and dead
+    // devices get exactly zero.
     let m_alpha = cfg.alpha * total as f64 / devices as f64;
+    let caps: Option<Vec<f64>> = speeds.map(|s| {
+        let sum: f64 = s.iter().sum();
+        s.iter().map(|&sd| cfg.alpha * total as f64 * sd / sum.max(f64::MIN_POSITIVE)).collect()
+    });
+    let cap_of = |d: usize| -> f64 {
+        match &caps {
+            None => m_alpha,
+            Some(c) => c[d],
+        }
+    };
     let min_chunk = cfg.min_gemm_tokens as u64;
 
     // Sorted expert order, decreasing load (stable on index for ties).
@@ -115,11 +190,14 @@ pub fn plan_llep(
         }
         let mut segs: Vec<Segment> = Vec::new();
 
-        // Available native capacity (may be negative).
+        // Available native capacity (may be negative). A dead native
+        // device has no capacity at all: everything must spill, even
+        // loads below the min-GEMM size.
+        let native_dead = speeds.is_some_and(|s| s[ng] <= 0.0);
         let occupied = (g_a[ng] + g_p[ng]) as f64;
-        let na = (m_alpha - occupied).floor() as i64;
+        let na = if native_dead { i64::MIN } else { (cap_of(ng) - occupied).floor() as i64 };
 
-        if na >= load as i64 {
+        if !native_dead && na >= load as i64 {
             // Case 1: native device takes everything. This is the common
             // case on balanced-ish loads — no spill machinery touched.
             segs.push(Segment { device: ng, start: 0, end: load, forced: false });
@@ -137,19 +215,20 @@ pub fn plan_llep(
                 segs.push(Segment { device: ng, start: 0, end: nc, forced: false });
                 g_a[ng] += nc;
                 spill(
-                    ng, remaining, nc, &mut segs, &mut g_a, &g_p, m_alpha, min_chunk, topo,
-                    &mut others_scratch,
+                    ng, remaining, nc, &mut segs, &mut g_a, &g_p, &cap_of, min_chunk, topo,
+                    speeds, &mut others_scratch,
                 );
             }
         } else {
             // Case 3: native is already at/over capacity — spill the whole
-            // expert, except tiny loads which stay local.
-            if load < min_chunk {
+            // expert, except tiny loads which stay local (never on a dead
+            // native device: those must move regardless of size).
+            if load < min_chunk && !native_dead {
                 segs.push(Segment { device: ng, start: 0, end: load, forced: true });
                 g_a[ng] += load;
             } else {
                 spill(
-                    ng, load, 0, &mut segs, &mut g_a, &g_p, m_alpha, min_chunk, topo,
+                    ng, load, 0, &mut segs, &mut g_a, &g_p, &cap_of, min_chunk, topo, speeds,
                     &mut others_scratch,
                 );
             }
@@ -174,6 +253,9 @@ pub fn plan_llep(
 
 /// Alg. 3 (LLAS): spill `r` remaining tokens of one expert, starting at
 /// global token offset `to`, to the least-loaded non-native devices.
+/// With a speed profile, "least loaded" means least *normalized* load
+/// (`tokens / speed`) over the alive devices, and per-device capacities
+/// come from `cap_of`.
 #[allow(clippy::too_many_arguments)]
 fn spill(
     ng: usize,
@@ -182,9 +264,10 @@ fn spill(
     segs: &mut Vec<Segment>,
     g_a: &mut [u64],
     g_p: &[u64],
-    m_alpha: f64,
+    cap_of: &dyn Fn(usize) -> f64,
     min_chunk: u64,
     topo: Option<&Topology>,
+    speeds: Option<&[f64]>,
     others: &mut Vec<usize>,
 ) {
     let devices = g_a.len();
@@ -195,24 +278,40 @@ fn spill(
         // iteration changes a single device's load, so the re-sort of a
         // nearly-sorted short vec is cheap — see EXPERIMENTS.md §Perf.)
         others.clear();
-        others.extend((0..devices).filter(|&d| d != ng));
+        match speeds {
+            None => others.extend((0..devices).filter(|&d| d != ng)),
+            // Dead devices are unschedulable: never spill candidates.
+            Some(s) => others.extend((0..devices).filter(|&d| d != ng && s[d] > 0.0)),
+        }
         if others.is_empty() {
-            // P=1: there is no other device to spill to — keep the whole
-            // remainder native, flagged forced (it exceeds m_alpha by
-            // construction, which is the only legal way to exceed it).
+            // P=1 (or everything else dead): there is nowhere to spill —
+            // keep the whole remainder native, flagged forced (it exceeds
+            // m_alpha by construction, which is the only legal way to
+            // exceed it). On a dead native device pricing strands the
+            // plan and the serving layer raises the error.
             segs.push(Segment { device: ng, start: to, end: to + r, forced: true });
             g_a[ng] += r;
             return;
         }
-        others.sort_by_key(|&d| {
-            let inter = topo.map_or(0u8, |t| !t.same_node(ng, d) as u8);
-            (g_a[d] + g_p[d], inter, d)
-        });
+        match speeds {
+            None => others.sort_by_key(|&d| {
+                let inter = topo.map_or(0u8, |t| !t.same_node(ng, d) as u8);
+                (g_a[d] + g_p[d], inter, d)
+            }),
+            Some(s) => others.sort_by(|&a, &b| {
+                let norm = |d: usize| (g_a[d] + g_p[d]) as f64 / s[d];
+                let inter = |d: usize| topo.map_or(0u8, |t| !t.same_node(ng, d) as u8);
+                norm(a)
+                    .total_cmp(&norm(b))
+                    .then(inter(a).cmp(&inter(b)))
+                    .then(a.cmp(&b))
+            }),
+        }
 
         let mut assigned = false;
         for &o in others.iter() {
             let occupied = (g_a[o] + g_p[o]) as f64;
-            let cap = (m_alpha - occupied).floor() as i64;
+            let cap = (cap_of(o) - occupied).floor() as i64;
             if cap <= 0 {
                 continue; // device full
             }
@@ -415,5 +514,93 @@ mod tests {
         let loads = vec![977, 3, 250, 41, 0, 123, 77, 529];
         let plan = plan_llep(&cfg(1.0, 50, 1.3), 8, 4, &loads, None);
         validate_plan(&plan, &loads).unwrap();
+    }
+
+    fn pool_with_speeds(speeds: &[f64]) -> PoolState {
+        let mut p = PoolState::healthy(speeds.len());
+        for (d, &s) in speeds.iter().enumerate() {
+            if s <= 0.0 {
+                p.devices[d].alive = false;
+            } else {
+                p.devices[d].speed = s;
+            }
+        }
+        p
+    }
+
+    #[test]
+    fn uniform_pool_matches_homogeneous_planner() {
+        // A degraded-typed but speed-uniform pool must reproduce the
+        // homogeneous plan exactly (the normalized capacities coincide).
+        let loads = vec![977, 3, 250, 41, 0, 123, 77, 529];
+        let pool = PoolState::healthy(4);
+        let a = plan_llep(&cfg(1.0, 50, 1.3), 8, 4, &loads, None);
+        let b = plan_llep_pool(&cfg(1.0, 50, 1.3), 8, 4, &loads, None, &pool);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn straggler_gets_a_proportionally_smaller_share() {
+        // One hot expert, device 0 at quarter speed: the normalized-time
+        // balance gives device 0 about half the tokens of a full-speed
+        // peer... speeds [0.25, 1, 1, 1] -> shares 1/13, 4/13, 4/13, 4/13.
+        let mut loads = vec![0u64; 8];
+        loads[0] = 13_000;
+        let pool = pool_with_speeds(&[0.25, 1.0, 1.0, 1.0]);
+        let plan = plan_llep_pool(&cfg(1.0, 10, 1.3), 8, 4, &loads, None, &pool);
+        validate_plan(&plan, &loads).unwrap();
+        let dl = plan.device_loads();
+        assert_eq!(dl.iter().sum::<u64>(), 13_000);
+        assert!(dl[0] <= 1_000, "straggler takes ~1/13: {dl:?}");
+        for d in 1..4 {
+            assert!(dl[d] >= 3_800 && dl[d] <= 4_200, "full-speed peers take ~4/13: {dl:?}");
+        }
+        // Normalized completion times are near-equal (the objective).
+        let norm: Vec<f64> = dl
+            .iter()
+            .zip([0.25, 1.0, 1.0, 1.0])
+            .map(|(&l, s)| l as f64 / s)
+            .collect();
+        let max = norm.iter().cloned().fold(0.0, f64::max);
+        let min = norm.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(max / min < 1.1, "normalized makespan balanced: {norm:?}");
+    }
+
+    #[test]
+    fn dead_device_is_never_scheduled() {
+        // Device 1 dead; experts 2 and 3 are native to it and must move
+        // entirely — including tiny loads below the min-GEMM size.
+        let loads = vec![400u64, 300, 200, 7];
+        let pool = pool_with_speeds(&[1.0, 0.0]);
+        let plan = plan_llep_pool(&cfg(1.0, 64, 1.3), 4, 2, &loads, None, &pool);
+        validate_plan(&plan, &loads).unwrap();
+        let dl = plan.device_loads();
+        assert_eq!(dl[1], 0, "dead device holds nothing: {dl:?}");
+        assert_eq!(dl[0], 907);
+        assert!(
+            plan.transfers.iter().all(|t| t.to != 1),
+            "no weights shipped to a dead device: {:?}",
+            plan.transfers
+        );
+    }
+
+    #[test]
+    fn pool_aware_trait_path_skips_guard_and_survives_all_dead() {
+        let planner = Llep::new(cfg(1.0, 8, 1.3));
+        // Balanced loads would normally hit the lambda guard; a straggler
+        // pool must bypass it and rebalance anyway.
+        let loads = vec![100u64; 8];
+        let pool = pool_with_speeds(&[0.25, 1.0, 1.0, 1.0]);
+        let plan = planner.plan_with_pool(4, &loads, &loads, None, Some(&pool));
+        assert!(!plan.fallback_ep, "guard skipped under degradation");
+        let dl = plan.device_loads();
+        assert!(dl[0] < dl[1], "straggler relieved even on balanced routing: {dl:?}");
+        // Healthy pool: identical to the plain path (guard applies).
+        let healthy = planner.plan_with_pool(4, &loads, &loads, None, Some(&PoolState::healthy(4)));
+        assert!(healthy.fallback_ep);
+        // All-dead pool: total, degenerate native plan (strands later).
+        let dead = pool_with_speeds(&[0.0, 0.0, 0.0, 0.0]);
+        let plan = planner.plan_with_pool(4, &loads, &loads, None, Some(&dead));
+        assert_eq!(plan.device_loads().iter().sum::<u64>(), 800);
     }
 }

@@ -13,6 +13,7 @@
 //! is not worth it (same §3.2/Fig. 8 reasoning as LLEP's `m`).
 
 use super::{Planner, RoutePlan, Segment, WeightTransfer};
+use crate::chaos::PoolState;
 use crate::topology::Topology;
 
 /// The LPT planner's single knob.
@@ -43,6 +44,22 @@ impl Planner for Lpt {
         _topo: Option<&Topology>,
     ) -> RoutePlan {
         plan_lpt(self.min_tokens, loads.len(), devices, loads)
+    }
+
+    fn plan_with_pool(
+        &self,
+        devices: usize,
+        loads: &[u64],
+        stats: &[u64],
+        topo: Option<&Topology>,
+        pool: Option<&PoolState>,
+    ) -> RoutePlan {
+        match pool {
+            Some(p) if p.is_degraded() && p.alive_count() > 0 => {
+                plan_lpt_pool(self.min_tokens, loads.len(), devices, loads, p)
+            }
+            _ => self.plan_with_stats(devices, loads, stats, topo),
+        }
     }
 
     fn label(&self) -> String {
@@ -83,6 +100,64 @@ pub fn plan_lpt(min_tokens: u64, num_experts: usize, devices: usize, loads: &[u6
             (0..devices)
                 .min_by_key(|&d| (dev_load[d], d != native, d))
                 .expect("devices > 0")
+        };
+        dev_load[target] += l;
+        assignments[e].push(Segment { device: target, start: 0, end: l, forced: false });
+        if target != native {
+            transfers.push(WeightTransfer { expert: e, from: native, to: target });
+        }
+    }
+    RoutePlan { num_experts, devices, assignments, transfers, fallback_ep: false }
+}
+
+/// Speed-aware greedy LPT over a degraded pool: experts go to the device
+/// with the least *normalized* load (`tokens / speed`) among the alive
+/// devices. Whole experts only, as ever — a dead native device forces
+/// even sub-`min_tokens` experts to relocate.
+pub fn plan_lpt_pool(
+    min_tokens: u64,
+    num_experts: usize,
+    devices: usize,
+    loads: &[u64],
+    pool: &PoolState,
+) -> RoutePlan {
+    assert_eq!(loads.len(), num_experts);
+    assert!(devices > 0 && num_experts % devices == 0, "N must divide P");
+    assert_eq!(pool.len(), devices, "pool must cover every device");
+    let m = num_experts / devices;
+    let speeds = pool.effective_speeds();
+    let alive: Vec<usize> = (0..devices).filter(|&d| speeds[d] > 0.0).collect();
+    assert!(!alive.is_empty(), "plan_lpt_pool needs at least one alive device");
+
+    let mut order: Vec<usize> = (0..num_experts).collect();
+    order.sort_unstable_by_key(|&e| (std::cmp::Reverse(loads[e]), e));
+
+    let mut dev_load = vec![0u64; devices];
+    let mut assignments: Vec<Vec<Segment>> = vec![Vec::new(); num_experts];
+    let mut transfers: Vec<WeightTransfer> = Vec::new();
+    for &e in &order {
+        let l = loads[e];
+        if l == 0 {
+            continue;
+        }
+        let native = e / m;
+        let native_alive = speeds[native] > 0.0;
+        let target = if l < min_tokens && native_alive {
+            native
+        } else {
+            // Least normalized load among alive devices; ties prefer
+            // native (no transfer), then the lowest index (determinism).
+            alive
+                .iter()
+                .copied()
+                .min_by(|&a, &b| {
+                    let norm = |d: usize| dev_load[d] as f64 / speeds[d];
+                    norm(a)
+                        .total_cmp(&norm(b))
+                        .then((a != native).cmp(&(b != native)))
+                        .then(a.cmp(&b))
+                })
+                .expect("alive devices exist")
         };
         dev_load[target] += l;
         assignments[e].push(Segment { device: target, start: 0, end: l, forced: false });
@@ -152,6 +227,30 @@ mod tests {
         let plan = plan_lpt(1, 8, 4, &loads);
         validate_plan(&plan, &loads).unwrap();
         assert_eq!(plan.device_loads(), vec![200, 200, 200, 200]);
+    }
+
+    #[test]
+    fn pool_aware_lpt_avoids_dead_and_relieves_stragglers() {
+        // Device 1 dead: its native experts (2, 3) relocate, tiny or not.
+        let loads = vec![500u64, 400, 300, 7];
+        let mut pool = PoolState::healthy(2);
+        pool.devices[1].alive = false;
+        let plan = plan_lpt_pool(1024, 4, 2, &loads, &pool);
+        validate_plan(&plan, &loads).unwrap();
+        assert_eq!(plan.device_loads()[1], 0);
+        assert_eq!(plan.device_loads()[0], 1207);
+
+        // Straggler: normalized-load greedy gives the slow device less.
+        let loads = vec![300u64, 300, 300, 300, 300, 300, 300, 300];
+        let mut pool = PoolState::healthy(4);
+        pool.devices[0].speed = 0.25;
+        let plan = Lpt::new(1).plan_with_pool(4, &loads, &loads, None, Some(&pool));
+        validate_plan(&plan, &loads).unwrap();
+        let dl = plan.device_loads();
+        assert!(dl[0] < dl[1], "straggler takes fewer tokens: {dl:?}");
+        // Healthy pool through the trait path falls through to plain LPT.
+        let plain = Lpt::new(1).plan_with_pool(4, &loads, &loads, None, None);
+        assert_eq!(plain, plan_lpt(1, 8, 4, &loads));
     }
 
     #[test]

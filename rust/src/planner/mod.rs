@@ -41,6 +41,7 @@ pub use lpt::{plan_lpt, Lpt};
 pub use placement::Placement;
 pub use registry::{parse_planner, ParamSpec, Params, PlannerEntry, Registry, CACHED_PARAMS};
 
+use crate::chaos::PoolState;
 use crate::config::LlepConfig;
 use crate::topology::Topology;
 
@@ -162,6 +163,25 @@ pub trait Planner: Send + Sync {
     /// intra-node spill preference.
     fn plan(&self, devices: usize, loads: &[u64], topo: Option<&Topology>) -> RoutePlan {
         self.plan_with_stats(devices, loads, loads, topo)
+    }
+
+    /// Like [`plan_with_stats`](Planner::plan_with_stats) but with a
+    /// per-device health/speed view (the chaos layer). The engine passes
+    /// `Some` only when the pool is degraded. The default ignores it —
+    /// static planners *cannot* adapt, which is the point the chaos
+    /// evaluation axis measures. Pool-aware planners (LLEP, LPT)
+    /// override this to minimize *normalized* completion time
+    /// (`tokens / speed`) and to never schedule a dead device.
+    fn plan_with_pool(
+        &self,
+        devices: usize,
+        loads: &[u64],
+        stats: &[u64],
+        topo: Option<&Topology>,
+        pool: Option<&PoolState>,
+    ) -> RoutePlan {
+        let _ = pool;
+        self.plan_with_stats(devices, loads, stats, topo)
     }
 
     /// Execution policy: split each device's per-expert GEMMs into pieces
@@ -298,6 +318,25 @@ impl Planner for PlannerKind {
             PlannerKind::Llep(cfg) => Llep::new(*cfg).spec(),
             PlannerKind::Eplb { replicas } => Eplb::new(*replicas).spec(),
             PlannerKind::ChunkedEp { chunk_tokens } => ChunkedEp::new(*chunk_tokens).spec(),
+        }
+    }
+
+    fn plan_with_pool(
+        &self,
+        devices: usize,
+        loads: &[u64],
+        stats: &[u64],
+        topo: Option<&Topology>,
+        pool: Option<&PoolState>,
+    ) -> RoutePlan {
+        match self {
+            // Speed-aware: forward the pool to the concrete planner.
+            PlannerKind::Llep(cfg) => {
+                Llep::new(*cfg).plan_with_pool(devices, loads, stats, topo, pool)
+            }
+            // Static placements by construction — the pool view cannot
+            // change what they produce.
+            _ => self.plan_with_stats(devices, loads, stats, topo),
         }
     }
 

@@ -71,6 +71,19 @@ impl Topology {
         // that node, consistently with `node_of`.
         self.devices.div_ceil(self.devices_per_node)
     }
+
+    /// A copy with both bandwidth tiers divided by `factor` (the chaos
+    /// layer's link degradation; per-message latency is unchanged — the
+    /// wire got slower, not the NCCL launch path). `factor <= 1.0` is a
+    /// no-op so recovery steps restore nominal bandwidth exactly.
+    pub fn degraded(&self, factor: f64) -> Topology {
+        let mut t = self.clone();
+        if factor > 1.0 {
+            t.intra_node_bw /= factor;
+            t.inter_node_bw /= factor;
+        }
+        t
+    }
 }
 
 #[cfg(test)]
@@ -158,6 +171,20 @@ mod tests {
         assert_eq!(t.num_nodes(), 1);
         assert!(t.spill_order(0).is_empty());
         assert_eq!(t.transfer_time(0, 0, 1 << 20), 0.0);
+    }
+
+    #[test]
+    fn degraded_links_slow_transfers_proportionally() {
+        let t = two_node();
+        let d = t.degraded(2.0);
+        assert_eq!(d.intra_node_bw, t.intra_node_bw / 2.0);
+        assert_eq!(d.inter_node_bw, t.inter_node_bw / 2.0);
+        assert_eq!(d.latency_s, t.latency_s, "launch latency unchanged");
+        let bytes = 1u64 << 24;
+        assert!(d.transfer_time(0, 1, bytes) > t.transfer_time(0, 1, bytes));
+        // factor <= 1 is the identity (recovery path).
+        assert_eq!(t.degraded(1.0).intra_node_bw, t.intra_node_bw);
+        assert_eq!(t.degraded(0.5).inter_node_bw, t.inter_node_bw);
     }
 
     #[test]

@@ -1,7 +1,8 @@
 //! Bi-objective (latency, peak memory) Pareto selection over trials.
 //!
 //! Both objectives are minimized. OOM trials are infeasible on the
-//! profile's hardware and never enter the front. The front is returned
+//! profile's hardware — and stranded trials on its fault plan — so
+//! neither ever enters the front. The front is returned
 //! latency-ascending / memory-descending, so `front[0]` is the
 //! lowest-latency feasible configuration (the tuner's recommendation)
 //! and `front.last()` the most memory-frugal one.
@@ -19,7 +20,8 @@ pub fn dominates(a: &TrialMetrics, b: &TrialMetrics) -> bool {
 /// Non-dominated subset of the non-OOM trials, sorted by ascending
 /// latency (ties broken toward lower memory, then spec — deterministic).
 pub fn pareto_front(trials: &[Trial]) -> Vec<Trial> {
-    let mut feasible: Vec<Trial> = trials.iter().filter(|t| !t.metrics.oom).cloned().collect();
+    let mut feasible: Vec<Trial> =
+        trials.iter().filter(|t| !t.metrics.infeasible()).cloned().collect();
     feasible.sort_by(|a, b| {
         a.metrics
             .latency_s
@@ -46,7 +48,11 @@ mod tests {
     use super::*;
 
     fn trial(spec: &str, latency_s: f64, peak_bytes: u64, oom: bool) -> Trial {
-        Trial { spec: spec.into(), budget: 1, metrics: TrialMetrics { latency_s, peak_bytes, oom } }
+        Trial {
+            spec: spec.into(),
+            budget: 1,
+            metrics: TrialMetrics { latency_s, peak_bytes, oom, stranded: false },
+        }
     }
 
     #[test]
@@ -107,10 +113,20 @@ mod tests {
 
     #[test]
     fn dominates_is_strict() {
-        let a = TrialMetrics { latency_s: 1.0, peak_bytes: 10, oom: false };
+        let a = TrialMetrics { latency_s: 1.0, peak_bytes: 10, oom: false, stranded: false };
         assert!(!dominates(&a, &a), "a point never dominates itself");
-        let faster = TrialMetrics { latency_s: 0.5, peak_bytes: 10, oom: false };
+        let faster = TrialMetrics { latency_s: 0.5, peak_bytes: 10, oom: false, stranded: false };
         assert!(dominates(&faster, &a));
         assert!(!dominates(&a, &faster));
+    }
+
+    #[test]
+    fn stranded_trials_never_enter_the_front() {
+        let mut dead = trial("dead-fast", 0.1, 5, false);
+        dead.metrics.stranded = true;
+        let trials = vec![dead, trial("ok", 1.0, 50, false)];
+        let front = pareto_front(&trials);
+        assert_eq!(front.len(), 1);
+        assert_eq!(front[0].spec, "ok");
     }
 }

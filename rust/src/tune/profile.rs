@@ -105,6 +105,16 @@ impl HardwareProfile {
         if let Some(g) = get_f64(&doc, "profile.comm", "inter_node_gbps")? {
             sys.comm.inter_node_bw = g * 1e9;
         }
+        if let Some(v) = doc.get("profile", "device_speeds") {
+            let arr =
+                v.as_arr().ok_or("[profile] device_speeds must be an array of numbers")?;
+            let mut speeds = Vec::with_capacity(arr.len());
+            for x in arr {
+                speeds
+                    .push(x.as_f64().ok_or("[profile] device_speeds entries must be numbers")?);
+            }
+            sys.device_speeds = speeds;
+        }
         sys.validate()?;
         Ok(HardwareProfile { name: sys.name.clone(), system: sys })
     }
@@ -182,6 +192,28 @@ intra_node_gbps = 225.0
         assert_eq!(p.system.comm.intra_node_bw, 225e9);
         let base = SystemConfig::preset(SystemPreset::H200x8);
         assert_eq!(p.system.comm.inter_node_bw, base.comm.inter_node_bw, "untouched keys keep");
+    }
+
+    #[test]
+    fn device_speeds_make_a_heterogeneous_profile() {
+        let p = HardwareProfile::from_toml(
+            r#"
+[profile]
+name = "site-mixed"
+base = "cpusim4"
+device_speeds = [1.0, 1.0, 0.5, 0.5]
+"#,
+        )
+        .unwrap();
+        assert_eq!(p.system.device_speeds, vec![1.0, 1.0, 0.5, 0.5]);
+        // Wrong arity fails SystemConfig::validate.
+        let bad = HardwareProfile::from_toml(
+            "[profile]\nbase = \"cpusim4\"\ndevice_speeds = [1.0]\n",
+        );
+        assert!(bad.is_err(), "{bad:?}");
+        // The builtin mixed preset resolves as a profile too.
+        let mixed = HardwareProfile::resolve("mixed-h100-a100").unwrap();
+        assert!(!mixed.system.device_speeds.is_empty());
     }
 
     #[test]

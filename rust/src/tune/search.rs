@@ -29,6 +29,7 @@
 
 use super::pareto::pareto_front;
 use super::space::SearchSpace;
+use crate::chaos::FaultPlan;
 use crate::coordinator::ContinuousBatchSim;
 use crate::exec::{Engine, PlanCostModel};
 use crate::planner::Registry;
@@ -81,7 +82,7 @@ pub enum Strategy {
     Halving { eta: usize },
 }
 
-/// The two tuning objectives (both minimized) plus the feasibility flag.
+/// The two tuning objectives (both minimized) plus the feasibility flags.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct TrialMetrics {
     /// Step mode: mean full-model step latency; serve mode: p50 TPOT
@@ -91,6 +92,19 @@ pub struct TrialMetrics {
     pub peak_bytes: u64,
     /// Some device exceeded the profile's memory capacity.
     pub oom: bool,
+    /// Under the trial's fault plan the candidate left work on a dead
+    /// device (or the pool became unrecoverable): the configuration
+    /// cannot serve this scenario at all. Like OOM, stranded trials are
+    /// infeasible and never enter the Pareto front — this is how a fault
+    /// dimension stress-hardens a recommendation.
+    pub stranded: bool,
+}
+
+impl TrialMetrics {
+    /// Infeasible on this profile/fault-plan (never recommended).
+    pub fn infeasible(&self) -> bool {
+        self.oom || self.stranded
+    }
 }
 
 /// One evaluated candidate.
@@ -138,6 +152,11 @@ pub struct Tuner {
     pub tokens_per_device: usize,
     /// Full-fidelity budget (steps or requests).
     pub full_budget: usize,
+    /// Extra scenario dimension: every trial runs under this fault plan
+    /// (step `k` of a trial sees `faults.state_at(k, ...)`), so the
+    /// recommendation is stress-hardened against the injected
+    /// degradation. None = always-healthy pool.
+    pub faults: Option<FaultPlan>,
     cache: Mutex<BTreeMap<TrialKey, TrialMetrics>>,
     priced_units: AtomicU64,
 }
@@ -163,9 +182,17 @@ impl Tuner {
                 Mode::Step => 8,
                 Mode::Serve => 24,
             },
+            faults: None,
             cache: Mutex::new(BTreeMap::new()),
             priced_units: AtomicU64::new(0),
         }
+    }
+
+    /// Tune under a fault plan (chaos dimension). The plan joins the
+    /// trial-cache key, so fault-free and faulted trials never mix.
+    pub fn with_faults(mut self, faults: FaultPlan) -> Tuner {
+        self.faults = Some(faults);
+        self
     }
 
     /// Replace the registry (runtime-registered planners join the search).
@@ -193,10 +220,11 @@ impl Tuner {
     }
 
     fn key(&self, spec: &str, budget: usize) -> TrialKey {
+        let faults = self.faults.as_ref().map(FaultPlan::label).unwrap_or_default();
         (
             spec.to_string(),
             self.scenario.label(),
-            format!("{}/{}", self.engine.system.name, self.mode.name()),
+            format!("{}/{}/{}", self.engine.system.name, self.mode.name(), faults),
             budget,
         )
     }
@@ -230,6 +258,9 @@ impl Tuner {
     /// engine charges modeled plan time.
     fn compute(&self, spec: &str, budget: usize) -> Result<TrialMetrics, String> {
         let planner = self.registry.parse(spec)?;
+        if let Some(f) = &self.faults {
+            f.validate(self.engine.system.devices)?;
+        }
         match self.mode {
             Mode::Step => {
                 let layers = self.engine.model.num_moe_layers().max(1);
@@ -237,20 +268,46 @@ impl Tuner {
                 let mut latency_sum = 0.0f64;
                 let mut peak_bytes = 0u64;
                 let mut oom = false;
+                let mut stranded = false;
+                let mut priced_batches = 0usize;
                 for batch in 0..budget {
                     let mut rng = Rng::new(batch_seed(self.seed, batch));
+                    // Under a fault plan, batch `k` prices on the pool at
+                    // step `k` (the engine view is re-derived per batch).
+                    let holder: Engine;
+                    let engine: &Engine = match &self.faults {
+                        Some(f) => {
+                            let pool = f.state_at(batch, &self.engine.pool);
+                            if pool.alive_count() == 0 {
+                                stranded = true;
+                                break;
+                            }
+                            holder = self.engine.for_pool(pool);
+                            &holder
+                        }
+                        None => &self.engine,
+                    };
                     let lms = profile.generate_loads(
-                        &self.engine.model,
-                        self.engine.system.devices,
+                        &engine.model,
+                        engine.system.devices,
                         self.tokens_per_device,
                         &mut rng,
                     );
-                    let r = self.engine.run_model(&lms, &*planner)?;
+                    let r = engine.run_model(&lms, &*planner)?;
                     latency_sum += r.latency_s;
                     peak_bytes = peak_bytes.max(r.max_peak_bytes());
                     oom |= r.oom;
+                    stranded |= r.stranded;
+                    priced_batches += 1;
                 }
-                Ok(TrialMetrics { latency_s: latency_sum / budget as f64, peak_bytes, oom })
+                // Mean over the batches actually priced: an all-dead pool
+                // breaks the loop early and must not dilute the mean.
+                Ok(TrialMetrics {
+                    latency_s: latency_sum / priced_batches.max(1) as f64,
+                    peak_bytes,
+                    oom,
+                    stranded,
+                })
             }
             Mode::Serve => {
                 // A dedicated arrivals stream, disjoint from the step-mode
@@ -264,15 +321,36 @@ impl Tuner {
                     (8, 32),
                     &mut arrivals,
                 );
-                let sim = ContinuousBatchSim::with_planner(
+                let mut sim = ContinuousBatchSim::with_planner(
                     self.engine.clone(),
                     planner,
                     self.scenario.clone(),
                     self.tokens_per_device,
                 );
-                let r = sim.run(&requests, &mut Rng::new(self.seed.wrapping_add(1)));
-                let latency_s = if r.tpot.n > 0 { r.tpot.p50 } else { r.ttft.p50 };
-                Ok(TrialMetrics { latency_s, peak_bytes: r.peak_bytes, oom: r.oom_steps > 0 })
+                if let Some(f) = &self.faults {
+                    sim = sim.with_faults(f.clone());
+                }
+                match sim.try_run(&requests, &mut Rng::new(self.seed.wrapping_add(1))) {
+                    Ok(r) => {
+                        let latency_s = if r.tpot.n > 0 { r.tpot.p50 } else { r.ttft.p50 };
+                        Ok(TrialMetrics {
+                            latency_s,
+                            peak_bytes: r.peak_bytes,
+                            oom: r.oom_steps > 0,
+                            stranded: false,
+                        })
+                    }
+                    // The pool became unrecoverable under this candidate
+                    // (e.g. a static planner met a failure): that is a
+                    // *trial outcome*, not a tuner error — the candidate
+                    // is infeasible on this fault plan.
+                    Err(_) => Ok(TrialMetrics {
+                        latency_s: f64::INFINITY,
+                        peak_bytes: 0,
+                        oom: false,
+                        stranded: true,
+                    }),
+                }
             }
         }
     }
@@ -366,12 +444,12 @@ fn batch_seed(seed: u64, batch: usize) -> u64 {
     seed ^ (batch as u64).wrapping_add(1).wrapping_mul(0x9E3779B97F4A7C15)
 }
 
-/// Rank trials best-first: feasible before OOM, then latency, then peak
-/// memory, then spec (a total, deterministic order).
+/// Rank trials best-first: feasible before OOM/stranded, then latency,
+/// then peak memory, then spec (a total, deterministic order).
 pub fn rank(trials: &mut [Trial]) {
     trials.sort_by(|a, b| {
-        (a.metrics.oom as u8)
-            .cmp(&(b.metrics.oom as u8))
+        (a.metrics.infeasible() as u8)
+            .cmp(&(b.metrics.infeasible() as u8))
             .then(a.metrics.latency_s.total_cmp(&b.metrics.latency_s))
             .then(a.metrics.peak_bytes.cmp(&b.metrics.peak_bytes))
             .then(a.spec.cmp(&b.spec))
@@ -446,6 +524,47 @@ mod tests {
         let specs_a: Vec<&str> = a.trials.iter().map(|t| t.spec.as_str()).collect();
         let specs_b: Vec<&str> = b.trials.iter().map(|t| t.spec.as_str()).collect();
         assert_eq!(specs_a, specs_b, "same seed, same subset");
+    }
+
+    #[test]
+    fn fault_dimension_separates_cache_keys_and_strands_static_planners() {
+        // Same spec, same budget: the faulted trial must not be served
+        // from the fault-free cache entry (and vice versa).
+        let healthy = tuner(Mode::Step);
+        let clean = healthy.evaluate("llep:m=8", 2).unwrap();
+        let faulted =
+            tuner(Mode::Step).with_faults(FaultPlan::parse("slow:dev=0,x=4").unwrap());
+        let slow = faulted.evaluate("llep:m=8", 2).unwrap();
+        assert!(
+            slow.metrics.latency_s > clean.metrics.latency_s,
+            "a straggler costs latency even to an adaptive planner: {} vs {}",
+            slow.metrics.latency_s,
+            clean.metrics.latency_s
+        );
+        assert!(!slow.metrics.stranded);
+        // A permanent failure strands static EP but not pool-aware LLEP,
+        // in both modes — the stress-hardening signal.
+        for mode in [Mode::Step, Mode::Serve] {
+            let t = tuner(mode).with_faults(FaultPlan::parse("fail:dev=1,at=1").unwrap());
+            let ep = t.evaluate("ep", 3).unwrap();
+            assert!(ep.metrics.stranded, "{mode:?}: EP cannot adapt");
+            assert!(ep.metrics.infeasible());
+            let ll = t.evaluate("llep:m=8", 3).unwrap();
+            assert!(!ll.metrics.stranded, "{mode:?}: LLEP replans around the hole");
+        }
+    }
+
+    #[test]
+    fn faulted_trials_reproduce_bit_identically() {
+        for mode in [Mode::Step, Mode::Serve] {
+            let t = tuner(mode)
+                .with_faults(FaultPlan::parse("slow:dev=0,x=4;fail:dev=2,at=2").unwrap());
+            let trial = t.evaluate("llep:m=8", 3).unwrap();
+            assert!(
+                t.verify(&trial).unwrap(),
+                "faulted trial must re-price bit-identically in {mode:?}"
+            );
+        }
     }
 
     #[test]

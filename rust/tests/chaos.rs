@@ -1,0 +1,256 @@
+//! Chaos-layer integration tests: the fault/heterogeneity acceptance
+//! contracts, end-to-end through planner + engine + serving simulators.
+//!
+//! * a single 4x straggler on an 8-device pool (concentrated routing):
+//!   speed-aware LLEP prices the model step >= 2x faster than static EP;
+//! * a permanent failure mid-serve: the sim recovers (elastic replan, no
+//!   lost tokens, bounded recovery steps) and the whole run is
+//!   bit-reproducible given (fault spec, scenario, system, seed);
+//! * a P=1 pool whose sole device fails errors cleanly, never panics.
+
+use llep::chaos::{FaultPlan, PoolState};
+use llep::config::{ModelConfig, ModelPreset, SystemConfig, SystemPreset};
+use llep::coordinator::{ContinuousBatchSim, Request, ServeSim};
+use llep::exec::{Engine, PlanCostModel};
+use llep::planner::PlannerKind;
+use llep::routing::{DepthProfile, Scenario};
+use llep::util::rng::Rng;
+
+fn engine() -> Engine {
+    Engine::modeled(
+        ModelConfig::preset(ModelPreset::Fig1Layer),
+        SystemConfig::preset(SystemPreset::H200x8),
+    )
+}
+
+#[test]
+fn straggler_4x_llep_model_step_at_least_2x_faster_than_ep() {
+    // The acceptance scenario: one 4x straggler, 8 devices, concentrated
+    // routing. The pool view comes from a FaultPlan so the whole spec ->
+    // state -> pricing path is exercised.
+    let faults = FaultPlan::parse("slow:dev=0,x=4").unwrap();
+    let base = engine();
+    let engine = base.for_pool(faults.state_at(0, &base.pool));
+    assert!(engine.pool.is_degraded());
+
+    let profile = DepthProfile::uniform(Scenario::concentrated(0.9, 1), 1);
+    let mut rng = Rng::new(1);
+    let lms = profile.generate_loads(&engine.model, 8, 16_384, &mut rng);
+    let ep = engine.run_model(&lms, &PlannerKind::StandardEp).unwrap();
+    let ll = engine.run_model(&lms, &PlannerKind::llep_default()).unwrap();
+    assert!(!ep.stranded && !ll.stranded, "a straggler is slow, not dead");
+    assert_eq!(ep.tokens, ll.tokens);
+    assert!(
+        ep.latency_s >= ll.latency_s * 2.0,
+        "speed-aware LLEP must be >= 2x faster under the straggler: EP {} vs LLEP {}",
+        ep.latency_s,
+        ll.latency_s
+    );
+}
+
+#[test]
+fn permanent_failure_recovery_is_exact_bounded_and_bit_reproducible() {
+    // Deterministic plan pricing so two runs are bit-comparable.
+    let engine = engine().with_plan_cost(PlanCostModel::default());
+    // 30k-token requests against the 64k batch budget: 2 per batch, so
+    // 12 requests take 6 engine steps and the failure at step 2 lands
+    // mid-run with several post-failure steps to recover over.
+    let reqs: Vec<Request> =
+        (0..12).map(|id| Request { id, arrival_s: 0.0, tokens: 30_000 }).collect();
+    let faults = FaultPlan::parse("fail:dev=1,at=2").unwrap();
+    let run = || {
+        let sim = ServeSim::with_planner(
+            engine.clone(),
+            PlannerKind::llep_default().boxed(),
+            Scenario::concentrated(0.8, 4),
+            8192,
+        )
+        .with_faults(faults.clone());
+        sim.try_run(&reqs, &mut Rng::new(9)).expect("chaos-aware LLEP must recover")
+    };
+
+    let a = run();
+    assert_eq!(a.completed, 12, "every request completes despite the failure");
+    assert!(a.tokens.is_exact(), "ledger conservation across the failure: {:?}", a.tokens);
+    assert_eq!(a.chaos.failures, 1);
+    assert_eq!(a.chaos.requeues, 1, "the in-flight step requeued exactly once");
+    assert!(a.chaos.requeued_tokens > 0);
+    assert!(a.chaos.wasted_s > 0.0, "the aborted attempt costs time");
+    assert!(
+        a.chaos.max_recovery_steps <= 1,
+        "bounded recovery: one aborted attempt per failure, got {}",
+        a.chaos.max_recovery_steps
+    );
+    assert!(a.chaos.fault_steps >= 4, "steps 2..6 run on the degraded pool");
+
+    // Bit-reproducible given (fault spec, scenario, system, seed).
+    let b = run();
+    assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits(), "makespan bit-identical");
+    assert_eq!(a.request_latency.p99.to_bits(), b.request_latency.p99.to_bits());
+    assert_eq!(a.chaos, b.chaos);
+    assert_eq!(a.tokens, b.tokens);
+}
+
+#[test]
+fn static_ep_cannot_recover_from_the_same_failure() {
+    let engine = engine().with_plan_cost(PlanCostModel::default());
+    let reqs: Vec<Request> =
+        (0..12).map(|id| Request { id, arrival_s: 0.0, tokens: 30_000 }).collect();
+    let faults = FaultPlan::parse("fail:dev=0,at=2").unwrap();
+    let sim = ServeSim::with_planner(
+        engine,
+        PlannerKind::StandardEp.boxed(),
+        Scenario::concentrated(0.8, 4),
+        8192,
+    )
+    .with_faults(faults);
+    let err = sim.try_run(&reqs, &mut Rng::new(9)).unwrap_err();
+    assert!(err.contains("dead device"), "{err}");
+}
+
+#[test]
+fn sole_device_failure_errors_cleanly_instead_of_panicking() {
+    // P=1 pool, the only device fails at step 0: both simulators must
+    // return an error, not panic.
+    let engine = Engine::modeled(
+        ModelConfig::preset(ModelPreset::Tiny),
+        SystemConfig::preset(SystemPreset::CpuSim8).with_devices(1),
+    );
+    let faults = FaultPlan::parse("fail:dev=0,at=0").unwrap();
+
+    let reqs: Vec<Request> = vec![Request { id: 0, arrival_s: 0.0, tokens: 256 }];
+    let serve = ServeSim::with_planner(
+        engine.clone(),
+        PlannerKind::llep_default().boxed(),
+        Scenario::concentrated(0.9, 1),
+        1024,
+    )
+    .with_faults(faults.clone());
+    let err = serve.try_run(&reqs, &mut Rng::new(3)).unwrap_err();
+    assert!(err.contains("no alive devices"), "{err}");
+
+    let gen = ContinuousBatchSim::requests(2, 1e-4, (32, 64), (2, 4), &mut Rng::new(4));
+    let cont = ContinuousBatchSim::with_planner(
+        engine,
+        PlannerKind::llep_default().boxed(),
+        Scenario::concentrated(0.9, 1),
+        1024,
+    )
+    .with_faults(faults);
+    let err = cont.try_run(&gen, &mut Rng::new(5)).unwrap_err();
+    assert!(err.contains("no alive devices"), "{err}");
+}
+
+#[test]
+fn fail_then_recover_scales_the_pool_back_up() {
+    let engine = engine().with_plan_cost(PlanCostModel::default());
+    let reqs = ContinuousBatchSim::requests(6, 2e-5, (512, 1024), (6, 10), &mut Rng::new(11));
+    let faults = FaultPlan::parse("fail:dev=3,at=1;recover:dev=3,at=4").unwrap();
+    let sim = ContinuousBatchSim::with_planner(
+        engine,
+        PlannerKind::llep_default().boxed(),
+        Scenario::concentrated(0.8, 4),
+        16_384,
+    )
+    .with_faults(faults);
+    let r = sim.try_run(&reqs, &mut Rng::new(12)).unwrap();
+    assert_eq!(r.completed, 6);
+    assert!(r.tokens.is_exact(), "{:?}", r.tokens);
+    assert_eq!(r.chaos.failures, 1);
+    assert_eq!(r.chaos.recoveries, 1, "the recover event rejoins the device");
+    assert_eq!(r.chaos.fault_steps, 3, "degraded exactly for steps 1..4");
+}
+
+#[test]
+fn straggler_serve_llep_beats_ep_end_to_end() {
+    // Service-bound burst under a permanent 4x straggler: the chaos-aware
+    // planner's makespan and tail latency beat static EP's.
+    let faults = FaultPlan::parse("slow:dev=0,x=4").unwrap();
+    let mut rng = Rng::new(13);
+    let reqs = ServeSim::poisson_requests(24, 0.00005, 1024, 4096, &mut rng);
+    let serve = |planner: PlannerKind| {
+        ServeSim::with_planner(engine(), planner.boxed(), Scenario::concentrated(0.9, 1), 8192)
+            .with_faults(faults.clone())
+            .try_run(&reqs, &mut Rng::new(14))
+            .unwrap()
+    };
+    let ep = serve(PlannerKind::StandardEp);
+    let ll = serve(PlannerKind::llep_default());
+    assert_eq!(ep.completed, 24);
+    assert_eq!(ll.completed, 24);
+    assert!(ep.tokens.is_exact() && ll.tokens.is_exact());
+    assert!(
+        ll.makespan_s * 2.0 < ep.makespan_s,
+        "LLEP {} vs EP {} under the straggler",
+        ll.makespan_s,
+        ep.makespan_s
+    );
+    assert!(ll.request_latency.p99 < ep.request_latency.p99, "degraded tail improves too");
+    assert!(ep.chaos.fault_steps > 0 && ll.chaos.fault_steps > 0);
+}
+
+#[test]
+fn mixed_generation_preset_flows_into_the_engine_pool() {
+    // The heterogeneous preset alone (no injected faults) degrades the
+    // pool view; pool-aware LLEP beats EP even on *balanced* routing,
+    // because equal token counts are unequal completion times.
+    let engine = Engine::modeled(
+        ModelConfig::preset(ModelPreset::Fig1Layer),
+        SystemConfig::preset(SystemPreset::MixedH100A100),
+    );
+    assert!(engine.pool.is_degraded(), "preset speeds reach the pool");
+    assert_eq!(engine.pool.alive_count(), 8);
+
+    let mut rng = Rng::new(21);
+    let lm = Scenario::balanced().generate_loads(&engine.model, 8, 32_768, &mut rng);
+    let ep = engine.run_step_loads(&lm, &PlannerKind::StandardEp);
+    let ll = engine.run_step_loads(&lm, &PlannerKind::llep_default());
+    assert!(!ep.stranded && !ll.stranded);
+    assert!(
+        ll.latency_s < ep.latency_s,
+        "speed-aware LLEP exploits the fast half: LLEP {} vs EP {}",
+        ll.latency_s,
+        ep.latency_s
+    );
+    // EP's critical path is an A100; LLEP's normalized balance shrinks
+    // the worst normalized completion time.
+    assert!(ll.phases.compute_s < ep.phases.compute_s);
+}
+
+#[test]
+fn jitter_and_link_events_are_reproducible_through_serving() {
+    let engine = engine().with_plan_cost(PlanCostModel::default());
+    let reqs: Vec<Request> =
+        (0..6).map(|id| Request { id, arrival_s: 0.0, tokens: 30_000 }).collect();
+    let faults = FaultPlan::parse("jitter:amp=0.3,seed=5;link:x=2,from=1").unwrap();
+    let run = || {
+        ServeSim::with_planner(
+            engine.clone(),
+            PlannerKind::llep_default().boxed(),
+            Scenario::concentrated(0.9, 1),
+            8192,
+        )
+        .with_faults(faults.clone())
+        .try_run(&reqs, &mut Rng::new(31))
+        .unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits());
+    assert!(a.chaos.fault_steps > 0, "jitter degrades every step");
+    assert!(a.tokens.is_exact());
+}
+
+#[test]
+fn pool_state_round_trips_through_fault_plan_composition() {
+    // FaultPlan events compose over a heterogeneous system base pool.
+    let sys = SystemConfig::preset(SystemPreset::MixedH100A100);
+    let engine = Engine::modeled(ModelConfig::preset(ModelPreset::Fig1Layer), sys);
+    let plan = FaultPlan::parse("slow:dev=4,x=2;fail:dev=7,at=0").unwrap();
+    let pool = plan.state_at(0, &engine.pool);
+    assert_eq!(pool.devices[4].speed, 0.33 / 2.0, "fault stacks on the preset speed");
+    assert!(!pool.devices[7].alive);
+    assert_eq!(pool.alive_count(), 7);
+    // The healthy pool comparison stays untouched.
+    assert_eq!(PoolState::healthy(8).alive_count(), 8);
+}

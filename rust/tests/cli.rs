@@ -233,6 +233,118 @@ fn tune_writes_json_report() {
 }
 
 #[test]
+fn chaos_compares_planners_under_a_straggler() {
+    let out = run_ok(&["chaos", "--steps", "8", "--faults", "slow:dev=0,x=4"]);
+    assert!(out.contains("faults: slow:dev=0,x=4"), "{out}");
+    assert!(out.contains("LLEP"), "{out}");
+    assert!(out.contains("fault steps"), "{out}");
+    assert!(out.contains("ok"), "{out}");
+}
+
+#[test]
+fn chaos_failure_marks_static_ep_unrecoverable() {
+    let out = run_ok(&["chaos", "--steps", "12", "--faults", "fail:dev=0,at=1"]);
+    assert!(out.contains("unrecoverable"), "EP cannot adapt:\n{out}");
+    assert!(out.contains("ok"), "chaos-aware LLEP recovers:\n{out}");
+    assert!(out.contains("requeue"), "requeue accounting surfaces:\n{out}");
+}
+
+#[test]
+fn chaos_writes_json_report() {
+    let dir = std::env::temp_dir().join("llep_chaos_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("chaos.json");
+    run_ok(&[
+        "chaos", "--steps", "8", "--faults", "slow:dev=0,x=4;link:x=2", "--out",
+        path.to_str().unwrap(),
+    ]);
+    let text = std::fs::read_to_string(&path).unwrap();
+    for key in ["\"faults\"", "\"planners\"", "\"chaos\"", "\"fault_steps\""] {
+        assert!(text.contains(key), "chaos JSON missing {key}:\n{text}");
+    }
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn serve_accepts_fault_plan() {
+    let out = run_ok(&[
+        "serve", "--steps", "10", "--faults", "slow:dev=1,x=2", "--planner", "llep",
+    ]);
+    assert!(out.contains("faults: slow:dev=1,x=2"), "{out}");
+    assert!(out.contains("chaos"), "{out}");
+
+    // A failure plan with the default EP/LLEP pair: the EP row renders as
+    // unrecoverable while the LLEP row still serves (the table survives).
+    let out = run_ok(&["serve", "--steps", "10", "--faults", "fail:dev=0,at=1"]);
+    assert!(out.contains("unrecoverable"), "{out}");
+    assert!(out.contains("LLEP"), "{out}");
+}
+
+#[test]
+fn run_on_mixed_pool_shows_heterogeneity_and_bad_faults_fail() {
+    let out = run_ok(&["run", "--system", "mixed-h100-a100", "--tokens", "4096"]);
+    assert!(out.contains("pool:"), "degraded pool surfaces in the title:\n{out}");
+    assert!(out.contains("min speed 0.33"), "{out}");
+
+    let out = llep().args(["run", "--faults", "meteor:dev=1"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown fault kind"));
+
+    let out = llep().args(["chaos", "--faults", "fail:dev=99,at=0"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("addresses device"));
+}
+
+#[test]
+fn planner_reads_recommendation_from_tune_report() {
+    // tune --out writes a report; --planner @report.json consumes it.
+    let dir = std::env::temp_dir().join("llep_pin_consume_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("tune.json");
+    run_ok(&[
+        "tune", "--budget", "smoke", "--profile", "cpusim4", "--scenario", "concentrated",
+        "--tokens", "1024", "--out", path.to_str().unwrap(),
+    ]);
+    let spec_arg = format!("@{}", path.to_str().unwrap());
+    let out = run_ok(&["run", "--planner", &spec_arg, "--tokens", "2048"]);
+    assert!(out.contains("planner from"), "{out}");
+
+    // A report without a recommendation field fails loudly.
+    let bogus = dir.join("bogus.json");
+    std::fs::write(&bogus, "{\"trials\": []}").unwrap();
+    let arg = format!("@{}", bogus.to_str().unwrap());
+    let out = llep().args(["run", "--planner", &arg]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("recommended.spec"));
+    std::fs::remove_file(path).ok();
+    std::fs::remove_file(bogus).ok();
+}
+
+#[test]
+fn tune_pin_bootstraps_verifies_and_detects_drift() {
+    let dir = std::env::temp_dir().join("llep_pin_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let pin = dir.join("cpusim4.pin");
+    std::fs::remove_file(&pin).ok();
+    let pin_s = pin.to_str().unwrap().to_string();
+    let args: Vec<&str> = vec![
+        "tune", "--budget", "smoke", "--profile", "cpusim4", "--scenario", "concentrated",
+        "--tokens", "1024", "--pin", &pin_s,
+    ];
+    let out = run_ok(&args);
+    assert!(out.contains("pin bootstrapped"), "{out}");
+    assert!(pin.exists());
+    let out = run_ok(&args);
+    assert!(out.contains("pin ok"), "stable optimum verifies:\n{out}");
+    // A poisoned pin simulates a silently-moved optimum: loud failure.
+    std::fs::write(&pin, "bogus-spec\n").unwrap();
+    let out = llep().args(&args).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("pin mismatch"));
+    std::fs::remove_file(&pin).ok();
+}
+
+#[test]
 fn calibrate_fits_model() {
     let out = run_ok(&["calibrate"]);
     assert!(out.contains("peak_flops"));

@@ -238,6 +238,7 @@ fn synthetic_pareto_property_over_random_trials() {
                         latency_s: (1 + rng.index(50)) as f64 / 10.0,
                         peak_bytes: (1 + rng.index(50)) as u64,
                         oom: rng.index(10) == 0,
+                        stranded: rng.index(10) == 0,
                     },
                 })
                 .collect::<Vec<Trial>>()
@@ -245,8 +246,8 @@ fn synthetic_pareto_property_over_random_trials() {
         |trials: &Vec<Trial>| {
             let front = pareto_front(trials);
             for f in &front {
-                if f.metrics.oom {
-                    return Err("OOM point on the front".into());
+                if f.metrics.oom || f.metrics.stranded {
+                    return Err("infeasible point on the front".into());
                 }
             }
             for (a, b) in front.iter().zip(front.iter().skip(1)) {
@@ -254,7 +255,7 @@ fn synthetic_pareto_property_over_random_trials() {
                     return Err(format!("{} and {} dominate within front", a.spec, b.spec));
                 }
             }
-            for t in trials.iter().filter(|t| !t.metrics.oom) {
+            for t in trials.iter().filter(|t| !t.metrics.oom && !t.metrics.stranded) {
                 let covered = front.iter().any(|f| {
                     f.metrics.latency_s <= t.metrics.latency_s
                         && f.metrics.peak_bytes <= t.metrics.peak_bytes
