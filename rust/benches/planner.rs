@@ -3,18 +3,31 @@
 //! and the native GEMM kernel. These are the targets of the perf pass
 //! (EXPERIMENTS.md §Perf).
 //!
+//! The pinned `hotpath` suite (same cases as `llep bench --suite
+//! hotpath`, medians gated against `BENCH_planner.json` in CI) runs
+//! first; the sweeps below add problem-size coverage on top.
+//!
 //! Run: `cargo bench --bench planner` (add `--quick` to shrink).
 
 use llep::exec::dispatch;
-use llep::planner::{plan_ep, plan_eplb, plan_llep};
+use llep::harness::hotpath::hotpath_suite;
+use llep::planner::{plan_ep, plan_eplb, plan_llep, plan_llep_scratch, PlanScratch};
 use llep::prelude::*;
 use llep::tensor::{matmul, Mat};
 use llep::util::benchkit::{bb, quick_requested, Bencher};
 
 fn main() {
-    let mut b = if quick_requested() { Bencher::quick() } else { Bencher::new() };
+    let quick = quick_requested();
+
+    // --- the pinned hotpath suite (skewed-scenario headline) ---------------
+    let _ = hotpath_suite(quick);
+
+    let mut b = if quick { Bencher::quick() } else { Bencher::new() };
 
     // --- LLA planning latency across problem sizes -------------------------
+    // `lla/...` plans steady-state (arena reused, plans recycled);
+    // `lla-alloc/...` pays a fresh arena per call for comparison.
+    let mut scratch = PlanScratch::new();
     for &(n, p) in &[(32usize, 8usize), (128, 8), (256, 8), (384, 8), (128, 16)] {
         let mut model = ModelConfig::preset(ModelPreset::Fig1Layer);
         model.num_experts = n;
@@ -22,7 +35,18 @@ fn main() {
         let lm = Scenario::concentrated(0.9, 4.min(n)).generate_loads(&model, p, 32_768, &mut rng);
         let loads = lm.expert_loads();
         let cfg = LlepConfig::default();
-        b.bench(&format!("lla/N={n}/P={p}"), || bb(plan_llep(&cfg, n, p, &loads, None)));
+        b.bench(&format!("lla/N={n}/P={p}"), || {
+            let plan = plan_llep_scratch(&cfg, n, p, &loads, None, None, &mut scratch);
+            let k = plan.transfers.len();
+            scratch.recycle(plan);
+            k
+        });
+        b.bench(&format!("lla-alloc/N={n}/P={p}"), || {
+            // A fresh arena per call IS the historical allocating path
+            // (plan_llep itself reuses the thread-local arena).
+            let mut fresh = PlanScratch::new();
+            bb(plan_llep_scratch(&cfg, n, p, &loads, None, None, &mut fresh))
+        });
         b.bench(&format!("ep/N={n}/P={p}"), || bb(plan_ep(n, p, &loads)));
         b.bench(&format!("eplb/N={n}/P={p}"), || bb(plan_eplb(p, n, p, &loads, &loads)));
     }

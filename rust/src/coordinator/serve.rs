@@ -171,6 +171,7 @@ impl<'a> ChaosDriver<'a> {
                 self.stats.requeues += 1;
                 self.stats.requeued_tokens += batch_tokens as u64;
                 self.pending_aborts += 1;
+                recycle_report_plans(attempt);
             }
         }
         if pool.is_degraded() {
@@ -211,6 +212,16 @@ impl<'a> ChaosDriver<'a> {
 /// routes with `scenario` (single-layer models still get one layer).
 fn uniform_profile(engine: &Engine, scenario: Scenario) -> DepthProfile {
     DepthProfile::uniform(scenario, engine.model.num_moe_layers().max(1))
+}
+
+/// Hand a consumed step report's routing plans back to this thread's
+/// planning arena (see `planner::scratch`): the serving loops price one
+/// report per step and drop it, so recycling here is what keeps the
+/// decode regime's plan→price cycle allocation-free in steady state.
+fn recycle_report_plans(report: ModelStepReport) {
+    for layer in report.layers {
+        crate::planner::recycle_plan(layer.plan);
+    }
 }
 
 /// Shared step pricer for both simulators: one full-model engine step
@@ -419,6 +430,7 @@ impl ServeSim {
             if report.oom {
                 oom_batches += 1;
             }
+            recycle_report_plans(report);
             for req in batch {
                 latencies.push(clock - req.arrival_s);
             }
@@ -664,6 +676,7 @@ impl ContinuousBatchSim {
             for _ in 0..decode_tokens {
                 tpot.push(report.latency_s);
             }
+            recycle_report_plans(report);
             active.retain_mut(|(left, _)| {
                 *left -= 1;
                 if *left == 0 {

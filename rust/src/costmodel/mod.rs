@@ -80,13 +80,32 @@ impl MemoryModel {
         resident_experts: usize,
         imported_experts: usize,
     ) -> u64 {
+        self.device_peak_bytes_iter(
+            model,
+            work_tokens.iter().copied(),
+            resident_experts,
+            imported_experts,
+        )
+    }
+
+    /// [`device_peak_bytes`](Self::device_peak_bytes) folding straight
+    /// over an iterator of per-expert token counts — the pricing hot
+    /// path uses this to avoid collecting an intermediate `Vec<u64>` per
+    /// device per step.
+    pub fn device_peak_bytes_iter(
+        &self,
+        model: &ModelConfig,
+        work_tokens: impl Iterator<Item = u64>,
+        resident_experts: usize,
+        imported_experts: usize,
+    ) -> u64 {
         let d = model.d_model as u64;
         let h = model.d_ff as u64;
         let mats = model.mats_per_expert() as u64;
         let bytes = self.dtype_bytes as u64;
         let weights = (resident_experts + imported_experts) as u64 * mats * d * h * bytes;
         // Eq. 4 activation terms summed over the experts computed here.
-        let acts: u64 = work_tokens.iter().map(|&b| b * (d + h) * bytes).sum();
+        let acts: u64 = work_tokens.map(|b| b * (d + h) * bytes).sum();
         weights + acts
     }
 
@@ -103,12 +122,32 @@ impl MemoryModel {
         imported_experts: usize,
         chunk: u64,
     ) -> u64 {
+        self.device_peak_bytes_chunked_iter(
+            model,
+            work_tokens.iter().copied(),
+            resident_experts,
+            imported_experts,
+            chunk,
+        )
+    }
+
+    /// Iterator form of
+    /// [`device_peak_bytes_chunked`](Self::device_peak_bytes_chunked)
+    /// (see [`device_peak_bytes_iter`](Self::device_peak_bytes_iter)).
+    pub fn device_peak_bytes_chunked_iter(
+        &self,
+        model: &ModelConfig,
+        work_tokens: impl Iterator<Item = u64>,
+        resident_experts: usize,
+        imported_experts: usize,
+        chunk: u64,
+    ) -> u64 {
         let d = model.d_model as u64;
         let h = model.d_ff as u64;
         let mats = model.mats_per_expert() as u64;
         let bytes = self.dtype_bytes as u64;
         let weights = (resident_experts + imported_experts) as u64 * mats * d * h * bytes;
-        let inputs: u64 = work_tokens.iter().map(|&b| b * d * bytes).sum();
+        let inputs: u64 = work_tokens.map(|b| b * d * bytes).sum();
         let intermediate = chunk * h * bytes;
         weights + inputs + intermediate
     }
@@ -142,8 +181,17 @@ impl CommCostModel {
     /// / bw` (links are full-duplex); the caller takes the max across
     /// devices, mirroring a synchronous NCCL collective.
     pub fn all_to_all_times(&self, bytes: &[Vec<u64>]) -> Vec<f64> {
+        let mut times = Vec::new();
+        self.all_to_all_times_into(bytes, &mut times);
+        times
+    }
+
+    /// [`all_to_all_times`](Self::all_to_all_times) into a reusable
+    /// buffer (the pricing hot path).
+    pub fn all_to_all_times_into(&self, bytes: &[Vec<u64>], times: &mut Vec<f64>) {
         let p = self.topo.devices;
-        let mut times = vec![0.0f64; p];
+        times.clear();
+        times.resize(p, 0.0);
         for (src, row) in bytes.iter().enumerate() {
             debug_assert_eq!(row.len(), p);
             let mut sent_intra = 0u64;
@@ -184,7 +232,6 @@ impl CommCostModel {
             let launches = if self.fused { (msgs > 0) as u64 * 2 } else { msgs };
             times[src] = self.topo.latency_s * launches as f64 + send_t.max(recv_t);
         }
-        times
     }
 
     /// Time for one P2P transfer.

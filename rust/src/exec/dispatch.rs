@@ -45,15 +45,24 @@ pub fn origin_offsets(lm: &LoadMatrix, expert: usize) -> Vec<u64> {
 /// use the same stream; comm pricing skips those).
 pub fn chunks(plan: &RoutePlan, lm: &LoadMatrix) -> Vec<Chunk> {
     let mut out = Vec::new();
+    chunks_into(plan, lm, &mut out);
+    out
+}
+
+/// [`chunks`] into a reusable buffer. The per-expert origin offsets are
+/// accumulated inline rather than collected (the historical
+/// implementation allocated one offsets vector per expert per priced
+/// step), so the pricing hot path stays allocation-free once warm.
+pub fn chunks_into(plan: &RoutePlan, lm: &LoadMatrix, out: &mut Vec<Chunk>) {
+    out.clear();
     for (e, segs) in plan.assignments.iter().enumerate() {
         if segs.is_empty() {
             continue;
         }
-        let offsets = origin_offsets(lm, e);
         for seg in segs {
             // intersect [seg.start, seg.end) with each origin's range
+            let mut o_start = 0u64;
             for p in 0..lm.devices() {
-                let o_start = offsets[p];
                 let o_end = o_start + lm.counts[p][e];
                 let lo = seg.start.max(o_start);
                 let hi = seg.end.min(o_end);
@@ -66,39 +75,86 @@ pub fn chunks(plan: &RoutePlan, lm: &LoadMatrix) -> Vec<Chunk> {
                         local_end: hi - o_start,
                     });
                 }
+                o_start = o_end;
             }
         }
     }
-    out
+}
+
+/// Clear + size a per-(src, dst) byte matrix, reusing row allocations.
+fn reset_matrix(m: &mut Vec<Vec<u64>>, devices: usize) {
+    m.truncate(devices);
+    for row in m.iter_mut() {
+        row.clear();
+        row.resize(devices, 0);
+    }
+    while m.len() < devices {
+        m.push(vec![0u64; devices]);
+    }
 }
 
 /// Per-(src, dst) byte matrix for the dispatch All-to-All, given bytes per
 /// token (`token_bytes`). Local movements cost nothing.
 pub fn dispatch_bytes(chunks: &[Chunk], devices: usize, token_bytes: u64) -> Vec<Vec<u64>> {
-    let mut m = vec![vec![0u64; devices]; devices];
+    let mut m = Vec::new();
+    dispatch_bytes_into(chunks, devices, token_bytes, &mut m);
+    m
+}
+
+/// [`dispatch_bytes`] into a reusable matrix (the pricing hot path).
+pub fn dispatch_bytes_into(
+    chunks: &[Chunk],
+    devices: usize,
+    token_bytes: u64,
+    m: &mut Vec<Vec<u64>>,
+) {
+    reset_matrix(m, devices);
     for c in chunks {
         if c.origin != c.dest {
             m[c.origin][c.dest] += c.tokens() * token_bytes;
         }
     }
-    m
 }
 
 /// The combine All-to-All is the exact reverse of dispatch.
 pub fn combine_bytes(chunks: &[Chunk], devices: usize, token_bytes: u64) -> Vec<Vec<u64>> {
-    let mut m = vec![vec![0u64; devices]; devices];
+    let mut m = Vec::new();
+    combine_bytes_into(chunks, devices, token_bytes, &mut m);
+    m
+}
+
+/// [`combine_bytes`] into a reusable matrix (the pricing hot path).
+pub fn combine_bytes_into(
+    chunks: &[Chunk],
+    devices: usize,
+    token_bytes: u64,
+    m: &mut Vec<Vec<u64>>,
+) {
+    reset_matrix(m, devices);
     for c in chunks {
         if c.origin != c.dest {
             m[c.dest][c.origin] += c.tokens() * token_bytes;
         }
     }
-    m
 }
 
 /// Tokens each device must hold and compute: `work[d]` lists (expert,
 /// tokens) in expert order — the grouped-GEMM batch sizes of the step.
 pub fn device_work(plan: &RoutePlan, lm: &LoadMatrix) -> Vec<Vec<(usize, u64)>> {
-    let mut work: Vec<Vec<(usize, u64)>> = vec![Vec::new(); plan.devices];
+    let mut work = Vec::new();
+    device_work_into(plan, lm, &mut work);
+    work
+}
+
+/// [`device_work`] into a reusable set of per-device buffers.
+pub fn device_work_into(plan: &RoutePlan, lm: &LoadMatrix, work: &mut Vec<Vec<(usize, u64)>>) {
+    work.truncate(plan.devices);
+    for w in work.iter_mut() {
+        w.clear();
+    }
+    while work.len() < plan.devices {
+        work.push(Vec::new());
+    }
     for (e, segs) in plan.assignments.iter().enumerate() {
         let _ = lm; // loads are implicit in the segments
         for s in segs {
@@ -114,7 +170,6 @@ pub fn device_work(plan: &RoutePlan, lm: &LoadMatrix) -> Vec<Vec<(usize, u64)>> 
             }
         }
     }
-    work
 }
 
 #[cfg(test)]

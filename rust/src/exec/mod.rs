@@ -244,7 +244,11 @@ impl Engine {
         stats_lm: &LoadMatrix,
         planner: &dyn Planner,
     ) -> StepReport {
-        self.plan_and_price(lm, stats_lm, planner).0
+        let (report, plan) = self.plan_and_price(lm, stats_lm, planner);
+        // Single-step callers never see the plan: hand its buffers back
+        // to this thread's planning arena (zero-alloc steady state).
+        crate::planner::scratch::recycle_plan(plan);
+        report
     }
 
     /// Shared plan-measure-price block behind every modeled step (single-
@@ -280,10 +284,14 @@ impl Engine {
             // is robust to a preemption/contention spike landing on
             // either run (layers are planned on concurrent worker threads
             // in run_model). Planning is microseconds, so the extra run
-            // is negligible.
+            // is negligible. The warm plan's buffers are recycled into
+            // this thread's planning arena before the timed run, so what
+            // the clock actually measures is the allocation-free
+            // steady-state path (see planner::scratch).
             let t_warm = std::time::Instant::now();
-            let _ = plan_once();
+            let warm = plan_once();
             let warm_s = t_warm.elapsed().as_secs_f64();
+            crate::planner::scratch::recycle_plan(warm);
             let t0 = std::time::Instant::now();
             let plan = plan_once();
             (plan, t0.elapsed().as_secs_f64().min(warm_s))

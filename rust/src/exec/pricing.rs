@@ -1,10 +1,22 @@
 //! Plan pricing: turn a [`RoutePlan`] + [`LoadMatrix`] into a
 //! [`StepReport`] using the cost models (paper Eq. 3/4 + comm model).
+//!
+//! Pricing runs once per MoE layer per step, so the intermediates that
+//! never escape into the report (token chunks, byte matrices, per-device
+//! SoA accumulators) live in a thread-local [`PriceScratch`] and are
+//! reused across calls; per-device folds run straight over the work
+//! lists instead of collecting token vectors. Weight-transfer time is
+//! accumulated off the plan's own transfer list — planners emit it in
+//! canonical `(to, from, expert)` order at construction
+//! ([`RoutePlan::transfers_canonical`]), so the historical per-step
+//! clone + sort survives only as a cold fallback for out-of-tree
+//! planners.
 
-use super::dispatch::{chunks, combine_bytes, device_work, dispatch_bytes};
+use super::dispatch::{chunks_into, combine_bytes_into, device_work_into, Chunk};
 use super::{Engine, GemmBackendKind, StepReport};
-use crate::planner::{CacheStats, Planner, RoutePlan};
+use crate::planner::{CacheStats, Planner, RoutePlan, WeightTransfer};
 use crate::routing::LoadMatrix;
+use std::cell::RefCell;
 
 /// Timing decomposition of one step.
 #[derive(Clone, Debug, Default)]
@@ -33,6 +45,24 @@ impl PhaseTimes {
     }
 }
 
+/// Reusable pricing intermediates (never escape into the report).
+#[derive(Default)]
+struct PriceScratch {
+    chunks: Vec<Chunk>,
+    work: Vec<Vec<(usize, u64)>>,
+    disp: Vec<Vec<u64>>,
+    comb: Vec<Vec<u64>>,
+    dispatch_times: Vec<f64>,
+    combine_times: Vec<f64>,
+    weights_recv_s: Vec<f64>,
+    /// Cold-path sort buffer for plans without canonical transfers.
+    ordered: Vec<WeightTransfer>,
+}
+
+thread_local! {
+    static PRICE_SCRATCH: RefCell<Option<PriceScratch>> = const { RefCell::new(None) };
+}
+
 /// Price `plan` over `lm`. `measured_compute`, when given (real backends),
 /// overrides the Eq.-3 model with measured per-device compute seconds.
 pub fn price_plan(
@@ -43,23 +73,39 @@ pub fn price_plan(
     plan_time_s: f64,
     measured_compute: Option<&[f64]>,
 ) -> StepReport {
+    let mut ps = PRICE_SCRATCH.with(|slot| slot.borrow_mut().take()).unwrap_or_default();
+    let report = price_plan_impl(engine, plan, lm, planner, plan_time_s, measured_compute, &mut ps);
+    PRICE_SCRATCH.with(|slot| *slot.borrow_mut() = Some(ps));
+    report
+}
+
+#[allow(clippy::too_many_arguments)]
+fn price_plan_impl(
+    engine: &Engine,
+    plan: &RoutePlan,
+    lm: &LoadMatrix,
+    planner: &dyn Planner,
+    plan_time_s: f64,
+    measured_compute: Option<&[f64]>,
+    ps: &mut PriceScratch,
+) -> StepReport {
     let model = &engine.model;
     let devices = plan.devices;
-    let cs = chunks(plan, lm);
+    chunks_into(plan, lm, &mut ps.chunks);
 
     // ---- communication ----
     let in_bytes = (model.d_model * model.dtype_bytes) as u64;
     // SwiGLU output dim is D; the single-matrix form of §2.1 outputs H.
     let out_dim = if model.swiglu { model.d_model } else { model.d_ff };
     let out_bytes = (out_dim * model.dtype_bytes) as u64;
-    let disp = dispatch_bytes(&cs, devices, in_bytes);
-    let comb = combine_bytes(&cs, devices, out_bytes);
-    let dispatch_times = engine.comm.all_to_all_times(&disp);
-    let combine_times = engine.comm.all_to_all_times(&comb);
-    let dispatch_s = dispatch_times.iter().cloned().fold(0.0, f64::max);
-    let combine_s = combine_times.iter().cloned().fold(0.0, f64::max);
-    let bytes_dispatch: u64 = disp.iter().flatten().sum();
-    let bytes_combine: u64 = comb.iter().flatten().sum();
+    dispatch_bytes_into(&ps.chunks, devices, in_bytes, &mut ps.disp);
+    combine_bytes_into(&ps.chunks, devices, out_bytes, &mut ps.comb);
+    engine.comm.all_to_all_times_into(&ps.disp, &mut ps.dispatch_times);
+    engine.comm.all_to_all_times_into(&ps.comb, &mut ps.combine_times);
+    let dispatch_s = ps.dispatch_times.iter().cloned().fold(0.0, f64::max);
+    let combine_s = ps.combine_times.iter().cloned().fold(0.0, f64::max);
+    let bytes_dispatch: u64 = ps.disp.iter().flatten().sum();
+    let bytes_combine: u64 = ps.comb.iter().flatten().sum();
 
     // ---- weight transfers (P2P), charged to the receiving device ----
     // EPLB's replication is time-amortized (placements change rarely) but
@@ -70,59 +116,69 @@ pub fn price_plan(
     let mut stranded = false;
     let charge_weights = planner.charges_weight_transfers();
     let wbytes = model.expert_weight_bytes() as u64;
-    let mut weights_recv_s = vec![0.0f64; devices];
-    // Accumulate in a canonical order: two plans with the same transfer
-    // *set* must price bit-identically regardless of the order the
-    // planner emitted them (float addition is not associative; the
-    // cache's retargeted plans list transfers by expert index while fresh
-    // LLEP plans list them by descending load).
-    let mut ordered: Vec<_> = plan.transfers.clone();
-    ordered.sort_unstable_by_key(|t| (t.to, t.from, t.expert));
-    for t in &ordered {
+    ps.weights_recv_s.clear();
+    ps.weights_recv_s.resize(devices, 0.0);
+    // Accumulate in the canonical `(to, from, expert)` order: two plans
+    // with the same transfer *set* must price bit-identically regardless
+    // of the order the planner emitted them (float addition is not
+    // associative). In-tree planners canonicalize at construction, so
+    // the plan's own list is read as-is; an out-of-tree plan that did
+    // not is sorted on this cold path.
+    let ordered: &[WeightTransfer] = if plan.transfers_canonical() {
+        &plan.transfers
+    } else {
+        ps.ordered.clear();
+        ps.ordered.extend_from_slice(&plan.transfers);
+        ps.ordered.sort_unstable_by_key(|t| (t.to, t.from, t.expert));
+        &ps.ordered
+    };
+    for t in ordered {
         if degraded && !pool.devices[t.from].alive {
             // The source HBM is gone with its device: weights restore
             // from the host checkpoint path, charged at (degraded)
             // inter-node bandwidth — the elastic-replan recovery cost.
-            weights_recv_s[t.to] +=
+            ps.weights_recv_s[t.to] +=
                 engine.topo.latency_s + wbytes as f64 / engine.topo.inter_node_bw;
         } else {
-            weights_recv_s[t.to] += engine.comm.p2p_time(t.from, t.to, wbytes);
+            ps.weights_recv_s[t.to] += engine.comm.p2p_time(t.from, t.to, wbytes);
         }
         if degraded && !pool.devices[t.to].alive {
             stranded = true; // weights shipped to a dead device
         }
     }
     if !charge_weights {
-        weights_recv_s.iter_mut().for_each(|w| *w = 0.0);
+        ps.weights_recv_s.iter_mut().for_each(|w| *w = 0.0);
     }
     let bytes_weights = plan.transfers.len() as u64 * wbytes;
 
     // ---- compute (Eq. 3 or measured) ----
     // A chunking planner splits each device's per-expert GEMMs into
     // chunk-sized pieces (gradient-checkpointing baseline, paper §3.1).
+    // The fold runs straight over the work lists — same summation order
+    // as the historical collect-then-sum, with zero intermediates.
     let chunk = planner.chunk_tokens();
-    let work = device_work(plan, lm);
-    let split_chunks = |tokens: &[u64]| -> Vec<u64> {
-        match chunk {
-            None => tokens.to_vec(),
-            Some(c) => tokens
-                .iter()
-                .flat_map(|&t| {
-                    let full = t / c;
-                    let rem = t % c;
-                    std::iter::repeat(c).take(full as usize).chain((rem > 0).then_some(rem))
-                })
-                .collect(),
-        }
-    };
+    device_work_into(plan, lm, &mut ps.work);
+    let work = &ps.work;
     let device_compute_s: Vec<f64> = match measured_compute {
         Some(m) => m.to_vec(),
         None => work
             .iter()
             .enumerate()
             .map(|(d, w)| {
-                let tokens: Vec<u64> = w.iter().map(|&(_, t)| t).collect();
-                let t = engine.gemm.device_compute_time(&split_chunks(&tokens), model);
+                let mut t = 0.0f64;
+                for &(_, tokens) in w {
+                    match chunk {
+                        None => t += engine.gemm.gemm_time(tokens, model),
+                        Some(c) => {
+                            for _ in 0..tokens / c {
+                                t += engine.gemm.gemm_time(c, model);
+                            }
+                            if tokens % c > 0 {
+                                t += engine.gemm.gemm_time(tokens % c, model);
+                            }
+                        }
+                    }
+                }
                 if !degraded {
                     return t;
                 }
@@ -148,7 +204,7 @@ pub fn price_plan(
     // the transfer hides behind compute.
     let compute_span = device_compute_s
         .iter()
-        .zip(&weights_recv_s)
+        .zip(&ps.weights_recv_s)
         .map(|(c, w)| if engine.overlap_weights { c.max(*w) } else { c + w })
         .fold(0.0, f64::max);
 
@@ -157,12 +213,12 @@ pub fn price_plan(
     let mem_model = &engine.mem;
     let device_peak_bytes: Vec<u64> = (0..devices)
         .map(|d| {
-            let tokens: Vec<u64> = work[d].iter().map(|&(_, t)| t).collect();
-            let imports = plan.imports_to(d).len();
+            let tokens = work[d].iter().map(|&(_, t)| t);
+            let imports = plan.imports_count(d);
             match chunk {
                 Some(c) => mem_model
-                    .device_peak_bytes_chunked(model, &tokens, m_resident, imports, c),
-                None => mem_model.device_peak_bytes(model, &tokens, m_resident, imports),
+                    .device_peak_bytes_chunked_iter(model, tokens, m_resident, imports, c),
+                None => mem_model.device_peak_bytes_iter(model, tokens, m_resident, imports),
             }
         })
         .collect();
@@ -174,7 +230,7 @@ pub fn price_plan(
         meta_s,
         plan_s: plan_time_s,
         dispatch_s,
-        weights_s: weights_recv_s.iter().cloned().fold(0.0, f64::max),
+        weights_s: ps.weights_recv_s.iter().cloned().fold(0.0, f64::max),
         compute_s: compute_span,
         combine_s,
     };

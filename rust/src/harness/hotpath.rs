@@ -1,0 +1,122 @@
+//! The `hotpath` bench suite behind `llep bench --suite hotpath`.
+//!
+//! One callable definition of the planning/pricing micro-benchmarks the
+//! perf-regression gate pins (`BENCH_planner.json`): the CLI, CI, and
+//! `cargo bench --bench planner` all run the same cases, so a pinned
+//! median means the same thing everywhere.
+//!
+//! The headline case is the **skewed-scenario planner microbench**
+//! (`plan/llep/skewed/...`): 90% of the load into one hot expert on the
+//! Fig-1 layer — the regime where LLEP's spill loop does real work. It
+//! is measured twice: `alloc` plans with a fresh arena every call (the
+//! historical allocating path) and `scratch` reuses one arena with plan
+//! recycling (the steady-state engine path); the ratio between them is
+//! the zero-allocation win, and the pin keeps both from regressing.
+
+use crate::config::{LlepConfig, ModelConfig, ModelPreset, SystemConfig, SystemPreset};
+use crate::exec::{price_plan, Engine};
+use crate::planner::{
+    plan_llep_scratch, plan_lpt_scratch, CachedPlanner, PlanScratch, Planner, PlannerKind,
+};
+use crate::routing::Scenario;
+use crate::util::benchkit::{bb, BenchSuite, Bencher};
+use crate::util::rng::Rng;
+
+/// Tolerance band the `--check` gate defaults to: medians more than 25%
+/// above the pin fail CI.
+pub const DEFAULT_TOLERANCE: f64 = 0.25;
+
+/// Run the hotpath suite and collect its results.
+pub fn hotpath_suite(quick: bool) -> BenchSuite {
+    let mut b = if quick { Bencher::quick() } else { Bencher::new() };
+    let mut suite = BenchSuite::new("hotpath");
+
+    let engine = Engine::modeled(
+        ModelConfig::preset(ModelPreset::Fig1Layer), // N=128 experts
+        SystemConfig::preset(SystemPreset::H200x8),
+    );
+    let mut rng = Rng::new(7);
+    let skewed =
+        Scenario::concentrated(0.9, 1).generate_loads(&engine.model, 8, 32_768, &mut rng);
+    let loads = skewed.expert_loads();
+    let balanced = Scenario::balanced().generate_loads(&engine.model, 8, 32_768, &mut rng);
+    let balanced_loads = balanced.expert_loads();
+    let cfg = LlepConfig::default();
+    let llep = PlannerKind::llep_default();
+
+    // --- the skewed-scenario planner microbench (pinned headline) ---
+    let mut scratch = PlanScratch::new();
+    b.bench("plan/llep/skewed/scratch/N=128/P=8", || {
+        let p = plan_llep_scratch(&cfg, 128, 8, &loads, None, None, &mut scratch);
+        let k = p.transfers.len();
+        scratch.recycle(p);
+        k
+    });
+    b.bench("plan/llep/skewed/alloc/N=128/P=8", || {
+        let mut fresh = PlanScratch::new();
+        let p = plan_llep_scratch(&cfg, 128, 8, &loads, None, None, &mut fresh);
+        p.transfers.len()
+    });
+    b.bench("plan/llep/balanced/guard/N=128/P=8", || {
+        let p = llep.plan_with_stats(8, &balanced_loads, &balanced_loads, None);
+        let k = p.fallback_ep as usize;
+        crate::planner::recycle_plan(p);
+        k
+    });
+
+    // --- LPT rebalancer on the same skew ---
+    b.bench("plan/lpt/skewed/scratch/N=128/P=8", || {
+        let p = plan_lpt_scratch(1024, 128, 8, &loads, None, &mut scratch);
+        let k = p.transfers.len();
+        scratch.recycle(p);
+        k
+    });
+
+    // --- plan-cache hit (retarget path) ---
+    let cached = CachedPlanner::new(PlannerKind::llep_default().boxed());
+    let _ = cached.plan(8, &loads, None); // prime: one miss
+    b.bench("plan/cached-hit/skewed/N=128/P=8", || {
+        let p = cached.plan(8, &loads, None);
+        let k = p.transfers.len();
+        crate::planner::recycle_plan(p);
+        k
+    });
+
+    // --- pricing a fixed plan (canonical transfers, SoA folds) ---
+    let plan = crate::planner::plan_llep(&cfg, 128, 8, &loads, None);
+    b.bench("price/llep/skewed/N=128/P=8", || {
+        bb(price_plan(&engine, &plan, &skewed, &llep, 0.0, None).latency_s)
+    });
+
+    // --- full modeled step: plan + price ---
+    b.bench("step/llep/skewed/N=128/P=8", || bb(engine.run_step_loads(&skewed, &llep).latency_s));
+
+    suite.absorb(&b);
+    suite
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_runs_and_names_are_stable() {
+        // Quick mode keeps this a smoke test; the case names are the pin
+        // contract — renaming one orphans the checked-in baseline, so
+        // assert the headline set explicitly.
+        let suite = hotpath_suite(true);
+        for name in [
+            "plan/llep/skewed/scratch/N=128/P=8",
+            "plan/llep/skewed/alloc/N=128/P=8",
+            "plan/llep/balanced/guard/N=128/P=8",
+            "plan/lpt/skewed/scratch/N=128/P=8",
+            "plan/cached-hit/skewed/N=128/P=8",
+            "price/llep/skewed/N=128/P=8",
+            "step/llep/skewed/N=128/P=8",
+        ] {
+            let r = suite.get(name).unwrap_or_else(|| panic!("case {name} missing"));
+            assert!(r.median_ns > 0.0, "{name} measured nothing");
+        }
+        assert_eq!(suite.name, "hotpath");
+    }
+}

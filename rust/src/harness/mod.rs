@@ -7,6 +7,7 @@
 //! same sweeps.
 
 pub mod fullmodel;
+pub mod hotpath;
 
 use crate::config::{LlepConfig, ModelConfig, ModelPreset, SystemConfig, SystemPreset};
 use crate::exec::Engine;

@@ -64,6 +64,13 @@ pub mod trainer;
 pub mod tune;
 pub mod util;
 
+// The lib test binary counts per-thread allocations so the planner's
+// zero-allocation steady-state contract is asserted, not assumed
+// (`planner::scratch` tests).
+#[cfg(test)]
+#[global_allocator]
+static COUNTING_ALLOC: util::alloc_count::CountingAlloc = util::alloc_count::CountingAlloc;
+
 /// Convenience re-exports covering the most common entry points.
 pub mod prelude {
     pub use crate::chaos::{DeviceState, FaultPlan, PoolState};

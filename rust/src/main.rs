@@ -12,6 +12,8 @@
 //!              emit a latency/memory Pareto front (--profile, --budget)
 //!   chaos      fault & heterogeneity injection: serve under a FaultPlan
 //!              (--faults) and compare static EP vs chaos-aware LLEP
+//!   bench      run a pinned micro-benchmark suite (--suite hotpath) and
+//!              write (--out) or gate against (--check) a JSON baseline
 //!   info       print presets, the planner registry and environment
 //!
 //! Fault plans (`--faults`, accepted by run/serve/tune/chaos) are spec
@@ -84,6 +86,10 @@ fn main() {
         .opt("planner", "planner spec (see `llep info`), or @report.json from `tune --out`")
         .opt("replan-every", "plan cache: force a fresh plan every N reuses (0 = never)")
         .opt("cache-drift", "plan cache: load-signature drift threshold (default 0.05)")
+        .opt("suite", "bench: suite name (hotpath)")
+        .opt("check", "bench: pin JSON — bootstrap when missing, fail on median regression")
+        .opt("tolerance", "bench: allowed median regression vs the pin (default 0.25)")
+        .flag("quick", "bench: CI-sized measurement budgets")
         .flag("plan-reuse", "wrap planners in the cross-step plan cache")
         .flag("full-model", "price every MoE layer per step (pipelined planning)")
         .flag("real", "measure real GEMMs where applicable")
@@ -99,7 +105,7 @@ fn main() {
     if args.has_flag("help") || args.subcommand.is_none() {
         println!("llep — Least-Loaded Expert Parallelism (paper reproduction)\n");
         println!(
-            "usage: llep <figures|run|calibrate|trace|replay|train|serve|tune|chaos|info> \
+            "usage: llep <figures|run|calibrate|trace|replay|train|serve|tune|chaos|bench|info> \
              [options]\n"
         );
         println!("Options:\n{}", spec.help());
@@ -116,6 +122,7 @@ fn main() {
         "serve" => cmd_serve(&args),
         "tune" => cmd_tune(&args),
         "chaos" => cmd_chaos(&args),
+        "bench" => cmd_bench(&args),
         "info" => cmd_info(),
         other => Err(format!("unknown subcommand {other:?} (see --help)")),
     };
@@ -924,6 +931,97 @@ fn cmd_chaos(args: &llep::util::cli::Args) -> Result<(), String> {
         println!("wrote {out}");
     }
     Ok(())
+}
+
+/// `llep bench`: run a pinned micro-benchmark suite. `--out` writes the
+/// fresh medians as JSON (`BENCH_<suite>.json` by convention); `--check`
+/// compares against a checked-in pin with a tolerance band — a missing
+/// pin bootstraps (like `tune --pin`), an existing one fails the command
+/// on any median regression beyond the band or any vanished case. This
+/// is the rebar-style gate that keeps the zero-allocation hot path's
+/// speedups locked in instead of anecdotal.
+fn cmd_bench(args: &llep::util::cli::Args) -> Result<(), String> {
+    use llep::harness::hotpath;
+    use llep::util::benchkit::{format_ns, quick_requested, BenchSuite};
+
+    let suite_name = args.get_or("suite", "hotpath");
+    if suite_name != "hotpath" {
+        return Err(format!("unknown bench suite {suite_name:?} (available: hotpath)"));
+    }
+    let quick = args.has_flag("quick") || quick_requested();
+    let tolerance = args.get_f64("tolerance", hotpath::DEFAULT_TOLERANCE)?;
+    println!("== bench suite {suite_name} ({}) ==", if quick { "quick" } else { "full" });
+    let suite = hotpath::hotpath_suite(quick);
+
+    // The alloc-vs-scratch ratio is the headline of this suite: print it
+    // whenever both cases ran.
+    if let (Some(scratch), Some(alloc)) = (
+        suite.get("plan/llep/skewed/scratch/N=128/P=8"),
+        suite.get("plan/llep/skewed/alloc/N=128/P=8"),
+    ) {
+        println!(
+            "\nskewed planner microbench: scratch {} vs alloc {} ({:.2}x)",
+            format_ns(scratch.median_ns),
+            format_ns(alloc.median_ns),
+            alloc.median_ns / scratch.median_ns.max(1.0)
+        );
+    }
+
+    if let Some(out) = args.get("out") {
+        suite.save(std::path::Path::new(out))?;
+        println!("wrote {out}");
+    }
+
+    let Some(pin_path) = args.get("check") else { return Ok(()) };
+    if !std::path::Path::new(pin_path).exists() {
+        // Bootstrap only on a genuinely absent pin. A pin that exists
+        // but fails to load (truncated, merge-conflicted) must FAIL the
+        // gate below, not be silently overwritten with fresh medians.
+        suite.save(std::path::Path::new(pin_path))?;
+        println!("bench pin bootstrapped: {pin_path} — commit it to arm the regression gate");
+        return Ok(());
+    }
+    match BenchSuite::load(std::path::Path::new(pin_path)) {
+        Err(e) => Err(format!(
+            "bench pin {pin_path} exists but is unreadable ({e}); refusing to overwrite a \
+             corrupt baseline — fix or delete it, then re-run with --check to re-bootstrap"
+        )),
+        Ok(pin) => {
+            let cmp = suite.compare(&pin);
+            println!(
+                "\ncheck vs {pin_path} (pinned at rev {}, tolerance {:.0}%):",
+                pin.git_rev,
+                tolerance * 100.0
+            );
+            for d in &cmp.deltas {
+                let status = if d.regressed(tolerance) { "REGRESSED" } else { "ok" };
+                println!(
+                    "  {:<42} pin {:>12}  now {:>12}  {:>6.2}x  {status}",
+                    d.name,
+                    format_ns(d.pinned_ns),
+                    format_ns(d.current_ns),
+                    d.ratio()
+                );
+            }
+            for name in &cmp.missing {
+                println!("  {name:<42} MISSING from this run");
+            }
+            if cmp.passes(tolerance) {
+                println!("bench pin ok: no case regressed beyond {:.0}%", tolerance * 100.0);
+                Ok(())
+            } else {
+                Err(format!(
+                    "bench regression vs {pin_path}: {} case(s) beyond the {:.0}% band, {} \
+                     missing. If the slowdown is intentional, delete the pin, re-run \
+                     `llep bench --suite {suite_name} --check {pin_path}` and commit the \
+                     refreshed file.",
+                    cmp.regressions(tolerance).len(),
+                    tolerance * 100.0,
+                    cmp.missing.len()
+                ))
+            }
+        }
+    }
 }
 
 fn cmd_info() -> Result<(), String> {

@@ -28,7 +28,25 @@
 //! each layer's signature claims its own entry (capacity defaults to 64
 //! ≥ any preset's layer count); layers with genuinely similar routing may
 //! share an entry, which is just more reuse.
+//!
+//! ## Degraded pools
+//!
+//! A quantized per-device speed fingerprint ([`pool_signature_into`])
+//! joins the cache key, so degraded-but-fully-alive pools (stragglers,
+//! statically heterogeneous presets) reuse plans amongst steps that see
+//! the same pool instead of forcing a fresh plan for the whole degraded
+//! window. Pools with a *dead* device stay forced-fresh: a retargeted
+//! segment could land on the hole, which no drift threshold can excuse.
+//!
+//! ## Hot path
+//!
+//! Lookups go through one mutex (stateful planners plan sequentially,
+//! so it is uncontended); signatures, retarget working buffers, and the
+//! returned plan shell are all recycled, making the steady-state hit
+//! path allocation-free (asserted by the counting-allocator test in
+//! `scratch.rs`).
 
+use super::scratch::with_thread_scratch;
 use super::{Planner, RoutePlan, Segment, WeightTransfer};
 use crate::chaos::PoolState;
 use crate::topology::Topology;
@@ -107,11 +125,41 @@ impl CacheStats {
 /// Quantized per-expert load shares: `sig[e] ≈ quant * l_e / total`.
 /// Share-based, so uniformly scaling a batch leaves the signature fixed.
 pub fn load_signature(loads: &[u64], quant: u64) -> Vec<u64> {
+    let mut out = Vec::new();
+    load_signature_into(loads, quant, &mut out);
+    out
+}
+
+/// [`load_signature`] into a reusable buffer (the lookup hot path).
+pub fn load_signature_into(loads: &[u64], quant: u64, out: &mut Vec<u64>) {
+    out.clear();
     let total: u64 = loads.iter().sum();
     if total == 0 {
-        return vec![0; loads.len()];
+        out.resize(loads.len(), 0);
+        return;
     }
-    loads.iter().map(|&l| (l as u128 * quant as u128 / total as u128) as u64).collect()
+    out.extend(loads.iter().map(|&l| (l as u128 * quant as u128 / total as u128) as u64));
+}
+
+/// Quantized per-device effective-speed signature of a pool view, into a
+/// reusable buffer. Empty = healthy pool (the historical cache key).
+/// Any degraded pool (stragglers, heterogeneous presets, link-only
+/// degradation) gets a per-device `round(256 * speed)` fingerprint:
+/// steps that see the *same* degraded pool share cache entries, so a
+/// stable straggler or a statically heterogeneous preset regains plan
+/// reuse instead of forcing fresh plans for the whole degraded window.
+/// Note a link-only pool fingerprints as `[256; P]`, distinct from the
+/// healthy empty key even though speeds are uniform: pool-aware
+/// planners bypass the lambda guard whenever the pool is degraded, so
+/// their degraded-pool plans are not interchangeable with healthy-pool
+/// plans — only steps under the same degradation may share entries.
+pub fn pool_signature_into(pool: Option<&PoolState>, out: &mut Vec<u64>) {
+    out.clear();
+    if let Some(p) = pool {
+        if p.is_degraded() {
+            out.extend(p.devices.iter().map(|d| (d.effective_speed() * 256.0).round() as u64));
+        }
+    }
 }
 
 /// L1 distance between two signatures in share units (range `0..=2`):
@@ -129,44 +177,71 @@ pub fn signature_drift(a: &[u64], b: &[u64], quant: u64) -> f64 {
 /// stays native, flagged forced. O(total segments) — this is what a cache
 /// hit costs instead of a full replan.
 pub fn retarget_plan(plan: &RoutePlan, old_loads: &[u64], new_loads: &[u64]) -> RoutePlan {
+    let shell = with_thread_scratch(|s| s.take_plan(plan.num_experts, plan.devices));
+    let mut buf = RetargetBuffers::default();
+    retarget_plan_into(plan, old_loads, new_loads, shell, &mut buf)
+}
+
+/// Reusable working buffers for [`retarget_plan_into`] — the cache keeps
+/// one set per planner so steady-state hits allocate nothing.
+#[derive(Default)]
+struct RetargetBuffers {
+    lens: Vec<u64>,
+    rems: Vec<(u64, usize)>,
+    seen: Vec<bool>,
+}
+
+/// [`retarget_plan`] writing into a recycled plan shell (`out` must come
+/// from [`PlanScratch::take_plan`](super::PlanScratch) sized for this
+/// plan) with caller-owned working buffers — the zero-allocation cache
+/// hit path.
+fn retarget_plan_into(
+    plan: &RoutePlan,
+    old_loads: &[u64],
+    new_loads: &[u64],
+    mut out: RoutePlan,
+    buf: &mut RetargetBuffers,
+) -> RoutePlan {
     assert_eq!(old_loads.len(), plan.num_experts, "old loads/plan mismatch");
     assert_eq!(new_loads.len(), plan.num_experts, "new loads/plan mismatch");
+    debug_assert_eq!(out.num_experts, plan.num_experts);
+    debug_assert_eq!(out.devices, plan.devices);
     let m = plan.num_experts / plan.devices;
-    let mut assignments: Vec<Vec<Segment>> = Vec::with_capacity(plan.num_experts);
-    let mut transfers: Vec<WeightTransfer> = Vec::new();
-    let mut seen = vec![false; plan.devices];
+    out.fallback_ep = plan.fallback_ep;
+    buf.seen.clear();
+    buf.seen.resize(plan.devices, false);
     for (e, old_segs) in plan.assignments.iter().enumerate() {
         let l_new = new_loads[e];
         let l_old = old_loads[e];
         let native = e / m;
-        let mut segs: Vec<Segment> = Vec::new();
+        let segs = &mut out.assignments[e];
         if l_new > 0 {
             if l_old == 0 || old_segs.is_empty() {
                 segs.push(Segment { device: native, start: 0, end: l_new, forced: true });
             } else {
                 // Largest-remainder proportional split across the cached
                 // segments (they cover [0, l_old) exactly).
-                let mut lens: Vec<u64> = Vec::with_capacity(old_segs.len());
-                let mut rems: Vec<(u64, usize)> = Vec::with_capacity(old_segs.len());
+                buf.lens.clear();
+                buf.rems.clear();
                 let mut assigned = 0u64;
                 for (i, s) in old_segs.iter().enumerate() {
                     let num = s.len() as u128 * l_new as u128;
                     let q = (num / l_old as u128) as u64;
-                    lens.push(q);
-                    rems.push(((num % l_old as u128) as u64, i));
+                    buf.lens.push(q);
+                    buf.rems.push(((num % l_old as u128) as u64, i));
                     assigned += q;
                 }
                 let mut left = l_new - assigned; // < old_segs.len()
-                rems.sort_unstable_by_key(|&(r, i)| (std::cmp::Reverse(r), i));
-                for &(_, i) in &rems {
+                buf.rems.sort_unstable_by_key(|&(r, i)| (std::cmp::Reverse(r), i));
+                for &(_, i) in buf.rems.iter() {
                     if left == 0 {
                         break;
                     }
-                    lens[i] += 1;
+                    buf.lens[i] += 1;
                     left -= 1;
                 }
                 let mut start = 0u64;
-                for (s, &len) in old_segs.iter().zip(&lens) {
+                for (s, &len) in old_segs.iter().zip(buf.lens.iter()) {
                     if len == 0 {
                         continue;
                     }
@@ -176,29 +251,28 @@ pub fn retarget_plan(plan: &RoutePlan, old_loads: &[u64], new_loads: &[u64]) -> 
                 }
             }
         }
-        for s in &segs {
-            if s.device != native && !seen[s.device] {
-                seen[s.device] = true;
-                transfers.push(WeightTransfer { expert: e, from: native, to: s.device });
+        for s in segs.iter() {
+            if s.device != native && !buf.seen[s.device] {
+                buf.seen[s.device] = true;
+                out.transfers.push(WeightTransfer { expert: e, from: native, to: s.device });
             }
         }
-        for s in &segs {
-            seen[s.device] = false;
+        for s in segs.iter() {
+            buf.seen[s.device] = false;
         }
-        assignments.push(segs);
     }
-    RoutePlan {
-        num_experts: plan.num_experts,
-        devices: plan.devices,
-        assignments,
-        transfers,
-        fallback_ep: plan.fallback_ep,
-    }
+    out.canonicalize_transfers();
+    out
 }
 
 struct CacheEntry {
     devices: usize,
     sig: Vec<u64>,
+    /// Quantized pool-speed fingerprint the plan was built under (empty
+    /// = healthy pool). Entries only match lookups with the identical
+    /// fingerprint, so degraded-pool plans never serve healthy steps and
+    /// vice versa.
+    pool_sig: Vec<u64>,
     /// Loads the cached plan was (freshly) built for — retarget source
     /// and drift anchor.
     loads: Vec<u64>,
@@ -213,6 +287,11 @@ struct CacheState {
     entries: Vec<CacheEntry>,
     stats: CacheStats,
     clock: u64,
+    /// Lookup signature buffers + retarget working set, reused across
+    /// lookups (they live under the same lock that serializes lookups).
+    sig: Vec<u64>,
+    pool_sig: Vec<u64>,
+    retarget: RetargetBuffers,
 }
 
 /// Decorator that reuses the wrapped planner's plans across steps.
@@ -285,18 +364,28 @@ impl CachedPlanner {
     }
 }
 
-impl CachedPlanner {
-    /// Index + drift of the entry whose signature is L1-closest to `sig`
-    /// (same device count and expert count only).
-    fn closest(&self, st: &CacheState, devices: usize, sig: &[u64]) -> Option<(usize, f64)> {
-        st.entries
-            .iter()
-            .enumerate()
-            .filter(|(_, en)| en.devices == devices && en.sig.len() == sig.len())
-            .map(|(i, en)| (i, signature_drift(&en.sig, sig, self.quant)))
-            .min_by(|a, b| a.1.total_cmp(&b.1))
-    }
+/// Index + drift of the entry whose signature is L1-closest to `sig`
+/// (same device count, expert count, and pool fingerprint only).
+fn closest(
+    entries: &[CacheEntry],
+    devices: usize,
+    sig: &[u64],
+    pool_sig: &[u64],
+    quant: u64,
+) -> Option<(usize, f64)> {
+    entries
+        .iter()
+        .enumerate()
+        .filter(|(_, en)| {
+            en.devices == devices
+                && en.sig.len() == sig.len()
+                && en.pool_sig.as_slice() == pool_sig
+        })
+        .map(|(i, en)| (i, signature_drift(&en.sig, sig, quant)))
+        .min_by(|a, b| a.1.total_cmp(&b.1))
+}
 
+impl CachedPlanner {
     /// Record the lookup outcome in the calling thread's slot. The slot
     /// vec holds one entry per cache instance used on this thread — a
     /// handful at most — and dies with the thread.
@@ -311,8 +400,12 @@ impl CachedPlanner {
     }
 }
 
-impl Planner for CachedPlanner {
-    fn plan_with_pool(
+impl CachedPlanner {
+    /// The shared lookup behind both trait entry points. `pool` is
+    /// `None` for healthy steps and `Some` for degraded-but-fully-alive
+    /// pools; either way it joins the cache key via its quantized speed
+    /// fingerprint ([`pool_signature_into`]).
+    fn lookup(
         &self,
         devices: usize,
         loads: &[u64],
@@ -320,62 +413,43 @@ impl Planner for CachedPlanner {
         topo: Option<&Topology>,
         pool: Option<&PoolState>,
     ) -> RoutePlan {
-        match pool {
-            Some(p) if p.is_degraded() => {
-                // The load signature says nothing about device speeds or
-                // deaths, so cached placements are unsafe to reuse while
-                // the pool is degraded: plan fresh through the pool-aware
-                // inner path and account it as a forced replan. The cache
-                // is left untouched — healthy-pool entries stay valid for
-                // after recovery, and no degraded plan is ever installed.
-                // Known cost: a *statically* heterogeneous pool (preset
-                // device_speeds) never leaves this path, so plan reuse is
-                // effectively off there; folding a pool fingerprint into
-                // the cache key would restore it (ROADMAP: fault-plan-
-                // aware plan-cache reuse).
-                let plan = self.inner.plan_with_pool(devices, loads, stats, topo, pool);
-                self.state.lock().expect("cache lock").stats.record(CacheOutcome::Forced);
-                self.set_last_outcome(CacheOutcome::Forced);
-                plan
-            }
-            _ => self.plan_with_stats(devices, loads, stats, topo),
-        }
-    }
-
-    fn plan_with_stats(
-        &self,
-        devices: usize,
-        loads: &[u64],
-        stats: &[u64],
-        topo: Option<&Topology>,
-    ) -> RoutePlan {
-        let sig = load_signature(loads, self.quant);
-        // Phase 1: probe under the lock. The serialized region is only
-        // the cheap probe/bookkeeping — hits copy the cached plan out and
-        // retarget it *outside* the lock. What the engine's timed window
-        // still sees (probe, clone, short lock waits) is the cache's real
-        // per-lookup cost, and charging it keeps T_plan honest.
+        // Phase 1: probe under the lock. Stateful planners plan layers
+        // sequentially (replay_safe = false), so the lock is uncontended
+        // in practice; a hit retargets the cached plan *in place* under
+        // the lock — no entry clone, no allocation (the shell and every
+        // working buffer are recycled). What the engine's timed window
+        // sees is the cache's real per-lookup cost, keeping T_plan
+        // honest.
         let outcome;
         {
-            let mut st = self.state.lock().expect("cache lock");
+            let mut guard = self.state.lock().expect("cache lock");
+            let st = &mut *guard;
             st.clock += 1;
             let clock = st.clock;
-            match self.closest(&st, devices, &sig) {
+            load_signature_into(loads, self.quant, &mut st.sig);
+            pool_signature_into(pool, &mut st.pool_sig);
+            match closest(&st.entries, devices, &st.sig, &st.pool_sig, self.quant) {
                 Some((i, drift)) if drift <= self.drift_threshold => {
                     // Forced refresh only after the entry has already
                     // served `replan_every` reuses (so N=1 still allows
                     // one reuse per fresh plan).
-                    let force = self.replan_every > 0
-                        && st.entries[i].reuses >= self.replan_every;
+                    let force = self.replan_every > 0 && st.entries[i].reuses >= self.replan_every;
                     if !force {
+                        let shell = with_thread_scratch(|s| s.take_plan(loads.len(), devices));
                         let en = &mut st.entries[i];
                         en.reuses += 1;
                         en.last_used = clock;
-                        let src = (en.plan.clone(), en.loads.clone());
+                        let plan = retarget_plan_into(
+                            &en.plan,
+                            &en.loads,
+                            loads,
+                            shell,
+                            &mut st.retarget,
+                        );
                         st.stats.record(CacheOutcome::Hit);
-                        drop(st);
+                        drop(guard);
                         self.set_last_outcome(CacheOutcome::Hit);
-                        return retarget_plan(&src.0, &src.1, loads);
+                        return plan;
                     }
                     outcome = CacheOutcome::Forced;
                 }
@@ -385,20 +459,25 @@ impl Planner for CachedPlanner {
         // Phase 2: plan fresh OUTSIDE the lock — the expensive part of a
         // miss must not serialize concurrent layer-planning threads
         // behind one Mutex.
-        let fresh = self.inner.plan_with_stats(devices, loads, stats, topo);
-        // Phase 3: install. Entries may have changed while unlocked, so
-        // re-probe for the slot to refresh instead of trusting an index.
-        let mut st = self.state.lock().expect("cache lock");
+        let fresh = self.inner.plan_with_pool(devices, loads, stats, topo, pool);
+        // Phase 3: install. Entries (and the signature buffers) may have
+        // changed while unlocked, so recompute and re-probe for the slot
+        // to refresh instead of trusting an index.
+        let mut guard = self.state.lock().expect("cache lock");
+        let st = &mut *guard;
         st.clock += 1;
         let clock = st.clock;
-        let slot = self
-            .closest(&st, devices, &sig)
+        load_signature_into(loads, self.quant, &mut st.sig);
+        pool_signature_into(pool, &mut st.pool_sig);
+        let slot = closest(&st.entries, devices, &st.sig, &st.pool_sig, self.quant)
             .and_then(|(i, drift)| (drift <= self.drift_threshold).then_some(i));
         match slot {
             Some(i) => {
                 let en = &mut st.entries[i];
-                en.sig = sig;
-                en.loads = loads.to_vec();
+                en.sig.clone_from(&st.sig);
+                en.pool_sig.clone_from(&st.pool_sig);
+                en.loads.clear();
+                en.loads.extend_from_slice(loads);
                 en.plan = fresh.clone();
                 en.reuses = 0;
                 en.last_used = clock;
@@ -416,7 +495,8 @@ impl Planner for CachedPlanner {
                 }
                 st.entries.push(CacheEntry {
                     devices,
-                    sig,
+                    sig: st.sig.clone(),
+                    pool_sig: st.pool_sig.clone(),
                     loads: loads.to_vec(),
                     plan: fresh.clone(),
                     reuses: 0,
@@ -425,9 +505,58 @@ impl Planner for CachedPlanner {
             }
         }
         st.stats.record(outcome);
-        drop(st);
+        drop(guard);
         self.set_last_outcome(outcome);
         fresh
+    }
+}
+
+impl Planner for CachedPlanner {
+    fn plan_with_pool(
+        &self,
+        devices: usize,
+        loads: &[u64],
+        stats: &[u64],
+        topo: Option<&Topology>,
+        pool: Option<&PoolState>,
+    ) -> RoutePlan {
+        match pool {
+            Some(p) if p.is_degraded() => {
+                if p.alive_count() < p.len() {
+                    // A dead device invalidates cached placements
+                    // outright (a retargeted segment could land on the
+                    // hole), so failures force fresh pool-aware plans
+                    // for the whole outage window. The cache is left
+                    // untouched — entries stay valid for after recovery,
+                    // and no dead-pool plan is ever installed.
+                    let plan = self.inner.plan_with_pool(devices, loads, stats, topo, pool);
+                    self.state.lock().expect("cache lock").stats.record(CacheOutcome::Forced);
+                    self.set_last_outcome(CacheOutcome::Forced);
+                    plan
+                } else {
+                    // Degraded but fully alive (stragglers, heterogeneous
+                    // presets, link factors): a plan is a pure function
+                    // of (loads, speeds), so reuse is safe when the
+                    // quantized pool fingerprint joins the cache key —
+                    // a stable straggler window or a statically
+                    // heterogeneous preset gets plan reuse back instead
+                    // of forcing fresh plans for the whole degraded
+                    // window (ROADMAP: fault-plan-aware cache reuse).
+                    self.lookup(devices, loads, stats, topo, Some(p))
+                }
+            }
+            _ => self.plan_with_stats(devices, loads, stats, topo),
+        }
+    }
+
+    fn plan_with_stats(
+        &self,
+        devices: usize,
+        loads: &[u64],
+        stats: &[u64],
+        topo: Option<&Topology>,
+    ) -> RoutePlan {
+        self.lookup(devices, loads, stats, topo, None)
     }
 
     fn label(&self) -> String {
@@ -593,6 +722,68 @@ mod tests {
         assert_eq!(c.stats(), CacheStats::default());
         let _ = c.plan(2, &loads, None);
         assert_eq!(c.stats().misses, 1, "entries were dropped too");
+    }
+
+    #[test]
+    fn degraded_alive_pool_reuses_with_pool_keyed_entries() {
+        use crate::chaos::PoolState;
+        // A stable straggler: after one miss, every further step on the
+        // identical pool hits — the ROADMAP "fault-plan-aware reuse".
+        let loads = vec![9_000u64, 100, 200, 300, 0, 50, 150, 250];
+        let mut pool = PoolState::healthy(4);
+        pool.devices[0].speed = 0.25;
+        let c = llep_cached();
+        let first = c.plan_with_pool(4, &loads, &loads, None, Some(&pool));
+        assert_eq!(c.last_cache_outcome(), Some(CacheOutcome::Miss));
+        validate_plan(&first, &loads).unwrap();
+        let second = c.plan_with_pool(4, &loads, &loads, None, Some(&pool));
+        assert_eq!(c.last_cache_outcome(), Some(CacheOutcome::Hit));
+        assert_eq!(first.assignments, second.assignments);
+        // A healthy step with the same loads must NOT hit the degraded
+        // entry (different pool fingerprint) ...
+        let healthy = c.plan_with_pool(4, &loads, &loads, None, None);
+        assert_eq!(c.last_cache_outcome(), Some(CacheOutcome::Miss));
+        validate_plan(&healthy, &loads).unwrap();
+        assert_ne!(healthy.assignments, first.assignments, "straggler shifts the split");
+        // ... and a different straggler is a different fingerprint too.
+        let mut other = PoolState::healthy(4);
+        other.devices[1].speed = 0.25;
+        let _ = c.plan_with_pool(4, &loads, &loads, None, Some(&other));
+        assert_eq!(c.last_cache_outcome(), Some(CacheOutcome::Miss));
+        assert_eq!(c.stats(), CacheStats { hits: 1, misses: 3, forced: 0 });
+    }
+
+    #[test]
+    fn dead_device_still_forces_fresh_plans() {
+        use crate::chaos::PoolState;
+        let loads = vec![9_000u64, 100, 200, 300, 0, 50, 150, 250];
+        let mut pool = PoolState::healthy(4);
+        pool.devices[2].alive = false;
+        let c = llep_cached();
+        for _ in 0..3 {
+            let p = c.plan_with_pool(4, &loads, &loads, None, Some(&pool));
+            assert_eq!(c.last_cache_outcome(), Some(CacheOutcome::Forced));
+            validate_plan(&p, &loads).unwrap();
+            assert_eq!(p.device_loads()[2], 0, "nothing on the dead device");
+        }
+        assert_eq!(c.stats(), CacheStats { hits: 0, misses: 0, forced: 3 });
+    }
+
+    #[test]
+    fn pool_signature_shapes() {
+        use crate::chaos::PoolState;
+        let mut out = vec![7u64; 3];
+        pool_signature_into(None, &mut out);
+        assert!(out.is_empty(), "healthy = empty fingerprint");
+        pool_signature_into(Some(&PoolState::healthy(4)), &mut out);
+        assert!(out.is_empty(), "non-degraded pool = healthy key");
+        let mut p = PoolState::healthy(2);
+        p.devices[1].speed = 0.5;
+        pool_signature_into(Some(&p), &mut out);
+        assert_eq!(out, vec![256, 128]);
+        p.devices[1].alive = false;
+        pool_signature_into(Some(&p), &mut out);
+        assert_eq!(out, vec![256, 0], "dead device quantizes to zero");
     }
 
     #[test]

@@ -5,6 +5,7 @@
 //! transfers. Under imbalanced routing this is the plan whose worst
 //! device dominates the collective latency (paper §3.2).
 
+use super::scratch::{with_thread_scratch, PlanScratch};
 use super::{Planner, RoutePlan, Segment};
 use crate::topology::Topology;
 
@@ -78,21 +79,27 @@ impl Planner for ChunkedEp {
 /// Panics if `num_experts` is not divisible by `devices` (the paper's EP
 /// assumption, enforced upstream by `ModelConfig::experts_per_device`).
 pub fn plan_ep(num_experts: usize, devices: usize, loads: &[u64]) -> RoutePlan {
+    with_thread_scratch(|s| plan_ep_scratch(num_experts, devices, loads, s))
+}
+
+/// [`plan_ep`] with the plan shell drawn from a reusable arena
+/// (allocation-free in steady state — see [`PlanScratch`]).
+pub fn plan_ep_scratch(
+    num_experts: usize,
+    devices: usize,
+    loads: &[u64],
+    scratch: &mut PlanScratch,
+) -> RoutePlan {
     assert_eq!(loads.len(), num_experts);
     assert!(devices > 0 && num_experts % devices == 0, "N must divide P");
     let m = num_experts / devices;
-    let assignments = loads
-        .iter()
-        .enumerate()
-        .map(|(e, &l)| {
-            if l == 0 {
-                Vec::new()
-            } else {
-                vec![Segment { device: e / m, start: 0, end: l, forced: false }]
-            }
-        })
-        .collect();
-    RoutePlan { num_experts, devices, assignments, transfers: Vec::new(), fallback_ep: false }
+    let mut plan = scratch.take_plan(num_experts, devices);
+    for (e, &l) in loads.iter().enumerate() {
+        if l > 0 {
+            plan.assignments[e].push(Segment { device: e / m, start: 0, end: l, forced: false });
+        }
+    }
+    plan
 }
 
 #[cfg(test)]

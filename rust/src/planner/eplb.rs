@@ -139,7 +139,10 @@ pub fn plan_eplb(
         assignments[t.expert].iter().any(|s| s.device == t.to)
     });
 
-    RoutePlan { num_experts, devices, assignments, transfers, fallback_ep: false }
+    let mut plan = RoutePlan { num_experts, devices, assignments, transfers, fallback_ep: false };
+    // Canonical transfer order: pricing reads the list as-is.
+    plan.canonicalize_transfers();
+    plan
 }
 
 fn projected_loads(hosts: &[Vec<usize>], stats: &[u64], devices: usize) -> Vec<f64> {

@@ -9,12 +9,28 @@
 //! fuller device; if nobody can take a chunk within capacity, the
 //! remainder is force-assigned to the least-loaded device (LLAS
 //! fallback), which is the only way a device may exceed `m_alpha`.
+//!
+//! ## Hot path
+//!
+//! Planning sits on the critical path of every step, so the
+//! implementation is engineered around a reusable [`PlanScratch`] arena
+//! (zero heap allocations in steady state — see `scratch.rs`) and the
+//! spill candidates live in a `BinaryHeap` keyed by (normalized) load:
+//! one spill iteration changes a single device's key, so each chunk
+//! costs `O(log P)` instead of the historical `O(P log P)` re-sort
+//! (`O(S·log P)` per expert over `S` spill segments). The heap pops
+//! candidates in exactly the order the re-sort produced, so plans are
+//! bit-identical to the sort-based implementation — property-tested
+//! against a reference reimplementation in `rust/tests/hotpath.rs`.
 
-use super::{plan_ep, Planner, RoutePlan, Segment, WeightTransfer};
+use super::scratch::{with_thread_scratch, NormCand, PlanScratch, SpillHeaps};
+use super::{plan_ep_scratch, Planner, RoutePlan, Segment, WeightTransfer};
 use crate::chaos::PoolState;
 use crate::config::LlepConfig;
 use crate::routing::imbalance_ratio;
 use crate::topology::Topology;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 
 /// LLEP (paper Alg. 2-4) as a trait planner: the Alg. 4 lambda guard
 /// reverts to standard EP when the routing is balanced enough, otherwise
@@ -28,6 +44,23 @@ impl Llep {
     pub fn new(cfg: LlepConfig) -> Llep {
         Llep { cfg }
     }
+
+    fn plan_into(
+        &self,
+        devices: usize,
+        loads: &[u64],
+        topo: Option<&Topology>,
+        scratch: &mut PlanScratch,
+    ) -> RoutePlan {
+        if imbalance_ratio(loads) < self.cfg.lambda {
+            // Alg. 4 guard: balanced enough — standard EP.
+            let mut p = plan_ep_scratch(loads.len(), devices, loads, scratch);
+            p.fallback_ep = true;
+            p
+        } else {
+            plan_llep_scratch(&self.cfg, loads.len(), devices, loads, topo, None, scratch)
+        }
+    }
 }
 
 impl Planner for Llep {
@@ -38,14 +71,7 @@ impl Planner for Llep {
         _stats: &[u64],
         topo: Option<&Topology>,
     ) -> RoutePlan {
-        if imbalance_ratio(loads) < self.cfg.lambda {
-            // Alg. 4 guard: balanced enough — standard EP.
-            let mut p = plan_ep(loads.len(), devices, loads);
-            p.fallback_ep = true;
-            p
-        } else {
-            plan_llep(&self.cfg, loads.len(), devices, loads, topo)
-        }
+        with_thread_scratch(|s| self.plan_into(devices, loads, topo, s))
     }
 
     fn plan_with_pool(
@@ -67,9 +93,13 @@ impl Planner for Llep {
                     // Nothing schedulable. Return the degenerate native
                     // plan; pricing strands it and the sims surface the
                     // error — planners themselves stay total.
-                    return plan_ep(loads.len(), devices, loads);
+                    return with_thread_scratch(|s| {
+                        plan_ep_scratch(loads.len(), devices, loads, s)
+                    });
                 }
-                plan_llep_pool(&self.cfg, loads.len(), devices, loads, topo, p)
+                with_thread_scratch(|s| {
+                    plan_llep_scratch(&self.cfg, loads.len(), devices, loads, topo, Some(p), s)
+                })
             }
             _ => self.plan_with_stats(devices, loads, stats, topo),
         }
@@ -100,7 +130,7 @@ pub fn plan_llep(
     loads: &[u64],
     topo: Option<&Topology>,
 ) -> RoutePlan {
-    plan_llep_impl(cfg, num_experts, devices, loads, topo, None)
+    with_thread_scratch(|s| plan_llep_scratch(cfg, num_experts, devices, loads, topo, None, s))
 }
 
 /// Speed-aware LLEP over a degraded/heterogeneous pool: capacities and
@@ -119,30 +149,32 @@ pub fn plan_llep_pool(
     topo: Option<&Topology>,
     pool: &PoolState,
 ) -> RoutePlan {
-    assert_eq!(pool.len(), devices, "pool must cover every device");
-    let speeds = pool.effective_speeds();
-    plan_llep_impl(cfg, num_experts, devices, loads, topo, Some(&speeds))
+    with_thread_scratch(|s| {
+        plan_llep_scratch(cfg, num_experts, devices, loads, topo, Some(pool), s)
+    })
 }
 
-fn plan_llep_impl(
+/// The scratch-threaded LLA/LLAS implementation behind [`plan_llep`] and
+/// [`plan_llep_pool`]: all working state and the returned plan's buffers
+/// come from `scratch`, so a caller that recycles finished plans
+/// ([`PlanScratch::recycle`]) plans allocation-free in steady state.
+pub fn plan_llep_scratch(
     cfg: &LlepConfig,
     num_experts: usize,
     devices: usize,
     loads: &[u64],
     topo: Option<&Topology>,
-    speeds: Option<&[f64]>,
+    pool: Option<&PoolState>,
+    scratch: &mut PlanScratch,
 ) -> RoutePlan {
     assert_eq!(loads.len(), num_experts);
     assert!(devices > 0 && num_experts % devices == 0, "N must divide P");
+    if let Some(p) = pool {
+        assert_eq!(p.len(), devices, "pool must cover every device");
+    }
     let m_per_dev = num_experts / devices;
     let total: u64 = loads.iter().sum();
-    let mut plan = RoutePlan {
-        num_experts,
-        devices,
-        assignments: vec![Vec::new(); num_experts],
-        transfers: Vec::new(),
-        fallback_ep: false,
-    };
+    let mut plan = scratch.take_plan(num_experts, devices);
     if total == 0 {
         return plan;
     }
@@ -154,46 +186,45 @@ fn plan_llep_impl(
     // device's *normalized* capacity `m_alpha_d / s_d` is equal and dead
     // devices get exactly zero.
     let m_alpha = cfg.alpha * total as f64 / devices as f64;
-    let caps: Option<Vec<f64>> = speeds.map(|s| {
-        let sum: f64 = s.iter().sum();
-        s.iter().map(|&sd| cfg.alpha * total as f64 * sd / sum.max(f64::MIN_POSITIVE)).collect()
-    });
-    let cap_of = |d: usize| -> f64 {
-        match &caps {
-            None => m_alpha,
-            Some(c) => c[d],
-        }
-    };
+    scratch.caps.clear();
+    if let Some(p) = pool {
+        let sum: f64 = p.devices.iter().map(|d| d.effective_speed()).sum();
+        let denom = sum.max(f64::MIN_POSITIVE);
+        scratch.caps.extend(
+            p.devices.iter().map(|d| cfg.alpha * total as f64 * d.effective_speed() / denom),
+        );
+    }
     let min_chunk = cfg.min_gemm_tokens as u64;
 
     // Sorted expert order, decreasing load (stable on index for ties).
-    let mut order: Vec<usize> = (0..num_experts).collect();
-    order.sort_unstable_by_key(|&e| (std::cmp::Reverse(loads[e]), e));
+    scratch.order.clear();
+    scratch.order.extend(0..num_experts);
+    scratch.order.sort_unstable_by_key(|&e| (Reverse(loads[e]), e));
 
     // Native (pending) and assigned load per device.
-    let mut g_p: Vec<u64> = vec![0; devices];
+    scratch.prepare_devices(devices);
     for (e, &l) in loads.iter().enumerate() {
-        g_p[e / m_per_dev] += l;
+        scratch.g_p[e / m_per_dev] += l;
     }
-    let mut g_a: Vec<u64> = vec![0; devices];
-    // Scratch reused across experts (perf: no per-expert allocs beyond
-    // the segments that end up in the plan — see EXPERIMENTS.md §Perf).
-    let mut seen: Vec<bool> = vec![false; devices];
-    let mut others_scratch: Vec<usize> = Vec::with_capacity(devices);
 
-    for &e in &order {
+    // Disjoint field borrows for the expert loop.
+    let PlanScratch { order, g_p, g_a, seen, caps, spill: heaps, .. } = scratch;
+    let cap_of = |d: usize| if caps.is_empty() { m_alpha } else { caps[d] };
+    let speed = |d: usize| pool.map_or(1.0, |p| p.devices[d].effective_speed());
+
+    for &e in order.iter() {
         let load = loads[e];
         let ng = e / m_per_dev;
         g_p[ng] -= load;
         if load == 0 {
             continue;
         }
-        let mut segs: Vec<Segment> = Vec::new();
+        let segs = &mut plan.assignments[e];
 
         // Available native capacity (may be negative). A dead native
         // device has no capacity at all: everything must spill, even
         // loads below the min-GEMM size.
-        let native_dead = speeds.is_some_and(|s| s[ng] <= 0.0);
+        let native_dead = pool.is_some() && speed(ng) <= 0.0;
         let occupied = (g_a[ng] + g_p[ng]) as f64;
         let na = if native_dead { i64::MIN } else { (cap_of(ng) - occupied).floor() as i64 };
 
@@ -214,10 +245,7 @@ fn plan_llep_impl(
             } else {
                 segs.push(Segment { device: ng, start: 0, end: nc, forced: false });
                 g_a[ng] += nc;
-                spill(
-                    ng, remaining, nc, &mut segs, &mut g_a, &g_p, &cap_of, min_chunk, topo,
-                    speeds, &mut others_scratch,
-                );
+                spill(ng, remaining, nc, segs, g_a, g_p, &cap_of, min_chunk, topo, pool, heaps);
             }
         } else {
             // Case 3: native is already at/over capacity — spill the whole
@@ -227,27 +255,28 @@ fn plan_llep_impl(
                 segs.push(Segment { device: ng, start: 0, end: load, forced: true });
                 g_a[ng] += load;
             } else {
-                spill(
-                    ng, load, 0, &mut segs, &mut g_a, &g_p, &cap_of, min_chunk, topo, speeds,
-                    &mut others_scratch,
-                );
+                spill(ng, load, 0, segs, g_a, g_p, &cap_of, min_chunk, topo, pool, heaps);
             }
         }
 
-        merge_adjacent(&mut segs);
+        merge_adjacent(segs);
         // Record weight transfers for foreign segments (scratch `seen` is
         // reused across experts and reset only where touched).
-        for s in &segs {
+        for s in segs.iter() {
             if s.device != ng && !seen[s.device] {
                 seen[s.device] = true;
                 plan.transfers.push(WeightTransfer { expert: e, from: ng, to: s.device });
             }
         }
-        for s in &segs {
+        for s in segs.iter() {
             seen[s.device] = false;
         }
-        plan.assignments[e] = segs;
     }
+    // Canonical `(to, from, expert)` transfer order at construction:
+    // pricing accumulates straight off the borrowed slice (no per-step
+    // clone + sort) and two plans with the same transfer *set* price
+    // bit-identically.
+    plan.canonicalize_transfers();
     plan
 }
 
@@ -256,107 +285,235 @@ fn plan_llep_impl(
 /// With a speed profile, "least loaded" means least *normalized* load
 /// (`tokens / speed`) over the alive devices, and per-device capacities
 /// come from `cap_of`.
+///
+/// Candidates sit in a min-heap keyed exactly like the historical
+/// per-iteration re-sort (`(load, inter-node, index)`, or the normalized
+/// float triple under a speed profile). One iteration pops candidates in
+/// sorted order until one accepts a chunk; skipped candidates are pushed
+/// back unchanged (their loads did not move) and the accepted device is
+/// re-keyed — so the pop order of the next iteration matches a full
+/// re-sort, while costing `O(log P)` per chunk.
 #[allow(clippy::too_many_arguments)]
 fn spill(
     ng: usize,
+    r: u64,
+    to: u64,
+    segs: &mut Vec<Segment>,
+    g_a: &mut [u64],
+    g_p: &[u64],
+    cap_of: &impl Fn(usize) -> f64,
+    min_chunk: u64,
+    topo: Option<&Topology>,
+    pool: Option<&PoolState>,
+    heaps: &mut SpillHeaps,
+) {
+    let devices = g_a.len();
+    let inter = |d: usize| topo.map_or(0u8, |t| !t.same_node(ng, d) as u8);
+    match pool {
+        None => {
+            let mut vec = std::mem::take(&mut heaps.heap_u);
+            vec.clear();
+            vec.extend(
+                (0..devices)
+                    .filter(|&d| d != ng)
+                    .map(|d| Reverse((g_a[d] + g_p[d], inter(d), d))),
+            );
+            if vec.is_empty() {
+                heaps.heap_u = vec;
+                force_native(ng, r, to, segs, g_a);
+                return;
+            }
+            let mut heap = BinaryHeap::from(vec);
+            spill_heap_u(r, to, segs, g_a, g_p, cap_of, min_chunk, &mut heap, &mut heaps.popped_u);
+            let mut vec = heap.into_vec();
+            vec.clear();
+            heaps.heap_u = vec;
+        }
+        Some(p) => {
+            // Dead devices are unschedulable: never spill candidates.
+            let sp = |d: usize| p.devices[d].effective_speed();
+            let mut vec = std::mem::take(&mut heaps.heap_f);
+            vec.clear();
+            vec.extend((0..devices).filter(|&d| d != ng && sp(d) > 0.0).map(|d| {
+                Reverse(NormCand {
+                    norm: (g_a[d] + g_p[d]) as f64 / sp(d),
+                    inter: inter(d),
+                    dev: d,
+                })
+            }));
+            if vec.is_empty() {
+                // P=1 (or everything else dead): there is nowhere to
+                // spill — keep the whole remainder native, flagged forced
+                // (it exceeds m_alpha by construction, which is the only
+                // legal way to exceed it). On a dead native device
+                // pricing strands the plan and the serving layer raises
+                // the error.
+                heaps.heap_f = vec;
+                force_native(ng, r, to, segs, g_a);
+                return;
+            }
+            let mut heap = BinaryHeap::from(vec);
+            spill_heap_f(
+                r,
+                to,
+                segs,
+                g_a,
+                g_p,
+                cap_of,
+                min_chunk,
+                &sp,
+                &mut heap,
+                &mut heaps.popped_f,
+            );
+            let mut vec = heap.into_vec();
+            vec.clear();
+            heaps.heap_f = vec;
+        }
+    }
+}
+
+fn force_native(ng: usize, r: u64, to: u64, segs: &mut Vec<Segment>, g_a: &mut [u64]) {
+    segs.push(Segment { device: ng, start: to, end: to + r, forced: true });
+    g_a[ng] += r;
+}
+
+/// Homogeneous spill loop over the `(load, inter, index)` min-heap.
+#[allow(clippy::too_many_arguments)]
+fn spill_heap_u(
     mut r: u64,
     mut to: u64,
     segs: &mut Vec<Segment>,
     g_a: &mut [u64],
     g_p: &[u64],
-    cap_of: &dyn Fn(usize) -> f64,
+    cap_of: &impl Fn(usize) -> f64,
     min_chunk: u64,
-    topo: Option<&Topology>,
-    speeds: Option<&[f64]>,
-    others: &mut Vec<usize>,
+    heap: &mut BinaryHeap<Reverse<(u64, u8, usize)>>,
+    popped: &mut Vec<(u64, u8, usize)>,
 ) {
-    let devices = g_a.len();
     while r > 0 {
-        // Other devices ordered by current (assigned + pending) load,
-        // intra-node peers preferred on ties when a topology is known.
-        // (Perf: `others` is caller-provided scratch; a spill loop
-        // iteration changes a single device's load, so the re-sort of a
-        // nearly-sorted short vec is cheap — see EXPERIMENTS.md §Perf.)
-        others.clear();
-        match speeds {
-            None => others.extend((0..devices).filter(|&d| d != ng)),
-            // Dead devices are unschedulable: never spill candidates.
-            Some(s) => others.extend((0..devices).filter(|&d| d != ng && s[d] > 0.0)),
-        }
-        if others.is_empty() {
-            // P=1 (or everything else dead): there is nowhere to spill —
-            // keep the whole remainder native, flagged forced (it exceeds
-            // m_alpha by construction, which is the only legal way to
-            // exceed it). On a dead native device pricing strands the
-            // plan and the serving layer raises the error.
-            segs.push(Segment { device: ng, start: to, end: to + r, forced: true });
-            g_a[ng] += r;
-            return;
-        }
-        match speeds {
-            None => others.sort_by_key(|&d| {
-                let inter = topo.map_or(0u8, |t| !t.same_node(ng, d) as u8);
-                (g_a[d] + g_p[d], inter, d)
-            }),
-            Some(s) => others.sort_by(|&a, &b| {
-                let norm = |d: usize| (g_a[d] + g_p[d]) as f64 / s[d];
-                let inter = |d: usize| topo.map_or(0u8, |t| !t.same_node(ng, d) as u8);
-                norm(a)
-                    .total_cmp(&norm(b))
-                    .then(inter(a).cmp(&inter(b)))
-                    .then(a.cmp(&b))
-            }),
-        }
-
-        let mut assigned = false;
-        for &o in others.iter() {
-            let occupied = (g_a[o] + g_p[o]) as f64;
-            let cap = (cap_of(o) - occupied).floor() as i64;
+        popped.clear();
+        let mut first: Option<usize> = None;
+        let mut accepted: Option<(u64, u8, usize)> = None;
+        while let Some(Reverse(cand)) = heap.pop() {
+            let (_, i, d) = cand;
+            if first.is_none() {
+                first = Some(d);
+            }
+            let occupied = (g_a[d] + g_p[d]) as f64;
+            let cap = (cap_of(d) - occupied).floor() as i64;
             if cap <= 0 {
-                continue; // device full
+                popped.push(cand); // device full
+                continue;
             }
             let c = r.min(cap as u64);
             if c < min_chunk && r > c {
                 // Chunk too small to justify a transfer + tiny GEMM, and
                 // it would not even finish the expert — skip this device.
+                popped.push(cand);
                 continue;
             }
-            segs.push(Segment { device: o, start: to, end: to + c, forced: false });
-            g_a[o] += c;
+            segs.push(Segment { device: d, start: to, end: to + c, forced: false });
+            g_a[d] += c;
             r -= c;
             to += c;
-            assigned = true;
+            accepted = Some((g_a[d] + g_p[d], i, d));
             break;
         }
-
-        if !assigned {
-            // Force-assign the entire remainder to the least-loaded other
-            // device (it will exceed m_alpha — flagged as forced).
-            let o = others[0];
-            segs.push(Segment { device: o, start: to, end: to + r, forced: true });
-            g_a[o] += r;
-            return;
+        for &cand in popped.iter() {
+            heap.push(Reverse(cand));
+        }
+        match accepted {
+            Some(key) => heap.push(Reverse(key)),
+            None => {
+                // Force-assign the entire remainder to the least-loaded
+                // other device (it will exceed m_alpha — flagged forced).
+                let o = first.expect("candidate set is non-empty");
+                segs.push(Segment { device: o, start: to, end: to + r, forced: true });
+                g_a[o] += r;
+                return;
+            }
         }
     }
 }
 
-/// Merge adjacent segments that landed on the same device. Segments are
-/// constructed in ascending token order (native first, spills at
-/// increasing offsets), so no sort is needed — asserted in debug builds.
+/// Speed-aware spill loop over the normalized-load min-heap.
+#[allow(clippy::too_many_arguments)]
+fn spill_heap_f(
+    mut r: u64,
+    mut to: u64,
+    segs: &mut Vec<Segment>,
+    g_a: &mut [u64],
+    g_p: &[u64],
+    cap_of: &impl Fn(usize) -> f64,
+    min_chunk: u64,
+    sp: &impl Fn(usize) -> f64,
+    heap: &mut BinaryHeap<Reverse<NormCand>>,
+    popped: &mut Vec<NormCand>,
+) {
+    while r > 0 {
+        popped.clear();
+        let mut first: Option<usize> = None;
+        let mut accepted: Option<NormCand> = None;
+        while let Some(Reverse(cand)) = heap.pop() {
+            let d = cand.dev;
+            if first.is_none() {
+                first = Some(d);
+            }
+            let occupied = (g_a[d] + g_p[d]) as f64;
+            let cap = (cap_of(d) - occupied).floor() as i64;
+            if cap <= 0 {
+                popped.push(cand);
+                continue;
+            }
+            let c = r.min(cap as u64);
+            if c < min_chunk && r > c {
+                popped.push(cand);
+                continue;
+            }
+            segs.push(Segment { device: d, start: to, end: to + c, forced: false });
+            g_a[d] += c;
+            r -= c;
+            to += c;
+            let norm = (g_a[d] + g_p[d]) as f64 / sp(d);
+            accepted = Some(NormCand { norm, inter: cand.inter, dev: d });
+            break;
+        }
+        for &cand in popped.iter() {
+            heap.push(Reverse(cand));
+        }
+        match accepted {
+            Some(key) => heap.push(Reverse(key)),
+            None => {
+                let o = first.expect("candidate set is non-empty");
+                segs.push(Segment { device: o, start: to, end: to + r, forced: true });
+                g_a[o] += r;
+                return;
+            }
+        }
+    }
+}
+
+/// Merge adjacent segments that landed on the same device, in place.
+/// Segments are constructed in ascending token order (native first,
+/// spills at increasing offsets), so no sort is needed — asserted in
+/// debug builds.
 fn merge_adjacent(segs: &mut Vec<Segment>) {
     debug_assert!(segs.windows(2).all(|w| w[0].start <= w[1].start));
-    let mut out: Vec<Segment> = Vec::with_capacity(segs.len());
-    for s in segs.drain(..) {
-        if let Some(last) = out.last_mut() {
+    let mut w = 0usize;
+    for i in 0..segs.len() {
+        let s = segs[i];
+        if w > 0 {
+            let last = &mut segs[w - 1];
             if last.device == s.device && last.end == s.start {
                 last.end = s.end;
                 last.forced |= s.forced;
                 continue;
             }
         }
-        out.push(s);
+        segs[w] = s;
+        w += 1;
     }
-    *segs = out;
+    segs.truncate(w);
 }
 
 #[cfg(test)]
@@ -514,6 +671,14 @@ mod tests {
         let loads = vec![977, 3, 250, 41, 0, 123, 77, 529];
         let plan = plan_llep(&cfg(1.0, 50, 1.3), 8, 4, &loads, None);
         validate_plan(&plan, &loads).unwrap();
+    }
+
+    #[test]
+    fn transfers_are_canonical_at_construction() {
+        let loads = vec![9_000u64, 10, 4_000, 30, 0, 2_500, 70, 900];
+        let plan = plan_llep(&cfg(1.0, 16, 1.3), 8, 4, &loads, None);
+        assert!(plan.transfers.len() > 1, "spills produce transfers");
+        assert!(plan.transfers_canonical(), "{:?}", plan.transfers);
     }
 
     fn pool_with_speeds(speeds: &[f64]) -> PoolState {

@@ -12,9 +12,11 @@
 //! Experts below `min_tokens` stay native — a transfer plus a tiny GEMM
 //! is not worth it (same §3.2/Fig. 8 reasoning as LLEP's `m`).
 
+use super::scratch::{with_thread_scratch, PlanScratch};
 use super::{Planner, RoutePlan, Segment, WeightTransfer};
 use crate::chaos::PoolState;
 use crate::topology::Topology;
+use std::cmp::Reverse;
 
 /// The LPT planner's single knob.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -76,38 +78,7 @@ impl Planner for Lpt {
 /// Panics if `num_experts` is not divisible by `devices` (the block
 /// expert layout assumption shared by all planners here).
 pub fn plan_lpt(min_tokens: u64, num_experts: usize, devices: usize, loads: &[u64]) -> RoutePlan {
-    assert_eq!(loads.len(), num_experts);
-    assert!(devices > 0 && num_experts % devices == 0, "N must divide P");
-    let m = num_experts / devices;
-
-    let mut order: Vec<usize> = (0..num_experts).collect();
-    order.sort_unstable_by_key(|&e| (std::cmp::Reverse(loads[e]), e));
-
-    let mut dev_load = vec![0u64; devices];
-    let mut assignments: Vec<Vec<Segment>> = vec![Vec::new(); num_experts];
-    let mut transfers: Vec<WeightTransfer> = Vec::new();
-    for &e in &order {
-        let l = loads[e];
-        if l == 0 {
-            continue;
-        }
-        let native = e / m;
-        let target = if l < min_tokens {
-            native
-        } else {
-            // Least-loaded device; ties prefer native (no transfer), then
-            // the lowest index (determinism).
-            (0..devices)
-                .min_by_key(|&d| (dev_load[d], d != native, d))
-                .expect("devices > 0")
-        };
-        dev_load[target] += l;
-        assignments[e].push(Segment { device: target, start: 0, end: l, forced: false });
-        if target != native {
-            transfers.push(WeightTransfer { expert: e, from: native, to: target });
-        }
-    }
-    RoutePlan { num_experts, devices, assignments, transfers, fallback_ep: false }
+    with_thread_scratch(|s| plan_lpt_scratch(min_tokens, num_experts, devices, loads, None, s))
 }
 
 /// Speed-aware greedy LPT over a degraded pool: experts go to the device
@@ -121,37 +92,61 @@ pub fn plan_lpt_pool(
     loads: &[u64],
     pool: &PoolState,
 ) -> RoutePlan {
+    with_thread_scratch(|s| {
+        plan_lpt_scratch(min_tokens, num_experts, devices, loads, Some(pool), s)
+    })
+}
+
+/// The scratch-threaded LPT implementation behind [`plan_lpt`] and
+/// [`plan_lpt_pool`]: all working state and the returned plan's buffers
+/// come from `scratch` (allocation-free in steady state when finished
+/// plans are recycled).
+pub fn plan_lpt_scratch(
+    min_tokens: u64,
+    num_experts: usize,
+    devices: usize,
+    loads: &[u64],
+    pool: Option<&PoolState>,
+    scratch: &mut PlanScratch,
+) -> RoutePlan {
     assert_eq!(loads.len(), num_experts);
     assert!(devices > 0 && num_experts % devices == 0, "N must divide P");
-    assert_eq!(pool.len(), devices, "pool must cover every device");
+    if let Some(p) = pool {
+        assert_eq!(p.len(), devices, "pool must cover every device");
+        assert!(p.alive_count() > 0, "plan_lpt_pool needs at least one alive device");
+    }
     let m = num_experts / devices;
-    let speeds = pool.effective_speeds();
-    let alive: Vec<usize> = (0..devices).filter(|&d| speeds[d] > 0.0).collect();
-    assert!(!alive.is_empty(), "plan_lpt_pool needs at least one alive device");
+    let speed = |d: usize| pool.map_or(1.0, |p| p.devices[d].effective_speed());
 
-    let mut order: Vec<usize> = (0..num_experts).collect();
-    order.sort_unstable_by_key(|&e| (std::cmp::Reverse(loads[e]), e));
+    scratch.order.clear();
+    scratch.order.extend(0..num_experts);
+    scratch.order.sort_unstable_by_key(|&e| (Reverse(loads[e]), e));
+    scratch.prepare_devices(devices);
 
-    let mut dev_load = vec![0u64; devices];
-    let mut assignments: Vec<Vec<Segment>> = vec![Vec::new(); num_experts];
-    let mut transfers: Vec<WeightTransfer> = Vec::new();
-    for &e in &order {
+    let mut plan = scratch.take_plan(num_experts, devices);
+    let PlanScratch { order, g_a: dev_load, .. } = scratch;
+    for &e in order.iter() {
         let l = loads[e];
         if l == 0 {
             continue;
         }
         let native = e / m;
-        let native_alive = speeds[native] > 0.0;
+        let native_alive = speed(native) > 0.0;
         let target = if l < min_tokens && native_alive {
             native
+        } else if pool.is_none() {
+            // Least-loaded device; ties prefer native (no transfer), then
+            // the lowest index (determinism).
+            (0..devices)
+                .min_by_key(|&d| (dev_load[d], d != native, d))
+                .expect("devices > 0")
         } else {
             // Least normalized load among alive devices; ties prefer
             // native (no transfer), then the lowest index (determinism).
-            alive
-                .iter()
-                .copied()
+            (0..devices)
+                .filter(|&d| speed(d) > 0.0)
                 .min_by(|&a, &b| {
-                    let norm = |d: usize| dev_load[d] as f64 / speeds[d];
+                    let norm = |d: usize| dev_load[d] as f64 / speed(d);
                     norm(a)
                         .total_cmp(&norm(b))
                         .then((a != native).cmp(&(b != native)))
@@ -160,12 +155,13 @@ pub fn plan_lpt_pool(
                 .expect("alive devices exist")
         };
         dev_load[target] += l;
-        assignments[e].push(Segment { device: target, start: 0, end: l, forced: false });
+        plan.assignments[e].push(Segment { device: target, start: 0, end: l, forced: false });
         if target != native {
-            transfers.push(WeightTransfer { expert: e, from: native, to: target });
+            plan.transfers.push(WeightTransfer { expert: e, from: native, to: target });
         }
     }
-    RoutePlan { num_experts, devices, assignments, transfers, fallback_ep: false }
+    plan.canonicalize_transfers();
+    plan
 }
 
 #[cfg(test)]

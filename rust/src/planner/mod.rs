@@ -22,6 +22,14 @@
 //! on a closed enum. [`PlannerKind`] survives only as a thin constructor
 //! layer for backward compatibility; everything engine-side dispatches
 //! through `&dyn Planner`.
+//!
+//! Planning is on every step's critical path, so the in-tree planners
+//! draw all working state and the returned plan's buffers from a
+//! reusable [`scratch::PlanScratch`] arena (zero heap allocations in
+//! steady state once finished plans are [recycled](recycle_plan)), and
+//! every plan stores its transfers in canonical `(to, from, expert)`
+//! order at construction so pricing never re-sorts
+//! ([`RoutePlan::transfers_canonical`]).
 
 pub mod cache;
 pub mod eplb;
@@ -29,17 +37,22 @@ pub mod lla;
 pub mod lpt;
 pub mod placement;
 pub mod registry;
+pub mod scratch;
 pub mod validate;
 
 mod ep;
 
-pub use cache::{retarget_plan, CacheOutcome, CacheStats, CachedPlanner};
-pub use ep::{plan_ep, ChunkedEp, StandardEp};
+pub use cache::{
+    load_signature_into, pool_signature_into, retarget_plan, CacheOutcome, CacheStats,
+    CachedPlanner,
+};
+pub use ep::{plan_ep, plan_ep_scratch, ChunkedEp, StandardEp};
 pub use eplb::{plan_eplb, Eplb};
-pub use lla::{plan_llep, Llep};
-pub use lpt::{plan_lpt, Lpt};
+pub use lla::{plan_llep, plan_llep_pool, plan_llep_scratch, Llep};
+pub use lpt::{plan_lpt, plan_lpt_pool, plan_lpt_scratch, Lpt};
 pub use placement::Placement;
 pub use registry::{parse_planner, ParamSpec, Params, PlannerEntry, Registry, CACHED_PARAMS};
+pub use scratch::{recycle_plan, with_thread_scratch, PlanScratch};
 
 use crate::chaos::PoolState;
 use crate::config::LlepConfig;
@@ -116,6 +129,31 @@ impl RoutePlan {
     /// plan (native residents are not listed — only imports).
     pub fn imports_to(&self, device: usize) -> Vec<usize> {
         self.transfers.iter().filter(|t| t.to == device).map(|t| t.expert).collect()
+    }
+
+    /// Number of imported experts on `device` — the allocation-free
+    /// counterpart of `imports_to(device).len()` (pricing hot path).
+    pub fn imports_count(&self, device: usize) -> usize {
+        self.transfers.iter().filter(|t| t.to == device).count()
+    }
+
+    /// True when `transfers` is in the canonical `(to, from, expert)`
+    /// order every in-tree planner emits at construction. Pricing
+    /// accumulates weight-transfer time in this order (float addition is
+    /// not associative), so two plans with the same transfer *set* price
+    /// bit-identically; plans from out-of-tree planners that skip
+    /// [`canonicalize_transfers`](Self::canonicalize_transfers) are
+    /// sorted on a cold path instead.
+    pub fn transfers_canonical(&self) -> bool {
+        self.transfers
+            .windows(2)
+            .all(|w| (w[0].to, w[0].from, w[0].expert) <= (w[1].to, w[1].from, w[1].expert))
+    }
+
+    /// Sort `transfers` into the canonical `(to, from, expert)` order
+    /// (in place, allocation-free).
+    pub fn canonicalize_transfers(&mut self) {
+        self.transfers.sort_unstable_by_key(|t| (t.to, t.from, t.expert));
     }
 
     /// Number of distinct GEMM calls the plan implies (one per non-empty

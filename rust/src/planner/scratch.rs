@@ -1,0 +1,277 @@
+//! Reusable planning arena: the zero-allocation hot path.
+//!
+//! Planning runs once per MoE layer per serve step and thousands of
+//! times per tuner run, so allocator traffic — not the assignment
+//! algorithm — used to dominate the inner loop. [`PlanScratch`] owns
+//! every buffer a planner needs (expert order, per-device load
+//! accumulators, spill heaps, and a pool of retired [`RoutePlan`]
+//! shells whose segment vectors are recycled), so steady-state planning
+//! touches the heap zero times: the counting-allocator test at the
+//! bottom of this file asserts exactly that.
+//!
+//! Two ways to get a scratch:
+//!
+//! * **Explicit** — construct a [`PlanScratch`], pass it to the
+//!   `*_scratch` planner entry points, and hand finished plans back via
+//!   [`PlanScratch::recycle`]. This is what the benches and the
+//!   zero-alloc test use.
+//! * **Thread-local** — [`with_thread_scratch`] lends each thread one
+//!   arena; every trait-planner entry point plans through it, and
+//!   [`recycle_plan`] returns a retired plan's buffers to the calling
+//!   thread's arena (the engine recycles its warm run, the serving
+//!   sims and tuner recycle priced layer plans). Scoped worker threads
+//!   (per-layer planning, tuner trial evaluation) each get their own
+//!   arena, so there is no cross-thread contention to pay for.
+
+use super::{RoutePlan, Segment};
+use std::cell::RefCell;
+use std::cmp::Ordering;
+use std::cmp::Reverse;
+
+/// Retired plan shells kept per arena (warm plan + a few layers).
+const PLAN_POOL_CAP: usize = 8;
+/// Spare per-expert segment vectors kept when plan shapes shrink.
+const SPARE_SEGS_CAP: usize = 1024;
+
+/// Spill candidate under a speed profile: least *normalized* load
+/// first, intra-node peers preferred on ties, then lowest index — the
+/// exact order `lla.rs` historically re-sorted per spill iteration.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub(crate) struct NormCand {
+    pub norm: f64,
+    pub inter: u8,
+    pub dev: usize,
+}
+
+impl Eq for NormCand {}
+
+impl PartialOrd for NormCand {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for NormCand {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.norm
+            .total_cmp(&other.norm)
+            .then(self.inter.cmp(&other.inter))
+            .then(self.dev.cmp(&other.dev))
+    }
+}
+
+/// Heap backings for the least-loaded spill (Alg. 3). `BinaryHeap` is
+/// built from (and drained back into) these vectors, so the heap
+/// storage itself is reused across experts and steps.
+#[derive(Default)]
+pub(crate) struct SpillHeaps {
+    pub heap_u: Vec<Reverse<(u64, u8, usize)>>,
+    pub popped_u: Vec<(u64, u8, usize)>,
+    pub heap_f: Vec<Reverse<NormCand>>,
+    pub popped_f: Vec<NormCand>,
+}
+
+/// The reusable planning arena. See the module docs.
+#[derive(Default)]
+pub struct PlanScratch {
+    /// Expert indices, sorted by decreasing load per plan.
+    pub(crate) order: Vec<usize>,
+    /// Pending (not-yet-visited) native load per device.
+    pub(crate) g_p: Vec<u64>,
+    /// Assigned load per device (doubles as LPT's `dev_load`).
+    pub(crate) g_a: Vec<u64>,
+    /// Per-device "transfer already recorded" marks.
+    pub(crate) seen: Vec<bool>,
+    /// Speed-proportional per-device capacities (empty = homogeneous).
+    pub(crate) caps: Vec<f64>,
+    pub(crate) spill: SpillHeaps,
+    /// Retired plans whose assignment/transfer vectors get reused.
+    plans: Vec<RoutePlan>,
+    /// Spare per-expert segment vectors (kept when shapes shrink).
+    spare_segs: Vec<Vec<Segment>>,
+}
+
+impl PlanScratch {
+    pub fn new() -> PlanScratch {
+        PlanScratch::default()
+    }
+
+    /// A cleared plan shell sized for `num_experts`/`devices`. Buffers
+    /// come from the recycled pool where possible, so in steady state
+    /// (same shapes step to step) this performs no heap allocation.
+    pub(crate) fn take_plan(&mut self, num_experts: usize, devices: usize) -> RoutePlan {
+        let mut plan = self.plans.pop().unwrap_or_else(|| RoutePlan {
+            num_experts,
+            devices,
+            assignments: Vec::new(),
+            transfers: Vec::new(),
+            fallback_ep: false,
+        });
+        plan.num_experts = num_experts;
+        plan.devices = devices;
+        plan.fallback_ep = false;
+        plan.transfers.clear();
+        while plan.assignments.len() > num_experts {
+            let mut v = plan.assignments.pop().expect("len checked");
+            if self.spare_segs.len() < SPARE_SEGS_CAP {
+                v.clear();
+                self.spare_segs.push(v);
+            }
+        }
+        for segs in &mut plan.assignments {
+            segs.clear();
+        }
+        while plan.assignments.len() < num_experts {
+            plan.assignments.push(self.spare_segs.pop().unwrap_or_default());
+        }
+        plan
+    }
+
+    /// Return a finished plan's buffers to the arena so the next
+    /// [`take_plan`](Self::take_plan) reuses them.
+    pub fn recycle(&mut self, mut plan: RoutePlan) {
+        if self.plans.len() >= PLAN_POOL_CAP {
+            return;
+        }
+        plan.transfers.clear();
+        self.plans.push(plan);
+    }
+
+    /// Clear + size the per-device accumulators.
+    pub(crate) fn prepare_devices(&mut self, devices: usize) {
+        self.g_p.clear();
+        self.g_p.resize(devices, 0);
+        self.g_a.clear();
+        self.g_a.resize(devices, 0);
+        self.seen.clear();
+        self.seen.resize(devices, false);
+    }
+}
+
+thread_local! {
+    static SCRATCH: RefCell<Option<PlanScratch>> = const { RefCell::new(None) };
+}
+
+/// Run `f` with this thread's arena. The arena is taken out of the slot
+/// for the duration (a re-entrant call sees an empty slot and falls
+/// back to a fresh arena rather than aborting on a double borrow).
+pub fn with_thread_scratch<R>(f: impl FnOnce(&mut PlanScratch) -> R) -> R {
+    let mut s = SCRATCH.with(|slot| slot.borrow_mut().take()).unwrap_or_default();
+    let r = f(&mut s);
+    SCRATCH.with(|slot| *slot.borrow_mut() = Some(s));
+    r
+}
+
+/// Return a finished plan's buffers to the calling thread's arena. The
+/// engine calls this on its warm run and the serving/tuning loops call
+/// it on priced layer plans, closing the take/recycle cycle that makes
+/// steady-state planning allocation-free.
+pub fn recycle_plan(plan: RoutePlan) {
+    with_thread_scratch(|s| s.recycle(plan));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::LlepConfig;
+    use crate::planner::{plan_llep_scratch, validate::validate_plan, Planner, PlannerKind};
+
+    #[test]
+    fn take_plan_resizes_and_clears() {
+        let mut s = PlanScratch::new();
+        let mut p = s.take_plan(4, 2);
+        p.assignments[0].push(Segment { device: 0, start: 0, end: 5, forced: false });
+        p.transfers.push(crate::planner::WeightTransfer { expert: 0, from: 0, to: 1 });
+        p.fallback_ep = true;
+        s.recycle(p);
+        let p = s.take_plan(2, 1);
+        assert_eq!(p.num_experts, 2);
+        assert_eq!(p.devices, 1);
+        assert!(!p.fallback_ep);
+        assert!(p.transfers.is_empty());
+        assert!(p.assignments.iter().all(Vec::is_empty));
+        s.recycle(p);
+        // Growing again reuses the spare segment vectors.
+        let p = s.take_plan(8, 4);
+        assert_eq!(p.assignments.len(), 8);
+        assert!(p.assignments.iter().all(Vec::is_empty));
+    }
+
+    #[test]
+    fn reused_scratch_plans_bit_identically_to_fresh() {
+        let cfg = LlepConfig { alpha: 1.0, min_gemm_tokens: 16, lambda: 1.3 };
+        let loads = vec![977u64, 3, 250, 41, 0, 123, 77, 529];
+        let mut reused = PlanScratch::new();
+        for _ in 0..10 {
+            let fresh = plan_llep_scratch(&cfg, 8, 4, &loads, None, None, &mut PlanScratch::new());
+            let warm = plan_llep_scratch(&cfg, 8, 4, &loads, None, None, &mut reused);
+            assert_eq!(fresh, warm);
+            validate_plan(&warm, &loads).unwrap();
+            reused.recycle(warm);
+        }
+    }
+
+    /// The tentpole contract: once warmed up, planning with a recycled
+    /// arena performs ZERO heap allocations — asserted with the
+    /// per-thread counting allocator installed for the lib test binary
+    /// (see `util::alloc_count`).
+    #[test]
+    fn steady_state_planning_allocates_nothing() {
+        let cfg = LlepConfig { alpha: 1.0, min_gemm_tokens: 64, lambda: 1.3 };
+        // A skewed load: hot expert spills across devices, exercising
+        // the heap path, segment pushes, and transfer recording.
+        let mut loads = vec![64u64; 128];
+        loads[0] = 40_000;
+        loads[7] = 9_000;
+        let mut s = PlanScratch::new();
+        // Warm up: establish every buffer's capacity.
+        for _ in 0..3 {
+            let p = plan_llep_scratch(&cfg, 128, 8, &loads, None, None, &mut s);
+            s.recycle(p);
+        }
+        let before = crate::util::alloc_count::allocations_on_this_thread();
+        for _ in 0..50 {
+            let p = plan_llep_scratch(&cfg, 128, 8, &loads, None, None, &mut s);
+            s.recycle(p);
+        }
+        let after = crate::util::alloc_count::allocations_on_this_thread();
+        assert_eq!(after - before, 0, "steady-state plan_llep must not allocate");
+    }
+
+    #[test]
+    fn steady_state_trait_planning_allocates_nothing() {
+        // The trait path (`plan_with_stats` via the thread-local arena)
+        // is what the engine actually times as T_plan: it must be
+        // allocation-free too once plans are recycled.
+        let planner = PlannerKind::llep_default().boxed();
+        let mut loads = vec![64u64; 128];
+        loads[3] = 50_000;
+        for _ in 0..3 {
+            recycle_plan(planner.plan_with_stats(8, &loads, &loads, None));
+        }
+        let before = crate::util::alloc_count::allocations_on_this_thread();
+        for _ in 0..50 {
+            recycle_plan(planner.plan_with_stats(8, &loads, &loads, None));
+        }
+        let after = crate::util::alloc_count::allocations_on_this_thread();
+        assert_eq!(after - before, 0, "steady-state trait planning must not allocate");
+    }
+
+    #[test]
+    fn steady_state_cached_hit_allocates_nothing() {
+        use crate::planner::CachedPlanner;
+        let cached = CachedPlanner::new(PlannerKind::llep_default().boxed());
+        let mut loads = vec![64u64; 128];
+        loads[0] = 30_000;
+        // Miss once, then warm the hit path's buffers.
+        for _ in 0..3 {
+            recycle_plan(cached.plan(8, &loads, None));
+        }
+        let before = crate::util::alloc_count::allocations_on_this_thread();
+        for _ in 0..50 {
+            recycle_plan(cached.plan(8, &loads, None));
+        }
+        let after = crate::util::alloc_count::allocations_on_this_thread();
+        assert_eq!(after - before, 0, "steady-state cache hits must not allocate");
+    }
+}

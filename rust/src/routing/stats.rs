@@ -1,12 +1,22 @@
 //! Imbalance statistics over routings (paper §3.1, Fig. 3).
 
 use super::LoadMatrix;
-use crate::util::stats;
 
 /// The paper's imbalance ratio `max(l) / mean(l)` (Alg. 4 guard).
+/// Allocation-free (it runs on every LLEP planning call): same fold
+/// order and arithmetic as [`crate::util::stats::max_over_mean`] over
+/// the converted loads, so results are bit-identical to the historical
+/// collect-based implementation.
 pub fn imbalance_ratio(expert_loads: &[u64]) -> f64 {
-    let xs: Vec<f64> = expert_loads.iter().map(|&x| x as f64).collect();
-    stats::max_over_mean(&xs)
+    if expert_loads.is_empty() {
+        return 0.0;
+    }
+    let sum: f64 = expert_loads.iter().map(|&x| x as f64).sum();
+    let mean = sum / expert_loads.len() as f64;
+    if mean == 0.0 {
+        return 0.0;
+    }
+    expert_loads.iter().map(|&x| x as f64).fold(f64::MIN, f64::max) / mean
 }
 
 /// Per-device share of the global load under the block layout

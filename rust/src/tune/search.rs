@@ -299,6 +299,13 @@ impl Tuner {
                     oom |= r.oom;
                     stranded |= r.stranded;
                     priced_batches += 1;
+                    // Trial evaluation runs on scoped worker threads, each
+                    // with its own planning arena (thread-local): recycling
+                    // every priced plan keeps all the batches after the
+                    // first allocation-free on that worker.
+                    for layer in r.layers {
+                        crate::planner::recycle_plan(layer.plan);
+                    }
                 }
                 // Mean over the batches actually priced: an all-dead pool
                 // breaks the loop early and must not dilute the mean.

@@ -1,0 +1,69 @@
+//! Per-thread allocation counting (test builds only).
+//!
+//! The lib test binary installs [`CountingAlloc`] as the global
+//! allocator (see `lib.rs`); it delegates to the system allocator and
+//! bumps a thread-local counter on every `alloc`/`realloc`, so a test
+//! can assert a code path performs zero heap allocations on *its own*
+//! thread without interference from concurrently running tests.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+thread_local! {
+    static COUNT: Cell<u64> = const { Cell::new(0) };
+}
+
+fn bump() {
+    // `try_with`: TLS may be mid-teardown when a destructor allocates.
+    let _ = COUNT.try_with(|c| c.set(c.get() + 1));
+}
+
+/// Allocations performed by the calling thread since it started.
+pub fn allocations_on_this_thread() -> u64 {
+    COUNT.with(|c| c.get())
+}
+
+/// System allocator wrapper that counts per-thread allocations.
+pub struct CountingAlloc;
+
+// SAFETY: pure delegation to `System`; the TLS bump has no effect on
+// the returned memory.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        bump();
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_this_threads_allocations() {
+        let before = allocations_on_this_thread();
+        let v: Vec<u64> = Vec::with_capacity(32);
+        let after = allocations_on_this_thread();
+        assert!(after > before, "an allocation was counted");
+        drop(v);
+        // Pure arithmetic allocates nothing.
+        let before = allocations_on_this_thread();
+        let x = std::hint::black_box(3u64) * 7;
+        assert_eq!(std::hint::black_box(x), 21);
+        assert_eq!(allocations_on_this_thread(), before);
+    }
+}

@@ -3,7 +3,15 @@
 //! Measures wall-clock time of a closure with warmup, adaptive iteration
 //! counts, and outlier-robust statistics. Used by every `rust/benches/`
 //! target (all declared with `harness = false`).
+//!
+//! [`BenchSuite`] adds the rebar-style regression harness on top: a
+//! named set of results serialized to JSON (`BENCH_<suite>.json`: case
+//! name, median/mean/min ns, iteration count, git revision) and a
+//! median-vs-pin comparison with a tolerance band. `llep bench --suite
+//! hotpath --out/--check` drives it; CI fails on regressions beyond the
+//! band, so speedups are locked in rather than anecdotal.
 
+use crate::util::json::{self, Json};
 use std::hint::black_box;
 use std::time::{Duration, Instant};
 
@@ -147,6 +155,166 @@ pub fn quick_requested() -> bool {
     std::env::args().any(|a| a == "--quick") || std::env::var("LLEP_BENCH_QUICK").is_ok()
 }
 
+/// Best-effort current git revision (short), read straight from `.git`
+/// so no subprocess is spawned; `"unknown"` outside a repository.
+pub fn git_rev() -> String {
+    let read = |p: std::path::PathBuf| std::fs::read_to_string(p).ok();
+    let Some(head) = read(std::path::PathBuf::from(".git/HEAD")) else {
+        return "unknown".into();
+    };
+    let head = head.trim();
+    let full = match head.strip_prefix("ref: ") {
+        Some(r) => match read(std::path::Path::new(".git").join(r.trim())) {
+            Some(h) => h.trim().to_string(),
+            None => return "unknown".into(),
+        },
+        None => head.to_string(),
+    };
+    full.chars().take(12).collect()
+}
+
+/// A named set of bench results with JSON round-trip and pinned-baseline
+/// comparison (see the module docs).
+#[derive(Clone, Debug)]
+pub struct BenchSuite {
+    pub name: String,
+    pub git_rev: String,
+    pub results: Vec<BenchResult>,
+}
+
+/// One case's current-vs-pinned medians.
+#[derive(Clone, Debug)]
+pub struct BenchDelta {
+    pub name: String,
+    pub pinned_ns: f64,
+    pub current_ns: f64,
+}
+
+impl BenchDelta {
+    /// `current / pinned` — above 1.0 is slower than the pin.
+    pub fn ratio(&self) -> f64 {
+        self.current_ns / self.pinned_ns.max(1e-9)
+    }
+
+    /// Regression beyond the tolerance band (e.g. 0.25 = 25% slower).
+    pub fn regressed(&self, tolerance: f64) -> bool {
+        self.ratio() > 1.0 + tolerance
+    }
+}
+
+/// Result of comparing a fresh run against a pinned suite.
+#[derive(Clone, Debug, Default)]
+pub struct BenchComparison {
+    /// Cases present in both suites, in pin order.
+    pub deltas: Vec<BenchDelta>,
+    /// Pinned cases the current run no longer produces (renames count as
+    /// failures: a silently vanished case is an unguarded hot path).
+    pub missing: Vec<String>,
+}
+
+impl BenchComparison {
+    /// Deltas beyond the tolerance band, worst first.
+    pub fn regressions(&self, tolerance: f64) -> Vec<&BenchDelta> {
+        let mut out: Vec<&BenchDelta> =
+            self.deltas.iter().filter(|d| d.regressed(tolerance)).collect();
+        out.sort_by(|a, b| b.ratio().total_cmp(&a.ratio()));
+        out
+    }
+
+    pub fn passes(&self, tolerance: f64) -> bool {
+        self.missing.is_empty() && self.regressions(tolerance).is_empty()
+    }
+}
+
+impl BenchSuite {
+    pub fn new(name: &str) -> BenchSuite {
+        BenchSuite { name: name.to_string(), git_rev: git_rev(), results: Vec::new() }
+    }
+
+    /// Move a bencher's accumulated results into the suite.
+    pub fn absorb(&mut self, bencher: &Bencher) {
+        self.results.extend_from_slice(bencher.results());
+    }
+
+    pub fn get(&self, name: &str) -> Option<&BenchResult> {
+        self.results.iter().find(|r| r.name == name)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("suite", Json::str(&self.name)),
+            ("git_rev", Json::str(&self.git_rev)),
+            (
+                "results",
+                Json::arr(self.results.iter().map(|r| {
+                    Json::obj(vec![
+                        ("name", Json::str(&r.name)),
+                        ("median_ns", Json::num(r.median_ns)),
+                        ("mean_ns", Json::num(r.mean_ns)),
+                        ("min_ns", Json::num(r.min_ns)),
+                        ("stddev_ns", Json::num(r.stddev_ns)),
+                        ("iters", Json::num(r.iters as f64)),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<BenchSuite, String> {
+        let name = j.get("suite").and_then(Json::as_str).ok_or("missing suite field")?;
+        let git_rev = j.get("git_rev").and_then(Json::as_str).unwrap_or("unknown");
+        let results = j
+            .get("results")
+            .and_then(Json::as_arr)
+            .ok_or("missing results array")?
+            .iter()
+            .map(|r| {
+                let name = r.get("name").and_then(Json::as_str).ok_or("result missing name")?;
+                let median_ns = r
+                    .get("median_ns")
+                    .and_then(Json::as_f64)
+                    .ok_or("result missing median_ns")?;
+                Ok(BenchResult {
+                    name: name.to_string(),
+                    median_ns,
+                    mean_ns: r.get("mean_ns").and_then(Json::as_f64).unwrap_or(median_ns),
+                    min_ns: r.get("min_ns").and_then(Json::as_f64).unwrap_or(median_ns),
+                    stddev_ns: r.get("stddev_ns").and_then(Json::as_f64).unwrap_or(0.0),
+                    iters: r.get("iters").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+                })
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        Ok(BenchSuite { name: name.to_string(), git_rev: git_rev.to_string(), results })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<(), String> {
+        std::fs::write(path, self.to_json().to_string_pretty())
+            .map_err(|e| format!("{}: {e}", path.display()))
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<BenchSuite, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        let j = json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+        BenchSuite::from_json(&j)
+    }
+
+    /// Compare this (current) run's medians against a pinned suite.
+    pub fn compare(&self, pin: &BenchSuite) -> BenchComparison {
+        let mut cmp = BenchComparison::default();
+        for pinned in &pin.results {
+            match self.get(&pinned.name) {
+                Some(cur) => cmp.deltas.push(BenchDelta {
+                    name: pinned.name.clone(),
+                    pinned_ns: pinned.median_ns,
+                    current_ns: cur.median_ns,
+                }),
+                None => cmp.missing.push(pinned.name.clone()),
+            }
+        }
+        cmp
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -172,5 +340,61 @@ mod tests {
         assert!(format_ns(5_000.0).ends_with("µs"));
         assert!(format_ns(5_000_000.0).ends_with("ms"));
         assert!(format_ns(5e9).ends_with(" s"));
+    }
+
+    fn result(name: &str, median_ns: f64) -> BenchResult {
+        BenchResult {
+            name: name.into(),
+            iters: 100,
+            mean_ns: median_ns * 1.1,
+            median_ns,
+            min_ns: median_ns * 0.9,
+            stddev_ns: 1.0,
+        }
+    }
+
+    #[test]
+    fn suite_json_round_trips() {
+        let mut s = BenchSuite::new("hotpath");
+        s.results.push(result("a", 123.0));
+        s.results.push(result("b", 4.5e6));
+        let j = s.to_json();
+        let back = BenchSuite::from_json(&j).unwrap();
+        assert_eq!(back.name, "hotpath");
+        assert_eq!(back.results.len(), 2);
+        assert_eq!(back.get("b").unwrap().median_ns, 4.5e6);
+        // Text round-trip through the parser too.
+        let re = crate::util::json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(BenchSuite::from_json(&re).unwrap().results.len(), 2);
+    }
+
+    #[test]
+    fn compare_flags_regressions_and_missing_cases() {
+        let mut pin = BenchSuite::new("hotpath");
+        pin.results.push(result("fast", 100.0));
+        pin.results.push(result("slow", 100.0));
+        pin.results.push(result("gone", 100.0));
+        let mut cur = BenchSuite::new("hotpath");
+        cur.results.push(result("fast", 90.0)); // improved
+        cur.results.push(result("slow", 140.0)); // 40% regression
+        let cmp = cur.compare(&pin);
+        assert_eq!(cmp.missing, vec!["gone".to_string()]);
+        let regs = cmp.regressions(0.25);
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].name, "slow");
+        assert!((regs[0].ratio() - 1.4).abs() < 1e-12);
+        assert!(!cmp.passes(0.25), "missing case fails the gate");
+        // Within the band everything passes.
+        let mut ok = BenchSuite::new("hotpath");
+        ok.results.push(result("fast", 110.0));
+        ok.results.push(result("slow", 110.0));
+        ok.results.push(result("gone", 80.0));
+        assert!(ok.compare(&pin).passes(0.25));
+    }
+
+    #[test]
+    fn git_rev_is_short_or_unknown() {
+        let r = git_rev();
+        assert!(r == "unknown" || (!r.is_empty() && r.len() <= 12), "{r}");
     }
 }

@@ -9,6 +9,8 @@
 //! criterion-style benchmark kit ([`benchkit`]), a property-testing
 //! driver ([`prop`]) and a scoped-thread parallel map ([`par`]).
 
+#[cfg(test)]
+pub mod alloc_count;
 pub mod benchkit;
 pub mod cli;
 pub mod json;

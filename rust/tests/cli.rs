@@ -345,6 +345,39 @@ fn tune_pin_bootstraps_verifies_and_detects_drift() {
 }
 
 #[test]
+fn bench_suite_bootstraps_checks_and_detects_regression() {
+    let dir = std::env::temp_dir().join("llep_bench_pin_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let pin = dir.join("BENCH_planner.json");
+    std::fs::remove_file(&pin).ok();
+    let pin_s = pin.to_str().unwrap().to_string();
+    let args: Vec<&str> = vec!["bench", "--suite", "hotpath", "--quick", "--check", &pin_s];
+    let out = run_ok(&args);
+    assert!(out.contains("bench pin bootstrapped"), "{out}");
+    assert!(pin.exists());
+    // Against its own (just-written) medians with a generous band the
+    // suite must pass; against an absurdly fast pin it must fail loudly.
+    let relaxed: Vec<&str> = vec![
+        "bench", "--suite", "hotpath", "--quick", "--check", &pin_s, "--tolerance", "20.0",
+    ];
+    let out = run_ok(&relaxed);
+    assert!(out.contains("bench pin ok"), "{out}");
+    let mut pinned = llep::util::benchkit::BenchSuite::load(&pin).unwrap();
+    for r in &mut pinned.results {
+        r.median_ns /= 1e6; // an absurdly fast pin: every case regresses
+    }
+    pinned.save(&pin).unwrap();
+    let out = llep().args(&args).output().unwrap();
+    assert!(!out.status.success(), "poisoned pin must regress every case");
+    assert!(String::from_utf8_lossy(&out.stderr).contains("bench regression"));
+    // Unknown suites are loud errors.
+    let out = llep().args(["bench", "--suite", "bogus"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown bench suite"));
+    std::fs::remove_file(&pin).ok();
+}
+
+#[test]
 fn calibrate_fits_model() {
     let out = run_ok(&["calibrate"]);
     assert!(out.contains("peak_flops"));

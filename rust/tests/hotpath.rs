@@ -1,0 +1,424 @@
+//! Hot-path equivalence contracts for the zero-allocation planner and
+//! canonical-transfer pricing.
+//!
+//! 1. The arena-backed, heap-spill LLA (`plan_llep`/`plan_llep_pool`)
+//!    must be **bit-identical** to the historical allocating
+//!    implementation (per-spill re-sort, fresh vectors per plan) across
+//!    random `(loads, pool, alpha, m, lambda)` draws — the reference is
+//!    reimplemented verbatim below so the equivalence is checked against
+//!    the algorithm, not against the code under test.
+//! 2. Reusing one `PlanScratch` across many plans changes nothing vs a
+//!    fresh arena per plan.
+//! 3. `price_plan` is invariant to the order a plan's transfer list is
+//!    stored in (canonical construction order vs any shuffle) — the
+//!    plan-reuse pricing contract from PR 2 extended to the borrowed
+//!    slice fast path.
+
+use llep::config::{LlepConfig, ModelConfig, ModelPreset, SystemConfig, SystemPreset};
+use llep::exec::{price_plan, Engine};
+use llep::planner::validate::validate_plan;
+use llep::planner::{
+    plan_llep, plan_llep_pool, plan_llep_scratch, PlanScratch, Planner, PlannerKind, RoutePlan,
+    Segment, WeightTransfer,
+};
+use llep::prelude::PoolState;
+use llep::routing::Scenario;
+use llep::util::prop::{assert_property, no_shrink};
+use llep::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// Reference implementation: the PR-4 allocating LLA/LLAS (sort-based
+// spill, fresh vectors), kept verbatim modulo visibility.
+// ---------------------------------------------------------------------------
+
+fn reference_llep(
+    cfg: &LlepConfig,
+    num_experts: usize,
+    devices: usize,
+    loads: &[u64],
+    speeds: Option<&[f64]>,
+) -> RoutePlan {
+    assert_eq!(loads.len(), num_experts);
+    assert!(devices > 0 && num_experts % devices == 0, "N must divide P");
+    let m_per_dev = num_experts / devices;
+    let total: u64 = loads.iter().sum();
+    let mut plan = RoutePlan {
+        num_experts,
+        devices,
+        assignments: vec![Vec::new(); num_experts],
+        transfers: Vec::new(),
+        fallback_ep: false,
+    };
+    if total == 0 {
+        return plan;
+    }
+
+    let m_alpha = cfg.alpha * total as f64 / devices as f64;
+    let caps: Option<Vec<f64>> = speeds.map(|s| {
+        let sum: f64 = s.iter().sum();
+        s.iter().map(|&sd| cfg.alpha * total as f64 * sd / sum.max(f64::MIN_POSITIVE)).collect()
+    });
+    let cap_of = |d: usize| -> f64 {
+        match &caps {
+            None => m_alpha,
+            Some(c) => c[d],
+        }
+    };
+    let min_chunk = cfg.min_gemm_tokens as u64;
+
+    let mut order: Vec<usize> = (0..num_experts).collect();
+    order.sort_unstable_by_key(|&e| (std::cmp::Reverse(loads[e]), e));
+
+    let mut g_p: Vec<u64> = vec![0; devices];
+    for (e, &l) in loads.iter().enumerate() {
+        g_p[e / m_per_dev] += l;
+    }
+    let mut g_a: Vec<u64> = vec![0; devices];
+    let mut seen: Vec<bool> = vec![false; devices];
+    let mut others_scratch: Vec<usize> = Vec::with_capacity(devices);
+
+    for &e in &order {
+        let load = loads[e];
+        let ng = e / m_per_dev;
+        g_p[ng] -= load;
+        if load == 0 {
+            continue;
+        }
+        let mut segs: Vec<Segment> = Vec::new();
+
+        let native_dead = speeds.is_some_and(|s| s[ng] <= 0.0);
+        let occupied = (g_a[ng] + g_p[ng]) as f64;
+        let na = if native_dead { i64::MIN } else { (cap_of(ng) - occupied).floor() as i64 };
+
+        if !native_dead && na >= load as i64 {
+            segs.push(Segment { device: ng, start: 0, end: load, forced: false });
+            g_a[ng] += load;
+        } else if na > 0 {
+            let nc = (na as u64).min(load);
+            let remaining = load - nc;
+            if remaining < min_chunk {
+                segs.push(Segment { device: ng, start: 0, end: load, forced: true });
+                g_a[ng] += load;
+            } else {
+                segs.push(Segment { device: ng, start: 0, end: nc, forced: false });
+                g_a[ng] += nc;
+                reference_spill(
+                    ng, remaining, nc, &mut segs, &mut g_a, &g_p, &cap_of, min_chunk, None,
+                    speeds, &mut others_scratch,
+                );
+            }
+        } else if load < min_chunk && !native_dead {
+            segs.push(Segment { device: ng, start: 0, end: load, forced: true });
+            g_a[ng] += load;
+        } else {
+            reference_spill(
+                ng, load, 0, &mut segs, &mut g_a, &g_p, &cap_of, min_chunk, None, speeds,
+                &mut others_scratch,
+            );
+        }
+
+        reference_merge(&mut segs);
+        for s in &segs {
+            if s.device != ng && !seen[s.device] {
+                seen[s.device] = true;
+                plan.transfers.push(WeightTransfer { expert: e, from: ng, to: s.device });
+            }
+        }
+        for s in &segs {
+            seen[s.device] = false;
+        }
+        plan.assignments[e] = segs;
+    }
+    plan
+}
+
+#[allow(clippy::too_many_arguments)]
+fn reference_spill(
+    ng: usize,
+    mut r: u64,
+    mut to: u64,
+    segs: &mut Vec<Segment>,
+    g_a: &mut [u64],
+    g_p: &[u64],
+    cap_of: &dyn Fn(usize) -> f64,
+    min_chunk: u64,
+    _topo: Option<()>,
+    speeds: Option<&[f64]>,
+    others: &mut Vec<usize>,
+) {
+    let devices = g_a.len();
+    while r > 0 {
+        others.clear();
+        match speeds {
+            None => others.extend((0..devices).filter(|&d| d != ng)),
+            Some(s) => others.extend((0..devices).filter(|&d| d != ng && s[d] > 0.0)),
+        }
+        if others.is_empty() {
+            segs.push(Segment { device: ng, start: to, end: to + r, forced: true });
+            g_a[ng] += r;
+            return;
+        }
+        match speeds {
+            None => others.sort_by_key(|&d| (g_a[d] + g_p[d], 0u8, d)),
+            Some(s) => others.sort_by(|&a, &b| {
+                let norm = |d: usize| (g_a[d] + g_p[d]) as f64 / s[d];
+                norm(a).total_cmp(&norm(b)).then(a.cmp(&b))
+            }),
+        }
+
+        let mut assigned = false;
+        for &o in others.iter() {
+            let occupied = (g_a[o] + g_p[o]) as f64;
+            let cap = (cap_of(o) - occupied).floor() as i64;
+            if cap <= 0 {
+                continue;
+            }
+            let c = r.min(cap as u64);
+            if c < min_chunk && r > c {
+                continue;
+            }
+            segs.push(Segment { device: o, start: to, end: to + c, forced: false });
+            g_a[o] += c;
+            r -= c;
+            to += c;
+            assigned = true;
+            break;
+        }
+
+        if !assigned {
+            let o = others[0];
+            segs.push(Segment { device: o, start: to, end: to + r, forced: true });
+            g_a[o] += r;
+            return;
+        }
+    }
+}
+
+fn reference_merge(segs: &mut Vec<Segment>) {
+    let mut out: Vec<Segment> = Vec::with_capacity(segs.len());
+    for s in segs.drain(..) {
+        if let Some(last) = out.last_mut() {
+            if last.device == s.device && last.end == s.start {
+                last.end = s.end;
+                last.forced |= s.forced;
+                continue;
+            }
+        }
+        out.push(s);
+    }
+    *segs = out;
+}
+
+// ---------------------------------------------------------------------------
+// Property inputs
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+struct Draw {
+    loads: Vec<u64>,
+    devices: usize,
+    cfg: LlepConfig,
+    /// Effective speeds (0.0 = dead) — None for a homogeneous run.
+    speeds: Option<Vec<f64>>,
+}
+
+fn gen_draw(rng: &mut Rng) -> Draw {
+    let devices = [2usize, 4, 8][rng.index(3)];
+    let experts_per = 1 + rng.index(8);
+    let n = devices * experts_per;
+    let mut loads: Vec<u64> = (0..n).map(|_| rng.below(2_000)).collect();
+    // Concentrate a hotspot often enough to exercise the spill loop.
+    if rng.index(4) != 0 {
+        let hot = rng.index(n);
+        loads[hot] += 10_000 + rng.below(50_000);
+    }
+    let cfg = LlepConfig {
+        alpha: [1.0, 1.25, 1.5, 2.0][rng.index(4)],
+        min_gemm_tokens: [1usize, 16, 64, 1024][rng.index(4)],
+        lambda: [1.0, 1.1, 1.3, 2.0][rng.index(4)],
+    };
+    let speeds = if rng.index(2) == 0 {
+        None
+    } else {
+        let mut s: Vec<f64> =
+            (0..devices).map(|_| [0.25, 0.33, 0.5, 1.0, 1.0, 2.0][rng.index(6)]).collect();
+        // Kill at most devices-1 so at least one stays schedulable.
+        let deaths = rng.index(devices);
+        for _ in 0..deaths {
+            let d = rng.index(devices);
+            if s.iter().filter(|&&x| x > 0.0).count() > 1 {
+                s[d] = 0.0;
+            }
+        }
+        Some(s)
+    };
+    Draw { loads, devices, cfg, speeds }
+}
+
+fn pool_from_speeds(speeds: &[f64]) -> PoolState {
+    let mut p = PoolState::healthy(speeds.len());
+    for (d, &s) in speeds.iter().enumerate() {
+        if s <= 0.0 {
+            p.devices[d].alive = false;
+        } else {
+            p.devices[d].speed = s;
+        }
+    }
+    p
+}
+
+// ---------------------------------------------------------------------------
+// 1. heap-spill + arena == reference allocating implementation
+// ---------------------------------------------------------------------------
+
+#[test]
+fn scratch_planning_matches_reference_bit_identically() {
+    assert_property(
+        "arena/heap LLA == PR-4 allocating LLA",
+        0xB07,
+        300,
+        gen_draw,
+        |draw: &Draw| {
+            let n = draw.loads.len();
+            let (got, want) = match &draw.speeds {
+                None => (
+                    plan_llep(&draw.cfg, n, draw.devices, &draw.loads, None),
+                    reference_llep(&draw.cfg, n, draw.devices, &draw.loads, None),
+                ),
+                Some(s) => (
+                    plan_llep_pool(
+                        &draw.cfg,
+                        n,
+                        draw.devices,
+                        &draw.loads,
+                        None,
+                        &pool_from_speeds(s),
+                    ),
+                    reference_llep(&draw.cfg, n, draw.devices, &draw.loads, Some(s)),
+                ),
+            };
+            if got.assignments != want.assignments {
+                return Err(format!(
+                    "assignments diverge:\n got {:?}\nwant {:?}",
+                    got.assignments, want.assignments
+                ));
+            }
+            // The new planner stores transfers canonically; the reference
+            // emits them in visit order — compare canonicalized.
+            let mut want_t = want.transfers.clone();
+            want_t.sort_unstable_by_key(|t| (t.to, t.from, t.expert));
+            if got.transfers != want_t {
+                return Err(format!(
+                    "transfers diverge:\n got {:?}\nwant {:?}",
+                    got.transfers, want_t
+                ));
+            }
+            if !got.transfers_canonical() {
+                return Err("plan not canonical at construction".into());
+            }
+            validate_plan(&got, &draw.loads).map_err(|e| format!("invalid plan: {e}"))
+        },
+        no_shrink,
+    );
+}
+
+// ---------------------------------------------------------------------------
+// 2. arena reuse changes nothing
+// ---------------------------------------------------------------------------
+
+#[test]
+fn reused_arena_is_bit_identical_to_fresh_arena() {
+    let mut rng = Rng::new(42);
+    let mut reused = PlanScratch::new();
+    for _ in 0..120 {
+        let draw = gen_draw(&mut rng);
+        let n = draw.loads.len();
+        let pool = draw.speeds.as_deref().map(pool_from_speeds);
+        let fresh = plan_llep_scratch(
+            &draw.cfg,
+            n,
+            draw.devices,
+            &draw.loads,
+            None,
+            pool.as_ref(),
+            &mut PlanScratch::new(),
+        );
+        let warm = plan_llep_scratch(
+            &draw.cfg,
+            n,
+            draw.devices,
+            &draw.loads,
+            None,
+            pool.as_ref(),
+            &mut reused,
+        );
+        assert_eq!(fresh, warm, "arena reuse must not change the plan: {draw:?}");
+        reused.recycle(warm);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 3. pricing is invariant to transfer storage order
+// ---------------------------------------------------------------------------
+
+#[test]
+fn price_plan_bit_identical_for_any_transfer_order() {
+    let engine = Engine::modeled(
+        ModelConfig::preset(ModelPreset::Fig1Layer),
+        SystemConfig::preset(SystemPreset::H200x8),
+    );
+    let kind = PlannerKind::llep_default();
+    let mut rng = Rng::new(9);
+    for case in 0..20 {
+        let lm = Scenario::concentrated(0.9, 1 + case % 4).generate_loads(
+            &engine.model,
+            8,
+            16_384,
+            &mut rng,
+        );
+        let plan = kind.plan(8, &lm.expert_loads(), Some(&engine.topo));
+        assert!(plan.transfers_canonical());
+        let canonical = price_plan(&engine, &plan, &lm, &kind, 0.0, None);
+
+        // Scramble the transfer list (reverse + rotate): the cold
+        // fallback path must sort back to the identical accumulation
+        // order, so every float agrees to the bit.
+        let mut scrambled = plan.clone();
+        scrambled.transfers.reverse();
+        if scrambled.transfers.len() > 2 {
+            scrambled.transfers.rotate_left(1);
+        }
+        if scrambled.transfers.len() > 1 {
+            assert!(!scrambled.transfers_canonical(), "scramble must break canonical order");
+        }
+        let shuffled = price_plan(&engine, &scrambled, &lm, &kind, 0.0, None);
+
+        assert_eq!(canonical.latency_s.to_bits(), shuffled.latency_s.to_bits());
+        assert_eq!(
+            canonical.phases.weights_s.to_bits(),
+            shuffled.phases.weights_s.to_bits()
+        );
+        assert_eq!(canonical.device_compute_s, shuffled.device_compute_s);
+        assert_eq!(canonical.device_peak_bytes, shuffled.device_peak_bytes);
+        assert_eq!(canonical.bytes_weights, shuffled.bytes_weights);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 4. every in-tree planner constructs canonical plans
+// ---------------------------------------------------------------------------
+
+#[test]
+fn all_builtin_planners_emit_canonical_transfers() {
+    let mut rng = Rng::new(5);
+    for spec in ["ep", "llep:m=16", "eplb:r=6", "lpt:min=64", "cached(llep:m=16)"] {
+        let planner = llep::planner::parse_planner(spec).unwrap();
+        for _ in 0..10 {
+            let draw = gen_draw(&mut rng);
+            let n = draw.loads.len();
+            let plan = planner.plan_with_stats(draw.devices, &draw.loads, &draw.loads, None);
+            assert_eq!(plan.num_experts, n);
+            assert!(plan.transfers_canonical(), "{spec}: {:?}", plan.transfers);
+        }
+    }
+}
