@@ -1,0 +1,124 @@
+//! Bench: fleet-level serving — router policies under heterogeneous
+//! replicas, and the whole-replica failure drill.
+//!
+//! Three measurements:
+//!
+//! 1. **Router shoot-out** — 3 replicas, one at quarter speed, under a
+//!    bursty workload: p99 TTFT / goodput per routing policy. Asserts
+//!    the pinned contract that queue-aware routing beats round-robin on
+//!    p99 TTFT (same contract as `rust/tests/fleet.rs`).
+//! 2. **Failure drill** — a whole-replica failure mid-run with
+//!    drain-and-reroute: requeue counts, goodput retention, and the
+//!    exact summed ledger.
+//! 3. **Simulator wall time** — host-side cost of one fleet run (the
+//!    discrete-event loop itself must stay cheap enough for sweeps).
+//!
+//! Run: `cargo bench --bench fleet` (add `--quick` to shrink).
+
+use llep::fleet::{FleetFaultPlan, FleetSim, ReplicaConfig, RouterPolicy, Workload};
+use llep::metrics::{fleet_replica_table, format_secs, Table};
+use llep::prelude::*;
+use llep::util::benchkit::{bb, quick_requested, Bencher};
+use llep::util::rng::Rng;
+
+fn main() {
+    let quick = quick_requested();
+    let engine = Engine::modeled(
+        ModelConfig::preset(ModelPreset::Fig1Layer),
+        SystemConfig::preset(SystemPreset::H200x8),
+    );
+    let scenario = Scenario::concentrated(0.8, 4);
+    let n_req = if quick { 32 } else { 96 };
+    let wl = Workload::parse(&format!(
+        "bursty:n={n_req},ia=0.00005,burst=8,every=16,prompt=512-2048,decode=2-8"
+    ))
+    .unwrap();
+
+    // ---- 1. router shoot-out: one quarter-speed replica ------------------
+    let replicas = || {
+        vec![
+            ReplicaConfig::default(),
+            ReplicaConfig::default(),
+            ReplicaConfig::default().with_speed(0.25),
+        ]
+    };
+    let fleet = |router| {
+        FleetSim::new(engine.clone(), scenario.clone(), replicas(), 16_384)
+            .with_workload(wl.clone())
+            .with_router(router)
+            .try_run(7)
+            .expect("fleet run")
+    };
+    let policies = [RouterPolicy::RoundRobin, RouterPolicy::LeastQueue, RouterPolicy::Pressure];
+    let runs: Vec<_> = policies.iter().map(|&p| fleet(p)).collect();
+    let mut t = Table::new(&[
+        "router",
+        "p99 TTFT",
+        "p99 latency",
+        "goodput",
+        "makespan",
+        "slow-replica share",
+    ]);
+    for r in &runs {
+        assert_eq!(r.completed, r.requests, "{}: lost requests", r.router);
+        assert!(r.tokens.is_exact(), "{}: {:?}", r.router, r.tokens);
+        t.row(vec![
+            r.router.clone(),
+            format_secs(r.ttft.p99),
+            format_secs(r.request_latency.p99),
+            format!("{:.0} tok/s", r.goodput_tps),
+            format_secs(r.makespan_s),
+            format!("{}/{}", r.replicas[2].routed, r.requests),
+        ]);
+    }
+    println!(
+        "Router shoot-out: 3 replicas (one at 0.25x), {} | {n_req} requests\n",
+        wl.label()
+    );
+    println!("{}", t.render());
+    let (rr, lq) = (&runs[0], &runs[1]);
+    assert!(
+        lq.ttft.p99 < rr.ttft.p99,
+        "contract: least-queue p99 TTFT {} must beat round-robin {}",
+        lq.ttft.p99,
+        rr.ttft.p99
+    );
+
+    // ---- 2. whole-replica failure drill ----------------------------------
+    let arrivals = wl.generate(&mut Rng::new(7));
+    let kill_at = arrivals[n_req / 3].arrival_s;
+    let faults = FleetFaultPlan::parse(&format!(
+        "fail:r=1,at={kill_at};recover:r=1,at={}",
+        kill_at * 3.0
+    ))
+    .unwrap();
+    let drill = FleetSim::new(engine.clone(), scenario.clone(), replicas(), 16_384)
+        .with_workload(wl.clone())
+        .with_faults(faults)
+        .try_run(7)
+        .expect("fleet must survive a whole-replica failure");
+    assert_eq!(drill.completed, drill.requests);
+    assert!(drill.tokens.is_exact(), "summed ledger: {:?}", drill.tokens);
+    assert!(drill.max_requeues <= 1, "one failure: at most one requeue per request");
+    println!(
+        "Failure drill: replica 1 dies at {} and rejoins at {}\n",
+        format_secs(kill_at),
+        format_secs(kill_at * 3.0)
+    );
+    println!("{}", fleet_replica_table(&drill).render());
+    println!(
+        "{} requeued request(s) (max {} per request), goodput {:.0} tok/s vs {:.0} healthy",
+        drill.requeued_requests, drill.max_requeues, drill.goodput_tps, lq.goodput_tps
+    );
+
+    // ---- 3. simulator wall time ------------------------------------------
+    let mut b = if quick { Bencher::quick() } else { Bencher::new() };
+    let sim = FleetSim::new(engine, scenario, replicas(), 16_384)
+        .with_workload(wl)
+        .with_router(RouterPolicy::LeastQueue);
+    let wall = b.bench("fleet/least-queue/run", || bb(sim.try_run(7).unwrap().completed));
+    println!(
+        "\nfleet run wall time {} for {n_req} requests x 3 replicas",
+        format_secs(wall.mean_s())
+    );
+}

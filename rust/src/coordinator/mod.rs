@@ -1,17 +1,32 @@
-//! Coordinator: multi-step runners gluing planner + engine, the
-//! serving-style batch queue, and EPLB's stale-statistics pipeline.
+//! Coordinator: multi-step runners gluing planner + engine, and the
+//! replica serving core behind every queue-driven simulator.
 //!
 //! This is the process-level "leader" role: it owns the per-batch loop
 //! (collect loads → plan → execute → report) that a real deployment runs
-//! once per iteration, for both inference and training.
+//! once per iteration, for both inference and training. All planner
+//! policies flow through the trait [`Planner`](crate::planner::Planner)
+//! object (`&dyn Planner`), so spec-parsed, cached, and custom planners
+//! are interchangeable everywhere.
+//!
+//! The serving side is layered: [`Replica`] (in `replica.rs`) is the
+//! single event loop — admission under a token budget, chaos pool
+//! resolution, full-model step pricing, exact token ledgering — and
+//! [`ServeSim`]/[`ContinuousBatchSim`] (in `serve.rs`), the autotuner's
+//! serve-mode trials, and the [`fleet`](crate::fleet) cluster simulator
+//! are thin drivers feeding requests into it.
 
 mod mitigation;
+mod replica;
 mod serve;
 
 pub use mitigation::{split_loads, BatchSplitPolicy, SplitOutcome};
+pub use replica::{
+    attention_overhead_s, uniform_profile, ChaosStats, Replica, ReplicaRequest,
+    ReplicaStepOutcome, StepEvents, TokenLedger,
+};
 pub use serve::{
-    ChaosStats, ContinuousBatchSim, ContinuousReport, GenRequest, Request, ServeReport, ServeSim,
-    TokenLedger,
+    run_continuous, ContinuousBatchSim, ContinuousReport, GenRequest, Request, ServeReport,
+    ServeSim,
 };
 
 use crate::exec::{Engine, StepReport};

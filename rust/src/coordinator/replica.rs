@@ -1,0 +1,650 @@
+//! The replica core: one serving engine's event loop, shared by every
+//! simulator that prices batched MoE steps on a virtual clock.
+//!
+//! A [`Replica`] owns the per-replica serving state — the waiting queue,
+//! the active decode set, the chaos pool view, the token ledger and the
+//! step counters — and exposes a single [`step`](Replica::step) API:
+//! admit waiting prefills under the token budget, join them with one
+//! token per active decode, resolve this step's fault-plan pool view
+//! (aborting + requeueing the in-flight attempt when a device died),
+//! price one **full-model** engine step over the exact token total, and
+//! advance the virtual clock by the step latency.
+//!
+//! [`ServeSim`](super::ServeSim), [`ContinuousBatchSim`](super::ContinuousBatchSim),
+//! the autotuner's serve-mode trial evaluation and the
+//! [`fleet`](crate::fleet) cluster simulator are all thin drivers over
+//! this loop: they differ only in how requests are fed in and which
+//! outcome events they aggregate. The loop's float and RNG operation
+//! order is the bit-reproducibility contract — two runs with the same
+//! (requests, engine, fault plan, seed) produce identical reports, and
+//! the pre-refactor `ServeSim`/`ContinuousBatchSim` numbers are
+//! preserved exactly.
+
+use crate::chaos::{FaultPlan, PoolState};
+use crate::exec::{Engine, ModelStepReport};
+use crate::planner::{CacheStats, Planner};
+use crate::routing::{DepthProfile, Scenario};
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+use std::collections::VecDeque;
+
+/// Admitted-vs-priced token accounting shared by all serving reports:
+/// `admitted` tokens entered from the request stream, `priced` tokens
+/// were charged by the engine. The contract is equality.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TokenLedger {
+    pub admitted: u64,
+    pub priced: u64,
+}
+
+impl TokenLedger {
+    pub fn add(&mut self, admitted: u64, priced: u64) {
+        self.admitted += admitted;
+        self.priced += priced;
+    }
+
+    /// Merge another ledger (fleet reports sum their replicas' ledgers).
+    pub fn absorb(&mut self, other: &TokenLedger) {
+        self.admitted += other.admitted;
+        self.priced += other.priced;
+    }
+
+    /// True when every admitted token was priced exactly once.
+    pub fn is_exact(&self) -> bool {
+        self.admitted == self.priced
+    }
+}
+
+/// Chaos accounting for one serving run (all zero without a fault plan).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ChaosStats {
+    /// Engine steps priced under a degraded pool view.
+    pub fault_steps: usize,
+    /// Devices observed transitioning alive -> dead during the run.
+    pub failures: usize,
+    /// Devices observed transitioning dead -> alive (elastic scale-up).
+    pub recoveries: usize,
+    /// Aborted in-flight steps whose batch was requeued after a failure.
+    pub requeues: usize,
+    /// Tokens those aborts requeued. The [`TokenLedger`] still counts
+    /// every admitted token exactly once — only the successful retry
+    /// prices them.
+    pub requeued_tokens: u64,
+    /// Virtual time burned by aborted attempts.
+    pub wasted_s: f64,
+    /// Max aborted attempts observed before a successful (elastically
+    /// replanned) step completed — measured per failure event, so a
+    /// regression that makes recovery loop shows up here. The
+    /// bounded-recovery contract (`<= 1` under the current single-abort
+    /// model) is asserted by `rust/tests/chaos.rs`.
+    pub max_recovery_steps: usize,
+}
+
+impl ChaosStats {
+    /// Merge another run's counters (fleet reports sum their replicas'
+    /// device-level chaos accounting; the recovery bound is a max).
+    pub fn absorb(&mut self, other: &ChaosStats) {
+        self.fault_steps += other.fault_steps;
+        self.failures += other.failures;
+        self.recoveries += other.recoveries;
+        self.requeues += other.requeues;
+        self.requeued_tokens += other.requeued_tokens;
+        self.wasted_s += other.wasted_s;
+        self.max_recovery_steps = self.max_recovery_steps.max(other.max_recovery_steps);
+    }
+}
+
+/// Per-step chaos bookkeeping for one replica: resolves the fault plan
+/// into pool views, prices + discards the in-flight attempt a fresh
+/// failure aborts, and hands the step an engine view of the degraded
+/// pool.
+struct ChaosDriver<'a> {
+    plan: Option<&'a FaultPlan>,
+    base: PoolState,
+    stats: ChaosStats,
+    /// Aborted attempts since the last successful step (resolved into
+    /// `stats.max_recovery_steps` when a step completes).
+    pending_aborts: usize,
+    /// Cached engine view for the current degraded pool. Permanent
+    /// degradations (a straggler, a failure, preset speeds under a fault
+    /// plan) keep the same pool for many consecutive steps — rebuilding
+    /// the engine (clone + topology re-derivation) per step would be
+    /// pure waste.
+    view: Option<(PoolState, Engine)>,
+}
+
+impl<'a> ChaosDriver<'a> {
+    fn new(engine: &Engine, plan: Option<&'a FaultPlan>) -> Result<ChaosDriver<'a>, String> {
+        if let Some(p) = plan {
+            p.validate(engine.system.devices)?;
+        }
+        Ok(ChaosDriver {
+            plan,
+            base: engine.pool.clone(),
+            stats: ChaosStats::default(),
+            pending_aborts: 0,
+            view: None,
+        })
+    }
+
+    /// Engine to price the current step with (set by
+    /// [`begin_step`](Self::begin_step)): the cached degraded view, or
+    /// `base` while the pool is healthy.
+    fn engine<'b>(&'b self, base: &'b Engine) -> &'b Engine {
+        self.view.as_ref().map(|(_, e)| e).unwrap_or(base)
+    }
+
+    /// Advance to engine step `step` (called once per step, before the
+    /// step is priced). When a device died since the previous step, the
+    /// attempt that was in flight is priced against the *old* pool,
+    /// charged to the clock as waste, and the batch requeues — the
+    /// caller then prices the elastically replanned step against
+    /// [`engine`](Self::engine).
+    #[allow(clippy::too_many_arguments)]
+    fn begin_step(
+        &mut self,
+        step: usize,
+        engine: &Engine,
+        profile: &DepthProfile,
+        planner: &dyn Planner,
+        batch_tokens: usize,
+        rng: &mut Rng,
+        clock: &mut f64,
+    ) -> Result<(), String> {
+        let Some(plan) = self.plan else { return Ok(()) };
+        let pool = plan.state_at(step, &self.base);
+        if pool.alive_count() == 0 {
+            return Err(format!(
+                "chaos: no alive devices left at step {step} ({}) — the pool cannot serve",
+                pool.label()
+            ));
+        }
+        let prev = if step == 0 { self.base.clone() } else { plan.state_at(step - 1, &self.base) };
+        let newly_dead = (0..pool.len())
+            .filter(|&d| prev.devices[d].alive && !pool.devices[d].alive)
+            .count();
+        self.stats.recoveries += (0..pool.len())
+            .filter(|&d| !prev.devices[d].alive && pool.devices[d].alive)
+            .count();
+        if newly_dead > 0 {
+            self.stats.failures += newly_dead;
+            // The step in flight at the failure was planned against the
+            // previous pool; its work is lost and the batch requeues. A
+            // failure already active at step 0 has no in-flight work to
+            // abort — serving simply starts on the degraded pool.
+            if step > 0 {
+                let holder: Engine;
+                // The cached view still describes the previous step here.
+                let attempt_engine: &Engine = match &self.view {
+                    Some((p, e)) if *p == prev => e,
+                    _ if prev.is_degraded() => {
+                        holder = engine.for_pool(prev);
+                        &holder
+                    }
+                    _ => engine,
+                };
+                let attempt = price_step(attempt_engine, profile, planner, batch_tokens, rng);
+                *clock += attempt.latency_s;
+                self.stats.wasted_s += attempt.latency_s;
+                self.stats.requeues += 1;
+                self.stats.requeued_tokens += batch_tokens as u64;
+                self.pending_aborts += 1;
+                recycle_report_plans(attempt);
+            }
+        }
+        if pool.is_degraded() {
+            self.stats.fault_steps += 1;
+            let reusable = matches!(&self.view, Some((p, _)) if *p == pool);
+            if !reusable {
+                let view_engine = engine.for_pool(pool.clone());
+                self.view = Some((pool, view_engine));
+            }
+        } else {
+            self.view = None;
+        }
+        Ok(())
+    }
+
+    /// A stranded step is fatal: the planner cannot adapt to this pool.
+    /// A successful step resolves any pending aborts into the measured
+    /// recovery bound.
+    fn check_step(
+        &mut self,
+        step: usize,
+        planner_label: &str,
+        report: &ModelStepReport,
+    ) -> Result<(), String> {
+        if report.stranded {
+            return Err(format!(
+                "chaos: planner {planner_label} left expert work on a dead device at step \
+                 {step}; static placements cannot adapt — use a pool-aware planner (llep, lpt)"
+            ));
+        }
+        self.stats.max_recovery_steps = self.stats.max_recovery_steps.max(self.pending_aborts);
+        self.pending_aborts = 0;
+        Ok(())
+    }
+}
+
+/// Shared constructor boilerplate: every MoE layer of the engine's model
+/// routes with `scenario` (single-layer models still get one layer).
+pub fn uniform_profile(engine: &Engine, scenario: Scenario) -> DepthProfile {
+    DepthProfile::uniform(scenario, engine.model.num_moe_layers().max(1))
+}
+
+/// Hand a consumed step report's routing plans back to this thread's
+/// planning arena (see `planner::scratch`): the serving loops price one
+/// report per step and drop it, so recycling here is what keeps the
+/// decode regime's plan→price cycle allocation-free in steady state.
+pub(crate) fn recycle_report_plans(report: ModelStepReport) {
+    for layer in report.layers {
+        crate::planner::recycle_plan(layer.plan);
+    }
+}
+
+/// Shared step pricer: one full-model engine step over exactly
+/// `step_tokens` tokens drawn from `profile`.
+pub(crate) fn price_step(
+    engine: &Engine,
+    profile: &DepthProfile,
+    planner: &dyn Planner,
+    step_tokens: usize,
+    rng: &mut Rng,
+) -> ModelStepReport {
+    let lms =
+        profile.generate_loads_total(&engine.model, engine.system.devices, step_tokens, rng);
+    engine
+        .run_model(&lms, planner)
+        .expect("profile-generated loads are always consistent")
+}
+
+/// Per-token attention + dense FLOPs for one layer (rough transformer
+/// accounting: 4 D^2 QKVO projections + 2 D^2-equivalent attention work).
+fn attn_flops_per_token(d_model: usize) -> f64 {
+    6.0 * (d_model as f64) * (d_model as f64)
+}
+
+/// Seconds per full forward step spent outside MoE layers (attention and
+/// dense projections), spread across the engine's devices (data
+/// parallel). Shared by the Fig.-1c harness and the layered full-model
+/// simulator so both price the non-MoE part identically.
+pub fn attention_overhead_s(engine: &Engine, total_tokens: f64) -> f64 {
+    engine.model.num_layers as f64 * total_tokens * attn_flops_per_token(engine.model.d_model)
+        / (engine.gemm.peak_flops * engine.system.devices as f64)
+}
+
+/// One request as the replica core sees it: a prefill of
+/// `prompt_tokens`, then `decode_steps` single-token steps. Batch-style
+/// requests (the [`ServeSim`](super::ServeSim) workload) set
+/// `decode_steps = 0` and complete at their prefill step.
+#[derive(Clone, Debug)]
+pub struct ReplicaRequest {
+    pub id: usize,
+    pub arrival_s: f64,
+    pub prompt_tokens: usize,
+    pub decode_steps: usize,
+}
+
+/// An admitted request mid-decode.
+#[derive(Clone, Debug)]
+struct ActiveGen {
+    req: ReplicaRequest,
+    remaining: usize,
+}
+
+/// Events produced by one successful [`Replica::step`].
+#[derive(Clone, Debug, Default)]
+pub struct StepEvents {
+    /// Requests whose prefill completed this step: `(id, arrival_s)` in
+    /// admission (FIFO) order. Time-to-first-token = `now() - arrival_s`.
+    pub prefilled: Vec<(usize, f64)>,
+    /// Requests that fully completed this step: `(id, arrival_s)`,
+    /// prefill-only completions first (admission order), then decode
+    /// completions (active-set order). Request latency =
+    /// `now() - arrival_s`.
+    pub finished: Vec<(usize, f64)>,
+    /// Active decodes that contributed one token to this step — each is
+    /// one per-token-latency sample at `latency_s`.
+    pub decode_tokens: usize,
+    /// Total tokens priced (prefill + decode).
+    pub step_tokens: usize,
+    /// Latency of the successful attempt (chaos waste excluded; the
+    /// clock already carries both).
+    pub latency_s: f64,
+    /// Some device exceeded its memory capacity this step.
+    pub oom: bool,
+    /// Every MoE layer's lambda guard reverted to EP this step.
+    pub fallback: bool,
+}
+
+/// Outcome of one [`Replica::step`] call.
+#[derive(Clone, Debug)]
+pub enum ReplicaStepOutcome {
+    /// Nothing to do: no waiting prefills and no active decodes. The
+    /// driver should advance the clock to the next arrival and resubmit.
+    Idle,
+    /// One engine step was priced; the clock advanced by its latency
+    /// (plus any chaos-aborted attempt's waste).
+    Stepped(StepEvents),
+}
+
+/// One serving replica: an engine + pool view + fault plan + queues,
+/// stepped on a virtual clock. See the module docs for the event-loop
+/// contract; construct with [`Replica::new`], feed requests with
+/// [`submit`](Replica::submit), and drive with [`step`](Replica::step).
+pub struct Replica<'a> {
+    engine: &'a Engine,
+    planner: &'a dyn Planner,
+    profile: &'a DepthProfile,
+    /// Max prefill tokens admitted per step (the first waiting request
+    /// is always admitted, matching the FIFO budget rule).
+    max_batch_tokens: usize,
+    chaos: ChaosDriver<'a>,
+    clock: f64,
+    steps: usize,
+    waiting: VecDeque<ReplicaRequest>,
+    active: Vec<ActiveGen>,
+    ledger: TokenLedger,
+    peak_bytes: u64,
+    oom_steps: usize,
+    fallback_steps: usize,
+    plan_cache: CacheStats,
+    plan_times: Vec<f64>,
+    /// Virtual time spent pricing steps (including chaos waste) — the
+    /// numerator of fleet per-replica utilization.
+    busy_s: f64,
+}
+
+impl<'a> Replica<'a> {
+    /// Build a replica. Fails if the fault plan references devices the
+    /// engine's system does not have.
+    pub fn new(
+        engine: &'a Engine,
+        planner: &'a dyn Planner,
+        profile: &'a DepthProfile,
+        max_batch_tokens: usize,
+        faults: Option<&'a FaultPlan>,
+    ) -> Result<Replica<'a>, String> {
+        Ok(Replica {
+            chaos: ChaosDriver::new(engine, faults)?,
+            engine,
+            planner,
+            profile,
+            max_batch_tokens,
+            clock: 0.0,
+            steps: 0,
+            waiting: VecDeque::new(),
+            active: Vec::new(),
+            ledger: TokenLedger::default(),
+            peak_bytes: 0,
+            oom_steps: 0,
+            fallback_steps: 0,
+            plan_cache: CacheStats::default(),
+            plan_times: Vec::new(),
+            busy_s: 0.0,
+        })
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> f64 {
+        self.clock
+    }
+
+    /// Jump the clock forward to `t` (no-op if `t` is in the past).
+    pub fn advance_to(&mut self, t: f64) {
+        self.clock = self.clock.max(t);
+    }
+
+    /// True while any request is waiting or decoding.
+    pub fn has_work(&self) -> bool {
+        !self.waiting.is_empty() || !self.active.is_empty()
+    }
+
+    /// Enqueue a request (FIFO).
+    pub fn submit(&mut self, req: ReplicaRequest) {
+        self.waiting.push_back(req);
+    }
+
+    /// Waiting + active request count (the least-queue router signal).
+    pub fn queue_depth(&self) -> usize {
+        self.waiting.len() + self.active.len()
+    }
+
+    /// Queued prompt tokens plus the active decode set (a KV-cache
+    /// proxy) — the pressure router signal.
+    pub fn pressure(&self) -> usize {
+        self.waiting.iter().map(|r| r.prompt_tokens).sum::<usize>() + self.active.len()
+    }
+
+    /// Engine steps priced so far.
+    pub fn steps(&self) -> usize {
+        self.steps
+    }
+
+    pub fn ledger(&self) -> TokenLedger {
+        self.ledger
+    }
+
+    pub fn chaos_stats(&self) -> ChaosStats {
+        self.chaos.stats
+    }
+
+    pub fn peak_bytes(&self) -> u64 {
+        self.peak_bytes
+    }
+
+    pub fn oom_steps(&self) -> usize {
+        self.oom_steps
+    }
+
+    pub fn fallback_steps(&self) -> usize {
+        self.fallback_steps
+    }
+
+    pub fn plan_cache(&self) -> CacheStats {
+        self.plan_cache
+    }
+
+    /// Per-step planning wall time (sum across each step's layers).
+    pub fn plan_times(&self) -> &[f64] {
+        &self.plan_times
+    }
+
+    /// Summary over [`plan_times`](Self::plan_times).
+    pub fn plan_time_summary(&self) -> Summary {
+        Summary::of(&self.plan_times)
+    }
+
+    /// Virtual time spent pricing steps (includes chaos waste).
+    pub fn busy_s(&self) -> f64 {
+        self.busy_s
+    }
+
+    /// MoE layers priced per step.
+    pub fn layers(&self) -> usize {
+        self.profile.num_layers()
+    }
+
+    /// Take every queued and in-flight request off this replica (waiting
+    /// FIFO order first, then the active set in order) for re-routing
+    /// after a whole-replica failure. In-flight decodes come back as
+    /// fresh requests with their remaining decode steps — the receiving
+    /// replica re-prices the prefill, and both ledgers stay exact
+    /// because each replica prices exactly what it admits.
+    pub fn drain(&mut self) -> Vec<ReplicaRequest> {
+        let mut out: Vec<ReplicaRequest> = self.waiting.drain(..).collect();
+        out.extend(self.active.drain(..).map(|a| ReplicaRequest {
+            decode_steps: a.remaining,
+            ..a.req
+        }));
+        out
+    }
+
+    /// Run one event-loop iteration: admit waiting prefills under the
+    /// token budget (FIFO; the first waiting request always fits), add
+    /// one token per active decode, and price one full-model engine
+    /// step over the exact total. Errors are chaos-unrecoverable pools
+    /// (every device dead, or a planner that strands work on one).
+    pub fn step(&mut self, rng: &mut Rng) -> Result<ReplicaStepOutcome, String> {
+        // admit prefills under the budget
+        let mut prefill_tokens = 0usize;
+        let mut admitted: Vec<ReplicaRequest> = Vec::new();
+        while let Some(req) = self.waiting.front() {
+            if admitted.is_empty() || prefill_tokens + req.prompt_tokens <= self.max_batch_tokens
+            {
+                prefill_tokens += req.prompt_tokens;
+                admitted.push(self.waiting.pop_front().expect("front just matched"));
+            } else {
+                break;
+            }
+        }
+        let decode_tokens = self.active.len();
+        let step_tokens = prefill_tokens + decode_tokens;
+        if step_tokens == 0 {
+            return Ok(ReplicaStepOutcome::Idle);
+        }
+        let engine = self.engine;
+        let profile = self.profile;
+        let planner = self.planner;
+        let clock_before = self.clock;
+        // chaos: resolve this step's pool view; a fresh failure aborts +
+        // requeues the in-flight attempt first
+        self.chaos.begin_step(
+            self.steps,
+            engine,
+            profile,
+            planner,
+            step_tokens,
+            rng,
+            &mut self.clock,
+        )?;
+        // price a full-model step over the exact token total
+        let report =
+            price_step(self.chaos.engine(engine), profile, planner, step_tokens, rng);
+        self.chaos.check_step(self.steps, &report.planner, &report)?;
+        self.clock += report.latency_s;
+        self.steps += 1;
+        self.busy_s += self.clock - clock_before;
+        self.fallback_steps += (report.fallback_layers == report.num_layers()) as usize;
+        self.oom_steps += report.oom as usize;
+        self.peak_bytes = self.peak_bytes.max(report.max_peak_bytes());
+        self.ledger.add(step_tokens as u64, report.tokens);
+        self.plan_cache.absorb(&report.cache);
+        self.plan_times
+            .push(report.layers.iter().map(|l| l.report.phases.plan_s).sum::<f64>());
+
+        let mut events = StepEvents {
+            decode_tokens,
+            step_tokens,
+            latency_s: report.latency_s,
+            oom: report.oom,
+            fallback: report.fallback_layers == report.num_layers(),
+            ..StepEvents::default()
+        };
+        // prefill completions = first token; zero-decode requests finish
+        for req in admitted {
+            events.prefilled.push((req.id, req.arrival_s));
+            if req.decode_steps > 0 {
+                let remaining = req.decode_steps;
+                self.active.push(ActiveGen { req, remaining });
+            } else {
+                events.finished.push((req.id, req.arrival_s));
+            }
+        }
+        recycle_report_plans(report);
+        self.active.retain_mut(|a| {
+            a.remaining -= 1;
+            if a.remaining == 0 {
+                events.finished.push((a.req.id, a.req.arrival_s));
+                false
+            } else {
+                true
+            }
+        });
+        Ok(ReplicaStepOutcome::Stepped(events))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelConfig, ModelPreset, SystemConfig, SystemPreset};
+    use crate::planner::PlannerKind;
+
+    fn engine() -> Engine {
+        Engine::modeled(
+            ModelConfig::preset(ModelPreset::Fig1Layer),
+            SystemConfig::preset(SystemPreset::H200x8),
+        )
+    }
+
+    #[test]
+    fn replica_idles_without_work() {
+        let engine = engine();
+        let planner = PlannerKind::llep_default().boxed();
+        let profile = uniform_profile(&engine, Scenario::concentrated(0.9, 1));
+        let mut rep = Replica::new(&engine, &*planner, &profile, 8192, None).unwrap();
+        assert!(!rep.has_work());
+        assert!(matches!(rep.step(&mut Rng::new(1)).unwrap(), ReplicaStepOutcome::Idle));
+        assert_eq!(rep.steps(), 0);
+        assert_eq!(rep.now(), 0.0);
+    }
+
+    #[test]
+    fn replica_prefill_and_decode_lifecycle() {
+        let engine = engine();
+        let planner = PlannerKind::llep_default().boxed();
+        let profile = uniform_profile(&engine, Scenario::concentrated(0.9, 1));
+        let mut rep = Replica::new(&engine, &*planner, &profile, 8192, None).unwrap();
+        rep.submit(ReplicaRequest { id: 0, arrival_s: 0.0, prompt_tokens: 512, decode_steps: 2 });
+        rep.submit(ReplicaRequest { id: 1, arrival_s: 0.0, prompt_tokens: 256, decode_steps: 0 });
+        let mut rng = Rng::new(2);
+        // step 1: both prefill; request 1 (no decodes) finishes
+        let ReplicaStepOutcome::Stepped(ev) = rep.step(&mut rng).unwrap() else {
+            panic!("work was queued")
+        };
+        assert_eq!(ev.prefilled.len(), 2);
+        assert_eq!(ev.finished, vec![(1, 0.0)]);
+        assert_eq!(ev.step_tokens, 512 + 256);
+        assert_eq!(ev.decode_tokens, 0);
+        // steps 2-3: request 0 decodes out
+        let ReplicaStepOutcome::Stepped(ev) = rep.step(&mut rng).unwrap() else {
+            panic!("decode pending")
+        };
+        assert_eq!(ev.decode_tokens, 1);
+        assert!(ev.finished.is_empty());
+        let ReplicaStepOutcome::Stepped(ev) = rep.step(&mut rng).unwrap() else {
+            panic!("decode pending")
+        };
+        assert_eq!(ev.finished, vec![(0, 0.0)]);
+        assert!(!rep.has_work());
+        assert_eq!(rep.steps(), 3);
+        assert!(rep.ledger().is_exact());
+        assert_eq!(rep.ledger().admitted, 512 + 256 + 2);
+        assert!(rep.now() > 0.0);
+        assert!((rep.busy_s() - rep.now()).abs() < 1e-12, "no idle time in this run");
+    }
+
+    #[test]
+    fn replica_drain_returns_waiting_then_active_with_remaining_decodes() {
+        let engine = engine();
+        let planner = PlannerKind::llep_default().boxed();
+        let profile = uniform_profile(&engine, Scenario::concentrated(0.9, 1));
+        let mut rep = Replica::new(&engine, &*planner, &profile, 1024, None).unwrap();
+        rep.submit(ReplicaRequest { id: 0, arrival_s: 0.0, prompt_tokens: 900, decode_steps: 5 });
+        rep.submit(ReplicaRequest { id: 1, arrival_s: 0.0, prompt_tokens: 900, decode_steps: 3 });
+        // one step: request 0 prefills (budget excludes request 1), one decode left pending
+        rep.step(&mut Rng::new(3)).unwrap();
+        assert_eq!(rep.queue_depth(), 2);
+        assert!(rep.pressure() >= 900 + 1);
+        let drained = rep.drain();
+        assert!(!rep.has_work());
+        assert_eq!(drained.len(), 2);
+        // waiting first (untouched), then the in-flight decode with its
+        // remaining steps (one of five consumed by the step above)
+        assert_eq!(drained[0].id, 1);
+        assert_eq!(drained[0].decode_steps, 3);
+        assert_eq!(drained[1].id, 0);
+        assert_eq!(drained[1].decode_steps, 4);
+    }
+}

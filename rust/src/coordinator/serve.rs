@@ -1,19 +1,20 @@
-//! Serving-style simulation: a request queue feeding batched MoE steps.
+//! Serving-style simulation: request queues feeding batched MoE steps.
 //!
-//! Requests carry token counts and arrive on a (virtual) timeline; the
-//! coordinator batches whatever is queued (up to a token budget), prices
-//! one **full-model** engine step per batch (all MoE layers of the model,
-//! each with its own per-layer routing — see
-//! [`crate::exec::Engine::run_model`]), and advances the virtual clock by
-//! the step latency. Per-request latency = completion − arrival. This is
-//! the vLLM-router-shaped workload the paper's "higher-throughput
-//! inference" claim is about.
+//! Requests carry token counts and arrive on a (virtual) timeline; each
+//! simulator feeds them into a [`Replica`](super::Replica) — the shared
+//! per-replica event loop in `coordinator/replica.rs` — which batches
+//! whatever is queued (up to a token budget), prices one **full-model**
+//! engine step per batch (all MoE layers of the model, each with its own
+//! per-layer routing — see [`crate::exec::Engine::run_model`]), and
+//! advances the virtual clock by the step latency. Per-request latency =
+//! completion − arrival. This is the vLLM-router-shaped workload the
+//! paper's "higher-throughput inference" claim is about.
 //!
-//! Both simulators run any trait [`Planner`] — in particular the
-//! [`CachedPlanner`](crate::planner::CachedPlanner) decorator, whose
-//! cross-step plan reuse takes `T_plan` off the decode critical path; the
-//! per-run hit/miss/forced counters and per-step planning-time summary
-//! are surfaced in the reports.
+//! Both simulators run any trait [`Planner`] via `&dyn Planner` — in
+//! particular the [`CachedPlanner`](crate::planner::CachedPlanner)
+//! decorator, whose cross-step plan reuse takes `T_plan` off the decode
+//! critical path; the per-run hit/miss/forced counters and per-step
+//! planning-time summary are surfaced in the reports.
 //!
 //! Token accounting is exact: each batch's total token count is carried
 //! into the priced load matrices via
@@ -22,223 +23,14 @@
 //! [`TokenLedger`] whose admitted and priced sides must agree (asserted
 //! by tests).
 
-use crate::chaos::{FaultPlan, PoolState};
-use crate::exec::{Engine, ModelStepReport};
+use super::replica::{uniform_profile, Replica, ReplicaRequest, ReplicaStepOutcome};
+use super::{ChaosStats, TokenLedger};
+use crate::chaos::FaultPlan;
+use crate::exec::Engine;
 use crate::planner::{CacheStats, Planner, PlannerKind};
 use crate::routing::{DepthProfile, Scenario};
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
-use std::collections::VecDeque;
-
-/// Admitted-vs-priced token accounting shared by both serving reports:
-/// `admitted` tokens entered from the request stream, `priced` tokens
-/// were charged by the engine. The contract is equality.
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
-pub struct TokenLedger {
-    pub admitted: u64,
-    pub priced: u64,
-}
-
-impl TokenLedger {
-    pub fn add(&mut self, admitted: u64, priced: u64) {
-        self.admitted += admitted;
-        self.priced += priced;
-    }
-
-    /// True when every admitted token was priced exactly once.
-    pub fn is_exact(&self) -> bool {
-        self.admitted == self.priced
-    }
-}
-
-/// Chaos accounting for one serving run (all zero without a fault plan).
-#[derive(Clone, Copy, Debug, Default, PartialEq)]
-pub struct ChaosStats {
-    /// Engine steps priced under a degraded pool view.
-    pub fault_steps: usize,
-    /// Devices observed transitioning alive -> dead during the run.
-    pub failures: usize,
-    /// Devices observed transitioning dead -> alive (elastic scale-up).
-    pub recoveries: usize,
-    /// Aborted in-flight steps whose batch was requeued after a failure.
-    pub requeues: usize,
-    /// Tokens those aborts requeued. The [`TokenLedger`] still counts
-    /// every admitted token exactly once — only the successful retry
-    /// prices them.
-    pub requeued_tokens: u64,
-    /// Virtual time burned by aborted attempts.
-    pub wasted_s: f64,
-    /// Max aborted attempts observed before a successful (elastically
-    /// replanned) step completed — measured per failure event, so a
-    /// regression that makes recovery loop shows up here. The
-    /// bounded-recovery contract (`<= 1` under the current single-abort
-    /// model) is asserted by `rust/tests/chaos.rs`.
-    pub max_recovery_steps: usize,
-}
-
-/// Per-step chaos bookkeeping shared by both simulators: resolves the
-/// fault plan into pool views, prices + discards the in-flight attempt a
-/// fresh failure aborts, and hands the step an engine view of the
-/// degraded pool.
-struct ChaosDriver<'a> {
-    plan: Option<&'a FaultPlan>,
-    base: PoolState,
-    stats: ChaosStats,
-    /// Aborted attempts since the last successful step (resolved into
-    /// `stats.max_recovery_steps` when a step completes).
-    pending_aborts: usize,
-    /// Cached engine view for the current degraded pool. Permanent
-    /// degradations (a straggler, a failure, preset speeds under a fault
-    /// plan) keep the same pool for many consecutive steps — rebuilding
-    /// the engine (clone + topology re-derivation) per step would be
-    /// pure waste.
-    view: Option<(PoolState, Engine)>,
-}
-
-impl<'a> ChaosDriver<'a> {
-    fn new(engine: &Engine, plan: Option<&'a FaultPlan>) -> Result<ChaosDriver<'a>, String> {
-        if let Some(p) = plan {
-            p.validate(engine.system.devices)?;
-        }
-        Ok(ChaosDriver {
-            plan,
-            base: engine.pool.clone(),
-            stats: ChaosStats::default(),
-            pending_aborts: 0,
-            view: None,
-        })
-    }
-
-    /// Engine to price the current step with (set by
-    /// [`begin_step`](Self::begin_step)): the cached degraded view, or
-    /// `base` while the pool is healthy.
-    fn engine<'b>(&'b self, base: &'b Engine) -> &'b Engine {
-        self.view.as_ref().map(|(_, e)| e).unwrap_or(base)
-    }
-
-    /// Advance to engine step `step` (called once per step, before the
-    /// step is priced). When a device died since the previous step, the
-    /// attempt that was in flight is priced against the *old* pool,
-    /// charged to the clock as waste, and the batch requeues — the
-    /// caller then prices the elastically replanned step against
-    /// [`engine`](Self::engine).
-    #[allow(clippy::too_many_arguments)]
-    fn begin_step(
-        &mut self,
-        step: usize,
-        engine: &Engine,
-        profile: &DepthProfile,
-        planner: &dyn Planner,
-        batch_tokens: usize,
-        rng: &mut Rng,
-        clock: &mut f64,
-    ) -> Result<(), String> {
-        let Some(plan) = self.plan else { return Ok(()) };
-        let pool = plan.state_at(step, &self.base);
-        if pool.alive_count() == 0 {
-            return Err(format!(
-                "chaos: no alive devices left at step {step} ({}) — the pool cannot serve",
-                pool.label()
-            ));
-        }
-        let prev = if step == 0 { self.base.clone() } else { plan.state_at(step - 1, &self.base) };
-        let newly_dead = (0..pool.len())
-            .filter(|&d| prev.devices[d].alive && !pool.devices[d].alive)
-            .count();
-        self.stats.recoveries += (0..pool.len())
-            .filter(|&d| !prev.devices[d].alive && pool.devices[d].alive)
-            .count();
-        if newly_dead > 0 {
-            self.stats.failures += newly_dead;
-            // The step in flight at the failure was planned against the
-            // previous pool; its work is lost and the batch requeues. A
-            // failure already active at step 0 has no in-flight work to
-            // abort — serving simply starts on the degraded pool.
-            if step > 0 {
-                let holder: Engine;
-                // The cached view still describes the previous step here.
-                let attempt_engine: &Engine = match &self.view {
-                    Some((p, e)) if *p == prev => e,
-                    _ if prev.is_degraded() => {
-                        holder = engine.for_pool(prev);
-                        &holder
-                    }
-                    _ => engine,
-                };
-                let attempt = price_step(attempt_engine, profile, planner, batch_tokens, rng);
-                *clock += attempt.latency_s;
-                self.stats.wasted_s += attempt.latency_s;
-                self.stats.requeues += 1;
-                self.stats.requeued_tokens += batch_tokens as u64;
-                self.pending_aborts += 1;
-                recycle_report_plans(attempt);
-            }
-        }
-        if pool.is_degraded() {
-            self.stats.fault_steps += 1;
-            let reusable = matches!(&self.view, Some((p, _)) if *p == pool);
-            if !reusable {
-                let view_engine = engine.for_pool(pool.clone());
-                self.view = Some((pool, view_engine));
-            }
-        } else {
-            self.view = None;
-        }
-        Ok(())
-    }
-
-    /// A stranded step is fatal: the planner cannot adapt to this pool.
-    /// A successful step resolves any pending aborts into the measured
-    /// recovery bound.
-    fn check_step(
-        &mut self,
-        step: usize,
-        planner_label: &str,
-        report: &ModelStepReport,
-    ) -> Result<(), String> {
-        if report.stranded {
-            return Err(format!(
-                "chaos: planner {planner_label} left expert work on a dead device at step \
-                 {step}; static placements cannot adapt — use a pool-aware planner (llep, lpt)"
-            ));
-        }
-        self.stats.max_recovery_steps = self.stats.max_recovery_steps.max(self.pending_aborts);
-        self.pending_aborts = 0;
-        Ok(())
-    }
-}
-
-/// Shared constructor boilerplate: every MoE layer of the engine's model
-/// routes with `scenario` (single-layer models still get one layer).
-fn uniform_profile(engine: &Engine, scenario: Scenario) -> DepthProfile {
-    DepthProfile::uniform(scenario, engine.model.num_moe_layers().max(1))
-}
-
-/// Hand a consumed step report's routing plans back to this thread's
-/// planning arena (see `planner::scratch`): the serving loops price one
-/// report per step and drop it, so recycling here is what keeps the
-/// decode regime's plan→price cycle allocation-free in steady state.
-fn recycle_report_plans(report: ModelStepReport) {
-    for layer in report.layers {
-        crate::planner::recycle_plan(layer.plan);
-    }
-}
-
-/// Shared step pricer for both simulators: one full-model engine step
-/// over exactly `step_tokens` tokens drawn from `profile`.
-fn price_step(
-    engine: &Engine,
-    profile: &DepthProfile,
-    planner: &dyn Planner,
-    step_tokens: usize,
-    rng: &mut Rng,
-) -> ModelStepReport {
-    let lms =
-        profile.generate_loads_total(&engine.model, engine.system.devices, step_tokens, rng);
-    engine
-        .run_model(&lms, planner)
-        .expect("profile-generated loads are always consistent")
-}
 
 /// One inference request.
 #[derive(Clone, Debug)]
@@ -282,7 +74,9 @@ impl ServeReport {
     }
 }
 
-/// Serving simulator over a fixed request list.
+/// Serving simulator over a fixed request list: each request is one
+/// batchable unit of `tokens`, completing at the step that prices it (a
+/// [`ReplicaRequest`] with zero decode steps).
 pub struct ServeSim {
     pub engine: Engine,
     pub planner: Box<dyn Planner>,
@@ -363,92 +157,56 @@ impl ServeSim {
     /// device dead, or a planner that cannot adapt to a failure) as
     /// errors.
     pub fn try_run(&self, requests: &[Request], rng: &mut Rng) -> Result<ServeReport, String> {
-        let devices = self.engine.system.devices;
-        let budget = self.max_tokens_per_device * devices;
-        let mut clock = 0.0f64;
+        let budget = self.max_tokens_per_device * self.engine.system.devices;
+        let mut replica = Replica::new(
+            &self.engine,
+            &*self.planner,
+            &self.profile,
+            budget,
+            self.faults.as_ref(),
+        )?;
         let mut next = 0usize;
         let mut latencies = Vec::with_capacity(requests.len());
-        let mut batches = 0usize;
-        let mut tokens = TokenLedger::default();
-        let mut oom_batches = 0usize;
-        let mut peak_bytes = 0u64;
-        let mut plan_cache = CacheStats::default();
-        let mut plan_times: Vec<f64> = Vec::new();
-        let mut queue: VecDeque<&Request> = VecDeque::new();
-        let mut chaos = ChaosDriver::new(&self.engine, self.faults.as_ref())?;
 
-        while next < requests.len() || !queue.is_empty() {
+        while next < requests.len() || replica.has_work() {
             // admit arrivals up to the clock; if idle, jump to next arrival
-            if queue.is_empty() && next < requests.len() && requests[next].arrival_s > clock {
-                clock = requests[next].arrival_s;
+            if !replica.has_work()
+                && next < requests.len()
+                && requests[next].arrival_s > replica.now()
+            {
+                replica.advance_to(requests[next].arrival_s);
             }
-            while next < requests.len() && requests[next].arrival_s <= clock {
-                queue.push_back(&requests[next]);
+            while next < requests.len() && requests[next].arrival_s <= replica.now() {
+                let req = &requests[next];
+                replica.submit(ReplicaRequest {
+                    id: req.id,
+                    arrival_s: req.arrival_s,
+                    prompt_tokens: req.tokens,
+                    decode_steps: 0,
+                });
                 next += 1;
             }
-            // form a batch under the token budget (FIFO)
-            let mut batch: Vec<&Request> = Vec::new();
-            let mut batch_tokens = 0usize;
-            while let Some(&req) = queue.front() {
-                if batch.is_empty() || batch_tokens + req.tokens <= budget {
-                    batch_tokens += req.tokens;
-                    batch.push(req);
-                    queue.pop_front();
-                } else {
-                    break;
+            if let ReplicaStepOutcome::Stepped(events) = replica.step(rng)? {
+                let now = replica.now();
+                for &(_, arrival_s) in &events.finished {
+                    latencies.push(now - arrival_s);
                 }
-            }
-            if batch.is_empty() {
-                continue;
-            }
-            // chaos: resolve this step's pool view; a fresh failure
-            // aborts + requeues the in-flight attempt first
-            chaos.begin_step(
-                batches,
-                &self.engine,
-                &self.profile,
-                &*self.planner,
-                batch_tokens,
-                rng,
-                &mut clock,
-            )?;
-            // price a full-model step over the exact batch total
-            let report = price_step(
-                chaos.engine(&self.engine),
-                &self.profile,
-                &*self.planner,
-                batch_tokens,
-                rng,
-            );
-            chaos.check_step(batches, &report.planner, &report)?;
-            clock += report.latency_s;
-            batches += 1;
-            tokens.add(batch_tokens as u64, report.tokens);
-            plan_cache.absorb(&report.cache);
-            plan_times.push(report.layers.iter().map(|l| l.report.phases.plan_s).sum::<f64>());
-            peak_bytes = peak_bytes.max(report.max_peak_bytes());
-            if report.oom {
-                oom_batches += 1;
-            }
-            recycle_report_plans(report);
-            for req in batch {
-                latencies.push(clock - req.arrival_s);
             }
         }
 
         Ok(ServeReport {
             planner: self.planner.label(),
             completed: latencies.len(),
-            makespan_s: clock,
+            makespan_s: replica.now(),
             request_latency: Summary::of(&latencies),
-            batches,
-            tokens,
-            oom_batches,
-            peak_bytes,
+            batches: replica.steps(),
+            tokens: replica.ledger(),
+            oom_batches: replica.oom_steps(),
+            peak_bytes: replica.peak_bytes(),
             layers: self.profile.num_layers(),
-            plan_cache,
-            plan_time: Summary::of(&plan_times),
-            chaos: chaos.stats,
+            plan_cache: replica.plan_cache(),
+            plan_time: replica.plan_time_summary(),
+            chaos: replica.chaos_stats(),
         })
     }
 }
@@ -493,6 +251,72 @@ pub struct ContinuousReport {
     pub plan_time: Summary,
     /// Fault-injection accounting (all zero without a fault plan).
     pub chaos: ChaosStats,
+}
+
+/// Run a continuous-batching workload on one replica built from parts —
+/// the shared driver behind [`ContinuousBatchSim::try_run`] and the
+/// autotuner's serve-mode trial evaluation (which prices candidate
+/// planner specs on the replica core without constructing a sim).
+pub fn run_continuous(
+    engine: &Engine,
+    planner: &dyn Planner,
+    profile: &DepthProfile,
+    max_prefill_tokens: usize,
+    faults: Option<&FaultPlan>,
+    requests: &[GenRequest],
+    rng: &mut Rng,
+) -> Result<ContinuousReport, String> {
+    let mut replica = Replica::new(engine, planner, profile, max_prefill_tokens, faults)?;
+    let mut next = 0usize;
+    let mut ttft = Vec::new();
+    let mut tpot = Vec::new();
+    let mut completed = 0usize;
+
+    while completed < requests.len() {
+        if !replica.has_work() {
+            // idle: jump to next arrival
+            replica.advance_to(requests[next].arrival_s);
+        }
+        while next < requests.len() && requests[next].arrival_s <= replica.now() {
+            let req = &requests[next];
+            replica.submit(ReplicaRequest {
+                id: req.id,
+                arrival_s: req.arrival_s,
+                prompt_tokens: req.prompt_tokens,
+                decode_steps: req.decode_steps,
+            });
+            next += 1;
+        }
+        if let ReplicaStepOutcome::Stepped(events) = replica.step(rng)? {
+            let now = replica.now();
+            // prefill completions = first token
+            for &(_, arrival_s) in &events.prefilled {
+                ttft.push(now - arrival_s);
+            }
+            // one decode token for every active request: one tpot sample
+            // per (request, step) pair, so multi-request steps weigh more
+            for _ in 0..events.decode_tokens {
+                tpot.push(events.latency_s);
+            }
+            completed += events.finished.len();
+        }
+    }
+
+    Ok(ContinuousReport {
+        planner: planner.label(),
+        completed,
+        makespan_s: replica.now(),
+        ttft: Summary::of(&ttft),
+        tpot: Summary::of(&tpot),
+        steps: replica.steps(),
+        fallback_steps: replica.fallback_steps(),
+        oom_steps: replica.oom_steps(),
+        peak_bytes: replica.peak_bytes(),
+        tokens: replica.ledger(),
+        plan_cache: replica.plan_cache(),
+        plan_time: replica.plan_time_summary(),
+        chaos: replica.chaos_stats(),
+    })
 }
 
 /// vLLM-style continuous batching: every engine step batches the newly
@@ -588,121 +412,15 @@ impl ContinuousBatchSim {
         requests: &[GenRequest],
         rng: &mut Rng,
     ) -> Result<ContinuousReport, String> {
-        let mut clock = 0.0f64;
-        let mut next = 0usize;
-        let mut waiting: VecDeque<&GenRequest> = VecDeque::new();
-        // (remaining decode steps, arrival)
-        let mut active: Vec<(usize, f64)> = Vec::new();
-        let mut ttft = Vec::new();
-        let mut tpot = Vec::new();
-        let mut completed = 0usize;
-        let mut steps = 0usize;
-        let mut fallback_steps = 0usize;
-        let mut oom_steps = 0usize;
-        let mut peak_bytes = 0u64;
-        let mut tokens = TokenLedger::default();
-        let mut plan_cache = CacheStats::default();
-        let mut plan_times: Vec<f64> = Vec::new();
-        let mut chaos = ChaosDriver::new(&self.engine, self.faults.as_ref())?;
-
-        while completed < requests.len() {
-            if waiting.is_empty() && active.is_empty() {
-                // idle: jump to next arrival
-                clock = clock.max(requests[next].arrival_s);
-            }
-            while next < requests.len() && requests[next].arrival_s <= clock {
-                waiting.push_back(&requests[next]);
-                next += 1;
-            }
-            // admit prefills under the budget
-            let mut prefill_tokens = 0usize;
-            let mut admitted: Vec<&GenRequest> = Vec::new();
-            while let Some(&req) = waiting.front() {
-                if admitted.is_empty()
-                    || prefill_tokens + req.prompt_tokens <= self.max_prefill_tokens
-                {
-                    prefill_tokens += req.prompt_tokens;
-                    admitted.push(req);
-                    waiting.pop_front();
-                } else {
-                    break;
-                }
-            }
-            let decode_tokens = active.len();
-            let step_tokens = prefill_tokens + decode_tokens;
-            if step_tokens == 0 {
-                continue;
-            }
-            // chaos: resolve this step's pool view; a fresh failure
-            // aborts + requeues the in-flight attempt first
-            chaos.begin_step(
-                steps,
-                &self.engine,
-                &self.profile,
-                &*self.planner,
-                step_tokens,
-                rng,
-                &mut clock,
-            )?;
-            // full-model step over the exact token total
-            let report = price_step(
-                chaos.engine(&self.engine),
-                &self.profile,
-                &*self.planner,
-                step_tokens,
-                rng,
-            );
-            chaos.check_step(steps, &report.planner, &report)?;
-            clock += report.latency_s;
-            steps += 1;
-            fallback_steps += (report.fallback_layers == report.num_layers()) as usize;
-            oom_steps += report.oom as usize;
-            peak_bytes = peak_bytes.max(report.max_peak_bytes());
-            tokens.add(step_tokens as u64, report.tokens);
-            plan_cache.absorb(&report.cache);
-            plan_times.push(report.layers.iter().map(|l| l.report.phases.plan_s).sum::<f64>());
-
-            // prefill completions = first token
-            for req in admitted {
-                ttft.push(clock - req.arrival_s);
-                if req.decode_steps > 0 {
-                    active.push((req.decode_steps, req.arrival_s));
-                } else {
-                    completed += 1;
-                }
-            }
-            // one decode token for every active request: one tpot sample
-            // per (request, step) pair, so multi-request steps weigh more
-            for _ in 0..decode_tokens {
-                tpot.push(report.latency_s);
-            }
-            recycle_report_plans(report);
-            active.retain_mut(|(left, _)| {
-                *left -= 1;
-                if *left == 0 {
-                    completed += 1;
-                    false
-                } else {
-                    true
-                }
-            });
-        }
-
-        Ok(ContinuousReport {
-            planner: self.planner.label(),
-            completed,
-            makespan_s: clock,
-            ttft: Summary::of(&ttft),
-            tpot: Summary::of(&tpot),
-            steps,
-            fallback_steps,
-            oom_steps,
-            peak_bytes,
-            tokens,
-            plan_cache,
-            plan_time: Summary::of(&plan_times),
-            chaos: chaos.stats,
-        })
+        run_continuous(
+            &self.engine,
+            &*self.planner,
+            &self.profile,
+            self.max_prefill_tokens,
+            self.faults.as_ref(),
+            requests,
+            rng,
+        )
     }
 }
 

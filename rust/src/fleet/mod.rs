@@ -1,0 +1,34 @@
+//! Multi-replica cluster simulator: N serving replicas behind a global
+//! router, on one virtual timeline.
+//!
+//! One replica (the [`Replica`](crate::coordinator::Replica) core) can
+//! tell you how a planner behaves under load; a *fleet* is where the
+//! deployment-level questions live — does least-queue routing rescue a
+//! half-speed replica, what does a whole-replica failure cost in p99
+//! TTFT, how much goodput survives an SLO deadline. The module splits
+//! three ways:
+//!
+//! * [`workload`] — deterministic arrival generators (Poisson, diurnal,
+//!   bursty) with prompt/decode length mixtures, parsed from a spec
+//!   string.
+//! * [`router`] — pluggable admission policies over per-replica load
+//!   snapshots: round-robin, least-queue, token-pressure-aware.
+//! * [`sim`] — the discrete-event loop tying them together, plus
+//!   whole-replica fail/recover chaos ([`FleetFaultPlan`]) layered on
+//!   top of each replica's own device-level fault plan.
+//!
+//! Everything is bit-reproducible from `(workload spec, replica
+//! configs, fault plan, seed)`, and the summed
+//! [`TokenLedger`](crate::coordinator::TokenLedger) (admitted ==
+//! priced) survives whole-replica failures. Driven by the `llep fleet`
+//! CLI subcommand and `rust/tests/fleet.rs`.
+
+mod router;
+mod sim;
+mod workload;
+
+pub use router::{ReplicaLoad, Router, RouterPolicy};
+pub use sim::{
+    FleetEvent, FleetFaultPlan, FleetReplicaReport, FleetReport, FleetSim, ReplicaConfig,
+};
+pub use workload::{Workload, WorkloadKind};

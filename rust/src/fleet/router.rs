@@ -1,0 +1,157 @@
+//! Global request router: picks which replica admits each arrival.
+//!
+//! The router sees only a cheap per-replica load snapshot
+//! ([`ReplicaLoad`]) — alive flag, queue depth, and token pressure — the
+//! same signals a real frontend gets from replica heartbeats. Policies:
+//!
+//! * `round-robin` (`rr`) — rotate over alive replicas, load-blind.
+//!   The baseline: cheap, fair in expectation, and pathological when one
+//!   replica is slow (its queue grows without bound while the router
+//!   keeps feeding it).
+//! * `least-queue` (`lq`) — send to the alive replica with the fewest
+//!   outstanding requests (waiting + in flight). Joins the shortest
+//!   queue; reacts to slow replicas because their queues drain slowly.
+//! * `pressure` — like least-queue but weighs queued *prompt tokens*
+//!   plus in-flight generations, so one 8k-token prompt counts more than
+//!   eight 64-token chats. The KV/compute-pressure-aware variant.
+//!
+//! Ties break to the lowest replica index so routing is a pure function
+//! of the load snapshot (bit-reproducible fleets).
+
+/// Snapshot of one replica's load, as visible to the router.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ReplicaLoad {
+    /// Dead replicas are never picked.
+    pub alive: bool,
+    /// Outstanding requests: waiting + actively decoding.
+    pub queue_depth: usize,
+    /// Queued prompt tokens + in-flight generations (compute pressure).
+    pub pressure: usize,
+}
+
+/// Routing policy (see module docs for semantics).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RouterPolicy {
+    RoundRobin,
+    LeastQueue,
+    Pressure,
+}
+
+impl RouterPolicy {
+    /// Parse a policy name (`rr`/`round-robin`, `lq`/`least-queue`,
+    /// `pressure`).
+    pub fn parse(spec: &str) -> Result<RouterPolicy, String> {
+        match spec.trim() {
+            "rr" | "round-robin" => Ok(RouterPolicy::RoundRobin),
+            "lq" | "least-queue" => Ok(RouterPolicy::LeastQueue),
+            "pressure" => Ok(RouterPolicy::Pressure),
+            other => Err(format!(
+                "unknown router policy {other:?} (expected round-robin, least-queue, pressure)"
+            )),
+        }
+    }
+
+    /// Canonical name; [`RouterPolicy::parse`] round-trips it.
+    pub fn name(&self) -> &'static str {
+        match self {
+            RouterPolicy::RoundRobin => "round-robin",
+            RouterPolicy::LeastQueue => "least-queue",
+            RouterPolicy::Pressure => "pressure",
+        }
+    }
+}
+
+/// Stateful router: owns the round-robin cursor.
+#[derive(Clone, Debug)]
+pub struct Router {
+    pub policy: RouterPolicy,
+    cursor: usize,
+}
+
+impl Router {
+    pub fn new(policy: RouterPolicy) -> Router {
+        Router { policy, cursor: 0 }
+    }
+
+    /// Pick the replica index for the next arrival, or `None` when no
+    /// replica is alive. Deterministic: ties break to the lowest index.
+    pub fn pick(&mut self, loads: &[ReplicaLoad]) -> Option<usize> {
+        let n = loads.len();
+        if !loads.iter().any(|l| l.alive) {
+            return None;
+        }
+        match self.policy {
+            RouterPolicy::RoundRobin => {
+                // first alive replica scanning from the cursor
+                let i = (0..n)
+                    .map(|k| (self.cursor + k) % n)
+                    .find(|&i| loads[i].alive)
+                    .expect("an alive replica exists");
+                self.cursor = (i + 1) % n;
+                Some(i)
+            }
+            RouterPolicy::LeastQueue => loads
+                .iter()
+                .enumerate()
+                .filter(|(_, l)| l.alive)
+                .min_by_key(|(i, l)| (l.queue_depth, *i))
+                .map(|(i, _)| i),
+            RouterPolicy::Pressure => loads
+                .iter()
+                .enumerate()
+                .filter(|(_, l)| l.alive)
+                .min_by_key(|(i, l)| (l.pressure, *i))
+                .map(|(i, _)| i),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn load(alive: bool, queue_depth: usize, pressure: usize) -> ReplicaLoad {
+        ReplicaLoad { alive, queue_depth, pressure }
+    }
+
+    #[test]
+    fn policy_names_round_trip() {
+        for p in [RouterPolicy::RoundRobin, RouterPolicy::LeastQueue, RouterPolicy::Pressure] {
+            assert_eq!(RouterPolicy::parse(p.name()).unwrap(), p);
+        }
+        assert_eq!(RouterPolicy::parse("rr").unwrap(), RouterPolicy::RoundRobin);
+        assert_eq!(RouterPolicy::parse("lq").unwrap(), RouterPolicy::LeastQueue);
+        assert!(RouterPolicy::parse("random").is_err());
+    }
+
+    #[test]
+    fn round_robin_rotates_and_skips_dead() {
+        let mut r = Router::new(RouterPolicy::RoundRobin);
+        let loads = [load(true, 0, 0), load(false, 0, 0), load(true, 9, 9)];
+        assert_eq!(r.pick(&loads), Some(0));
+        assert_eq!(r.pick(&loads), Some(2), "skips the dead replica");
+        assert_eq!(r.pick(&loads), Some(0), "wraps around");
+    }
+
+    #[test]
+    fn least_queue_prefers_shallow_queue_lowest_index_on_tie() {
+        let mut r = Router::new(RouterPolicy::LeastQueue);
+        assert_eq!(r.pick(&[load(true, 3, 0), load(true, 1, 0), load(true, 1, 0)]), Some(1));
+        assert_eq!(r.pick(&[load(false, 0, 0), load(true, 5, 0)]), Some(1));
+    }
+
+    #[test]
+    fn pressure_weighs_tokens_not_request_count() {
+        let mut r = Router::new(RouterPolicy::Pressure);
+        // replica 0 has fewer requests but far more queued tokens
+        let loads = [load(true, 1, 8192), load(true, 8, 512)];
+        assert_eq!(r.pick(&loads), Some(1));
+    }
+
+    #[test]
+    fn all_dead_routes_nowhere() {
+        let mut r = Router::new(RouterPolicy::RoundRobin);
+        assert_eq!(r.pick(&[load(false, 0, 0), load(false, 0, 0)]), None);
+        assert_eq!(Router::new(RouterPolicy::LeastQueue).pick(&[]), None);
+    }
+}

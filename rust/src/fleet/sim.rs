@@ -1,0 +1,699 @@
+//! The fleet event loop: N replicas, one router, one virtual clock.
+//!
+//! [`FleetSim`] owns a template [`Engine`] plus per-replica configs
+//! (planner spec, speed multiplier, device-level fault plan) and runs a
+//! deterministic discrete-event loop over three event kinds:
+//!
+//! 1. **Arrival** — the next workload request reaches the frontend; the
+//!    [`Router`] picks an alive replica from the load snapshot.
+//! 2. **Fleet fault** — a [`FleetFaultPlan`] event fires: a whole
+//!    replica dies (its queued and in-flight requests drain back through
+//!    the router to the survivors, at most one requeue per request per
+//!    failure) or rejoins.
+//! 3. **Replica step** — the alive replica with the earliest local clock
+//!    prices one batched engine step via the shared
+//!    [`Replica`](crate::coordinator::Replica) core.
+//!
+//! Ties break arrival → fault → lowest replica index, so the whole run
+//! is a pure function of `(workload spec, replica configs, fault plan,
+//! seed)` — bit-reproducible, property-tested in `rust/tests/fleet.rs`.
+//! Every replica keeps its own exact [`TokenLedger`]; the fleet report
+//! carries their sum, which must stay exact even across whole-replica
+//! failures (a drained request's prefill is re-priced by the replica
+//! that re-admits it, and each replica prices exactly what it admits).
+
+use super::router::{ReplicaLoad, Router, RouterPolicy};
+use super::workload::{Params, Workload};
+use crate::chaos::{FaultPlan, PoolState};
+use crate::coordinator::{
+    uniform_profile, ChaosStats, Replica, ReplicaRequest, ReplicaStepOutcome, TokenLedger,
+};
+use crate::exec::{Engine, PlanCostModel};
+use crate::planner::{CacheStats, Planner, Registry};
+use crate::routing::Scenario;
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+
+/// One whole-replica chaos event on the fleet timeline (virtual
+/// seconds, unlike device-level [`FaultPlan`]s, which are per-step).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FleetEvent {
+    /// The replica dies: it stops stepping and its queue re-routes.
+    Fail { replica: usize, at_s: f64 },
+    /// The replica rejoins the routable set (empty-queued).
+    Recover { replica: usize, at_s: f64 },
+}
+
+impl FleetEvent {
+    pub fn at_s(&self) -> f64 {
+        match self {
+            FleetEvent::Fail { at_s, .. } | FleetEvent::Recover { at_s, .. } => *at_s,
+        }
+    }
+
+    pub fn replica(&self) -> usize {
+        match self {
+            FleetEvent::Fail { replica, .. } | FleetEvent::Recover { replica, .. } => *replica,
+        }
+    }
+}
+
+/// Whole-replica fault schedule. Grammar: `;`-separated events,
+/// `fail:r=1,at=0.02` / `recover:r=1,at=0.05` (`at` in virtual
+/// seconds). [`spec`](Self::spec) round-trips through
+/// [`parse`](Self::parse).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FleetFaultPlan {
+    pub events: Vec<FleetEvent>,
+}
+
+impl FleetFaultPlan {
+    pub fn parse(spec: &str) -> Result<FleetFaultPlan, String> {
+        let mut events = Vec::new();
+        for part in spec.split(';').map(str::trim).filter(|p| !p.is_empty()) {
+            let (kind, tail) = part.split_once(':').unwrap_or((part, ""));
+            let mut p = Params::parse(tail)?;
+            let replica = p
+                .take_usize("r")?
+                .ok_or_else(|| format!("{kind}: missing r=<replica index>"))?;
+            let at_s =
+                p.take_f64("at")?.ok_or_else(|| format!("{kind}: missing at=<seconds>"))?;
+            if !(at_s.is_finite() && at_s >= 0.0) {
+                return Err(format!("{kind}: at must be a non-negative time, got {at_s}"));
+            }
+            p.finish(kind)?;
+            events.push(match kind {
+                "fail" => FleetEvent::Fail { replica, at_s },
+                "recover" => FleetEvent::Recover { replica, at_s },
+                other => {
+                    return Err(format!(
+                        "unknown fleet event {other:?} (expected fail, recover)"
+                    ))
+                }
+            });
+        }
+        Ok(FleetFaultPlan { events })
+    }
+
+    /// Canonical spec string ([`parse`](Self::parse) round-trips it).
+    pub fn spec(&self) -> String {
+        self.events
+            .iter()
+            .map(|e| match e {
+                FleetEvent::Fail { replica, at_s } => format!("fail:r={replica},at={at_s}"),
+                FleetEvent::Recover { replica, at_s } => {
+                    format!("recover:r={replica},at={at_s}")
+                }
+            })
+            .collect::<Vec<_>>()
+            .join(";")
+    }
+
+    /// Every event must reference a replica the fleet actually has.
+    pub fn validate(&self, replicas: usize) -> Result<(), String> {
+        for e in &self.events {
+            if e.replica() >= replicas {
+                return Err(format!(
+                    "fleet fault references replica {} but the fleet has {replicas}",
+                    e.replica()
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Per-replica configuration: planner policy, a uniform speed multiplier
+/// applied on top of the template engine's pool (0.5 = a half-speed
+/// replica — older hardware or a noisy neighbour), and an optional
+/// device-level fault plan local to this replica.
+#[derive(Clone, Debug)]
+pub struct ReplicaConfig {
+    pub planner_spec: String,
+    pub speed: f64,
+    pub faults: Option<FaultPlan>,
+}
+
+impl Default for ReplicaConfig {
+    fn default() -> ReplicaConfig {
+        ReplicaConfig { planner_spec: "llep".to_string(), speed: 1.0, faults: None }
+    }
+}
+
+impl ReplicaConfig {
+    pub fn with_planner(mut self, spec: &str) -> ReplicaConfig {
+        self.planner_spec = spec.to_string();
+        self
+    }
+
+    pub fn with_speed(mut self, speed: f64) -> ReplicaConfig {
+        self.speed = speed;
+        self
+    }
+
+    pub fn with_faults(mut self, faults: FaultPlan) -> ReplicaConfig {
+        self.faults = Some(faults);
+        self
+    }
+}
+
+/// Per-replica slice of a [`FleetReport`].
+#[derive(Clone, Debug)]
+pub struct FleetReplicaReport {
+    pub planner: String,
+    pub speed: f64,
+    /// Routing decisions that landed here (arrivals + requeues).
+    pub routed: usize,
+    /// Requests that finished here.
+    pub completed: usize,
+    /// Engine steps priced here.
+    pub steps: usize,
+    /// busy time / fleet makespan (0 when the fleet never ran).
+    pub utilization: f64,
+    /// This replica's exact admitted-vs-priced ledger.
+    pub tokens: TokenLedger,
+    /// Device-level chaos accounting local to this replica.
+    pub chaos: ChaosStats,
+    pub peak_bytes: u64,
+    pub oom_steps: usize,
+    pub fallback_steps: usize,
+    pub plan_cache: CacheStats,
+}
+
+/// Result of one fleet run.
+#[derive(Clone, Debug)]
+pub struct FleetReport {
+    pub router: String,
+    pub workload: String,
+    /// Requests in the workload stream.
+    pub requests: usize,
+    /// Requests that finished (== `requests` on success).
+    pub completed: usize,
+    pub makespan_s: f64,
+    /// Time to first token per request (first prefill only — a requeued
+    /// request's re-prefill does not produce a second sample).
+    pub ttft: Summary,
+    /// Per-decode-token latency, weighted by active decodes per step
+    /// (same accounting as [`ContinuousReport`](crate::coordinator::ContinuousReport)).
+    pub tpot: Summary,
+    /// Completion − arrival per request.
+    pub request_latency: Summary,
+    /// SLO deadline applied to request latency (None = everything is
+    /// on time).
+    pub deadline_s: Option<f64>,
+    /// Requests completed within the deadline.
+    pub on_time: usize,
+    /// Nominal (prompt + decode) tokens of on-time requests / makespan.
+    pub goodput_tps: f64,
+    /// All admitted tokens / makespan. Exceeds the nominal rate when
+    /// requeues re-price prefills — admitted work, not useful work.
+    pub throughput_tps: f64,
+    /// Sum of every replica's ledger — exact by contract even across
+    /// whole-replica failures.
+    pub tokens: TokenLedger,
+    /// Sum of device-level chaos accounting across replicas.
+    pub chaos: ChaosStats,
+    /// Whole-replica failures / recoveries that fired.
+    pub replica_failures: usize,
+    pub replica_recoveries: usize,
+    /// Requests requeued at least once by a whole-replica failure, and
+    /// the worst per-request requeue count (the bounded-recovery
+    /// contract: one per failure event that held the request).
+    pub requeued_requests: usize,
+    pub max_requeues: usize,
+    pub replicas: Vec<FleetReplicaReport>,
+}
+
+/// Multi-replica cluster simulator (see the module docs for the event
+/// loop). Build with [`FleetSim::new`], shape with the `with_*`
+/// builders, run with [`try_run`](FleetSim::try_run).
+pub struct FleetSim {
+    pub engine: Engine,
+    pub scenario: Scenario,
+    pub replicas: Vec<ReplicaConfig>,
+    pub router: RouterPolicy,
+    pub workload: Workload,
+    /// Max prefill tokens admitted per replica step.
+    pub max_prefill_tokens: usize,
+    pub faults: Option<FleetFaultPlan>,
+    pub deadline_s: Option<f64>,
+}
+
+impl FleetSim {
+    pub fn new(
+        engine: Engine,
+        scenario: Scenario,
+        replicas: Vec<ReplicaConfig>,
+        max_prefill_tokens: usize,
+    ) -> FleetSim {
+        FleetSim {
+            engine,
+            scenario,
+            replicas,
+            router: RouterPolicy::LeastQueue,
+            workload: Workload::default_poisson(),
+            max_prefill_tokens,
+            faults: None,
+            deadline_s: None,
+        }
+    }
+
+    pub fn with_router(mut self, router: RouterPolicy) -> FleetSim {
+        self.router = router;
+        self
+    }
+
+    pub fn with_workload(mut self, workload: Workload) -> FleetSim {
+        self.workload = workload;
+        self
+    }
+
+    pub fn with_faults(mut self, faults: FleetFaultPlan) -> FleetSim {
+        self.faults = Some(faults);
+        self
+    }
+
+    pub fn with_deadline(mut self, deadline_s: f64) -> FleetSim {
+        self.deadline_s = Some(deadline_s);
+        self
+    }
+
+    /// Run the fleet to completion. Errors surface configuration
+    /// mistakes (bad planner spec, fault plan out of range) and
+    /// unrecoverable chaos (no alive replica to route to, a replica's
+    /// own pool dying entirely).
+    pub fn try_run(&self, seed: u64) -> Result<FleetReport, String> {
+        let n = self.replicas.len();
+        if n == 0 {
+            return Err("fleet: need at least one replica".to_string());
+        }
+        for (i, cfg) in self.replicas.iter().enumerate() {
+            if !(cfg.speed > 0.0 && cfg.speed.is_finite()) {
+                return Err(format!(
+                    "fleet: replica {i} speed must be positive and finite, got {}",
+                    cfg.speed
+                ));
+            }
+        }
+        if let Some(plan) = &self.faults {
+            plan.validate(n)?;
+        }
+
+        // A deterministic plan-cost model keeps every replica's pricing a
+        // pure function of its inputs (the bit-reproducibility contract).
+        let template = if self.engine.plan_cost.is_some() {
+            self.engine.clone()
+        } else {
+            self.engine.clone().with_plan_cost(PlanCostModel::default())
+        };
+        let engines: Vec<Engine> = self
+            .replicas
+            .iter()
+            .map(|cfg| {
+                if cfg.speed == 1.0 {
+                    template.clone()
+                } else {
+                    let speeds: Vec<f64> =
+                        template.pool.devices.iter().map(|d| d.speed * cfg.speed).collect();
+                    let devices = speeds.len();
+                    template.for_pool(PoolState::from_speeds(&speeds, devices))
+                }
+            })
+            .collect();
+        let registry = Registry::builtin();
+        let planners: Vec<Box<dyn Planner>> = self
+            .replicas
+            .iter()
+            .map(|cfg| registry.parse(&cfg.planner_spec))
+            .collect::<Result<_, _>>()?;
+        let profile = uniform_profile(&template, self.scenario.clone());
+        let mut reps: Vec<Replica> = Vec::with_capacity(n);
+        for i in 0..n {
+            reps.push(Replica::new(
+                &engines[i],
+                &*planners[i],
+                &profile,
+                self.max_prefill_tokens,
+                self.replicas[i].faults.as_ref(),
+            )?);
+        }
+
+        let requests = self.workload.generate(&mut Rng::new(seed));
+        let total = requests.len();
+        // Decorrelated per-replica pricing streams, all derived from the
+        // one fleet seed.
+        let mut rngs: Vec<Rng> = (0..n)
+            .map(|i| Rng::new(seed ^ (i as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)))
+            .collect();
+        let mut fleet_events: Vec<FleetEvent> =
+            self.faults.as_ref().map(|p| p.events.clone()).unwrap_or_default();
+        fleet_events.sort_by(|a, b| a.at_s().total_cmp(&b.at_s()));
+
+        let mut router = Router::new(self.router);
+        let mut alive = vec![true; n];
+        let mut routed = vec![0usize; n];
+        let mut completed_r = vec![0usize; n];
+        let mut requeues = vec![0usize; total];
+        let mut ttft_done = vec![false; total];
+        let mut finished = vec![false; total];
+        let mut ttft = Vec::with_capacity(total);
+        let mut tpot = Vec::new();
+        let mut latencies = Vec::with_capacity(total);
+        let mut completed = 0usize;
+        let mut on_time = 0usize;
+        let mut on_time_tokens = 0u64;
+        let mut makespan = 0.0f64;
+        let mut replica_failures = 0usize;
+        let mut replica_recoveries = 0usize;
+        let mut next_req = 0usize;
+        let mut next_ev = 0usize;
+
+        // Event kinds at equal times: arrival (0) before fleet fault (1)
+        // before replica step (2); steps tie-break to the lowest index.
+        fn earlier(a: (f64, u8, usize), b: (f64, u8, usize)) -> bool {
+            a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2)).is_lt()
+        }
+        fn beats(best: Option<(f64, u8, usize)>, c: (f64, u8, usize)) -> bool {
+            match best {
+                None => true,
+                Some(b) => earlier(c, b),
+            }
+        }
+
+        while completed < total {
+            let mut best: Option<(f64, u8, usize)> = None;
+            if next_req < total {
+                best = Some((requests[next_req].arrival_s, 0, 0));
+            }
+            if next_ev < fleet_events.len() {
+                let c = (fleet_events[next_ev].at_s(), 1, 0);
+                if beats(best, c) {
+                    best = Some(c);
+                }
+            }
+            for (i, rep) in reps.iter().enumerate() {
+                if alive[i] && rep.has_work() {
+                    let c = (rep.now(), 2, i);
+                    if beats(best, c) {
+                        best = Some(c);
+                    }
+                }
+            }
+            let Some((_, kind, idx)) = best else {
+                return Err(format!(
+                    "fleet: stuck with {completed}/{total} requests complete and no \
+                     runnable event (dead replicas holding no work?)"
+                ));
+            };
+            match kind {
+                0 => {
+                    // arrival: route via the load snapshot
+                    let req = &requests[next_req];
+                    let loads: Vec<ReplicaLoad> = reps
+                        .iter()
+                        .enumerate()
+                        .map(|(i, r)| ReplicaLoad {
+                            alive: alive[i],
+                            queue_depth: r.queue_depth(),
+                            pressure: r.pressure(),
+                        })
+                        .collect();
+                    let Some(t) = router.pick(&loads) else {
+                        return Err(format!(
+                            "fleet: no alive replica to route request {} at t={:.6}",
+                            req.id, req.arrival_s
+                        ));
+                    };
+                    if !reps[t].has_work() {
+                        reps[t].advance_to(req.arrival_s);
+                    }
+                    reps[t].submit(ReplicaRequest {
+                        id: req.id,
+                        arrival_s: req.arrival_s,
+                        prompt_tokens: req.prompt_tokens,
+                        decode_steps: req.decode_steps,
+                    });
+                    routed[t] += 1;
+                    next_req += 1;
+                }
+                1 => {
+                    match fleet_events[next_ev] {
+                        FleetEvent::Fail { replica: r, at_s } => {
+                            if alive[r] {
+                                alive[r] = false;
+                                replica_failures += 1;
+                                // drain the dead replica's queue back
+                                // through the router to the survivors
+                                for req in reps[r].drain() {
+                                    requeues[req.id] += 1;
+                                    let loads: Vec<ReplicaLoad> = reps
+                                        .iter()
+                                        .enumerate()
+                                        .map(|(i, rp)| ReplicaLoad {
+                                            alive: alive[i],
+                                            queue_depth: rp.queue_depth(),
+                                            pressure: rp.pressure(),
+                                        })
+                                        .collect();
+                                    let Some(t) = router.pick(&loads) else {
+                                        return Err(format!(
+                                            "fleet: replica {r} died at t={at_s:.6} with no \
+                                             survivor to requeue request {} onto",
+                                            req.id
+                                        ));
+                                    };
+                                    if !reps[t].has_work() {
+                                        reps[t].advance_to(at_s);
+                                    }
+                                    reps[t].submit(req);
+                                    routed[t] += 1;
+                                }
+                            }
+                        }
+                        FleetEvent::Recover { replica: r, at_s } => {
+                            if !alive[r] {
+                                alive[r] = true;
+                                replica_recoveries += 1;
+                                reps[r].advance_to(at_s);
+                            }
+                        }
+                    }
+                    next_ev += 1;
+                }
+                _ => {
+                    // step the earliest alive replica with work
+                    let i = idx;
+                    if let ReplicaStepOutcome::Stepped(ev) = reps[i].step(&mut rngs[i])? {
+                        let now = reps[i].now();
+                        for &(id, arrival_s) in &ev.prefilled {
+                            if !ttft_done[id] {
+                                ttft_done[id] = true;
+                                ttft.push(now - arrival_s);
+                            }
+                        }
+                        for _ in 0..ev.decode_tokens {
+                            tpot.push(ev.latency_s);
+                        }
+                        for &(id, arrival_s) in &ev.finished {
+                            if finished[id] {
+                                continue;
+                            }
+                            finished[id] = true;
+                            let latency = now - arrival_s;
+                            latencies.push(latency);
+                            completed += 1;
+                            completed_r[i] += 1;
+                            makespan = makespan.max(now);
+                            let within_slo = match self.deadline_s {
+                                None => true,
+                                Some(d) => latency <= d,
+                            };
+                            if within_slo {
+                                on_time += 1;
+                                on_time_tokens += (requests[id].prompt_tokens
+                                    + requests[id].decode_steps)
+                                    as u64;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        let mut tokens = TokenLedger::default();
+        let mut chaos = ChaosStats::default();
+        let mut per_replica = Vec::with_capacity(n);
+        for (i, rep) in reps.iter().enumerate() {
+            let ledger = rep.ledger();
+            tokens.absorb(&ledger);
+            chaos.absorb(&rep.chaos_stats());
+            per_replica.push(FleetReplicaReport {
+                planner: planners[i].label(),
+                speed: self.replicas[i].speed,
+                routed: routed[i],
+                completed: completed_r[i],
+                steps: rep.steps(),
+                utilization: if makespan > 0.0 { rep.busy_s() / makespan } else { 0.0 },
+                tokens: ledger,
+                chaos: rep.chaos_stats(),
+                peak_bytes: rep.peak_bytes(),
+                oom_steps: rep.oom_steps(),
+                fallback_steps: rep.fallback_steps(),
+                plan_cache: rep.plan_cache(),
+            });
+        }
+        Ok(FleetReport {
+            router: router.policy.name().to_string(),
+            workload: self.workload.spec(),
+            requests: total,
+            completed,
+            makespan_s: makespan,
+            ttft: Summary::of(&ttft),
+            tpot: Summary::of(&tpot),
+            request_latency: Summary::of(&latencies),
+            deadline_s: self.deadline_s,
+            on_time,
+            goodput_tps: if makespan > 0.0 { on_time_tokens as f64 / makespan } else { 0.0 },
+            throughput_tps: if makespan > 0.0 {
+                tokens.admitted as f64 / makespan
+            } else {
+                0.0
+            },
+            tokens,
+            chaos,
+            replica_failures,
+            replica_recoveries,
+            requeued_requests: requeues.iter().filter(|&&c| c > 0).count(),
+            max_requeues: requeues.iter().copied().max().unwrap_or(0),
+            replicas: per_replica,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelConfig, ModelPreset, SystemConfig, SystemPreset};
+
+    fn engine() -> Engine {
+        Engine::modeled(
+            ModelConfig::preset(ModelPreset::Fig1Layer),
+            SystemConfig::preset(SystemPreset::H200x8),
+        )
+    }
+
+    fn small_fleet(n: usize) -> FleetSim {
+        FleetSim::new(
+            engine(),
+            Scenario::concentrated(0.8, 4),
+            vec![ReplicaConfig::default(); n],
+            16_384,
+        )
+        .with_workload(Workload::parse("poisson:n=24,ia=0.0005,prompt=128-1024,decode=4-16").unwrap())
+    }
+
+    #[test]
+    fn fleet_fault_plan_round_trips() {
+        let plan = FleetFaultPlan::parse("fail:r=1,at=0.02;recover:r=1,at=0.05").unwrap();
+        assert_eq!(plan.events.len(), 2);
+        assert_eq!(FleetFaultPlan::parse(&plan.spec()).unwrap(), plan);
+        assert!(plan.validate(2).is_ok());
+        assert!(plan.validate(1).is_err(), "replica 1 out of range");
+        assert!(FleetFaultPlan::parse("fail:at=1").is_err(), "missing r");
+        assert!(FleetFaultPlan::parse("explode:r=0,at=1").is_err());
+    }
+
+    #[test]
+    fn fleet_completes_every_request() {
+        let r = small_fleet(2).try_run(42).unwrap();
+        assert_eq!(r.completed, r.requests);
+        assert_eq!(r.requests, 24);
+        assert!(r.tokens.is_exact(), "{:?}", r.tokens);
+        assert!(r.makespan_s > 0.0);
+        assert!(r.goodput_tps > 0.0);
+        assert_eq!(r.on_time, r.requests, "no deadline: everything on time");
+        assert_eq!(r.replicas.len(), 2);
+        assert_eq!(r.replicas.iter().map(|p| p.completed).sum::<usize>(), r.completed);
+        assert_eq!(r.replicas.iter().map(|p| p.routed).sum::<usize>(), r.requests);
+        for p in &r.replicas {
+            assert!(p.tokens.is_exact(), "per-replica ledger: {:?}", p.tokens);
+            assert!(p.utilization >= 0.0 && p.utilization <= 1.0 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn fleet_is_deterministic() {
+        let sim = small_fleet(3).with_router(RouterPolicy::Pressure);
+        let a = sim.try_run(7).unwrap();
+        let b = sim.try_run(7).unwrap();
+        assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits());
+        assert_eq!(a.ttft.mean.to_bits(), b.ttft.mean.to_bits());
+        assert_eq!(a.tokens, b.tokens);
+        for (x, y) in a.replicas.iter().zip(&b.replicas) {
+            assert_eq!(x.steps, y.steps);
+            assert_eq!(x.routed, y.routed);
+            assert_eq!(x.tokens, y.tokens);
+        }
+    }
+
+    #[test]
+    fn whole_replica_failure_requeues_and_recovers() {
+        // Kill replica 1 early: everything it held must finish elsewhere
+        // with at most one requeue and an exact summed ledger.
+        let sim = small_fleet(2)
+            .with_faults(FleetFaultPlan::parse("fail:r=1,at=0.001").unwrap());
+        let r = sim.try_run(11).unwrap();
+        assert_eq!(r.completed, r.requests);
+        assert_eq!(r.replica_failures, 1);
+        assert!(r.max_requeues <= 1, "single failure: one requeue max");
+        assert!(r.tokens.is_exact(), "{:?}", r.tokens);
+        assert!(r.goodput_tps > 0.0);
+        assert_eq!(r.replicas[1].completed + r.replicas[0].completed, r.requests);
+    }
+
+    #[test]
+    fn dead_fleet_errors_instead_of_hanging() {
+        let sim = small_fleet(1).with_faults(FleetFaultPlan::parse("fail:r=0,at=0.0").unwrap());
+        let err = sim.try_run(3).unwrap_err();
+        assert!(err.contains("no alive replica"), "{err}");
+    }
+
+    #[test]
+    fn recover_rejoins_the_routable_set() {
+        let sim = small_fleet(2)
+            .with_faults(FleetFaultPlan::parse("fail:r=1,at=0.0005;recover:r=1,at=0.002").unwrap());
+        let r = sim.try_run(9).unwrap();
+        assert_eq!(r.completed, r.requests);
+        assert_eq!(r.replica_failures, 1);
+        assert_eq!(r.replica_recoveries, 1);
+        assert!(r.replicas[1].routed > 0, "recovered replica serves again");
+        assert!(r.tokens.is_exact(), "{:?}", r.tokens);
+    }
+
+    #[test]
+    fn bad_configs_are_loud() {
+        assert!(small_fleet(0).try_run(1).is_err(), "empty fleet");
+        let mut sim = small_fleet(2);
+        sim.replicas[0].planner_spec = "warp-drive".to_string();
+        assert!(sim.try_run(1).is_err(), "unknown planner spec");
+        let mut sim = small_fleet(2);
+        sim.replicas[1].speed = 0.0;
+        assert!(sim.try_run(1).is_err(), "zero speed");
+        let sim =
+            small_fleet(2).with_faults(FleetFaultPlan::parse("fail:r=7,at=0.1").unwrap());
+        assert!(sim.try_run(1).is_err(), "fault plan out of range");
+    }
+
+    #[test]
+    fn deadline_splits_goodput_from_throughput() {
+        // An absurdly tight deadline: nothing is on time, goodput is 0,
+        // raw throughput is not.
+        let r = small_fleet(2).with_deadline(1e-12).try_run(5).unwrap();
+        assert_eq!(r.on_time, 0);
+        assert_eq!(r.goodput_tps, 0.0);
+        assert!(r.throughput_tps > 0.0);
+        // And a generous one: everything is on time.
+        let r = small_fleet(2).with_deadline(1e9).try_run(5).unwrap();
+        assert_eq!(r.on_time, r.requests);
+    }
+}

@@ -1,0 +1,313 @@
+//! Fleet workload generators: deterministic arrival streams with
+//! prompt/decode length mixtures.
+//!
+//! Grammar (one shape, keys separated by `,`; all keys optional):
+//!
+//! ```text
+//! poisson:n=64,ia=0.0002,prompt=128-1024,decode=4-32
+//! diurnal:n=64,ia=0.0002,amp=0.5,period=0.05,prompt=128-1024,decode=4-32
+//! bursty:n=64,ia=0.0002,burst=8,every=16,prompt=128-1024,decode=4-32
+//! ```
+//!
+//! * `poisson` — exponential inter-arrival gaps with mean `ia` seconds.
+//! * `diurnal` — Poisson with the gap scaled by `1 + amp·sin(2πt/period)`
+//!   (`0 <= amp < 1`, `period > 0` seconds): rush hours and lulls on a
+//!   virtual day of length `period`.
+//! * `bursty` — a burst of `burst` simultaneous arrivals opens every
+//!   `every`-th request; the remainder trickle in Poisson. The router
+//!   stress case: queue depth spikes instantaneously.
+//!
+//! `prompt`/`decode` are inclusive `lo-hi` ranges drawn uniformly per
+//! request. Unknown keys are hard errors (a typo never silently changes
+//! the experiment) and [`Workload::spec`] round-trips through
+//! [`Workload::parse`]. Generation is a pure function of `(spec, seed)`:
+//! arrivals are monotone and every draw comes from the one seeded
+//! [`Rng`] stream in request order.
+
+use crate::coordinator::GenRequest;
+use crate::util::rng::Rng;
+
+/// Arrival-process shape. Lengths and counts live on [`Workload`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum WorkloadKind {
+    /// Exponential gaps with mean `ia`.
+    Poisson,
+    /// Gap mean modulated by `1 + amp·sin(2πt/period_s)`.
+    Diurnal { amp: f64, period_s: f64 },
+    /// `burst` simultaneous arrivals every `every` requests.
+    Bursty { burst: usize, every: usize },
+}
+
+/// A parsed workload spec: arrival process + request-length mixture.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Workload {
+    pub kind: WorkloadKind,
+    /// Number of requests.
+    pub n: usize,
+    /// Mean inter-arrival gap in (virtual) seconds.
+    pub mean_interarrival_s: f64,
+    /// Inclusive prompt-token range.
+    pub prompt: (usize, usize),
+    /// Inclusive decode-step range.
+    pub decode: (usize, usize),
+}
+
+impl Workload {
+    /// The default serving mix: 64 Poisson arrivals, mid-size prompts.
+    pub fn default_poisson() -> Workload {
+        Workload {
+            kind: WorkloadKind::Poisson,
+            n: 64,
+            mean_interarrival_s: 2e-4,
+            prompt: (128, 1024),
+            decode: (4, 32),
+        }
+    }
+
+    /// Parse the `kind:key=value,...` grammar (see the module docs).
+    pub fn parse(spec: &str) -> Result<Workload, String> {
+        let spec = spec.trim();
+        let (kind, tail) = spec.split_once(':').unwrap_or((spec, ""));
+        let mut p = Params::parse(tail)?;
+        let mut w = Workload::default_poisson();
+        w.kind = match kind {
+            "poisson" => WorkloadKind::Poisson,
+            "diurnal" => {
+                let amp = p.take_f64("amp")?.unwrap_or(0.5);
+                if !(0.0..1.0).contains(&amp) {
+                    return Err(format!("diurnal: amp must be in [0, 1), got {amp}"));
+                }
+                let period_s = p.take_f64("period")?.unwrap_or(0.05);
+                if !(period_s > 0.0 && period_s.is_finite()) {
+                    return Err(format!("diurnal: period must be positive, got {period_s}"));
+                }
+                WorkloadKind::Diurnal { amp, period_s }
+            }
+            "bursty" => WorkloadKind::Bursty {
+                burst: p.take_usize("burst")?.unwrap_or(8).max(1),
+                every: p.take_usize("every")?.unwrap_or(16).max(1),
+            },
+            other => {
+                return Err(format!(
+                    "unknown workload kind {other:?} (expected poisson, diurnal, bursty)"
+                ))
+            }
+        };
+        if let Some(n) = p.take_usize("n")? {
+            if n == 0 {
+                return Err("workload: n must be at least 1".into());
+            }
+            w.n = n;
+        }
+        if let Some(ia) = p.take_f64("ia")? {
+            if !(ia > 0.0 && ia.is_finite()) {
+                return Err(format!("workload: ia must be positive and finite, got {ia}"));
+            }
+            w.mean_interarrival_s = ia;
+        }
+        if let Some(r) = p.take("prompt") {
+            w.prompt = parse_range("prompt", &r)?;
+        }
+        if let Some(r) = p.take("decode") {
+            w.decode = parse_range("decode", &r)?;
+        }
+        p.finish(kind)?;
+        Ok(w)
+    }
+
+    /// Canonical spec string; [`Workload::parse`] on it reconstructs an
+    /// equal workload (round-trip).
+    pub fn spec(&self) -> String {
+        let head = match self.kind {
+            WorkloadKind::Poisson => "poisson".to_string(),
+            WorkloadKind::Diurnal { amp, period_s } => {
+                format!("diurnal:amp={amp},period={period_s},")
+                    .trim_end_matches(',')
+                    .to_string()
+            }
+            WorkloadKind::Bursty { burst, every } => format!("bursty:burst={burst},every={every}"),
+        };
+        let sep = if head.contains(':') { "," } else { ":" };
+        format!(
+            "{head}{sep}n={},ia={},prompt={}-{},decode={}-{}",
+            self.n,
+            self.mean_interarrival_s,
+            self.prompt.0,
+            self.prompt.1,
+            self.decode.0,
+            self.decode.1
+        )
+    }
+
+    /// Generate the request stream: a pure function of `(self, rng
+    /// seed)`. Arrivals are monotone non-decreasing; ids are `0..n`.
+    pub fn generate(&self, rng: &mut Rng) -> Vec<GenRequest> {
+        let mut t = 0.0f64;
+        (0..self.n)
+            .map(|id| {
+                let in_burst = matches!(
+                    self.kind,
+                    WorkloadKind::Bursty { burst, every }
+                        if id % every != 0 && id % every < burst
+                );
+                if !in_burst {
+                    let scale = match self.kind {
+                        WorkloadKind::Diurnal { amp, period_s } => {
+                            1.0 + amp * (std::f64::consts::TAU * t / period_s).sin()
+                        }
+                        _ => 1.0,
+                    };
+                    t += -(self.mean_interarrival_s * scale) * (1.0 - rng.f64()).ln();
+                }
+                GenRequest {
+                    id,
+                    arrival_s: t,
+                    prompt_tokens: rng.range(self.prompt.0, self.prompt.1),
+                    decode_steps: rng.range(self.decode.0, self.decode.1),
+                }
+            })
+            .collect()
+    }
+
+    /// Short label for report titles (the canonical spec).
+    pub fn label(&self) -> String {
+        self.spec()
+    }
+}
+
+fn parse_range(key: &str, v: &str) -> Result<(usize, usize), String> {
+    let (lo, hi) = v
+        .split_once('-')
+        .ok_or_else(|| format!("{key} expects lo-hi, got {v:?}"))?;
+    let lo: usize =
+        lo.trim().parse().map_err(|_| format!("{key}: bad lower bound {lo:?}"))?;
+    let hi: usize =
+        hi.trim().parse().map_err(|_| format!("{key}: bad upper bound {hi:?}"))?;
+    if lo == 0 || hi < lo {
+        return Err(format!("{key}: need 1 <= lo <= hi, got {lo}-{hi}"));
+    }
+    Ok((lo, hi))
+}
+
+/// Parsed `key=value` list with loud leftovers (mirrors the fault-plan
+/// grammar's parameter handling). Shared with the fleet fault-plan
+/// parser in `fleet/sim.rs`.
+pub(crate) struct Params {
+    kv: Vec<(String, String)>,
+}
+
+impl Params {
+    pub(crate) fn parse(s: &str) -> Result<Params, String> {
+        let mut kv = Vec::new();
+        for part in s.split(',').filter(|p| !p.trim().is_empty()) {
+            let (k, v) = part
+                .split_once('=')
+                .ok_or_else(|| format!("expected key=value, got {part:?}"))?;
+            kv.push((k.trim().to_string(), v.trim().to_string()));
+        }
+        Ok(Params { kv })
+    }
+
+    pub(crate) fn take(&mut self, key: &str) -> Option<String> {
+        self.kv.iter().position(|(k, _)| k == key).map(|i| self.kv.remove(i).1)
+    }
+
+    pub(crate) fn take_f64(&mut self, key: &str) -> Result<Option<f64>, String> {
+        match self.take(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<f64>()
+                .map(Some)
+                .map_err(|_| format!("{key} expects a number, got {v:?}")),
+        }
+    }
+
+    pub(crate) fn take_usize(&mut self, key: &str) -> Result<Option<usize>, String> {
+        match self.take(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<usize>()
+                .map(Some)
+                .map_err(|_| format!("{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub(crate) fn finish(&self, kind: &str) -> Result<(), String> {
+        if self.kv.is_empty() {
+            Ok(())
+        } else {
+            let keys: Vec<&str> = self.kv.iter().map(|(k, _)| k.as_str()).collect();
+            Err(format!("unknown key(s) for {kind}: {}", keys.join(", ")))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_spec_round_trips() {
+        let w = Workload::parse("poisson:n=32,ia=0.001,prompt=64-256,decode=2-8").unwrap();
+        assert_eq!(w.n, 32);
+        assert_eq!(w.prompt, (64, 256));
+        assert_eq!(Workload::parse(&w.spec()).unwrap(), w);
+    }
+
+    #[test]
+    fn diurnal_and_bursty_round_trip() {
+        for spec in [
+            "diurnal:n=16,ia=0.0005,amp=0.7,period=0.02,prompt=64-128,decode=2-4",
+            "bursty:n=40,ia=0.0003,burst=4,every=8,prompt=128-512,decode=4-16",
+        ] {
+            let w = Workload::parse(spec).unwrap();
+            assert_eq!(Workload::parse(&w.spec()).unwrap(), w, "{spec}");
+        }
+    }
+
+    #[test]
+    fn defaults_apply_and_unknown_keys_are_loud() {
+        let w = Workload::parse("poisson").unwrap();
+        assert_eq!(w, Workload::default_poisson());
+        assert!(Workload::parse("poisson:burst=4").is_err(), "burst is not a poisson key");
+        assert!(Workload::parse("tidal:n=4").is_err());
+        assert!(Workload::parse("diurnal:amp=1.5").is_err());
+        assert!(Workload::parse("poisson:prompt=9-3").is_err());
+    }
+
+    #[test]
+    fn generation_is_monotone_and_deterministic() {
+        for spec in [
+            "poisson:n=50",
+            "diurnal:n=50,amp=0.9,period=0.01",
+            "bursty:n=50,burst=8,every=16",
+        ] {
+            let w = Workload::parse(spec).unwrap();
+            let a = w.generate(&mut Rng::new(7));
+            let b = w.generate(&mut Rng::new(7));
+            assert_eq!(a.len(), 50);
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.arrival_s.to_bits(), y.arrival_s.to_bits(), "{spec}");
+                assert_eq!(x.prompt_tokens, y.prompt_tokens);
+                assert_eq!(x.decode_steps, y.decode_steps);
+            }
+            for pair in a.windows(2) {
+                assert!(pair[0].arrival_s <= pair[1].arrival_s, "{spec}: monotone arrivals");
+            }
+        }
+    }
+
+    #[test]
+    fn bursts_share_an_arrival_instant() {
+        let w = Workload::parse("bursty:n=32,burst=8,every=16").unwrap();
+        let reqs = w.generate(&mut Rng::new(3));
+        // requests 0..8 and 16..24 each form one simultaneous burst
+        for burst_start in [0, 16] {
+            let t0 = reqs[burst_start].arrival_s;
+            for r in &reqs[burst_start..burst_start + 8] {
+                assert_eq!(r.arrival_s.to_bits(), t0.to_bits());
+            }
+            assert!(reqs[burst_start + 8].arrival_s > t0, "tail trickles after the burst");
+        }
+    }
+}

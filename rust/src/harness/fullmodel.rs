@@ -8,6 +8,7 @@
 //! damped version of the MoE-layer speedup — exactly the Fig.-1c shape.
 
 use crate::config::{ModelConfig, ModelPreset, SystemConfig, SystemPreset};
+use crate::coordinator::attention_overhead_s;
 use crate::exec::{Engine, ModelStepReport};
 use crate::planner::{Planner, PlannerKind};
 use crate::routing::{DepthProfile, Scenario};
@@ -30,12 +31,6 @@ impl ThroughputRow {
     }
 }
 
-/// Per-token attention + dense FLOPs for one layer (rough transformer
-/// accounting: 4 D^2 QKVO projections + 2 D^2-equivalent attention work).
-fn attn_flops_per_token(model: &ModelConfig) -> f64 {
-    6.0 * (model.d_model as f64) * (model.d_model as f64)
-}
-
 /// Estimate full-model EP vs LLEP throughput on the in-the-wild routing
 /// distribution (drifting dominant expert, as measured in paper §3.1).
 pub fn throughput_row(
@@ -54,9 +49,9 @@ pub fn throughput_row(
     let scenario = Scenario::drifting(model.num_experts / 3, 0.20, 0.25);
 
     let total_tokens = (tokens_per_device * devices) as f64;
-    // attention/dense time per step, spread across devices (data parallel).
-    let attn_s = model.num_layers as f64 * total_tokens * attn_flops_per_token(&model)
-        / (engine.gemm.peak_flops * devices as f64);
+    // attention/dense time per step, spread across devices (data parallel)
+    // — priced by the replica core's shared helper.
+    let attn_s = attention_overhead_s(&engine, total_tokens);
 
     let mut ep_moe = 0.0;
     let mut llep_moe = 0.0;
@@ -124,11 +119,9 @@ impl FullModelSim {
         tokens_per_device: usize,
         rng: &mut Rng,
     ) -> FullModelStep {
-        let model = &self.engine.model;
         let devices = self.engine.system.devices;
         let total_tokens = (tokens_per_device * devices) as f64;
-        let attn_s = model.num_layers as f64 * total_tokens * attn_flops_per_token(model)
-            / (self.engine.gemm.peak_flops * devices as f64);
+        let attn_s = attention_overhead_s(&self.engine, total_tokens);
         let report = self.engine.run_model_profile(&self.profile, planner, tokens_per_device, rng);
         FullModelStep {
             moe_s: report.latency_s,

@@ -50,6 +50,7 @@ pub mod config;
 pub mod coordinator;
 pub mod costmodel;
 pub mod exec;
+pub mod fleet;
 pub mod harness;
 pub mod metrics;
 pub mod moe;
@@ -79,6 +80,7 @@ pub mod prelude {
     };
     pub use crate::costmodel::{CommCostModel, GemmCostModel, MemoryModel};
     pub use crate::exec::{Engine, GemmBackendKind, ModelStepReport, PlanCostModel, StepReport};
+    pub use crate::fleet::{FleetFaultPlan, FleetSim, ReplicaConfig, RouterPolicy, Workload};
     pub use crate::planner::{
         parse_planner, CacheStats, CachedPlanner, Planner, PlannerKind, RoutePlan,
     };

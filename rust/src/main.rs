@@ -12,6 +12,9 @@
 //!              emit a latency/memory Pareto front (--profile, --budget)
 //!   chaos      fault & heterogeneity injection: serve under a FaultPlan
 //!              (--faults) and compare static EP vs chaos-aware LLEP
+//!   fleet      multi-replica cluster simulation: N replicas behind a
+//!              router (--replicas, --router, --workload, --speeds,
+//!              --deadline), with whole-replica fail/recover chaos
 //!   bench      run a pinned micro-benchmark suite (--suite hotpath) and
 //!              write (--out) or gate against (--check) a JSON baseline
 //!   info       print presets, the planner registry and environment
@@ -19,9 +22,12 @@
 //! Fault plans (`--faults`, accepted by run/serve/tune/chaos) are spec
 //! strings like `slow:dev=0,x=4;fail:dev=3,at=16` (kinds: slow, stall,
 //! fail, recover, link, jitter) or paths to a TOML file with
-//! `faults = "..."` under `[chaos]`. `--planner @report.json` reads the
-//! recommended spec from a `tune --out` report, so a pinned
-//! recommendation is directly consumable by run/serve.
+//! `faults = "..."` under `[chaos]`. The `fleet` subcommand instead
+//! reads `--faults` in the whole-replica grammar
+//! (`fail:r=1,at=0.02;recover:r=1,at=0.05`, times in virtual seconds).
+//! `--planner @report.json` reads the recommended spec from a
+//! `tune --out` report, so a pinned recommendation is directly
+//! consumable by run/serve/fleet.
 //!
 //! Planner selection is open; the examples below are canonical registry
 //! specs (they round-trip through `planner/registry.rs` unchanged):
@@ -43,9 +49,11 @@ use llep::config::{
 use llep::coordinator::{RunSummary, Runner, ServeReport, ServeSim};
 use llep::exec::{Engine, PlanCostModel};
 use llep::harness;
+use llep::fleet::{FleetFaultPlan, FleetSim, ReplicaConfig, RouterPolicy, Workload};
 use llep::metrics::{
-    chaos_stats_to_json, format_bytes, format_cache, format_chaos, format_secs,
-    model_report_table, tune_front_table, tune_report_to_json, tune_trials_table, Table,
+    chaos_stats_to_json, fleet_replica_table, fleet_report_to_json, format_bytes, format_cache,
+    format_chaos, format_secs, model_report_table, tune_front_table, tune_report_to_json,
+    tune_trials_table, Table,
 };
 use llep::planner::{CachedPlanner, Planner, PlannerKind, Registry};
 use llep::routing::{DepthProfile, RoutingTrace, Scenario};
@@ -86,6 +94,11 @@ fn main() {
         .opt("planner", "planner spec (see `llep info`), or @report.json from `tune --out`")
         .opt("replan-every", "plan cache: force a fresh plan every N reuses (0 = never)")
         .opt("cache-drift", "plan cache: load-signature drift threshold (default 0.05)")
+        .opt("replicas", "fleet: number of serving replicas (default 2)")
+        .opt("router", "fleet: round-robin | least-queue | pressure (default least-queue)")
+        .opt("workload", "fleet: workload spec, e.g. bursty:n=64,ia=0.0002,burst=8,every=16")
+        .opt("speeds", "fleet: per-replica speed multipliers, e.g. 1.0,0.5")
+        .opt("deadline", "fleet: SLO deadline in seconds for goodput (0 = none)")
         .opt("suite", "bench: suite name (hotpath)")
         .opt("check", "bench: pin JSON — bootstrap when missing, fail on median regression")
         .opt("tolerance", "bench: allowed median regression vs the pin (default 0.25)")
@@ -105,8 +118,8 @@ fn main() {
     if args.has_flag("help") || args.subcommand.is_none() {
         println!("llep — Least-Loaded Expert Parallelism (paper reproduction)\n");
         println!(
-            "usage: llep <figures|run|calibrate|trace|replay|train|serve|tune|chaos|bench|info> \
-             [options]\n"
+            "usage: llep <figures|run|calibrate|trace|replay|train|serve|tune|chaos|fleet|bench|\
+             info> [options]\n"
         );
         println!("Options:\n{}", spec.help());
         return;
@@ -122,6 +135,7 @@ fn main() {
         "serve" => cmd_serve(&args),
         "tune" => cmd_tune(&args),
         "chaos" => cmd_chaos(&args),
+        "fleet" => cmd_fleet(&args),
         "bench" => cmd_bench(&args),
         "info" => cmd_info(),
         other => Err(format!("unknown subcommand {other:?} (see --help)")),
@@ -929,6 +943,140 @@ fn cmd_chaos(args: &llep::util::cli::Args) -> Result<(), String> {
         ]);
         std::fs::write(out, json.to_string_pretty()).map_err(|e| e.to_string())?;
         println!("wrote {out}");
+    }
+    Ok(())
+}
+
+/// `llep fleet`: simulate N serving replicas behind a global router on
+/// one virtual timeline, optionally killing/recovering whole replicas
+/// (`--faults "fail:r=1,at=0.02"`). The command fails (non-zero exit)
+/// when any request is lost, the summed token ledger is inexact, or
+/// goodput is zero — the CI smoke contract.
+fn cmd_fleet(args: &llep::util::cli::Args) -> Result<(), String> {
+    let (engine, llep) = engine_from_args(args)?;
+    let scenario = scenario_from_args(args)?;
+    let seed = args.get_usize("seed", 0)? as u64;
+    let n_replicas = args.get_usize("replicas", 2)?;
+    if n_replicas == 0 {
+        return Err("--replicas must be at least 1".into());
+    }
+    let router = RouterPolicy::parse(&args.get_or("router", "least-queue"))?;
+    let workload = Workload::parse(&args.get_or("workload", "poisson"))?;
+    // Every replica runs the same planner policy (heterogeneity comes
+    // from --speeds and per-replica chaos, not mixed planners).
+    let planner_spec = match args.get("planner") {
+        Some(spec) => resolve_planner_arg(spec)?.spec(),
+        None => PlannerKind::Llep(llep).boxed().spec(),
+    };
+    let speeds: Vec<f64> = match args.get("speeds") {
+        Some(list) => list
+            .split(',')
+            .map(|x| {
+                x.trim()
+                    .parse::<f64>()
+                    .map_err(|_| format!("--speeds: bad multiplier {x:?}"))
+            })
+            .collect::<Result<_, _>>()?,
+        None => vec![1.0; n_replicas],
+    };
+    if speeds.len() != n_replicas {
+        return Err(format!(
+            "--speeds lists {} multipliers but --replicas is {n_replicas}",
+            speeds.len()
+        ));
+    }
+    let replicas: Vec<ReplicaConfig> = speeds
+        .iter()
+        .map(|&s| ReplicaConfig::default().with_planner(&planner_spec).with_speed(s))
+        .collect();
+    let budget = args.get_usize("tokens", 8192)? * engine.system.devices;
+    let mut sim = FleetSim::new(engine, scenario.clone(), replicas, budget)
+        .with_router(router)
+        .with_workload(workload);
+    let faults = match args.get("faults") {
+        Some(spec) => {
+            let plan = FleetFaultPlan::parse(spec)?;
+            sim = sim.with_faults(plan.clone());
+            Some(plan)
+        }
+        None => None,
+    };
+    let deadline = args.get_f64("deadline", 0.0)?;
+    if deadline > 0.0 {
+        sim = sim.with_deadline(deadline);
+    }
+
+    let report = sim.try_run(seed)?;
+
+    let fault_note = faults
+        .as_ref()
+        .map(|f| format!(" | faults: {}", f.spec()))
+        .unwrap_or_default();
+    print_table(
+        &format!(
+            "fleet | {n_replicas} replicas | router {} | {} | {}{fault_note}",
+            report.router,
+            report.workload,
+            scenario.label()
+        ),
+        &fleet_replica_table(&report),
+    );
+    println!(
+        "requests {}/{} | makespan {} | TTFT p50 {} p99 {} | latency p99 {} | \
+         goodput {:.0} tok/s | throughput {:.0} tok/s",
+        report.completed,
+        report.requests,
+        format_secs(report.makespan_s),
+        format_secs(report.ttft.p50),
+        format_secs(report.ttft.p99),
+        format_secs(report.request_latency.p99),
+        report.goodput_tps,
+        report.throughput_tps
+    );
+    if let Some(d) = report.deadline_s {
+        println!(
+            "SLO: {}/{} requests within {} ({:.0}%)",
+            report.on_time,
+            report.requests,
+            format_secs(d),
+            100.0 * report.on_time as f64 / report.requests.max(1) as f64
+        );
+    }
+    if report.replica_failures + report.replica_recoveries > 0 {
+        println!(
+            "replica chaos: {} failure(s), {} recover(y/ies), {} request(s) requeued \
+             (max {} per request)",
+            report.replica_failures,
+            report.replica_recoveries,
+            report.requeued_requests,
+            report.max_requeues
+        );
+    }
+
+    if let Some(out) = args.get("out") {
+        let json = fleet_report_to_json(&report);
+        std::fs::write(out, json.to_string_pretty()).map_err(|e| e.to_string())?;
+        println!("wrote {out}");
+    }
+
+    // Hard contract, enforced by exit code (the CI smoke step): nothing
+    // lost, exact accounting, useful work actually delivered.
+    if report.completed != report.requests {
+        return Err(format!(
+            "fleet lost requests: {}/{} completed",
+            report.completed, report.requests
+        ));
+    }
+    if !report.tokens.is_exact() {
+        return Err(format!("fleet token ledger inexact: {:?}", report.tokens));
+    }
+    for (i, p) in report.replicas.iter().enumerate() {
+        if !p.tokens.is_exact() {
+            return Err(format!("replica {i} token ledger inexact: {:?}", p.tokens));
+        }
+    }
+    if !(report.goodput_tps > 0.0) {
+        return Err("fleet goodput is zero — no request met the deadline".into());
     }
     Ok(())
 }

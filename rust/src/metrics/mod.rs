@@ -273,6 +273,95 @@ pub fn format_chaos(c: &ChaosStats) -> String {
     }
 }
 
+/// JSON export of a latency summary (seconds).
+pub fn summary_to_json(s: &Summary) -> Json {
+    Json::obj(vec![
+        ("n", Json::num(s.n as f64)),
+        ("mean", Json::num(s.mean)),
+        ("min", Json::num(s.min)),
+        ("p50", Json::num(s.p50)),
+        ("p99", Json::num(s.p99)),
+        ("max", Json::num(s.max)),
+    ])
+}
+
+/// Per-replica breakdown table of a fleet run.
+pub fn fleet_replica_table(r: &crate::fleet::FleetReport) -> Table {
+    let mut t = Table::new(&[
+        "replica", "planner", "speed", "routed", "done", "steps", "util", "peak mem", "ledger",
+        "chaos",
+    ]);
+    for (i, p) in r.replicas.iter().enumerate() {
+        t.row(vec![
+            format!("R{i}"),
+            p.planner.clone(),
+            format!("{:.2}x", p.speed),
+            p.routed.to_string(),
+            p.completed.to_string(),
+            p.steps.to_string(),
+            format!("{:.0}%", p.utilization * 100.0),
+            format_bytes(p.peak_bytes),
+            if p.tokens.is_exact() {
+                format!("{} ok", p.tokens.admitted)
+            } else {
+                format!("{}!={} BROKEN", p.tokens.admitted, p.tokens.priced)
+            },
+            format_chaos(&p.chaos),
+        ]);
+    }
+    t
+}
+
+/// JSON export of a fleet run (SLO summaries, summed ledger, per-replica
+/// slices) — the `llep fleet --out` payload.
+pub fn fleet_report_to_json(r: &crate::fleet::FleetReport) -> Json {
+    Json::obj(vec![
+        ("router", Json::str(&r.router)),
+        ("workload", Json::str(&r.workload)),
+        ("requests", Json::num(r.requests as f64)),
+        ("completed", Json::num(r.completed as f64)),
+        ("makespan_s", Json::num(r.makespan_s)),
+        ("ttft", summary_to_json(&r.ttft)),
+        ("tpot", summary_to_json(&r.tpot)),
+        ("request_latency", summary_to_json(&r.request_latency)),
+        (
+            "deadline_s",
+            r.deadline_s.map(Json::num).unwrap_or(Json::Null),
+        ),
+        ("on_time", Json::num(r.on_time as f64)),
+        ("goodput_tps", Json::num(r.goodput_tps)),
+        ("throughput_tps", Json::num(r.throughput_tps)),
+        ("tokens_admitted", Json::num(r.tokens.admitted as f64)),
+        ("tokens_priced", Json::num(r.tokens.priced as f64)),
+        ("ledger_exact", Json::Bool(r.tokens.is_exact())),
+        ("chaos", chaos_stats_to_json(&r.chaos)),
+        ("replica_failures", Json::num(r.replica_failures as f64)),
+        ("replica_recoveries", Json::num(r.replica_recoveries as f64)),
+        ("requeued_requests", Json::num(r.requeued_requests as f64)),
+        ("max_requeues", Json::num(r.max_requeues as f64)),
+        (
+            "replicas",
+            Json::arr(r.replicas.iter().map(|p| {
+                Json::obj(vec![
+                    ("planner", Json::str(&p.planner)),
+                    ("speed", Json::num(p.speed)),
+                    ("routed", Json::num(p.routed as f64)),
+                    ("completed", Json::num(p.completed as f64)),
+                    ("steps", Json::num(p.steps as f64)),
+                    ("utilization", Json::num(p.utilization)),
+                    ("peak_bytes", Json::num(p.peak_bytes as f64)),
+                    ("oom_steps", Json::num(p.oom_steps as f64)),
+                    ("fallback_steps", Json::num(p.fallback_steps as f64)),
+                    ("tokens_admitted", Json::num(p.tokens.admitted as f64)),
+                    ("tokens_priced", Json::num(p.tokens.priced as f64)),
+                    ("ledger_exact", Json::Bool(p.tokens.is_exact())),
+                    ("chaos", chaos_stats_to_json(&p.chaos)),
+                ])
+            })),
+        ),
+    ])
+}
+
 /// Per-layer latency/memory breakdown of a full-model step.
 pub fn model_report_table(r: &ModelStepReport) -> Table {
     let mut t = Table::new(&[
@@ -454,6 +543,39 @@ mod tests {
         let json = tune_report_to_json(&outcome, "h200x8", "95% into 1").to_string();
         assert!(json.contains("\"recommended\""), "{json}");
         assert!(json.contains("\"priced_units\":8"), "{json}");
+    }
+
+    #[test]
+    fn fleet_table_and_json_render() {
+        use crate::config::{ModelConfig, ModelPreset, SystemConfig, SystemPreset};
+        use crate::exec::Engine;
+        use crate::fleet::{FleetSim, ReplicaConfig, Workload};
+        use crate::routing::Scenario;
+
+        let engine = Engine::modeled(
+            ModelConfig::preset(ModelPreset::Fig1Layer),
+            SystemConfig::preset(SystemPreset::H200x8),
+        );
+        let sim = FleetSim::new(
+            engine,
+            Scenario::concentrated(0.8, 4),
+            vec![ReplicaConfig::default(), ReplicaConfig::default().with_speed(0.5)],
+            16_384,
+        )
+        .with_workload(Workload::parse("poisson:n=8,ia=0.001,prompt=64-256,decode=2-4").unwrap());
+        let r = sim.try_run(1).unwrap();
+
+        let table = fleet_replica_table(&r).render();
+        assert!(table.contains("R0"), "{table}");
+        assert!(table.contains("0.50x"), "{table}");
+        assert!(table.contains("ok"), "{table}");
+
+        let json = fleet_report_to_json(&r).to_string();
+        assert!(json.contains("\"router\""), "{json}");
+        assert!(json.contains("\"goodput_tps\""), "{json}");
+        assert!(json.contains("\"ledger_exact\":true"), "{json}");
+        assert!(json.contains("\"deadline_s\":null"), "{json}");
+        assert!(json.contains("\"replicas\":["), "{json}");
     }
 
     #[test]

@@ -30,7 +30,7 @@
 use super::pareto::pareto_front;
 use super::space::SearchSpace;
 use crate::chaos::FaultPlan;
-use crate::coordinator::ContinuousBatchSim;
+use crate::coordinator::{run_continuous, uniform_profile, ContinuousBatchSim};
 use crate::exec::{Engine, PlanCostModel};
 use crate::planner::Registry;
 use crate::routing::{DepthProfile, Scenario};
@@ -328,16 +328,19 @@ impl Tuner {
                     (8, 32),
                     &mut arrivals,
                 );
-                let mut sim = ContinuousBatchSim::with_planner(
-                    self.engine.clone(),
-                    planner,
-                    self.scenario.clone(),
+                // Trials run straight on the replica core (the same
+                // driver `ContinuousBatchSim::try_run` wraps), skipping
+                // the sim's owned engine/planner clones.
+                let profile = uniform_profile(&self.engine, self.scenario.clone());
+                match run_continuous(
+                    &self.engine,
+                    &*planner,
+                    &profile,
                     self.tokens_per_device,
-                );
-                if let Some(f) = &self.faults {
-                    sim = sim.with_faults(f.clone());
-                }
-                match sim.try_run(&requests, &mut Rng::new(self.seed.wrapping_add(1))) {
+                    self.faults.as_ref(),
+                    &requests,
+                    &mut Rng::new(self.seed.wrapping_add(1)),
+                ) {
                     Ok(r) => {
                         let latency_s = if r.tpot.n > 0 { r.tpot.p50 } else { r.ttft.p50 };
                         Ok(TrialMetrics {

@@ -1,0 +1,201 @@
+//! Fleet-level integration tests: bit-reproducibility of the cluster
+//! simulator, router-policy behaviour under heterogeneous replicas, the
+//! summed-ledger identity, and whole-replica failure recovery.
+
+use llep::config::{ModelConfig, ModelPreset, SystemConfig, SystemPreset};
+use llep::coordinator::TokenLedger;
+use llep::exec::Engine;
+use llep::fleet::{
+    FleetEvent, FleetFaultPlan, FleetReport, FleetSim, ReplicaConfig, RouterPolicy, Workload,
+};
+use llep::routing::Scenario;
+use llep::util::prop::{assert_property, no_shrink};
+use llep::util::rng::Rng;
+
+fn engine() -> Engine {
+    Engine::modeled(
+        ModelConfig::preset(ModelPreset::Fig1Layer),
+        SystemConfig::preset(SystemPreset::H200x8),
+    )
+}
+
+fn fleet(replicas: Vec<ReplicaConfig>, workload: &str) -> FleetSim {
+    FleetSim::new(engine(), Scenario::concentrated(0.8, 4), replicas, 16_384)
+        .with_workload(Workload::parse(workload).unwrap())
+}
+
+fn assert_bit_identical(a: &FleetReport, b: &FleetReport) -> Result<(), String> {
+    if a.makespan_s.to_bits() != b.makespan_s.to_bits() {
+        return Err(format!("makespan differs: {} vs {}", a.makespan_s, b.makespan_s));
+    }
+    if a.ttft.mean.to_bits() != b.ttft.mean.to_bits()
+        || a.tpot.mean.to_bits() != b.tpot.mean.to_bits()
+        || a.request_latency.p99.to_bits() != b.request_latency.p99.to_bits()
+    {
+        return Err("latency summaries differ".into());
+    }
+    if a.tokens != b.tokens {
+        return Err(format!("ledgers differ: {:?} vs {:?}", a.tokens, b.tokens));
+    }
+    for (i, (x, y)) in a.replicas.iter().zip(&b.replicas).enumerate() {
+        if x.steps != y.steps || x.routed != y.routed || x.tokens != y.tokens {
+            return Err(format!("replica {i} diverged"));
+        }
+    }
+    Ok(())
+}
+
+/// The fleet run is a pure function of (workload spec, replica configs,
+/// fault plan, seed): re-running produces bit-identical reports across
+/// seeds and router policies.
+#[test]
+fn fleet_run_is_bit_reproducible() {
+    const ROUTERS: [RouterPolicy; 3] =
+        [RouterPolicy::RoundRobin, RouterPolicy::LeastQueue, RouterPolicy::Pressure];
+    assert_property(
+        "fleet bit-reproducible",
+        0xF1EE7,
+        4,
+        |rng| (rng.index(10_000) as u64, rng.index(ROUTERS.len())),
+        |&(seed, router)| {
+            let sim = || {
+                fleet(
+                    vec![ReplicaConfig::default(); 2],
+                    "bursty:n=16,ia=0.0004,burst=4,every=8,prompt=128-512,decode=2-8",
+                )
+                .with_router(ROUTERS[router])
+            };
+            let a = sim().try_run(seed)?;
+            let b = sim().try_run(seed)?;
+            if a.completed != a.requests {
+                return Err(format!("lost requests: {}/{}", a.completed, a.requests));
+            }
+            assert_bit_identical(&a, &b)
+        },
+        no_shrink,
+    );
+}
+
+/// Satellite contract: under a bursty workload with one slow replica,
+/// queue-aware routing beats load-blind round-robin on p99 TTFT (the
+/// round-robin router keeps feeding the replica whose queue never
+/// drains).
+#[test]
+fn least_queue_beats_round_robin_on_p99_ttft_with_slow_replica() {
+    let replicas =
+        || vec![ReplicaConfig::default(), ReplicaConfig::default().with_speed(0.2)];
+    let wl = "bursty:n=32,ia=0.00005,burst=8,every=16,prompt=512-2048,decode=2-8";
+    let rr = fleet(replicas(), wl).with_router(RouterPolicy::RoundRobin).try_run(7).unwrap();
+    let lq = fleet(replicas(), wl).with_router(RouterPolicy::LeastQueue).try_run(7).unwrap();
+    assert_eq!(rr.completed, 32);
+    assert_eq!(lq.completed, 32);
+    assert!(
+        lq.ttft.p99 < rr.ttft.p99,
+        "least-queue p99 TTFT {} must beat round-robin {}",
+        lq.ttft.p99,
+        rr.ttft.p99
+    );
+    // The slow replica absorbs fewer requests under queue-aware routing.
+    assert!(
+        lq.replicas[1].routed < rr.replicas[1].routed,
+        "lq sent {} to the slow replica, rr sent {}",
+        lq.replicas[1].routed,
+        rr.replicas[1].routed
+    );
+}
+
+/// Satellite contract: the fleet ledger is exactly the sum of the
+/// per-replica ledgers, and every one of them is individually exact —
+/// including across a whole-replica failure's requeues.
+#[test]
+fn per_replica_ledgers_sum_to_fleet_ledger() {
+    let wl = Workload::parse("bursty:n=24,ia=0.0001,burst=12,every=12,prompt=256-1024,decode=2-6")
+        .unwrap();
+    let arrivals = wl.generate(&mut Rng::new(5));
+    // Kill replica 1 just after the first burst has fully arrived, so it
+    // is guaranteed to be holding routed work.
+    let kill_at = arrivals[11].arrival_s + 1e-6;
+    let sim = FleetSim::new(
+        engine(),
+        Scenario::concentrated(0.8, 4),
+        vec![ReplicaConfig::default(); 2],
+        16_384,
+    )
+    .with_workload(wl)
+    .with_faults(FleetFaultPlan { events: vec![FleetEvent::Fail { replica: 1, at_s: kill_at }] });
+    let r = sim.try_run(5).unwrap();
+
+    let mut sum = TokenLedger::default();
+    for p in &r.replicas {
+        assert!(p.tokens.is_exact(), "per-replica ledger: {:?}", p.tokens);
+        sum.absorb(&p.tokens);
+    }
+    assert_eq!(sum, r.tokens, "fleet ledger must be the sum of its replicas");
+    assert!(r.tokens.is_exact(), "{:?}", r.tokens);
+}
+
+/// Whole-replica failure as a chaos domain: every request still
+/// completes, each in-flight request requeues at most once, the summed
+/// ledger stays exact, and goodput survives.
+#[test]
+fn whole_replica_failure_recovers_with_bounded_requeues() {
+    let wl = Workload::parse("bursty:n=24,ia=0.0001,burst=12,every=12,prompt=256-1024,decode=2-6")
+        .unwrap();
+    let arrivals = wl.generate(&mut Rng::new(5));
+    let kill_at = arrivals[11].arrival_s + 1e-6;
+    let sim = FleetSim::new(
+        engine(),
+        Scenario::concentrated(0.8, 4),
+        vec![ReplicaConfig::default(); 2],
+        16_384,
+    )
+    .with_workload(wl)
+    .with_faults(FleetFaultPlan { events: vec![FleetEvent::Fail { replica: 1, at_s: kill_at }] });
+    let r = sim.try_run(5).unwrap();
+
+    assert_eq!(r.completed, r.requests, "no request may be lost to the failure");
+    assert_eq!(r.replica_failures, 1);
+    assert!(r.requeued_requests >= 1, "the dead replica was holding routed work");
+    assert!(r.max_requeues <= 1, "single failure: at most one requeue per request");
+    assert!(r.tokens.is_exact(), "{:?}", r.tokens);
+    assert!(r.goodput_tps > 0.0);
+    assert_eq!(r.replicas[0].completed, r.requests, "the survivor finished everything");
+}
+
+/// Replicas can run different planner policies side by side; the fleet
+/// still completes and accounts exactly.
+#[test]
+fn mixed_planner_fleet_completes() {
+    let replicas = vec![
+        ReplicaConfig::default().with_planner("llep"),
+        ReplicaConfig::default().with_planner("ep"),
+    ];
+    let r = fleet(replicas, "poisson:n=16,ia=0.0005,prompt=128-512,decode=2-6")
+        .with_router(RouterPolicy::Pressure)
+        .try_run(3)
+        .unwrap();
+    assert_eq!(r.completed, 16);
+    assert!(r.tokens.is_exact(), "{:?}", r.tokens);
+    assert!(r.replicas[0].planner.to_lowercase().contains("ll"), "{}", r.replicas[0].planner);
+    assert!(r.replicas[1].planner.to_lowercase().contains("ep"), "{}", r.replicas[1].planner);
+}
+
+/// The spec grammars used by `llep fleet` round-trip: workload, router
+/// and whole-replica fault plan all reconstruct from their canonical
+/// strings.
+#[test]
+fn fleet_cli_grammars_round_trip() {
+    for spec in [
+        "poisson:n=64,ia=0.0002,prompt=128-1024,decode=4-32",
+        "diurnal:amp=0.5,period=0.05,n=64,ia=0.0002,prompt=128-1024,decode=4-32",
+        "bursty:burst=8,every=16,n=64,ia=0.0002,prompt=128-1024,decode=4-32",
+    ] {
+        let w = Workload::parse(spec).unwrap();
+        assert_eq!(Workload::parse(&w.spec()).unwrap(), w, "{spec}");
+    }
+    for policy in [RouterPolicy::RoundRobin, RouterPolicy::LeastQueue, RouterPolicy::Pressure] {
+        assert_eq!(RouterPolicy::parse(policy.name()).unwrap(), policy);
+    }
+    let plan = FleetFaultPlan::parse("fail:r=1,at=0.001;recover:r=1,at=0.004").unwrap();
+    assert_eq!(FleetFaultPlan::parse(&plan.spec()).unwrap(), plan);
+}
