@@ -20,7 +20,19 @@ fn main() {
     let quick = quick_requested();
 
     // --- the pinned hotpath suite (skewed-scenario headline) ---------------
-    let _ = hotpath_suite(quick);
+    let suite = hotpath_suite(quick);
+
+    // The O(Δ) claim, checked rather than asserted in prose: repairing a
+    // drifted plan must cost well under half a fresh replan of the same
+    // loads. Both medians come from the suite just measured above.
+    let repair = suite.get("plan/cached-repair/drift/N=128/P=8").expect("repair case").median_ns;
+    let fresh =
+        suite.get("plan/drift-fresh-replan/drift/N=128/P=8").expect("fresh case").median_ns;
+    assert!(
+        repair < 0.5 * fresh,
+        "delta repair ({repair:.0} ns) is not <0.5x a fresh replan ({fresh:.0} ns)"
+    );
+    println!("repair/fresh ratio: {:.2}", repair / fresh);
 
     let mut b = if quick { Bencher::quick() } else { Bencher::new() };
 

@@ -9,6 +9,7 @@
 //! fail:dev=2,at=10                  permanent failure from step 10
 //! recover:dev=2,at=30               ... until recovery at step 30
 //! link:x=2,from=0                   halve both bandwidth tiers
+//! link:dev=5,x=4                    4x slower links touching device 5 only
 //! jitter:amp=0.2,seed=7             seeded per-(step, device) speed noise
 //! ```
 //!
@@ -48,8 +49,10 @@ pub enum FaultEvent {
     Fail { device: usize, at: usize },
     /// `device` rejoins the pool at step `at` (elastic scale-back-up).
     Recover { device: usize, at: usize },
-    /// Divide both link-bandwidth tiers by `factor` while active.
-    Link { factor: f64, from: usize, until: Option<usize> },
+    /// Divide link bandwidth by `factor` while active: both tiers
+    /// globally when `device` is `None`, or only transfers touching
+    /// `device` (a flaky NIC / downtrained PCIe lane) when given.
+    Link { device: Option<usize>, factor: f64, from: usize, until: Option<usize> },
     /// Multiply every device's speed by `1 + amp * U(-1, 1)` with noise
     /// drawn deterministically per (step, device) from `seed`.
     Jitter { amp: f64, seed: u64, from: usize, until: Option<usize> },
@@ -77,9 +80,10 @@ impl FaultEvent {
             }
             FaultEvent::Fail { device, at } => format!("fail:dev={device},at={at}"),
             FaultEvent::Recover { device, at } => format!("recover:dev={device},at={at}"),
-            FaultEvent::Link { factor, from, until } => {
-                format!("link:x={factor}{}", window(from, until))
-            }
+            FaultEvent::Link { device, factor, from, until } => match device {
+                Some(d) => format!("link:dev={d},x={factor}{}", window(from, until)),
+                None => format!("link:x={factor}{}", window(from, until)),
+            },
             FaultEvent::Jitter { amp, seed, from, until } => {
                 format!("jitter:amp={amp},seed={seed}{}", window(from, until))
             }
@@ -93,7 +97,8 @@ impl FaultEvent {
             | FaultEvent::Stall { device, .. }
             | FaultEvent::Fail { device, .. }
             | FaultEvent::Recover { device, .. } => Some(device),
-            FaultEvent::Link { .. } | FaultEvent::Jitter { .. } => None,
+            FaultEvent::Link { device, .. } => device,
+            FaultEvent::Jitter { .. } => None,
         }
     }
 }
@@ -219,9 +224,13 @@ impl FaultPlan {
                         fate[device] = Some((at, true));
                     }
                 }
-                FaultEvent::Link { factor, from, until } => {
+                FaultEvent::Link { device, factor, from, until } => {
                     if active(from, until) && factor > 0.0 {
-                        pool.link_factor *= factor;
+                        match device {
+                            Some(d) if d < n => pool.degrade_device_link(d, factor),
+                            Some(_) => {}
+                            None => pool.link_factor *= factor,
+                        }
                     }
                 }
                 FaultEvent::Jitter { amp, seed, from, until } => {
@@ -361,6 +370,7 @@ fn parse_event(part: &str) -> Result<FaultEvent, String> {
                 return Err(format!("link: x must be >= 1 (degradation factor), got {factor}"));
             }
             FaultEvent::Link {
+                device: p.take_usize("dev")?,
                 factor,
                 from: p.take_usize("from")?.unwrap_or(0),
                 until: p.take_usize("until")?,
@@ -393,9 +403,10 @@ mod tests {
     #[test]
     fn spec_round_trips() {
         let spec = "slow:dev=3,x=4,from=8,until=32;stall:dev=1,at=5,steps=3;\
-                    fail:dev=2,at=10;recover:dev=2,at=30;link:x=2;jitter:amp=0.2,seed=7";
+                    fail:dev=2,at=10;recover:dev=2,at=30;link:x=2;link:dev=1,x=4,until=9;\
+                    jitter:amp=0.2,seed=7";
         let plan = FaultPlan::parse(spec).unwrap();
-        assert_eq!(plan.events.len(), 6);
+        assert_eq!(plan.events.len(), 7);
         let canon = plan.spec();
         let plan2 = FaultPlan::parse(&canon).unwrap();
         assert_eq!(plan, plan2, "canonical spec must round-trip");
@@ -454,6 +465,25 @@ mod tests {
         let plan = FaultPlan::parse("link:x=2;link:x=3,from=4").unwrap();
         assert_eq!(plan.state_at(0, &base(2)).link_factor, 2.0);
         assert_eq!(plan.state_at(4, &base(2)).link_factor, 6.0);
+    }
+
+    #[test]
+    fn device_link_is_scoped_and_windowed() {
+        let plan = FaultPlan::parse("link:dev=1,x=4,from=2,until=5;link:x=2,from=3").unwrap();
+        let before = plan.state_at(1, &base(4));
+        assert!(!before.is_degraded());
+        let during = plan.state_at(2, &base(4));
+        assert_eq!(during.device_link_factor(1), 4.0);
+        assert_eq!(during.device_link_factor(0), 1.0, "only device 1's links");
+        assert_eq!(during.link_factor, 1.0, "global tier untouched");
+        let both = plan.state_at(3, &base(4));
+        assert_eq!(both.device_link_factor(1), 4.0);
+        assert_eq!(both.link_factor, 2.0, "global and device-scoped compose");
+        let after = plan.state_at(5, &base(4));
+        assert_eq!(after.device_link_factor(1), 1.0, "until is exclusive");
+        // Device-scoped links join the validation bound.
+        assert!(plan.validate(1).is_err(), "dev=1 needs at least 2 devices");
+        assert!(plan.validate(4).is_ok());
     }
 
     #[test]

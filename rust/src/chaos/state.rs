@@ -40,12 +40,22 @@ pub struct PoolState {
     pub devices: Vec<DeviceState>,
     /// >= 1.0; bandwidths are divided by this (1.0 = nominal).
     pub link_factor: f64,
+    /// Per-device link divisors (>= 1.0): a message's bandwidth is
+    /// divided by the worst divisor among its two endpoints, on top of
+    /// the global `link_factor`. Empty = every link nominal (the
+    /// fast-path representation — pricing stays bit-identical to the
+    /// pre-chaos code when nothing is injected).
+    pub device_link: Vec<f64>,
 }
 
 impl PoolState {
     /// All devices nominal and alive.
     pub fn healthy(devices: usize) -> PoolState {
-        PoolState { devices: vec![DeviceState::healthy(); devices], link_factor: 1.0 }
+        PoolState {
+            devices: vec![DeviceState::healthy(); devices],
+            link_factor: 1.0,
+            device_link: Vec::new(),
+        }
     }
 
     /// Heterogeneous but healthy pool (mixed-generation presets). An
@@ -58,7 +68,24 @@ impl PoolState {
         PoolState {
             devices: speeds.iter().map(|&s| DeviceState { speed: s, alive: true }).collect(),
             link_factor: 1.0,
+            device_link: Vec::new(),
         }
+    }
+
+    /// Compound a device-scoped link degradation (the `link:dev=` fault):
+    /// every transfer touching `device` is divided by `factor`.
+    pub fn degrade_device_link(&mut self, device: usize, factor: f64) {
+        if self.device_link.is_empty() {
+            self.device_link = vec![1.0; self.len()];
+        }
+        if device < self.device_link.len() {
+            self.device_link[device] *= factor;
+        }
+    }
+
+    /// The link divisor for one device (1.0 when nominal).
+    pub fn device_link_factor(&self, device: usize) -> f64 {
+        self.device_link.get(device).copied().unwrap_or(1.0)
     }
 
     pub fn len(&self) -> usize {
@@ -78,6 +105,7 @@ impl PoolState {
     /// bit-identical to the pre-chaos code when nothing is injected.
     pub fn is_degraded(&self) -> bool {
         self.link_factor != 1.0
+            || self.device_link.iter().any(|&f| f != 1.0)
             || self.devices.iter().any(|d| !d.alive || d.speed != 1.0)
     }
 
@@ -104,6 +132,10 @@ impl PoolState {
         }
         if self.link_factor != 1.0 {
             s.push_str(&format!(", link /{:.2}", self.link_factor));
+        }
+        let worst_dev_link = self.device_link.iter().copied().fold(1.0, f64::max);
+        if worst_dev_link != 1.0 {
+            s.push_str(&format!(", dev link /{worst_dev_link:.2}"));
         }
         s
     }
@@ -148,6 +180,20 @@ mod tests {
         assert!(p.label().contains("min speed 0.33"), "{}", p.label());
         // empty profile = homogeneous
         assert!(!PoolState::from_speeds(&[], 4).is_degraded());
+    }
+
+    #[test]
+    fn device_link_degrades_and_compounds() {
+        let mut p = PoolState::healthy(4);
+        assert_eq!(p.device_link_factor(2), 1.0, "nominal without allocation");
+        assert!(p.device_link.is_empty());
+        p.degrade_device_link(2, 2.0);
+        assert!(p.is_degraded());
+        assert_eq!(p.device_link_factor(2), 2.0);
+        assert_eq!(p.device_link_factor(0), 1.0, "other devices untouched");
+        p.degrade_device_link(2, 3.0);
+        assert_eq!(p.device_link_factor(2), 6.0, "factors compound");
+        assert!(p.label().contains("dev link /6.00"), "{}", p.label());
     }
 
     #[test]

@@ -535,6 +535,38 @@ mod tests {
         assert!(report.tokens.is_exact(), "{:?}", report.tokens);
     }
 
+    #[test]
+    fn repair_tier_counters_reconcile_in_serve_report() {
+        // A repair-tier planner under batch-to-batch drift (the drifting
+        // scenario re-draws its dominance per batch): a tight retarget
+        // threshold with the widest repair ceiling routes every drifted
+        // batch through the O(Δ) repair path, a periodic forced replan
+        // exercises the fourth counter, and the four-way split must
+        // account for every lookup exactly.
+        let mut rng = Rng::new(21);
+        let reqs = ServeSim::poisson_requests(16, 0.00005, 2048, 8192, &mut rng);
+        let cached = Box::new(
+            CachedPlanner::new(PlannerKind::llep_default().boxed())
+                .with_drift_threshold(0.001)
+                .with_repair_ceiling(2.0)
+                .with_replan_every(5),
+        );
+        let s =
+            ServeSim::with_planner(engine(), cached, Scenario::drifting(5, 0.6, 0.2), 8192);
+        let report = s.run(&reqs, &mut Rng::new(22));
+        assert_eq!(report.completed, 16);
+        let c = &report.plan_cache;
+        assert_eq!(
+            c.hits + c.repairs + c.misses + c.forced,
+            c.lookups(),
+            "counters must reconcile: {c:?}"
+        );
+        assert_eq!(c.lookups(), report.batches as u64);
+        assert!(c.repairs > 0, "drifted batches must take the repair path: {c:?}");
+        assert!(c.forced > 0, "replan_every must force fresh plans: {c:?}");
+        assert!(report.tokens.is_exact(), "{:?}", report.tokens);
+    }
+
     fn continuous(planner: PlannerKind) -> ContinuousBatchSim {
         ContinuousBatchSim::new(engine(), planner, Scenario::concentrated(0.8, 4), 16_384)
     }

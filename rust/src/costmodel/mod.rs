@@ -164,16 +164,35 @@ pub struct CommCostModel {
     /// collapses to a single launch per direction. Bandwidth terms are
     /// unchanged (the wire does not get faster).
     pub fused: bool,
+    /// Per-device link divisors (>= 1.0) from the chaos layer's
+    /// `link:dev=` fault: a message's bandwidth is divided by the worst
+    /// divisor among its two endpoints. Empty = nominal, which keeps the
+    /// integer accumulate-then-divide pricing path (and its exact f64
+    /// results) bit-identical to the pre-chaos code.
+    pub device_link: Vec<f64>,
 }
 
 impl CommCostModel {
     pub fn new(topo: Topology) -> CommCostModel {
-        CommCostModel { topo, fused: false }
+        CommCostModel { topo, fused: false, device_link: Vec::new() }
     }
 
     /// Enable fused (DeepEP-like) collective launch accounting.
     pub fn fused(topo: Topology) -> CommCostModel {
-        CommCostModel { topo, fused: true }
+        CommCostModel { topo, fused: true, device_link: Vec::new() }
+    }
+
+    /// Install per-device link divisors (empty = nominal links).
+    pub fn with_device_link(mut self, device_link: Vec<f64>) -> CommCostModel {
+        self.device_link = device_link;
+        self
+    }
+
+    /// Bandwidth stretch for a message between `a` and `b`: the worst
+    /// endpoint's link divisor (1.0 when nominal).
+    fn link_stretch(&self, a: usize, b: usize) -> f64 {
+        let f = |d: usize| self.device_link.get(d).copied().unwrap_or(1.0);
+        f(a).max(f(b))
     }
 
     /// Time of an All-to-All phase given the per-(src, dst) byte matrix.
@@ -192,6 +211,48 @@ impl CommCostModel {
         let p = self.topo.devices;
         times.clear();
         times.resize(p, 0.0);
+        if !self.device_link.is_empty() {
+            // Per-device link degradation: each message's bandwidth is
+            // divided by the worst endpoint's divisor, so bytes scale
+            // per message instead of accumulating per tier.
+            for (src, row) in bytes.iter().enumerate() {
+                debug_assert_eq!(row.len(), p);
+                let mut send_t = 0.0;
+                let mut recv_t = 0.0;
+                let mut msgs = 0u64;
+                for (dst, &b) in row.iter().enumerate() {
+                    if src == dst || b == 0 {
+                        continue;
+                    }
+                    msgs += 1;
+                    let bw = if self.topo.same_node(src, dst) {
+                        self.topo.intra_node_bw
+                    } else {
+                        self.topo.inter_node_bw
+                    };
+                    send_t += b as f64 * self.link_stretch(src, dst) / bw;
+                }
+                for (other_src, other_row) in bytes.iter().enumerate() {
+                    if other_src == src {
+                        continue;
+                    }
+                    let b = other_row[src];
+                    if b == 0 {
+                        continue;
+                    }
+                    msgs += 1;
+                    let bw = if self.topo.same_node(other_src, src) {
+                        self.topo.intra_node_bw
+                    } else {
+                        self.topo.inter_node_bw
+                    };
+                    recv_t += b as f64 * self.link_stretch(other_src, src) / bw;
+                }
+                let launches = if self.fused { (msgs > 0) as u64 * 2 } else { msgs };
+                times[src] = self.topo.latency_s * launches as f64 + send_t.max(recv_t);
+            }
+            return;
+        }
         for (src, row) in bytes.iter().enumerate() {
             debug_assert_eq!(row.len(), p);
             let mut sent_intra = 0u64;
@@ -234,9 +295,15 @@ impl CommCostModel {
         }
     }
 
-    /// Time for one P2P transfer.
+    /// Time for one P2P transfer. A per-device link divisor stretches
+    /// the bandwidth term only — launch latency is endpoint compute, not
+    /// wire time (matching [`Topology::degraded`]'s philosophy).
     pub fn p2p_time(&self, src: usize, dst: usize, bytes: u64) -> f64 {
-        self.topo.transfer_time(src, dst, bytes)
+        if self.device_link.is_empty() {
+            return self.topo.transfer_time(src, dst, bytes);
+        }
+        self.topo.latency_s
+            + bytes as f64 * self.link_stretch(src, dst) / self.topo.bandwidth(src, dst)
     }
 }
 
@@ -323,6 +390,39 @@ mod tests {
         let t0 = times[0];
         assert!(times.iter().all(|&t| (t - t0).abs() < 1e-12), "{times:?}");
         assert!(t0 > 0.0);
+    }
+
+    #[test]
+    fn device_link_stretches_only_touching_transfers() {
+        let topo = Topology::from_system(&sys());
+        let nominal = CommCostModel::new(topo.clone());
+        let mut dlink = vec![1.0; 8];
+        dlink[0] = 4.0;
+        let degraded = CommCostModel::new(topo).with_device_link(dlink);
+        let p = 8;
+        // Big messages so the phase is bandwidth-bound, not launch-bound.
+        let bytes = vec![vec![1u64 << 26; p]; p];
+        let tn = nominal.all_to_all_times(&bytes);
+        let td = degraded.all_to_all_times(&bytes);
+        // Device 0's phase stretches; a device exchanging with 0 pays
+        // only on that one message, so it stretches strictly less.
+        assert!(td[0] > tn[0] * 2.0, "{} vs {}", td[0], tn[0]);
+        assert!(td[1] > tn[1] && td[1] < td[0], "{} {} {}", tn[1], td[1], td[0]);
+        // P2P: only transfers touching device 0 stretch, and only the
+        // bandwidth term (latency is unchanged).
+        let b = 1u64 << 26;
+        assert!(degraded.p2p_time(0, 1, b) > nominal.p2p_time(0, 1, b) * 2.0);
+        assert_eq!(degraded.p2p_time(2, 3, b), nominal.p2p_time(2, 3, b));
+        let lat = degraded.topo.latency_s;
+        let stretched = degraded.p2p_time(0, 1, b) - lat;
+        let plain = nominal.p2p_time(0, 1, b) - lat;
+        assert!((stretched - plain * 4.0).abs() < 1e-12 * stretched.max(1.0));
+        // An all-1.0 profile prices exactly like the nominal path.
+        let unit = CommCostModel::new(nominal.topo.clone()).with_device_link(vec![1.0; 8]);
+        let tu = unit.all_to_all_times(&bytes);
+        for (a, b) in tu.iter().zip(tn.iter()) {
+            assert!((a - b).abs() < 1e-15 * b.abs().max(1.0), "{a} vs {b}");
+        }
     }
 
     #[test]

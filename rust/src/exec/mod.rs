@@ -132,13 +132,18 @@ pub struct PlanCostModel {
     /// Charged when a plan-cache hit retargeted a cached plan
     /// (the O(segments) path of [`crate::planner::retarget_plan`]).
     pub hit_s: f64,
+    /// Charged when the cache delta-repaired a retargeted plan (the
+    /// O(changed devices · log P) middle tier) — between a hit and a
+    /// fresh plan.
+    pub repair_s: f64,
 }
 
 impl Default for PlanCostModel {
     fn default() -> Self {
         // ~LLA wall time at N=128 experts vs the retarget path of a hit
-        // (both in the range measured by `cargo bench --bench decode_loop`).
-        PlanCostModel { fresh_s: 25e-6, hit_s: 2e-6 }
+        // (both in the range measured by `cargo bench --bench decode_loop`);
+        // repair sits in between (retarget + a partial re-spill).
+        PlanCostModel { fresh_s: 25e-6, hit_s: 2e-6, repair_s: 6e-6 }
     }
 }
 
@@ -200,7 +205,15 @@ impl Engine {
     pub fn with_pool(mut self, pool: PoolState) -> Engine {
         assert_eq!(pool.len(), self.system.devices, "pool must cover every device");
         let topo = Topology::from_system(&self.system).degraded(pool.link_factor);
-        self.comm = CommCostModel { topo: topo.clone(), fused: self.comm.fused };
+        // Per-device link divisors reach pricing only when one actually
+        // deviates — an all-nominal profile keeps the exact integer
+        // accumulation path (bit-identical to the pre-chaos code).
+        let device_link = if pool.device_link.iter().any(|&f| f != 1.0) {
+            pool.device_link.clone()
+        } else {
+            Vec::new()
+        };
+        self.comm = CommCostModel { topo: topo.clone(), fused: self.comm.fused, device_link };
         self.topo = topo;
         self.pool = pool;
         self
@@ -275,6 +288,7 @@ impl Engine {
             let plan = plan_once();
             let t = match planner.last_cache_outcome() {
                 Some(CacheOutcome::Hit) => cost.hit_s,
+                Some(CacheOutcome::Repaired) => cost.repair_s,
                 _ => cost.fresh_s,
             };
             (plan, t)

@@ -420,6 +420,33 @@ mod tests {
     }
 
     #[test]
+    fn device_scoped_link_fault_stretches_collectives() {
+        use crate::chaos::PoolState;
+        let e = engine();
+        let mut rng = Rng::new(33);
+        let lm = Scenario::concentrated(0.9, 1).generate_loads(&e.model, 8, 32_768, &mut rng);
+        let base = e.run_step_loads(&lm, &PlannerKind::llep_default());
+        // The hot expert lives on device 0, so spilled tokens cross its
+        // links: a device-0 link fault must slow dispatch/combine...
+        let mut pool = PoolState::healthy(8);
+        pool.degrade_device_link(0, 8.0);
+        let r = e.for_pool(pool).run_step_loads(&lm, &PlannerKind::llep_default());
+        assert!(
+            r.phases.dispatch_s > base.phases.dispatch_s,
+            "{} vs {}",
+            r.phases.dispatch_s,
+            base.phases.dispatch_s
+        );
+        assert_eq!(r.device_compute_s, base.device_compute_s, "compute untouched");
+        // ... and strictly less than degrading every link by the same
+        // factor (only transfers touching device 0 pay).
+        let mut global = PoolState::healthy(8);
+        global.link_factor = 8.0;
+        let g = e.for_pool(global).run_step_loads(&lm, &PlannerKind::llep_default());
+        assert!(r.phases.dispatch_s < g.phases.dispatch_s);
+    }
+
+    #[test]
     fn gemm_call_count_grows_with_spill() {
         let e = engine();
         let mut rng = Rng::new(5);

@@ -82,6 +82,41 @@ pub fn hotpath_suite(quick: bool) -> BenchSuite {
         k
     });
 
+    // --- delta repair vs. fresh replan under decode-style drift ---
+    // ~3% of total load oscillates off the hot expert: past the
+    // retarget threshold (drift ≈ 0.0625 > 0.05) but inside the repair
+    // ceiling, so every lookup takes the O(Δ) repair path. The fresh
+    // case plans the same alternating loads from scratch — the cost a
+    // drift miss would pay — and the pin holds repair well under it.
+    let drifted = {
+        let mut d = loads.clone();
+        let hot = (0..d.len()).max_by_key(|&e| d[e]).unwrap();
+        let moved = d.iter().sum::<u64>() / 32;
+        d[hot] -= moved;
+        d[(hot + 1) % d.len()] += moved;
+        d
+    };
+    let repairing =
+        CachedPlanner::new(PlannerKind::llep_default().boxed()).with_repair_ceiling(0.2);
+    let _ = repairing.plan(8, &loads, None); // prime: one miss
+    let mut flip = false;
+    b.bench("plan/cached-repair/drift/N=128/P=8", || {
+        flip = !flip;
+        let p = repairing.plan(8, if flip { &drifted } else { &loads }, None);
+        let k = p.transfers.len();
+        crate::planner::recycle_plan(p);
+        k
+    });
+    let mut flip = false;
+    b.bench("plan/drift-fresh-replan/drift/N=128/P=8", || {
+        flip = !flip;
+        let l = if flip { &drifted } else { &loads };
+        let p = plan_llep_scratch(&cfg, 128, 8, l, None, None, &mut scratch);
+        let k = p.transfers.len();
+        scratch.recycle(p);
+        k
+    });
+
     // --- pricing a fixed plan (canonical transfers, SoA folds) ---
     let plan = crate::planner::plan_llep(&cfg, 128, 8, &loads, None);
     b.bench("price/llep/skewed/N=128/P=8", || {
@@ -111,6 +146,8 @@ mod tests {
             "plan/llep/balanced/guard/N=128/P=8",
             "plan/lpt/skewed/scratch/N=128/P=8",
             "plan/cached-hit/skewed/N=128/P=8",
+            "plan/cached-repair/drift/N=128/P=8",
+            "plan/drift-fresh-replan/drift/N=128/P=8",
             "price/llep/skewed/N=128/P=8",
             "step/llep/skewed/N=128/P=8",
         ] {

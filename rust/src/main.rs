@@ -1154,6 +1154,17 @@ fn cmd_bench(args: &llep::util::cli::Args) -> Result<(), String> {
             for name in &cmp.missing {
                 println!("  {name:<42} MISSING from this run");
             }
+            // Cases measured this run but absent from the pin run
+            // un-gated — say so, so a stale pin is visible, not silent.
+            for r in &suite.results {
+                if pin.get(&r.name).is_none() {
+                    println!(
+                        "  {:<42} now {:>12}  NEW (not pinned — refresh the pin to gate it)",
+                        r.name,
+                        format_ns(r.median_ns)
+                    );
+                }
+            }
             if cmp.passes(tolerance) {
                 println!("bench pin ok: no case regressed beyond {:.0}%", tolerance * 100.0);
                 Ok(())
@@ -1206,6 +1217,7 @@ fn cmd_info() -> Result<(), String> {
     println!("  fail:dev=D,at=S                   permanent failure (until recover)");
     println!("  recover:dev=D,at=S                device D rejoins the pool");
     println!("  link:x=F[,from=S,until=S]         divide link bandwidths by F");
+    println!("  link:dev=D,x=F[,from=S,until=S]   ... only transfers touching device D");
     println!("  jitter:amp=A,seed=K[,from,until]  seeded per-(step,device) speed noise");
     println!("\nplanners (--planner <spec>; examples are canonical registry specs):");
     for e in Registry::builtin().entries() {
@@ -1221,7 +1233,7 @@ fn cmd_info() -> Result<(), String> {
         "  {:<8} {:<55} e.g. {}",
         "cached",
         "cross-step plan-reuse decorator (wraps any spec)",
-        "cached(ep):drift=0.05,every=0,q=1024"
+        "cached(ep):drift=0.05,every=0,q=1024,repair=0.15"
     );
     print_artifacts_info();
     Ok(())

@@ -132,16 +132,20 @@ pub fn report_to_json(r: &StepReport) -> Json {
         ("tokens", Json::num(r.tokens as f64)),
         ("throughput_tps", Json::num(r.throughput())),
         ("cache_hits", Json::num(r.cache.hits as f64)),
+        ("cache_repairs", Json::num(r.cache.repairs as f64)),
         ("cache_misses", Json::num(r.cache.misses as f64)),
         ("cache_forced", Json::num(r.cache.forced as f64)),
     ])
 }
 
-/// Format plan-cache counters as `hits/lookups (rate)`, or `-` when the
+/// Format plan-cache counters as `hits/lookups (rate)` — with a `+Nr`
+/// repair term when the delta-repair tier fired — or `-` when the
 /// planner has no cache.
 pub fn format_cache(c: &CacheStats) -> String {
     if c.lookups() == 0 {
         "-".into()
+    } else if c.repairs > 0 {
+        format!("{}+{}r/{} ({:.0}%)", c.hits, c.repairs, c.lookups(), c.hit_rate() * 100.0)
     } else {
         format!("{}/{} ({:.0}%)", c.hits, c.lookups(), c.hit_rate() * 100.0)
     }
@@ -402,6 +406,7 @@ pub fn model_report_to_json(r: &ModelStepReport) -> Json {
         ("stranded", Json::Bool(r.stranded)),
         ("fallback_layers", Json::num(r.fallback_layers as f64)),
         ("cache_hits", Json::num(r.cache.hits as f64)),
+        ("cache_repairs", Json::num(r.cache.repairs as f64)),
         ("cache_misses", Json::num(r.cache.misses as f64)),
         ("cache_forced", Json::num(r.cache.forced as f64)),
         ("cache_hit_rate", Json::num(r.cache.hit_rate())),
@@ -581,8 +586,10 @@ mod tests {
     #[test]
     fn cache_formatting() {
         assert_eq!(format_cache(&CacheStats::default()), "-");
-        let c = CacheStats { hits: 3, misses: 1, forced: 0 };
+        let c = CacheStats { hits: 3, repairs: 0, misses: 1, forced: 0 };
         assert_eq!(format_cache(&c), "3/4 (75%)");
+        let r = CacheStats { hits: 3, repairs: 2, misses: 1, forced: 0 };
+        assert_eq!(format_cache(&r), "3+2r/6 (83%)");
     }
 
     #[test]

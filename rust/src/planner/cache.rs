@@ -29,6 +29,28 @@
 //! ≥ any preset's layer count); layers with genuinely similar routing may
 //! share an entry, which is just more reuse.
 //!
+//! ## Repair tier
+//!
+//! Past the retarget threshold the cache used to be all-or-nothing: any
+//! larger drift paid a full fresh replan. With a repair ceiling
+//! (`repair=` > `drift=`), drift in the middle band takes the **delta
+//! repair** path instead: the cached plan is retargeted as usual, then
+//! only the devices whose load ended up over the inner planner's
+//! capacity threshold get their excess peeled off (stale spill targets
+//! first, forced segments never) and re-spilled through the same LLAS
+//! least-loaded machinery — seeded with the surviving devices' loads —
+//! so the work is O(changed devices · log P), not a full
+//! O(E·log E + S·log P) replan. The repaired plan obeys the same
+//! capacity bound a fresh plan does (every device ≤ the inner planner's
+//! `m_alpha`, forced overflow excepted — property-tested in
+//! `tests/plan_reuse.rs`), the entry is re-anchored on the repaired
+//! plan so the next drift is measured from it, and `replan_every`
+//! bounds repair→repair chains with a periodic forced fresh plan.
+//! Repair needs the inner planner's capacity model
+//! ([`Planner::repair_params`]); inner planners without one fall back
+//! to a fresh plan past the threshold exactly as before. Dead-device
+//! pools never reach this tier — they stay forced-fresh.
+//!
 //! ## Degraded pools
 //!
 //! A quantized per-device speed fingerprint ([`pool_signature_into`])
@@ -46,11 +68,13 @@
 //! path allocation-free (asserted by the counting-allocator test in
 //! `scratch.rs`).
 
-use super::scratch::with_thread_scratch;
-use super::{Planner, RoutePlan, Segment, WeightTransfer};
+use super::lla::{merge_adjacent, spill};
+use super::scratch::{with_thread_scratch, PlanScratch};
+use super::{Planner, RepairParams, RoutePlan, Segment, WeightTransfer};
 use crate::chaos::PoolState;
 use crate::topology::Topology;
 use std::cell::RefCell;
+use std::cmp::Reverse;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
@@ -69,18 +93,26 @@ static NEXT_CACHE_ID: AtomicUsize = AtomicUsize::new(0);
 pub enum CacheOutcome {
     /// Signature matched: the cached plan was retargeted and reused.
     Hit,
-    /// No cached plan within the drift threshold: planned fresh.
+    /// Signature drift landed between the retarget threshold and the
+    /// repair ceiling: the cached plan was retargeted, then only the
+    /// overloaded devices' excess was peeled and re-spilled (the delta
+    /// repair tier).
+    Repaired,
+    /// No cached plan within the reuse ceiling: planned fresh.
     Miss,
     /// Signature matched but the `replan_every` policy forced a fresh
     /// plan (periodic refresh against slow drift).
     Forced,
 }
 
-/// Hit/miss/forced-replan counters; zero everywhere for uncached
+/// Hit/repair/miss/forced-replan counters; zero everywhere for uncached
 /// planners. Aggregated per step, per model step, and per serving run.
+/// By construction `hits + repairs + misses + forced == lookups()`.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CacheStats {
     pub hits: u64,
+    /// Middle-tier lookups: retargeted *and* delta-repaired.
+    pub repairs: u64,
     pub misses: u64,
     pub forced: u64,
 }
@@ -96,6 +128,7 @@ impl CacheStats {
     pub fn record(&mut self, outcome: CacheOutcome) {
         match outcome {
             CacheOutcome::Hit => self.hits += 1,
+            CacheOutcome::Repaired => self.repairs += 1,
             CacheOutcome::Miss => self.misses += 1,
             CacheOutcome::Forced => self.forced += 1,
         }
@@ -103,21 +136,23 @@ impl CacheStats {
 
     pub fn absorb(&mut self, other: &CacheStats) {
         self.hits += other.hits;
+        self.repairs += other.repairs;
         self.misses += other.misses;
         self.forced += other.forced;
     }
 
     /// Total lookups observed.
     pub fn lookups(&self) -> u64 {
-        self.hits + self.misses + self.forced
+        self.hits + self.repairs + self.misses + self.forced
     }
 
-    /// Fraction of lookups that reused a plan (0.0 when no lookups).
+    /// Fraction of lookups that reused a plan — retargeted or repaired
+    /// (0.0 when no lookups).
     pub fn hit_rate(&self) -> f64 {
         if self.lookups() == 0 {
             0.0
         } else {
-            self.hits as f64 / self.lookups() as f64
+            (self.hits + self.repairs) as f64 / self.lookups() as f64
         }
     }
 }
@@ -265,6 +300,178 @@ fn retarget_plan_into(
     out
 }
 
+/// Rebalance a retargeted plan in place: peel the excess off every
+/// device the drift pushed over the inner planner's capacity threshold
+/// and re-spill just that excess through the LLAS least-loaded
+/// machinery, seeded with the surviving devices' loads. Stale spill
+/// targets (foreign segments) are peeled before native ones, forced
+/// segments never — they encode legitimate overflow (min-GEMM locality,
+/// LLAS force-assignment). O(E + S + changed devices · log P) instead
+/// of a fresh O(E·log E + S·log P) replan, and allocation-free in
+/// steady state: every working buffer lives in `scratch`.
+fn repair_excess(
+    plan: &mut RoutePlan,
+    loads: &[u64],
+    rp: RepairParams,
+    topo: Option<&Topology>,
+    pool: Option<&PoolState>,
+    scratch: &mut PlanScratch,
+) {
+    let devices = plan.devices;
+    let m_per_dev = plan.num_experts / devices;
+    let total: u64 = loads.iter().sum();
+    if total == 0 {
+        return;
+    }
+
+    // Same capacity model as `plan_llep_scratch`: the paper's scalar
+    // `alpha * total / P` on homogeneous pools, the speed-proportional
+    // split of the same `alpha * total` budget under a pool view.
+    let m_alpha = rp.alpha * total as f64 / devices as f64;
+    scratch.caps.clear();
+    if let Some(p) = pool {
+        let sum: f64 = p.devices.iter().map(|d| d.effective_speed()).sum();
+        let denom = sum.max(f64::MIN_POSITIVE);
+        scratch.caps.extend(
+            p.devices.iter().map(|d| rp.alpha * total as f64 * d.effective_speed() / denom),
+        );
+    }
+
+    // Current per-device load of the retargeted plan, and each device's
+    // excess over capacity. `g_p` stays zero — there is no pending
+    // native load during repair, `g_a` alone seeds the spill ordering.
+    scratch.prepare_devices(devices);
+    for segs in plan.assignments.iter() {
+        for seg in segs.iter() {
+            scratch.g_a[seg.device] += seg.len();
+        }
+    }
+    scratch.over.clear();
+    let mut any_over = false;
+    for d in 0..devices {
+        let cap = if scratch.caps.is_empty() { m_alpha } else { scratch.caps[d] };
+        let over = scratch.g_a[d].saturating_sub(cap.max(0.0).floor() as u64);
+        any_over |= over > 0;
+        scratch.over.push(over);
+    }
+    if !any_over {
+        return; // within capacity everywhere — the retarget was enough
+    }
+
+    // Peel candidates: non-forced segments on overloaded devices, stale
+    // spill targets (foreign segments) before native residents, largest
+    // first. `over` turns into "still to peel" as takes are assigned.
+    scratch.peel.clear();
+    for (e, segs) in plan.assignments.iter().enumerate() {
+        for (i, seg) in segs.iter().enumerate() {
+            if !seg.forced && scratch.over[seg.device] > 0 {
+                let native = (seg.device == e / m_per_dev) as u8;
+                scratch.peel.push((seg.device, native, seg.len(), e, i));
+            }
+        }
+    }
+    scratch.peel.sort_unstable_by_key(|&(d, nat, len, e, i)| (d, nat, Reverse(len), e, i));
+    scratch.takes.clear();
+    for k in 0..scratch.peel.len() {
+        let (d, _, len, e, i) = scratch.peel[k];
+        let take = scratch.over[d].min(len);
+        if take == 0 {
+            continue;
+        }
+        scratch.over[d] -= take;
+        scratch.g_a[d] -= take;
+        scratch.takes.push((e, i, take));
+    }
+    if scratch.takes.is_empty() {
+        return; // every overflow is forced (legitimate) — nothing to peel
+    }
+    scratch.takes.sort_unstable();
+
+    // Apply the takes expert by expert: compact the surviving segments
+    // onto fresh offsets, then refill the native device up to capacity
+    // and spill the rest least-loaded-first — the fresh planner's
+    // placement rules, restricted to the peeled tokens.
+    let PlanScratch { g_p, g_a, seen, caps, spill: heaps, takes, .. } = scratch;
+    let cap_of = |d: usize| if caps.is_empty() { m_alpha } else { caps[d] };
+    let mut t = 0usize;
+    while t < takes.len() {
+        let e = takes[t].0;
+        let ng = e / m_per_dev;
+        let segs = &mut plan.assignments[e];
+        let mut removed = 0u64;
+        let mut cursor = 0u64;
+        let mut w = 0usize;
+        for i in 0..segs.len() {
+            let mut seg = segs[i];
+            let take = if t < takes.len() && takes[t].0 == e && takes[t].1 == i {
+                let k = takes[t].2;
+                t += 1;
+                k
+            } else {
+                0
+            };
+            removed += take;
+            let len = seg.len() - take;
+            if len == 0 {
+                continue;
+            }
+            seg.start = cursor;
+            seg.end = cursor + len;
+            cursor += len;
+            segs[w] = seg;
+            w += 1;
+        }
+        segs.truncate(w);
+        let native_dead = pool.is_some_and(|p| p.devices[ng].effective_speed() <= 0.0);
+        if !native_dead {
+            let spare = (cap_of(ng) - g_a[ng] as f64).floor() as i64;
+            if spare > 0 {
+                let c = (spare as u64).min(removed);
+                segs.push(Segment { device: ng, start: cursor, end: cursor + c, forced: false });
+                g_a[ng] += c;
+                cursor += c;
+                removed -= c;
+            }
+        }
+        if removed > 0 {
+            spill(
+                ng,
+                removed,
+                cursor,
+                segs,
+                g_a,
+                g_p,
+                &cap_of,
+                rp.min_gemm_tokens,
+                topo,
+                pool,
+                heaps,
+            );
+        }
+        merge_adjacent(segs);
+    }
+
+    // Segments moved: regenerate the transfer list (the `seen` marks are
+    // zeroed above and reset per expert; the vector keeps its capacity).
+    plan.transfers.clear();
+    for (e, segs) in plan.assignments.iter().enumerate() {
+        let ng = e / m_per_dev;
+        for s in segs.iter() {
+            if s.device != ng && !seen[s.device] {
+                seen[s.device] = true;
+                plan.transfers.push(WeightTransfer { expert: e, from: ng, to: s.device });
+            }
+        }
+        for s in segs.iter() {
+            seen[s.device] = false;
+        }
+    }
+    plan.canonicalize_transfers();
+    // Whatever guard shape the cached plan had, the repaired plan is a
+    // least-loaded assignment again.
+    plan.fallback_ep = false;
+}
+
 struct CacheEntry {
     devices: usize,
     sig: Vec<u64>,
@@ -305,6 +512,10 @@ pub struct CachedPlanner {
     /// Reuse when the signature drift (share units, `0..=2`) is at most
     /// this much.
     pub drift_threshold: f64,
+    /// Delta-repair drift in `(drift_threshold, repair_ceiling]` instead
+    /// of replanning fresh (0 = disabled, the default). Only effective
+    /// when the inner planner publishes [`Planner::repair_params`].
+    pub repair_ceiling: f64,
     /// Share quantization buckets for the signature.
     pub quant: u64,
     /// Force a fresh plan after this many consecutive reuses of one
@@ -321,6 +532,7 @@ impl CachedPlanner {
             inner,
             id: NEXT_CACHE_ID.fetch_add(1, Ordering::Relaxed),
             drift_threshold: 0.05,
+            repair_ceiling: 0.0,
             quant: 1024,
             replan_every: 0,
             capacity: 64,
@@ -331,6 +543,16 @@ impl CachedPlanner {
     pub fn with_drift_threshold(mut self, t: f64) -> CachedPlanner {
         self.drift_threshold = t;
         self
+    }
+
+    pub fn with_repair_ceiling(mut self, t: f64) -> CachedPlanner {
+        self.repair_ceiling = t;
+        self
+    }
+
+    /// Largest drift any reuse tier (retarget or repair) accepts.
+    fn reuse_ceiling(&self) -> f64 {
+        self.drift_threshold.max(self.repair_ceiling)
     }
 
     pub fn with_quant(mut self, quant: u64) -> CachedPlanner {
@@ -429,12 +651,22 @@ impl CachedPlanner {
             load_signature_into(loads, self.quant, &mut st.sig);
             pool_signature_into(pool, &mut st.pool_sig);
             match closest(&st.entries, devices, &st.sig, &st.pool_sig, self.quant) {
-                Some((i, drift)) if drift <= self.drift_threshold => {
+                Some((i, drift)) if drift <= self.reuse_ceiling() => {
                     // Forced refresh only after the entry has already
                     // served `replan_every` reuses (so N=1 still allows
-                    // one reuse per fresh plan).
+                    // one reuse per fresh plan). Repairs count as reuses,
+                    // so repair→repair chains are periodically reset and
+                    // repair error cannot accumulate unboundedly.
                     let force = self.replan_every > 0 && st.entries[i].reuses >= self.replan_every;
-                    if !force {
+                    // The repair tier needs the inner planner's capacity
+                    // model; without one, past-threshold drift plans
+                    // fresh exactly as before.
+                    let repair = (drift > self.drift_threshold)
+                        .then(|| self.inner.repair_params())
+                        .flatten();
+                    if force {
+                        outcome = CacheOutcome::Forced;
+                    } else if drift <= self.drift_threshold {
                         let shell = with_thread_scratch(|s| s.take_plan(loads.len(), devices));
                         let en = &mut st.entries[i];
                         en.reuses += 1;
@@ -450,8 +682,46 @@ impl CachedPlanner {
                         drop(guard);
                         self.set_last_outcome(CacheOutcome::Hit);
                         return plan;
+                    } else if let Some(rp) = repair {
+                        // Delta repair: retarget, then rebalance only the
+                        // devices the drift pushed over capacity. One
+                        // scratch closure end to end — the arena leaves
+                        // its thread-local slot for the duration, so a
+                        // nested `with_thread_scratch` would see a fresh
+                        // arena and allocate.
+                        let CacheState { entries, retarget, sig, stats, .. } = st;
+                        let en = &mut entries[i];
+                        en.reuses += 1;
+                        en.last_used = clock;
+                        let plan = with_thread_scratch(|s| {
+                            let shell = s.take_plan(loads.len(), devices);
+                            let mut plan =
+                                retarget_plan_into(&en.plan, &en.loads, loads, shell, retarget);
+                            repair_excess(&mut plan, loads, rp, topo, pool, s);
+                            plan
+                        });
+                        // Re-anchor the entry on the repaired plan and
+                        // the loads it was repaired for: the next
+                        // lookup's drift is measured from the latest
+                        // repair, not the long-gone fresh plan.
+                        // Field-wise so `Vec::clone_from` reuses the
+                        // entry's buffers (the derived whole-struct
+                        // `clone_from` would allocate a full clone).
+                        en.plan.num_experts = plan.num_experts;
+                        en.plan.devices = plan.devices;
+                        en.plan.assignments.clone_from(&plan.assignments);
+                        en.plan.transfers.clone_from(&plan.transfers);
+                        en.plan.fallback_ep = plan.fallback_ep;
+                        en.loads.clear();
+                        en.loads.extend_from_slice(loads);
+                        en.sig.clone_from(sig);
+                        stats.record(CacheOutcome::Repaired);
+                        drop(guard);
+                        self.set_last_outcome(CacheOutcome::Repaired);
+                        return plan;
+                    } else {
+                        outcome = CacheOutcome::Miss;
                     }
-                    outcome = CacheOutcome::Forced;
                 }
                 _ => outcome = CacheOutcome::Miss,
             }
@@ -469,8 +739,11 @@ impl CachedPlanner {
         let clock = st.clock;
         load_signature_into(loads, self.quant, &mut st.sig);
         pool_signature_into(pool, &mut st.pool_sig);
+        // Refresh any entry within the reuse ceiling (not just the
+        // retarget threshold): a fresh plan born of repair-band drift
+        // replaces the drifted entry instead of duplicating it.
         let slot = closest(&st.entries, devices, &st.sig, &st.pool_sig, self.quant)
-            .and_then(|(i, drift)| (drift <= self.drift_threshold).then_some(i));
+            .and_then(|(i, drift)| (drift <= self.reuse_ceiling()).then_some(i));
         match slot {
             Some(i) => {
                 let en = &mut st.entries[i];
@@ -565,11 +838,12 @@ impl Planner for CachedPlanner {
 
     fn spec(&self) -> String {
         format!(
-            "cached({}):drift={},every={},q={}",
+            "cached({}):drift={},every={},q={},repair={}",
             self.inner.spec(),
             self.drift_threshold,
             self.replan_every,
-            self.quant
+            self.quant,
+            self.repair_ceiling
         )
     }
 
@@ -623,7 +897,7 @@ mod tests {
         a.sort_by_key(|t| (t.expert, t.from, t.to));
         b.sort_by_key(|t| (t.expert, t.from, t.to));
         assert_eq!(a, b);
-        assert_eq!(c.stats(), CacheStats { hits: 1, misses: 1, forced: 0 });
+        assert_eq!(c.stats(), CacheStats { hits: 1, repairs: 0, misses: 1, forced: 0 });
     }
 
     #[test]
@@ -663,7 +937,7 @@ mod tests {
         }
         // miss, 3 hits, forced, 3 hits, forced: an entry serves exactly
         // `replan_every` reuses before the next lookup replans fresh.
-        assert_eq!(c.stats(), CacheStats { hits: 6, misses: 1, forced: 2 });
+        assert_eq!(c.stats(), CacheStats { hits: 6, repairs: 0, misses: 1, forced: 2 });
         assert_eq!(c.last_cache_outcome(), Some(CacheOutcome::Forced));
     }
 
@@ -676,7 +950,7 @@ mod tests {
             let _ = c.plan(4, &loads, None);
         }
         // miss, hit, forced, hit, forced
-        assert_eq!(c.stats(), CacheStats { hits: 2, misses: 1, forced: 2 });
+        assert_eq!(c.stats(), CacheStats { hits: 2, repairs: 0, misses: 1, forced: 2 });
     }
 
     #[test]
@@ -750,7 +1024,7 @@ mod tests {
         other.devices[1].speed = 0.25;
         let _ = c.plan_with_pool(4, &loads, &loads, None, Some(&other));
         assert_eq!(c.last_cache_outcome(), Some(CacheOutcome::Miss));
-        assert_eq!(c.stats(), CacheStats { hits: 1, misses: 3, forced: 0 });
+        assert_eq!(c.stats(), CacheStats { hits: 1, repairs: 0, misses: 3, forced: 0 });
     }
 
     #[test]
@@ -766,7 +1040,7 @@ mod tests {
             validate_plan(&p, &loads).unwrap();
             assert_eq!(p.device_loads()[2], 0, "nothing on the dead device");
         }
-        assert_eq!(c.stats(), CacheStats { hits: 0, misses: 0, forced: 3 });
+        assert_eq!(c.stats(), CacheStats { hits: 0, repairs: 0, misses: 0, forced: 3 });
     }
 
     #[test]
@@ -794,5 +1068,91 @@ mod tests {
         assert_eq!(signature_drift(&sig, &sig, 1000), 0.0);
         let moved = load_signature(&[250, 750], 1000);
         assert!((signature_drift(&sig, &moved, 1000) - 1.0).abs() < 1e-12);
+    }
+
+    /// LLEP inner with a small min-GEMM floor so repairs actually spill,
+    /// wrapped with a repair ceiling: drift in (0.05, 0.15] repairs.
+    fn llep_repairing() -> CachedPlanner {
+        use crate::config::LlepConfig;
+        use crate::planner::Llep;
+        let cfg = LlepConfig { alpha: 1.0, min_gemm_tokens: 16, lambda: 1.3 };
+        CachedPlanner::new(Box::new(Llep::new(cfg))).with_repair_ceiling(0.15)
+    }
+
+    // Moving 400 of 10_000 tokens from expert 0 to expert 3 is an L1
+    // share drift of 0.08 — past the 0.05 retarget threshold, under the
+    // 0.15 repair ceiling.
+    const A: [u64; 8] = [5_000, 1_000, 1_000, 1_000, 500, 500, 500, 500];
+    const B: [u64; 8] = [4_600, 1_000, 1_000, 1_400, 500, 500, 500, 500];
+
+    #[test]
+    fn repair_tier_repairs_between_thresholds_and_reanchors() {
+        let c = llep_repairing();
+        let _ = c.plan(4, &A, None);
+        assert_eq!(c.last_cache_outcome(), Some(CacheOutcome::Miss));
+        let repaired = c.plan(4, &B, None);
+        assert_eq!(c.last_cache_outcome(), Some(CacheOutcome::Repaired));
+        validate_plan(&repaired, &B).unwrap();
+        // Repair restores the fresh planner's capacity bound: no device
+        // above `alpha * total / P` beyond the min-GEMM slack forced
+        // remainders may keep local.
+        let cap = 10_000 / 4;
+        let max = repaired.device_loads().into_iter().max().unwrap();
+        assert!(max <= cap + 16, "repaired max {max} > capacity {cap} + min-GEMM slack");
+        // The entry was re-anchored on the repaired plan: replaying the
+        // same loads is now a plain retarget hit, not another repair.
+        let again = c.plan(4, &B, None);
+        assert_eq!(c.last_cache_outcome(), Some(CacheOutcome::Hit));
+        validate_plan(&again, &B).unwrap();
+        assert_eq!(c.stats(), CacheStats { hits: 1, repairs: 1, misses: 1, forced: 0 });
+    }
+
+    #[test]
+    fn drift_beyond_repair_ceiling_still_misses() {
+        // 1_000 of 10_000 tokens moved = 0.2 drift > the 0.15 ceiling.
+        let far = vec![4_000u64, 1_000, 1_000, 2_000, 500, 500, 500, 500];
+        let c = llep_repairing();
+        let _ = c.plan(4, &A, None);
+        let p = c.plan(4, &far, None);
+        assert_eq!(c.last_cache_outcome(), Some(CacheOutcome::Miss));
+        validate_plan(&p, &far).unwrap();
+        assert_eq!(c.stats(), CacheStats { hits: 0, repairs: 0, misses: 2, forced: 0 });
+    }
+
+    #[test]
+    fn repair_disabled_by_default() {
+        // Same drift, no `repair=`: past-threshold lookups plan fresh,
+        // bit-for-bit the pre-repair behavior.
+        let c = llep_cached();
+        let _ = c.plan(4, &A, None);
+        let _ = c.plan(4, &B, None);
+        assert_eq!(c.last_cache_outcome(), Some(CacheOutcome::Miss));
+        assert_eq!(c.stats(), CacheStats { hits: 0, repairs: 0, misses: 2, forced: 0 });
+    }
+
+    #[test]
+    fn repair_needs_the_inner_capacity_model() {
+        // Standard EP publishes no `repair_params`; the ceiling alone
+        // must not invent a capacity to repair against.
+        let c = CachedPlanner::new(PlannerKind::StandardEp.boxed()).with_repair_ceiling(0.15);
+        let _ = c.plan(4, &A, None);
+        let _ = c.plan(4, &B, None);
+        assert_eq!(c.last_cache_outcome(), Some(CacheOutcome::Miss));
+        assert_eq!(c.stats(), CacheStats { hits: 0, repairs: 0, misses: 2, forced: 0 });
+    }
+
+    #[test]
+    fn repairs_count_as_reuses_for_replan_every() {
+        // miss, repair, repair, forced: the periodic fresh plan bounds
+        // repair→repair chains so repair error cannot accumulate.
+        let c = llep_repairing().with_replan_every(2);
+        let _ = c.plan(4, &A, None);
+        let _ = c.plan(4, &B, None);
+        assert_eq!(c.last_cache_outcome(), Some(CacheOutcome::Repaired));
+        let _ = c.plan(4, &A, None);
+        assert_eq!(c.last_cache_outcome(), Some(CacheOutcome::Repaired));
+        let _ = c.plan(4, &B, None);
+        assert_eq!(c.last_cache_outcome(), Some(CacheOutcome::Forced));
+        assert_eq!(c.stats(), CacheStats { hits: 0, repairs: 2, misses: 1, forced: 1 });
     }
 }

@@ -24,7 +24,7 @@
 //! against a reference reimplementation in `rust/tests/hotpath.rs`.
 
 use super::scratch::{with_thread_scratch, NormCand, PlanScratch, SpillHeaps};
-use super::{plan_ep_scratch, Planner, RoutePlan, Segment, WeightTransfer};
+use super::{plan_ep_scratch, Planner, RepairParams, RoutePlan, Segment, WeightTransfer};
 use crate::chaos::PoolState;
 use crate::config::LlepConfig;
 use crate::routing::imbalance_ratio;
@@ -117,6 +117,13 @@ impl Planner for Llep {
             "llep:alpha={},m={},lambda={}",
             self.cfg.alpha, self.cfg.min_gemm_tokens, self.cfg.lambda
         )
+    }
+
+    fn repair_params(&self) -> Option<RepairParams> {
+        Some(RepairParams {
+            alpha: self.cfg.alpha,
+            min_gemm_tokens: self.cfg.min_gemm_tokens as u64,
+        })
     }
 }
 
@@ -293,8 +300,12 @@ pub fn plan_llep_scratch(
 /// back unchanged (their loads did not move) and the accepted device is
 /// re-keyed — so the pop order of the next iteration matches a full
 /// re-sort, while costing `O(log P)` per chunk.
+///
+/// `pub(crate)` so the plan cache's delta-repair tier (`cache.rs`) can
+/// re-spill a repaired plan's excess through the exact same machinery,
+/// seeded with the surviving devices' loads.
 #[allow(clippy::too_many_arguments)]
-fn spill(
+pub(crate) fn spill(
     ng: usize,
     r: u64,
     to: u64,
@@ -497,7 +508,7 @@ fn spill_heap_f(
 /// Segments are constructed in ascending token order (native first,
 /// spills at increasing offsets), so no sort is needed — asserted in
 /// debug builds.
-fn merge_adjacent(segs: &mut Vec<Segment>) {
+pub(crate) fn merge_adjacent(segs: &mut Vec<Segment>) {
     debug_assert!(segs.windows(2).all(|w| w[0].start <= w[1].start));
     let mut w = 0usize;
     for i in 0..segs.len() {

@@ -173,6 +173,19 @@ impl RoutePlan {
     }
 }
 
+/// The capacity model a planner exposes so the plan cache's delta-repair
+/// tier ([`CachedPlanner`]) can rebalance a retargeted plan under the
+/// same bound a fresh plan would obey: per-device capacity
+/// `alpha * total / P` (speed-proportional under a degraded pool) and
+/// the min-GEMM chunk floor below which spilling is unprofitable.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RepairParams {
+    /// Capacity slack factor (the planner's `alpha`).
+    pub alpha: f64,
+    /// Minimum profitable spill chunk in tokens (`m` in the paper).
+    pub min_gemm_tokens: u64,
+}
+
 /// An object-safe routing planner: turns per-expert loads into a
 /// [`RoutePlan`]. Everything engine-side dispatches through
 /// `&dyn Planner`; implementations are registered in [`registry`] so CLI
@@ -253,6 +266,14 @@ pub trait Planner: Send + Sync {
     /// *current thread* (cache decorators only; `None` for pure
     /// planners).
     fn last_cache_outcome(&self) -> Option<CacheOutcome> {
+        None
+    }
+
+    /// Capacity model for the plan cache's delta-repair tier. `None`
+    /// (the default) means the planner has no spill-capacity semantics
+    /// to repair against, so [`CachedPlanner`] falls back to a fresh
+    /// plan past the retarget threshold.
+    fn repair_params(&self) -> Option<RepairParams> {
         None
     }
 }
@@ -381,6 +402,13 @@ impl Planner for PlannerKind {
     fn chunk_tokens(&self) -> Option<u64> {
         match self {
             PlannerKind::ChunkedEp { chunk_tokens } => Some((*chunk_tokens).max(1) as u64),
+            _ => None,
+        }
+    }
+
+    fn repair_params(&self) -> Option<RepairParams> {
+        match self {
+            PlannerKind::Llep(cfg) => Llep::new(*cfg).repair_params(),
             _ => None,
         }
     }

@@ -2,7 +2,7 @@
 //! strings.
 //!
 //! Grammar: `name[:key=value,key=value,...]`, plus the decorator form
-//! `cached(<inner spec>)[:drift=F,every=N,q=Q]`. Examples:
+//! `cached(<inner spec>)[:drift=F,every=N,q=Q,repair=F]`. Examples:
 //!
 //! ```text
 //! ep
@@ -119,6 +119,7 @@ impl ParamSpec {
 pub const CACHED_PARAMS: &[ParamSpec] = &[
     ParamSpec { key: "drift", grid: &[0.02, 0.05, 0.15], integer: false },
     ParamSpec { key: "every", grid: &[0.0, 32.0], integer: true },
+    ParamSpec { key: "repair", grid: &[0.0, 0.15], integer: false },
 ];
 
 /// One registered planner constructor.
@@ -254,6 +255,9 @@ impl Registry {
             if let Some(v) = params.take_u64("q")? {
                 cp = cp.with_quant(v);
             }
+            if let Some(v) = params.take_f64("repair")? {
+                cp = cp.with_repair_ceiling(v);
+            }
             params.finish("cached")?;
             return Ok(Box::new(cp));
         }
@@ -339,6 +343,11 @@ mod tests {
         // bare decorator, defaults only
         let bare = parse_planner("cached(ep)").unwrap();
         assert_eq!(bare.label(), "Cached[EP]");
+        // repair ceiling round-trips through the canonical spec
+        let r = parse_planner("cached(llep):repair=0.15").unwrap();
+        assert!(r.spec().contains("repair=0.15"), "spec {:?}", r.spec());
+        let r2 = parse_planner(&r.spec()).unwrap();
+        assert_eq!(r2.spec(), r.spec());
     }
 
     #[test]

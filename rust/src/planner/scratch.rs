@@ -85,6 +85,14 @@ pub struct PlanScratch {
     /// Speed-proportional per-device capacities (empty = homogeneous).
     pub(crate) caps: Vec<f64>,
     pub(crate) spill: SpillHeaps,
+    /// Delta-repair: tokens over capacity per device.
+    pub(crate) over: Vec<u64>,
+    /// Delta-repair peel candidates:
+    /// `(device, native-flag, seg len, expert, seg index)` — sorted so
+    /// stale spill targets shed foreign segments first, largest first.
+    pub(crate) peel: Vec<(usize, u8, u64, usize, usize)>,
+    /// Delta-repair accepted peels: `(expert, seg index, tokens taken)`.
+    pub(crate) takes: Vec<(usize, usize, u64)>,
     /// Retired plans whose assignment/transfer vectors get reused.
     plans: Vec<RoutePlan>,
     /// Spare per-expert segment vectors (kept when shapes shrink).
@@ -273,5 +281,36 @@ mod tests {
         }
         let after = crate::util::alloc_count::allocations_on_this_thread();
         assert_eq!(after - before, 0, "steady-state cache hits must not allocate");
+    }
+
+    #[test]
+    fn steady_state_cached_repair_allocates_nothing() {
+        use crate::planner::{CacheOutcome, CachedPlanner, Llep};
+        // Drift between the retarget threshold and the repair ceiling on
+        // every step: alternate two load vectors whose hot expert sheds
+        // ~5% of total to a neighbour, so each lookup takes the
+        // delta-repair path (asserted below), never the fresh-plan path.
+        let cfg = LlepConfig { alpha: 1.0, min_gemm_tokens: 16, lambda: 1.3 };
+        let cached = CachedPlanner::new(Box::new(Llep::new(cfg))).with_repair_ceiling(0.2);
+        let mut a = vec![64u64; 128];
+        a[0] = 30_000;
+        let mut b = a.clone();
+        b[0] = 28_000;
+        b[1] = 2_064;
+        // Miss once, then warm both alternating shapes' buffers.
+        recycle_plan(cached.plan(8, &a, None));
+        for i in 0..6 {
+            let loads = if i % 2 == 0 { &b } else { &a };
+            recycle_plan(cached.plan(8, loads, None));
+            assert_eq!(cached.last_cache_outcome(), Some(CacheOutcome::Repaired));
+        }
+        let before = crate::util::alloc_count::allocations_on_this_thread();
+        for i in 0..50 {
+            let loads = if i % 2 == 0 { &b } else { &a };
+            recycle_plan(cached.plan(8, loads, None));
+        }
+        let after = crate::util::alloc_count::allocations_on_this_thread();
+        assert_eq!(after - before, 0, "steady-state repairs must not allocate");
+        assert_eq!(cached.last_cache_outcome(), Some(CacheOutcome::Repaired));
     }
 }

@@ -201,6 +201,66 @@ fn prop_drifted_reuse_never_balances_better_than_replanning() {
 }
 
 #[test]
+fn prop_repair_tier_restores_capacity_on_drift() {
+    // The O(Δ) repair contract, point-checked across random drifted
+    // draws: moving a few percent of total load off the hot expert puts
+    // the drift inside the repair band, so the second lookup must take
+    // the Repaired path; the repaired plan validates against the new
+    // loads; and — whenever the repair needed no forced placements and
+    // no EP fallback — it restores the LLA capacity bound and is never
+    // worse-balanced than the stale retarget it started from.
+    let cfg = LlepConfig { alpha: 1.0, min_gemm_tokens: 64, lambda: 1.0 };
+    assert_property(
+        "repair tier restores capacity on drift",
+        0xD017,
+        120,
+        |rng| {
+            let old = gen_loads(rng);
+            let total: u64 = old.iter().sum();
+            let hot = (0..old.len()).max_by_key(|&e| old[e]).unwrap();
+            // 3–5% of total mass: drift ≈ 0.06–0.09, inside (0.05, 0.2].
+            let moved = (total / 32 + rng.below(total / 64 + 1)).min(old[hot]);
+            let dst = 4 + rng.index(124);
+            let mut new = old.clone();
+            new[hot] -= moved;
+            new[dst] += moved;
+            (old, new)
+        },
+        |(old, new)| {
+            let cached = CachedPlanner::new(Box::new(Llep::new(cfg))).with_repair_ceiling(0.2);
+            let first = cached.plan(8, old, None);
+            let stale = retarget_plan(&first, old, new);
+            let repaired = cached.plan(8, new, None);
+            match cached.last_cache_outcome() {
+                Some(llep::planner::CacheOutcome::Repaired) => {}
+                // A hot expert too light to absorb the move can leave the
+                // drift under the retarget threshold — nothing to repair.
+                Some(llep::planner::CacheOutcome::Hit) => return Ok(()),
+                o => return Err(format!("expected a repair, got {o:?}")),
+            }
+            validate_plan(&repaired, new).map_err(|e| format!("repaired plan invalid: {e}"))?;
+            let forced = repaired.assignments.iter().flatten().any(|s| s.forced);
+            if repaired.fallback_ep || forced {
+                return Ok(());
+            }
+            let total: u64 = new.iter().sum();
+            let cap =
+                (cfg.alpha * total as f64 / 8.0).floor() as u64 + cfg.min_gemm_tokens as u64;
+            let rmax = *repaired.device_loads().iter().max().unwrap();
+            if rmax > cap {
+                return Err(format!("repaired max {rmax} exceeds capacity {cap}"));
+            }
+            let smax = *stale.device_loads().iter().max().unwrap();
+            if rmax > smax {
+                return Err(format!("repair made balance worse: {rmax} > {smax}"));
+            }
+            Ok(())
+        },
+        no_shrink,
+    );
+}
+
+#[test]
 fn moved_hotspot_prices_stale_reuse_strictly_worse() {
     // Structural drift: the hot expert moves across the machine. The
     // stale plan keeps splitting the *old* hot expert and leaves the new
