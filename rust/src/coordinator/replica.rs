@@ -24,6 +24,7 @@ use crate::chaos::{FaultPlan, PoolState};
 use crate::exec::{Engine, ModelStepReport};
 use crate::planner::{CacheStats, Planner};
 use crate::routing::{DepthProfile, Scenario};
+use crate::trace::{ArgValue, COORD_TID};
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
 use std::collections::VecDeque;
@@ -159,15 +160,30 @@ impl<'a> ChaosDriver<'a> {
                 pool.label()
             ));
         }
+        let tracer = &engine.tracer;
         let prev = if step == 0 { self.base.clone() } else { plan.state_at(step - 1, &self.base) };
         let newly_dead = (0..pool.len())
             .filter(|&d| prev.devices[d].alive && !pool.devices[d].alive)
             .count();
-        self.stats.recoveries += (0..pool.len())
+        let recovered = (0..pool.len())
             .filter(|&d| !prev.devices[d].alive && pool.devices[d].alive)
             .count();
+        self.stats.recoveries += recovered;
+        if recovered > 0 && tracer.is_enabled() {
+            tracer.instant_process(
+                "device-recovery",
+                "chaos",
+                *clock,
+                &[
+                    ("recovered", ArgValue::Num(recovered as f64)),
+                    ("pool", ArgValue::Text(pool.label())),
+                ],
+            );
+            tracer.count("chaos/recoveries", recovered as u64);
+        }
         if newly_dead > 0 {
             self.stats.failures += newly_dead;
+            tracer.count("chaos/failures", newly_dead as u64);
             // The step in flight at the failure was planned against the
             // previous pool; its work is lost and the batch requeues. A
             // failure already active at step 0 has no in-flight work to
@@ -184,16 +200,52 @@ impl<'a> ChaosDriver<'a> {
                     _ => engine,
                 };
                 let attempt = price_step(attempt_engine, profile, planner, batch_tokens, rng);
-                *clock += attempt.latency_s;
-                self.stats.wasted_s += attempt.latency_s;
+                let wasted_s = attempt.latency_s;
+                *clock += wasted_s;
+                self.stats.wasted_s += wasted_s;
                 self.stats.requeues += 1;
                 self.stats.requeued_tokens += batch_tokens as u64;
                 self.pending_aborts += 1;
                 recycle_report_plans(attempt);
+                if tracer.is_enabled() {
+                    tracer.instant_process(
+                        "abort-requeue",
+                        "chaos",
+                        *clock,
+                        &[
+                            ("requeued_tokens", ArgValue::Num(batch_tokens as f64)),
+                            ("wasted_s", ArgValue::Num(wasted_s)),
+                        ],
+                    );
+                    tracer.count("chaos/requeues", 1);
+                    tracer.count("chaos/requeued_tokens", batch_tokens as u64);
+                }
+            }
+            if tracer.is_enabled() {
+                tracer.instant_process(
+                    "device-failure",
+                    "chaos",
+                    *clock,
+                    &[
+                        ("newly_dead", ArgValue::Num(newly_dead as f64)),
+                        ("pool", ArgValue::Text(pool.label())),
+                    ],
+                );
             }
         }
         if pool.is_degraded() {
             self.stats.fault_steps += 1;
+            if tracer.is_enabled() {
+                // Track-spanning marker: this step prices under a
+                // degraded pool (the fault window, one instant per step).
+                tracer.instant_process(
+                    "fault-window",
+                    "chaos",
+                    *clock,
+                    &[("pool", ArgValue::Text(pool.label()))],
+                );
+                tracer.count("chaos/fault_steps", 1);
+            }
             let reusable = matches!(&self.view, Some((p, _)) if *p == pool);
             if !reusable {
                 let view_engine = engine.for_pool(pool.clone());
@@ -507,6 +559,29 @@ impl<'a> Replica<'a> {
         let profile = self.profile;
         let planner = self.planner;
         let clock_before = self.clock;
+        let tracer = &engine.tracer;
+        if tracer.is_enabled() {
+            // Anchor engine emission (including a chaos-aborted attempt)
+            // at this step's virtual start time.
+            tracer.set_time_base(clock_before);
+            for req in &admitted {
+                tracer.instant(
+                    COORD_TID,
+                    "admit",
+                    "serve",
+                    clock_before,
+                    &[
+                        ("id", ArgValue::Num(req.id as f64)),
+                        ("prompt_tokens", ArgValue::Num(req.prompt_tokens as f64)),
+                    ],
+                );
+            }
+            let depth = self.waiting.len() + self.active.len() + admitted.len();
+            tracer.counter("queue depth", clock_before, depth as f64);
+            tracer.observe("replica/queue_depth", depth as f64);
+            tracer.count("serve/admitted_tokens", prefill_tokens as u64);
+            tracer.count("serve/decode_tokens", decode_tokens as u64);
+        }
         // chaos: resolve this step's pool view; a fresh failure aborts +
         // requeues the in-flight attempt first
         self.chaos.begin_step(
@@ -518,6 +593,8 @@ impl<'a> Replica<'a> {
             rng,
             &mut self.clock,
         )?;
+        // the successful attempt starts after any chaos waste
+        tracer.set_time_base(self.clock);
         // price a full-model step over the exact token total
         let report =
             price_step(self.chaos.engine(engine), profile, planner, step_tokens, rng);
@@ -561,6 +638,45 @@ impl<'a> Replica<'a> {
                 true
             }
         });
+        if tracer.is_enabled() {
+            let now = self.clock;
+            // coordinator-track summary span over the successful attempt
+            // (chaos waste, if any, precedes it on the same track)
+            tracer.span(
+                COORD_TID,
+                "serve-step",
+                "serve",
+                now - events.latency_s,
+                events.latency_s,
+                &[
+                    ("prefill_tokens", ArgValue::Num(prefill_tokens as f64)),
+                    ("decode_tokens", ArgValue::Num(decode_tokens as f64)),
+                ],
+            );
+            for &(id, _arrival) in &events.prefilled {
+                tracer.instant(
+                    COORD_TID,
+                    "prefill-done",
+                    "serve",
+                    now,
+                    &[("id", ArgValue::Num(id as f64))],
+                );
+            }
+            for &(id, arrival) in &events.finished {
+                tracer.instant(
+                    COORD_TID,
+                    "request-finished",
+                    "serve",
+                    now,
+                    &[
+                        ("id", ArgValue::Num(id as f64)),
+                        ("latency_s", ArgValue::Num(now - arrival)),
+                    ],
+                );
+            }
+            tracer.count("serve/prefills", events.prefilled.len() as u64);
+            tracer.count("serve/finished", events.finished.len() as u64);
+        }
         Ok(ReplicaStepOutcome::Stepped(events))
     }
 }

@@ -172,6 +172,12 @@ pub struct Engine {
     /// compute time by effective speed; a healthy pool takes the exact
     /// pre-chaos code paths (bit-identical pricing).
     pub pool: PoolState,
+    /// Execution-timeline recorder ([`crate::trace`]). Disabled by
+    /// default — every emission site is a branch-and-return costing zero
+    /// heap allocations (counting-allocator asserted in `trace::tests`).
+    /// Clones and [`for_pool`](Self::for_pool) views share the enabled
+    /// sink, so per-step chaos views record into the same timeline.
+    pub tracer: crate::trace::Tracer,
 }
 
 impl Engine {
@@ -193,7 +199,16 @@ impl Engine {
             topo,
             overlap_weights: false,
             plan_cost: None,
+            tracer: crate::trace::Tracer::disabled(),
         }
+    }
+
+    /// Install an execution-timeline tracer (see [`crate::trace`]).
+    /// Typically an [`enabled`](crate::trace::Tracer::enabled) handle
+    /// re-tagged with a per-planner / per-replica pid.
+    pub fn with_tracer(mut self, tracer: crate::trace::Tracer) -> Engine {
+        self.tracer = tracer;
+        self
     }
 
     /// Install a pool view (chaos layer): the per-device speeds/liveness
@@ -258,10 +273,127 @@ impl Engine {
         planner: &dyn Planner,
     ) -> StepReport {
         let (report, plan) = self.plan_and_price(lm, stats_lm, planner);
+        self.trace_step(self.tracer.time_base(), None, &report, &plan);
         // Single-step callers never see the plan: hand its buffers back
         // to this thread's planning arena (zero-alloc steady state).
         crate::planner::scratch::recycle_plan(plan);
         report
+    }
+
+    /// Emit one priced step onto the execution timeline (a no-op branch
+    /// when the tracer is disabled). Events are placed at offsets from
+    /// `start_s` on the virtual clock; `layer` labels multi-layer model
+    /// steps. Emission is post-hoc from the priced report — the virtual
+    /// clock means recording cost can never distort the timeline.
+    pub(crate) fn trace_step(
+        &self,
+        start_s: f64,
+        layer: Option<usize>,
+        report: &StepReport,
+        plan: &crate::planner::RoutePlan,
+    ) {
+        use crate::trace::{device_tid, ArgValue, FlowPoint, COORD_TID};
+        let t = &self.tracer;
+        if !t.is_enabled() {
+            return;
+        }
+        let p = &report.phases;
+        let layer_n = layer.unwrap_or(0) as f64;
+        let plan_end = start_s + p.meta_s + p.plan_s;
+        t.span(
+            COORD_TID,
+            "plan",
+            "plan",
+            start_s,
+            p.meta_s + p.plan_s,
+            &[
+                ("layer", ArgValue::Num(layer_n)),
+                ("plan_s", ArgValue::Num(p.plan_s)),
+                ("weights_s", ArgValue::Num(p.weights_s)),
+                ("tokens", ArgValue::Num(report.tokens as f64)),
+            ],
+        );
+        // Plan provenance: which cache tier produced this step's plan
+        // (all-zero CacheStats means a cacheless planner → fresh).
+        let c = &report.cache;
+        let outcome = if c.hits > 0 {
+            "plan-cache-hit"
+        } else if c.repairs > 0 {
+            "plan-cache-repair"
+        } else if c.forced > 0 {
+            "plan-forced-replan"
+        } else if c.misses > 0 {
+            "plan-cache-miss"
+        } else {
+            "plan-fresh"
+        };
+        t.instant(
+            COORD_TID,
+            outcome,
+            "plan",
+            plan_end,
+            &[
+                ("hits", ArgValue::Num(c.hits as f64)),
+                ("repairs", ArgValue::Num(c.repairs as f64)),
+                ("misses", ArgValue::Num(c.misses as f64)),
+                ("forced", ArgValue::Num(c.forced as f64)),
+                ("fallback_ep", ArgValue::Num(report.fallback_ep as u8 as f64)),
+            ],
+        );
+        // Device tracks: the dispatch/combine collectives are barriers
+        // (same span on every device); compute is each device's own
+        // Eq.-3 time — the spans whose max-vs-mean spread *is* the
+        // straggler bubble. Combine starts at the compute barrier
+        // (phases.compute_s folds weight-landing in, see PhaseTimes).
+        let dispatch_end = plan_end + p.dispatch_s;
+        let combine_start = start_s + report.latency_s - p.combine_s;
+        for (d, &c_s) in report.device_compute_s.iter().enumerate() {
+            if p.dispatch_s > 0.0 {
+                t.span(device_tid(d), "dispatch", "a2a", plan_end, p.dispatch_s, &[]);
+            }
+            if c_s > 0.0 {
+                t.span(
+                    device_tid(d),
+                    "compute",
+                    "compute",
+                    dispatch_end,
+                    c_s,
+                    &[("layer", ArgValue::Num(layer_n))],
+                );
+            }
+            if p.combine_s > 0.0 {
+                t.span(device_tid(d), "combine", "a2a", combine_start, p.combine_s, &[]);
+            }
+        }
+        // Weight rebalancing as flow arrows: source device at plan end →
+        // destination device at its compute start. EP never has these.
+        let pid = t.pid();
+        for tr in &plan.transfers {
+            t.flow(
+                "weights",
+                "xfer",
+                FlowPoint { pid, tid: device_tid(tr.from), ts_s: plan_end },
+                FlowPoint { pid, tid: device_tid(tr.to), ts_s: dispatch_end },
+                &[("expert", ArgValue::Num(tr.expert as f64))],
+            );
+        }
+        // Metrics registry (dumped alongside the trace).
+        t.count("engine/steps", 1);
+        t.count(outcome, 1);
+        t.count("engine/weight_transfers", report.weight_transfers as u64);
+        if report.oom {
+            t.count("engine/oom_steps", 1);
+        }
+        if report.stranded {
+            t.count("engine/stranded_steps", 1);
+        }
+        if report.fallback_ep {
+            t.count("engine/fallback_ep_steps", 1);
+        }
+        t.observe("step/imbalance_ratio", report.compute_imbalance());
+        t.observe("step/plan_s", p.plan_s);
+        t.observe("step/latency_s", report.latency_s);
+        t.counter("imbalance ratio", combine_start, report.compute_imbalance());
     }
 
     /// Shared plan-measure-price block behind every modeled step (single-

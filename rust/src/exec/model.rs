@@ -180,6 +180,27 @@ impl Engine {
             prev_exec = exec_span;
         }
 
+        // Timeline emission: replay the fold above to place each layer on
+        // the virtual clock. A layer's events anchor at its *execution*
+        // start; its plan span is drawn ending there, which draws hidden
+        // (pipelined) planning overlapping the previous layer's execution
+        // — exactly the overlap the fold credits.
+        if self.tracer.is_enabled() {
+            let base = self.tracer.time_base();
+            let mut cursor = 0.0;
+            let mut prev_exec = 0.0;
+            for (i, layer) in layers.iter().enumerate() {
+                let plan_span = layer.plan_span_s();
+                let exec_span = layer.exec_span_s();
+                let visible_plan =
+                    if i == 0 { plan_span } else { (plan_span - prev_exec).max(0.0) };
+                let exec_start = cursor + visible_plan;
+                self.trace_step(base + exec_start - plan_span, Some(i), &layer.report, &layer.plan);
+                cursor = exec_start + exec_span;
+                prev_exec = exec_span;
+            }
+        }
+
         let devices = self.system.devices;
         let mut device_peak_bytes = vec![0u64; devices];
         for layer in &layers {

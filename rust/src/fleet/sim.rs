@@ -306,7 +306,7 @@ impl FleetSim {
         } else {
             self.engine.clone().with_plan_cost(PlanCostModel::default())
         };
-        let engines: Vec<Engine> = self
+        let mut engines: Vec<Engine> = self
             .replicas
             .iter()
             .map(|cfg| {
@@ -326,6 +326,28 @@ impl FleetSim {
             .iter()
             .map(|cfg| registry.parse(&cfg.planner_spec))
             .collect::<Result<_, _>>()?;
+        // Trace layout: the frontend (workload + router) records under
+        // the template tracer's pid; replica i becomes process i+1, so a
+        // fleet trace shows every replica as its own track group with
+        // router decisions flowing from the frontend into them.
+        let tracer = template.tracer.clone();
+        if tracer.is_enabled() {
+            tracer.name_process("frontend / router");
+            tracer.name_thread(crate::trace::COORD_TID, "workload");
+            for (i, engine) in engines.iter_mut().enumerate() {
+                let t = tracer.with_pid(i as u32 + 1);
+                crate::trace::name_engine_tracks(
+                    &t,
+                    &format!(
+                        "replica {i} ({}, {:.2}x)",
+                        planners[i].label(),
+                        self.replicas[i].speed
+                    ),
+                    engine.system.devices,
+                );
+                engine.tracer = t;
+            }
+        }
         let profile = uniform_profile(&template, self.scenario.clone());
         let mut reps: Vec<Replica> = Vec::with_capacity(n);
         for i in 0..n {
@@ -427,6 +449,38 @@ impl FleetSim {
                     if !reps[t].has_work() {
                         reps[t].advance_to(req.arrival_s);
                     }
+                    if tracer.is_enabled() {
+                        use crate::trace::{ArgValue, FlowPoint, COORD_TID};
+                        tracer.instant(
+                            COORD_TID,
+                            "arrival",
+                            "router",
+                            req.arrival_s,
+                            &[
+                                ("id", ArgValue::Num(req.id as f64)),
+                                ("prompt_tokens", ArgValue::Num(req.prompt_tokens as f64)),
+                            ],
+                        );
+                        tracer.flow(
+                            "route",
+                            "router",
+                            FlowPoint {
+                                pid: tracer.pid(),
+                                tid: COORD_TID,
+                                ts_s: req.arrival_s,
+                            },
+                            FlowPoint {
+                                pid: t as u32 + 1,
+                                tid: COORD_TID,
+                                ts_s: req.arrival_s,
+                            },
+                            &[
+                                ("id", ArgValue::Num(req.id as f64)),
+                                ("replica", ArgValue::Num(t as f64)),
+                            ],
+                        );
+                        tracer.count("router/arrivals", 1);
+                    }
                     reps[t].submit(ReplicaRequest {
                         id: req.id,
                         arrival_s: req.arrival_s,
@@ -442,6 +496,16 @@ impl FleetSim {
                             if alive[r] {
                                 alive[r] = false;
                                 replica_failures += 1;
+                                if tracer.is_enabled() {
+                                    use crate::trace::ArgValue;
+                                    tracer.with_pid(r as u32 + 1).instant_process(
+                                        "replica-fail",
+                                        "fleet",
+                                        at_s,
+                                        &[("replica", ArgValue::Num(r as f64))],
+                                    );
+                                    tracer.count("fleet/replica_failures", 1);
+                                }
                                 // drain the dead replica's queue back
                                 // through the router to the survivors
                                 for req in reps[r].drain() {
@@ -465,6 +529,25 @@ impl FleetSim {
                                     if !reps[t].has_work() {
                                         reps[t].advance_to(at_s);
                                     }
+                                    if tracer.is_enabled() {
+                                        use crate::trace::{ArgValue, FlowPoint, COORD_TID};
+                                        tracer.flow(
+                                            "requeue",
+                                            "fleet",
+                                            FlowPoint {
+                                                pid: r as u32 + 1,
+                                                tid: COORD_TID,
+                                                ts_s: at_s,
+                                            },
+                                            FlowPoint {
+                                                pid: t as u32 + 1,
+                                                tid: COORD_TID,
+                                                ts_s: at_s,
+                                            },
+                                            &[("id", ArgValue::Num(req.id as f64))],
+                                        );
+                                        tracer.count("fleet/requeues", 1);
+                                    }
                                     reps[t].submit(req);
                                     routed[t] += 1;
                                 }
@@ -474,6 +557,16 @@ impl FleetSim {
                             if !alive[r] {
                                 alive[r] = true;
                                 replica_recoveries += 1;
+                                if tracer.is_enabled() {
+                                    use crate::trace::ArgValue;
+                                    tracer.with_pid(r as u32 + 1).instant_process(
+                                        "replica-recover",
+                                        "fleet",
+                                        at_s,
+                                        &[("replica", ArgValue::Num(r as f64))],
+                                    );
+                                    tracer.count("fleet/replica_recoveries", 1);
+                                }
                                 reps[r].advance_to(at_s);
                             }
                         }

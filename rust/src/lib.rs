@@ -60,6 +60,7 @@ pub mod routing;
 pub mod runtime;
 pub mod tensor;
 pub mod topology;
+pub mod trace;
 #[cfg(feature = "pjrt")]
 pub mod trainer;
 pub mod tune;
@@ -86,6 +87,7 @@ pub mod prelude {
     };
     pub use crate::routing::{DepthProfile, Routing, Scenario};
     pub use crate::topology::Topology;
+    pub use crate::trace::Tracer;
     pub use crate::tune::{HardwareProfile, SearchSpace, SpaceBudget, Strategy, Tuner};
     pub use crate::util::rng::Rng;
 }

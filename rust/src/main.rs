@@ -53,10 +53,11 @@ use llep::fleet::{FleetFaultPlan, FleetSim, ReplicaConfig, RouterPolicy, Workloa
 use llep::metrics::{
     chaos_stats_to_json, fleet_replica_table, fleet_report_to_json, format_bytes, format_cache,
     format_chaos, format_secs, model_report_table, tune_front_table, tune_report_to_json,
-    tune_trials_table, Table,
+    tune_trials_table, Table, SCHEMA_VERSION,
 };
 use llep::planner::{CachedPlanner, Planner, PlannerKind, Registry};
 use llep::routing::{DepthProfile, RoutingTrace, Scenario};
+use llep::trace::{name_engine_tracks, Tracer};
 use llep::tune::{HardwareProfile, Mode, SearchSpace, SpaceBudget, Strategy, Tuner};
 use llep::util::cli::Spec;
 use llep::util::json::Json;
@@ -68,7 +69,11 @@ fn main() {
         .opt("fig", "figure id (1a 1b 1c 3 4 5 6a 6b 7a 7b 8 9 all)")
         .opt("config", "experiment TOML file")
         .opt("out", "output path")
-        .opt("trace", "trace JSON path")
+        .opt(
+            "trace",
+            "replay: routing-trace input; run/serve/chaos/fleet: write a Chrome trace \
+             timeline (Perfetto) to this path",
+        )
         .opt("steps", "training steps / serve requests")
         .opt("batches", "trace batches")
         .opt("devices", "EP world size")
@@ -324,6 +329,48 @@ fn planners_from_args(
     Ok(wrapped)
 }
 
+/// An enabled [`Tracer`] when the simulation subcommands got
+/// `--trace <out.json>`, else the zero-overhead disabled handle.
+/// (`replay` reads `--trace` itself as its routing-trace input and never
+/// calls this.)
+fn tracer_from_args(args: &llep::util::cli::Args) -> Tracer {
+    if args.get("trace").is_some() {
+        Tracer::enabled()
+    } else {
+        Tracer::disabled()
+    }
+}
+
+/// Per-planner engine handles for a traced comparison run: each planner
+/// records under its own Chrome pid, so the EP and LLEP timelines of the
+/// same workload render side by side in Perfetto. Only called with an
+/// enabled tracer (the untraced path keeps the one shared engine).
+fn traced_engines(
+    engine: &Engine,
+    planners: &[Box<dyn Planner>],
+    tracer: &Tracer,
+) -> Vec<Engine> {
+    planners
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let t = tracer.with_pid(i as u32);
+            name_engine_tracks(&t, &p.label(), engine.system.devices);
+            engine.clone().with_tracer(t)
+        })
+        .collect()
+}
+
+/// Write the recorded timeline to the `--trace` path, if one was given.
+/// An unwritable path is a command failure (non-zero exit).
+fn write_trace(tracer: &Tracer, args: &llep::util::cli::Args) -> Result<(), String> {
+    if let Some(path) = args.get("trace") {
+        tracer.write(path)?;
+        println!("wrote trace {path} ({} events)", tracer.event_count());
+    }
+    Ok(())
+}
+
 fn engine_from_args(args: &llep::util::cli::Args) -> Result<(Engine, LlepConfig), String> {
     let model_name = args.get_or("model", "fig1-layer");
     let preset = ModelPreset::from_name(&model_name)
@@ -388,18 +435,22 @@ fn cmd_run(args: &llep::util::cli::Args) -> Result<(), String> {
         PlannerKind::Eplb { replicas: engine.system.devices }.boxed(),
     ];
     let planners = planners_from_args(args, defaults)?;
+    let tracer = tracer_from_args(args);
 
     if args.has_flag("full-model") {
-        return cmd_run_full_model(&engine, &planners, &scenario, tokens, seed);
+        cmd_run_full_model(&engine, &planners, &scenario, tokens, seed, &tracer)?;
+        return write_trace(&tracer, args);
     }
 
     let mut rng = Rng::new(seed);
     let lm = scenario.generate_loads(&engine.model, engine.system.devices, tokens, &mut rng);
+    let traced =
+        if tracer.is_enabled() { traced_engines(&engine, &planners, &tracer) } else { Vec::new() };
     let mut t = Table::new(&[
         "planner", "latency", "compute max", "dispatch", "weights", "peak mem", "xfers", "status",
     ]);
-    for planner in &planners {
-        let r = engine.run_step_loads(&lm, &**planner);
+    for (i, planner) in planners.iter().enumerate() {
+        let r = traced.get(i).unwrap_or(&engine).run_step_loads(&lm, &**planner);
         let status = if r.oom {
             "OOM"
         } else if r.stranded {
@@ -433,7 +484,7 @@ fn cmd_run(args: &llep::util::cli::Args) -> Result<(), String> {
         ),
         &t,
     );
-    Ok(())
+    write_trace(&tracer, args)
 }
 
 /// `run --full-model`: price one forward step across every MoE layer of
@@ -446,6 +497,7 @@ fn cmd_run_full_model(
     scenario: &Scenario,
     tokens: usize,
     seed: u64,
+    tracer: &Tracer,
 ) -> Result<(), String> {
     let layers = engine.model.num_moe_layers();
     let profile = match scenario {
@@ -461,9 +513,11 @@ fn cmd_run_full_model(
         "planner", "latency", "serial", "overlap saved", "peak mem", "xfers", "fallback",
         "plan cache", "OOM",
     ]);
+    let traced =
+        if tracer.is_enabled() { traced_engines(engine, planners, tracer) } else { Vec::new() };
     let mut reports = Vec::with_capacity(planners.len());
-    for planner in planners {
-        let r = engine.run_model(&lms, &**planner)?;
+    for (i, planner) in planners.iter().enumerate() {
+        let r = traced.get(i).unwrap_or(engine).run_model(&lms, &**planner)?;
         t.row(vec![
             r.planner.clone(),
             format_secs(r.latency_s),
@@ -637,10 +691,17 @@ fn cmd_serve(args: &llep::util::cli::Args) -> Result<(), String> {
         "planner", "makespan", "p50 latency", "p99 latency", "tok/s", "p50 plan", "plan cache",
         "chaos",
     ]);
+    let tracer = tracer_from_args(args);
     let mut unrecoverable: Vec<(String, String)> = Vec::new();
-    for planner in planners_from_args(args, defaults)? {
+    for (i, planner) in planners_from_args(args, defaults)?.into_iter().enumerate() {
         let label = planner.label();
-        let mut sim = ServeSim::with_planner(engine.clone(), planner, scenario.clone(), 8192);
+        let mut sim_engine = engine.clone();
+        if tracer.is_enabled() {
+            let t = tracer.with_pid(i as u32);
+            name_engine_tracks(&t, &label, engine.system.devices);
+            sim_engine = sim_engine.with_tracer(t);
+        }
+        let mut sim = ServeSim::with_planner(sim_engine, planner, scenario.clone(), 8192);
         if let Some(f) = &faults {
             sim = sim.with_faults(f.clone());
         }
@@ -684,7 +745,7 @@ fn cmd_serve(args: &llep::util::cli::Args) -> Result<(), String> {
     for (label, e) in &unrecoverable {
         println!("{label}: {e}");
     }
-    Ok(())
+    write_trace(&tracer, args)
 }
 
 /// `llep tune`: enumerate planner-spec space for one hardware profile +
@@ -870,10 +931,17 @@ fn cmd_chaos(args: &llep::util::cli::Args) -> Result<(), String> {
         "planner", "makespan", "p50 latency", "p99 latency", "tok/s", "fault steps", "chaos",
         "status",
     ]);
+    let tracer = tracer_from_args(args);
     let mut results: Vec<(String, Result<ServeReport, String>)> = Vec::new();
-    for planner in planners_from_args(args, defaults)? {
+    for (i, planner) in planners_from_args(args, defaults)?.into_iter().enumerate() {
         let label = planner.label();
-        let sim = ServeSim::with_planner(engine.clone(), planner, scenario.clone(), 8192)
+        let mut sim_engine = engine.clone();
+        if tracer.is_enabled() {
+            let t = tracer.with_pid(i as u32);
+            name_engine_tracks(&t, &label, engine.system.devices);
+            sim_engine = sim_engine.with_tracer(t);
+        }
+        let sim = ServeSim::with_planner(sim_engine, planner, scenario.clone(), 8192)
             .with_faults(faults.clone());
         let outcome = sim.try_run(&requests, &mut Rng::new(seed + 1));
         match &outcome {
@@ -934,6 +1002,7 @@ fn cmd_chaos(args: &llep::util::cli::Args) -> Result<(), String> {
             }
         });
         let json = Json::obj(vec![
+            ("schema_version", Json::num(SCHEMA_VERSION as f64)),
             ("system", Json::str(&engine.system.name)),
             ("scenario", Json::str(&scenario.label())),
             ("faults", Json::str(&faults.spec())),
@@ -944,7 +1013,7 @@ fn cmd_chaos(args: &llep::util::cli::Args) -> Result<(), String> {
         std::fs::write(out, json.to_string_pretty()).map_err(|e| e.to_string())?;
         println!("wrote {out}");
     }
-    Ok(())
+    write_trace(&tracer, args)
 }
 
 /// `llep fleet`: simulate N serving replicas behind a global router on
@@ -990,6 +1059,10 @@ fn cmd_fleet(args: &llep::util::cli::Args) -> Result<(), String> {
         .map(|&s| ReplicaConfig::default().with_planner(&planner_spec).with_speed(s))
         .collect();
     let budget = args.get_usize("tokens", 8192)? * engine.system.devices;
+    // The template engine carries the tracer; FleetSim re-tags each
+    // replica with its own pid and keeps the router on this one.
+    let tracer = tracer_from_args(args);
+    let engine = engine.with_tracer(tracer.clone());
     let mut sim = FleetSim::new(engine, scenario.clone(), replicas, budget)
         .with_router(router)
         .with_workload(workload);
@@ -1058,6 +1131,7 @@ fn cmd_fleet(args: &llep::util::cli::Args) -> Result<(), String> {
         std::fs::write(out, json.to_string_pretty()).map_err(|e| e.to_string())?;
         println!("wrote {out}");
     }
+    write_trace(&tracer, args)?;
 
     // Hard contract, enforced by exit code (the CI smoke step): nothing
     // lost, exact accounting, useful work actually delivered.
@@ -1235,6 +1309,11 @@ fn cmd_info() -> Result<(), String> {
         "cross-step plan-reuse decorator (wraps any spec)",
         "cached(ep):drift=0.05,every=0,q=1024,repair=0.15"
     );
+    println!("\ntimeline tracing (--trace out.json on run/serve/chaos/fleet):");
+    println!("  records the virtual-clock execution timeline — per-device compute spans,");
+    println!("  plan/cache-outcome instants, weight-transfer and router flow arrows, chaos");
+    println!("  fault windows — as Chrome trace-event JSON; open in https://ui.perfetto.dev");
+    println!("  or chrome://tracing. (`replay --trace` instead names its routing-trace input.)");
     print_artifacts_info();
     Ok(())
 }

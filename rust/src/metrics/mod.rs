@@ -11,13 +11,30 @@ pub use crate::planner::CacheStats;
 
 pub use crate::util::stats::Summary;
 
-/// Format bytes with adaptive unit.
+/// Version stamp on every top-level JSON report this crate emits
+/// (`report_to_json`, `model_report_to_json`, `tune_report_to_json`,
+/// `fleet_report_to_json`, and the `llep chaos --out` payload). Bump on
+/// any backwards-incompatible change to a report's shape so downstream
+/// consumers can detect payloads they don't understand.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Format bytes with adaptive unit. Total: output width stays bounded
+/// all the way to `u64::MAX` (16 EiB).
 pub fn format_bytes(bytes: u64) -> String {
+    const EIB: f64 = (1u64 << 60) as f64;
+    const PIB: f64 = (1u64 << 50) as f64;
+    const TIB: f64 = (1u64 << 40) as f64;
     const GIB: f64 = (1u64 << 30) as f64;
     const MIB: f64 = (1u64 << 20) as f64;
     const KIB: f64 = 1024.0;
     let b = bytes as f64;
-    if b >= GIB {
+    if b >= EIB {
+        format!("{:.2} EiB", b / EIB)
+    } else if b >= PIB {
+        format!("{:.2} PiB", b / PIB)
+    } else if b >= TIB {
+        format!("{:.2} TiB", b / TIB)
+    } else if b >= GIB {
         format!("{:.2} GiB", b / GIB)
     } else if b >= MIB {
         format!("{:.2} MiB", b / MIB)
@@ -28,16 +45,32 @@ pub fn format_bytes(bytes: u64) -> String {
     }
 }
 
-/// Format seconds with adaptive unit.
+/// Format seconds with adaptive unit. Total over all of `f64`: NaN and
+/// ±inf render as-is (`"NaN s"`), negative durations keep their sign
+/// with the unit their magnitude selects, and absurdly large values
+/// switch to scientific notation so the output width stays bounded.
 pub fn format_secs(s: f64) -> String {
-    if s >= 1.0 {
+    if !s.is_finite() {
+        return format!("{s} s");
+    }
+    let a = s.abs();
+    if a >= 1e6 {
+        format!("{s:.3e} s")
+    } else if a >= 1.0 {
         format!("{s:.3} s")
-    } else if s >= 1e-3 {
+    } else if a >= 1e-3 {
         format!("{:.3} ms", s * 1e3)
-    } else if s >= 1e-6 {
+    } else if a >= 1e-6 {
         format!("{:.2} µs", s * 1e6)
     } else {
-        format!("{:.0} ns", s * 1e9)
+        let ns = s * 1e9;
+        // sub-rounding dust (incl. exact ±0) prints as plain "0 ns"
+        // rather than "-0 ns"
+        if ns.round() == 0.0 {
+            "0 ns".into()
+        } else {
+            format!("{ns:.0} ns")
+        }
     }
 }
 
@@ -114,6 +147,7 @@ impl Comparison {
 /// JSON export of a step report (for machine-readable bench logs).
 pub fn report_to_json(r: &StepReport) -> Json {
     Json::obj(vec![
+        ("schema_version", Json::num(SCHEMA_VERSION as f64)),
         ("planner", Json::str(&r.planner)),
         ("latency_s", Json::num(r.latency_s)),
         ("plan_s", Json::num(r.phases.plan_s)),
@@ -230,6 +264,7 @@ pub fn tune_report_to_json(
         ])
     };
     Json::obj(vec![
+        ("schema_version", Json::num(SCHEMA_VERSION as f64)),
         ("profile", Json::str(profile)),
         ("scenario", Json::str(scenario)),
         ("strategy", Json::str(&outcome.strategy)),
@@ -320,6 +355,7 @@ pub fn fleet_replica_table(r: &crate::fleet::FleetReport) -> Table {
 /// slices) — the `llep fleet --out` payload.
 pub fn fleet_report_to_json(r: &crate::fleet::FleetReport) -> Json {
     Json::obj(vec![
+        ("schema_version", Json::num(SCHEMA_VERSION as f64)),
         ("router", Json::str(&r.router)),
         ("workload", Json::str(&r.workload)),
         ("requests", Json::num(r.requests as f64)),
@@ -359,6 +395,10 @@ pub fn fleet_report_to_json(r: &crate::fleet::FleetReport) -> Json {
                     ("tokens_admitted", Json::num(p.tokens.admitted as f64)),
                     ("tokens_priced", Json::num(p.tokens.priced as f64)),
                     ("ledger_exact", Json::Bool(p.tokens.is_exact())),
+                    ("cache_hits", Json::num(p.plan_cache.hits as f64)),
+                    ("cache_repairs", Json::num(p.plan_cache.repairs as f64)),
+                    ("cache_misses", Json::num(p.plan_cache.misses as f64)),
+                    ("cache_forced", Json::num(p.plan_cache.forced as f64)),
                     ("chaos", chaos_stats_to_json(&p.chaos)),
                 ])
             })),
@@ -394,6 +434,7 @@ pub fn model_report_table(r: &ModelStepReport) -> Table {
 /// latency and memory series (for machine-readable bench logs).
 pub fn model_report_to_json(r: &ModelStepReport) -> Json {
     Json::obj(vec![
+        ("schema_version", Json::num(SCHEMA_VERSION as f64)),
         ("planner", Json::str(&r.planner)),
         ("layers", Json::num(r.num_layers() as f64)),
         ("latency_s", Json::num(r.latency_s)),
@@ -443,6 +484,33 @@ mod tests {
         assert!(format_secs(2.5e-3).contains("ms"));
         assert!(format_secs(2.5e-6).contains("µs"));
         assert!(format_secs(2.5e-9).contains("ns"));
+    }
+
+    #[test]
+    fn secs_formatting_is_total() {
+        // degenerate inputs render without panicking and keep a unit
+        assert_eq!(format_secs(f64::NAN), "NaN s");
+        assert_eq!(format_secs(f64::INFINITY), "inf s");
+        assert_eq!(format_secs(f64::NEG_INFINITY), "-inf s");
+        assert_eq!(format_secs(0.0), "0 ns");
+        assert_eq!(format_secs(-0.0), "0 ns");
+        assert_eq!(format_secs(1e-15), "0 ns");
+        assert_eq!(format_secs(-1e-15), "0 ns");
+        // negatives keep their sign and magnitude-selected unit
+        assert_eq!(format_secs(-2.5e-3), "-2.500 ms");
+        assert_eq!(format_secs(-3.0), "-3.000 s");
+        // huge magnitudes stay bounded-width via scientific notation
+        let huge = format_secs(1e30);
+        assert!(huge.ends_with(" s") && huge.len() < 16, "{huge}");
+        assert!(format_secs(f64::MAX).ends_with(" s"));
+    }
+
+    #[test]
+    fn bytes_formatting_covers_large_tiers() {
+        assert!(format_bytes(3 << 40).contains("TiB"));
+        assert!(format_bytes(3 << 50).contains("PiB"));
+        let max = format_bytes(u64::MAX);
+        assert!(max.contains("EiB") && max.len() < 12, "{max}");
     }
 
     #[test]

@@ -1,0 +1,133 @@
+//! Chrome trace-event JSON export, built on [`crate::util::json`].
+//!
+//! The output is the "JSON Object Format" of the Chrome trace-event
+//! spec: a top-level object with a `traceEvents` array, loadable
+//! directly in [Perfetto](https://ui.perfetto.dev) or
+//! `chrome://tracing`. Timestamps and durations are microseconds of
+//! *virtual* (simulated) time. The metrics registry dumps alongside
+//! under `llepMetrics` (viewers ignore unknown top-level keys).
+
+use super::{ArgValue, EventKind, Histogram, TraceEvent, TraceSink};
+use crate::util::json::Json;
+
+fn args_json(args: &[(&'static str, ArgValue)]) -> Json {
+    Json::obj(
+        args.iter()
+            .map(|(k, v)| {
+                let jv = match v {
+                    ArgValue::Num(n) => Json::num(*n),
+                    ArgValue::Str(s) => Json::str(s),
+                    ArgValue::Text(s) => Json::str(s.as_str()),
+                };
+                (*k, jv)
+            })
+            .collect(),
+    )
+}
+
+const US_PER_S: f64 = 1e6;
+
+fn event_json(e: &TraceEvent) -> Json {
+    let mut fields: Vec<(&str, Json)> = vec![
+        ("name", Json::str(e.name)),
+        ("cat", Json::str(e.cat)),
+        ("pid", Json::num(e.pid as f64)),
+        ("tid", Json::num(e.tid as f64)),
+        ("ts", Json::num(e.ts_s * US_PER_S)),
+    ];
+    match e.kind {
+        EventKind::Span => {
+            fields.push(("ph", Json::str("X")));
+            fields.push(("dur", Json::num(e.value * US_PER_S)));
+        }
+        EventKind::Instant => {
+            fields.push(("ph", Json::str("i")));
+            fields.push(("s", Json::str("t")));
+        }
+        EventKind::InstantProcess => {
+            fields.push(("ph", Json::str("i")));
+            fields.push(("s", Json::str("p")));
+        }
+        EventKind::Counter => {
+            fields.push(("ph", Json::str("C")));
+        }
+        EventKind::FlowStart => {
+            fields.push(("ph", Json::str("s")));
+            fields.push(("id", Json::num(e.id as f64)));
+        }
+        EventKind::FlowEnd => {
+            fields.push(("ph", Json::str("f")));
+            fields.push(("id", Json::num(e.id as f64)));
+            // bind the arrow head to the next slice on the track
+            fields.push(("bp", Json::str("e")));
+        }
+    }
+    if e.kind == EventKind::Counter {
+        fields.push(("args", Json::obj(vec![("value", Json::num(e.value))])));
+    } else if !e.args.is_empty() {
+        fields.push(("args", args_json(&e.args)));
+    }
+    Json::obj(fields)
+}
+
+fn metadata_json(name: &'static str, pid: u32, tid: Option<u32>, value: &str) -> Json {
+    let mut fields: Vec<(&str, Json)> = vec![
+        ("name", Json::str(name)),
+        ("ph", Json::str("M")),
+        ("pid", Json::num(pid as f64)),
+    ];
+    if let Some(tid) = tid {
+        fields.push(("tid", Json::num(tid as f64)));
+    }
+    fields.push(("args", Json::obj(vec![("name", Json::str(value))])));
+    Json::obj(fields)
+}
+
+fn histogram_json(h: &Histogram) -> Json {
+    // Only occupied buckets serialize (64 mostly-empty entries per
+    // histogram would dominate the dump).
+    let buckets = h.buckets.iter().enumerate().filter(|(_, &c)| c > 0).map(|(i, &c)| {
+        Json::obj(vec![
+            ("ge", Json::num(Histogram::bucket_lo(i))),
+            ("lt", Json::num(Histogram::bucket_lo(i + 1))),
+            ("count", Json::num(c as f64)),
+        ])
+    });
+    Json::obj(vec![
+        ("count", Json::num(h.count as f64)),
+        ("sum", Json::num(h.sum)),
+        ("mean", Json::num(h.mean())),
+        ("buckets", Json::arr(buckets)),
+    ])
+}
+
+/// Render the whole sink as one Chrome trace-event JSON document.
+pub fn export(sink: &TraceSink) -> Json {
+    let mut events: Vec<Json> = Vec::with_capacity(
+        sink.events.len() + sink.process_names.len() + sink.thread_names.len(),
+    );
+    for (&pid, name) in &sink.process_names {
+        events.push(metadata_json("process_name", pid, None, name));
+    }
+    for (&(pid, tid), name) in &sink.thread_names {
+        events.push(metadata_json("thread_name", pid, Some(tid), name));
+    }
+    events.extend(sink.events.iter().map(event_json));
+
+    let metrics = Json::obj(vec![
+        (
+            "counters",
+            Json::obj(sink.counters.iter().map(|(&k, &v)| (k, Json::num(v as f64))).collect()),
+        ),
+        (
+            "histograms",
+            Json::obj(sink.histograms.iter().map(|(&k, h)| (k, histogram_json(h))).collect()),
+        ),
+    ]);
+
+    Json::obj(vec![
+        ("traceEvents", Json::arr(events)),
+        ("displayTimeUnit", Json::str("ms")),
+        ("llepMetrics", metrics),
+    ])
+}

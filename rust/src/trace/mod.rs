@@ -1,0 +1,534 @@
+//! Execution-timeline tracing: a structured event recorder over the
+//! virtual clock, exported as Chrome trace-event JSON (Perfetto /
+//! `chrome://tracing`).
+//!
+//! The paper's central claim is a *timeline* claim — under imbalanced
+//! routing, standard EP leaves most devices idle while one device's
+//! compute blows up, and LLEP collapses that bubble — but reports and
+//! tables only show end-of-run aggregates. This module records the
+//! per-device, per-step execution timeline itself: compute spans on
+//! device tracks, plan/cache-outcome instants on a coordinator track,
+//! weight-transfer and router-decision flow arrows between tracks,
+//! chaos fault windows as process-scoped instants, and a small metrics
+//! registry (monotonic counters + fixed-bucket log2 histograms) riding
+//! the same recorder.
+//!
+//! ## Handle design
+//!
+//! A [`Tracer`] is a cheap clonable handle: either **disabled** (the
+//! default — no sink, every recording method is a branch-and-return
+//! that performs **zero heap allocations**, asserted by the
+//! counting-allocator tests below) or **enabled** (an
+//! `Arc<Mutex<TraceSink>>` shared by every clone, buffering events into
+//! a pre-grown arena). The [`Engine`](crate::exec::Engine) carries one;
+//! `Engine::for_pool` / `clone` propagate it, so per-step chaos views
+//! and fleet replicas record into the same sink. Each handle also
+//! carries a `pid` (a Chrome "process"), which is how EP-vs-LLEP runs
+//! and fleet replicas get side-by-side tracks on one timeline.
+//!
+//! ## Clock
+//!
+//! The trace clock is **simulated time** (virtual seconds, exported as
+//! microseconds): the serving loops call
+//! [`set_time_base`](Tracer::set_time_base) with their virtual clock
+//! before pricing a step, and the engine emits each step's spans at
+//! offsets from that base — so recording cost can never distort the
+//! timeline, and an EP trace and an LLEP trace of the same workload are
+//! directly comparable.
+
+pub mod chrome;
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+/// Track id of the per-process coordinator (plan spans, serve events).
+pub const COORD_TID: u32 = 0;
+
+/// Track id of device `d` within a process.
+pub fn device_tid(d: usize) -> u32 {
+    d as u32 + 1
+}
+
+/// What a [`TraceEvent`] renders as.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// A complete span (Chrome `ph:"X"`): `[ts, ts+dur)` on one track.
+    Span,
+    /// A thread-scoped instant (`ph:"i"`, scope `t`).
+    Instant,
+    /// A process-scoped instant (`ph:"i"`, scope `p`) — spans every
+    /// track of the process (fault windows, replica fail/recover).
+    InstantProcess,
+    /// A counter sample (`ph:"C"`): plotted as a per-process graph.
+    Counter,
+    /// Flow arrow start (`ph:"s"`), paired with an end by `id`.
+    FlowStart,
+    /// Flow arrow end (`ph:"f"`).
+    FlowEnd,
+}
+
+/// One event argument value (rendered into the Chrome `args` object).
+#[derive(Clone, Debug)]
+pub enum ArgValue {
+    Num(f64),
+    Str(&'static str),
+    Text(String),
+}
+
+/// One recorded event, in virtual seconds.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    pub kind: EventKind,
+    pub name: &'static str,
+    pub cat: &'static str,
+    pub ts_s: f64,
+    /// Span duration ([`EventKind::Span`]) or counter value
+    /// ([`EventKind::Counter`]); unused otherwise.
+    pub value: f64,
+    pub pid: u32,
+    pub tid: u32,
+    /// Flow-pairing id ([`EventKind::FlowStart`]/[`FlowEnd`]).
+    pub id: u64,
+    pub args: Vec<(&'static str, ArgValue)>,
+}
+
+/// Bucket count of the fixed log2 histograms.
+pub const HIST_BUCKETS: usize = 64;
+/// Bucket `i` covers `[2^(i-HIST_BUCKET_BIAS), 2^(i+1-HIST_BUCKET_BIAS))`;
+/// with a bias of 32 the histogram resolves values from `2^-32` (~2.3e-10
+/// — well under a nanosecond) to `2^31`. Out-of-range values clamp to
+/// the edge buckets.
+pub const HIST_BUCKET_BIAS: i64 = 32;
+
+/// A fixed-bucket log2 histogram (no allocation after construction).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub count: u64,
+    pub sum: f64,
+    pub buckets: [u64; HIST_BUCKETS],
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram { count: 0, sum: 0.0, buckets: [0; HIST_BUCKETS] }
+    }
+}
+
+impl Histogram {
+    /// Bucket index of `v` (see [`HIST_BUCKET_BIAS`]); non-positive and
+    /// non-finite values land in bucket 0.
+    pub fn bucket_of(v: f64) -> usize {
+        if !(v.is_finite() && v > 0.0) {
+            return 0;
+        }
+        (v.log2().floor() as i64 + HIST_BUCKET_BIAS).clamp(0, HIST_BUCKETS as i64 - 1) as usize
+    }
+
+    /// Lower edge of bucket `i` (`2^(i-bias)`).
+    pub fn bucket_lo(i: usize) -> f64 {
+        ((i as i64 - HIST_BUCKET_BIAS) as f64).exp2()
+    }
+
+    pub fn observe(&mut self, v: f64) {
+        self.count += 1;
+        if v.is_finite() {
+            self.sum += v;
+        }
+        self.buckets[Histogram::bucket_of(v)] += 1;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count > 0 {
+            self.sum / self.count as f64
+        } else {
+            0.0
+        }
+    }
+}
+
+/// One endpoint of a flow arrow.
+#[derive(Clone, Copy, Debug)]
+pub struct FlowPoint {
+    pub pid: u32,
+    pub tid: u32,
+    pub ts_s: f64,
+}
+
+/// The shared recording buffer behind an enabled [`Tracer`].
+#[derive(Debug, Default)]
+pub struct TraceSink {
+    pub events: Vec<TraceEvent>,
+    /// Virtual-time origin for the step currently being emitted (set by
+    /// the serving loops; standalone runs leave it at 0).
+    pub time_base_s: f64,
+    next_flow_id: u64,
+    pub counters: BTreeMap<&'static str, u64>,
+    pub histograms: BTreeMap<&'static str, Histogram>,
+    pub process_names: BTreeMap<u32, String>,
+    pub thread_names: BTreeMap<(u32, u32), String>,
+}
+
+/// Cheap clonable tracing handle — see the module docs. The default is
+/// [`disabled`](Tracer::disabled): every recording method early-returns
+/// without touching the heap.
+#[derive(Clone, Debug, Default)]
+pub struct Tracer {
+    sink: Option<Arc<Mutex<TraceSink>>>,
+    pid: u32,
+}
+
+impl Tracer {
+    /// A no-op tracer: records nothing, allocates nothing.
+    pub fn disabled() -> Tracer {
+        Tracer::default()
+    }
+
+    /// An enabled tracer with a fresh sink; the event arena is pre-grown
+    /// so steady-state recording appends without reallocating.
+    pub fn enabled() -> Tracer {
+        let mut sink = TraceSink::default();
+        sink.events.reserve(8 * 1024);
+        Tracer { sink: Some(Arc::new(Mutex::new(sink))), pid: 0 }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.sink.is_some()
+    }
+
+    /// The Chrome process id this handle records under.
+    pub fn pid(&self) -> u32 {
+        self.pid
+    }
+
+    /// A handle to the same sink recording under a different process id
+    /// (EP-vs-LLEP comparisons, fleet replicas).
+    pub fn with_pid(&self, pid: u32) -> Tracer {
+        Tracer { sink: self.sink.clone(), pid }
+    }
+
+    fn with_sink<R>(&self, f: impl FnOnce(&mut TraceSink) -> R) -> Option<R> {
+        self.sink.as_ref().map(|s| f(&mut s.lock().expect("trace sink poisoned")))
+    }
+
+    /// Set the virtual-time origin subsequent engine emissions offset
+    /// from (the serving loops call this with their clock per step).
+    pub fn set_time_base(&self, t_s: f64) {
+        self.with_sink(|s| s.time_base_s = t_s);
+    }
+
+    /// Current virtual-time origin (0 when disabled).
+    pub fn time_base(&self) -> f64 {
+        self.with_sink(|s| s.time_base_s).unwrap_or(0.0)
+    }
+
+    /// Name this handle's process (Chrome `process_name` metadata).
+    pub fn name_process(&self, name: &str) {
+        self.with_sink(|s| {
+            s.process_names.insert(self.pid, name.to_string());
+        });
+    }
+
+    /// Name a track of this handle's process.
+    pub fn name_thread(&self, tid: u32, name: &str) {
+        self.with_sink(|s| {
+            s.thread_names.insert((self.pid, tid), name.to_string());
+        });
+    }
+
+    fn push(
+        &self,
+        kind: EventKind,
+        name: &'static str,
+        cat: &'static str,
+        ts_s: f64,
+        value: f64,
+        tid: u32,
+        id: u64,
+        args: &[(&'static str, ArgValue)],
+    ) {
+        self.with_sink(|s| {
+            s.events.push(TraceEvent {
+                kind,
+                name,
+                cat,
+                ts_s,
+                value,
+                pid: self.pid,
+                tid,
+                id,
+                args: args.to_vec(),
+            });
+        });
+    }
+
+    /// Record a complete span on track `tid`.
+    pub fn span(
+        &self,
+        tid: u32,
+        name: &'static str,
+        cat: &'static str,
+        start_s: f64,
+        dur_s: f64,
+        args: &[(&'static str, ArgValue)],
+    ) {
+        self.push(EventKind::Span, name, cat, start_s, dur_s, tid, 0, args);
+    }
+
+    /// Record a thread-scoped instant.
+    pub fn instant(
+        &self,
+        tid: u32,
+        name: &'static str,
+        cat: &'static str,
+        ts_s: f64,
+        args: &[(&'static str, ArgValue)],
+    ) {
+        self.push(EventKind::Instant, name, cat, ts_s, 0.0, tid, 0, args);
+    }
+
+    /// Record a process-scoped (track-spanning) instant — fault windows,
+    /// replica fail/recover.
+    pub fn instant_process(
+        &self,
+        name: &'static str,
+        cat: &'static str,
+        ts_s: f64,
+        args: &[(&'static str, ArgValue)],
+    ) {
+        self.push(EventKind::InstantProcess, name, cat, ts_s, 0.0, COORD_TID, 0, args);
+    }
+
+    /// Record a counter sample (plotted as a per-process graph track).
+    pub fn counter(&self, name: &'static str, ts_s: f64, value: f64) {
+        self.push(EventKind::Counter, name, "counter", ts_s, value, COORD_TID, 0, &[]);
+    }
+
+    /// Record a flow arrow between two (possibly cross-process) track
+    /// points; `args` attach to the start event.
+    pub fn flow(
+        &self,
+        name: &'static str,
+        cat: &'static str,
+        from: FlowPoint,
+        to: FlowPoint,
+        args: &[(&'static str, ArgValue)],
+    ) {
+        self.with_sink(|s| {
+            s.next_flow_id += 1;
+            let id = s.next_flow_id;
+            s.events.push(TraceEvent {
+                kind: EventKind::FlowStart,
+                name,
+                cat,
+                ts_s: from.ts_s,
+                value: 0.0,
+                pid: from.pid,
+                tid: from.tid,
+                id,
+                args: args.to_vec(),
+            });
+            s.events.push(TraceEvent {
+                kind: EventKind::FlowEnd,
+                name,
+                cat,
+                ts_s: to.ts_s,
+                value: 0.0,
+                pid: to.pid,
+                tid: to.tid,
+                id,
+                args: Vec::new(),
+            });
+        });
+    }
+
+    /// Bump a monotonic counter in the metrics registry.
+    pub fn count(&self, name: &'static str, delta: u64) {
+        self.with_sink(|s| *s.counters.entry(name).or_insert(0) += delta);
+    }
+
+    /// Observe a value into a log2 histogram in the metrics registry.
+    pub fn observe(&self, name: &'static str, v: f64) {
+        self.with_sink(|s| s.histograms.entry(name).or_default().observe(v));
+    }
+
+    /// Events recorded so far (0 when disabled).
+    pub fn event_count(&self) -> usize {
+        self.with_sink(|s| s.events.len()).unwrap_or(0)
+    }
+
+    /// Export the whole sink as a Chrome trace-event JSON document
+    /// (`None` when disabled).
+    pub fn export(&self) -> Option<crate::util::json::Json> {
+        self.with_sink(|s| chrome::export(s))
+    }
+
+    /// Write the Chrome trace JSON to `path`. Errors on a disabled
+    /// tracer or an unwritable path (callers surface this as a non-zero
+    /// exit).
+    pub fn write(&self, path: &str) -> Result<(), String> {
+        let json = self.export().ok_or("trace: tracer is disabled, nothing to write")?;
+        std::fs::write(path, json.to_string()).map_err(|e| format!("trace: {path}: {e}"))
+    }
+}
+
+/// Standard track naming for one engine's process: a coordinator track
+/// plus one track per device.
+pub fn name_engine_tracks(t: &Tracer, label: &str, devices: usize) {
+    if !t.is_enabled() {
+        return;
+    }
+    t.name_process(label);
+    t.name_thread(COORD_TID, "coordinator");
+    for d in 0..devices {
+        t.name_thread(device_tid(d), &format!("device {d}"));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_cover_the_virtual_time_range() {
+        let mut h = Histogram::default();
+        h.observe(2e-6); // plan-time scale
+        h.observe(0.25); // step-latency scale
+        h.observe(0.0); // degenerate
+        h.observe(f64::NAN); // hostile
+        assert_eq!(h.count, 4);
+        assert!(h.sum > 0.25);
+        assert_eq!(h.buckets.iter().sum::<u64>(), 4);
+        assert_eq!(Histogram::bucket_of(0.0), 0);
+        assert_eq!(Histogram::bucket_of(f64::INFINITY), HIST_BUCKETS - 1);
+        assert_eq!(Histogram::bucket_of(1.0), HIST_BUCKET_BIAS as usize);
+        // monotone in v
+        assert!(Histogram::bucket_of(1e-6) < Histogram::bucket_of(1e-3));
+    }
+
+    #[test]
+    fn enabled_tracer_records_and_exports() {
+        let t = Tracer::enabled();
+        assert!(t.is_enabled());
+        name_engine_tracks(&t, "llep", 2);
+        t.set_time_base(1.5);
+        assert_eq!(t.time_base(), 1.5);
+        t.span(device_tid(0), "compute", "compute", 1.5, 0.25, &[("tokens", ArgValue::Num(64.0))]);
+        t.instant(COORD_TID, "plan-cache-hit", "plan", 1.5, &[]);
+        t.instant_process("fault-window", "chaos", 1.5, &[("pool", ArgValue::Str("degraded"))]);
+        t.counter("queue depth", 1.5, 3.0);
+        t.flow(
+            "weights",
+            "xfer",
+            FlowPoint { pid: 0, tid: device_tid(0), ts_s: 1.5 },
+            FlowPoint { pid: 0, tid: device_tid(1), ts_s: 1.75 },
+            &[("expert", ArgValue::Num(7.0))],
+        );
+        t.count("engine/steps", 1);
+        t.observe("step/plan_s", 2e-6);
+        assert_eq!(t.event_count(), 6); // span + 2 instants + counter + flow pair
+        let doc = t.export().unwrap();
+        let text = doc.to_string();
+        let re = crate::util::json::parse(&text).unwrap();
+        let events = re.get("traceEvents").unwrap().as_arr().unwrap();
+        // metadata (process_name + 3 thread_name) + the 6 recorded events
+        assert_eq!(events.len(), 10);
+        for e in events {
+            assert!(e.get("ph").is_some() && e.get("pid").is_some() && e.get("name").is_some());
+        }
+        assert!(events.iter().any(|e| e.get("ph").unwrap().as_str() == Some("X")));
+        assert!(events.iter().any(|e| e.get("ph").unwrap().as_str() == Some("s")));
+        assert!(events.iter().any(|e| e.get("ph").unwrap().as_str() == Some("f")));
+        let metrics = re.get("llepMetrics").unwrap();
+        assert_eq!(
+            metrics.get("counters").unwrap().get("engine/steps").unwrap().as_usize(),
+            Some(1)
+        );
+        assert!(metrics.get("histograms").unwrap().get("step/plan_s").is_some());
+    }
+
+    #[test]
+    fn pid_clones_share_one_sink() {
+        let t = Tracer::enabled();
+        let a = t.with_pid(1);
+        let b = t.with_pid(2);
+        a.instant(COORD_TID, "x", "c", 0.0, &[]);
+        b.instant(COORD_TID, "y", "c", 0.0, &[]);
+        assert_eq!(t.event_count(), 2);
+        assert_eq!(a.pid(), 1);
+        assert_eq!(b.pid(), 2);
+    }
+
+    /// The tentpole's hard requirement: a disabled tracer is a no-op on
+    /// the heap — every recording method, clone, and pid re-tag performs
+    /// zero allocations (counting-allocator asserted, same contract as
+    /// `planner::scratch`'s steady-state tests).
+    #[test]
+    fn disabled_tracer_records_nothing_and_never_allocates() {
+        let t = Tracer::disabled();
+        assert!(!t.is_enabled());
+        let before = crate::util::alloc_count::allocations_on_this_thread();
+        for i in 0..64 {
+            let tt = t.clone().with_pid(i as u32);
+            tt.set_time_base(i as f64);
+            tt.span(device_tid(0), "compute", "compute", 0.0, 1.0, &[("t", ArgValue::Num(1.0))]);
+            tt.instant(COORD_TID, "plan-cache-hit", "plan", 0.0, &[]);
+            tt.instant_process("fault-window", "chaos", 0.0, &[("p", ArgValue::Str("x"))]);
+            tt.counter("queue depth", 0.0, 1.0);
+            tt.flow(
+                "weights",
+                "xfer",
+                FlowPoint { pid: 0, tid: 1, ts_s: 0.0 },
+                FlowPoint { pid: 0, tid: 2, ts_s: 1.0 },
+                &[],
+            );
+            tt.count("engine/steps", 1);
+            tt.observe("step/plan_s", 1e-6);
+            name_engine_tracks(&tt, "llep", 8);
+        }
+        let after = crate::util::alloc_count::allocations_on_this_thread();
+        assert_eq!(after - before, 0, "disabled tracing must not touch the heap");
+        assert_eq!(t.event_count(), 0);
+        assert!(t.export().is_none());
+        assert!(t.write("/dev/null").is_err());
+    }
+
+    /// The steady-state plan/price path with the (default, disabled)
+    /// tracer threaded through the engine: per-iteration allocations
+    /// stay exactly flat — tracing contributes nothing. Extends the
+    /// `planner::scratch` counting-allocator suite one level up, to the
+    /// full `run_step_loads` plan+price cycle the serving loops drive.
+    #[test]
+    fn disabled_tracer_keeps_engine_plan_price_allocations_flat() {
+        use crate::config::{ModelConfig, ModelPreset, SystemConfig, SystemPreset};
+        use crate::exec::Engine;
+        use crate::planner::PlannerKind;
+        use crate::routing::Scenario;
+        use crate::util::rng::Rng;
+
+        let e = Engine::modeled(
+            ModelConfig::preset(ModelPreset::Fig1Layer),
+            SystemConfig::preset(SystemPreset::H200x8),
+        );
+        assert!(!e.tracer.is_enabled(), "engines default to a disabled tracer");
+        let mut rng = Rng::new(5);
+        let lm = Scenario::concentrated(0.9, 1).generate_loads(&e.model, 8, 8192, &mut rng);
+        let planner = PlannerKind::llep_default();
+        // Warm every arena (plan scratch, price scratch, report shapes).
+        for _ in 0..3 {
+            e.run_step_loads(&lm, &planner);
+        }
+        let t0 = crate::util::alloc_count::allocations_on_this_thread();
+        e.run_step_loads(&lm, &planner);
+        let per_iter = crate::util::alloc_count::allocations_on_this_thread() - t0;
+        let t1 = crate::util::alloc_count::allocations_on_this_thread();
+        for _ in 0..20 {
+            e.run_step_loads(&lm, &planner);
+        }
+        let total = crate::util::alloc_count::allocations_on_this_thread() - t1;
+        assert_eq!(
+            total,
+            20 * per_iter,
+            "steady-state plan/price must not accrete allocations (tracer disabled)"
+        );
+    }
+}

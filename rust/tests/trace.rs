@@ -1,0 +1,262 @@
+//! Observability integration tests: the Chrome trace-event exporter
+//! over real engine/serve/fleet runs, the paper's timeline claim
+//! asserted on recorded span durations, and JSON round-trips of the
+//! versioned report exporters.
+
+use llep::config::{ModelConfig, ModelPreset, SystemConfig, SystemPreset};
+use llep::coordinator::{ChaosStats, ServeSim};
+use llep::exec::Engine;
+use llep::fleet::{FleetSim, ReplicaConfig, RouterPolicy, Workload};
+use llep::metrics::{chaos_stats_to_json, fleet_report_to_json, SCHEMA_VERSION};
+use llep::planner::PlannerKind;
+use llep::routing::Scenario;
+use llep::trace::Tracer;
+use llep::util::json::{parse, Json};
+use llep::util::rng::Rng;
+
+fn engine() -> Engine {
+    Engine::modeled(
+        ModelConfig::preset(ModelPreset::Fig1Layer),
+        SystemConfig::preset(SystemPreset::H200x8),
+    )
+}
+
+/// Export the sink and re-parse it through the crate's own JSON parser,
+/// so every assertion below runs against what a viewer would actually
+/// load.
+fn exported_events(tracer: &Tracer) -> (Json, Vec<Json>) {
+    let doc = parse(&tracer.export().unwrap().to_string()).unwrap();
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap().to_vec();
+    assert!(!events.is_empty());
+    (doc, events)
+}
+
+fn ph<'a>(e: &'a Json) -> &'a str {
+    e.get("ph").unwrap().as_str().unwrap()
+}
+
+fn name<'a>(e: &'a Json) -> &'a str {
+    e.get("name").unwrap().as_str().unwrap()
+}
+
+/// Max duration (µs) over `name`d complete spans recorded under `pid`.
+fn max_span_dur(events: &[Json], pid: f64, span_name: &str) -> f64 {
+    events
+        .iter()
+        .filter(|e| ph(e) == "X" && name(e) == span_name)
+        .filter(|e| e.get("pid").unwrap().as_f64() == Some(pid))
+        .map(|e| e.get("dur").unwrap().as_f64().unwrap())
+        .fold(0.0, f64::max)
+}
+
+/// The tentpole acceptance: tracing an EP step and an LLEP step of the
+/// same heavily-skewed workload side by side (two Chrome pids, one
+/// sink), EP's longest device-compute span visibly exceeds LLEP's —
+/// the straggler bubble the paper's figures draw, now asserted on the
+/// recorded timeline itself.
+#[test]
+fn ep_vs_llep_trace_shows_the_straggler_bubble() {
+    let tracer = Tracer::enabled();
+    let base = engine();
+    let ep = base.clone().with_tracer(tracer.with_pid(0));
+    let ll = base.clone().with_tracer(tracer.with_pid(1));
+    llep::trace::name_engine_tracks(&ep.tracer, "standard EP", base.system.devices);
+    llep::trace::name_engine_tracks(&ll.tracer, "LLEP", base.system.devices);
+
+    let mut rng = Rng::new(0);
+    let lm = Scenario::concentrated(0.95, 1).generate_loads(&base.model, 8, 32_768, &mut rng);
+    let ep_report = ep.run_step_loads(&lm, &PlannerKind::StandardEp);
+    let ll_report = ll.run_step_loads(&lm, &PlannerKind::llep_default());
+    assert!(ll_report.latency_s < ep_report.latency_s);
+
+    let (doc, events) = exported_events(&tracer);
+
+    // Well-formed Chrome events: every entry names a phase and a pid.
+    for e in &events {
+        assert!(e.get("pid").is_some() && e.get("name").is_some(), "{e:?}");
+        if ph(e) == "X" {
+            assert!(e.get("dur").unwrap().as_f64().unwrap() >= 0.0);
+            assert!(e.get("ts").unwrap().as_f64().unwrap() >= 0.0);
+        }
+    }
+    // Non-empty slice and flow arrays (LLEP's weight rebalancing is the
+    // flow source; EP never transfers weights).
+    assert!(events.iter().any(|e| ph(e) == "X"));
+    let starts: Vec<&Json> = events.iter().filter(|e| ph(e) == "s").collect();
+    let ends: Vec<&Json> = events.iter().filter(|e| ph(e) == "f").collect();
+    assert!(!starts.is_empty(), "LLEP on a skewed step must record weight-transfer flows");
+    assert_eq!(starts.len(), ends.len(), "every flow arrow has both endpoints");
+
+    // The timeline claim, on span durations.
+    let ep_max = max_span_dur(&events, 0.0, "compute");
+    let ll_max = max_span_dur(&events, 1.0, "compute");
+    assert!(ep_max > 0.0 && ll_max > 0.0);
+    assert!(
+        ep_max > 1.5 * ll_max,
+        "EP max compute span {ep_max} µs should visibly exceed LLEP's {ll_max} µs"
+    );
+
+    // The metrics registry rides the same document.
+    let metrics = doc.get("llepMetrics").unwrap();
+    assert_eq!(
+        metrics.get("counters").unwrap().get("engine/steps").unwrap().as_usize(),
+        Some(2)
+    );
+    let hist = metrics.get("histograms").unwrap().get("step/imbalance_ratio").unwrap();
+    assert_eq!(hist.get("count").unwrap().as_usize(), Some(2));
+}
+
+/// A traced serving run records coordinator-track serve events on the
+/// virtual clock, and `Tracer::write` produces a loadable file (while
+/// an unwritable path errors — the CLI's non-zero-exit contract).
+#[test]
+fn serve_trace_records_steps_and_writes_file() {
+    let tracer = Tracer::enabled();
+    let eng = engine().with_tracer(tracer.with_pid(0));
+    llep::trace::name_engine_tracks(&eng.tracer, "llep serve", eng.system.devices);
+    let mut rng = Rng::new(0);
+    let requests = ServeSim::poisson_requests(8, 0.0005, 256, 2048, &mut rng);
+    let sim = ServeSim::with_planner(
+        eng,
+        PlannerKind::llep_default().boxed(),
+        Scenario::concentrated(0.8, 4),
+        8192,
+    );
+    let r = sim.try_run(&requests, &mut Rng::new(1)).unwrap();
+
+    let (doc, events) = exported_events(&tracer);
+    assert!(events.iter().any(|e| ph(e) == "X" && name(e) == "serve-step"));
+    assert!(events.iter().any(|e| ph(e) == "i" && name(e) == "admit"));
+    assert!(events.iter().any(|e| ph(e) == "i" && name(e) == "request-finished"));
+    let counters = doc.get("llepMetrics").unwrap().get("counters").unwrap();
+    assert_eq!(counters.get("serve/finished").unwrap().as_usize(), Some(r.completed));
+
+    let path = std::env::temp_dir().join("llep_trace_serve_test.json");
+    let path = path.to_str().unwrap();
+    tracer.write(path).unwrap();
+    let reread = parse(&std::fs::read_to_string(path).unwrap()).unwrap();
+    assert!(!reread.get("traceEvents").unwrap().as_arr().unwrap().is_empty());
+    let _ = std::fs::remove_file(path);
+
+    assert!(tracer.write("/nonexistent-llep-dir/trace.json").is_err());
+}
+
+/// A traced fleet run: replicas appear as separate Chrome processes,
+/// and every router decision records as a flow arrow from the frontend
+/// workload track to the chosen replica.
+#[test]
+fn fleet_trace_records_router_flows_and_replica_processes() {
+    let tracer = Tracer::enabled();
+    let template = engine().with_tracer(tracer.clone());
+    let sim = FleetSim::new(
+        template,
+        Scenario::concentrated(0.8, 4),
+        vec![ReplicaConfig::default(); 2],
+        16_384,
+    )
+    // Round-robin guarantees both replicas receive work, so the
+    // per-replica compute-span assertions below are deterministic.
+    .with_router(RouterPolicy::parse("round-robin").unwrap())
+    .with_workload(
+        Workload::parse("poisson:n=8,ia=0.0005,prompt=128-512,decode=2-6").unwrap(),
+    );
+    let r = sim.try_run(3).unwrap();
+    assert_eq!(r.completed, 8);
+
+    let (doc, events) = exported_events(&tracer);
+    let route_starts: Vec<&Json> =
+        events.iter().filter(|e| ph(e) == "s" && name(e) == "route").collect();
+    assert_eq!(route_starts.len(), r.requests, "one routing flow per arrival");
+    // Flow arrows start on the frontend process (pid 0) and land on a
+    // replica process (pid >= 1).
+    for s in &route_starts {
+        assert_eq!(s.get("pid").unwrap().as_usize(), Some(0));
+    }
+    assert!(events
+        .iter()
+        .any(|e| ph(e) == "f" && name(e) == "route" && e.get("pid").unwrap().as_f64() != Some(0.0)));
+    // Replica engines emit compute spans under their own pids.
+    assert!(max_span_dur(&events, 1.0, "compute") > 0.0);
+    assert!(max_span_dur(&events, 2.0, "compute") > 0.0);
+    // Process metadata names the frontend and both replicas.
+    let proc_names: Vec<&str> = events
+        .iter()
+        .filter(|e| ph(e) == "M" && name(e) == "process_name")
+        .map(|e| e.get("args").unwrap().get("name").unwrap().as_str().unwrap())
+        .collect();
+    assert!(proc_names.iter().any(|n| n.contains("frontend")), "{proc_names:?}");
+    assert!(proc_names.iter().any(|n| n.contains("replica 0")), "{proc_names:?}");
+    assert!(proc_names.iter().any(|n| n.contains("replica 1")), "{proc_names:?}");
+    let counters = doc.get("llepMetrics").unwrap().get("counters").unwrap();
+    assert_eq!(counters.get("router/arrivals").unwrap().as_usize(), Some(r.requests));
+}
+
+/// Satellite: the fleet report JSON round-trips through the crate's own
+/// parser — schema version, ledger totals and per-replica plan-cache
+/// counters (including `cache_repairs`) all survive.
+#[test]
+fn fleet_report_json_round_trips() {
+    let sim = FleetSim::new(
+        engine(),
+        Scenario::concentrated(0.8, 4),
+        vec![ReplicaConfig::default(); 2],
+        16_384,
+    )
+    .with_workload(
+        Workload::parse("poisson:n=8,ia=0.0005,prompt=128-512,decode=2-6").unwrap(),
+    );
+    let mut r = sim.try_run(3).unwrap();
+    // Plant distinctive non-zero cache counters so "survives the
+    // round-trip" is meaningful even when the run itself had none.
+    r.replicas[0].plan_cache.hits = 11;
+    r.replicas[0].plan_cache.repairs = 7;
+    r.replicas[0].plan_cache.misses = 3;
+    r.replicas[0].plan_cache.forced = 2;
+
+    let re = parse(&fleet_report_to_json(&r).to_string()).unwrap();
+    assert_eq!(re.get("schema_version").unwrap().as_usize(), Some(SCHEMA_VERSION as usize));
+    assert_eq!(
+        re.get("tokens_admitted").unwrap().as_f64(),
+        Some(r.tokens.admitted as f64)
+    );
+    assert_eq!(re.get("tokens_priced").unwrap().as_f64(), Some(r.tokens.priced as f64));
+    assert_eq!(re.get("ledger_exact").unwrap().as_bool(), Some(true));
+    assert_eq!(re.get("completed").unwrap().as_usize(), Some(r.completed));
+
+    let reps = re.get("replicas").unwrap().as_arr().unwrap();
+    assert_eq!(reps.len(), 2);
+    assert_eq!(reps[0].get("cache_hits").unwrap().as_usize(), Some(11));
+    assert_eq!(reps[0].get("cache_repairs").unwrap().as_usize(), Some(7));
+    assert_eq!(reps[0].get("cache_misses").unwrap().as_usize(), Some(3));
+    assert_eq!(reps[0].get("cache_forced").unwrap().as_usize(), Some(2));
+    for (i, (j, p)) in reps.iter().zip(&r.replicas).enumerate() {
+        assert_eq!(
+            j.get("tokens_admitted").unwrap().as_f64(),
+            Some(p.tokens.admitted as f64),
+            "replica {i}"
+        );
+        assert_eq!(j.get("chaos").unwrap().get("requeues").unwrap().as_usize(), Some(0));
+    }
+}
+
+/// Satellite: chaos accounting round-trips exactly, field by field.
+#[test]
+fn chaos_stats_json_round_trips() {
+    let c = ChaosStats {
+        fault_steps: 5,
+        failures: 2,
+        recoveries: 1,
+        requeues: 3,
+        requeued_tokens: 4096,
+        wasted_s: 0.125,
+        max_recovery_steps: 4,
+    };
+    let re = parse(&chaos_stats_to_json(&c).to_string()).unwrap();
+    assert_eq!(re.get("fault_steps").unwrap().as_usize(), Some(5));
+    assert_eq!(re.get("failures").unwrap().as_usize(), Some(2));
+    assert_eq!(re.get("recoveries").unwrap().as_usize(), Some(1));
+    assert_eq!(re.get("requeues").unwrap().as_usize(), Some(3));
+    assert_eq!(re.get("requeued_tokens").unwrap().as_usize(), Some(4096));
+    assert_eq!(re.get("wasted_s").unwrap().as_f64(), Some(0.125));
+    assert_eq!(re.get("max_recovery_steps").unwrap().as_usize(), Some(4));
+}
