@@ -1,0 +1,141 @@
+//! Bench: persistent re-layout vs per-step spill vs the hybrid.
+//!
+//! A drifting hotspot (the hot expert set rotates across devices every
+//! few steps) priced under three strategies:
+//!
+//! 1. **Per-step spill** — bare LLEP: rebalances every step but re-ships
+//!    the same expert weights as spill transfers on every step of every
+//!    regime.
+//! 2. **Pure re-layout** — `placed(ep)`: the layout migrates hot experts
+//!    apart (amortized against the horizon), but between migrations the
+//!    static inner planner eats the imbalance.
+//! 3. **Hybrid** — `placed(llep)`: the layout absorbs the persistent
+//!    pattern while LLEP spills the residual with *current* loads during
+//!    adaptation.
+//!
+//! A tight migration budget (1 move/round) stretches the adaptation
+//! window so the strategies actually separate. A microbench at the end
+//! prices the decorator's planning overhead.
+//!
+//! Run: `cargo bench --bench placement` (add `--quick` to shrink).
+
+use llep::metrics::{format_bytes, format_secs, Table};
+use llep::planner::Registry;
+use llep::prelude::*;
+use llep::routing::LoadMatrix;
+use llep::util::benchkit::{bb, quick_requested, Bencher};
+
+const DEVICES: usize = 4;
+const EXPERTS: usize = 16;
+
+fn lm_from_loads(loads: &[u64], devices: usize) -> LoadMatrix {
+    let mut counts = vec![vec![0u64; loads.len()]; devices];
+    counts[0] = loads.to_vec();
+    LoadMatrix { counts, top_k: 1 }
+}
+
+fn drifting_hotspot(steps: usize, phase_len: usize, hot: u64) -> Vec<Vec<u64>> {
+    (0..steps)
+        .map(|t| {
+            let lo = ((t / phase_len) % DEVICES) * 4;
+            (0..EXPERTS).map(|e| if e >= lo && e < lo + 4 { hot } else { 100 }).collect()
+        })
+        .collect()
+}
+
+fn main() {
+    let quick = quick_requested();
+    let mut model = ModelConfig::preset(ModelPreset::Fig1Layer);
+    model.num_experts = EXPERTS;
+    let engine =
+        Engine::modeled(model, SystemConfig::preset(SystemPreset::H200x8).with_devices(DEVICES))
+            .with_plan_cost(PlanCostModel::default());
+
+    let steps = if quick { 16 } else { 48 };
+    let seq = drifting_hotspot(steps, if quick { 4 } else { 8 }, 16_000);
+    let reg = Registry::builtin();
+
+    let strategies = [
+        ("per-step spill", "llep"),
+        ("pure re-layout", "placed(ep):budget=1"),
+        ("hybrid", "placed(llep):budget=1"),
+    ];
+    let mut t =
+        Table::new(&["strategy", "spec", "mean step", "weight bytes", "migrations", "re-layouts"]);
+    let mut results = Vec::new();
+    for (label, spec) in strategies {
+        let planner = reg.parse(spec).unwrap_or_else(|e| panic!("{spec}: {e}"));
+        let mut bytes = 0u64;
+        let mut lat = 0.0;
+        let mut migrations = 0u64;
+        let mut relayouts = 0u64;
+        for loads in &seq {
+            let r = engine.run_step_loads(&lm_from_loads(loads, DEVICES), &*planner);
+            assert!(!r.oom && !r.stranded, "{spec}: healthy drifting run");
+            bytes += r.bytes_weights + r.placement.migration_bytes;
+            lat += r.latency_s;
+            migrations += r.placement.migrations;
+            relayouts += r.placement.relayouts;
+        }
+        let mean = lat / seq.len() as f64;
+        t.row(vec![
+            label.into(),
+            spec.into(),
+            format_secs(mean),
+            format_bytes(bytes),
+            migrations.to_string(),
+            relayouts.to_string(),
+        ]);
+        results.push((label, bytes, mean));
+    }
+    println!(
+        "Drifting hotspot: 4 colliding hot experts rotate across {DEVICES} devices, {steps} steps\n"
+    );
+    println!("{}", t.render());
+
+    let spill = &results[0];
+    let relayout = &results[1];
+    let hybrid = &results[2];
+    assert!(
+        hybrid.1 < spill.1,
+        "hybrid must move fewer weight bytes than per-step spill: {} vs {}",
+        hybrid.1,
+        spill.1
+    );
+    assert!(
+        hybrid.2 <= relayout.2,
+        "hybrid must not price worse than pure re-layout: {} vs {}",
+        hybrid.2,
+        relayout.2
+    );
+    println!(
+        "hybrid ships {} vs per-step spill {} ({:.1}% of the bytes), mean step {} vs pure \
+         re-layout {}\n",
+        format_bytes(hybrid.1),
+        format_bytes(spill.1),
+        100.0 * hybrid.1 as f64 / spill.1.max(1) as f64,
+        format_secs(hybrid.2),
+        format_secs(relayout.2),
+    );
+
+    // ---- decorator planning overhead -------------------------------------
+    let loads = &seq[0];
+    let bare = reg.parse("llep").unwrap();
+    let placed = reg.parse("placed(llep)").unwrap();
+    // Settle the layout first so the microbench prices the steady state.
+    for _ in 0..8 {
+        let plan = placed.plan(DEVICES, loads, None);
+        llep::planner::recycle_plan(plan);
+    }
+    let mut b = if quick { Bencher::quick() } else { Bencher::new() };
+    let flat = b.bench("plan/llep/N=16", || bb(bare.plan(DEVICES, loads, None)));
+    let wrapped = b.bench("plan/placed(llep)/settled/N=16", || {
+        bb(placed.plan(DEVICES, loads, None))
+    });
+    println!(
+        "settled placed(llep) plan {} vs bare llep {} ({:.2}x)",
+        format_secs(wrapped.mean_s()),
+        format_secs(flat.mean_s()),
+        wrapped.mean_ns / flat.mean_ns.max(1.0)
+    );
+}

@@ -22,6 +22,7 @@
 
 use crate::chaos::{FaultPlan, PoolState};
 use crate::exec::{Engine, ModelStepReport};
+use crate::placement::PlacementStats;
 use crate::planner::{CacheStats, Planner};
 use crate::routing::{DepthProfile, Scenario};
 use crate::trace::{ArgValue, COORD_TID};
@@ -401,6 +402,7 @@ pub struct Replica<'a> {
     oom_steps: usize,
     fallback_steps: usize,
     plan_cache: CacheStats,
+    placement: PlacementStats,
     plan_times: Vec<f64>,
     /// Virtual time spent pricing steps (including chaos waste) — the
     /// numerator of fleet per-replica utilization.
@@ -432,6 +434,7 @@ impl<'a> Replica<'a> {
             oom_steps: 0,
             fallback_steps: 0,
             plan_cache: CacheStats::default(),
+            placement: PlacementStats::default(),
             plan_times: Vec::new(),
             busy_s: 0.0,
         })
@@ -495,6 +498,12 @@ impl<'a> Replica<'a> {
 
     pub fn plan_cache(&self) -> CacheStats {
         self.plan_cache
+    }
+
+    /// Placement activity (re-layouts, migrations, standby promotions)
+    /// accumulated over the run — all zero for stateless planners.
+    pub fn placement(&self) -> PlacementStats {
+        self.placement
     }
 
     /// Per-step planning wall time (sum across each step's layers).
@@ -607,6 +616,7 @@ impl<'a> Replica<'a> {
         self.peak_bytes = self.peak_bytes.max(report.max_peak_bytes());
         self.ledger.add(step_tokens as u64, report.tokens);
         self.plan_cache.absorb(&report.cache);
+        self.placement.absorb(&report.placement);
         self.plan_times
             .push(report.layers.iter().map(|l| l.report.phases.plan_s).sum::<f64>());
 

@@ -27,6 +27,7 @@ use super::replica::{uniform_profile, Replica, ReplicaRequest, ReplicaStepOutcom
 use super::{ChaosStats, TokenLedger};
 use crate::chaos::FaultPlan;
 use crate::exec::Engine;
+use crate::placement::PlacementStats;
 use crate::planner::{CacheStats, Planner, PlannerKind};
 use crate::routing::{DepthProfile, Scenario};
 use crate::util::rng::Rng;
@@ -58,6 +59,9 @@ pub struct ServeReport {
     pub layers: usize,
     /// Plan-cache counters summed over all steps and layers.
     pub plan_cache: CacheStats,
+    /// Persistent-placement activity summed over all steps and layers
+    /// (all zero for stateless planners).
+    pub placement: PlacementStats,
     /// Per-step planning wall time (sum across the step's layers).
     pub plan_time: Summary,
     /// Fault-injection accounting (all zero without a fault plan).
@@ -205,6 +209,7 @@ impl ServeSim {
             peak_bytes: replica.peak_bytes(),
             layers: self.profile.num_layers(),
             plan_cache: replica.plan_cache(),
+            placement: replica.placement(),
             plan_time: replica.plan_time_summary(),
             chaos: replica.chaos_stats(),
         })
@@ -247,6 +252,9 @@ pub struct ContinuousReport {
     pub tokens: TokenLedger,
     /// Plan-cache counters summed over all steps and layers.
     pub plan_cache: CacheStats,
+    /// Persistent-placement activity summed over all steps and layers
+    /// (all zero for stateless planners).
+    pub placement: PlacementStats,
     /// Per-step planning wall time (sum across the step's layers).
     pub plan_time: Summary,
     /// Fault-injection accounting (all zero without a fault plan).
@@ -314,6 +322,7 @@ pub fn run_continuous(
         peak_bytes: replica.peak_bytes(),
         tokens: replica.ledger(),
         plan_cache: replica.plan_cache(),
+        placement: replica.placement(),
         plan_time: replica.plan_time_summary(),
         chaos: replica.chaos_stats(),
     })

@@ -40,6 +40,7 @@ use crate::chaos::PoolState;
 use crate::config::{ModelConfig, SystemConfig};
 use crate::costmodel::{CommCostModel, GemmCostModel, MemoryModel};
 use crate::moe::ExpertWeights;
+use crate::placement::PlacementStats;
 use crate::planner::{CacheOutcome, CacheStats, Planner};
 use crate::routing::{LoadMatrix, Routing};
 use crate::tensor::Mat;
@@ -98,6 +99,11 @@ pub struct StepReport {
     ///
     /// [`CachedPlanner`]: crate::planner::CachedPlanner
     pub cache: CacheStats,
+    /// Persistent-placement activity behind this step's plan (all zero
+    /// for planners without a `placed(...)` layer). `migration_bytes` /
+    /// `migration_s` are what pricing actually charged into
+    /// `latency_s` for the layout moves.
+    pub placement: PlacementStats,
 }
 
 impl StepReport {
@@ -132,9 +138,12 @@ pub struct PlanCostModel {
     /// Charged when a plan-cache hit retargeted a cached plan
     /// (the O(segments) path of [`crate::planner::retarget_plan`]).
     pub hit_s: f64,
-    /// Charged when the cache delta-repaired a retargeted plan (the
-    /// O(changed devices · log P) middle tier) — between a hit and a
-    /// fresh plan.
+    /// Charged **per peeled segment** when the cache delta-repaired a
+    /// retargeted plan: a repair costs
+    /// `hit_s + peeled_segments * repair_s`, so a one-segment touch-up
+    /// prices barely above a hit while a broad rebalance approaches a
+    /// fresh plan — the repair tier's actual O(changed work) shape,
+    /// instead of the historical flat per-repair constant.
     pub repair_s: f64,
 }
 
@@ -142,8 +151,10 @@ impl Default for PlanCostModel {
     fn default() -> Self {
         // ~LLA wall time at N=128 experts vs the retarget path of a hit
         // (both in the range measured by `cargo bench --bench decode_loop`);
-        // repair sits in between (retarget + a partial re-spill).
-        PlanCostModel { fresh_s: 25e-6, hit_s: 2e-6, repair_s: 6e-6 }
+        // repair adds ~1 µs per peeled segment on top of the retarget
+        // (each peel is one excess computation + spill re-insert), so
+        // typical few-segment repairs land between hit_s and fresh_s.
+        PlanCostModel { fresh_s: 25e-6, hit_s: 2e-6, repair_s: 1e-6 }
     }
 }
 
@@ -165,6 +176,11 @@ pub struct Engine {
     /// When set, `T_plan` is charged from this model instead of measured
     /// planner wall time, making pricing fully deterministic.
     pub plan_cost: Option<PlanCostModel>,
+    /// Bytes moved per expert migration (the persistent-placement
+    /// layer). `None` charges the model's expert weight bytes; training
+    /// setups that move optimizer state alongside the weights install a
+    /// larger figure via [`with_placement`](Self::with_placement).
+    pub migration_bytes_per_expert: Option<u64>,
     /// Per-device health/speed view (the chaos layer). Defaults to the
     /// system's nominal pool — homogeneous-healthy unless the preset
     /// declares `device_speeds`. While the pool is degraded, planners get
@@ -199,6 +215,7 @@ impl Engine {
             topo,
             overlap_weights: false,
             plan_cost: None,
+            migration_bytes_per_expert: None,
             tracer: crate::trace::Tracer::disabled(),
         }
     }
@@ -244,6 +261,15 @@ impl Engine {
     /// measured planner wall time (reproducible pricing for the tuner).
     pub fn with_plan_cost(mut self, cost: PlanCostModel) -> Engine {
         self.plan_cost = Some(cost);
+        self
+    }
+
+    /// Override the bytes charged per expert migration performed by a
+    /// `placed(...)` planner. The default (without this call) is the
+    /// model's per-expert weight size; set a larger figure when a move
+    /// also ships optimizer state (training-time re-layouts).
+    pub fn with_placement(mut self, bytes_per_expert: u64) -> Engine {
+        self.migration_bytes_per_expert = Some(bytes_per_expert);
         self
     }
 
@@ -377,10 +403,47 @@ impl Engine {
                 &[("expert", ArgValue::Num(tr.expert as f64))],
             );
         }
+        // Persistent-placement migrations: one `migration` span on the
+        // coordinator track per re-layout step, plus a flow arrow per
+        // moved expert (distinct from per-step spill `weights` arrows —
+        // these change where the expert *lives*).
+        let pl = &report.placement;
+        if !plan.migrations.is_empty() {
+            t.span(
+                COORD_TID,
+                "migration",
+                "placement",
+                plan_end,
+                pl.migration_s,
+                &[
+                    ("experts", ArgValue::Num(plan.migrations.len() as f64)),
+                    ("bytes", ArgValue::Num(pl.migration_bytes as f64)),
+                    ("standby_promotions", ArgValue::Num(pl.standby_promotions as f64)),
+                ],
+            );
+            for tr in &plan.migrations {
+                t.flow(
+                    "migrate",
+                    "placement",
+                    FlowPoint { pid, tid: device_tid(tr.from), ts_s: plan_end },
+                    FlowPoint { pid, tid: device_tid(tr.to), ts_s: dispatch_end },
+                    &[("expert", ArgValue::Num(tr.expert as f64))],
+                );
+            }
+        }
         // Metrics registry (dumped alongside the trace).
         t.count("engine/steps", 1);
         t.count(outcome, 1);
         t.count("engine/weight_transfers", report.weight_transfers as u64);
+        if pl.migrations > 0 {
+            t.count("placement/migrations", pl.migrations);
+        }
+        if pl.standby_promotions > 0 {
+            t.count("placement/standby_promotions", pl.standby_promotions);
+        }
+        if pl.relayouts > 0 {
+            t.count("placement/relayouts", pl.relayouts);
+        }
         if report.oom {
             t.count("engine/oom_steps", 1);
         }
@@ -420,7 +483,11 @@ impl Engine {
             let plan = plan_once();
             let t = match planner.last_cache_outcome() {
                 Some(CacheOutcome::Hit) => cost.hit_s,
-                Some(CacheOutcome::Repaired) => cost.repair_s,
+                // A repair is a retarget (hit_s) plus per-peeled-segment
+                // rebalance work — drift-dependent, not flat.
+                Some(CacheOutcome::Repaired) => {
+                    cost.hit_s + planner.last_repair_peeled() as f64 * cost.repair_s
+                }
                 _ => cost.fresh_s,
             };
             (plan, t)

@@ -28,6 +28,7 @@
 //! *wall* cost of planning 36+ layers stays near one layer's cost.
 
 use super::{Engine, StepReport};
+use crate::placement::PlacementStats;
 use crate::planner::{CacheStats, Planner, RoutePlan};
 use crate::routing::{DepthProfile, LoadMatrix};
 use crate::util::rng::Rng;
@@ -81,6 +82,9 @@ pub struct ModelStepReport {
     /// Plan-cache counters summed across layers (all zero when the
     /// planner has no cache).
     pub cache: CacheStats,
+    /// Persistent-placement activity summed across layers (all zero
+    /// when the planner has no `placed(...)` layer).
+    pub placement: PlacementStats,
 }
 
 impl ModelStepReport {
@@ -210,8 +214,10 @@ impl Engine {
         }
 
         let mut cache = CacheStats::default();
+        let mut placement = PlacementStats::default();
         for layer in &layers {
             cache.absorb(&layer.report.cache);
+            placement.absorb(&layer.report.placement);
         }
 
         Ok(ModelStepReport {
@@ -225,6 +231,7 @@ impl Engine {
             overlap_saved_s,
             device_peak_bytes,
             cache,
+            placement,
             layers,
         })
     }

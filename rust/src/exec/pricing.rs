@@ -151,6 +151,37 @@ fn price_plan_impl(
     }
     let bytes_weights = plan.transfers.len() as u64 * wbytes;
 
+    // ---- expert migrations (persistent placement) ----
+    // Charged UNCONDITIONALLY, after the amortization zero-out above: a
+    // migration is a one-time weight movement the placement layer
+    // decided *this step*, so even planners whose steady-state spill
+    // transfers are amortized away (EPLB-style) pay it now. Receiving
+    // devices absorb it into the same pre-compute weights span — the new
+    // resident weights must land before that device computes against the
+    // new layout. `plan.migrations` is canonical `(to, from, expert)`
+    // order, so accumulation is deterministic.
+    let mut placement = planner.last_placement_stats().unwrap_or_default();
+    if !plan.migrations.is_empty() {
+        let mig_bytes = engine.migration_bytes_per_expert.unwrap_or(wbytes);
+        let mut migration_s = 0.0f64;
+        for t in &plan.migrations {
+            let dt = if degraded && !pool.devices[t.from].alive {
+                // The source HBM died with its device: the weights
+                // restore from the host checkpoint path instead.
+                engine.topo.latency_s + mig_bytes as f64 / engine.topo.inter_node_bw
+            } else {
+                engine.comm.p2p_time(t.from, t.to, mig_bytes)
+            };
+            ps.weights_recv_s[t.to] += dt;
+            migration_s += dt;
+            if degraded && !pool.devices[t.to].alive {
+                stranded = true; // migrated onto a dead device
+            }
+        }
+        placement.migration_bytes = plan.migrations.len() as u64 * mig_bytes;
+        placement.migration_s = migration_s;
+    }
+
     // ---- compute (Eq. 3 or measured) ----
     // A chunking planner splits each device's per-expert GEMMs into
     // chunk-sized pieces (gradient-checkpointing baseline, paper §3.1).
@@ -257,6 +288,7 @@ fn price_plan_impl(
         fallback_ep: plan.fallback_ep,
         tokens: lm.total_load() / lm.top_k as u64,
         cache: planner.last_cache_outcome().map(CacheStats::of).unwrap_or_default(),
+        placement,
     }
 }
 

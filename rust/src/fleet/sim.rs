@@ -29,6 +29,7 @@ use crate::coordinator::{
     uniform_profile, ChaosStats, Replica, ReplicaRequest, ReplicaStepOutcome, TokenLedger,
 };
 use crate::exec::{Engine, PlanCostModel};
+use crate::placement::PlacementStats;
 use crate::planner::{CacheStats, Planner, Registry};
 use crate::routing::Scenario;
 use crate::util::rng::Rng;
@@ -178,6 +179,9 @@ pub struct FleetReplicaReport {
     pub oom_steps: usize,
     pub fallback_steps: usize,
     pub plan_cache: CacheStats,
+    /// Persistent-placement activity local to this replica (all zero
+    /// for stateless planners).
+    pub placement: PlacementStats,
 }
 
 /// Result of one fleet run.
@@ -633,6 +637,7 @@ impl FleetSim {
                 oom_steps: rep.oom_steps(),
                 fallback_steps: rep.fallback_steps(),
                 plan_cache: rep.plan_cache(),
+                placement: rep.placement(),
             });
         }
         Ok(FleetReport {

@@ -54,6 +54,7 @@ pub mod fleet;
 pub mod harness;
 pub mod metrics;
 pub mod moe;
+pub mod placement;
 pub mod planner;
 pub mod routing;
 #[cfg(feature = "pjrt")]
@@ -82,6 +83,7 @@ pub mod prelude {
     pub use crate::costmodel::{CommCostModel, GemmCostModel, MemoryModel};
     pub use crate::exec::{Engine, GemmBackendKind, ModelStepReport, PlanCostModel, StepReport};
     pub use crate::fleet::{FleetFaultPlan, FleetSim, ReplicaConfig, RouterPolicy, Workload};
+    pub use crate::placement::{Placed, PlacementConfig, PlacementManager, PlacementStats};
     pub use crate::planner::{
         parse_planner, CacheStats, CachedPlanner, Planner, PlannerKind, RoutePlan,
     };

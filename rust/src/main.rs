@@ -52,8 +52,8 @@ use llep::harness;
 use llep::fleet::{FleetFaultPlan, FleetSim, ReplicaConfig, RouterPolicy, Workload};
 use llep::metrics::{
     chaos_stats_to_json, fleet_replica_table, fleet_report_to_json, format_bytes, format_cache,
-    format_chaos, format_secs, model_report_table, tune_front_table, tune_report_to_json,
-    tune_trials_table, Table, SCHEMA_VERSION,
+    format_chaos, format_placement, format_secs, model_report_table, placement_to_json,
+    tune_front_table, tune_report_to_json, tune_trials_table, Table, SCHEMA_VERSION,
 };
 use llep::planner::{CachedPlanner, Planner, PlannerKind, Registry};
 use llep::routing::{DepthProfile, RoutingTrace, Scenario};
@@ -311,11 +311,13 @@ fn planners_from_args(
     let every = args.get_usize("replan-every", 0)?;
     let mut wrapped: Vec<Box<dyn Planner>> = Vec::with_capacity(base.len());
     for p in base {
-        if !p.replay_safe() {
-            // Already stateful (an explicit cached(...) spec): wrapping it
-            // again would shadow the user's configured cache, and quietly
-            // ignoring the flags would run a different experiment than the
-            // command line states — refuse instead.
+        if p.spec().contains("cached(") {
+            // A cache is already configured somewhere inside this spec:
+            // wrapping it again would shadow the user's configured cache,
+            // and quietly ignoring the flags would run a different
+            // experiment than the command line states — refuse instead.
+            // (Stateful-but-uncached specs like placed(llep) are fine to
+            // wrap: the outer cache keys entries to the layout generation.)
             return Err(format!(
                 "--plan-reuse/--replan-every/--cache-drift cannot be combined with the \
                  already-cached planner spec {:?}; set drift=/every=/q= inside the spec",
@@ -689,7 +691,7 @@ fn cmd_serve(args: &llep::util::cli::Args) -> Result<(), String> {
         vec![PlannerKind::StandardEp.boxed(), PlannerKind::Llep(llep).boxed()];
     let mut t = Table::new(&[
         "planner", "makespan", "p50 latency", "p99 latency", "tok/s", "p50 plan", "plan cache",
-        "chaos",
+        "placement", "chaos",
     ]);
     let tracer = tracer_from_args(args);
     let mut unrecoverable: Vec<(String, String)> = Vec::new();
@@ -716,6 +718,7 @@ fn cmd_serve(args: &llep::util::cli::Args) -> Result<(), String> {
                     format!("{:.0}", r.throughput_tps()),
                     format_secs(r.plan_time.p50),
                     format_cache(&r.plan_cache),
+                    format_placement(&r.placement),
                     format_chaos(&r.chaos),
                 ]);
             }
@@ -725,6 +728,7 @@ fn cmd_serve(args: &llep::util::cli::Args) -> Result<(), String> {
             Err(e) => {
                 t.row(vec![
                     label.clone(),
+                    "-".into(),
                     "-".into(),
                     "-".into(),
                     "-".into(),
@@ -995,6 +999,7 @@ fn cmd_chaos(args: &llep::util::cli::Args) -> Result<(), String> {
                 ("p99_latency_s", Json::num(r.request_latency.p99)),
                 ("throughput_tps", Json::num(r.throughput_tps())),
                 ("completed", Json::num(r.completed as f64)),
+                ("placement", placement_to_json(&r.placement)),
                 ("chaos", chaos_stats_to_json(&r.chaos)),
             ]),
             Err(e) => {
@@ -1308,6 +1313,12 @@ fn cmd_info() -> Result<(), String> {
         "cached",
         "cross-step plan-reuse decorator (wraps any spec)",
         "cached(ep):drift=0.05,every=0,q=1024,repair=0.15"
+    );
+    println!(
+        "  {:<8} {:<55} e.g. {}",
+        "placed",
+        "persistent expert re-layout decorator (wraps any spec)",
+        "placed(llep):ema=0.25,budget=4,horizon=32,standby=1"
     );
     println!("\ntimeline tracing (--trace out.json on run/serve/chaos/fleet):");
     println!("  records the virtual-clock execution timeline — per-device compute spans,");

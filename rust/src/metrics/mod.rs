@@ -5,6 +5,7 @@ pub mod chart;
 
 use crate::coordinator::ChaosStats;
 use crate::exec::{ModelStepReport, StepReport};
+use crate::placement::PlacementStats;
 use crate::util::json::Json;
 
 pub use crate::planner::CacheStats;
@@ -169,7 +170,35 @@ pub fn report_to_json(r: &StepReport) -> Json {
         ("cache_repairs", Json::num(r.cache.repairs as f64)),
         ("cache_misses", Json::num(r.cache.misses as f64)),
         ("cache_forced", Json::num(r.cache.forced as f64)),
+        ("placement", placement_to_json(&r.placement)),
     ])
+}
+
+/// JSON export of persistent-placement counters (all zero for
+/// stateless planners).
+pub fn placement_to_json(p: &PlacementStats) -> Json {
+    Json::obj(vec![
+        ("relayouts", Json::num(p.relayouts as f64)),
+        ("migrations", Json::num(p.migrations as f64)),
+        ("evictions", Json::num(p.evictions as f64)),
+        ("standby_promotions", Json::num(p.standby_promotions as f64)),
+        ("migration_bytes", Json::num(p.migration_bytes as f64)),
+        ("migration_s", Json::num(p.migration_s)),
+    ])
+}
+
+/// Compact placement cell for serving tables: `-` when the planner
+/// never touched the layout.
+pub fn format_placement(p: &PlacementStats) -> String {
+    if !p.any() {
+        "-".into()
+    } else {
+        let mut s = format!("{} mig / {}", p.migrations, format_bytes(p.migration_bytes));
+        if p.standby_promotions > 0 {
+            s.push_str(&format!(" / {} promo", p.standby_promotions));
+        }
+        s
+    }
 }
 
 /// Format plan-cache counters as `hits/lookups (rate)` — with a `+Nr`
@@ -399,6 +428,7 @@ pub fn fleet_report_to_json(r: &crate::fleet::FleetReport) -> Json {
                     ("cache_repairs", Json::num(p.plan_cache.repairs as f64)),
                     ("cache_misses", Json::num(p.plan_cache.misses as f64)),
                     ("cache_forced", Json::num(p.plan_cache.forced as f64)),
+                    ("placement", placement_to_json(&p.placement)),
                     ("chaos", chaos_stats_to_json(&p.chaos)),
                 ])
             })),
@@ -451,6 +481,7 @@ pub fn model_report_to_json(r: &ModelStepReport) -> Json {
         ("cache_misses", Json::num(r.cache.misses as f64)),
         ("cache_forced", Json::num(r.cache.forced as f64)),
         ("cache_hit_rate", Json::num(r.cache.hit_rate())),
+        ("placement", placement_to_json(&r.placement)),
         (
             "layer_latencies_s",
             Json::arr(r.layers.iter().map(|l| Json::num(l.report.latency_s))),
@@ -658,6 +689,26 @@ mod tests {
         assert_eq!(format_cache(&c), "3/4 (75%)");
         let r = CacheStats { hits: 3, repairs: 2, misses: 1, forced: 0 };
         assert_eq!(format_cache(&r), "3+2r/6 (83%)");
+    }
+
+    #[test]
+    fn placement_formatting_and_json() {
+        assert_eq!(format_placement(&PlacementStats::default()), "-");
+        let p = PlacementStats {
+            relayouts: 2,
+            migrations: 3,
+            evictions: 0,
+            standby_promotions: 1,
+            migration_bytes: 3 << 20,
+            migration_s: 1e-3,
+        };
+        let cell = format_placement(&p);
+        assert!(cell.contains("3 mig"), "{cell}");
+        assert!(cell.contains("1 promo"), "{cell}");
+        let json = placement_to_json(&p).to_string();
+        assert!(json.contains("\"migrations\":3"), "{json}");
+        assert!(json.contains("\"standby_promotions\":1"), "{json}");
+        assert!(json.contains("\"migration_s\""), "{json}");
     }
 
     #[test]

@@ -1,0 +1,264 @@
+//! [`Placed`]: the `placed(<inner>):ema=,budget=,horizon=,standby=`
+//! registry decorator. Wraps any planner so it plans *against the
+//! current layout* owned by a shared [`PlacementManager`].
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use super::{PlacementConfig, PlacementManager, PlacementStats};
+use crate::chaos::PoolState;
+use crate::planner::{CacheOutcome, Planner, RepairParams, RoutePlan};
+use crate::topology::Topology;
+
+static NEXT_PLACED_ID: AtomicUsize = AtomicUsize::new(1);
+
+thread_local! {
+    /// Per-thread (placed id -> last round stats) table, mirroring the
+    /// plan cache's last-outcome idiom: the engine prices the plan on
+    /// the thread that requested it, so the hook stays lock-free.
+    static LAST_STATS: RefCell<Vec<(usize, PlacementStats)>> = const { RefCell::new(Vec::new()) };
+}
+
+/// A planner decorator owning persistent placement state: every plan
+/// call first runs the placement decision round (EMA update, standby
+/// promotion, amortized migration, standby refresh), then lets the
+/// inner planner plan in layout space, and finally relabels the plan
+/// back and attaches the round's migration transfers to
+/// [`RoutePlan::migrations`].
+///
+/// Stateful: `replay_safe()` is false — the engine times a single plan
+/// call and multi-layer runners plan layers sequentially in depth order,
+/// so the observation sequence (and therefore the layout evolution) is a
+/// deterministic function of (spec, scenario, seed).
+pub struct Placed {
+    inner: Box<dyn Planner>,
+    cfg: PlacementConfig,
+    id: usize,
+    mgr: Mutex<PlacementManager>,
+}
+
+impl Placed {
+    pub fn new(inner: Box<dyn Planner>) -> Placed {
+        Placed::with_config(inner, PlacementConfig::default())
+    }
+
+    pub fn with_config(inner: Box<dyn Planner>, cfg: PlacementConfig) -> Placed {
+        Placed {
+            inner,
+            cfg,
+            id: NEXT_PLACED_ID.fetch_add(1, Ordering::Relaxed),
+            mgr: Mutex::new(PlacementManager::new(cfg)),
+        }
+    }
+
+    pub fn config(&self) -> PlacementConfig {
+        self.cfg
+    }
+
+    fn record(&self, stats: PlacementStats) {
+        LAST_STATS.with(|slot| {
+            let mut v = slot.borrow_mut();
+            match v.iter_mut().find(|(id, _)| *id == self.id) {
+                Some(entry) => entry.1 = stats,
+                None => v.push((self.id, stats)),
+            }
+        });
+    }
+}
+
+impl Planner for Placed {
+    fn plan_with_stats(
+        &self,
+        devices: usize,
+        loads: &[u64],
+        stats: &[u64],
+        topo: Option<&Topology>,
+    ) -> RoutePlan {
+        self.plan_with_pool(devices, loads, stats, topo, None)
+    }
+
+    fn plan_with_pool(
+        &self,
+        devices: usize,
+        loads: &[u64],
+        stats: &[u64],
+        topo: Option<&Topology>,
+        pool: Option<&PoolState>,
+    ) -> RoutePlan {
+        let mut mgr = self.mgr.lock().expect("placement state mutex");
+        let gi = mgr.begin_round(devices, loads, stats, topo, pool);
+        let mut plan = {
+            let (pl, ps) = mgr.layout_inputs();
+            self.inner.plan_with_pool(devices, pl, ps, topo, pool)
+        };
+        mgr.finish_round(gi, &mut plan);
+        let round = mgr.round_stats();
+        drop(mgr);
+        self.record(round);
+        plan
+    }
+
+    fn label(&self) -> String {
+        format!("Placed[{}]", self.inner.label())
+    }
+
+    fn spec(&self) -> String {
+        format!(
+            "placed({}):ema={},budget={},horizon={},standby={}",
+            self.inner.spec(),
+            self.cfg.ema,
+            self.cfg.budget,
+            self.cfg.horizon,
+            self.cfg.standby
+        )
+    }
+
+    fn chunk_tokens(&self) -> Option<u64> {
+        self.inner.chunk_tokens()
+    }
+
+    fn charges_weight_transfers(&self) -> bool {
+        self.inner.charges_weight_transfers()
+    }
+
+    fn wants_stale_stats(&self) -> bool {
+        self.inner.wants_stale_stats()
+    }
+
+    /// Stateful: every plan call mutates the EMA (and possibly the
+    /// layout), so it must be observed exactly once.
+    fn replay_safe(&self) -> bool {
+        false
+    }
+
+    fn last_cache_outcome(&self) -> Option<CacheOutcome> {
+        self.inner.last_cache_outcome()
+    }
+
+    fn last_repair_peeled(&self) -> u64 {
+        self.inner.last_repair_peeled()
+    }
+
+    /// Deliberately `None`: the cache's delta-repair tier re-spills
+    /// against the block-native capacity model (`native(e) = e / M`),
+    /// which is exactly the assumption a re-layout breaks. A cache
+    /// wrapped around `placed(...)` therefore only hits or replans —
+    /// never repairs across an evolved layout.
+    fn repair_params(&self) -> Option<RepairParams> {
+        None
+    }
+
+    fn layout_generation(&self) -> u64 {
+        self.mgr.lock().expect("placement state mutex").generation()
+    }
+
+    fn last_placement_stats(&self) -> Option<PlacementStats> {
+        LAST_STATS.with(|slot| {
+            slot.borrow().iter().find(|(id, _)| *id == self.id).map(|(_, s)| *s)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::validate_plan_on_layout;
+    use crate::planner::{Llep, PlannerKind};
+
+    fn hot_loads() -> Vec<u64> {
+        let mut loads = vec![100u64; 16];
+        for l in loads.iter_mut().take(4) {
+            *l = 4_000;
+        }
+        loads
+    }
+
+    #[test]
+    fn placed_llep_plans_against_the_evolved_layout() {
+        let p = Placed::with_config(
+            Box::new(Llep::new(crate::config::LlepConfig::default())),
+            PlacementConfig { budget: 8, ..PlacementConfig::default() },
+        );
+        let loads = hot_loads();
+        let gen0 = p.layout_generation();
+        let first = p.plan(4, &loads, None);
+        assert!(!first.migrations.is_empty(), "colliding hotspot must trigger migration");
+        assert!(p.layout_generation() > gen0);
+        let stats = p.last_placement_stats().expect("stats recorded");
+        assert!(stats.migrations > 0 && stats.relayouts == 1);
+
+        // Steady state: the layout absorbed the hotspot, so LLEP no
+        // longer needs per-step spill transfers.
+        let mut settled = first;
+        for _ in 0..6 {
+            settled = p.plan(4, &loads, None);
+        }
+        assert!(settled.migrations.is_empty(), "layout settled: no further migration");
+        assert!(
+            settled.transfers.len() < 2,
+            "re-layout should absorb the spills: {:?}",
+            settled.transfers
+        );
+    }
+
+    #[test]
+    fn plans_validate_against_the_current_layout() {
+        let p = Placed::new(PlannerKind::llep_default().boxed());
+        let loads = hot_loads();
+        for _ in 0..5 {
+            let plan = p.plan(4, &loads, None);
+            let mgr = p.mgr.lock().unwrap();
+            let home: Vec<usize> = (0..16).map(|e| mgr.group_map(0).device_of(e)).collect();
+            drop(mgr);
+            validate_plan_on_layout(&plan, &loads, &home).unwrap();
+        }
+    }
+
+    #[test]
+    fn settled_placement_rounds_allocate_nothing() {
+        // The steady-state contract: once the layout has absorbed the
+        // hotspot and no migration fires, a full plan round (EMA update,
+        // decision scan, permute, inner plan, unpermute) touches only the
+        // manager's held buffers and the planner scratch arena.
+        let p = Placed::with_config(
+            PlannerKind::llep_default().boxed(),
+            PlacementConfig { budget: 8, ..PlacementConfig::default() },
+        );
+        let loads = hot_loads();
+        let mut last = None;
+        for _ in 0..8 {
+            let plan = p.plan(4, &loads, None);
+            last = Some(plan.migrations.len());
+            crate::planner::recycle_plan(plan);
+        }
+        assert_eq!(last, Some(0), "layout must settle before measuring");
+        let before = crate::util::alloc_count::allocations_on_this_thread();
+        for _ in 0..16 {
+            let plan = p.plan(4, &loads, None);
+            crate::planner::recycle_plan(plan);
+        }
+        let after = crate::util::alloc_count::allocations_on_this_thread();
+        assert_eq!(after - before, 0, "settled rounds must not allocate");
+    }
+
+    #[test]
+    fn spec_round_trip_shape() {
+        let p = Placed::with_config(
+            PlannerKind::llep_default().boxed(),
+            PlacementConfig {
+                ema: 0.5,
+                budget: 2,
+                horizon: 16.0,
+                standby: 1,
+                ..PlacementConfig::default()
+            },
+        );
+        assert_eq!(
+            p.spec(),
+            format!("placed({}):ema=0.5,budget=2,horizon=16,standby=1", p.inner.spec())
+        );
+        assert!(p.label().starts_with("Placed[LLEP"));
+        assert!(!p.replay_safe());
+    }
+}

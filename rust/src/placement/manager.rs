@@ -1,0 +1,588 @@
+//! The stateful placement engine: EMA load tracking, the amortized
+//! migrate/replicate/evict decision rule, and the in-place plan
+//! relabeling machinery. See the module docs in [`super`] for the model.
+
+use super::{ExpertMap, PlacementConfig, PlacementStats};
+use crate::chaos::PoolState;
+use crate::planner::{RoutePlan, WeightTransfer};
+use crate::topology::Topology;
+
+/// Layout groups kept before the least-recently-used one is dropped. A
+/// group forms per distinct load-signature regime — in practice one per
+/// MoE layer (depth-varying hotspots) plus one per drift epoch.
+const GROUP_CAP: usize = 64;
+
+/// Maximum L1 share distance for an observation to join an existing
+/// group (total share mass is 1, so 2.0 is the theoretical maximum).
+/// New regimes beyond this inherit the most recent layout and track
+/// their own EMA from scratch.
+const GROUP_MATCH: f64 = 0.6;
+
+/// Migration targets must run at no less than this fraction of the
+/// fastest alive device — never migrate onto dead or badly slowed
+/// devices (the chaos contract).
+const TARGET_SPEED_FLOOR: f64 = 0.5;
+
+/// One load-signature regime: its EMA of per-expert shares and the
+/// expert layout evolved for it.
+#[derive(Clone, Debug)]
+struct Group {
+    ema: Vec<f64>,
+    map: ExpertMap,
+    last_used: u64,
+}
+
+/// Owns the mutable expert layout across steps. All decision state and
+/// working buffers live here, so a warmed manager performs no heap
+/// allocation on rounds where no placement action fires.
+///
+/// Every decision is a deterministic function of the observation
+/// sequence (index-ordered scans, sequential float accumulation), so
+/// placement state evolves bit-reproducibly from (spec, scenario, seed).
+#[derive(Debug)]
+pub struct PlacementManager {
+    cfg: PlacementConfig,
+    groups: Vec<Group>,
+    generation: u64,
+    clock: u64,
+    // Reusable buffers (steady state allocates nothing).
+    shares: Vec<f64>,
+    dev_share: Vec<f64>,
+    permuted_loads: Vec<u64>,
+    permuted_stats: Vec<u64>,
+    visited: Vec<bool>,
+    moves: Vec<WeightTransfer>,
+    topk: Vec<usize>,
+    round: PlacementStats,
+}
+
+impl PlacementManager {
+    pub fn new(cfg: PlacementConfig) -> PlacementManager {
+        PlacementManager {
+            cfg,
+            groups: Vec::new(),
+            generation: 0,
+            clock: 0,
+            shares: Vec::new(),
+            dev_share: Vec::new(),
+            permuted_loads: Vec::new(),
+            permuted_stats: Vec::new(),
+            visited: Vec::new(),
+            moves: Vec::new(),
+            topk: Vec::new(),
+            round: PlacementStats::default(),
+        }
+    }
+
+    /// Monotone layout-generation counter: bumps whenever any group's
+    /// primary layout changes (migration or standby promotion). The plan
+    /// cache keys entries on it so re-layouts invalidate stale plans.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Placement activity of the most recent round.
+    pub fn round_stats(&self) -> PlacementStats {
+        self.round
+    }
+
+    /// The layout-space load/stat views produced by the most recent
+    /// [`begin_round`](Self::begin_round).
+    pub fn layout_inputs(&self) -> (&[u64], &[u64]) {
+        (&self.permuted_loads, &self.permuted_stats)
+    }
+
+    /// The layout a group currently plans against (test/debug view).
+    pub fn group_map(&self, gi: usize) -> &ExpertMap {
+        &self.groups[gi].map
+    }
+
+    /// Observe one step's statistics and run the between-steps decision
+    /// round: match the load regime to a group, update its EMA, promote
+    /// standbys of experts stranded on dead devices, perform paid
+    /// migration swaps under the budget/horizon rule, and refresh warm
+    /// standbys. Fills the layout-space input buffers for the inner
+    /// planner and returns the group index for
+    /// [`finish_round`](Self::finish_round).
+    pub fn begin_round(
+        &mut self,
+        devices: usize,
+        loads: &[u64],
+        stats: &[u64],
+        topo: Option<&Topology>,
+        pool: Option<&PoolState>,
+    ) -> usize {
+        self.clock += 1;
+        self.round = PlacementStats::default();
+        self.moves.clear();
+
+        let n = stats.len();
+        self.shares.clear();
+        self.shares.resize(n, 0.0);
+        let total: u64 = stats.iter().sum();
+        if total > 0 {
+            let inv = 1.0 / total as f64;
+            for (s, &l) in self.shares.iter_mut().zip(stats) {
+                *s = l as f64 * inv;
+            }
+        }
+
+        let gi = self.match_group(devices, n);
+        self.groups[gi].last_used = self.clock;
+
+        if total > 0 && devices > 1 {
+            let a = self.cfg.ema.clamp(1e-6, 1.0);
+            let g = &mut self.groups[gi];
+            for (m, &s) in g.ema.iter_mut().zip(&self.shares) {
+                *m += a * (s - *m);
+            }
+            let moved = self.promote_standbys(gi, pool);
+            let migrated = self.migrate(gi, topo, pool);
+            self.refresh_standbys(gi, topo, pool);
+            if moved || migrated {
+                self.generation += 1;
+                self.round.relayouts += 1;
+            }
+        }
+
+        let g = &self.groups[gi];
+        g.map.permute_into(loads, &mut self.permuted_loads);
+        g.map.permute_into(stats, &mut self.permuted_stats);
+        gi
+    }
+
+    /// Relabel the inner planner's slot-space plan back to real expert
+    /// ids (in place) and attach this round's migration transfers in
+    /// canonical order.
+    pub fn finish_round(&mut self, gi: usize, plan: &mut RoutePlan) {
+        self.groups[gi].map.unpermute_plan_in_place(plan, &mut self.visited);
+        if !self.moves.is_empty() {
+            self.moves.sort_unstable_by_key(|t| (t.to, t.from, t.expert));
+            plan.migrations.extend_from_slice(&self.moves);
+        }
+    }
+
+    /// Nearest group by L1 share distance, or a freshly spawned one that
+    /// inherits the most recently used same-shape layout (placement is a
+    /// property of the physical pool; a new traffic regime starts from
+    /// the layout the previous regime evolved).
+    fn match_group(&mut self, devices: usize, n: usize) -> usize {
+        let mut best: Option<(usize, f64)> = None;
+        for (i, g) in self.groups.iter().enumerate() {
+            if g.map.devices() != devices || g.ema.len() != n {
+                continue;
+            }
+            let dist: f64 =
+                g.ema.iter().zip(&self.shares).map(|(a, b)| (a - b).abs()).sum();
+            if best.is_none_or(|(_, d)| dist < d) {
+                best = Some((i, dist));
+            }
+        }
+        if let Some((i, d)) = best {
+            if d <= GROUP_MATCH {
+                return i;
+            }
+        }
+        let map = self
+            .groups
+            .iter()
+            .filter(|g| g.map.devices() == devices && g.ema.len() == n)
+            .max_by_key(|g| g.last_used)
+            .map(|g| g.map.clone())
+            .unwrap_or_else(|| ExpertMap::identity(n, devices));
+        if self.groups.len() >= GROUP_CAP {
+            let oldest = self
+                .groups
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, g)| g.last_used)
+                .map(|(i, _)| i)
+                .expect("cap > 0");
+            self.groups.swap_remove(oldest);
+        }
+        self.groups.push(Group { ema: self.shares.clone(), map, last_used: self.clock });
+        self.groups.len() - 1
+    }
+
+    /// Free failover: every expert whose owner device died and which has
+    /// an alive warm standby swaps places with the coldest expert on the
+    /// standby device. The weights are already resident there, so no
+    /// transfer is emitted — the displaced cold expert is evicted onto
+    /// the dead device and will be host-checkpointed per step by a
+    /// pool-aware inner planner if it still receives tokens.
+    fn promote_standbys(&mut self, gi: usize, pool: Option<&PoolState>) -> bool {
+        let Some(pool) = pool else { return false };
+        if pool.devices.iter().all(|d| d.alive) {
+            return false;
+        }
+        let g = &mut self.groups[gi];
+        let n = g.map.num_experts();
+        let mut changed = false;
+        for e in 0..n {
+            let home = g.map.device_of(e);
+            if pool.devices.get(home).is_none_or(|d| d.alive) {
+                continue;
+            }
+            let Some(sb) = g.map.standby_of(e) else { continue };
+            if sb == home || pool.devices.get(sb).is_some_and(|d| !d.alive) {
+                g.map.set_standby(e, None);
+                continue;
+            }
+            let victim = g
+                .map
+                .experts_on(sb)
+                .iter()
+                .copied()
+                .filter(|&v| v != e)
+                .min_by(|&a, &b| {
+                    g.ema[a].partial_cmp(&g.ema[b]).expect("finite ema").then(a.cmp(&b))
+                });
+            let Some(victim) = victim else { continue };
+            g.map.swap_experts(e, victim);
+            g.map.set_standby(e, None);
+            self.round.standby_promotions += 1;
+            self.round.evictions += 1;
+            changed = true;
+        }
+        changed
+    }
+
+    /// Paid migration: greedy hottest-device/coldest-device expert swaps
+    /// under the leg budget, each gated by the amortization rule
+    /// `savings_per_step x horizon > migration_cost` where the savings
+    /// proxy is the one weight transfer per step a token-level planner
+    /// keeps re-buying for a misplaced hot expert, and both sides price
+    /// through the topology's P2P path (unit costs without a topology).
+    fn migrate(
+        &mut self,
+        gi: usize,
+        topo: Option<&Topology>,
+        pool: Option<&PoolState>,
+    ) -> bool {
+        let g = &mut self.groups[gi];
+        let n = g.map.num_experts();
+        let p = g.map.devices();
+        self.dev_share.clear();
+        self.dev_share.resize(p, 0.0);
+        for e in 0..n {
+            self.dev_share[g.map.device_of(e)] += g.ema[e];
+        }
+        let mean = self.dev_share.iter().sum::<f64>() / p as f64;
+        if mean <= 0.0 {
+            return false;
+        }
+        let max_alive_speed = pool.map_or(1.0, |ps| {
+            ps.devices
+                .iter()
+                .filter(|d| d.alive)
+                .map(|d| d.speed)
+                .fold(0.0, f64::max)
+        });
+        let alive = |d: usize| pool.is_none_or(|ps| ps.devices.get(d).is_none_or(|s| s.alive));
+        let eligible_target = |d: usize| {
+            pool.is_none_or(|ps| {
+                ps.devices
+                    .get(d)
+                    .is_none_or(|s| s.alive && s.speed >= TARGET_SPEED_FLOOR * max_alive_speed)
+            })
+        };
+
+        let mut legs = 0usize;
+        let mut changed = false;
+        while legs + 2 <= self.cfg.budget {
+            // Hottest alive device (migrating off a dead device is the
+            // standby path's job, not a paid swap that would evict a
+            // victim onto dead hardware).
+            let mut d_hot = usize::MAX;
+            for d in 0..p {
+                if alive(d) && (d_hot == usize::MAX || self.dev_share[d] > self.dev_share[d_hot]) {
+                    d_hot = d;
+                }
+            }
+            if d_hot == usize::MAX || self.dev_share[d_hot] <= mean * (1.0 + self.cfg.margin) {
+                break;
+            }
+            let mut d_cold = usize::MAX;
+            for d in 0..p {
+                if d != d_hot
+                    && eligible_target(d)
+                    && (d_cold == usize::MAX || self.dev_share[d] < self.dev_share[d_cold])
+                {
+                    d_cold = d;
+                }
+            }
+            if d_cold == usize::MAX {
+                break;
+            }
+            let e_hot = g
+                .map
+                .experts_on(d_hot)
+                .iter()
+                .copied()
+                .max_by(|&a, &b| {
+                    g.ema[a].partial_cmp(&g.ema[b]).expect("finite ema").then(b.cmp(&a))
+                })
+                .expect("device hosts M >= 1 experts");
+            let e_cold = g
+                .map
+                .experts_on(d_cold)
+                .iter()
+                .copied()
+                .min_by(|&a, &b| {
+                    g.ema[a].partial_cmp(&g.ema[b]).expect("finite ema").then(a.cmp(&b))
+                })
+                .expect("device hosts M >= 1 experts");
+            let delta = g.ema[e_hot] - g.ema[e_cold];
+            if delta <= 0.0 {
+                break;
+            }
+            let new_hot = self.dev_share[d_hot] - delta;
+            let new_cold = self.dev_share[d_cold] + delta;
+            if new_hot.max(new_cold) >= self.dev_share[d_hot] {
+                break; // the swap would not lower the hot device's share
+            }
+            let (save_per_step, cost) = match topo {
+                Some(t) => {
+                    let w = self.cfg.nominal_weight_bytes;
+                    (
+                        t.transfer_time(d_hot, d_cold, w),
+                        t.transfer_time(d_hot, d_cold, w) + t.transfer_time(d_cold, d_hot, w),
+                    )
+                }
+                None => (1.0, 2.0),
+            };
+            if save_per_step * self.cfg.horizon <= cost {
+                break;
+            }
+            g.map.swap_experts(e_hot, e_cold);
+            // A standby that now coincides with the expert's new home is
+            // redundant — drop it.
+            if g.map.standby_of(e_hot) == Some(d_cold) {
+                g.map.set_standby(e_hot, None);
+            }
+            if g.map.standby_of(e_cold) == Some(d_hot) {
+                g.map.set_standby(e_cold, None);
+            }
+            self.moves.push(WeightTransfer { expert: e_hot, from: d_hot, to: d_cold });
+            self.moves.push(WeightTransfer { expert: e_cold, from: d_cold, to: d_hot });
+            self.dev_share[d_hot] = new_hot;
+            self.dev_share[d_cold] = new_cold;
+            self.round.migrations += 2;
+            self.round.evictions += 1;
+            legs += 2;
+            changed = true;
+        }
+        changed
+    }
+
+    /// Keep warm standby copies for the `standby` hottest experts on the
+    /// least-loaded eligible device that is not their home. Placing or
+    /// moving a standby is a paid weight transfer; standbys of experts
+    /// that left the hot set are dropped for free (memory eviction).
+    fn refresh_standbys(
+        &mut self,
+        gi: usize,
+        _topo: Option<&Topology>,
+        pool: Option<&PoolState>,
+    ) {
+        if self.cfg.standby == 0 {
+            return;
+        }
+        let g = &mut self.groups[gi];
+        let n = g.map.num_experts();
+        let p = g.map.devices();
+        let k = self.cfg.standby.min(n);
+        // Top-k experts by EMA (desc, ties to the lowest id), via bounded
+        // insertion into the reusable buffer.
+        self.topk.clear();
+        for e in 0..n {
+            let mut i = self.topk.len();
+            while i > 0 {
+                let o = self.topk[i - 1];
+                if g.ema[o] > g.ema[e] || (g.ema[o] == g.ema[e] && o < e) {
+                    break;
+                }
+                i -= 1;
+            }
+            if i < k {
+                self.topk.insert(i, e);
+                self.topk.truncate(k);
+            }
+        }
+        // dev_share reflects post-migration EMA loads (recompute: the
+        // migrate pass may not have run).
+        self.dev_share.clear();
+        self.dev_share.resize(p, 0.0);
+        for e in 0..n {
+            self.dev_share[g.map.device_of(e)] += g.ema[e];
+        }
+        let max_alive_speed = pool.map_or(1.0, |ps| {
+            ps.devices
+                .iter()
+                .filter(|d| d.alive)
+                .map(|d| d.speed)
+                .fold(0.0, f64::max)
+        });
+        let eligible = |d: usize| {
+            pool.is_none_or(|ps| {
+                ps.devices
+                    .get(d)
+                    .is_none_or(|s| s.alive && s.speed >= TARGET_SPEED_FLOOR * max_alive_speed)
+            })
+        };
+        for idx in 0..self.topk.len() {
+            let e = self.topk[idx];
+            let home = g.map.device_of(e);
+            if g.map.standby_of(e).is_some_and(|d| d != home && eligible(d)) {
+                continue; // current standby is still good — no churn
+            }
+            let mut target = usize::MAX;
+            for d in 0..p {
+                if d != home
+                    && eligible(d)
+                    && (target == usize::MAX || self.dev_share[d] < self.dev_share[target])
+                {
+                    target = d;
+                }
+            }
+            if target == usize::MAX {
+                if g.map.standby_of(e).is_some() {
+                    g.map.set_standby(e, None);
+                }
+                continue;
+            }
+            g.map.set_standby(e, Some(target));
+            self.moves.push(WeightTransfer { expert: e, from: home, to: target });
+            self.round.migrations += 1;
+        }
+        for e in 0..n {
+            if g.map.standby_of(e).is_some() && !self.topk.contains(&e) {
+                g.map.set_standby(e, None);
+                self.round.evictions += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chaos::DeviceState;
+
+    fn mgr(cfg: PlacementConfig) -> PlacementManager {
+        PlacementManager::new(cfg)
+    }
+
+    /// 16 experts on 4 devices: experts 0..4 hot and all native to
+    /// device 0 under block layout — the case token-level rerouting
+    /// re-buys transfers for every step but one swap round fixes.
+    fn colliding_loads() -> Vec<u64> {
+        let mut loads = vec![100u64; 16];
+        for l in loads.iter_mut().take(4) {
+            *l = 4_000;
+        }
+        loads
+    }
+
+    #[test]
+    fn migrates_colliding_hot_experts_apart() {
+        let mut m = mgr(PlacementConfig { budget: 8, ..PlacementConfig::default() });
+        let loads = colliding_loads();
+        for _ in 0..4 {
+            let gi = m.begin_round(4, &loads, &loads, None, None);
+            let mut plan = crate::planner::plan_ep(16, 4, m.layout_inputs().0);
+            m.finish_round(gi, &mut plan);
+        }
+        let map = m.group_map(0);
+        // The four hot experts must no longer collide on one device.
+        let homes: Vec<usize> = (0..4).map(|e| map.device_of(e)).collect();
+        let mut distinct = homes.clone();
+        distinct.sort_unstable();
+        distinct.dedup();
+        assert!(distinct.len() >= 3, "hot experts still collide: {homes:?}");
+        assert!(m.generation() > 0);
+    }
+
+    #[test]
+    fn horizon_below_amortization_bound_disables_migration() {
+        // A swap costs two legs; with unit costs the rule fires only when
+        // horizon * 1 > 2.
+        let mut m = mgr(PlacementConfig { horizon: 2.0, ..PlacementConfig::default() });
+        let loads = colliding_loads();
+        for _ in 0..8 {
+            let gi = m.begin_round(4, &loads, &loads, None, None);
+            let mut plan = crate::planner::plan_ep(16, 4, m.layout_inputs().0);
+            m.finish_round(gi, &mut plan);
+            assert!(plan.migrations.is_empty(), "horizon=2 must never amortize a swap");
+        }
+        assert_eq!(m.generation(), 0);
+    }
+
+    #[test]
+    fn never_migrates_onto_dead_or_slow_devices() {
+        let mut m = mgr(PlacementConfig { budget: 16, ..PlacementConfig::default() });
+        let loads = colliding_loads();
+        let mut pool = PoolState::healthy(4);
+        pool.devices[2] = DeviceState { speed: 1.0, alive: false };
+        pool.devices[3] = DeviceState { speed: 0.2, alive: true };
+        for _ in 0..6 {
+            let gi = m.begin_round(4, &loads, &loads, None, Some(&pool));
+            let mut plan = crate::planner::plan_ep(16, 4, m.layout_inputs().0);
+            m.finish_round(gi, &mut plan);
+            for t in &plan.migrations {
+                assert_ne!(t.to, 2, "migrated onto a dead device: {t:?}");
+                assert_ne!(t.to, 3, "migrated onto a 5x straggler: {t:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn standby_promotion_is_free_and_counted() {
+        let mut m = mgr(PlacementConfig { standby: 1, budget: 0, ..PlacementConfig::default() });
+        let loads = colliding_loads();
+        // Healthy rounds: the hottest expert gets a warm standby (a paid
+        // placement transfer).
+        let gi = m.begin_round(4, &loads, &loads, None, None);
+        let mut plan = crate::planner::plan_ep(16, 4, m.layout_inputs().0);
+        m.finish_round(gi, &mut plan);
+        assert_eq!(plan.migrations.len(), 1, "standby placement is a paid transfer");
+        let hot = plan.migrations[0].expert;
+        let sb = plan.migrations[0].to;
+        assert_eq!(m.group_map(0).standby_of(hot), Some(sb));
+
+        // Kill the hot expert's home: promotion fires, free.
+        let home = m.group_map(0).device_of(hot);
+        let mut pool = PoolState::healthy(4);
+        pool.devices[home] = DeviceState { speed: 1.0, alive: false };
+        let gi = m.begin_round(4, &loads, &loads, None, Some(&pool));
+        let mut plan = crate::planner::plan_ep(16, 4, m.layout_inputs().0);
+        m.finish_round(gi, &mut plan);
+        let stats = m.round_stats();
+        assert_eq!(stats.standby_promotions, 1);
+        assert_eq!(m.group_map(0).device_of(hot), sb, "hot expert now lives on its standby");
+        assert!(
+            plan.migrations.iter().all(|t| t.expert != hot),
+            "promotion must not emit a transfer for the promoted expert"
+        );
+    }
+
+    #[test]
+    fn evolution_is_deterministic() {
+        let run = || {
+            let mut m = mgr(PlacementConfig { standby: 2, ..PlacementConfig::default() });
+            let mut trace = Vec::new();
+            for step in 0..12u64 {
+                let mut loads = vec![100u64; 16];
+                let hot = ((step / 4) as usize * 3) % 16;
+                loads[hot] = 5_000;
+                loads[(hot + 1) % 16] = 3_000;
+                let gi = m.begin_round(4, &loads, &loads, None, None);
+                let mut plan = crate::planner::plan_ep(16, 4, m.layout_inputs().0);
+                m.finish_round(gi, &mut plan);
+                trace.push((m.generation(), plan.migrations.clone()));
+            }
+            trace
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -60,6 +60,25 @@
 //! window. Pools with a *dead* device stay forced-fresh: a retargeted
 //! segment could land on the hole, which no drift threshold can excuse.
 //!
+//! A fingerprint that differs only *within the quantization band* (same
+//! shape, every device within one quantization step) is not a different
+//! pool — it is the same degraded pool observed through measurement
+//! noise. Such near-matches are eligible for the **repair tier only**:
+//! the repair re-derives per-device capacities from the *current* pool
+//! speeds, so any placement the speed wobble invalidated is peeled and
+//! re-spilled, and the entry is re-anchored on the new fingerprint.
+//! Exact-fingerprint entries are always preferred over band matches.
+//!
+//! ## Placement interplay
+//!
+//! When the inner planner owns a mutable expert layout (the
+//! `placed(...)` decorator), its [`Planner::layout_generation`] joins
+//! the cache key: entries installed under one layout never serve (and
+//! are never repaired into) steps planned under another — a re-layout
+//! atomically invalidates every stale plan. Migration transfers are
+//! one-shot events, so they are stripped from installed entries; a
+//! reused plan never re-pays a migration that already happened.
+//!
 //! ## Hot path
 //!
 //! Lookups go through one mutex (stateful planners plan sequentially,
@@ -72,6 +91,7 @@ use super::lla::{merge_adjacent, spill};
 use super::scratch::{with_thread_scratch, PlanScratch};
 use super::{Planner, RepairParams, RoutePlan, Segment, WeightTransfer};
 use crate::chaos::PoolState;
+use crate::placement::PlacementStats;
 use crate::topology::Topology;
 use std::cell::RefCell;
 use std::cmp::Reverse;
@@ -83,7 +103,8 @@ use std::sync::Mutex;
 // thread-local keyed by a unique per-cache id: no shared map to race on
 // or to grow without bound as scoped layer-planning threads come and go.
 thread_local! {
-    static LAST_OUTCOME: RefCell<Vec<(usize, CacheOutcome)>> = const { RefCell::new(Vec::new()) };
+    static LAST_OUTCOME: RefCell<Vec<(usize, CacheOutcome, u64)>> =
+        const { RefCell::new(Vec::new()) };
 }
 
 static NEXT_CACHE_ID: AtomicUsize = AtomicUsize::new(0);
@@ -309,6 +330,10 @@ fn retarget_plan_into(
 /// LLAS force-assignment). O(E + S + changed devices · log P) instead
 /// of a fresh O(E·log E + S·log P) replan, and allocation-free in
 /// steady state: every working buffer lives in `scratch`.
+///
+/// Returns the number of peeled segments — the repair's actual work
+/// metric, which [`PlanCostModel`](crate::exec::PlanCostModel) charges
+/// per peel instead of assuming a flat repair cost.
 fn repair_excess(
     plan: &mut RoutePlan,
     loads: &[u64],
@@ -316,12 +341,12 @@ fn repair_excess(
     topo: Option<&Topology>,
     pool: Option<&PoolState>,
     scratch: &mut PlanScratch,
-) {
+) -> u64 {
     let devices = plan.devices;
     let m_per_dev = plan.num_experts / devices;
     let total: u64 = loads.iter().sum();
     if total == 0 {
-        return;
+        return 0;
     }
 
     // Same capacity model as `plan_llep_scratch`: the paper's scalar
@@ -355,7 +380,7 @@ fn repair_excess(
         scratch.over.push(over);
     }
     if !any_over {
-        return; // within capacity everywhere — the retarget was enough
+        return 0; // within capacity everywhere — the retarget was enough
     }
 
     // Peel candidates: non-forced segments on overloaded devices, stale
@@ -383,7 +408,7 @@ fn repair_excess(
         scratch.takes.push((e, i, take));
     }
     if scratch.takes.is_empty() {
-        return; // every overflow is forced (legitimate) — nothing to peel
+        return 0; // every overflow is forced (legitimate) — nothing to peel
     }
     scratch.takes.sort_unstable();
 
@@ -470,6 +495,7 @@ fn repair_excess(
     // Whatever guard shape the cached plan had, the repaired plan is a
     // least-loaded assignment again.
     plan.fallback_ep = false;
+    takes.len() as u64
 }
 
 struct CacheEntry {
@@ -483,6 +509,14 @@ struct CacheEntry {
     /// Loads the cached plan was (freshly) built for — retarget source
     /// and drift anchor.
     loads: Vec<u64>,
+    /// The inner planner's layout generation at install time. Planners
+    /// with a mutable expert layout (`placed(...)`) bump it on every
+    /// re-layout; entries keyed to an old generation never match — a
+    /// plan must not be retargeted (or repaired) across layouts.
+    layout_gen: u64,
+    /// The cached plan. Installed with `migrations` stripped: migration
+    /// transfers are one-shot events, already paid by the step that
+    /// planned them, never part of a reused plan.
     plan: RoutePlan,
     /// Hits served from this entry since its last fresh plan.
     reuses: usize,
@@ -586,37 +620,76 @@ impl CachedPlanner {
     }
 }
 
-/// Index + drift of the entry whose signature is L1-closest to `sig`
-/// (same device count, expert count, and pool fingerprint only).
+/// How a candidate entry's pool fingerprint relates to the lookup's.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum PoolMatch {
+    /// Identical fingerprint: every reuse tier applies.
+    Exact,
+    /// Same shape, every device within one quantization step — the same
+    /// degraded pool seen through measurement noise. Only the repair
+    /// tier may reuse such an entry: the repair re-derives capacities
+    /// from the *current* pool speeds, so a placement the wobble
+    /// invalidated is peeled and re-spilled rather than trusted.
+    Band,
+}
+
+fn pool_match(entry: &[u64], lookup: &[u64]) -> Option<PoolMatch> {
+    if entry == lookup {
+        return Some(PoolMatch::Exact);
+    }
+    if !entry.is_empty()
+        && entry.len() == lookup.len()
+        && entry.iter().zip(lookup).all(|(&a, &b)| a.abs_diff(b) <= 1)
+    {
+        return Some(PoolMatch::Band);
+    }
+    None
+}
+
+/// Index + drift + pool-match kind of the entry whose signature is
+/// L1-closest to `sig` (same device count, expert count, and layout
+/// generation; pool fingerprint exact or within the quantization band).
+/// Exact pool matches are preferred over band matches regardless of
+/// drift.
 fn closest(
     entries: &[CacheEntry],
     devices: usize,
     sig: &[u64],
     pool_sig: &[u64],
+    layout_gen: u64,
     quant: u64,
-) -> Option<(usize, f64)> {
+) -> Option<(usize, f64, PoolMatch)> {
     entries
         .iter()
         .enumerate()
         .filter(|(_, en)| {
-            en.devices == devices
-                && en.sig.len() == sig.len()
-                && en.pool_sig.as_slice() == pool_sig
+            en.devices == devices && en.sig.len() == sig.len() && en.layout_gen == layout_gen
         })
-        .map(|(i, en)| (i, signature_drift(&en.sig, sig, quant)))
-        .min_by(|a, b| a.1.total_cmp(&b.1))
+        .filter_map(|(i, en)| {
+            pool_match(&en.pool_sig, pool_sig)
+                .map(|pm| (i, signature_drift(&en.sig, sig, quant), pm))
+        })
+        .min_by(|a, b| {
+            let band_a = (a.2 == PoolMatch::Band) as u8;
+            let band_b = (b.2 == PoolMatch::Band) as u8;
+            band_a.cmp(&band_b).then(a.1.total_cmp(&b.1))
+        })
 }
 
 impl CachedPlanner {
-    /// Record the lookup outcome in the calling thread's slot. The slot
-    /// vec holds one entry per cache instance used on this thread — a
-    /// handful at most — and dies with the thread.
-    fn set_last_outcome(&self, outcome: CacheOutcome) {
+    /// Record the lookup outcome (and, for repairs, how many segments
+    /// were peeled) in the calling thread's slot. The slot vec holds one
+    /// entry per cache instance used on this thread — a handful at most
+    /// — and dies with the thread.
+    fn set_last_outcome(&self, outcome: CacheOutcome, peeled: u64) {
         LAST_OUTCOME.with(|slot| {
             let mut v = slot.borrow_mut();
-            match v.iter_mut().find(|(id, _)| *id == self.id) {
-                Some(entry) => entry.1 = outcome,
-                None => v.push((self.id, outcome)),
+            match v.iter_mut().find(|(id, _, _)| *id == self.id) {
+                Some(entry) => {
+                    entry.1 = outcome;
+                    entry.2 = peeled;
+                }
+                None => v.push((self.id, outcome, peeled)),
             }
         });
     }
@@ -643,6 +716,7 @@ impl CachedPlanner {
         // sees is the cache's real per-lookup cost, keeping T_plan
         // honest.
         let outcome;
+        let layout_gen = self.inner.layout_generation();
         {
             let mut guard = self.state.lock().expect("cache lock");
             let st = &mut *guard;
@@ -650,8 +724,8 @@ impl CachedPlanner {
             let clock = st.clock;
             load_signature_into(loads, self.quant, &mut st.sig);
             pool_signature_into(pool, &mut st.pool_sig);
-            match closest(&st.entries, devices, &st.sig, &st.pool_sig, self.quant) {
-                Some((i, drift)) if drift <= self.reuse_ceiling() => {
+            match closest(&st.entries, devices, &st.sig, &st.pool_sig, layout_gen, self.quant) {
+                Some((i, drift, pm)) if drift <= self.reuse_ceiling() => {
                     // Forced refresh only after the entry has already
                     // served `replan_every` reuses (so N=1 still allows
                     // one reuse per fresh plan). Repairs count as reuses,
@@ -659,14 +733,20 @@ impl CachedPlanner {
                     // repair error cannot accumulate unboundedly.
                     let force = self.replan_every > 0 && st.entries[i].reuses >= self.replan_every;
                     // The repair tier needs the inner planner's capacity
-                    // model; without one, past-threshold drift plans
-                    // fresh exactly as before.
-                    let repair = (drift > self.drift_threshold)
+                    // model; without one, past-threshold drift (and any
+                    // band-matched pool fingerprint) plans fresh exactly
+                    // as before. A band match must repair even below the
+                    // retarget threshold — the capacities moved, not the
+                    // loads — and needs the repair tier enabled.
+                    let needs_repair = pm == PoolMatch::Band || drift > self.drift_threshold;
+                    let repair = (needs_repair
+                        && self.repair_ceiling > 0.0
+                        && drift <= self.repair_ceiling)
                         .then(|| self.inner.repair_params())
                         .flatten();
                     if force {
                         outcome = CacheOutcome::Forced;
-                    } else if drift <= self.drift_threshold {
+                    } else if pm == PoolMatch::Exact && drift <= self.drift_threshold {
                         let shell = with_thread_scratch(|s| s.take_plan(loads.len(), devices));
                         let en = &mut st.entries[i];
                         en.reuses += 1;
@@ -680,7 +760,7 @@ impl CachedPlanner {
                         );
                         st.stats.record(CacheOutcome::Hit);
                         drop(guard);
-                        self.set_last_outcome(CacheOutcome::Hit);
+                        self.set_last_outcome(CacheOutcome::Hit, 0);
                         return plan;
                     } else if let Some(rp) = repair {
                         // Delta repair: retarget, then rebalance only the
@@ -689,24 +769,27 @@ impl CachedPlanner {
                         // its thread-local slot for the duration, so a
                         // nested `with_thread_scratch` would see a fresh
                         // arena and allocate.
-                        let CacheState { entries, retarget, sig, stats, .. } = st;
+                        let CacheState { entries, retarget, sig, pool_sig, stats, .. } = st;
                         let en = &mut entries[i];
                         en.reuses += 1;
                         en.last_used = clock;
+                        let mut peeled = 0;
                         let plan = with_thread_scratch(|s| {
                             let shell = s.take_plan(loads.len(), devices);
                             let mut plan =
                                 retarget_plan_into(&en.plan, &en.loads, loads, shell, retarget);
-                            repair_excess(&mut plan, loads, rp, topo, pool, s);
+                            peeled = repair_excess(&mut plan, loads, rp, topo, pool, s);
                             plan
                         });
-                        // Re-anchor the entry on the repaired plan and
-                        // the loads it was repaired for: the next
-                        // lookup's drift is measured from the latest
-                        // repair, not the long-gone fresh plan.
-                        // Field-wise so `Vec::clone_from` reuses the
-                        // entry's buffers (the derived whole-struct
-                        // `clone_from` would allocate a full clone).
+                        // Re-anchor the entry on the repaired plan, the
+                        // loads it was repaired for, and the pool it was
+                        // repaired under (a band match adopts the new
+                        // fingerprint): the next lookup's drift is
+                        // measured from the latest repair, not the
+                        // long-gone fresh plan. Field-wise so
+                        // `Vec::clone_from` reuses the entry's buffers
+                        // (the derived whole-struct `clone_from` would
+                        // allocate a full clone).
                         en.plan.num_experts = plan.num_experts;
                         en.plan.devices = plan.devices;
                         en.plan.assignments.clone_from(&plan.assignments);
@@ -715,9 +798,10 @@ impl CachedPlanner {
                         en.loads.clear();
                         en.loads.extend_from_slice(loads);
                         en.sig.clone_from(sig);
+                        en.pool_sig.clone_from(pool_sig);
                         stats.record(CacheOutcome::Repaired);
                         drop(guard);
-                        self.set_last_outcome(CacheOutcome::Repaired);
+                        self.set_last_outcome(CacheOutcome::Repaired, peeled);
                         return plan;
                     } else {
                         outcome = CacheOutcome::Miss;
@@ -730,6 +814,10 @@ impl CachedPlanner {
         // miss must not serialize concurrent layer-planning threads
         // behind one Mutex.
         let fresh = self.inner.plan_with_pool(devices, loads, stats, topo, pool);
+        // The install keys on the generation AFTER the inner plan: a
+        // stateful inner planner may have re-laid-out mid-plan, and the
+        // fresh plan belongs to the layout it actually planned against.
+        let layout_gen = self.inner.layout_generation();
         // Phase 3: install. Entries (and the signature buffers) may have
         // changed while unlocked, so recompute and re-probe for the slot
         // to refresh instead of trusting an index.
@@ -741,9 +829,10 @@ impl CachedPlanner {
         pool_signature_into(pool, &mut st.pool_sig);
         // Refresh any entry within the reuse ceiling (not just the
         // retarget threshold): a fresh plan born of repair-band drift
-        // replaces the drifted entry instead of duplicating it.
-        let slot = closest(&st.entries, devices, &st.sig, &st.pool_sig, self.quant)
-            .and_then(|(i, drift)| (drift <= self.reuse_ceiling()).then_some(i));
+        // replaces the drifted entry instead of duplicating it. A
+        // band-matched fingerprint is re-anchored the same way.
+        let slot = closest(&st.entries, devices, &st.sig, &st.pool_sig, layout_gen, self.quant)
+            .and_then(|(i, drift, _)| (drift <= self.reuse_ceiling()).then_some(i));
         match slot {
             Some(i) => {
                 let en = &mut st.entries[i];
@@ -752,6 +841,7 @@ impl CachedPlanner {
                 en.loads.clear();
                 en.loads.extend_from_slice(loads);
                 en.plan = fresh.clone();
+                en.plan.migrations.clear();
                 en.reuses = 0;
                 en.last_used = clock;
             }
@@ -766,12 +856,15 @@ impl CachedPlanner {
                         .expect("capacity >= 1");
                     st.entries.swap_remove(lru);
                 }
+                let mut plan = fresh.clone();
+                plan.migrations.clear();
                 st.entries.push(CacheEntry {
                     devices,
                     sig: st.sig.clone(),
                     pool_sig: st.pool_sig.clone(),
                     loads: loads.to_vec(),
-                    plan: fresh.clone(),
+                    layout_gen,
+                    plan,
                     reuses: 0,
                     last_used: clock,
                 });
@@ -779,7 +872,7 @@ impl CachedPlanner {
         }
         st.stats.record(outcome);
         drop(guard);
-        self.set_last_outcome(outcome);
+        self.set_last_outcome(outcome, 0);
         fresh
     }
 }
@@ -804,7 +897,7 @@ impl Planner for CachedPlanner {
                     // and no dead-pool plan is ever installed.
                     let plan = self.inner.plan_with_pool(devices, loads, stats, topo, pool);
                     self.state.lock().expect("cache lock").stats.record(CacheOutcome::Forced);
-                    self.set_last_outcome(CacheOutcome::Forced);
+                    self.set_last_outcome(CacheOutcome::Forced, 0);
                     plan
                 } else {
                     // Degraded but fully alive (stragglers, heterogeneous
@@ -865,8 +958,31 @@ impl Planner for CachedPlanner {
 
     fn last_cache_outcome(&self) -> Option<CacheOutcome> {
         LAST_OUTCOME.with(|slot| {
-            slot.borrow().iter().find(|(id, _)| *id == self.id).map(|&(_, o)| o)
+            slot.borrow().iter().find(|(id, _, _)| *id == self.id).map(|&(_, o, _)| o)
         })
+    }
+
+    fn last_repair_peeled(&self) -> u64 {
+        LAST_OUTCOME.with(|slot| {
+            slot.borrow()
+                .iter()
+                .find(|(id, _, _)| *id == self.id)
+                .map_or(0, |&(_, o, peeled)| if o == CacheOutcome::Repaired { peeled } else { 0 })
+        })
+    }
+
+    fn layout_generation(&self) -> u64 {
+        self.inner.layout_generation()
+    }
+
+    /// `None` on reuse (Hit/Repaired): the inner planner never ran, so
+    /// no placement round happened this lookup — the engine must not
+    /// re-report the round that produced the cached plan.
+    fn last_placement_stats(&self) -> Option<PlacementStats> {
+        match self.last_cache_outcome() {
+            Some(CacheOutcome::Hit) | Some(CacheOutcome::Repaired) => None,
+            _ => self.inner.last_placement_stats(),
+        }
     }
 }
 
@@ -1139,6 +1255,75 @@ mod tests {
         let _ = c.plan(4, &B, None);
         assert_eq!(c.last_cache_outcome(), Some(CacheOutcome::Miss));
         assert_eq!(c.stats(), CacheStats { hits: 0, repairs: 0, misses: 2, forced: 0 });
+    }
+
+    #[test]
+    fn pool_band_wobble_repairs_instead_of_missing() {
+        use crate::chaos::PoolState;
+        // speed 0.25 fingerprints as 64; 0.254 as 65 — the same
+        // straggler seen through measurement noise, one quantization
+        // step apart. The band match may only feed the repair tier.
+        let c = llep_repairing();
+        let mut pool = PoolState::healthy(4);
+        pool.devices[0].speed = 0.25;
+        let _ = c.plan_with_pool(4, &A, &A, None, Some(&pool));
+        assert_eq!(c.last_cache_outcome(), Some(CacheOutcome::Miss));
+        let mut wobble = PoolState::healthy(4);
+        wobble.devices[0].speed = 0.254;
+        let p = c.plan_with_pool(4, &A, &A, None, Some(&wobble));
+        assert_eq!(c.last_cache_outcome(), Some(CacheOutcome::Repaired));
+        validate_plan(&p, &A).unwrap();
+        // The entry re-anchored on the new fingerprint: replaying the
+        // same pool is now an exact-match hit.
+        let _ = c.plan_with_pool(4, &A, &A, None, Some(&wobble));
+        assert_eq!(c.last_cache_outcome(), Some(CacheOutcome::Hit));
+        assert_eq!(c.stats(), CacheStats { hits: 1, repairs: 1, misses: 1, forced: 0 });
+    }
+
+    #[test]
+    fn pool_band_without_repair_tier_misses() {
+        use crate::chaos::PoolState;
+        // No repair ceiling: a band-matched fingerprint must not be
+        // blindly retargeted — the capacities moved, not the loads — so
+        // it plans fresh exactly as before.
+        let c = llep_cached();
+        let mut pool = PoolState::healthy(4);
+        pool.devices[0].speed = 0.25;
+        let _ = c.plan_with_pool(4, &A, &A, None, Some(&pool));
+        let mut wobble = PoolState::healthy(4);
+        wobble.devices[0].speed = 0.254;
+        let _ = c.plan_with_pool(4, &A, &A, None, Some(&wobble));
+        assert_eq!(c.last_cache_outcome(), Some(CacheOutcome::Miss));
+        assert_eq!(c.stats(), CacheStats { hits: 0, repairs: 0, misses: 2, forced: 0 });
+    }
+
+    #[test]
+    fn re_layout_invalidates_cached_entries() {
+        use crate::placement::{Placed, PlacementConfig};
+        let inner = Placed::with_config(
+            PlannerKind::llep_default().boxed(),
+            PlacementConfig { budget: 8, ..PlacementConfig::default() },
+        );
+        let c = CachedPlanner::new(Box::new(inner));
+        let mut hot_lo = vec![100u64; 16];
+        for l in hot_lo.iter_mut().take(4) {
+            *l = 4_000;
+        }
+        let mut hot_hi = vec![100u64; 16];
+        for l in hot_hi.iter_mut().skip(8).take(4) {
+            *l = 4_000;
+        }
+        let _ = c.plan(4, &hot_lo, None); // miss; placement migrates mid-plan
+        assert!(c.layout_generation() > 0, "colliding hotspot re-laid-out");
+        let gen = c.layout_generation();
+        let _ = c.plan(4, &hot_lo, None);
+        assert_eq!(c.last_cache_outcome(), Some(CacheOutcome::Hit), "stable layout replays");
+        // A new regime re-lays-out; the old entry is keyed to the old
+        // generation and must never be retargeted across layouts.
+        let _ = c.plan(4, &hot_hi, None);
+        assert!(c.layout_generation() > gen, "new hotspot moved the layout");
+        let _ = c.plan(4, &hot_lo, None);
+        assert_eq!(c.last_cache_outcome(), Some(CacheOutcome::Miss));
     }
 
     #[test]

@@ -139,7 +139,14 @@ pub fn plan_eplb(
         assignments[t.expert].iter().any(|s| s.device == t.to)
     });
 
-    let mut plan = RoutePlan { num_experts, devices, assignments, transfers, fallback_ep: false };
+    let mut plan = RoutePlan {
+        num_experts,
+        devices,
+        assignments,
+        transfers,
+        migrations: Vec::new(),
+        fallback_ep: false,
+    };
     // Canonical transfer order: pricing reads the list as-is.
     plan.canonicalize_transfers();
     plan

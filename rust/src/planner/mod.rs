@@ -51,11 +51,14 @@ pub use eplb::{plan_eplb, Eplb};
 pub use lla::{plan_llep, plan_llep_pool, plan_llep_scratch, Llep};
 pub use lpt::{plan_lpt, plan_lpt_pool, plan_lpt_scratch, Lpt};
 pub use placement::Placement;
-pub use registry::{parse_planner, ParamSpec, Params, PlannerEntry, Registry, CACHED_PARAMS};
+pub use registry::{
+    parse_planner, ParamSpec, Params, PlannerEntry, Registry, CACHED_PARAMS, PLACED_PARAMS,
+};
 pub use scratch::{recycle_plan, with_thread_scratch, PlanScratch};
 
 use crate::chaos::PoolState;
 use crate::config::LlepConfig;
+use crate::placement::PlacementStats;
 use crate::topology::Topology;
 
 /// A contiguous slice `[start, end)` of one expert's global token order,
@@ -96,6 +99,14 @@ pub struct RoutePlan {
     /// Per expert: ordered, disjoint segments covering `[0, l_e)`.
     pub assignments: Vec<Vec<Segment>>,
     pub transfers: Vec<WeightTransfer>,
+    /// Persistent re-layout moves decided by the placement layer
+    /// ([`crate::placement`]) for *this* step: unlike `transfers` (spill
+    /// copies re-bought every step), a migration permanently changes
+    /// which device owns an expert's weights. Pricing charges them into
+    /// step latency unconditionally — even for planners whose spill
+    /// transfers are amortized away (EPLB) — in canonical
+    /// `(to, from, expert)` order. Empty for every non-placed planner.
+    pub migrations: Vec<WeightTransfer>,
     /// True when the lambda guard reverted to standard EP.
     pub fallback_ep: bool,
 }
@@ -276,6 +287,32 @@ pub trait Planner: Send + Sync {
     fn repair_params(&self) -> Option<RepairParams> {
         None
     }
+
+    /// Monotone counter identifying the expert layout this planner
+    /// currently plans against. Stateless planners always plan against
+    /// the block-native layout (generation 0); the placement decorator
+    /// ([`crate::placement::Placed`]) bumps it on every re-layout so
+    /// [`CachedPlanner`] keys entries to the layout they were planned
+    /// under and never retargets a plan across layouts.
+    fn layout_generation(&self) -> u64 {
+        0
+    }
+
+    /// Placement activity of the most recent plan call on the *current
+    /// thread* (placement decorators only; `None` for planners with a
+    /// fixed layout).
+    fn last_placement_stats(&self) -> Option<PlacementStats> {
+        None
+    }
+
+    /// Segments peeled by the most recent repair-tier rebalance on the
+    /// *current thread* (cache decorators only). The engine's
+    /// [`crate::exec::PlanCostModel`] charges repaired lookups
+    /// proportionally to this, so light repairs price near a hit and
+    /// heavy ones approach a fresh plan.
+    fn last_repair_peeled(&self) -> u64 {
+        0
+    }
 }
 
 /// Which planner to run — retained as a thin constructor layer over the
@@ -437,6 +474,7 @@ mod tests {
             devices: 2,
             assignments: vec![vec![seg(0, 0, 10), seg(1, 10, 30)], vec![seg(1, 0, 5)]],
             transfers: vec![WeightTransfer { expert: 0, from: 0, to: 1 }],
+            migrations: Vec::new(),
             fallback_ep: false,
         };
         assert_eq!(plan.device_loads(), vec![10, 25]);

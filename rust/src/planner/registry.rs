@@ -1,8 +1,10 @@
 //! Planner registry: constructs trait planners from `--planner` spec
 //! strings.
 //!
-//! Grammar: `name[:key=value,key=value,...]`, plus the decorator form
-//! `cached(<inner spec>)[:drift=F,every=N,q=Q,repair=F]`. Examples:
+//! Grammar: `name[:key=value,key=value,...]`, plus the decorator forms
+//! `cached(<inner spec>)[:drift=F,every=N,q=Q,repair=F]` and
+//! `placed(<inner spec>)[:ema=F,budget=N,horizon=F,standby=N]`.
+//! Examples:
 //!
 //! ```text
 //! ep
@@ -11,7 +13,13 @@
 //! chunked:c=4096
 //! lpt:min=1024
 //! cached(llep:alpha=1.2):drift=0.05,every=32
+//! placed(llep):ema=0.25,budget=4,horizon=32,standby=1
 //! ```
+//!
+//! Decorators nest (`placed(cached(llep))`, `cached(placed(llep))`):
+//! placement-outside keeps the EMA fresh on every step while the inner
+//! cache reuses plans within a layout; cache-outside keys entries to the
+//! layout generation so re-layouts invalidate stale plans.
 //!
 //! Unknown names and unknown/leftover parameters are hard errors so a
 //! typo never silently changes an experiment. Every planner's
@@ -23,6 +31,7 @@
 
 use super::{CachedPlanner, ChunkedEp, Eplb, Llep, Lpt, Planner, StandardEp};
 use crate::config::LlepConfig;
+use crate::placement::{Placed, PlacementConfig};
 
 /// Parsed `key=value` parameter list; builders [`take`](Params::take)
 /// what they recognize and [`finish`](Params::finish) rejects leftovers.
@@ -120,6 +129,15 @@ pub const CACHED_PARAMS: &[ParamSpec] = &[
     ParamSpec { key: "drift", grid: &[0.02, 0.05, 0.15], integer: false },
     ParamSpec { key: "every", grid: &[0.0, 32.0], integer: true },
     ParamSpec { key: "repair", grid: &[0.0, 0.15], integer: false },
+];
+
+/// Tunable dimensions of the `placed(...)` decorator (`standby` is a
+/// fault-tolerance knob, not a throughput dimension, so it stays out of
+/// the search grids).
+pub const PLACED_PARAMS: &[ParamSpec] = &[
+    ParamSpec { key: "ema", grid: &[0.1, 0.25, 0.5], integer: false },
+    ParamSpec { key: "budget", grid: &[2.0, 4.0, 8.0], integer: true },
+    ParamSpec { key: "horizon", grid: &[8.0, 32.0, 128.0], integer: true },
 ];
 
 /// One registered planner constructor.
@@ -261,6 +279,39 @@ impl Registry {
             params.finish("cached")?;
             return Ok(Box::new(cp));
         }
+        if let Some(rest) = spec.strip_prefix("placed(") {
+            let close = matching_paren(rest)
+                .ok_or_else(|| format!("unbalanced parentheses in {spec:?}"))?;
+            let inner = self.parse(&rest[..close])?;
+            let tail = &rest[close + 1..];
+            let param_str = match tail.strip_prefix(':') {
+                Some(s) => s,
+                None if tail.is_empty() => "",
+                None => return Err(format!("unexpected trailing {tail:?} in {spec:?}")),
+            };
+            let mut params = Params::parse(param_str)?;
+            let mut cfg = PlacementConfig::default();
+            if let Some(v) = params.take_f64("ema")? {
+                if !(v > 0.0 && v <= 1.0) {
+                    return Err(format!("placed: ema must be in (0, 1], got {v}"));
+                }
+                cfg.ema = v;
+            }
+            if let Some(v) = params.take_usize("budget")? {
+                cfg.budget = v;
+            }
+            if let Some(v) = params.take_f64("horizon")? {
+                if v < 0.0 {
+                    return Err(format!("placed: horizon must be >= 0, got {v}"));
+                }
+                cfg.horizon = v;
+            }
+            if let Some(v) = params.take_usize("standby")? {
+                cfg.standby = v;
+            }
+            params.finish("placed")?;
+            return Ok(Box::new(Placed::with_config(inner, cfg)));
+        }
         let (name, tail) = spec.split_once(':').unwrap_or((spec, ""));
         let entry = self
             .entries
@@ -395,6 +446,39 @@ mod tests {
                     .unwrap_or_else(|err| panic!("synthesized {spec:?} must parse: {err}"));
             }
         }
+        for ps in super::PLACED_PARAMS {
+            for &v in ps.grid {
+                let spec = format!("placed(ep):{}={}", ps.key, ps.format_value(v));
+                parse_planner(&spec)
+                    .unwrap_or_else(|err| panic!("synthesized {spec:?} must parse: {err}"));
+            }
+        }
+    }
+
+    #[test]
+    fn placed_decorator_parses_round_trips_and_nests() {
+        let p = parse_planner("placed(llep):ema=0.5,budget=2,horizon=16,standby=1").unwrap();
+        assert_eq!(p.label(), "Placed[LLEP(a=1,m=1024,l=1.3)]");
+        assert!(!p.replay_safe());
+        let canon = p.spec();
+        let p2 = parse_planner(&canon).unwrap();
+        assert_eq!(p2.spec(), canon, "placed spec fixed point");
+        // Bare decorator fills defaults; EPLB policy bits pass through.
+        let bare = parse_planner("placed(eplb:r=4)").unwrap();
+        assert_eq!(bare.label(), "Placed[EPLB(r=4)]");
+        assert!(!bare.charges_weight_transfers());
+        assert!(bare.wants_stale_stats());
+        // Both nesting orders parse and round-trip.
+        for spec in ["placed(cached(llep)):ema=0.25", "cached(placed(llep)):drift=0.05"] {
+            let p = parse_planner(spec).unwrap();
+            let canon = p.spec();
+            assert_eq!(parse_planner(&canon).unwrap().spec(), canon, "{spec}");
+        }
+        // Errors stay loud.
+        assert!(parse_planner("placed(llep").unwrap_err().contains("unbalanced"));
+        assert!(parse_planner("placed(ep)x").unwrap_err().contains("trailing"));
+        assert!(parse_planner("placed(ep):frob=1").unwrap_err().contains("unknown parameter"));
+        assert!(parse_planner("placed(ep):ema=0").unwrap_err().contains("ema"));
     }
 
     #[test]

@@ -113,12 +113,14 @@ impl PlanScratch {
             devices,
             assignments: Vec::new(),
             transfers: Vec::new(),
+            migrations: Vec::new(),
             fallback_ep: false,
         });
         plan.num_experts = num_experts;
         plan.devices = devices;
         plan.fallback_ep = false;
         plan.transfers.clear();
+        plan.migrations.clear();
         while plan.assignments.len() > num_experts {
             let mut v = plan.assignments.pop().expect("len checked");
             if self.spare_segs.len() < SPARE_SEGS_CAP {
@@ -142,6 +144,7 @@ impl PlanScratch {
             return;
         }
         plan.transfers.clear();
+        plan.migrations.clear();
         self.plans.push(plan);
     }
 

@@ -11,7 +11,7 @@
 //! Runtime-registered planners join automatically: register an entry
 //! with `params` and the tuner searches it like any builtin.
 
-use crate::planner::{ParamSpec, Registry, CACHED_PARAMS};
+use crate::planner::{ParamSpec, Registry, CACHED_PARAMS, PLACED_PARAMS};
 
 /// How much of the canonical grids to enumerate.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -86,12 +86,18 @@ impl SearchSpace {
                     for assignment in grid_points(CACHED_PARAMS, cap) {
                         specs.push(wrap_cached(name, &assignment));
                     }
+                    for assignment in grid_points(PLACED_PARAMS, cap) {
+                        specs.push(wrap_placed(name, &assignment));
+                    }
                 }
             }
             SpaceBudget::Full => {
                 for base in &base_specs {
                     for assignment in grid_points(CACHED_PARAMS, cap) {
                         specs.push(wrap_cached(base, &assignment));
+                    }
+                    for assignment in grid_points(PLACED_PARAMS, cap) {
+                        specs.push(wrap_placed(base, &assignment));
                     }
                 }
             }
@@ -158,6 +164,20 @@ fn wrap_cached(inner: &str, assignment: &[f64]) -> String {
     }
 }
 
+/// Wrap an inner spec in the `placed(...)` decorator at one grid point.
+fn wrap_placed(inner: &str, assignment: &[f64]) -> String {
+    let pairs: Vec<String> = PLACED_PARAMS
+        .iter()
+        .zip(assignment)
+        .map(|(p, &v)| format!("{}={}", p.key, p.format_value(v)))
+        .collect();
+    if pairs.is_empty() {
+        format!("placed({inner})")
+    } else {
+        format!("placed({inner}):{}", pairs.join(","))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -184,8 +204,10 @@ mod tests {
         assert!(smoke.len() < default.len());
         assert!(default.len() < full.len());
         assert!(default.specs.iter().any(|s| s.starts_with("cached(")));
-        // Full crosses the decorator against every base point.
+        assert!(default.specs.iter().any(|s| s.starts_with("placed(")));
+        // Full crosses the decorators against every base point.
         assert!(full.specs.iter().any(|s| s.contains("cached(llep:alpha=1.5")));
+        assert!(full.specs.iter().any(|s| s.contains("placed(llep:alpha=1.5")));
     }
 
     #[test]

@@ -47,6 +47,7 @@ fn reference_llep(
         devices,
         assignments: vec![Vec::new(); num_experts],
         transfers: Vec::new(),
+        migrations: Vec::new(),
         fallback_ep: false,
     };
     if total == 0 {

@@ -293,6 +293,54 @@ fn moved_hotspot_prices_stale_reuse_strictly_worse() {
 }
 
 #[test]
+fn band_changed_pool_takes_the_repair_tier_end_to_end() {
+    // Pool-fingerprint regression, end-to-end through the engine: the
+    // same straggler seen through measurement noise (one quantization
+    // step on the per-device fingerprint) band-matches the cached entry.
+    // The step must take the O(Δ) repair tier — pricing T_plan as
+    // hit_s + peeled × repair_s, strictly below a fresh plan — instead
+    // of cold-missing, and the repair re-anchors the entry so replaying
+    // the wobbled pool is a plain hit.
+    let cost = PlanCostModel::default();
+    let base = engine().with_plan_cost(cost);
+    let mut rng = Rng::new(17);
+    let loads = gen_loads(&mut rng);
+    let lm = lm_from_loads(&loads, 8);
+
+    let mut pool = PoolState::healthy(8);
+    pool.devices[0].speed = 0.25; // fingerprint round(256·s) = 64
+    let mut wobble = pool.clone();
+    wobble.devices[0].speed = 0.246; // fingerprint 63: one band step slower
+
+    let cached = CachedPlanner::new(Box::new(Llep::new(LlepConfig::default())))
+        .with_repair_ceiling(0.2);
+    let miss = base.for_pool(pool).run_step_loads(&lm, &cached);
+    assert_eq!(miss.cache.misses, 1);
+    assert_eq!(miss.phases.plan_s.to_bits(), cost.fresh_s.to_bits());
+
+    let wobbled = base.for_pool(wobble);
+    let repaired = wobbled.run_step_loads(&lm, &cached);
+    assert_eq!(repaired.cache.repairs, 1, "band-matched pool must repair, not cold-miss");
+    assert!(!repaired.stranded && !repaired.oom);
+    assert!(
+        repaired.phases.plan_s < cost.fresh_s,
+        "repair prices below a fresh plan: {}",
+        repaired.phases.plan_s
+    );
+    // The slower device shed capacity, so the repair peeled at least one
+    // segment: T_plan = hit_s + k·repair_s for an integral k >= 1.
+    let peels = (repaired.phases.plan_s - cost.hit_s) / cost.repair_s;
+    assert!(
+        peels >= 1.0 - 1e-9 && (peels - peels.round()).abs() < 1e-6,
+        "plan time must be an integral number of peels above hit_s, got {peels}"
+    );
+
+    let hit = wobbled.run_step_loads(&lm, &cached);
+    assert_eq!(hit.cache.hits, 1, "the repair re-anchored the pool fingerprint");
+    assert_eq!(hit.phases.plan_s.to_bits(), cost.hit_s.to_bits());
+}
+
+#[test]
 fn cached_planner_multi_layer_steps_hit_per_layer() {
     // A 4-layer model planned through one shared cache: the second
     // identical model step hits on every layer and prices each layer's

@@ -3,9 +3,10 @@
 //! successive halving vs full grid, Pareto invariants, and hardware
 //! profiles.
 
-use llep::config::{ModelConfig, ModelPreset, SystemConfig, SystemPreset};
+use llep::config::{LlepConfig, ModelConfig, ModelPreset, SystemConfig, SystemPreset};
 use llep::exec::{Engine, PlanCostModel};
-use llep::routing::Scenario;
+use llep::planner::{CachedPlanner, Llep};
+use llep::routing::{LoadMatrix, Scenario};
 use llep::tune::{
     dominates, pareto_front, HardwareProfile, Mode, SearchSpace, SpaceBudget, Strategy, Trial,
     TrialMetrics, Tuner,
@@ -81,6 +82,67 @@ fn recommended_spec_reproduces_trial_metrics_bit_identically() {
         },
         no_shrink,
     );
+}
+
+#[test]
+fn repair_tier_pricing_is_bit_reproducible_and_scales_with_peels() {
+    // The repair-aware plan-cost contract behind bit-identical trials:
+    // a repaired step charges T_plan = hit_s + peeled × repair_s (the
+    // tier's actual O(changed work) shape, not a flat constant). Two
+    // fresh runs over the same drift sequence must reproduce every
+    // step's T_plan bit-identically, and every repaired step must land
+    // an integral number of peels above a hit, strictly below fresh.
+    let cost = PlanCostModel::default();
+    let e = paper_engine().with_plan_cost(cost);
+
+    // A hot head leaking mass to a cold expert: ~3% of total per step,
+    // so successive lookups sit inside the repair band (above the
+    // retarget threshold, below the 0.2 ceiling).
+    let mut base = vec![500u64; 128];
+    for l in base.iter_mut().take(4) {
+        *l = 60_000;
+    }
+    let total: u64 = base.iter().sum();
+    let steps: Vec<Vec<u64>> = (0..3)
+        .map(|k| {
+            let mut v = base.clone();
+            let moved = (total / 33) * k;
+            v[0] -= moved;
+            v[100] += moved;
+            v
+        })
+        .collect();
+
+    let run = || -> Vec<(u64, u64)> {
+        let cached = CachedPlanner::new(Box::new(Llep::new(LlepConfig::default())))
+            .with_repair_ceiling(0.2);
+        steps
+            .iter()
+            .map(|loads| {
+                let mut counts = vec![vec![0u64; loads.len()]; 8];
+                counts[0] = loads.clone();
+                let lm = LoadMatrix { counts, top_k: 1 };
+                let r = e.run_step_loads(&lm, &cached);
+                (r.phases.plan_s.to_bits(), r.cache.repairs)
+            })
+            .collect()
+    };
+
+    let a = run();
+    let b = run();
+    assert_eq!(a, b, "repair-aware T_plan must be bit-reproducible");
+    assert!(a.iter().any(|&(_, reps)| reps == 1), "the drift must exercise the repair tier");
+    for &(bits, reps) in &a {
+        if reps == 1 {
+            let plan_s = f64::from_bits(bits);
+            assert!(plan_s < cost.fresh_s, "a repair prices below a fresh plan: {plan_s}");
+            let peels = (plan_s - cost.hit_s) / cost.repair_s;
+            assert!(
+                peels >= 1.0 - 1e-9 && (peels - peels.round()).abs() < 1e-6,
+                "T_plan = hit_s + k·repair_s for integral k >= 1, got {peels}"
+            );
+        }
+    }
 }
 
 #[test]
