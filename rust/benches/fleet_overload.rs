@@ -1,0 +1,126 @@
+//! Bench: overload protection under a correlated replica burst.
+//!
+//! Three measurements:
+//!
+//! 1. **Protected vs unprotected** — a bursty workload, a tight SLO
+//!    deadline, and a correlated 2-of-3 replica burst outage. The
+//!    unprotected fleet drains everything onto the survivor's unbounded
+//!    queue; the protected fleet (admission + queue caps + retry/backoff
+//!    + breakers) sheds the unservable tail. Prints p99 TTFT, goodput,
+//!    and the shed breakdown side by side.
+//! 2. **Shed-cause breakdown** — where the protected run's shed requests
+//!    went (deadline admission, backpressure, retry budget), plus
+//!    breaker opens/probes — the exactness contract `completed + shed ==
+//!    requests` is asserted, as is the summed token ledger.
+//! 3. **Simulator wall time** — host-side cost of one protected fleet
+//!    run (the overload path must stay cheap enough for sweeps).
+//!
+//! Run: `cargo bench --bench fleet_overload` (add `--quick` to shrink).
+
+use llep::fleet::{FleetFaultPlan, FleetSim, OverloadConfig, ReplicaConfig, RouterPolicy, Workload};
+use llep::metrics::{format_secs, Table};
+use llep::prelude::*;
+use llep::util::benchkit::{bb, quick_requested, Bencher};
+use llep::util::rng::Rng;
+
+fn main() {
+    let quick = quick_requested();
+    let engine = Engine::modeled(
+        ModelConfig::preset(ModelPreset::Fig1Layer),
+        SystemConfig::preset(SystemPreset::H200x8),
+    );
+    let scenario = Scenario::concentrated(0.8, 4);
+    let n_req = if quick { 48 } else { 96 };
+    let burst = n_req / 4;
+    let wl = Workload::parse(&format!(
+        "bursty:n={n_req},ia=0.0001,burst={burst},every={burst},prompt=512-2048,decode=2-6"
+    ))
+    .unwrap();
+    let seed = 21;
+    let replicas = || vec![ReplicaConfig::default(); 3];
+
+    // Calibrate the deadline and the outage window from a healthy run so
+    // the comparison is self-scaling, never hand-tuned to the cost model.
+    let healthy = FleetSim::new(engine.clone(), scenario.clone(), replicas(), 16_384)
+        .with_workload(wl.clone())
+        .try_run(seed)
+        .expect("healthy fleet run");
+    let deadline = healthy.request_latency.p99 * 1.5;
+    let arrivals = wl.generate(&mut Rng::new(seed));
+    let kill_at = arrivals[n_req / 2 - 1].arrival_s + 1e-6;
+    let outage = (healthy.makespan_s * 64.0).max(1.0);
+    let faults = || {
+        FleetFaultPlan::parse(&format!("burst:r=1-2,at={kill_at},for={outage}"))
+            .expect("burst plan")
+    };
+
+    // ---- 1. protected vs unprotected -------------------------------------
+    let unprotected = FleetSim::new(engine.clone(), scenario.clone(), replicas(), 16_384)
+        .with_workload(wl.clone())
+        .with_faults(faults())
+        .with_deadline(deadline)
+        .try_run(seed)
+        .expect("unprotected fleet run");
+    let overload = OverloadConfig::parse(
+        "queue-cap=4,frontend-cap=6,retries=2,backoff=0.0002,backoff-cap=0.001,\
+         breaker-after=1,cooldown=0.002",
+    )
+    .unwrap();
+    let protected = FleetSim::new(engine.clone(), scenario.clone(), replicas(), 16_384)
+        .with_workload(wl.clone())
+        .with_faults(faults())
+        .with_deadline(deadline)
+        .with_overload(overload.clone())
+        .try_run(seed)
+        .expect("protected fleet run");
+
+    let mut t = Table::new(&["fleet", "completed", "shed", "p99 TTFT", "goodput", "makespan"]);
+    for (name, r) in [("unprotected", &unprotected), ("protected", &protected)] {
+        assert_eq!(r.completed + r.shed, r.requests, "{name}: lost requests");
+        assert!(r.tokens.is_exact(), "{name}: summed ledger {:?}", r.tokens);
+        t.row(vec![
+            name.to_string(),
+            format!("{}/{}", r.completed, r.requests),
+            format!("{}", r.shed),
+            format_secs(r.ttft.p99),
+            format!("{:.0} tok/s", r.goodput_tps),
+            format_secs(r.makespan_s),
+        ]);
+    }
+    println!(
+        "Overload drill: replicas 1-2 die at {} | deadline {} | {n_req} requests\n",
+        format_secs(kill_at),
+        format_secs(deadline)
+    );
+    println!("{}", t.render());
+
+    // ---- 2. shed-cause breakdown -----------------------------------------
+    let o = &protected.overload;
+    assert!(protected.shed > 0, "the drill must force shedding");
+    assert_eq!(protected.shed, o.shed(), "shed causes partition the shed count");
+    println!(
+        "\nprotected shed breakdown: deadline {} | backpressure {} | retries {} \
+         | {} retr(y/ies), backoff total {} | breaker: {} open(s), {} probe(s)",
+        o.shed_deadline,
+        o.shed_frontend,
+        o.shed_retries,
+        o.retries,
+        format_secs(o.backoff_total_s),
+        o.breaker_opens,
+        o.breaker_probes
+    );
+
+    // ---- 3. simulator wall time ------------------------------------------
+    let mut b = if quick { Bencher::quick() } else { Bencher::new() };
+    let sim = FleetSim::new(engine, scenario, replicas(), 16_384)
+        .with_workload(wl)
+        .with_router(RouterPolicy::LeastQueue)
+        .with_faults(faults())
+        .with_deadline(deadline)
+        .with_overload(overload);
+    let wall = b.bench("fleet/overload/run", || bb(sim.try_run(seed).unwrap().completed));
+    println!(
+        "\nprotected fleet run wall time {} for {n_req} requests x 3 replicas",
+        format_secs(wall.mean_s())
+    );
+}

@@ -11,7 +11,15 @@
 //! link:x=2,from=0                   halve both bandwidth tiers
 //! link:dev=5,x=4                    4x slower links touching device 5 only
 //! jitter:amp=0.2,seed=7             seeded per-(step, device) speed noise
+//! burst:dev=2-5,at=10               correlated burst: fail devices 2..=5 at 10
+//! burst:dev=2-5,at=10,steps=4       ... transient (stall) variant
 //! ```
+//!
+//! `burst:` is sugar for a correlated group failure (a rack/PSU/switch
+//! domain dying at once): it desugars at parse time into one
+//! `fail:`/`stall:` event per device in the range, so
+//! [`FaultPlan::spec`] emits — and round-trips through — the desugared
+//! form.
 //!
 //! A plan can also live in a TOML file:
 //!
@@ -123,7 +131,7 @@ impl FaultPlan {
     pub fn parse(spec: &str) -> Result<FaultPlan, String> {
         let mut events = Vec::new();
         for part in spec.split(';').map(str::trim).filter(|p| !p.is_empty()) {
-            events.push(parse_event(part)?);
+            parse_event_into(part, &mut events)?;
         }
         if events.is_empty() {
             return Err(format!("fault spec {spec:?} contains no events"));
@@ -331,6 +339,46 @@ impl Params {
     }
 }
 
+/// Parse a `dev=` operand that is either a single index (`N`) or an
+/// inclusive range (`LO-HI`).
+fn parse_device_range(kind: &str, spec: &str) -> Result<(usize, usize), String> {
+    let (lo, hi) = match spec.split_once('-') {
+        Some((a, b)) => (a.trim(), b.trim()),
+        None => (spec, spec),
+    };
+    let num = |s: &str| {
+        s.parse::<usize>()
+            .map_err(|_| format!("{kind}: dev expects an integer or LO-HI range, got {spec:?}"))
+    };
+    let (lo, hi) = (num(lo)?, num(hi)?);
+    if hi < lo {
+        return Err(format!("{kind}: dev range {spec:?} is inverted (hi < lo)"));
+    }
+    Ok((lo, hi))
+}
+
+/// Parse one `;`-part, desugaring `burst:` into its per-device events.
+fn parse_event_into(part: &str, events: &mut Vec<FaultEvent>) -> Result<(), String> {
+    let (kind, tail) = part.split_once(':').unwrap_or((part, ""));
+    if kind == "burst" {
+        let mut p = Params::parse(tail)?;
+        let dev = p.take("dev").ok_or_else(|| "burst requires dev=".to_string())?;
+        let (lo, hi) = parse_device_range(kind, &dev)?;
+        let at = p.need_usize(kind, "at")?;
+        let steps = p.take_usize("steps")?;
+        p.finish(kind)?;
+        for device in lo..=hi {
+            events.push(match steps {
+                Some(k) => FaultEvent::Stall { device, at, steps: k.max(1) },
+                None => FaultEvent::Fail { device, at },
+            });
+        }
+        return Ok(());
+    }
+    events.push(parse_event(part)?);
+    Ok(())
+}
+
 fn parse_event(part: &str) -> Result<FaultEvent, String> {
     let (kind, tail) = part.split_once(':').unwrap_or((part, ""));
     let mut p = Params::parse(tail)?;
@@ -384,7 +432,8 @@ fn parse_event(part: &str) -> Result<FaultEvent, String> {
         },
         other => {
             return Err(format!(
-                "unknown fault kind {other:?} (known: slow, stall, fail, recover, link, jitter)"
+                "unknown fault kind {other:?} \
+                 (known: slow, stall, fail, recover, link, jitter, burst)"
             ))
         }
     };
@@ -515,6 +564,58 @@ mod tests {
         assert!(plan.validate(8).is_err());
         assert!(plan.validate(10).is_ok());
         assert!(FaultPlan::none().validate(1).is_ok());
+    }
+
+    #[test]
+    fn burst_desugars_into_per_device_events() {
+        // permanent flavor: one Fail per device in the range
+        let plan = FaultPlan::parse("burst:dev=2-4,at=10;recover:dev=3,at=20").unwrap();
+        assert_eq!(
+            plan.events,
+            vec![
+                FaultEvent::Fail { device: 2, at: 10 },
+                FaultEvent::Fail { device: 3, at: 10 },
+                FaultEvent::Fail { device: 4, at: 10 },
+                FaultEvent::Recover { device: 3, at: 20 },
+            ]
+        );
+        // the canonical spec is the desugared form, and it round-trips
+        let canon = plan.spec();
+        assert!(canon.starts_with("fail:dev=2,at=10;"), "{canon}");
+        let again = FaultPlan::parse(&canon).unwrap();
+        assert_eq!(again, plan);
+        assert_eq!(again.spec(), canon, "spec is a fixed point");
+        // semantics: the whole group dies together, recover is per-device
+        assert_eq!(plan.newly_dead(10, &base(8)), vec![2, 3, 4]);
+        assert!(!plan.state_at(25, &base(8)).devices[2].alive);
+        assert!(plan.state_at(25, &base(8)).devices[3].alive);
+
+        // transient flavor: steps= turns the group into stalls
+        let stall = FaultPlan::parse("burst:dev=1-2,at=5,steps=3").unwrap();
+        assert_eq!(
+            stall.events,
+            vec![
+                FaultEvent::Stall { device: 1, at: 5, steps: 3 },
+                FaultEvent::Stall { device: 2, at: 5, steps: 3 },
+            ]
+        );
+        assert!(stall.state_at(9, &base(4)).devices[1].alive, "comes back on its own");
+
+        // a single index is a burst of one
+        let one = FaultPlan::parse("burst:dev=3,at=0").unwrap();
+        assert_eq!(one.events, vec![FaultEvent::Fail { device: 3, at: 0 }]);
+    }
+
+    #[test]
+    fn burst_errors_are_loud() {
+        assert!(FaultPlan::parse("burst:at=1").unwrap_err().contains("requires dev="));
+        assert!(FaultPlan::parse("burst:dev=2-4").unwrap_err().contains("requires at="));
+        assert!(FaultPlan::parse("burst:dev=4-2,at=1").unwrap_err().contains("inverted"));
+        assert!(FaultPlan::parse("burst:dev=a-b,at=1").unwrap_err().contains("integer"));
+        assert!(
+            FaultPlan::parse("burst:dev=1-2,at=1,x=4").unwrap_err().contains("unknown key"),
+            "leftover keys stay loud through the sugar"
+        );
     }
 
     #[test]

@@ -22,7 +22,7 @@ mod serve;
 pub use mitigation::{split_loads, BatchSplitPolicy, SplitOutcome};
 pub use replica::{
     attention_overhead_s, uniform_profile, ChaosStats, Replica, ReplicaRequest,
-    ReplicaStepOutcome, StepEvents, TokenLedger,
+    ReplicaStepOutcome, ServiceEstimate, StepEvents, TokenLedger,
 };
 pub use serve::{
     run_continuous, ContinuousBatchSim, ContinuousReport, GenRequest, Request, ServeReport,

@@ -345,6 +345,18 @@ struct ActiveGen {
     remaining: usize,
 }
 
+/// Observed service rates of a replica, derived from what it has
+/// actually priced so far (see [`Replica::service_estimate`]). The
+/// fleet admission controller uses these to estimate whether a replica
+/// can still meet a deadline.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ServiceEstimate {
+    /// Priced tokens per busy virtual second.
+    pub tokens_per_s: f64,
+    /// Mean priced step latency (busy time / steps).
+    pub mean_step_s: f64,
+}
+
 /// Events produced by one successful [`Replica::step`].
 #[derive(Clone, Debug, Default)]
 pub struct StepEvents {
@@ -519,6 +531,46 @@ impl<'a> Replica<'a> {
     /// Virtual time spent pricing steps (includes chaos waste).
     pub fn busy_s(&self) -> f64 {
         self.busy_s
+    }
+
+    /// Observed service rates, or `None` before the first priced step
+    /// (a cold replica has no evidence yet — admission control then
+    /// admits optimistically).
+    pub fn service_estimate(&self) -> Option<ServiceEstimate> {
+        if self.steps == 0 || !(self.busy_s > 0.0) {
+            return None;
+        }
+        Some(ServiceEstimate {
+            tokens_per_s: self.ledger.priced as f64 / self.busy_s,
+            mean_step_s: self.busy_s / self.steps as f64,
+        })
+    }
+
+    /// Crude earliest-finish estimate for a new request submitted at
+    /// `now`: clear the currently queued work (pressure tokens at the
+    /// observed priced-token rate), prefill the request's own prompt,
+    /// then one mean step per decode token. Deliberately cheap — the
+    /// same queue-depth x step-latency arithmetic a real frontend does
+    /// from heartbeat metrics, and a pure function of replica state (no
+    /// RNG), so admission decisions stay bit-reproducible.
+    pub fn estimated_finish_s(&self, now: f64, prompt_tokens: usize, decode_steps: usize) -> f64 {
+        let start = self.clock.max(now);
+        match self.service_estimate() {
+            // cold replica: optimistic (finish "immediately"); the
+            // deadline still bounds how late it can start
+            None => start,
+            Some(est) => {
+                start
+                    + (self.pressure() + prompt_tokens) as f64 / est.tokens_per_s
+                    + decode_steps as f64 * est.mean_step_s
+            }
+        }
+    }
+
+    /// True when a queue cap is set and this replica's outstanding
+    /// requests have reached it (the backpressure signal).
+    pub fn at_capacity(&self, queue_cap: Option<usize>) -> bool {
+        queue_cap.is_some_and(|cap| self.queue_depth() >= cap)
     }
 
     /// MoE layers priced per step.
@@ -772,5 +824,35 @@ mod tests {
         assert_eq!(drained[0].decode_steps, 3);
         assert_eq!(drained[1].id, 0);
         assert_eq!(drained[1].decode_steps, 4);
+    }
+
+    #[test]
+    fn service_estimate_feeds_finish_time_and_capacity() {
+        let engine = engine();
+        let planner = PlannerKind::llep_default().boxed();
+        let profile = uniform_profile(&engine, Scenario::concentrated(0.9, 1));
+        let mut rep = Replica::new(&engine, &*planner, &profile, 8192, None).unwrap();
+        // cold replica: no evidence yet, admission is optimistic
+        assert_eq!(rep.service_estimate(), None);
+        assert_eq!(rep.estimated_finish_s(0.25, 512, 4), 0.25, "cold estimate = start time");
+        assert!(!rep.at_capacity(None));
+        rep.submit(ReplicaRequest { id: 0, arrival_s: 0.0, prompt_tokens: 512, decode_steps: 2 });
+        assert!(rep.at_capacity(Some(1)), "one outstanding request meets cap 1");
+        assert!(!rep.at_capacity(Some(2)));
+        let mut rng = Rng::new(4);
+        while rep.has_work() {
+            rep.step(&mut rng).unwrap();
+        }
+        let est = rep.service_estimate().expect("priced steps give an estimate");
+        assert!(est.tokens_per_s > 0.0 && est.tokens_per_s.is_finite());
+        assert!(est.mean_step_s > 0.0 && est.mean_step_s.is_finite());
+        assert!((est.mean_step_s - rep.busy_s() / rep.steps() as f64).abs() < 1e-12);
+        // a warm, empty replica still charges the request's own service
+        // time; a queued one charges strictly more
+        let empty_finish = rep.estimated_finish_s(rep.now(), 256, 4);
+        assert!(empty_finish > rep.now());
+        rep.submit(ReplicaRequest { id: 1, arrival_s: 0.0, prompt_tokens: 700, decode_steps: 8 });
+        let queued_finish = rep.estimated_finish_s(rep.now(), 256, 4);
+        assert!(queued_finish > empty_finish, "queued work pushes the estimate out");
     }
 }

@@ -1,0 +1,458 @@
+//! Fleet overload protection: admission control, backpressure, and
+//! per-replica circuit breakers with capped-exponential retry backoff.
+//!
+//! The fleet's failure mode mirrors the paper's device-level one, one
+//! layer up: a bursty workload plus whole-replica failures funnels
+//! requests onto survivors with no mechanism to say "no", so queues —
+//! and tail latency — grow without bound. [`OverloadConfig`] is the
+//! knob block the [`FleetSim`](super::FleetSim) event loop consults to
+//! push back instead:
+//!
+//! * **Admission control** (`admission=1`, requires a `--deadline`) —
+//!   before routing, estimate the earliest finish time any eligible
+//!   replica could give the request (its queued work divided by its
+//!   observed priced-token rate, plus the request's own service time;
+//!   see [`Replica::estimated_finish_s`]). If even the best estimate
+//!   blows the deadline, shed the request instead of wasting survivor
+//!   capacity on work that can no longer be on time.
+//! * **Backpressure** (`queue-cap=N`) — replicas at or over the cap stop
+//!   `accepting`; the router spills to the next-best replica, and when
+//!   every replica is saturated the request waits in a *bounded*
+//!   frontend queue (`frontend-cap=N`). Overflowing that sheds.
+//! * **Retry with backoff + circuit breaker** — requests drained by a
+//!   replica failure retry after a deterministic, seed-derived
+//!   capped-exponential backoff ([`OverloadConfig::backoff_s`]), at most
+//!   `retries=K` times before they are shed. Each replica carries a
+//!   [`Breaker`]: `breaker-after=F` consecutive failures open it, an
+//!   open breaker rejects traffic for `cooldown` seconds, then admits a
+//!   single half-open probe; success closes it, another failure re-opens
+//!   it with a doubled (capped) cooldown.
+//!
+//! Everything here is a pure function of `(config, seed, request id,
+//! attempt)` — no wall clock, no global RNG — so protected fleet runs
+//! stay bit-reproducible.
+//!
+//! [`Replica::estimated_finish_s`]: crate::coordinator::Replica::estimated_finish_s
+
+use super::workload::Params;
+
+/// Why a request was shed instead of served.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedCause {
+    /// Admission control: no eligible replica could meet the deadline.
+    Deadline,
+    /// Backpressure: every replica saturated and the frontend queue full.
+    Backpressure,
+    /// The request exhausted its failure-retry budget.
+    Retries,
+}
+
+/// Knob block for fleet overload protection. Parsed from / serialized
+/// to a `key=value,...` spec ([`spec`](Self::spec) round-trips through
+/// [`parse`](Self::parse)); [`FleetSim::with_overload`] turns it on.
+///
+/// [`FleetSim::with_overload`]: super::FleetSim::with_overload
+#[derive(Clone, Debug, PartialEq)]
+pub struct OverloadConfig {
+    /// Shed requests no eligible replica can serve within the fleet
+    /// deadline (only acts when the sim has one).
+    pub admission: bool,
+    /// Per-replica outstanding-request cap; `None` = unbounded (the
+    /// router then never spills on depth).
+    pub queue_cap: Option<usize>,
+    /// Bounded frontend queue used once every replica is saturated.
+    pub frontend_cap: usize,
+    /// Max failure-requeues per request before it is shed.
+    pub max_retries: usize,
+    /// Retry backoff base (seconds); attempt k waits `base * 2^(k-1)`.
+    pub backoff_base_s: f64,
+    /// Retry backoff ceiling (seconds).
+    pub backoff_cap_s: f64,
+    /// Consecutive failures that open a replica's breaker.
+    pub breaker_threshold: usize,
+    /// Seconds an open breaker rejects traffic before its half-open
+    /// probe. Re-opening doubles it, capped at 8x this base.
+    pub breaker_cooldown_s: f64,
+}
+
+impl Default for OverloadConfig {
+    fn default() -> OverloadConfig {
+        OverloadConfig {
+            admission: true,
+            queue_cap: Some(8),
+            frontend_cap: 64,
+            max_retries: 3,
+            backoff_base_s: 1e-3,
+            backoff_cap_s: 16e-3,
+            breaker_threshold: 1,
+            breaker_cooldown_s: 5e-3,
+        }
+    }
+}
+
+impl OverloadConfig {
+    /// Parse a `key=value,...` spec; missing keys take their defaults.
+    /// Keys: `admission=0|1`, `queue-cap=N` (0 = unbounded),
+    /// `frontend-cap=N`, `retries=N`, `backoff=S`, `backoff-cap=S`,
+    /// `breaker-after=N`, `cooldown=S`.
+    pub fn parse(spec: &str) -> Result<OverloadConfig, String> {
+        let mut p = Params::parse(spec)?;
+        let d = OverloadConfig::default();
+        let cfg = OverloadConfig {
+            admission: match p.take_usize("admission")? {
+                None => d.admission,
+                Some(0) => false,
+                Some(1) => true,
+                Some(v) => return Err(format!("overload: admission must be 0 or 1, got {v}")),
+            },
+            queue_cap: match p.take_usize("queue-cap")? {
+                None => d.queue_cap,
+                Some(0) => None,
+                Some(c) => Some(c),
+            },
+            frontend_cap: p.take_usize("frontend-cap")?.unwrap_or(d.frontend_cap),
+            max_retries: p.take_usize("retries")?.unwrap_or(d.max_retries),
+            backoff_base_s: p.take_f64("backoff")?.unwrap_or(d.backoff_base_s),
+            backoff_cap_s: p.take_f64("backoff-cap")?.unwrap_or(d.backoff_cap_s),
+            breaker_threshold: p.take_usize("breaker-after")?.unwrap_or(d.breaker_threshold),
+            breaker_cooldown_s: p.take_f64("cooldown")?.unwrap_or(d.breaker_cooldown_s),
+        };
+        p.finish("overload")?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Canonical spec string; [`parse`](Self::parse) round-trips it.
+    pub fn spec(&self) -> String {
+        format!(
+            "admission={},queue-cap={},frontend-cap={},retries={},backoff={},\
+             backoff-cap={},breaker-after={},cooldown={}",
+            self.admission as usize,
+            self.queue_cap.unwrap_or(0),
+            self.frontend_cap,
+            self.max_retries,
+            self.backoff_base_s,
+            self.backoff_cap_s,
+            self.breaker_threshold,
+            self.breaker_cooldown_s,
+        )
+    }
+
+    /// Reject configurations that would hang or misbehave silently.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.frontend_cap == 0 {
+            return Err("overload: frontend-cap must be >= 1".to_string());
+        }
+        if self.breaker_threshold == 0 {
+            return Err("overload: breaker-after must be >= 1".to_string());
+        }
+        for (name, v) in
+            [("backoff", self.backoff_base_s), ("backoff-cap", self.backoff_cap_s)]
+        {
+            if !(v.is_finite() && v >= 0.0) {
+                return Err(format!("overload: {name} must be a non-negative time, got {v}"));
+            }
+        }
+        if self.backoff_cap_s < self.backoff_base_s {
+            return Err(format!(
+                "overload: backoff-cap ({}) below backoff base ({})",
+                self.backoff_cap_s, self.backoff_base_s
+            ));
+        }
+        if !(self.breaker_cooldown_s.is_finite() && self.breaker_cooldown_s > 0.0) {
+            return Err(format!(
+                "overload: cooldown must be a positive time, got {}",
+                self.breaker_cooldown_s
+            ));
+        }
+        Ok(())
+    }
+
+    /// Backoff before retry `attempt` (1-based) of request `id`:
+    /// capped exponential `min(base * 2^(attempt-1), cap)` with up to
+    /// +50% deterministic jitter hashed from `(seed, id, attempt)` so
+    /// simultaneous retries de-synchronize without a shared RNG.
+    pub fn backoff_s(&self, seed: u64, id: usize, attempt: usize) -> f64 {
+        let exp = attempt.saturating_sub(1).min(63) as u32;
+        let base = (self.backoff_base_s * f64::from(2u32.saturating_pow(exp.min(30))))
+            .min(self.backoff_cap_s);
+        let mut h = seed
+            ^ (id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ (attempt as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        // splitmix64 finalizer: decorrelate adjacent (id, attempt) pairs
+        h = (h ^ (h >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        h = (h ^ (h >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        h ^= h >> 31;
+        let unit = (h >> 11) as f64 / (1u64 << 53) as f64;
+        base * (1.0 + 0.5 * unit)
+    }
+}
+
+/// Circuit-breaker state (see [`Breaker`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Healthy: traffic flows.
+    Closed,
+    /// Tripped: rejects all traffic until the cooldown elapses.
+    Open,
+    /// Cooldown elapsed: admits exactly one probe request.
+    HalfOpen,
+}
+
+/// Per-replica circuit breaker. Consecutive replica failures open it;
+/// an open breaker stops the router sending traffic to a flapping
+/// replica, a half-open breaker admits a single probe after the
+/// cooldown, and a successful step closes it again. Re-opening from
+/// half-open doubles the cooldown (capped at 8x base) so a replica that
+/// keeps dying is probed geometrically less often.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Breaker {
+    pub state: BreakerState,
+    /// Consecutive failures since the last successful step.
+    pub consecutive: usize,
+    /// Virtual time at which an open breaker goes half-open.
+    pub open_until_s: f64,
+    cooldown_s: f64,
+    base_cooldown_s: f64,
+    probe_in_flight: bool,
+    /// Times this breaker transitioned Closed/HalfOpen -> Open.
+    pub opens: usize,
+    /// Half-open probe requests routed through this breaker.
+    pub probes: usize,
+}
+
+impl Breaker {
+    pub fn new(cfg: &OverloadConfig) -> Breaker {
+        Breaker {
+            state: BreakerState::Closed,
+            consecutive: 0,
+            open_until_s: 0.0,
+            cooldown_s: cfg.breaker_cooldown_s,
+            base_cooldown_s: cfg.breaker_cooldown_s,
+            probe_in_flight: false,
+            opens: 0,
+            probes: 0,
+        }
+    }
+
+    /// Record a replica failure at `now`; returns `true` when this
+    /// failure newly opened the breaker.
+    pub fn on_failure(&mut self, now: f64, threshold: usize) -> bool {
+        self.consecutive += 1;
+        match self.state {
+            BreakerState::Open => {
+                // already open: push the probe point out
+                self.open_until_s = self.open_until_s.max(now + self.cooldown_s);
+                false
+            }
+            BreakerState::HalfOpen => {
+                // the probe (or the replica itself) failed: re-open with
+                // a doubled, capped cooldown
+                self.cooldown_s = (self.cooldown_s * 2.0).min(8.0 * self.base_cooldown_s);
+                self.state = BreakerState::Open;
+                self.open_until_s = now + self.cooldown_s;
+                self.probe_in_flight = false;
+                self.opens += 1;
+                true
+            }
+            BreakerState::Closed => {
+                if self.consecutive >= threshold {
+                    self.state = BreakerState::Open;
+                    self.open_until_s = now + self.cooldown_s;
+                    self.opens += 1;
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    /// Record a successfully priced step: the replica is healthy again.
+    pub fn on_success(&mut self) {
+        self.state = BreakerState::Closed;
+        self.consecutive = 0;
+        self.cooldown_s = self.base_cooldown_s;
+        self.probe_in_flight = false;
+    }
+
+    /// May the router send this replica a request at `now`? Transitions
+    /// Open -> HalfOpen once the cooldown elapses; a half-open breaker
+    /// accepts only while no probe is in flight.
+    pub fn accepting(&mut self, now: f64) -> bool {
+        if self.state == BreakerState::Open && now >= self.open_until_s {
+            self.state = BreakerState::HalfOpen;
+            self.probe_in_flight = false;
+        }
+        match self.state {
+            BreakerState::Closed => true,
+            BreakerState::Open => false,
+            BreakerState::HalfOpen => !self.probe_in_flight,
+        }
+    }
+
+    /// The router actually routed here; a half-open breaker marks its
+    /// single probe as spent.
+    pub fn note_routed(&mut self) {
+        if self.state == BreakerState::HalfOpen && !self.probe_in_flight {
+            self.probe_in_flight = true;
+            self.probes += 1;
+        }
+    }
+
+    /// When an open breaker next changes behaviour (the event loop
+    /// schedules a wake so a frontend queue blocked only on open
+    /// breakers cannot stall).
+    pub fn wake_at(&self) -> Option<f64> {
+        match self.state {
+            BreakerState::Open => Some(self.open_until_s),
+            _ => None,
+        }
+    }
+}
+
+/// Counters for everything the protection layer did during one run.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct OverloadStats {
+    /// Requests shed by admission control (deadline unmeetable).
+    pub shed_deadline: usize,
+    /// Requests shed because replicas and the frontend queue were full.
+    pub shed_frontend: usize,
+    /// Requests shed after exhausting their retry budget.
+    pub shed_retries: usize,
+    /// Failure-requeues that were granted a retry (with backoff).
+    pub retries: usize,
+    /// Breaker open transitions across all replicas.
+    pub breaker_opens: usize,
+    /// Half-open probe requests routed.
+    pub breaker_probes: usize,
+    /// Total virtual seconds requests spent in retry backoff.
+    pub backoff_total_s: f64,
+    /// High-water mark of the bounded frontend queue.
+    pub frontend_peak_depth: usize,
+}
+
+impl OverloadStats {
+    /// Total requests shed, any cause.
+    pub fn shed(&self) -> usize {
+        self.shed_deadline + self.shed_frontend + self.shed_retries
+    }
+
+    pub fn note_shed(&mut self, cause: ShedCause) {
+        match cause {
+            ShedCause::Deadline => self.shed_deadline += 1,
+            ShedCause::Backpressure => self.shed_frontend += 1,
+            ShedCause::Retries => self.shed_retries += 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_spec_round_trips() {
+        let d = OverloadConfig::default();
+        assert_eq!(OverloadConfig::parse(&d.spec()).unwrap(), d);
+        assert_eq!(OverloadConfig::parse("").unwrap(), d, "empty spec = defaults");
+        let cfg = OverloadConfig::parse(
+            "admission=0,queue-cap=4,frontend-cap=6,retries=2,backoff=0.0005,\
+             backoff-cap=0.004,breaker-after=2,cooldown=0.002",
+        )
+        .unwrap();
+        assert!(!cfg.admission);
+        assert_eq!(cfg.queue_cap, Some(4));
+        assert_eq!(cfg.max_retries, 2);
+        assert_eq!(OverloadConfig::parse(&cfg.spec()).unwrap(), cfg);
+        // queue-cap=0 means unbounded and round-trips as 0
+        let unbounded = OverloadConfig::parse("queue-cap=0").unwrap();
+        assert_eq!(unbounded.queue_cap, None);
+        assert_eq!(OverloadConfig::parse(&unbounded.spec()).unwrap(), unbounded);
+    }
+
+    #[test]
+    fn bad_configs_are_loud() {
+        assert!(OverloadConfig::parse("admission=2").is_err());
+        assert!(OverloadConfig::parse("frontend-cap=0").is_err());
+        assert!(OverloadConfig::parse("breaker-after=0").is_err());
+        assert!(OverloadConfig::parse("cooldown=0").is_err());
+        assert!(OverloadConfig::parse("backoff=0.01,backoff-cap=0.001").is_err());
+        assert!(OverloadConfig::parse("warp=9").is_err(), "unknown key");
+    }
+
+    #[test]
+    fn backoff_is_capped_exponential_and_deterministic() {
+        let cfg = OverloadConfig { backoff_base_s: 1e-3, backoff_cap_s: 4e-3, ..Default::default() };
+        let b1 = cfg.backoff_s(7, 0, 1);
+        let b2 = cfg.backoff_s(7, 0, 2);
+        let b9 = cfg.backoff_s(7, 0, 9);
+        // within [base*2^(k-1), 1.5 * that], and capped from attempt 3 on
+        assert!((1e-3..1.5e-3 + 1e-12).contains(&b1), "{b1}");
+        assert!((2e-3..3e-3 + 1e-12).contains(&b2), "{b2}");
+        assert!((4e-3..6e-3 + 1e-12).contains(&b9), "{b9}");
+        assert_eq!(cfg.backoff_s(7, 3, 1).to_bits(), cfg.backoff_s(7, 3, 1).to_bits());
+        // different requests jitter differently (de-synchronized herd)
+        assert_ne!(cfg.backoff_s(7, 0, 1).to_bits(), cfg.backoff_s(7, 1, 1).to_bits());
+    }
+
+    #[test]
+    fn breaker_walks_closed_open_halfopen_closed() {
+        let cfg =
+            OverloadConfig { breaker_cooldown_s: 1.0, breaker_threshold: 2, ..Default::default() };
+        let mut b = Breaker::new(&cfg);
+        assert!(b.accepting(0.0));
+        assert!(!b.on_failure(0.0, cfg.breaker_threshold), "below threshold");
+        assert!(b.accepting(0.0), "one failure of two: still closed");
+        assert!(b.on_failure(0.1, cfg.breaker_threshold), "threshold reached: opens");
+        assert_eq!(b.state, BreakerState::Open);
+        assert_eq!(b.opens, 1);
+        assert!(!b.accepting(0.5), "cooling down");
+        let wake = b.wake_at().expect("open breakers schedule a wake");
+        assert!((wake - 1.1).abs() < 1e-9, "wake at open+cooldown, got {wake}");
+        assert!(b.accepting(1.2), "cooldown elapsed: half-open probe");
+        assert_eq!(b.state, BreakerState::HalfOpen);
+        b.note_routed();
+        assert_eq!(b.probes, 1);
+        assert!(!b.accepting(1.2), "single probe in flight");
+        b.on_success();
+        assert_eq!(b.state, BreakerState::Closed);
+        assert_eq!(b.consecutive, 0);
+        assert!(b.accepting(1.3));
+    }
+
+    #[test]
+    fn reopening_doubles_cooldown_up_to_cap() {
+        let cfg =
+            OverloadConfig { breaker_cooldown_s: 1.0, breaker_threshold: 1, ..Default::default() };
+        let mut b = Breaker::new(&cfg);
+        assert!(b.on_failure(0.0, 1));
+        let mut expected = 1.0;
+        let mut now = 0.0;
+        for _ in 0..5 {
+            now = b.open_until_s;
+            assert!(b.accepting(now), "half-open at {now}");
+            assert!(b.on_failure(now, 1), "probe failure re-opens");
+            expected = (expected * 2.0).min(8.0);
+            assert!(
+                (b.open_until_s - now - expected).abs() < 1e-9,
+                "cooldown {} != {expected}",
+                b.open_until_s - now
+            );
+        }
+        b.on_success();
+        assert!(b.on_failure(now, 1));
+        assert!((b.open_until_s - now - 1.0).abs() < 1e-9, "success resets the cooldown");
+    }
+
+    #[test]
+    fn stats_split_shed_by_cause() {
+        let mut s = OverloadStats::default();
+        s.note_shed(ShedCause::Deadline);
+        s.note_shed(ShedCause::Backpressure);
+        s.note_shed(ShedCause::Backpressure);
+        s.note_shed(ShedCause::Retries);
+        assert_eq!((s.shed_deadline, s.shed_frontend, s.shed_retries), (1, 2, 1));
+        assert_eq!(s.shed(), 4);
+    }
+}

@@ -14,19 +14,27 @@
 //! * [`router`] — pluggable admission policies over per-replica load
 //!   snapshots: round-robin, least-queue, token-pressure-aware.
 //! * [`sim`] — the discrete-event loop tying them together, plus
-//!   whole-replica fail/recover chaos ([`FleetFaultPlan`]) layered on
-//!   top of each replica's own device-level fault plan.
+//!   whole-replica fail/recover chaos ([`FleetFaultPlan`], including
+//!   correlated `burst:` group failures) layered on top of each
+//!   replica's own device-level fault plan.
+//! * [`admission`] — overload protection: deadline admission control,
+//!   queue-cap backpressure with a bounded frontend queue, retry with
+//!   capped-exponential backoff, and per-replica circuit breakers
+//!   ([`OverloadConfig`]).
 //!
 //! Everything is bit-reproducible from `(workload spec, replica
-//! configs, fault plan, seed)`, and the summed
+//! configs, fault plan, overload config, seed)`, and the summed
 //! [`TokenLedger`](crate::coordinator::TokenLedger) (admitted ==
-//! priced) survives whole-replica failures. Driven by the `llep fleet`
-//! CLI subcommand and `rust/tests/fleet.rs`.
+//! priced) survives whole-replica failures; with protection on the
+//! request ledger relaxes to the exact `completed + shed == admitted`.
+//! Driven by the `llep fleet` CLI subcommand and `rust/tests/fleet.rs`.
 
+mod admission;
 mod router;
 mod sim;
 mod workload;
 
+pub use admission::{Breaker, BreakerState, OverloadConfig, OverloadStats, ShedCause};
 pub use router::{ReplicaLoad, Router, RouterPolicy};
 pub use sim::{
     FleetEvent, FleetFaultPlan, FleetReplicaReport, FleetReport, FleetSim, ReplicaConfig,

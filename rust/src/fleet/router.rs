@@ -17,12 +17,21 @@
 //!
 //! Ties break to the lowest replica index so routing is a pure function
 //! of the load snapshot (bit-reproducible fleets).
+//!
+//! Overload protection (`fleet/admission.rs`) adds an `accepting` bit to
+//! the snapshot: replicas at their queue cap or behind an open circuit
+//! breaker stay alive but refuse new work, so every policy spills to the
+//! next-best accepting replica and returns `None` when the whole fleet
+//! is saturated (the frontend queue's signal to buffer or shed).
 
 /// Snapshot of one replica's load, as visible to the router.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ReplicaLoad {
     /// Dead replicas are never picked.
     pub alive: bool,
+    /// Saturated (queue-capped) or breaker-blocked replicas are alive
+    /// but not routable; `false` makes every policy spill past them.
+    pub accepting: bool,
     /// Outstanding requests: waiting + actively decoding.
     pub queue_depth: usize,
     /// Queued prompt tokens + in-flight generations (compute pressure).
@@ -74,32 +83,33 @@ impl Router {
     }
 
     /// Pick the replica index for the next arrival, or `None` when no
-    /// replica is alive. Deterministic: ties break to the lowest index.
+    /// replica is alive and accepting. Deterministic: ties break to the
+    /// lowest index.
     pub fn pick(&mut self, loads: &[ReplicaLoad]) -> Option<usize> {
         let n = loads.len();
-        if !loads.iter().any(|l| l.alive) {
+        if !loads.iter().any(|l| l.alive && l.accepting) {
             return None;
         }
         match self.policy {
             RouterPolicy::RoundRobin => {
-                // first alive replica scanning from the cursor
+                // first routable replica scanning from the cursor
                 let i = (0..n)
                     .map(|k| (self.cursor + k) % n)
-                    .find(|&i| loads[i].alive)
-                    .expect("an alive replica exists");
+                    .find(|&i| loads[i].alive && loads[i].accepting)
+                    .expect("a routable replica exists");
                 self.cursor = (i + 1) % n;
                 Some(i)
             }
             RouterPolicy::LeastQueue => loads
                 .iter()
                 .enumerate()
-                .filter(|(_, l)| l.alive)
+                .filter(|(_, l)| l.alive && l.accepting)
                 .min_by_key(|(i, l)| (l.queue_depth, *i))
                 .map(|(i, _)| i),
             RouterPolicy::Pressure => loads
                 .iter()
                 .enumerate()
-                .filter(|(_, l)| l.alive)
+                .filter(|(_, l)| l.alive && l.accepting)
                 .min_by_key(|(i, l)| (l.pressure, *i))
                 .map(|(i, _)| i),
         }
@@ -111,7 +121,7 @@ mod tests {
     use super::*;
 
     fn load(alive: bool, queue_depth: usize, pressure: usize) -> ReplicaLoad {
-        ReplicaLoad { alive, queue_depth, pressure }
+        ReplicaLoad { alive, accepting: true, queue_depth, pressure }
     }
 
     #[test]
@@ -153,5 +163,18 @@ mod tests {
         let mut r = Router::new(RouterPolicy::RoundRobin);
         assert_eq!(r.pick(&[load(false, 0, 0), load(false, 0, 0)]), None);
         assert_eq!(Router::new(RouterPolicy::LeastQueue).pick(&[]), None);
+    }
+
+    #[test]
+    fn non_accepting_replicas_spill_like_dead_ones() {
+        // alive-but-saturated replica 0 is skipped by every policy even
+        // though its queue metrics would otherwise win
+        let saturated = ReplicaLoad { alive: true, accepting: false, queue_depth: 0, pressure: 0 };
+        let loads = [saturated, load(true, 5, 900)];
+        for policy in [RouterPolicy::RoundRobin, RouterPolicy::LeastQueue, RouterPolicy::Pressure] {
+            assert_eq!(Router::new(policy).pick(&loads), Some(1), "{policy:?}");
+        }
+        // nobody accepting: the frontend must buffer or shed
+        assert_eq!(Router::new(RouterPolicy::LeastQueue).pick(&[saturated, saturated]), None);
     }
 }

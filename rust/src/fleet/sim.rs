@@ -10,18 +10,35 @@
 //!    replica dies (its queued and in-flight requests drain back through
 //!    the router to the survivors, at most one requeue per request per
 //!    failure) or rejoins.
-//! 3. **Replica step** — the alive replica with the earliest local clock
+//! 3. **Retry** — a backoff timer set by the overload-protection layer
+//!    expires and a previously failed request re-enters routing.
+//! 4. **Replica step** — the alive replica with the earliest local clock
 //!    prices one batched engine step via the shared
 //!    [`Replica`](crate::coordinator::Replica) core.
+//! 5. **Breaker wake** — an open circuit breaker's cooldown elapses
+//!    while the frontend queue holds work (so a fleet blocked only on
+//!    open breakers cannot stall).
 //!
-//! Ties break arrival → fault → lowest replica index, so the whole run
-//! is a pure function of `(workload spec, replica configs, fault plan,
-//! seed)` — bit-reproducible, property-tested in `rust/tests/fleet.rs`.
-//! Every replica keeps its own exact [`TokenLedger`]; the fleet report
-//! carries their sum, which must stay exact even across whole-replica
-//! failures (a drained request's prefill is re-priced by the replica
-//! that re-admits it, and each replica prices exactly what it admits).
+//! Ties break arrival → fault → retry → lowest replica index → wake, so
+//! the whole run is a pure function of `(workload spec, replica
+//! configs, fault plan, overload config, seed)` — bit-reproducible,
+//! property-tested in `rust/tests/fleet.rs`. Every replica keeps its
+//! own exact [`TokenLedger`]; the fleet report carries their sum, which
+//! must stay exact even across whole-replica failures (a drained
+//! request's prefill is re-priced by the replica that re-admits it, and
+//! each replica prices exactly what it admits).
+//!
+//! With [`OverloadConfig`] installed (see `fleet/admission.rs`) the
+//! loop additionally sheds: admission control rejects requests no
+//! eligible replica can serve within the deadline, queue caps spill
+//! saturated replicas into a bounded frontend queue, and drained
+//! requests retry with capped-exponential backoff at most `retries`
+//! times. Shed requests leave the run's request ledger as the exact
+//! identity `completed + shed == requests`.
 
+use std::collections::VecDeque;
+
+use super::admission::{Breaker, OverloadConfig, OverloadStats, ShedCause};
 use super::router::{ReplicaLoad, Router, RouterPolicy};
 use super::workload::{Params, Workload};
 use crate::chaos::{FaultPlan, PoolState};
@@ -32,6 +49,7 @@ use crate::exec::{Engine, PlanCostModel};
 use crate::placement::PlacementStats;
 use crate::planner::{CacheStats, Planner, Registry};
 use crate::routing::Scenario;
+use crate::trace::Tracer;
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
 
@@ -61,11 +79,36 @@ impl FleetEvent {
 
 /// Whole-replica fault schedule. Grammar: `;`-separated events,
 /// `fail:r=1,at=0.02` / `recover:r=1,at=0.05` (`at` in virtual
-/// seconds). [`spec`](Self::spec) round-trips through
+/// seconds), plus the correlated-failure macro
+/// `burst:r=1-3,at=0.02[,for=0.05]` — a contiguous replica group (one
+/// rack, one power domain) dies at the same instant, optionally
+/// recovering together `for` seconds later. `burst` desugars into
+/// per-replica fail/recover events, so [`spec`](Self::spec) emits the
+/// canonical desugared form and round-trips through
 /// [`parse`](Self::parse).
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct FleetFaultPlan {
     pub events: Vec<FleetEvent>,
+}
+
+/// `N` or `LO-HI` (inclusive), for `burst:r=...` replica groups.
+fn parse_replica_range(kind: &str, v: &str) -> Result<(usize, usize), String> {
+    let (lo, hi) = match v.split_once('-') {
+        None => (v, v),
+        Some(pair) => pair,
+    };
+    let lo: usize = lo
+        .trim()
+        .parse()
+        .map_err(|_| format!("{kind}: bad replica range bound {lo:?} in r={v}"))?;
+    let hi: usize = hi
+        .trim()
+        .parse()
+        .map_err(|_| format!("{kind}: bad replica range bound {hi:?} in r={v}"))?;
+    if hi < lo {
+        return Err(format!("{kind}: replica range must be lo-hi, got {v}"));
+    }
+    Ok((lo, hi))
 }
 
 impl FleetFaultPlan {
@@ -74,24 +117,54 @@ impl FleetFaultPlan {
         for part in spec.split(';').map(str::trim).filter(|p| !p.is_empty()) {
             let (kind, tail) = part.split_once(':').unwrap_or((part, ""));
             let mut p = Params::parse(tail)?;
-            let replica = p
-                .take_usize("r")?
+            let r_spec = p
+                .take("r")
                 .ok_or_else(|| format!("{kind}: missing r=<replica index>"))?;
             let at_s =
                 p.take_f64("at")?.ok_or_else(|| format!("{kind}: missing at=<seconds>"))?;
             if !(at_s.is_finite() && at_s >= 0.0) {
                 return Err(format!("{kind}: at must be a non-negative time, got {at_s}"));
             }
-            p.finish(kind)?;
-            events.push(match kind {
-                "fail" => FleetEvent::Fail { replica, at_s },
-                "recover" => FleetEvent::Recover { replica, at_s },
+            match kind {
+                "fail" | "recover" => {
+                    let replica: usize = r_spec
+                        .parse()
+                        .map_err(|_| format!("{kind}: r expects an integer, got {r_spec:?}"))?;
+                    p.finish(kind)?;
+                    events.push(if kind == "fail" {
+                        FleetEvent::Fail { replica, at_s }
+                    } else {
+                        FleetEvent::Recover { replica, at_s }
+                    });
+                }
+                "burst" => {
+                    let (lo, hi) = parse_replica_range(kind, &r_spec)?;
+                    let for_s = p.take_f64("for")?;
+                    if let Some(d) = for_s {
+                        if !(d.is_finite() && d > 0.0) {
+                            return Err(format!(
+                                "burst: for must be a positive duration, got {d}"
+                            ));
+                        }
+                    }
+                    p.finish(kind)?;
+                    // desugar: the whole group fails at the same instant
+                    // (and recovers together when `for` is given)
+                    for replica in lo..=hi {
+                        events.push(FleetEvent::Fail { replica, at_s });
+                    }
+                    if let Some(d) = for_s {
+                        for replica in lo..=hi {
+                            events.push(FleetEvent::Recover { replica, at_s: at_s + d });
+                        }
+                    }
+                }
                 other => {
                     return Err(format!(
-                        "unknown fleet event {other:?} (expected fail, recover)"
+                        "unknown fleet event {other:?} (expected fail, recover, burst)"
                     ))
                 }
-            });
+            }
         }
         Ok(FleetFaultPlan { events })
     }
@@ -182,6 +255,9 @@ pub struct FleetReplicaReport {
     /// Persistent-placement activity local to this replica (all zero
     /// for stateless planners).
     pub placement: PlacementStats,
+    /// Times this replica's circuit breaker opened (0 when overload
+    /// protection is off).
+    pub breaker_opens: usize,
 }
 
 /// Result of one fleet run.
@@ -191,11 +267,17 @@ pub struct FleetReport {
     pub workload: String,
     /// Requests in the workload stream.
     pub requests: usize,
-    /// Requests that finished (== `requests` on success).
+    /// Requests that finished (`completed + shed == requests` on
+    /// success; `shed` is 0 unless overload protection is on).
     pub completed: usize,
+    /// Requests shed by the overload-protection layer instead of
+    /// served (split by cause in [`overload`](Self::overload)).
+    pub shed: usize,
     pub makespan_s: f64,
-    /// Time to first token per request (first prefill only — a requeued
-    /// request's re-prefill does not produce a second sample).
+    /// Time to first token per request, measured at the first
+    /// *successful* prefill: an attempt aborted by a replica failure
+    /// does not count, the re-prefill on the surviving replica does
+    /// (one sample per completed request).
     pub ttft: Summary,
     /// Per-decode-token latency, weighted by active decodes per step
     /// (same accounting as [`ContinuousReport`](crate::coordinator::ContinuousReport)).
@@ -225,6 +307,11 @@ pub struct FleetReport {
     /// contract: one per failure event that held the request).
     pub requeued_requests: usize,
     pub max_requeues: usize,
+    /// True when the run had an [`OverloadConfig`] installed (the CLI
+    /// relaxes its exit contract to `completed + shed == requests`).
+    pub protected: bool,
+    /// Everything the protection layer did (all zero when off).
+    pub overload: OverloadStats,
     pub replicas: Vec<FleetReplicaReport>,
 }
 
@@ -241,6 +328,9 @@ pub struct FleetSim {
     pub max_prefill_tokens: usize,
     pub faults: Option<FleetFaultPlan>,
     pub deadline_s: Option<f64>,
+    /// Overload protection; `None` = legacy unbounded queueing (the
+    /// unprotected baseline, bit-identical to pre-protection runs).
+    pub overload: Option<OverloadConfig>,
 }
 
 impl FleetSim {
@@ -259,6 +349,7 @@ impl FleetSim {
             max_prefill_tokens,
             faults: None,
             deadline_s: None,
+            overload: None,
         }
     }
 
@@ -279,6 +370,14 @@ impl FleetSim {
 
     pub fn with_deadline(mut self, deadline_s: f64) -> FleetSim {
         self.deadline_s = Some(deadline_s);
+        self
+    }
+
+    /// Install overload protection (admission control, backpressure,
+    /// retry/backoff, circuit breakers). Admission control only sheds
+    /// when [`with_deadline`](Self::with_deadline) is also set.
+    pub fn with_overload(mut self, overload: OverloadConfig) -> FleetSim {
+        self.overload = Some(overload);
         self
     }
 
@@ -375,14 +474,33 @@ impl FleetSim {
             self.faults.as_ref().map(|p| p.events.clone()).unwrap_or_default();
         fleet_events.sort_by(|a, b| a.at_s().total_cmp(&b.at_s()));
 
+        let overload = self.overload.clone();
+        if let Some(cfg) = &overload {
+            cfg.validate()?;
+        }
         let mut router = Router::new(self.router);
+        let mut breakers: Vec<Breaker> = match &overload {
+            Some(cfg) => (0..n).map(|_| Breaker::new(cfg)).collect(),
+            None => Vec::new(),
+        };
+        let mut ostats = OverloadStats::default();
+        // Bounded frontend queue (protection only): holds requests while
+        // every replica is saturated or breaker-blocked.
+        let mut frontend: VecDeque<ReplicaRequest> = VecDeque::new();
+        // Pending retry timers `(fire time, request)`. `Vec::remove`
+        // keeps insertion order, so equal fire times stay FIFO and the
+        // loop stays deterministic.
+        let mut retryq: Vec<(f64, ReplicaRequest)> = Vec::new();
+        let mut shed_flag = vec![false; total];
+        let mut shed_count = 0usize;
         let mut alive = vec![true; n];
         let mut routed = vec![0usize; n];
         let mut completed_r = vec![0usize; n];
         let mut requeues = vec![0usize; total];
-        let mut ttft_done = vec![false; total];
+        // TTFT of the first *successful* prefill; cleared again when a
+        // replica failure aborts the attempt before the request finished.
+        let mut ttft_at: Vec<Option<f64>> = vec![None; total];
         let mut finished = vec![false; total];
-        let mut ttft = Vec::with_capacity(total);
         let mut tpot = Vec::new();
         let mut latencies = Vec::with_capacity(total);
         let mut completed = 0usize;
@@ -395,7 +513,8 @@ impl FleetSim {
         let mut next_ev = 0usize;
 
         // Event kinds at equal times: arrival (0) before fleet fault (1)
-        // before replica step (2); steps tie-break to the lowest index.
+        // before retry (2) before replica step (3) before breaker wake
+        // (4); steps tie-break to the lowest index.
         fn earlier(a: (f64, u8, usize), b: (f64, u8, usize)) -> bool {
             a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2)).is_lt()
         }
@@ -406,7 +525,7 @@ impl FleetSim {
             }
         }
 
-        while completed < total {
+        while completed + shed_count < total {
             let mut best: Option<(f64, u8, usize)> = None;
             if next_req < total {
                 best = Some((requests[next_req].arrival_s, 0, 0));
@@ -417,44 +536,46 @@ impl FleetSim {
                     best = Some(c);
                 }
             }
+            for (qi, entry) in retryq.iter().enumerate() {
+                let c = (entry.0, 2, qi);
+                if beats(best, c) {
+                    best = Some(c);
+                }
+            }
             for (i, rep) in reps.iter().enumerate() {
                 if alive[i] && rep.has_work() {
-                    let c = (rep.now(), 2, i);
+                    let c = (rep.now(), 3, i);
                     if beats(best, c) {
                         best = Some(c);
                     }
                 }
             }
-            let Some((_, kind, idx)) = best else {
+            // A frontend queue blocked only on open breakers needs a
+            // wake when the earliest cooldown elapses, or it would stall.
+            if !frontend.is_empty() {
+                for (i, b) in breakers.iter().enumerate() {
+                    if alive[i] {
+                        if let Some(w) = b.wake_at() {
+                            let c = (w, 4, i);
+                            if beats(best, c) {
+                                best = Some(c);
+                            }
+                        }
+                    }
+                }
+            }
+            let Some((at, kind, idx)) = best else {
                 return Err(format!(
-                    "fleet: stuck with {completed}/{total} requests complete and no \
-                     runnable event (dead replicas holding no work?)"
+                    "fleet: stuck with {completed}/{total} requests complete ({shed_count} \
+                     shed) and no runnable event (dead replicas holding no work?)"
                 ));
             };
             match kind {
                 0 => {
                     // arrival: route via the load snapshot
                     let req = &requests[next_req];
-                    let loads: Vec<ReplicaLoad> = reps
-                        .iter()
-                        .enumerate()
-                        .map(|(i, r)| ReplicaLoad {
-                            alive: alive[i],
-                            queue_depth: r.queue_depth(),
-                            pressure: r.pressure(),
-                        })
-                        .collect();
-                    let Some(t) = router.pick(&loads) else {
-                        return Err(format!(
-                            "fleet: no alive replica to route request {} at t={:.6}",
-                            req.id, req.arrival_s
-                        ));
-                    };
-                    if !reps[t].has_work() {
-                        reps[t].advance_to(req.arrival_s);
-                    }
                     if tracer.is_enabled() {
-                        use crate::trace::{ArgValue, FlowPoint, COORD_TID};
+                        use crate::trace::{ArgValue, COORD_TID};
                         tracer.instant(
                             COORD_TID,
                             "arrival",
@@ -465,33 +586,90 @@ impl FleetSim {
                                 ("prompt_tokens", ArgValue::Num(req.prompt_tokens as f64)),
                             ],
                         );
-                        tracer.flow(
-                            "route",
-                            "router",
-                            FlowPoint {
-                                pid: tracer.pid(),
-                                tid: COORD_TID,
-                                ts_s: req.arrival_s,
-                            },
-                            FlowPoint {
-                                pid: t as u32 + 1,
-                                tid: COORD_TID,
-                                ts_s: req.arrival_s,
-                            },
-                            &[
-                                ("id", ArgValue::Num(req.id as f64)),
-                                ("replica", ArgValue::Num(t as f64)),
-                            ],
-                        );
                         tracer.count("router/arrivals", 1);
                     }
-                    reps[t].submit(ReplicaRequest {
+                    let request = ReplicaRequest {
                         id: req.id,
                         arrival_s: req.arrival_s,
                         prompt_tokens: req.prompt_tokens,
                         decode_steps: req.decode_steps,
-                    });
-                    routed[t] += 1;
+                    };
+                    match &overload {
+                        None => {
+                            // legacy unprotected path: route or die
+                            let loads: Vec<ReplicaLoad> = reps
+                                .iter()
+                                .enumerate()
+                                .map(|(i, r)| ReplicaLoad {
+                                    alive: alive[i],
+                                    accepting: true,
+                                    queue_depth: r.queue_depth(),
+                                    pressure: r.pressure(),
+                                })
+                                .collect();
+                            let Some(t) = router.pick(&loads) else {
+                                return Err(format!(
+                                    "fleet: no alive replica to route request {} at t={:.6}",
+                                    req.id, req.arrival_s
+                                ));
+                            };
+                            submit_routed(
+                                request,
+                                t,
+                                req.arrival_s,
+                                &mut reps,
+                                &mut routed,
+                                &tracer,
+                                "route",
+                            );
+                        }
+                        Some(cfg) => match route_decision(
+                            &request,
+                            req.arrival_s,
+                            cfg,
+                            self.deadline_s,
+                            &reps,
+                            &alive,
+                            &mut breakers,
+                            &mut router,
+                        ) {
+                            RouteDecision::Route(t) => submit_routed(
+                                request,
+                                t,
+                                req.arrival_s,
+                                &mut reps,
+                                &mut routed,
+                                &tracer,
+                                "route",
+                            ),
+                            RouteDecision::ShedDeadline => shed_request(
+                                req.id,
+                                ShedCause::Deadline,
+                                req.arrival_s,
+                                &mut shed_flag,
+                                &mut shed_count,
+                                &mut ostats,
+                                &tracer,
+                            ),
+                            RouteDecision::Saturated => {
+                                if frontend.len() < cfg.frontend_cap {
+                                    frontend.push_back(request);
+                                    ostats.frontend_peak_depth =
+                                        ostats.frontend_peak_depth.max(frontend.len());
+                                } else {
+                                    shed_request(
+                                        req.id,
+                                        ShedCause::Backpressure,
+                                        req.arrival_s,
+                                        &mut shed_flag,
+                                        &mut shed_count,
+                                        &mut ostats,
+                                        &tracer,
+                                    );
+                                }
+                            }
+                        },
+                    }
                     next_req += 1;
                 }
                 1 => {
@@ -510,50 +688,120 @@ impl FleetSim {
                                     );
                                     tracer.count("fleet/replica_failures", 1);
                                 }
+                                if let Some(cfg) = &overload {
+                                    if breakers[r].on_failure(at_s, cfg.breaker_threshold)
+                                        && tracer.is_enabled()
+                                    {
+                                        use crate::trace::ArgValue;
+                                        tracer.with_pid(r as u32 + 1).instant_process(
+                                            "breaker-open",
+                                            "fleet",
+                                            at_s,
+                                            &[("replica", ArgValue::Num(r as f64))],
+                                        );
+                                        tracer.count("fleet/breaker_opens", 1);
+                                    }
+                                }
                                 // drain the dead replica's queue back
                                 // through the router to the survivors
                                 for req in reps[r].drain() {
-                                    requeues[req.id] += 1;
-                                    let loads: Vec<ReplicaLoad> = reps
-                                        .iter()
-                                        .enumerate()
-                                        .map(|(i, rp)| ReplicaLoad {
-                                            alive: alive[i],
-                                            queue_depth: rp.queue_depth(),
-                                            pressure: rp.pressure(),
-                                        })
-                                        .collect();
-                                    let Some(t) = router.pick(&loads) else {
-                                        return Err(format!(
-                                            "fleet: replica {r} died at t={at_s:.6} with no \
-                                             survivor to requeue request {} onto",
-                                            req.id
-                                        ));
-                                    };
-                                    if !reps[t].has_work() {
-                                        reps[t].advance_to(at_s);
+                                    // the aborted attempt's prefill no
+                                    // longer counts toward TTFT (first
+                                    // *successful* prefill only)
+                                    if !finished[req.id] {
+                                        ttft_at[req.id] = None;
                                     }
-                                    if tracer.is_enabled() {
-                                        use crate::trace::{ArgValue, FlowPoint, COORD_TID};
-                                        tracer.flow(
-                                            "requeue",
-                                            "fleet",
-                                            FlowPoint {
-                                                pid: r as u32 + 1,
-                                                tid: COORD_TID,
-                                                ts_s: at_s,
-                                            },
-                                            FlowPoint {
-                                                pid: t as u32 + 1,
-                                                tid: COORD_TID,
-                                                ts_s: at_s,
-                                            },
-                                            &[("id", ArgValue::Num(req.id as f64))],
-                                        );
-                                        tracer.count("fleet/requeues", 1);
+                                    match &overload {
+                                        None => {
+                                            // legacy: immediate reroute
+                                            requeues[req.id] += 1;
+                                            let loads: Vec<ReplicaLoad> = reps
+                                                .iter()
+                                                .enumerate()
+                                                .map(|(i, rp)| ReplicaLoad {
+                                                    alive: alive[i],
+                                                    accepting: true,
+                                                    queue_depth: rp.queue_depth(),
+                                                    pressure: rp.pressure(),
+                                                })
+                                                .collect();
+                                            let Some(t) = router.pick(&loads) else {
+                                                return Err(format!(
+                                                    "fleet: replica {r} died at t={at_s:.6} \
+                                                     with no survivor to requeue request {} \
+                                                     onto",
+                                                    req.id
+                                                ));
+                                            };
+                                            if tracer.is_enabled() {
+                                                use crate::trace::{ArgValue, FlowPoint, COORD_TID};
+                                                tracer.flow(
+                                                    "requeue",
+                                                    "fleet",
+                                                    FlowPoint {
+                                                        pid: r as u32 + 1,
+                                                        tid: COORD_TID,
+                                                        ts_s: at_s,
+                                                    },
+                                                    FlowPoint {
+                                                        pid: t as u32 + 1,
+                                                        tid: COORD_TID,
+                                                        ts_s: at_s,
+                                                    },
+                                                    &[("id", ArgValue::Num(req.id as f64))],
+                                                );
+                                                tracer.count("fleet/requeues", 1);
+                                            }
+                                            if !reps[t].has_work() {
+                                                reps[t].advance_to(at_s);
+                                            }
+                                            reps[t].submit(req);
+                                            routed[t] += 1;
+                                        }
+                                        Some(cfg) => {
+                                            // protected: retry with capped
+                                            // exponential backoff, shed when
+                                            // the retry budget is exhausted
+                                            if requeues[req.id] >= cfg.max_retries {
+                                                shed_request(
+                                                    req.id,
+                                                    ShedCause::Retries,
+                                                    at_s,
+                                                    &mut shed_flag,
+                                                    &mut shed_count,
+                                                    &mut ostats,
+                                                    &tracer,
+                                                );
+                                            } else {
+                                                requeues[req.id] += 1;
+                                                let delay =
+                                                    cfg.backoff_s(seed, req.id, requeues[req.id]);
+                                                ostats.retries += 1;
+                                                ostats.backoff_total_s += delay;
+                                                if tracer.is_enabled() {
+                                                    use crate::trace::{ArgValue, COORD_TID};
+                                                    tracer.instant(
+                                                        COORD_TID,
+                                                        "retry-backoff",
+                                                        "fleet",
+                                                        at_s,
+                                                        &[
+                                                            ("id", ArgValue::Num(req.id as f64)),
+                                                            ("delay_s", ArgValue::Num(delay)),
+                                                            (
+                                                                "attempt",
+                                                                ArgValue::Num(
+                                                                    requeues[req.id] as f64,
+                                                                ),
+                                                            ),
+                                                        ],
+                                                    );
+                                                    tracer.count("fleet/retries", 1);
+                                                }
+                                                retryq.push((at_s + delay, req));
+                                            }
+                                        }
                                     }
-                                    reps[t].submit(req);
-                                    routed[t] += 1;
                                 }
                             }
                         }
@@ -577,15 +825,72 @@ impl FleetSim {
                     }
                     next_ev += 1;
                 }
-                _ => {
+                2 => {
+                    // retry timer fired: the request re-enters routing
+                    let cfg = overload
+                        .as_ref()
+                        .expect("retry events only exist under overload protection");
+                    let (fire_at, req) = retryq.remove(idx);
+                    match route_decision(
+                        &req,
+                        fire_at,
+                        cfg,
+                        self.deadline_s,
+                        &reps,
+                        &alive,
+                        &mut breakers,
+                        &mut router,
+                    ) {
+                        RouteDecision::Route(t) => submit_routed(
+                            req,
+                            t,
+                            fire_at,
+                            &mut reps,
+                            &mut routed,
+                            &tracer,
+                            "retry-route",
+                        ),
+                        RouteDecision::ShedDeadline => shed_request(
+                            req.id,
+                            ShedCause::Deadline,
+                            fire_at,
+                            &mut shed_flag,
+                            &mut shed_count,
+                            &mut ostats,
+                            &tracer,
+                        ),
+                        RouteDecision::Saturated => {
+                            if frontend.len() < cfg.frontend_cap {
+                                frontend.push_back(req);
+                                ostats.frontend_peak_depth =
+                                    ostats.frontend_peak_depth.max(frontend.len());
+                            } else {
+                                shed_request(
+                                    req.id,
+                                    ShedCause::Backpressure,
+                                    fire_at,
+                                    &mut shed_flag,
+                                    &mut shed_count,
+                                    &mut ostats,
+                                    &tracer,
+                                );
+                            }
+                        }
+                    }
+                }
+                3 => {
                     // step the earliest alive replica with work
                     let i = idx;
                     if let ReplicaStepOutcome::Stepped(ev) = reps[i].step(&mut rngs[i])? {
+                        if !breakers.is_empty() {
+                            // a successfully priced step proves the
+                            // replica healthy (closes a half-open probe)
+                            breakers[i].on_success();
+                        }
                         let now = reps[i].now();
                         for &(id, arrival_s) in &ev.prefilled {
-                            if !ttft_done[id] {
-                                ttft_done[id] = true;
-                                ttft.push(now - arrival_s);
+                            if ttft_at[id].is_none() {
+                                ttft_at[id] = Some(now - arrival_s);
                             }
                         }
                         for _ in 0..ev.decode_tokens {
@@ -614,9 +919,41 @@ impl FleetSim {
                         }
                     }
                 }
+                _ => {
+                    // breaker wake: no state of its own to mutate — the
+                    // frontend drain below re-polls `accepting()`, which
+                    // performs the Open -> HalfOpen transition
+                }
+            }
+            if let Some(cfg) = &overload {
+                // After every event, retry the frontend queue: a step may
+                // have freed queue-cap capacity, a recovery or breaker
+                // cooldown may have restored a replica, or queued heads
+                // may have expired past the deadline.
+                let drain_now = if kind == 3 { reps[idx].now() } else { at };
+                drain_frontend(
+                    drain_now,
+                    cfg,
+                    self.deadline_s,
+                    &mut frontend,
+                    &mut reps,
+                    &alive,
+                    &mut breakers,
+                    &mut router,
+                    &mut routed,
+                    &mut shed_flag,
+                    &mut shed_count,
+                    &mut ostats,
+                    &tracer,
+                );
             }
         }
 
+        // Breaker totals come straight from the per-replica breakers so
+        // the fleet counters and per-replica reports can never disagree.
+        ostats.breaker_opens = breakers.iter().map(|b| b.opens).sum();
+        ostats.breaker_probes = breakers.iter().map(|b| b.probes).sum();
+        let ttft: Vec<f64> = ttft_at.iter().flatten().copied().collect();
         let mut tokens = TokenLedger::default();
         let mut chaos = ChaosStats::default();
         let mut per_replica = Vec::with_capacity(n);
@@ -638,6 +975,7 @@ impl FleetSim {
                 fallback_steps: rep.fallback_steps(),
                 plan_cache: rep.plan_cache(),
                 placement: rep.placement(),
+                breaker_opens: breakers.get(i).map(|b| b.opens).unwrap_or(0),
             });
         }
         Ok(FleetReport {
@@ -645,6 +983,7 @@ impl FleetSim {
             workload: self.workload.spec(),
             requests: total,
             completed,
+            shed: shed_count,
             makespan_s: makespan,
             ttft: Summary::of(&ttft),
             tpot: Summary::of(&tpot),
@@ -663,8 +1002,195 @@ impl FleetSim {
             replica_recoveries,
             requeued_requests: requeues.iter().filter(|&&c| c > 0).count(),
             max_requeues: requeues.iter().copied().max().unwrap_or(0),
+            protected: overload.is_some(),
+            overload: ostats,
             replicas: per_replica,
         })
+    }
+}
+
+/// Routing verdict for one request under overload protection.
+enum RouteDecision {
+    /// Send to this replica.
+    Route(usize),
+    /// Admission control: no eligible replica can meet the deadline.
+    ShedDeadline,
+    /// Nothing routable right now (dead, breaker-blocked, or at the
+    /// queue cap everywhere): buffer in the frontend queue or shed.
+    Saturated,
+}
+
+/// The protected routing pipeline: admission estimate over eligible
+/// (alive + breaker-accepting) replicas first, then the router over the
+/// accepting-and-under-cap set. Deadlines are measured from the
+/// request's *original* arrival, so a retry carries the time it already
+/// burned.
+#[allow(clippy::too_many_arguments)]
+fn route_decision(
+    req: &ReplicaRequest,
+    now: f64,
+    cfg: &OverloadConfig,
+    deadline_s: Option<f64>,
+    reps: &[Replica],
+    alive: &[bool],
+    breakers: &mut [Breaker],
+    router: &mut Router,
+) -> RouteDecision {
+    let mut any_eligible = false;
+    let mut best_finish = f64::INFINITY;
+    for (i, rep) in reps.iter().enumerate() {
+        if !alive[i] || !breakers[i].accepting(now) {
+            continue;
+        }
+        any_eligible = true;
+        if cfg.admission && deadline_s.is_some() {
+            best_finish =
+                best_finish.min(rep.estimated_finish_s(now, req.prompt_tokens, req.decode_steps));
+        }
+    }
+    if !any_eligible {
+        return RouteDecision::Saturated;
+    }
+    if cfg.admission {
+        if let Some(d) = deadline_s {
+            if best_finish > req.arrival_s + d {
+                return RouteDecision::ShedDeadline;
+            }
+        }
+    }
+    let loads: Vec<ReplicaLoad> = reps
+        .iter()
+        .enumerate()
+        .map(|(i, rep)| ReplicaLoad {
+            alive: alive[i],
+            accepting: breakers[i].accepting(now) && !rep.at_capacity(cfg.queue_cap),
+            queue_depth: rep.queue_depth(),
+            pressure: rep.pressure(),
+        })
+        .collect();
+    match router.pick(&loads) {
+        Some(t) => {
+            breakers[t].note_routed();
+            RouteDecision::Route(t)
+        }
+        None => RouteDecision::Saturated,
+    }
+}
+
+/// Hand a routed request to replica `t`: wake an idle replica's clock,
+/// record the routing flow in the trace, submit.
+fn submit_routed(
+    req: ReplicaRequest,
+    t: usize,
+    now: f64,
+    reps: &mut [Replica],
+    routed: &mut [usize],
+    tracer: &Tracer,
+    flow_name: &'static str,
+) {
+    if !reps[t].has_work() {
+        reps[t].advance_to(now);
+    }
+    if tracer.is_enabled() {
+        use crate::trace::{ArgValue, FlowPoint, COORD_TID};
+        tracer.flow(
+            flow_name,
+            "router",
+            FlowPoint { pid: tracer.pid(), tid: COORD_TID, ts_s: now },
+            FlowPoint { pid: t as u32 + 1, tid: COORD_TID, ts_s: now },
+            &[("id", ArgValue::Num(req.id as f64)), ("replica", ArgValue::Num(t as f64))],
+        );
+    }
+    routed[t] += 1;
+    reps[t].submit(req);
+}
+
+/// Mark a request shed (idempotent) and record the cause.
+fn shed_request(
+    id: usize,
+    cause: ShedCause,
+    now: f64,
+    shed_flag: &mut [bool],
+    shed_count: &mut usize,
+    ostats: &mut OverloadStats,
+    tracer: &Tracer,
+) {
+    if shed_flag[id] {
+        return;
+    }
+    shed_flag[id] = true;
+    *shed_count += 1;
+    ostats.note_shed(cause);
+    if tracer.is_enabled() {
+        use crate::trace::{ArgValue, COORD_TID};
+        let name = match cause {
+            ShedCause::Deadline => "admission-reject",
+            ShedCause::Backpressure => "shed-backpressure",
+            ShedCause::Retries => "shed-retries",
+        };
+        tracer.instant(COORD_TID, name, "fleet", now, &[("id", ArgValue::Num(id as f64))]);
+        tracer.count("fleet/shed", 1);
+    }
+}
+
+/// Route as many frontend-queued requests as capacity allows, shedding
+/// heads whose deadline has already passed; stops at the first head the
+/// fleet cannot place (FIFO — later requests never jump the queue).
+#[allow(clippy::too_many_arguments)]
+fn drain_frontend(
+    now: f64,
+    cfg: &OverloadConfig,
+    deadline_s: Option<f64>,
+    frontend: &mut VecDeque<ReplicaRequest>,
+    reps: &mut [Replica],
+    alive: &[bool],
+    breakers: &mut [Breaker],
+    router: &mut Router,
+    routed: &mut [usize],
+    shed_flag: &mut [bool],
+    shed_count: &mut usize,
+    ostats: &mut OverloadStats,
+    tracer: &Tracer,
+) {
+    while let Some(head) = frontend.front() {
+        // a queued request that has already blown its deadline can never
+        // be on time — shed instead of burning survivor capacity on it
+        if cfg.admission {
+            if let Some(d) = deadline_s {
+                if now > head.arrival_s + d {
+                    let req = frontend.pop_front().expect("front checked above");
+                    shed_request(
+                        req.id,
+                        ShedCause::Deadline,
+                        now,
+                        shed_flag,
+                        shed_count,
+                        ostats,
+                        tracer,
+                    );
+                    continue;
+                }
+            }
+        }
+        match route_decision(head, now, cfg, deadline_s, reps, alive, breakers, router) {
+            RouteDecision::Route(t) => {
+                let req = frontend.pop_front().expect("front checked above");
+                submit_routed(req, t, now, reps, routed, tracer, "frontend-route");
+            }
+            RouteDecision::ShedDeadline => {
+                let req = frontend.pop_front().expect("front checked above");
+                shed_request(
+                    req.id,
+                    ShedCause::Deadline,
+                    now,
+                    shed_flag,
+                    shed_count,
+                    ostats,
+                    tracer,
+                );
+            }
+            RouteDecision::Saturated => break,
+        }
     }
 }
 
@@ -699,6 +1225,33 @@ mod tests {
         assert!(plan.validate(1).is_err(), "replica 1 out of range");
         assert!(FleetFaultPlan::parse("fail:at=1").is_err(), "missing r");
         assert!(FleetFaultPlan::parse("explode:r=0,at=1").is_err());
+    }
+
+    #[test]
+    fn burst_desugars_into_correlated_fail_recover_pairs() {
+        // binary-exact times keep the f64 equality below honest
+        let plan = FleetFaultPlan::parse("burst:r=1-3,at=0.25,for=0.5").unwrap();
+        assert_eq!(
+            plan.events,
+            vec![
+                FleetEvent::Fail { replica: 1, at_s: 0.25 },
+                FleetEvent::Fail { replica: 2, at_s: 0.25 },
+                FleetEvent::Fail { replica: 3, at_s: 0.25 },
+                FleetEvent::Recover { replica: 1, at_s: 0.75 },
+                FleetEvent::Recover { replica: 2, at_s: 0.75 },
+                FleetEvent::Recover { replica: 3, at_s: 0.75 },
+            ]
+        );
+        // the canonical spec is the desugared form and round-trips
+        assert_eq!(FleetFaultPlan::parse(&plan.spec()).unwrap(), plan);
+        assert!(plan.validate(4).is_ok());
+        assert!(plan.validate(3).is_err(), "replica 3 out of range");
+        // a single-replica burst without `for` is a plain group kill
+        let kill = FleetFaultPlan::parse("burst:r=2,at=0.01").unwrap();
+        assert_eq!(kill.events, vec![FleetEvent::Fail { replica: 2, at_s: 0.01 }]);
+        assert!(FleetFaultPlan::parse("burst:r=3-1,at=0.01").is_err(), "inverted range");
+        assert!(FleetFaultPlan::parse("burst:r=1-2,at=0.01,for=0").is_err(), "zero duration");
+        assert!(FleetFaultPlan::parse("burst:r=1-2,at=0.01,steps=4").is_err(), "unknown key");
     }
 
     #[test]
@@ -780,6 +1333,48 @@ mod tests {
         let sim =
             small_fleet(2).with_faults(FleetFaultPlan::parse("fail:r=7,at=0.1").unwrap());
         assert!(sim.try_run(1).is_err(), "fault plan out of range");
+    }
+
+    #[test]
+    fn generous_protection_prices_identically_to_legacy() {
+        // No faults, no caps, no deadline: the protected pipeline must
+        // make exactly the routing decisions the legacy path makes.
+        let base = small_fleet(2).try_run(42).unwrap();
+        assert!(!base.protected);
+        assert_eq!(base.overload, OverloadStats::default());
+        let cfg = OverloadConfig::parse("queue-cap=0,frontend-cap=64,retries=3").unwrap();
+        let prot = small_fleet(2).with_overload(cfg).try_run(42).unwrap();
+        assert!(prot.protected);
+        assert_eq!(prot.completed, prot.requests);
+        assert_eq!(prot.shed, 0);
+        assert_eq!(prot.makespan_s.to_bits(), base.makespan_s.to_bits());
+        assert_eq!(prot.tokens, base.tokens);
+        assert_eq!(prot.overload.breaker_opens, 0);
+    }
+
+    #[test]
+    fn tiny_queue_caps_shed_burst_overflow_exactly() {
+        // 12 simultaneous arrivals against 2 replicas x cap 1 + frontend
+        // 1: three requests find a home, nine are shed — deterministic
+        // backpressure arithmetic, no deadline involved.
+        let sim = FleetSim::new(
+            engine(),
+            Scenario::concentrated(0.8, 4),
+            vec![ReplicaConfig::default(); 2],
+            16_384,
+        )
+        .with_workload(
+            Workload::parse("bursty:n=12,ia=0.0002,burst=12,every=12,prompt=128-512,decode=2-4")
+                .unwrap(),
+        )
+        .with_overload(OverloadConfig::parse("queue-cap=1,frontend-cap=1").unwrap());
+        let r = sim.try_run(8).unwrap();
+        assert_eq!(r.shed, 9, "2 replica slots + 1 frontend slot out of 12");
+        assert_eq!(r.overload.shed_frontend, 9, "all backpressure, no deadline");
+        assert_eq!(r.completed + r.shed, r.requests);
+        assert_eq!(r.completed, 3);
+        assert!(r.tokens.is_exact(), "{:?}", r.tokens);
+        assert_eq!(r.overload.frontend_peak_depth, 1);
     }
 
     #[test]

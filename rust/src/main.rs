@@ -49,7 +49,9 @@ use llep::config::{
 use llep::coordinator::{RunSummary, Runner, ServeReport, ServeSim};
 use llep::exec::{Engine, PlanCostModel};
 use llep::harness;
-use llep::fleet::{FleetFaultPlan, FleetSim, ReplicaConfig, RouterPolicy, Workload};
+use llep::fleet::{
+    FleetFaultPlan, FleetSim, OverloadConfig, ReplicaConfig, RouterPolicy, Workload,
+};
 use llep::metrics::{
     chaos_stats_to_json, fleet_replica_table, fleet_report_to_json, format_bytes, format_cache,
     format_chaos, format_placement, format_secs, model_report_table, placement_to_json,
@@ -104,9 +106,21 @@ fn main() {
         .opt("workload", "fleet: workload spec, e.g. bursty:n=64,ia=0.0002,burst=8,every=16")
         .opt("speeds", "fleet: per-replica speed multipliers, e.g. 1.0,0.5")
         .opt("deadline", "fleet: SLO deadline in seconds for goodput (0 = none)")
+        .opt("queue-cap", "fleet: per-replica queue cap; overflow spills or buffers (0 = none)")
+        .opt("frontend-cap", "fleet: bounded frontend buffer when all replicas refuse (default 64)")
+        .opt("retries", "fleet: max retries per failed request before shedding (default 3)")
+        .opt("backoff", "fleet: retry backoff base seconds (default 0.001)")
+        .opt("backoff-cap", "fleet: retry backoff ceiling seconds (default 0.016)")
+        .opt("breaker-after", "fleet: consecutive failures that open a breaker (default 1)")
+        .opt("breaker-cooldown", "fleet: breaker open time before the half-open probe (default 0.005)")
         .opt("suite", "bench: suite name (hotpath)")
         .opt("check", "bench: pin JSON — bootstrap when missing, fail on median regression")
         .opt("tolerance", "bench: allowed median regression vs the pin (default 0.25)")
+        .flag(
+            "admission",
+            "fleet: deadline admission control — shed requests no replica can finish in time \
+             (requires --deadline)",
+        )
         .flag("quick", "bench: CI-sized measurement budgets")
         .flag("plan-reuse", "wrap planners in the cross-step plan cache")
         .flag("full-model", "price every MoE layer per step (pipelined planning)")
@@ -1023,9 +1037,12 @@ fn cmd_chaos(args: &llep::util::cli::Args) -> Result<(), String> {
 
 /// `llep fleet`: simulate N serving replicas behind a global router on
 /// one virtual timeline, optionally killing/recovering whole replicas
-/// (`--faults "fail:r=1,at=0.02"`). The command fails (non-zero exit)
-/// when any request is lost, the summed token ledger is inexact, or
-/// goodput is zero — the CI smoke contract.
+/// (`--faults "fail:r=1,at=0.02"` or correlated `burst:r=1-3,at=0.02`)
+/// and optionally under overload protection (`--admission`,
+/// `--queue-cap`, `--retries`, ...). The command fails (non-zero exit)
+/// when any request is lost (`completed + shed == requests` under
+/// protection, `completed == requests` otherwise), the summed token
+/// ledger is inexact, or goodput is zero — the CI smoke contract.
 fn cmd_fleet(args: &llep::util::cli::Args) -> Result<(), String> {
     let (engine, llep) = engine_from_args(args)?;
     let scenario = scenario_from_args(args)?;
@@ -1084,6 +1101,35 @@ fn cmd_fleet(args: &llep::util::cli::Args) -> Result<(), String> {
         sim = sim.with_deadline(deadline);
     }
 
+    // Any overload knob (or --admission) switches the fleet into the
+    // protected regime; the knobs compose into one OverloadConfig spec
+    // so CLI runs and `OverloadConfig::parse` agree exactly.
+    let admission = args.has_flag("admission");
+    let overload_knobs = [
+        ("queue-cap", "queue-cap"),
+        ("frontend-cap", "frontend-cap"),
+        ("retries", "retries"),
+        ("backoff", "backoff"),
+        ("backoff-cap", "backoff-cap"),
+        ("breaker-after", "breaker-after"),
+        ("breaker-cooldown", "cooldown"),
+    ];
+    let protected = admission || overload_knobs.iter().any(|(cli, _)| args.get(cli).is_some());
+    if protected {
+        if admission && !(deadline > 0.0) {
+            return Err("--admission requires --deadline (it sheds requests that cannot \
+                        finish within the deadline)"
+                .into());
+        }
+        let mut parts = vec![format!("admission={}", if admission { 1 } else { 0 })];
+        for (cli, key) in overload_knobs {
+            if let Some(v) = args.get(cli) {
+                parts.push(format!("{key}={v}"));
+            }
+        }
+        sim = sim.with_overload(OverloadConfig::parse(&parts.join(","))?);
+    }
+
     let report = sim.try_run(seed)?;
 
     let fault_note = faults
@@ -1130,6 +1176,24 @@ fn cmd_fleet(args: &llep::util::cli::Args) -> Result<(), String> {
             report.max_requeues
         );
     }
+    if report.protected {
+        let o = &report.overload;
+        println!(
+            "overload: shed {}/{} (deadline {}, backpressure {}, retries {}) | \
+             {} retr(y/ies), backoff total {} | breaker: {} open(s), {} probe(s), \
+             frontend peak {}",
+            report.shed,
+            report.requests,
+            o.shed_deadline,
+            o.shed_frontend,
+            o.shed_retries,
+            o.retries,
+            format_secs(o.backoff_total_s),
+            o.breaker_opens,
+            o.breaker_probes,
+            o.frontend_peak_depth
+        );
+    }
 
     if let Some(out) = args.get("out") {
         let json = fleet_report_to_json(&report);
@@ -1139,8 +1203,17 @@ fn cmd_fleet(args: &llep::util::cli::Args) -> Result<(), String> {
     write_trace(&tracer, args)?;
 
     // Hard contract, enforced by exit code (the CI smoke step): nothing
-    // lost, exact accounting, useful work actually delivered.
-    if report.completed != report.requests {
+    // lost, exact accounting, useful work actually delivered. Under
+    // overload protection shedding is deliberate, so the ledger relaxes
+    // to `completed + shed == requests`; unprotected stays strict.
+    if report.protected {
+        if report.completed + report.shed != report.requests {
+            return Err(format!(
+                "fleet lost requests: {} completed + {} shed != {}",
+                report.completed, report.shed, report.requests
+            ));
+        }
+    } else if report.completed != report.requests {
         return Err(format!(
             "fleet lost requests: {}/{} completed",
             report.completed, report.requests

@@ -357,7 +357,7 @@ pub fn summary_to_json(s: &Summary) -> Json {
 pub fn fleet_replica_table(r: &crate::fleet::FleetReport) -> Table {
     let mut t = Table::new(&[
         "replica", "planner", "speed", "routed", "done", "steps", "util", "peak mem", "ledger",
-        "chaos",
+        "brk", "chaos",
     ]);
     for (i, p) in r.replicas.iter().enumerate() {
         t.row(vec![
@@ -374,6 +374,7 @@ pub fn fleet_replica_table(r: &crate::fleet::FleetReport) -> Table {
             } else {
                 format!("{}!={} BROKEN", p.tokens.admitted, p.tokens.priced)
             },
+            if p.breaker_opens == 0 { "-".into() } else { format!("{} open", p.breaker_opens) },
             format_chaos(&p.chaos),
         ]);
     }
@@ -389,6 +390,8 @@ pub fn fleet_report_to_json(r: &crate::fleet::FleetReport) -> Json {
         ("workload", Json::str(&r.workload)),
         ("requests", Json::num(r.requests as f64)),
         ("completed", Json::num(r.completed as f64)),
+        ("shed", Json::num(r.shed as f64)),
+        ("protected", Json::Bool(r.protected)),
         ("makespan_s", Json::num(r.makespan_s)),
         ("ttft", summary_to_json(&r.ttft)),
         ("tpot", summary_to_json(&r.tpot)),
@@ -409,6 +412,22 @@ pub fn fleet_report_to_json(r: &crate::fleet::FleetReport) -> Json {
         ("requeued_requests", Json::num(r.requeued_requests as f64)),
         ("max_requeues", Json::num(r.max_requeues as f64)),
         (
+            "overload",
+            Json::obj(vec![
+                ("shed_deadline", Json::num(r.overload.shed_deadline as f64)),
+                ("shed_frontend", Json::num(r.overload.shed_frontend as f64)),
+                ("shed_retries", Json::num(r.overload.shed_retries as f64)),
+                ("retries", Json::num(r.overload.retries as f64)),
+                ("breaker_opens", Json::num(r.overload.breaker_opens as f64)),
+                ("breaker_probes", Json::num(r.overload.breaker_probes as f64)),
+                ("backoff_total_s", Json::num(r.overload.backoff_total_s)),
+                (
+                    "frontend_peak_depth",
+                    Json::num(r.overload.frontend_peak_depth as f64),
+                ),
+            ]),
+        ),
+        (
             "replicas",
             Json::arr(r.replicas.iter().map(|p| {
                 Json::obj(vec![
@@ -428,6 +447,7 @@ pub fn fleet_report_to_json(r: &crate::fleet::FleetReport) -> Json {
                     ("cache_repairs", Json::num(p.plan_cache.repairs as f64)),
                     ("cache_misses", Json::num(p.plan_cache.misses as f64)),
                     ("cache_forced", Json::num(p.plan_cache.forced as f64)),
+                    ("breaker_opens", Json::num(p.breaker_opens as f64)),
                     ("placement", placement_to_json(&p.placement)),
                     ("chaos", chaos_stats_to_json(&p.chaos)),
                 ])
@@ -680,6 +700,49 @@ mod tests {
         assert!(json.contains("\"ledger_exact\":true"), "{json}");
         assert!(json.contains("\"deadline_s\":null"), "{json}");
         assert!(json.contains("\"replicas\":["), "{json}");
+        assert!(json.contains("\"shed\":0"), "{json}");
+        assert!(json.contains("\"protected\":false"), "{json}");
+        assert!(json.contains("\"overload\":{"), "{json}");
+        assert!(json.contains("\"shed_frontend\":0"), "{json}");
+        assert!(json.contains("\"breaker_opens\":0"), "{json}");
+    }
+
+    #[test]
+    fn fleet_json_reports_protected_overload_counters() {
+        use crate::config::{ModelConfig, ModelPreset, SystemConfig, SystemPreset};
+        use crate::exec::Engine;
+        use crate::fleet::{FleetSim, OverloadConfig, ReplicaConfig, Workload};
+        use crate::routing::Scenario;
+
+        let engine = Engine::modeled(
+            ModelConfig::preset(ModelPreset::Fig1Layer),
+            SystemConfig::preset(SystemPreset::H200x8),
+        );
+        let sim = FleetSim::new(
+            engine,
+            Scenario::concentrated(0.8, 4),
+            vec![ReplicaConfig::default(), ReplicaConfig::default()],
+            16_384,
+        )
+        .with_workload(
+            Workload::parse("bursty:n=12,ia=0.0002,burst=12,every=12,prompt=64-256,decode=2-4")
+                .unwrap(),
+        )
+        .with_overload(
+            OverloadConfig::parse("queue-cap=1,frontend-cap=1,retries=1").unwrap(),
+        );
+        let r = sim.try_run(2).unwrap();
+        assert_eq!(r.completed + r.shed, r.requests);
+        assert!(r.shed > 0);
+
+        let json = fleet_report_to_json(&r).to_string();
+        assert!(json.contains("\"protected\":true"), "{json}");
+        assert!(json.contains(&format!("\"shed\":{}", r.shed)), "{json}");
+        assert!(
+            json.contains(&format!("\"shed_frontend\":{}", r.overload.shed_frontend)),
+            "{json}"
+        );
+        assert!(json.contains("\"frontend_peak_depth\":1"), "{json}");
     }
 
     #[test]

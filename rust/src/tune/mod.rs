@@ -36,4 +36,4 @@ pub mod space;
 pub use pareto::{dominates, pareto_front};
 pub use profile::HardwareProfile;
 pub use search::{Mode, Strategy, Trial, TrialMetrics, TuneOutcome, Tuner};
-pub use space::{SearchSpace, SpaceBudget};
+pub use space::{overload_space, SearchSpace, SpaceBudget, OVERLOAD_PARAMS};

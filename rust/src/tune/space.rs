@@ -11,6 +11,7 @@
 //! Runtime-registered planners join automatically: register an entry
 //! with `params` and the tuner searches it like any builtin.
 
+use crate::fleet::OverloadConfig;
 use crate::planner::{ParamSpec, Registry, CACHED_PARAMS, PLACED_PARAMS};
 
 /// How much of the canonical grids to enumerate.
@@ -116,6 +117,37 @@ impl SearchSpace {
     pub fn is_empty(&self) -> bool {
         self.specs.is_empty()
     }
+}
+
+/// Tunable dimensions of the fleet overload-protection config
+/// ([`OverloadConfig`]): how tight the per-replica queue cap is and how
+/// aggressively retries back off. The breaker/frontend knobs are
+/// fault-tolerance policy, not throughput dimensions, so — like
+/// `placed`'s `standby` — they stay out of the grid.
+pub const OVERLOAD_PARAMS: &[ParamSpec] = &[
+    ParamSpec { key: "queue-cap", grid: &[4.0, 8.0, 16.0], integer: true },
+    ParamSpec { key: "backoff", grid: &[0.0005, 0.001, 0.004], integer: false },
+];
+
+/// Enumerate candidate overload configs at the given budget. Every point
+/// is returned in [`OverloadConfig::spec`] canonical form (so it
+/// round-trips through [`OverloadConfig::parse`] and compares stably as
+/// a trial key); construction fails loudly on a grid/config mismatch.
+pub fn overload_space(budget: SpaceBudget) -> Result<Vec<String>, String> {
+    let cap = budget.grid_cap();
+    let mut specs = Vec::new();
+    for assignment in grid_points(OVERLOAD_PARAMS, cap) {
+        let pairs: Vec<String> = OVERLOAD_PARAMS
+            .iter()
+            .zip(&assignment)
+            .map(|(p, &v)| format!("{}={}", p.key, p.format_value(v)))
+            .collect();
+        let fragment = pairs.join(",");
+        let cfg = OverloadConfig::parse(&fragment)
+            .map_err(|e| format!("synthesized overload point {fragment:?} does not parse: {e}"))?;
+        specs.push(cfg.spec());
+    }
+    Ok(specs)
 }
 
 /// Cartesian product of the first `cap` values of each parameter's grid;
@@ -257,6 +289,25 @@ mod tests {
         });
         let space = SearchSpace::from_registry(&reg, SpaceBudget::Smoke).unwrap();
         assert_eq!(space.specs.iter().filter(|s| *s == "ep").count(), 1);
+    }
+
+    #[test]
+    fn overload_space_scales_with_budget_and_is_canonical() {
+        let smoke = overload_space(SpaceBudget::Smoke).unwrap();
+        assert_eq!(smoke.len(), 4, "{smoke:?}"); // 2 queue caps x 2 backoffs
+        let default = overload_space(SpaceBudget::Default).unwrap();
+        assert_eq!(default.len(), 9, "{default:?}"); // full 3x3 grid
+        assert_eq!(default, overload_space(SpaceBudget::Full).unwrap());
+        for spec in &default {
+            let cfg = OverloadConfig::parse(spec).unwrap();
+            assert_eq!(&cfg.spec(), spec, "canonical form is a fixed point");
+        }
+        assert!(default.iter().any(|s| s.contains("queue-cap=16")));
+        assert!(default.iter().any(|s| s.contains("backoff=0.004")));
+        // smoke's truncated grids are a subset of the full grid
+        for s in &smoke {
+            assert!(default.contains(s), "{s}");
+        }
     }
 
     #[test]

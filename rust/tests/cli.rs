@@ -378,6 +378,46 @@ fn bench_suite_bootstraps_checks_and_detects_regression() {
 }
 
 #[test]
+fn fleet_overload_cli_sheds_reports_and_guards_admission() {
+    let dir = std::env::temp_dir().join("llep_fleet_overload_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("fleet.json");
+    let path_s = path.to_str().unwrap();
+    let wl = "bursty:n=24,ia=0.0002,burst=12,every=12,prompt=256-1024,decode=2-4";
+
+    // Tiny caps under a 12-wide burst: the protected run must shed,
+    // print the overload summary line, and mark the JSON as protected
+    // while keeping the token ledger exact.
+    let out = run_ok(&[
+        "fleet", "--replicas", "2", "--workload", wl, "--queue-cap", "1", "--frontend-cap", "1",
+        "--retries", "1", "--out", path_s,
+    ]);
+    assert!(out.contains("overload: shed"), "{out}");
+    assert!(!out.contains("24/24"), "tiny caps must shed part of the burst:\n{out}");
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(text.contains("\"protected\":true"), "{text}");
+    assert!(text.contains("\"ledger_exact\":true"), "{text}");
+    assert!(text.contains("\"overload\""), "{text}");
+    std::fs::remove_file(path).ok();
+
+    // The same workload without protection keeps the strict contract:
+    // every request completes and no overload line is printed.
+    let out = run_ok(&["fleet", "--replicas", "2", "--workload", wl]);
+    assert!(out.contains("24/24"), "{out}");
+    assert!(!out.contains("overload: shed"), "{out}");
+
+    // Admission control estimates against the SLO deadline, so asking
+    // for it without one is a loud configuration error.
+    let out = llep().args(["fleet", "--replicas", "2", "--admission"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("--admission requires --deadline"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
+#[test]
 fn calibrate_fits_model() {
     let out = run_ok(&["calibrate"]);
     assert!(out.contains("peak_flops"));

@@ -1,12 +1,16 @@
 //! Fleet-level integration tests: bit-reproducibility of the cluster
 //! simulator, router-policy behaviour under heterogeneous replicas, the
-//! summed-ledger identity, and whole-replica failure recovery.
+//! summed-ledger identity, whole-replica failure recovery, and the
+//! overload-protection acceptance contract (admission control +
+//! backpressure + retry/backoff beating the unprotected fleet under a
+//! correlated replica burst).
 
 use llep::config::{ModelConfig, ModelPreset, SystemConfig, SystemPreset};
 use llep::coordinator::TokenLedger;
 use llep::exec::Engine;
 use llep::fleet::{
-    FleetEvent, FleetFaultPlan, FleetReport, FleetSim, ReplicaConfig, RouterPolicy, Workload,
+    FleetEvent, FleetFaultPlan, FleetReport, FleetSim, OverloadConfig, ReplicaConfig,
+    RouterPolicy, Workload,
 };
 use llep::routing::Scenario;
 use llep::util::prop::{assert_property, no_shrink};
@@ -198,4 +202,207 @@ fn fleet_cli_grammars_round_trip() {
     }
     let plan = FleetFaultPlan::parse("fail:r=1,at=0.001;recover:r=1,at=0.004").unwrap();
     assert_eq!(FleetFaultPlan::parse(&plan.spec()).unwrap(), plan);
+    // the correlated-burst macro round-trips through its desugared form
+    let burst = FleetFaultPlan::parse("burst:r=1-2,at=0.001,for=0.004").unwrap();
+    assert_eq!(burst.events.len(), 4, "2 fails + 2 recovers");
+    assert_eq!(FleetFaultPlan::parse(&burst.spec()).unwrap(), burst);
+    // and the overload-protection knob block does too
+    let cfg = OverloadConfig::parse("queue-cap=4,retries=2,backoff=0.0005").unwrap();
+    assert_eq!(OverloadConfig::parse(&cfg.spec()).unwrap(), cfg);
+}
+
+/// Tentpole acceptance contract: on a bursty workload with a correlated
+/// two-replica outage and a tight SLO deadline, the protected fleet
+/// (admission control + queue caps + bounded retries) delivers strictly
+/// more goodput and a lower completed-request p99 TTFT than the
+/// unprotected fleet, sheds a bounded non-zero fraction with an exact
+/// `completed + shed == requests` ledger, and stays bit-reproducible.
+#[test]
+fn overload_protection_beats_unprotected_under_correlated_burst() {
+    let wl_spec = "bursty:n=48,ia=0.0001,burst=12,every=12,prompt=512-2048,decode=2-6";
+    let seed = 21;
+
+    // Calibrate the SLO from a healthy 3-replica run of the same
+    // workload, so the deadline is tight under overload but trivially
+    // meetable when the fleet is whole — no magic latency constants.
+    let healthy = fleet(vec![ReplicaConfig::default(); 3], wl_spec).try_run(seed).unwrap();
+    assert_eq!(healthy.completed, healthy.requests);
+    let deadline = healthy.request_latency.p99 * 1.5;
+    assert!(deadline > 0.0);
+
+    // Kill replicas 1 and 2 together just after the second burst has
+    // fully arrived (a rack/power-domain failure), for long enough that
+    // they never come back while work is pending.
+    let arrivals = Workload::parse(wl_spec).unwrap().generate(&mut Rng::new(seed));
+    let kill_at = arrivals[23].arrival_s + 1e-6;
+    let outage = (healthy.makespan_s * 64.0).max(1.0);
+    let faults = FleetFaultPlan::parse(&format!("burst:r=1-2,at={kill_at},for={outage}")).unwrap();
+    assert_eq!(faults.events.len(), 4);
+
+    let unprotected = fleet(vec![ReplicaConfig::default(); 3], wl_spec)
+        .with_faults(faults.clone())
+        .with_deadline(deadline)
+        .try_run(seed)
+        .unwrap();
+    assert_eq!(unprotected.completed, unprotected.requests, "legacy path loses nothing");
+    assert_eq!(unprotected.replica_failures, 2);
+    assert!(unprotected.tokens.is_exact(), "{:?}", unprotected.tokens);
+
+    let overload = OverloadConfig::parse(
+        "queue-cap=4,frontend-cap=6,retries=2,backoff=0.0002,backoff-cap=0.001,\
+         breaker-after=1,cooldown=0.002",
+    )
+    .unwrap();
+    let protected_sim = || {
+        fleet(vec![ReplicaConfig::default(); 3], wl_spec)
+            .with_faults(faults.clone())
+            .with_deadline(deadline)
+            .with_overload(overload.clone())
+    };
+    let p = protected_sim().try_run(seed).unwrap();
+
+    // Exact request ledger: every request is accounted for, shedding is
+    // deliberate, bounded, and non-zero under this much overload.
+    assert!(p.protected);
+    assert_eq!(p.completed + p.shed, p.requests, "request ledger must be exact");
+    assert_eq!(
+        p.shed,
+        p.overload.shed_deadline + p.overload.shed_frontend + p.overload.shed_retries,
+        "shed causes must partition the shed count"
+    );
+    assert!(p.shed > 0, "two dead replicas + bursts must shed something");
+    assert!(p.shed < p.requests, "protection must not shed everything");
+    assert!(p.completed > 0);
+    assert!(p.max_requeues <= 2, "retry budget bounds requeues, got {}", p.max_requeues);
+    assert!(
+        p.overload.breaker_opens >= 2,
+        "both killed replicas must trip their breakers, got {}",
+        p.overload.breaker_opens
+    );
+    assert!(p.tokens.is_exact(), "{:?}", p.tokens);
+    let mut sum = TokenLedger::default();
+    for rep in &p.replicas {
+        assert!(rep.tokens.is_exact(), "{:?}", rep.tokens);
+        sum.absorb(&rep.tokens);
+    }
+    assert_eq!(sum, p.tokens, "fleet ledger is the sum of its replicas");
+
+    // The headline inequalities: shedding the unservable work buys
+    // strictly more goodput and a lower completed-request p99 TTFT than
+    // queueing everything on the survivor.
+    assert!(
+        p.goodput_tps > unprotected.goodput_tps,
+        "protected goodput {} must beat unprotected {}",
+        p.goodput_tps,
+        unprotected.goodput_tps
+    );
+    assert!(
+        p.ttft.p99 < unprotected.ttft.p99,
+        "protected p99 TTFT {} must beat unprotected {}",
+        p.ttft.p99,
+        unprotected.ttft.p99
+    );
+
+    // Bit-reproducible including every protection decision.
+    let q = protected_sim().try_run(seed).unwrap();
+    assert_bit_identical(&p, &q).unwrap();
+    assert_eq!(p.shed, q.shed);
+    assert_eq!(p.overload, q.overload);
+}
+
+/// Property: under K overlapping replica failures (replica 0 always
+/// survives), the protected fleet keeps the request ledger exact, never
+/// exceeds the retry budget, and always completes at least one request.
+#[test]
+fn correlated_failure_storms_keep_ledgers_exact_and_requeues_bounded() {
+    let overload = OverloadConfig::parse("queue-cap=6,frontend-cap=8,retries=2").unwrap();
+    assert_property(
+        "fleet failure storms",
+        0x5702,
+        6,
+        |rng| {
+            let seed = rng.index(10_000) as u64;
+            let mut events = Vec::new();
+            let k = 1 + rng.index(3); // 1..=3 overlapping failures
+            for _ in 0..k {
+                let replica = 1 + rng.index(3); // never replica 0
+                let at_s = 0.0005 + 0.0005 * rng.f64();
+                events.push(FleetEvent::Fail { replica, at_s });
+                if rng.index(2) == 0 {
+                    events
+                        .push(FleetEvent::Recover { replica, at_s: at_s + 0.002 + 0.002 * rng.f64() });
+                }
+            }
+            (seed, events)
+        },
+        |(seed, events)| {
+            let r = fleet(
+                vec![ReplicaConfig::default(); 4],
+                "bursty:n=24,ia=0.0002,burst=6,every=8,prompt=256-1024,decode=2-6",
+            )
+            .with_faults(FleetFaultPlan { events: events.clone() })
+            .with_overload(overload.clone())
+            .try_run(*seed)?;
+            if r.completed + r.shed != r.requests {
+                return Err(format!(
+                    "lost requests: {} + {} != {}",
+                    r.completed, r.shed, r.requests
+                ));
+            }
+            if r.completed == 0 {
+                return Err("replica 0 survived, something must complete".into());
+            }
+            if r.max_requeues > 2 {
+                return Err(format!("retry budget exceeded: {} requeues", r.max_requeues));
+            }
+            let mut sum = TokenLedger::default();
+            for rep in &r.replicas {
+                if !rep.tokens.is_exact() {
+                    return Err(format!("replica ledger inexact: {:?}", rep.tokens));
+                }
+                sum.absorb(&rep.tokens);
+            }
+            if sum != r.tokens || !r.tokens.is_exact() {
+                return Err(format!("fleet ledger broken: {:?} vs sum {:?}", r.tokens, sum));
+            }
+            Ok(())
+        },
+        no_shrink,
+    );
+}
+
+/// Satellite regression: TTFT is the first *successful* prefill. A
+/// request whose first prefill is aborted by a replica failure must
+/// report a TTFT at least as large as the failed attempt's lifetime —
+/// not the aborted attempt's (flattering) first-token time.
+#[test]
+fn ttft_counts_only_the_successful_prefill_after_a_failure() {
+    let wl = "poisson:n=1,ia=0.001,prompt=512-512,decode=8-8";
+    let seed = 13;
+    let healthy = fleet(vec![ReplicaConfig::default(); 2], wl).try_run(seed).unwrap();
+    assert_eq!(healthy.completed, 1);
+    let ttft0 = healthy.ttft.max;
+    let latency0 = healthy.request_latency.max;
+    assert!(latency0 > ttft0, "8 decode steps separate first token from completion");
+
+    // Kill the serving replica (least-queue ties to 0) strictly between
+    // the first token and completion: the prefill succeeded, the request
+    // did not, so its TTFT clock must restart on the survivor.
+    let arrival = Workload::parse(wl).unwrap().generate(&mut Rng::new(seed))[0].arrival_s;
+    let kill_at = arrival + (ttft0 + latency0) / 2.0;
+    let r = fleet(vec![ReplicaConfig::default(); 2], wl)
+        .with_faults(FleetFaultPlan {
+            events: vec![FleetEvent::Fail { replica: 0, at_s: kill_at }],
+        })
+        .try_run(seed)
+        .unwrap();
+    assert_eq!(r.completed, 1);
+    assert_eq!(r.requeued_requests, 1, "the kill must catch the request in flight");
+    assert!(
+        r.ttft.max >= kill_at - arrival,
+        "TTFT {} must cover the failed attempt (killed {}s in)",
+        r.ttft.max,
+        kill_at - arrival
+    );
+    assert!(r.ttft.max > ttft0, "restarted TTFT must exceed the aborted attempt's {ttft0}");
 }
